@@ -1,0 +1,75 @@
+//! End-to-end driver (the EXPERIMENTS.md run): exercises the entire
+//! three-layer stack on a real small workload, proving the layers compose:
+//!
+//!  1. generate the paper's four datasets (laptop scale);
+//!  2. stream each through the L3 coordinator (workers + backpressure +
+//!     Appendix-A reservoirs) with the Bernstein distribution;
+//!  3. evaluate sketches with the AOT XLA engine (L2 JAX graphs + L1
+//!     Pallas kernels via PJRT): subspace-iteration SVD + Figure-1 quality;
+//!  4. encode sketches with the compact codec and report bits/sample;
+//!  5. print the paper's headline metric per dataset.
+//!
+//! ```bash
+//! make artifacts && cargo run --release --example end_to_end
+//! ```
+
+use std::time::Instant;
+
+use matsketch::coordinator::{sketch_stream, PipelineConfig};
+use matsketch::datasets::DatasetId;
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::error::Result;
+use matsketch::linalg::svd::{rank_k_fro, topk_svd};
+use matsketch::metrics::quality::{quality_left, quality_right};
+use matsketch::runtime::default_engine;
+use matsketch::sketch::{encode_sketch, SketchPlan};
+use matsketch::stream::ShuffledStream;
+
+fn main() -> Result<()> {
+    let engine = default_engine();
+    println!("matsketch end-to-end | engine = {}\n", engine.name());
+    let small = std::env::args().any(|a| a == "--small");
+    let k = 20;
+    println!(
+        "{:<11} {:>9} {:>11} {:>8} {:>8} {:>8} {:>11} {:>9}",
+        "dataset", "nnz", "s", "left", "right", "bits/s", "nnz/s(M)", "secs"
+    );
+
+    for id in DatasetId::all() {
+        let t0 = Instant::now();
+        let coo = if small { id.generate_small(0) } else { id.generate(0) };
+        let a = coo.to_csr();
+        let stats = MatrixStats::from_coo(&coo); // pass 1 (streaming)
+
+        // ground truth rank-k mass of A
+        let svd_a = topk_svd(&a, k + 4, 8, 1, engine.as_ref())?;
+        let a_k = rank_k_fro(&svd_a, k);
+
+        // pass 2: the streaming pipeline at s = nnz/5
+        let s = (a.nnz() as u64 / 5).max(5_000);
+        let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(99);
+        let stream = ShuffledStream::new(&coo, 5);
+        let (sketch, metrics) = sketch_stream(stream, &stats, &plan, &PipelineConfig::default())?;
+
+        // evaluate through the AOT engine
+        let b = sketch.to_csr();
+        let svd_b = topk_svd(&b, k + 4, 8, 2, engine.as_ref())?;
+        let left = quality_left(&a, &svd_b, a_k, k, engine.as_ref())?;
+        let right = quality_right(&a, &svd_b, a_k, k)?;
+        let enc = encode_sketch(&sketch)?;
+
+        println!(
+            "{:<11} {:>9} {:>11} {:>8.3} {:>8.3} {:>8.2} {:>11.2} {:>9.1}",
+            id.name(),
+            a.nnz(),
+            s,
+            left,
+            right,
+            enc.bits_per_sample(),
+            metrics.throughput() / 1e6,
+            t0.elapsed().as_secs_f64()
+        );
+    }
+    println!("\nAll layers composed: L3 streaming pipeline -> L2/L1 AOT artifacts via PJRT.");
+    Ok(())
+}

@@ -1,0 +1,50 @@
+//! Text-corpus scenario: sketching a tf-idf term-document matrix
+//! (Enron/Wikipedia-style) and comparing the paper's distribution against
+//! the baselines at a fixed budget — a single-budget slice of Figure 1.
+
+use matsketch::datasets::{enron_like, EnronConfig};
+use matsketch::distributions::DistributionKind;
+use matsketch::error::Result;
+use matsketch::linalg::svd::{rank_k_fro, topk_svd};
+use matsketch::metrics::quality::{quality_left, quality_right};
+use matsketch::runtime::default_engine;
+use matsketch::sketch::{encode_sketch, sketch_offline, SketchPlan};
+
+fn main() -> Result<()> {
+    let a = enron_like(&EnronConfig { m: 1_000, n: 12_000, seed: 1, ..Default::default() })
+        .to_csr();
+    println!("tf-idf matrix: {} terms x {} documents, nnz={}", a.m, a.n, a.nnz());
+    let engine = default_engine();
+
+    let k = 12;
+    let svd_a = topk_svd(&a, k + 4, 8, 5, engine.as_ref())?;
+    let a_k = rank_k_fro(&svd_a, k);
+    let s = (a.nnz() / 4) as u64;
+    println!("budget s = {s} (~25% of nnz), k = {k}\n");
+    println!("{:<14} {:>8} {:>8} {:>12}", "method", "left", "right", "bits/sample");
+
+    for kind in DistributionKind::figure1_set() {
+        let plan = SketchPlan::new(kind, s).with_seed(23);
+        let sk = match sketch_offline(&a, &plan) {
+            Ok(sk) => sk,
+            Err(e) => {
+                println!("{:<14} failed: {e}", kind.name());
+                continue;
+            }
+        };
+        let enc = encode_sketch(&sk)?;
+        let b = sk.to_csr();
+        let svd_b = topk_svd(&b, k + 4, 8, 6, engine.as_ref())?;
+        let left = quality_left(&a, &svd_b, a_k, k, engine.as_ref())?;
+        let right = quality_right(&a, &svd_b, a_k, k)?;
+        println!(
+            "{:<14} {:>8.3} {:>8.3} {:>12.2}",
+            kind.name(),
+            left,
+            right,
+            enc.bits_per_sample()
+        );
+    }
+    println!("\nExpected shape (paper §6.2): Bernstein >= Row-L1/L1 > trimmed L2 > raw L2.");
+    Ok(())
+}

@@ -1,0 +1,86 @@
+"""AOT lowering: JAX (L2+L1) → HLO text artifacts + manifest.json.
+
+Interchange format is HLO **text**, not ``.serialize()``: jax ≥ 0.5 emits
+HloModuleProto with 64-bit instruction ids which xla_extension 0.5.1 (bound
+by the ``xla`` 0.1.6 crate) rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage: ``cd python && python -m compile.aot --out ../artifacts``
+
+Emits, per block-shape configuration, one ``<name>_r{R}_k{K}_c{C}.hlo.txt``
+for every compilation unit in :func:`compile.model.compilation_units`, plus
+``manifest.json`` describing op names, file names, and input/output shapes —
+the Rust runtime is entirely manifest-driven.
+"""
+
+import argparse
+import json
+import os
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# Block-shape configurations to emit. (rows, k, cols): the large config is
+# the throughput path; the small config minimizes padding waste for small
+# matrices (synthetic CF has m=100).
+CONFIGS = [
+    (2048, 32, 512),
+    (256, 32, 512),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO → XlaComputation → HLO text (ids reassigned by the parser)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_unit(fn, specs) -> str:
+    return to_hlo_text(jax.jit(fn).lower(*specs))
+
+
+def shape_of(spec) -> dict:
+    return {"dims": list(spec.shape), "dtype": str(spec.dtype)}
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    os.makedirs(args.out, exist_ok=True)
+
+    entries = []
+    for r, k, c in CONFIGS:
+        for name, fn, specs in model.compilation_units(r, k, c):
+            fname = f"{name}_r{r}_k{k}_c{c}.hlo.txt"
+            text = lower_unit(fn, specs)
+            with open(os.path.join(args.out, fname), "w") as f:
+                f.write(text)
+            # Abstract-evaluate to record output shapes for the manifest.
+            out_specs = jax.eval_shape(fn, *specs)
+            entries.append(
+                {
+                    "op": name,
+                    "file": fname,
+                    "rows": r,
+                    "k": k,
+                    "cols": c,
+                    "inputs": [shape_of(s) for s in specs],
+                    "outputs": [shape_of(s) for s in out_specs],
+                }
+            )
+            print(f"  wrote {fname} ({len(text)} chars)")
+
+    manifest = {"version": 1, "tuple_output": True, "entries": entries}
+    with open(os.path.join(args.out, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote manifest with {len(entries)} entries to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

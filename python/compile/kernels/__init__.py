@@ -1,0 +1,15 @@
+"""Layer-1 Pallas kernels for matsketch.
+
+All kernels are written for TPU-style tiling (row tiles resident in VMEM,
+MXU-friendly matmul accumulation with f32 preferred element type) but are
+lowered with ``interpret=True`` so the resulting HLO is plain ops executable
+by the CPU PJRT client in the Rust runtime. See DESIGN.md
+§Hardware-Adaptation.
+"""
+
+from .gram import gram_block
+from .apply import apply_block
+from .proj import proj_block
+from .probs import probs_block
+
+__all__ = ["gram_block", "apply_block", "proj_block", "probs_block"]

@@ -1,0 +1,39 @@
+"""Pallas kernel: apply a small K×K factor to a tall-skinny block, Q = Y T.
+
+Second half of the Cholesky-QR step: Rust computes T = L⁻ᵀ (K×K, trivially
+small) from the Gram matrix produced by :mod:`gram`, then streams the same
+row blocks of Y through this kernel to materialize the orthonormal basis Q.
+
+Tiling mirrors gram.py: the grid walks TR-row tiles; T is broadcast to every
+step (constant index map). Per-step VMEM: TR*K*2 + K*K floats ≈ 68 KB.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _apply_kernel(y_ref, t_ref, o_ref):
+    o_ref[...] = jnp.dot(y_ref[...], t_ref[...], preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def apply_block(y, t, *, tile_rows: int = 256):
+    """Compute ``y @ t`` where ``y`` is (R, K) and ``t`` is (K, K), f32."""
+    rows, k = y.shape
+    assert t.shape == (k, k), (y.shape, t.shape)
+    assert rows % tile_rows == 0, (rows, tile_rows)
+    grid = (rows // tile_rows,)
+    return pl.pallas_call(
+        _apply_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((k, k), lambda i: (0, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, k), jnp.float32),
+        interpret=True,
+    )(y, t)

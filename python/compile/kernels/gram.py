@@ -1,0 +1,50 @@
+"""Pallas kernel: Gram matrix of a tall-skinny block, G = Yᵀ Y.
+
+Used by the Rust evaluation pipeline's Cholesky-QR step: the coordinator
+streams row blocks of the subspace-iteration iterate Y (R×K) through this
+kernel and accumulates the K×K Gram matrices; the tiny Cholesky itself is
+done in Rust (xla_extension 0.5.1 cannot run the LAPACK FFI custom-calls
+that ``jnp.linalg.cholesky`` lowers to on CPU).
+
+Tiling: the grid walks TR-row tiles of Y. Each step loads one (TR, K) tile
+into VMEM and accumulates its (K, K) outer Gram into the single output
+block. VMEM working set per step: TR*K + K*K floats (256*32 + 32*32 ≈ 36 KB)
+— far below the ~16 MB VMEM budget; on a real TPU the jnp.dot maps to one
+MXU pass per tile (K padded to the 128 lane on real hardware).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _gram_kernel(y_ref, o_ref):
+    # First grid step initializes the accumulator; later steps accumulate.
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    tile = y_ref[...]
+    o_ref[...] += jnp.dot(tile.T, tile, preferred_element_type=jnp.float32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def gram_block(y, *, tile_rows: int = 256):
+    """Compute ``y.T @ y`` for a tall-skinny f32 block ``y`` of shape (R, K).
+
+    R must be a multiple of ``tile_rows``; the Rust side zero-pads tails
+    (zero rows contribute nothing to the Gram sum, so padding is exact).
+    """
+    rows, k = y.shape
+    assert rows % tile_rows == 0, (rows, tile_rows)
+    grid = (rows // tile_rows,)
+    return pl.pallas_call(
+        _gram_kernel,
+        grid=grid,
+        in_specs=[pl.BlockSpec((tile_rows, k), lambda i: (i, 0))],
+        out_specs=pl.BlockSpec((k, k), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, k), jnp.float32),
+        interpret=True,
+    )(y)

@@ -1,0 +1,51 @@
+"""Pallas kernel: entrywise sampling probabilities for a dense block.
+
+Algorithm 1 (step 3) assigns p_ij = ρ_i · |A_ij| / ‖A_(i)‖₁. The Rust
+coordinator precomputes the per-row scale w_i = ρ_i / ‖A_(i)‖₁ (and the
+analogous scales for the baseline distributions — plain-L1, Row-L1, L2 with
+w as 1/Z etc.) and streams dense blocks of A through this kernel to build
+probability tables for the offline (alias-method) sampler.
+
+The ``power`` switch selects |A_ij| (L1 family) vs A_ij² (L2 family) so one
+artifact serves all distributions in the paper's §6 comparison.
+
+Tiling: 2-D grid over (TR row tiles × C columns); the row-scale vector rides
+along as a (TR, 1) block broadcast across the columns of each tile.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _probs_kernel(a_ref, w_ref, p_ref, *, power: int):
+    a = a_ref[...]
+    mag = jnp.abs(a) if power == 1 else a * a
+    p_ref[...] = mag * w_ref[...]  # (TR, C) * (TR, 1) broadcast
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows", "power"))
+def probs_block(a, w, *, tile_rows: int = 256, power: int = 1):
+    """Entrywise probability table ``w_i * |a_ij|^power`` for f32 blocks.
+
+    ``a`` is (R, C), ``w`` is (R, 1); returns (R, C).
+    """
+    rows, c = a.shape
+    assert w.shape == (rows, 1), (a.shape, w.shape)
+    assert rows % tile_rows == 0, (rows, tile_rows)
+    assert power in (1, 2)
+    grid = (rows // tile_rows,)
+    kernel = functools.partial(_probs_kernel, power=power)
+    return pl.pallas_call(
+        kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, c), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, 1), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((tile_rows, c), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((rows, c), jnp.float32),
+        interpret=True,
+    )(a, w)

@@ -1,0 +1,50 @@
+"""Pallas kernel: projection coefficients P = Qᵀ A for one column block.
+
+The Figure-1 quality metric ‖P_k^B A‖_F / ‖A_k‖_F reduces to accumulating
+‖Qᵀ A‖_F² over column blocks of A (Q orthonormal m×k). Rust densifies A
+block-by-block from CSR and streams (R×C) blocks through this kernel
+together with the matching (R×K) row blocks of Q; the K×C products are
+accumulated over row tiles here and over row *blocks* in Rust.
+
+Tiling: grid over TR-row tiles; each step does a (K×TR)·(TR×C) MXU pass and
+accumulates into the K×C output. Per-step VMEM: TR*(K+C) + K*C floats
+(256*(32+512) + 32*512 ≈ 620 KB) — sized to stay comfortably inside VMEM
+while keeping the MXU busy with a C=512-wide pass.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _proj_kernel(q_ref, a_ref, o_ref):
+    @pl.when(pl.program_id(0) == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        q_ref[...].T, a_ref[...], preferred_element_type=jnp.float32
+    )
+
+
+@functools.partial(jax.jit, static_argnames=("tile_rows",))
+def proj_block(q, a, *, tile_rows: int = 256):
+    """Compute ``q.T @ a`` for f32 blocks q (R, K), a (R, C)."""
+    rows, k = q.shape
+    rows_a, c = a.shape
+    assert rows == rows_a, (q.shape, a.shape)
+    assert rows % tile_rows == 0, (rows, tile_rows)
+    grid = (rows // tile_rows,)
+    return pl.pallas_call(
+        _proj_kernel,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((tile_rows, k), lambda i: (i, 0)),
+            pl.BlockSpec((tile_rows, c), lambda i: (i, 0)),
+        ],
+        out_specs=pl.BlockSpec((k, c), lambda i: (0, 0)),
+        out_shape=jax.ShapeDtypeStruct((k, c), jnp.float32),
+        interpret=True,
+    )(q, a)

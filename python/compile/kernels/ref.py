@@ -1,0 +1,35 @@
+"""Pure-jnp oracles for the Pallas kernels. The pytest suite asserts
+allclose between each kernel and its oracle across a seeded sweep of
+shapes/dtypes; this is the core L1 correctness signal.
+"""
+
+import jax.numpy as jnp
+
+
+def gram_ref(y):
+    return jnp.asarray(y, jnp.float32).T @ jnp.asarray(y, jnp.float32)
+
+
+def apply_ref(y, t):
+    return jnp.asarray(y, jnp.float32) @ jnp.asarray(t, jnp.float32)
+
+
+def proj_ref(q, a):
+    return jnp.asarray(q, jnp.float32).T @ jnp.asarray(a, jnp.float32)
+
+
+def probs_ref(a, w, power=1):
+    a = jnp.asarray(a, jnp.float32)
+    mag = jnp.abs(a) if power == 1 else a * a
+    return mag * jnp.asarray(w, jnp.float32)
+
+
+def power_iter_ref(g, v0, iters=96):
+    """Dominant eigenpair of a symmetric PSD K×K matrix by power iteration."""
+    v = v0 / jnp.linalg.norm(v0)
+    lam = jnp.float32(0.0)
+    for _ in range(iters):
+        w = g @ v
+        lam = jnp.linalg.norm(w)
+        v = w / jnp.maximum(lam, 1e-30)
+    return lam, v

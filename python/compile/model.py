@@ -1,0 +1,102 @@
+"""Layer-2 JAX graphs for matsketch.
+
+Each public function here is one AOT compilation unit: ``aot.py`` lowers it
+at fixed block shapes to HLO text that the Rust runtime
+(`rust/src/runtime/`) loads and executes via PJRT. The graphs call the
+Layer-1 Pallas kernels so kernel + surrounding compute lower into a single
+HLO module.
+
+Design constraint: xla_extension 0.5.1 (the version the published ``xla``
+crate binds) cannot execute typed-FFI custom-calls, which is what
+``jnp.linalg.cholesky`` / ``triangular_solve`` / ``eigh`` lower to on CPU.
+Every graph here is therefore pure matmul / elementwise / control-flow HLO;
+the tiny K×K factorizations live in Rust (``linalg::{cholesky, jacobi}``).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from .kernels import apply_block, gram_block, probs_block, proj_block
+
+
+def gram(y):
+    """G = YᵀY for one (R, K) row block. Accumulated over blocks in Rust."""
+    return (gram_block(y),)
+
+
+def apply_factor(y, t):
+    """Q-block = Y·T for one (R, K) row block and K×K factor T."""
+    return (apply_block(y, t),)
+
+
+def proj(q, a):
+    """P += Qᵀ·A for one (R, K) Q block and (R, C) dense A block."""
+    return (proj_block(q, a),)
+
+
+def probs_l1(a, w):
+    """Entrywise probability table w_i·|A_ij| (L1 family) for one block."""
+    return (probs_block(a, w, power=1),)
+
+
+def probs_l2(a, w):
+    """Entrywise probability table w_i·A_ij² (L2 family) for one block."""
+    return (probs_block(a, w, power=2),)
+
+
+def power_iter(g, v0, *, iters: int = 96):
+    """Dominant eigenpair of a symmetric PSD K×K matrix.
+
+    Runs a fixed-trip-count power iteration as an HLO ``while`` loop —
+    demonstrates control flow surviving the AOT path and gives Rust a
+    spectral-norm primitive for Gram matrices (‖Y‖₂ = sqrt(λ_max(YᵀY))).
+    Returns (λ, v).
+    """
+
+    def body(_, carry):
+        v, _lam = carry
+        w = g @ v
+        lam = jnp.sqrt(jnp.sum(w * w))
+        return w / jnp.maximum(lam, 1e-30), lam
+
+    v0 = v0 / jnp.maximum(jnp.sqrt(jnp.sum(v0 * v0)), 1e-30)
+    v, lam = lax.fori_loop(0, iters, body, (v0, jnp.float32(0.0)))
+    return (lam, v)
+
+
+def subspace_round(y, t, a):
+    """Fused evaluation round used by the fast path: Q = Y·T; P = Qᵀ·A.
+
+    Fusing apply+proj halves the number of PJRT executions (and host↔device
+    copies) on the Figure-1 hot loop.
+    """
+    q = apply_block(y, t)
+    return (q, proj_block(q, a))
+
+
+# ---------------------------------------------------------------------------
+# Registry used by aot.py: name -> (fn, abstract input shapes builder)
+# ---------------------------------------------------------------------------
+
+
+def compilation_units(r: int, k: int, c: int):
+    """Return the list of (name, fn, example_specs) lowered by aot.py.
+
+    ``r``: rows per block, ``k``: subspace width, ``c``: dense column block.
+    """
+    f32 = jnp.float32
+    spec = jax.ShapeDtypeStruct
+    return [
+        ("gram", gram, (spec((r, k), f32),)),
+        ("apply", apply_factor, (spec((r, k), f32), spec((k, k), f32))),
+        ("proj", proj, (spec((r, k), f32), spec((r, c), f32))),
+        ("probs_l1", probs_l1, (spec((r, c), f32), spec((r, 1), f32))),
+        ("probs_l2", probs_l2, (spec((r, c), f32), spec((r, 1), f32))),
+        ("power_iter", power_iter, (spec((k, k), f32), spec((k,), f32))),
+        (
+            "subspace_round",
+            subspace_round,
+            (spec((r, k), f32), spec((k, k), f32), spec((r, c), f32)),
+        ),
+    ]

@@ -1,0 +1,68 @@
+"""L2 correctness: composed graphs (cholesky-QR round trip, power_iter,
+subspace_round fusion) against numpy references."""
+
+import numpy as np
+
+import jax.numpy as jnp
+
+from compile import model
+from compile.kernels import ref
+
+
+def rng_mat(seed, shape, scale=1.0):
+    r = np.random.default_rng(seed)
+    return (r.standard_normal(shape) * scale).astype(np.float32)
+
+
+def test_cholesky_qr_roundtrip_via_graphs():
+    """gram → (numpy cholesky, standing in for Rust) → apply ⇒ Q orthonormal."""
+    y = rng_mat(0, (2048, 32))
+    (g,) = model.gram(jnp.asarray(y))
+    g = np.asarray(g).astype(np.float64)
+    l = np.linalg.cholesky(g + 1e-8 * np.eye(32))
+    t = np.linalg.inv(l).T.astype(np.float32)  # Rust computes this k×k inverse
+    (q,) = model.apply_factor(jnp.asarray(y), jnp.asarray(t))
+    q = np.asarray(q)
+    np.testing.assert_allclose(q.T @ q, np.eye(32), atol=5e-3)
+
+
+def test_power_iter_matches_eigh():
+    g0 = rng_mat(1, (32, 32))
+    g = (g0 @ g0.T).astype(np.float32)
+    lam, v = model.power_iter(jnp.asarray(g), jnp.ones(32, np.float32))
+    lam = float(lam)
+    evals = np.linalg.eigvalsh(g.astype(np.float64))
+    assert abs(lam - evals[-1]) / evals[-1] < 1e-3
+    # v is a unit eigenvector for lam
+    v = np.asarray(v, np.float64)
+    np.testing.assert_allclose(np.linalg.norm(v), 1.0, rtol=1e-4)
+    np.testing.assert_allclose(g @ v, lam * v, rtol=0, atol=1e-2 * lam)
+
+
+def test_power_iter_ref_agrees():
+    g0 = rng_mat(2, (16, 16))
+    g = (g0 @ g0.T).astype(np.float32)
+    lam_ref, _ = ref.power_iter_ref(jnp.asarray(g), jnp.ones(16, np.float32))
+    lam, _ = model.power_iter(jnp.asarray(g), jnp.ones(16, np.float32), iters=96)
+    np.testing.assert_allclose(float(lam), float(lam_ref), rtol=1e-4)
+
+
+def test_subspace_round_fusion_equals_two_calls():
+    y = rng_mat(3, (512, 32))
+    t = rng_mat(4, (32, 32), scale=0.1)
+    a = rng_mat(5, (512, 512))
+    q1, p1 = model.subspace_round(jnp.asarray(y), jnp.asarray(t), jnp.asarray(a))
+    (q2,) = model.apply_factor(jnp.asarray(y), jnp.asarray(t))
+    (p2,) = model.proj(q2, jnp.asarray(a))
+    np.testing.assert_allclose(np.asarray(q1), np.asarray(q2), rtol=1e-6)
+    np.testing.assert_allclose(np.asarray(p1), np.asarray(p2), rtol=1e-5, atol=1e-3)
+
+
+def test_probs_graphs_sum_to_one_when_normalized():
+    """With w_i = ρ_i/‖A_(i)‖₁ the block table sums to Σρ_i (=1 over all rows)."""
+    a = rng_mat(6, (256, 512), scale=2.0)
+    row_l1 = np.abs(a).sum(axis=1, keepdims=True)
+    rho = np.full((256, 1), 1.0 / 256, np.float32)
+    w = (rho / row_l1).astype(np.float32)
+    (p,) = model.probs_l1(jnp.asarray(a), jnp.asarray(w))
+    np.testing.assert_allclose(np.asarray(p).sum(), 1.0, rtol=1e-4)

@@ -1,0 +1,44 @@
+//! E3 — regenerates the §1 compression experiment (bits/sample, codec vs
+//! COO list sizes) and benches the codec throughput.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench_items, default_budget, section};
+use matsketch::distributions::DistributionKind;
+use matsketch::eval::run_compression;
+use matsketch::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
+use matsketch::datasets::{synthetic_cf, SyntheticConfig};
+
+fn main() {
+    let budget = default_budget();
+    let full = std::env::var("MATSKETCH_BENCH_FULL").is_ok();
+
+    section("E3: bits-per-sample table");
+    let pts = run_compression(std::path::Path::new("reports"), !full, 0).unwrap();
+    println!("{:<11} {:>10} {:>12} {:>14} {:>12}", "dataset", "s", "bits/sample", "body bits/s", "vs zipped COO");
+    for p in &pts {
+        println!(
+            "{:<11} {:>10} {:>12.2} {:>14.2} {:>12.3}",
+            p.dataset, p.s, p.bits_per_sample, p.body_bits_per_sample, p.vs_compressed_coo
+        );
+    }
+
+    section("codec throughput");
+    let a = synthetic_cf(&SyntheticConfig { n: 20_000, ..Default::default() }).to_csr();
+    let sk = sketch_offline(
+        &a,
+        &SketchPlan::new(DistributionKind::Bernstein, 200_000).with_seed(1),
+    )
+    .unwrap();
+    let samples = 200_000f64;
+    bench_items("encode_sketch(200k samples)", budget, samples, || {
+        encode_sketch(&sk).unwrap().bytes.len()
+    })
+    .report();
+    let enc = encode_sketch(&sk).unwrap();
+    bench_items("decode_sketch(200k samples)", budget, samples, || {
+        decode_sketch(&enc, "Bernstein").unwrap().nnz()
+    })
+    .report();
+}

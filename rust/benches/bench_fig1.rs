@@ -1,0 +1,56 @@
+//! E2 — regenerates Figure 1 (left/right projection quality vs log10(s),
+//! 6 methods × 4 matrices) and times the per-dataset sweep.
+//! `MATSKETCH_BENCH_FULL=1` runs the full-scale datasets; default uses the
+//! small variants so `cargo bench` completes in minutes.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::time::Instant;
+
+use common::section;
+use matsketch::datasets::DatasetId;
+use matsketch::eval::figure1::{figure1_dataset, write_figure1, Figure1Config};
+use matsketch::runtime::default_engine;
+
+fn main() {
+    let full = std::env::var("MATSKETCH_BENCH_FULL").is_ok();
+    let engine = default_engine();
+    let cfg = Figure1Config {
+        k: if full { 20 } else { 12 },
+        svd_iters: 8,
+        budget_points: if full { 8 } else { 5 },
+        seed: 0,
+        small: !full,
+        ..Default::default()
+    };
+    section(&format!(
+        "E2: Figure 1 sweep (engine={}, scale={})",
+        engine.name(),
+        if full { "full" } else { "small" }
+    ));
+    let mut all = Vec::new();
+    for id in DatasetId::all() {
+        let coo = if full { id.generate(cfg.seed) } else { id.generate_small(cfg.seed) };
+        let a = coo.to_csr();
+        let t0 = Instant::now();
+        let pts = figure1_dataset(id.name(), &a, &cfg, engine.as_ref()).unwrap();
+        println!(
+            "bench figure1_{:<42} {:>12.2} s ({} points)",
+            id.name(),
+            t0.elapsed().as_secs_f64(),
+            pts.len()
+        );
+        // per-dataset winner summary at the largest budget
+        let max_s = pts.iter().map(|p| p.s).max().unwrap();
+        let mut at_max: Vec<_> = pts.iter().filter(|p| p.s == max_s).collect();
+        at_max.sort_by(|x, y| y.left.partial_cmp(&x.left).unwrap());
+        println!("  at s={max_s}:");
+        for p in &at_max {
+            println!("    {:<14} left={:.3} right={:.3}", p.method, p.left, p.right);
+        }
+        all.extend(pts);
+    }
+    write_figure1(std::path::Path::new("reports"), &all).unwrap();
+    println!("\nwrote reports/figure1.csv ({} points)", all.len());
+}

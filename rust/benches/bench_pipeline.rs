@@ -1,0 +1,68 @@
+//! E5/E7 — end-to-end streaming-pipeline throughput: nnz/s across worker
+//! counts, budgets, and distributions; plus backpressure behaviour with
+//! tiny channels.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench_items, default_budget, section};
+use matsketch::coordinator::{sketch_stream, PipelineConfig};
+use matsketch::datasets::{synthetic_cf, SyntheticConfig};
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::sketch::SketchPlan;
+use matsketch::stream::VecStream;
+
+fn main() {
+    let budget = default_budget();
+    let a = synthetic_cf(&SyntheticConfig { m: 100, n: 40_000, ..Default::default() });
+    let stats = MatrixStats::from_coo(&a);
+    let nnz = a.nnz() as f64;
+    println!("pipeline workload: {}x{}, nnz={}", a.m, a.n, a.nnz());
+
+    section("pipeline: worker scaling (Bernstein, s=nnz/10)");
+    for workers in [1usize, 2, 4, 8] {
+        let cfg = PipelineConfig { workers, ..Default::default() };
+        let plan = SketchPlan::new(DistributionKind::Bernstein, (nnz as u64) / 10)
+            .with_seed(1);
+        bench_items(&format!("pipeline_workers={workers}"), budget, nnz, || {
+            let (sk, _m) =
+                sketch_stream(VecStream::new(&a), &stats, &plan, &cfg).unwrap();
+            sk.nnz()
+        })
+        .report();
+    }
+
+    section("pipeline: budget scaling (4 workers)");
+    for frac in [100u64, 10, 2] {
+        let s = (nnz as u64) / frac;
+        let cfg = PipelineConfig { workers: 4, ..Default::default() };
+        let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(2);
+        bench_items(&format!("pipeline_s=nnz/{frac}"), budget, nnz, || {
+            sketch_stream(VecStream::new(&a), &stats, &plan, &cfg).unwrap().0.nnz()
+        })
+        .report();
+    }
+
+    section("pipeline: distribution comparison (4 workers, s=nnz/10)");
+    for kind in [
+        DistributionKind::Bernstein,
+        DistributionKind::RowL1,
+        DistributionKind::L1,
+        DistributionKind::L2,
+    ] {
+        let cfg = PipelineConfig { workers: 4, ..Default::default() };
+        let plan = SketchPlan::new(kind, (nnz as u64) / 10).with_seed(3);
+        bench_items(&format!("pipeline_{}", kind.name()), budget, nnz, || {
+            sketch_stream(VecStream::new(&a), &stats, &plan, &cfg).unwrap().0.nnz()
+        })
+        .report();
+    }
+
+    section("pipeline: backpressure (tiny channels)");
+    let cfg = PipelineConfig { workers: 4, channel_cap: 1, batch: 64 };
+    let plan = SketchPlan::new(DistributionKind::Bernstein, (nnz as u64) / 10).with_seed(4);
+    bench_items("pipeline_channel_cap=1_batch=64", budget, nnz, || {
+        sketch_stream(VecStream::new(&a), &stats, &plan, &cfg).unwrap().0.nnz()
+    })
+    .report();
+}

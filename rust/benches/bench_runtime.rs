@@ -1,0 +1,80 @@
+//! §Perf L1/L2 — AOT-artifact block-op latency through PJRT vs the
+//! pure-Rust fallback, across the shapes the evaluation pipeline feeds.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench, bench_items, default_budget, section};
+use matsketch::runtime::{DenseEngine, RustEngine, XlaEngine};
+use matsketch::sparse::{Coo, Dense};
+use matsketch::util::rng::Rng;
+
+fn main() {
+    let budget = default_budget();
+    let xla = XlaEngine::from_dir(std::path::Path::new("artifacts")).ok();
+    if xla.is_none() {
+        println!("NOTE: artifacts/ missing — run `make artifacts`; benching Rust engine only");
+    }
+    let mut rng = Rng::new(0);
+
+    let engines: Vec<(&str, &dyn DenseEngine)> = {
+        let mut v: Vec<(&str, &dyn DenseEngine)> = vec![("rust", &RustEngine)];
+        if let Some(x) = xla.as_ref() {
+            v.push(("xla", x));
+        }
+        v
+    };
+
+    for (rows, k) in [(2048usize, 32usize), (16_384, 32)] {
+        section(&format!("gram/apply: Y = {rows}x{k}"));
+        let y = Dense::randn(rows, k, &mut rng);
+        let flops = (rows * k * k) as f64;
+        for (name, e) in &engines {
+            bench_items(&format!("gram_{name}_r{rows}"), budget, flops, || {
+                e.gram(&y).unwrap()
+            })
+            .report();
+        }
+        let t: Vec<f64> = (0..k * k).map(|i| if i % (k + 1) == 0 { 1.0 } else { 0.01 }).collect();
+        for (name, e) in &engines {
+            bench_items(&format!("apply_{name}_r{rows}"), budget, flops, || {
+                e.apply(&y, &t).unwrap()
+            })
+            .report();
+        }
+    }
+
+    section("proj: Q=4096x32, A=4096x2048 (column-windowed)");
+    let q = Dense::randn(4096, 32, &mut rng);
+    let a = Dense::randn(4096, 2048, &mut rng);
+    let flops = (4096usize * 32 * 2048) as f64;
+    for (name, e) in &engines {
+        bench_items(&format!("proj_{name}"), budget, flops, || {
+            e.proj(&q, &a).unwrap()
+        })
+        .report();
+    }
+
+    section("power_iter: G=32x32, 96 iterations");
+    let m32 = Dense::randn(32, 32, &mut rng);
+    let g = RustEngine.gram(&m32).unwrap();
+    for (name, e) in &engines {
+        bench(&format!("power_iter_{name}"), budget, || e.power_iter(&g, 32).unwrap())
+            .report();
+    }
+
+    section("SpMM (rust hot path): A sparse 2000x20000 (nnz=200k) x V 20000x32");
+    let mut coo = Coo::new(2_000, 20_000);
+    for i in 0..2_000u32 {
+        for _ in 0..100 {
+            coo.push(i, rng.usize_below(20_000) as u32, rng.normal() as f32);
+        }
+    }
+    coo.normalize();
+    let sp = coo.to_csr();
+    let v = Dense::randn(20_000, 32, &mut rng);
+    let u = Dense::randn(2_000, 32, &mut rng);
+    let spmm_flops = (sp.nnz() * 32 * 2) as f64;
+    bench_items("spmm_A*V", budget, spmm_flops, || sp.spmm(&v)).report();
+    bench_items("spmm_At*U", budget, spmm_flops, || sp.spmm_t(&u)).report();
+}

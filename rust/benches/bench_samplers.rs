@@ -1,0 +1,85 @@
+//! E5/§Perf — sampler micro-benchmarks: the O(1)-per-item costs behind
+//! Theorem 4.2 (binomial draw per stream item, hypergeometric replay,
+//! alias draws) and the end-to-end reservoir throughput.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench_items, default_budget, section};
+use matsketch::samplers::{binomial, hypergeometric, AliasTable, ParallelReservoir};
+use matsketch::util::rng::Rng;
+
+fn main() {
+    let budget = default_budget();
+    section("samplers: exact binomial");
+    for (name, n, p) in [
+        ("binomial_tiny_p(n=1e6,p=1e-6)", 1_000_000u64, 1e-6),
+        ("binomial_small_mean(n=1e4,p=1e-3)", 10_000, 1e-3),
+        ("binomial_large_mean(n=1e6,p=0.01)", 1_000_000, 0.01),
+    ] {
+        let mut rng = Rng::new(1);
+        let draws = 100_000usize;
+        bench_items(name, budget, draws as f64, || {
+            let mut acc = 0u64;
+            for _ in 0..draws {
+                acc += binomial(&mut rng, n, p);
+            }
+            acc
+        })
+        .report();
+    }
+
+    section("samplers: hypergeometric");
+    let mut rng = Rng::new(2);
+    let draws = 100_000usize;
+    bench_items("hypergeometric(s=1e4,l=3e3,k=50)", budget, draws as f64, || {
+        let mut acc = 0u64;
+        for _ in 0..draws {
+            acc += hypergeometric(&mut rng, 10_000, 3_000, 50);
+        }
+        acc
+    })
+    .report();
+
+    section("samplers: alias table");
+    let mut wrng = Rng::new(3);
+    let weights: Vec<f64> = (0..1_000_000).map(|_| wrng.f64_open()).collect();
+    let table = AliasTable::new(&weights);
+    let mut rng = Rng::new(4);
+    let draws = 1_000_000usize;
+    bench_items("alias_sample(1M buckets)", budget, draws as f64, || {
+        let mut acc = 0usize;
+        for _ in 0..draws {
+            acc ^= table.sample(&mut rng);
+        }
+        acc
+    })
+    .report();
+
+    section("samplers: Appendix-A reservoir (Theorem 4.2)");
+    for s in [1_000u64, 100_000] {
+        let items = 2_000_000usize;
+        bench_items(
+            &format!("reservoir_push(s={s}, {items} items)"),
+            budget,
+            items as f64,
+            || {
+                let mut r = ParallelReservoir::new(s, 7);
+                for i in 0..items {
+                    r.push(i as u32, 1.0 + (i % 17) as f64);
+                }
+                r.sketch_len()
+            },
+        )
+        .report();
+    }
+    let items = 500_000usize;
+    bench_items("reservoir_push_finalize(s=10k)", budget, items as f64, || {
+        let mut r = ParallelReservoir::new(10_000, 9);
+        for i in 0..items {
+            r.push(i as u32, 1.0 + (i % 13) as f64);
+        }
+        r.finalize().len()
+    })
+    .report();
+}

@@ -1,0 +1,37 @@
+//! E1/E4 — regenerates the paper's §6 matrix-characteristics table and
+//! the §4 sample-complexity comparison table, timing the metric
+//! computations. Set `MATSKETCH_BENCH_FULL=1` for full-scale datasets.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench, default_budget, section};
+use matsketch::datasets::DatasetId;
+use matsketch::eval::tables::{characteristics, write_tables};
+
+fn main() {
+    let budget = default_budget();
+    let full = std::env::var("MATSKETCH_BENCH_FULL").is_ok();
+    let seed = 0u64;
+
+    section("E1/E4: matrix characteristics + sample-complexity tables");
+    let mut rows = Vec::new();
+    for id in DatasetId::all() {
+        let coo = if full { id.generate(seed) } else { id.generate_small(seed) };
+        let a = coo.to_csr();
+        println!("{}: {}x{} nnz={}", id.name(), a.m, a.n, a.nnz());
+        let mut row = None;
+        bench(&format!("characteristics_{}", id.name()), budget, || {
+            row = Some(characteristics(id.name(), &a, seed));
+        })
+        .report();
+        rows.push(row.unwrap());
+    }
+    let dir = std::path::Path::new("reports");
+    write_tables(dir, &rows).unwrap();
+
+    println!("\n--- table_characteristics ---");
+    println!("{}", std::fs::read_to_string(dir.join("table_characteristics.md")).unwrap());
+    println!("--- table_sample_complexity ---");
+    println!("{}", std::fs::read_to_string(dir.join("table_sample_complexity.md")).unwrap());
+}

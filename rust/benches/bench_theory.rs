@@ -1,0 +1,39 @@
+//! E6 — regenerates the ε₅ near-optimality table (Theorem 4.3 proxy) and
+//! benches ComputeRowDistribution (Algorithm 1 lines 6–11).
+
+#[path = "common/mod.rs"]
+mod common;
+
+use common::{bench, default_budget, section};
+use matsketch::distributions::compute_row_distribution;
+use matsketch::eval::run_theory;
+use matsketch::util::rng::Rng;
+
+fn main() {
+    let budget = default_budget();
+    let full = std::env::var("MATSKETCH_BENCH_FULL").is_ok();
+
+    section("E6: eps5 near-optimality table");
+    let pts = run_theory(std::path::Path::new("reports"), !full, 0).unwrap();
+    println!(
+        "{:<11} {:>12} {:>14} {:>12} {:>12} {:>10} {:>10}",
+        "dataset", "s", "eps5(Bern)", "eps5(L1)", "eps5(RowL1)", "TV(L1)", "TV(RowL1)"
+    );
+    for p in &pts {
+        println!(
+            "{:<11} {:>12} {:>14.4e} {:>12.4e} {:>12.4e} {:>10.4} {:>10.4}",
+            p.dataset, p.s, p.eps5_bernstein, p.eps5_l1, p.eps5_rowl1,
+            p.tv_from_l1, p.tv_from_rowl1
+        );
+    }
+
+    section("ComputeRowDistribution cost (binary search over zeta)");
+    let mut rng = Rng::new(0);
+    for m in [100usize, 10_000, 1_000_000] {
+        let z: Vec<f64> = (0..m).map(|_| rng.f64_open() * 10.0).collect();
+        bench(&format!("compute_row_distribution(m={m})"), budget, || {
+            compute_row_distribution(&z, 1_000_000, 10 * m, 0.1).unwrap()
+        })
+        .report();
+    }
+}

@@ -1,0 +1,112 @@
+//! Shared bench harness (criterion is unavailable offline — DESIGN.md §4).
+//!
+//! Provides warmup + repeated timing with median/MAD reporting and a
+//! machine-readable JSON line per benchmark, so `cargo bench` output can
+//! be diffed across the §Perf iterations.
+#![allow(dead_code)] // not every bench binary uses every helper
+
+use std::time::{Duration, Instant};
+
+use matsketch::util::stats::{mad, quantile};
+
+/// One benchmark measurement.
+pub struct BenchResult {
+    /// Name.
+    pub name: String,
+    /// Median seconds per iteration.
+    pub median: f64,
+    /// Median absolute deviation.
+    pub mad: f64,
+    /// Iterations measured.
+    pub iters: usize,
+    /// Optional throughput denominator (items per iteration).
+    pub items: Option<f64>,
+}
+
+impl BenchResult {
+    /// Render the human + JSON lines.
+    pub fn report(&self) {
+        let thr = self
+            .items
+            .map(|it| format!("  {:>10.2} Mitem/s", it / self.median / 1e6))
+            .unwrap_or_default();
+        println!(
+            "bench {:<44} {:>12} ±{:>10}{}",
+            self.name,
+            fmt_dur(self.median),
+            fmt_dur(self.mad),
+            thr
+        );
+        println!(
+            "{{\"bench\":\"{}\",\"median_s\":{:.9},\"mad_s\":{:.9},\"iters\":{}{}}}",
+            self.name,
+            self.median,
+            self.mad,
+            self.iters,
+            self.items
+                .map(|i| format!(",\"items\":{i}"))
+                .unwrap_or_default()
+        );
+    }
+}
+
+fn fmt_dur(s: f64) -> String {
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else if s >= 1e-6 {
+        format!("{:.3} µs", s * 1e6)
+    } else {
+        format!("{:.1} ns", s * 1e9)
+    }
+}
+
+/// Benchmark `f`, auto-scaling iteration count to ~`budget` wall time.
+pub fn bench<T>(name: &str, budget: Duration, mut f: impl FnMut() -> T) -> BenchResult {
+    // warmup + calibration
+    let t0 = Instant::now();
+    std::hint::black_box(f());
+    let once = t0.elapsed().as_secs_f64().max(1e-9);
+    let target_iters = ((budget.as_secs_f64() / once).ceil() as usize).clamp(3, 1000);
+
+    let mut times = Vec::with_capacity(target_iters);
+    for _ in 0..target_iters {
+        let t = Instant::now();
+        std::hint::black_box(f());
+        times.push(t.elapsed().as_secs_f64());
+    }
+    BenchResult {
+        name: name.to_string(),
+        median: quantile(&times, 0.5),
+        mad: mad(&times),
+        iters: target_iters,
+        items: None,
+    }
+}
+
+/// Benchmark with a throughput denominator.
+pub fn bench_items<T>(
+    name: &str,
+    budget: Duration,
+    items: f64,
+    f: impl FnMut() -> T,
+) -> BenchResult {
+    let mut r = bench(name, budget, f);
+    r.items = Some(items);
+    r
+}
+
+/// Standard per-bench budget (overridable via `MATSKETCH_BENCH_BUDGET_MS`).
+pub fn default_budget() -> Duration {
+    std::env::var("MATSKETCH_BENCH_BUDGET_MS")
+        .ok()
+        .and_then(|v| v.parse::<u64>().ok())
+        .map(Duration::from_millis)
+        .unwrap_or(Duration::from_millis(1_500))
+}
+
+/// Section header for grouped output.
+pub fn section(title: &str) {
+    println!("\n=== {title} ===");
+}

@@ -1,0 +1,100 @@
+//! Experiment configuration: a small `key = value` / `[section]` config
+//! format (TOML subset — serde/toml are unavailable offline) used by the
+//! CLI to parametrize datasets, budgets and sweeps.
+
+use std::collections::BTreeMap;
+use std::path::Path;
+
+use crate::error::{Error, Result};
+
+/// Parsed configuration: `section.key → value` strings with typed getters.
+#[derive(Clone, Debug, Default)]
+pub struct Config {
+    values: BTreeMap<String, String>,
+}
+
+impl Config {
+    /// Parse from text.
+    pub fn parse(text: &str) -> Result<Config> {
+        let mut values = BTreeMap::new();
+        let mut section = String::new();
+        for (lineno, raw) in text.lines().enumerate() {
+            let line = raw.split('#').next().unwrap_or("").trim();
+            if line.is_empty() {
+                continue;
+            }
+            if let Some(name) = line.strip_prefix('[').and_then(|l| l.strip_suffix(']')) {
+                section = name.trim().to_string();
+                continue;
+            }
+            let (k, v) = line.split_once('=').ok_or_else(|| {
+                Error::Parse(format!("config line {}: expected key = value", lineno + 1))
+            })?;
+            let key = if section.is_empty() {
+                k.trim().to_string()
+            } else {
+                format!("{section}.{}", k.trim())
+            };
+            values.insert(key, v.trim().trim_matches('"').to_string());
+        }
+        Ok(Config { values })
+    }
+
+    /// Load from a file.
+    pub fn load(path: &Path) -> Result<Config> {
+        Config::parse(&std::fs::read_to_string(path)?)
+    }
+
+    /// Raw lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.values.get(key).map(|s| s.as_str())
+    }
+
+    /// Typed lookup with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        match self.get(key) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Parse(format!("config {key}: cannot parse {v:?}"))),
+        }
+    }
+
+    /// Keys under a section prefix.
+    pub fn section_keys(&self, section: &str) -> Vec<&str> {
+        let prefix = format!("{section}.");
+        self.values
+            .keys()
+            .filter(|k| k.starts_with(&prefix))
+            .map(|k| k.as_str())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_sections_and_comments() {
+        let cfg = Config::parse(
+            "top = 1\n# comment\n[sweep]\nbudgets = \"1e3,1e4\" # inline\nseed = 7\n",
+        )
+        .unwrap();
+        assert_eq!(cfg.get("top"), Some("1"));
+        assert_eq!(cfg.get("sweep.budgets"), Some("1e3,1e4"));
+        assert_eq!(cfg.get_parse_or::<u64>("sweep.seed", 0).unwrap(), 7);
+        assert_eq!(cfg.section_keys("sweep").len(), 2);
+    }
+
+    #[test]
+    fn rejects_bad_lines() {
+        assert!(Config::parse("not a kv line").is_err());
+    }
+
+    #[test]
+    fn typed_defaults() {
+        let cfg = Config::parse("").unwrap();
+        assert_eq!(cfg.get_parse_or::<usize>("missing", 5).unwrap(), 5);
+    }
+}

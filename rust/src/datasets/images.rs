@@ -1,0 +1,113 @@
+//! Images-profile generator: synthetic "building-like" grayscale images
+//! (random rectangles + illumination gradient + noise), Haar-wavelet
+//! transformed per column — the structure of the paper's Oxford-buildings
+//! matrix (dense, rapidly decaying coefficient magnitudes, stable rank
+//! close to 1 because of the shared DC/low-frequency mass).
+
+use super::wavelet::haar2d;
+use crate::sparse::Coo;
+use crate::util::rng::Rng;
+
+/// Generator parameters (64×64 images vs the paper's 128×128 — same decay
+/// profile, 4× fewer rows; default 2 000 images).
+#[derive(Clone, Debug)]
+pub struct ImagesConfig {
+    /// Image side (power of two). Rows = side².
+    pub side: usize,
+    /// Number of images (columns).
+    pub n_images: usize,
+    /// Rectangles per image.
+    pub rects: usize,
+    /// Additive pixel noise σ.
+    pub noise: f64,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for ImagesConfig {
+    fn default() -> Self {
+        ImagesConfig { side: 64, n_images: 2_000, rects: 8, noise: 0.02, seed: 0 }
+    }
+}
+
+/// Generate the wavelet-coefficient matrix (rows = wavelet coefficients,
+/// columns = images). Coefficients below a tiny threshold are dropped
+/// (they are numerically zero; keeps the matrix storable as sparse while
+/// remaining effectively dense like the paper's).
+pub fn images_like(cfg: &ImagesConfig) -> Coo {
+    assert!(cfg.side.is_power_of_two());
+    let size = cfg.side;
+    let m = size * size;
+    let mut rng = Rng::new(cfg.seed ^ 0x494D47);
+    let mut coo = Coo::new(m, cfg.n_images);
+    let mut img = vec![0.0f64; m];
+    for j in 0..cfg.n_images {
+        // base illumination gradient
+        let (gx, gy) = (rng.f64() * 0.6, rng.f64() * 0.6);
+        let base = 0.2 + 0.5 * rng.f64();
+        for r in 0..size {
+            for c in 0..size {
+                img[r * size + c] =
+                    base + gx * (c as f64 / size as f64) + gy * (r as f64 / size as f64);
+            }
+        }
+        // facade-like rectangles
+        for _ in 0..cfg.rects {
+            let w = 2 + rng.usize_below(size / 2);
+            let h = 2 + rng.usize_below(size / 2);
+            let r0 = rng.usize_below(size - h.min(size - 1));
+            let c0 = rng.usize_below(size - w.min(size - 1));
+            let dv = (rng.f64() - 0.5) * 0.8;
+            for r in r0..(r0 + h).min(size) {
+                for c in c0..(c0 + w).min(size) {
+                    img[r * size + c] += dv;
+                }
+            }
+        }
+        // noise
+        for p in img.iter_mut() {
+            *p += cfg.noise * rng.normal();
+        }
+        haar2d(&mut img, size);
+        for (i, &v) in img.iter().enumerate() {
+            if v.abs() > 1e-4 {
+                coo.push(i as u32, j as u32, v as f32);
+            }
+        }
+    }
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn small() -> Coo {
+        images_like(&ImagesConfig { side: 32, n_images: 150, ..Default::default() })
+    }
+
+    #[test]
+    fn effectively_dense() {
+        let a = small();
+        let density = a.nnz() as f64 / (a.m * a.n) as f64;
+        assert!(density > 0.5, "density={density}");
+    }
+
+    #[test]
+    fn stable_rank_near_one() {
+        // shared low-frequency mass ⇒ σ₁ carries most of the energy
+        let a = small();
+        let st = crate::distributions::MatrixStats::from_coo(&a);
+        let s1 = crate::linalg::spectral_norm(&a.to_csr(), 60, 1);
+        let sr = st.sum_sq / (s1 * s1);
+        assert!(sr < 6.0, "sr={sr}");
+    }
+
+    #[test]
+    fn dc_row_dominates() {
+        let a = small();
+        let norms = a.row_l1_norms();
+        let max = norms.iter().cloned().fold(0.0f64, f64::max);
+        assert_eq!(norms[0], max, "row 0 is the DC coefficient");
+    }
+}

@@ -1,0 +1,136 @@
+//! 2-D Haar discrete wavelet transform — the substrate behind the Images
+//! dataset (the paper's image columns are "the wavelet transform of a
+//! single 128×128 pixel grayscale image").
+
+/// One level of the 1-D Haar transform in place (length must be even):
+/// first half ← scaled averages, second half ← scaled differences.
+fn haar_1d_step(data: &mut [f64], len: usize) {
+    let half = len / 2;
+    let mut tmp = vec![0.0f64; len];
+    let s = std::f64::consts::FRAC_1_SQRT_2;
+    for i in 0..half {
+        tmp[i] = (data[2 * i] + data[2 * i + 1]) * s;
+        tmp[half + i] = (data[2 * i] - data[2 * i + 1]) * s;
+    }
+    data[..len].copy_from_slice(&tmp);
+}
+
+/// Inverse of [`haar_1d_step`].
+fn haar_1d_unstep(data: &mut [f64], len: usize) {
+    let half = len / 2;
+    let mut tmp = vec![0.0f64; len];
+    let s = std::f64::consts::FRAC_1_SQRT_2;
+    for i in 0..half {
+        tmp[2 * i] = (data[i] + data[half + i]) * s;
+        tmp[2 * i + 1] = (data[i] - data[half + i]) * s;
+    }
+    data[..len].copy_from_slice(&tmp);
+}
+
+/// Full multilevel 2-D Haar DWT of a square `size×size` image (row-major,
+/// `size` a power of two). Orthonormal: Parseval-preserving.
+pub fn haar2d(img: &mut [f64], size: usize) {
+    assert!(size.is_power_of_two());
+    assert_eq!(img.len(), size * size);
+    let mut len = size;
+    let mut col = vec![0.0f64; size];
+    while len >= 2 {
+        // rows
+        for r in 0..len {
+            haar_1d_step(&mut img[r * size..r * size + len], len);
+        }
+        // cols
+        for c in 0..len {
+            for r in 0..len {
+                col[r] = img[r * size + c];
+            }
+            haar_1d_step(&mut col, len);
+            for r in 0..len {
+                img[r * size + c] = col[r];
+            }
+        }
+        len /= 2;
+    }
+}
+
+/// Inverse multilevel 2-D Haar DWT.
+pub fn ihaar2d(img: &mut [f64], size: usize) {
+    assert!(size.is_power_of_two());
+    assert_eq!(img.len(), size * size);
+    let mut len = 2;
+    let mut col = vec![0.0f64; size];
+    while len <= size {
+        for c in 0..len {
+            for r in 0..len {
+                col[r] = img[r * size + c];
+            }
+            haar_1d_unstep(&mut col, len);
+            for r in 0..len {
+                img[r * size + c] = col[r];
+            }
+        }
+        for r in 0..len {
+            haar_1d_unstep(&mut img[r * size..r * size + len], len);
+        }
+        len *= 2;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn roundtrip_identity() {
+        let size = 16;
+        let mut rng = Rng::new(0);
+        let orig: Vec<f64> = (0..size * size).map(|_| rng.normal()).collect();
+        let mut img = orig.clone();
+        haar2d(&mut img, size);
+        ihaar2d(&mut img, size);
+        for (a, b) in img.iter().zip(orig.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn parseval_energy_preserved() {
+        let size = 32;
+        let mut rng = Rng::new(1);
+        let mut img: Vec<f64> = (0..size * size).map(|_| rng.normal()).collect();
+        let e0: f64 = img.iter().map(|x| x * x).sum();
+        haar2d(&mut img, size);
+        let e1: f64 = img.iter().map(|x| x * x).sum();
+        assert!((e0 - e1).abs() / e0 < 1e-10);
+    }
+
+    #[test]
+    fn constant_image_concentrates_in_dc() {
+        let size = 8;
+        let mut img = vec![3.0f64; size * size];
+        haar2d(&mut img, size);
+        // All energy in the (0,0) coefficient
+        assert!((img[0] - 3.0 * size as f64).abs() < 1e-10);
+        let rest: f64 = img[1..].iter().map(|x| x.abs()).sum();
+        assert!(rest < 1e-9);
+    }
+
+    #[test]
+    fn smooth_images_have_decaying_coefficients() {
+        // a smooth gradient image must compress: most coefficients tiny
+        let size = 64;
+        let mut img: Vec<f64> = (0..size * size)
+            .map(|i| {
+                let (r, c) = (i / size, i % size);
+                (r as f64 / size as f64) + 0.5 * (c as f64 / size as f64)
+            })
+            .collect();
+        haar2d(&mut img, size);
+        let mut mags: Vec<f64> = img.iter().map(|x| x.abs()).collect();
+        mags.sort_by(|a, b| b.partial_cmp(a).unwrap());
+        let total: f64 = mags.iter().map(|x| x * x).sum();
+        let top32: f64 = mags[..32].iter().map(|x| x * x).sum();
+        assert!(top32 / total > 0.99, "smooth image should compress");
+    }
+}

@@ -1,0 +1,99 @@
+//! Wikipedia-profile generator: a large tf-idf term-document matrix over
+//! *long* documents — denser columns than Enron, larger vocabulary, the
+//! regime where the paper's Bernstein sampling dominates most decisively
+//! (its Figure-1 Wikipedia panel).
+
+use super::zipf::Zipf;
+use crate::sparse::Coo;
+use crate::util::rng::Rng;
+
+/// Generator parameters (laptop-scaled from the paper's 4.4e5 × 3.4e6).
+#[derive(Clone, Debug)]
+pub struct WikipediaConfig {
+    /// Vocabulary size (rows).
+    pub m: usize,
+    /// Documents (columns).
+    pub n: usize,
+    /// Mean distinct words per document (articles are long).
+    pub mean_words: f64,
+    /// Zipf exponent.
+    pub zipf_a: f64,
+    /// Seed.
+    pub seed: u64,
+}
+
+impl Default for WikipediaConfig {
+    fn default() -> Self {
+        WikipediaConfig { m: 4_000, n: 50_000, mean_words: 24.0, zipf_a: 1.1, seed: 0 }
+    }
+}
+
+/// Generate the term-document tf-idf matrix.
+pub fn wikipedia_like(cfg: &WikipediaConfig) -> Coo {
+    let mut rng = Rng::new(cfg.seed ^ 0x57_49_4B);
+    let zipf = Zipf::new(cfg.m, cfg.zipf_a);
+    // first pass: choose words per document, accumulate df
+    let mut doc_words: Vec<Vec<(u32, u16)>> = Vec::with_capacity(cfg.n);
+    let mut df = vec![0u32; cfg.m];
+    // BTreeMap: deterministic iteration order (seeded generators must be
+    // bit-reproducible; HashMap order varies per process).
+    let mut scratch: std::collections::BTreeMap<u32, u16> = Default::default();
+    for _ in 0..cfg.n {
+        let len = 2 + (rng.exp() * cfg.mean_words) as usize;
+        scratch.clear();
+        for _ in 0..len {
+            *scratch.entry(zipf.sample(&mut rng) as u32).or_default() += 1;
+        }
+        let words: Vec<(u32, u16)> = scratch.iter().map(|(&w, &c)| (w, c)).collect();
+        for &(w, _) in &words {
+            df[w as usize] += 1;
+        }
+        doc_words.push(words);
+    }
+    let mut coo = Coo::new(cfg.m, cfg.n);
+    for (j, words) in doc_words.iter().enumerate() {
+        for &(w, tf) in words {
+            let dfw = df[w as usize].max(1) as f64;
+            let idf = ((cfg.n as f64 + 1.0) / dfw).ln();
+            // sub-linear tf damping, standard tf-idf practice
+            let v = ((1.0 + (tf as f64).ln()) * idf) as f32;
+            if v > 0.0 {
+                coo.push(w, j as u32, v);
+            }
+        }
+    }
+    coo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn denser_columns_than_enron() {
+        let a = wikipedia_like(&WikipediaConfig { m: 800, n: 5_000, ..Default::default() });
+        let per_col = a.nnz() as f64 / a.n as f64;
+        assert!(per_col > 10.0, "per_col={per_col}");
+    }
+
+    #[test]
+    fn stopword_rows_have_tiny_values_but_many_entries() {
+        let a = wikipedia_like(&WikipediaConfig { m: 800, n: 8_000, ..Default::default() });
+        let mut support = vec![0usize; a.m];
+        let mut maxval = vec![0.0f32; a.m];
+        for e in &a.entries {
+            support[e.row as usize] += 1;
+            maxval[e.row as usize] = maxval[e.row as usize].max(e.val.abs());
+        }
+        // rank-0 word: near-ubiquitous support, tiny idf value
+        assert!(support[0] as f64 > 0.5 * a.n as f64);
+        let mid = 400;
+        assert!(maxval[0] < maxval[mid], "idf should damp stopwords");
+    }
+
+    #[test]
+    fn deterministic() {
+        let cfg = WikipediaConfig { m: 200, n: 1_000, seed: 3, ..Default::default() };
+        assert_eq!(wikipedia_like(&cfg).entries, wikipedia_like(&cfg).entries);
+    }
+}

@@ -1,0 +1,153 @@
+//! The Arora–Hazan–Kale (RANDOM'06) sparsifier — the paper's non-i.i.d.
+//! baseline.
+//!
+//! AHK06 keeps every entry with `|A_ij| ≥ ε/√n` **deterministically** and
+//! randomly rounds each smaller entry to `sign(A_ij)·ε/√n` with probability
+//! `|A_ij|·√n/ε` (else 0) — an unbiased estimator with bounded entries.
+//! The threshold ε must be known a priori; [`Ahk06Config::for_budget`]
+//! binary-searches ε so the *expected* number of kept entries matches a
+//! sample budget `s`, making it comparable to the i.i.d. methods.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Rng;
+
+/// AHK06 parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Ahk06Config {
+    /// The rounding threshold ε (entries ≥ ε/√n are kept exactly).
+    pub epsilon: f64,
+}
+
+impl Ahk06Config {
+    /// Expected number of non-zeros the sketch will keep at this ε.
+    pub fn expected_nnz(&self, a: &Csr) -> f64 {
+        let cut = self.epsilon / (a.n as f64).sqrt();
+        if cut <= 0.0 {
+            return a.nnz() as f64;
+        }
+        a.values
+            .iter()
+            .map(|v| {
+                let x = v.abs() as f64;
+                if x >= cut {
+                    1.0
+                } else {
+                    x / cut
+                }
+            })
+            .sum()
+    }
+
+    /// Choose ε so that `expected_nnz ≈ budget` (monotone in ε ⇒ binary
+    /// search). A `budget ≥ nnz(A)` returns ε = 0 (keep everything).
+    pub fn for_budget(a: &Csr, budget: u64) -> Ahk06Config {
+        if budget as f64 >= a.nnz() as f64 {
+            return Ahk06Config { epsilon: 0.0 };
+        }
+        let max_abs = a.values.iter().fold(0.0f64, |acc, v| acc.max(v.abs() as f64));
+        let mut lo = 0.0f64;
+        let mut hi = max_abs * (a.n as f64).sqrt() * 2.0;
+        for _ in 0..100 {
+            let mid = 0.5 * (lo + hi);
+            let cfg = Ahk06Config { epsilon: mid };
+            if cfg.expected_nnz(a) > budget as f64 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Ahk06Config { epsilon: 0.5 * (lo + hi) }
+    }
+}
+
+/// Produce the AHK06 sketch of `a`.
+pub fn ahk06_sketch(a: &Csr, cfg: &Ahk06Config, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed);
+    let cut = (cfg.epsilon / (a.n as f64).sqrt()) as f32;
+    let mut out = Coo::new(a.m, a.n);
+    for i in 0..a.m {
+        for (j, v) in a.row(i) {
+            if cut <= 0.0 || v.abs() >= cut {
+                out.push(i as u32, j, v);
+            } else {
+                let p = (v.abs() / cut) as f64;
+                if rng.bernoulli(p) {
+                    out.push(i as u32, j, v.signum() * cut);
+                }
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Coo, Entry};
+
+    fn toy(n_small: usize) -> Csr {
+        // one big entry + many small ones
+        let mut entries = vec![Entry::new(0, 0, 100.0)];
+        for j in 0..n_small {
+            entries.push(Entry::new(1, j as u32, 0.01));
+        }
+        Coo::from_entries(2, n_small.max(1), entries).unwrap().to_csr()
+    }
+
+    #[test]
+    fn zero_epsilon_keeps_everything() {
+        let a = toy(50);
+        let b = ahk06_sketch(&a, &Ahk06Config { epsilon: 0.0 }, 0);
+        assert_eq!(b.nnz(), a.nnz());
+    }
+
+    #[test]
+    fn budget_search_hits_target() {
+        let a = toy(5_000);
+        for budget in [100u64, 1_000, 3_000] {
+            let cfg = Ahk06Config::for_budget(&a, budget);
+            let expect = cfg.expected_nnz(&a);
+            assert!(
+                (expect - budget as f64).abs() / budget as f64 <= 0.02,
+                "budget {budget}: expected {expect}"
+            );
+        }
+    }
+
+    #[test]
+    fn sketch_is_unbiased() {
+        // mean of many sketches approximates A entrywise
+        let a = toy(200);
+        let cfg = Ahk06Config::for_budget(&a, 100);
+        let trials = 600;
+        let mut sum_small = 0.0f64;
+        for t in 0..trials {
+            let b = ahk06_sketch(&a, &cfg, t as u64);
+            for e in &b.entries {
+                if e.row == 1 && e.col == 0 {
+                    sum_small += e.val as f64;
+                }
+            }
+        }
+        let mean = sum_small / trials as f64;
+        assert!((mean - 0.01).abs() < 0.005, "mean={mean}");
+    }
+
+    #[test]
+    fn large_entries_kept_exactly() {
+        let a = toy(1_000);
+        let cfg = Ahk06Config::for_budget(&a, 200);
+        let b = ahk06_sketch(&a, &cfg, 3);
+        let big = b.entries.iter().find(|e| e.row == 0 && e.col == 0).unwrap();
+        assert_eq!(big.val, 100.0);
+    }
+
+    #[test]
+    fn kept_count_concentrates_near_budget() {
+        let a = toy(5_000);
+        let cfg = Ahk06Config::for_budget(&a, 1_000);
+        let b = ahk06_sketch(&a, &cfg, 11);
+        let got = b.nnz() as f64;
+        assert!((got - 1_000.0).abs() < 150.0, "kept {got}");
+    }
+}

@@ -1,0 +1,170 @@
+//! The Achlioptas–McSherry (JACM 2007) hybrid baseline — the original
+//! element-wise sparsification scheme the paper builds on (§2).
+//!
+//! AM07 keeps entry `(i,j)` independently with probability
+//! `p_ij = min(1, τ·A_ij²)` and rescales kept entries by `1/p_ij`
+//! (unbiased). Its "small wrinkle": entries so small that L2 weighting
+//! would blow up the rescaled value (`|A_ij| < θ`) are instead kept with
+//! probability proportional to `|A_ij|` — the L1 fallback that motivated
+//! the trimming discussion in §2.
+//!
+//! Unlike the i.i.d.-budget methods this is an independent-coin scheme,
+//! so like [`super::ahk06`] it gets its own sketcher with a
+//! budget-matching search over τ.
+
+use crate::sparse::{Coo, Csr};
+use crate::util::rng::Rng;
+
+/// AM07 parameters.
+#[derive(Clone, Copy, Debug)]
+pub struct Am07Config {
+    /// Global L2 intensity τ: `p = min(1, τ·v²)` for large entries.
+    pub tau: f64,
+    /// Small-entry threshold θ (entries below it use L1 weighting
+    /// `p = min(1, τ·θ·|v|)`), expressed in value units.
+    pub theta: f64,
+}
+
+impl Am07Config {
+    /// Probability of keeping value `v`.
+    #[inline]
+    pub fn keep_prob(&self, v: f32) -> f64 {
+        let a = v.abs() as f64;
+        let w = if a >= self.theta { a * a } else { self.theta * a };
+        (self.tau * w).min(1.0)
+    }
+
+    /// Expected kept entries on `a`.
+    pub fn expected_nnz(&self, a: &Csr) -> f64 {
+        a.values.iter().map(|&v| self.keep_prob(v)).sum()
+    }
+
+    /// Budget-matched configuration: θ set to the RMS entry (the natural
+    /// boundary between the L2 and L1 regimes), τ found by binary search
+    /// so the expected kept count is ≈ `budget`.
+    pub fn for_budget(a: &Csr, budget: u64) -> Am07Config {
+        let nnz = a.nnz().max(1);
+        let mean_sq: f64 =
+            a.values.iter().map(|&v| (v as f64) * (v as f64)).sum::<f64>() / nnz as f64;
+        let theta = mean_sq.sqrt();
+        if budget as f64 >= nnz as f64 {
+            // keep-everything intensity
+            return Am07Config { tau: f64::INFINITY, theta };
+        }
+        let mut lo = 0.0f64;
+        let mut hi = 1.0 / mean_sq;
+        // grow hi until expected count exceeds budget (or saturates)
+        for _ in 0..200 {
+            let cfg = Am07Config { tau: hi, theta };
+            if cfg.expected_nnz(a) >= budget as f64 {
+                break;
+            }
+            hi *= 2.0;
+        }
+        for _ in 0..100 {
+            let mid = 0.5 * (lo + hi);
+            let cfg = Am07Config { tau: mid, theta };
+            if cfg.expected_nnz(a) < budget as f64 {
+                lo = mid;
+            } else {
+                hi = mid;
+            }
+        }
+        Am07Config { tau: 0.5 * (lo + hi), theta }
+    }
+}
+
+/// Produce the AM07 sketch (independent coins, entries rescaled by 1/p).
+pub fn am07_sketch(a: &Csr, cfg: &Am07Config, seed: u64) -> Coo {
+    let mut rng = Rng::new(seed ^ 0xA407);
+    let mut out = Coo::new(a.m, a.n);
+    for i in 0..a.m {
+        for (j, v) in a.row(i) {
+            let p = cfg.keep_prob(v);
+            if p >= 1.0 {
+                out.push(i as u32, j, v);
+            } else if p > 0.0 && rng.bernoulli(p) {
+                out.push(i as u32, j, (v as f64 / p) as f32);
+            }
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Coo, Entry};
+
+    fn toy() -> Csr {
+        let mut entries = Vec::new();
+        let mut rng = Rng::new(5);
+        for i in 0..20u32 {
+            for j in 0..50u32 {
+                entries.push(Entry::new(i, j, (rng.normal() as f32) * (1.0 + i as f32 * 0.2)));
+            }
+        }
+        Coo::from_entries(20, 50, entries).unwrap().to_csr()
+    }
+
+    #[test]
+    fn budget_match() {
+        let a = toy();
+        for budget in [50u64, 200, 600] {
+            let cfg = Am07Config::for_budget(&a, budget);
+            let e = cfg.expected_nnz(&a);
+            assert!((e - budget as f64).abs() / (budget as f64) < 0.02, "{budget}: {e}");
+        }
+    }
+
+    #[test]
+    fn infinite_tau_keeps_all() {
+        let a = toy();
+        let cfg = Am07Config::for_budget(&a, 10_000_000);
+        let b = am07_sketch(&a, &cfg, 0);
+        assert_eq!(b.nnz(), a.nnz());
+    }
+
+    #[test]
+    fn unbiased() {
+        let a = toy();
+        let cfg = Am07Config::for_budget(&a, 300);
+        let trials = 800;
+        let target = {
+            let coo = a.to_coo();
+            coo.entries[7]
+        };
+        let mut acc = 0.0f64;
+        for t in 0..trials {
+            let b = am07_sketch(&a, &cfg, t);
+            for e in &b.entries {
+                if e.row == target.row && e.col == target.col {
+                    acc += e.val as f64;
+                }
+            }
+        }
+        let mean = acc / trials as f64;
+        assert!(
+            (mean - target.val as f64).abs() < 0.2 + 0.2 * target.val.abs() as f64,
+            "mean={mean} want={}",
+            target.val
+        );
+    }
+
+    #[test]
+    fn small_entries_use_l1_weighting() {
+        // a tiny entry's keep probability should be linear in |v|, not v²
+        let cfg = Am07Config { tau: 1.0, theta: 1.0 };
+        let p_small = cfg.keep_prob(0.01);
+        let p_half = cfg.keep_prob(0.005);
+        assert!((p_small / p_half - 2.0).abs() < 1e-9, "linear regime");
+        let p_big1 = cfg.keep_prob(0.9);
+        let p_big2 = cfg.keep_prob(0.45);
+        // hmm: 0.45 < theta=1 → also linear; use theta=0.1 instead
+        let cfg2 = Am07Config { tau: 1.0, theta: 0.1 };
+        let q1 = cfg2.keep_prob(0.8);
+        let q2 = cfg2.keep_prob(0.4);
+        assert!((q1 / q2 - 4.0).abs() < 1e-9, "quadratic regime");
+        let _ = (p_big1, p_big2);
+    }
+}

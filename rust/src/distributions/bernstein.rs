@@ -1,0 +1,239 @@
+//! Algorithm 1's `ComputeRowDistribution` — the Bernstein-optimal row
+//! distribution ρ.
+//!
+//! Given row weights `z_i ∝ ‖A_(i)‖₁`, a budget `s` and confidence `δ`:
+//!
+//! ```text
+//! α = √(ln((m+n)/δ)/s)        β = ln((m+n)/δ)/(3s)
+//! ρ_i(ζ) = (αz_i/2ζ + √((αz_i/2ζ)² + βz_i/ζ))²
+//! ```
+//!
+//! and ρ is `ρ_i(ζ₁)` for the unique `ζ₁ > 0` with `Σρ_i(ζ₁) = 1`
+//! (Σρ_i(ζ) is strictly decreasing, so binary search converges fast).
+//!
+//! The interpolation behaviour proved in Lemma 5.4 is visible directly:
+//! `β → 0` (large s) gives `ρ_i ∝ z_i²` (Row-L1), `α → 0` gives
+//! `ρ_i ∝ z_i` (plain L1).
+
+use crate::error::{Error, Result};
+
+/// ρ_i(ζ) per Algorithm 1, line 9.
+#[inline]
+pub fn rho_of_zeta(z: f64, alpha: f64, beta: f64, zeta: f64) -> f64 {
+    if z <= 0.0 {
+        return 0.0;
+    }
+    let a = alpha * z / (2.0 * zeta);
+    let root = (a * a + beta * z / zeta).sqrt();
+    let r = a + root;
+    r * r
+}
+
+/// Compute the Bernstein row distribution for row weights `z` (any
+/// positive scale — only ratios matter), budget `s`, column count `n`
+/// (enters via `ln((m+n)/δ)`), and failure probability `delta`.
+pub fn compute_row_distribution(z: &[f64], s: u64, n: usize, delta: f64) -> Result<Vec<f64>> {
+    let m = z.len();
+    if m == 0 {
+        return Err(Error::invalid("no rows"));
+    }
+    if s == 0 {
+        return Err(Error::invalid("budget s must be positive"));
+    }
+    if !(0.0..1.0).contains(&delta) || delta <= 0.0 {
+        return Err(Error::invalid(format!("delta must be in (0,1), got {delta}")));
+    }
+    let total_z: f64 = z.iter().sum();
+    if total_z <= 0.0 {
+        return Err(Error::invalid("row weights must have positive total"));
+    }
+    // ln((m+n)/δ) as a difference — (m+n)/δ overflows f64 for tiny δ.
+    let log_term = (((m + n) as f64).ln() - delta.ln()).max(1e-9);
+    let alpha = (log_term / s as f64).sqrt();
+    let beta = log_term / (3.0 * s as f64);
+
+    let sum_rho = |zeta: f64| -> f64 {
+        z.iter().map(|&zi| rho_of_zeta(zi, alpha, beta, zeta)).sum()
+    };
+
+    // Bracket the root: Σρ(ζ) → ∞ as ζ→0⁺ and → 0 as ζ→∞.
+    let mut lo = total_z * (alpha + beta) * 1e-12;
+    let mut hi = total_z * (alpha + beta).max(1.0);
+    let mut guard = 0;
+    while sum_rho(lo) < 1.0 {
+        lo *= 0.5;
+        guard += 1;
+        if guard > 200 {
+            return Err(Error::Numeric("cannot bracket zeta from below".into()));
+        }
+    }
+    guard = 0;
+    while sum_rho(hi) > 1.0 {
+        hi *= 2.0;
+        guard += 1;
+        if guard > 200 {
+            return Err(Error::Numeric("cannot bracket zeta from above".into()));
+        }
+    }
+    // Binary search (64 halvings ≫ f64 precision).
+    for _ in 0..200 {
+        let mid = 0.5 * (lo + hi);
+        if sum_rho(mid) > 1.0 {
+            lo = mid;
+        } else {
+            hi = mid;
+        }
+        if (hi - lo) / hi < 1e-14 {
+            break;
+        }
+    }
+    let zeta1 = 0.5 * (lo + hi);
+    let mut rho: Vec<f64> = z.iter().map(|&zi| rho_of_zeta(zi, alpha, beta, zeta1)).collect();
+    // exact normalization of the residual binary-search error
+    let total: f64 = rho.iter().sum();
+    for r in rho.iter_mut() {
+        *r /= total;
+    }
+    Ok(rho)
+}
+
+/// The ε₅ objective of Lemma 5.4 evaluated at a row distribution ρ
+/// (with the optimal intra-row q): `max_i [α·z_i/√ρ_i + β·z_i/ρ_i]`.
+/// Exposed for the Theorem-4.3 optimality experiments.
+pub fn epsilon5(z: &[f64], rho: &[f64], s: u64, n: usize, delta: f64) -> f64 {
+    let m = z.len();
+    let log_term = (((m + n) as f64).ln() - delta.ln()).max(1e-9);
+    let alpha = (log_term / s as f64).sqrt();
+    let beta = log_term / (3.0 * s as f64);
+    z.iter()
+        .zip(rho.iter())
+        .filter(|(&zi, _)| zi > 0.0)
+        .map(|(&zi, &ri)| {
+            if ri <= 0.0 {
+                f64::INFINITY
+            } else {
+                alpha * zi / ri.sqrt() + beta * zi / ri
+            }
+        })
+        .fold(0.0f64, f64::max)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_z(m: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        (0..m).map(|_| rng.f64_open() * 10.0 + 0.1).collect()
+    }
+
+    #[test]
+    fn sums_to_one_and_positive() {
+        let z = random_z(100, 0);
+        for s in [10u64, 1_000, 1_000_000] {
+            let rho = compute_row_distribution(&z, s, 10_000, 0.1).unwrap();
+            assert!((rho.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+            assert!(rho.iter().all(|&r| r > 0.0));
+        }
+    }
+
+    #[test]
+    fn scale_invariant_in_z() {
+        let z = random_z(50, 1);
+        let z_scaled: Vec<f64> = z.iter().map(|x| x * 1234.5).collect();
+        let r1 = compute_row_distribution(&z, 5_000, 1_000, 0.1).unwrap();
+        let r2 = compute_row_distribution(&z_scaled, 5_000, 1_000, 0.1).unwrap();
+        for (a, b) in r1.iter().zip(r2.iter()) {
+            assert!((a - b).abs() < 1e-10);
+        }
+    }
+
+    #[test]
+    fn zero_weight_rows_get_zero_mass() {
+        let mut z = random_z(10, 2);
+        z[3] = 0.0;
+        let rho = compute_row_distribution(&z, 1_000, 100, 0.1).unwrap();
+        assert_eq!(rho[3], 0.0);
+        assert!((rho.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn small_s_limit_is_plain_l1() {
+        // s → 1 with a huge log term: β dominates, ρ_i → z_i/Σz.
+        let z = random_z(20, 3);
+        let rho = compute_row_distribution(&z, 1, 1_000_000_000, 1e-300).unwrap();
+        let total_z: f64 = z.iter().sum();
+        let total_z2: f64 = z.iter().map(|x| x * x).sum();
+        let mut tv_l1 = 0.0;
+        let mut tv_rl1 = 0.0;
+        for (zi, ri) in z.iter().zip(rho.iter()) {
+            let want = zi / total_z;
+            assert!((ri - want).abs() / want < 0.10, "got {ri} want {want}");
+            tv_l1 += (ri - want).abs();
+            tv_rl1 += (ri - zi * zi / total_z2).abs();
+        }
+        // and it is much closer to plain-L1 than to Row-L1
+        assert!(tv_l1 < 0.2 * tv_rl1, "tv_l1={tv_l1} tv_rl1={tv_rl1}");
+    }
+
+    #[test]
+    fn large_s_limit_is_row_l1() {
+        // s → ∞: α dominates, ρ_i ∝ z_i²
+        let z = random_z(20, 4);
+        let rho = compute_row_distribution(&z, 1_000_000_000_000, 100, 0.5).unwrap();
+        let total_z2: f64 = z.iter().map(|x| x * x).sum();
+        for (zi, ri) in z.iter().zip(rho.iter()) {
+            let want = zi * zi / total_z2;
+            assert!((ri - want).abs() / want < 0.05, "got {ri} want {want}");
+        }
+    }
+
+    #[test]
+    fn equalizes_the_epsilon5_row_terms() {
+        // By construction, every positive row attains the same value of
+        // α·z/√ρ + β·z/ρ (= ζ₁).
+        let z = random_z(30, 5);
+        let (s, n, delta) = (10_000u64, 50_000usize, 0.1f64);
+        let rho = compute_row_distribution(&z, s, n, delta).unwrap();
+        let log_term = ((30.0 + n as f64) / delta).ln();
+        let alpha = (log_term / s as f64).sqrt();
+        let beta = log_term / (3.0 * s as f64);
+        let vals: Vec<f64> = z
+            .iter()
+            .zip(rho.iter())
+            .map(|(&zi, &ri)| alpha * zi / ri.sqrt() + beta * zi / ri)
+            .collect();
+        let (mn, mx) = vals.iter().fold((f64::MAX, f64::MIN), |(a, b), &v| (a.min(v), b.max(v)));
+        assert!((mx - mn) / mx < 1e-6, "spread: {mn}..{mx}");
+    }
+
+    #[test]
+    fn beats_naive_distributions_on_epsilon5() {
+        // Theorem 4.3 proxy: Bernstein's ρ minimizes ε₅, so it must beat
+        // plain-L1 and Row-L1 and 200 random perturbations.
+        let z = random_z(25, 6);
+        let (s, n, delta) = (2_000u64, 10_000usize, 0.1);
+        let rho = compute_row_distribution(&z, s, n, delta).unwrap();
+        let ours = epsilon5(&z, &rho, s, n, delta);
+
+        let total_z: f64 = z.iter().sum();
+        let l1: Vec<f64> = z.iter().map(|x| x / total_z).collect();
+        let total_z2: f64 = z.iter().map(|x| x * x).sum();
+        let rl1: Vec<f64> = z.iter().map(|x| x * x / total_z2).collect();
+        assert!(ours <= epsilon5(&z, &l1, s, n, delta) * (1.0 + 1e-9));
+        assert!(ours <= epsilon5(&z, &rl1, s, n, delta) * (1.0 + 1e-9));
+
+        let mut rng = Rng::new(7);
+        for _ in 0..200 {
+            let mut pert: Vec<f64> =
+                rho.iter().map(|&r| r * (0.3 * rng.normal()).exp()).collect();
+            let t: f64 = pert.iter().sum();
+            pert.iter_mut().for_each(|p| *p /= t);
+            assert!(
+                ours <= epsilon5(&z, &pert, s, n, delta) * (1.0 + 1e-9),
+                "perturbation beat the optimum"
+            );
+        }
+    }
+}

@@ -1,0 +1,259 @@
+//! Entrywise sampling distributions — the paper's contribution
+//! ([`bernstein`]) and every baseline in its §6 evaluation and §2/§4
+//! related-work comparison.
+//!
+//! All i.i.d.-sampling distributions reduce to an *unnormalized entry
+//! weight* `w_ij = rowscale(i) · |A_ij|^power · 1[|A_ij| > trim]`; the
+//! reservoir/alias samplers normalize implicitly. [`ahk06`] is the one
+//! non-i.i.d. baseline (deterministic keep + randomized rounding) and gets
+//! its own sketcher.
+
+pub mod ahk06;
+pub mod am07;
+pub mod bernstein;
+pub mod stats;
+
+pub use ahk06::{ahk06_sketch, Ahk06Config};
+pub use am07::{am07_sketch, Am07Config};
+pub use bernstein::compute_row_distribution;
+pub use stats::MatrixStats;
+
+use crate::error::{Error, Result};
+
+/// Which sampling distribution to use.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum DistributionKind {
+    /// The paper's Algorithm-1 distribution: `p_ij = ρ_i·|A_ij|/‖A_(i)‖₁`
+    /// with the Bernstein-optimal row distribution ρ.
+    Bernstein,
+    /// Row-L1: `p_ij ∝ |A_ij|·‖A_(i)‖₁` (the large-s limit of Bernstein).
+    RowL1,
+    /// Plain L1: `p_ij ∝ |A_ij|` (the small-s limit of Bernstein).
+    L1,
+    /// L2: `p_ij ∝ A_ij²` [AM07-style, untrimmed].
+    L2,
+    /// L2 with trimming: `p_ij ∝ A_ij²` when `A_ij² > θ·mean(A²)`, else 0.
+    /// The paper's §6 uses θ = 0.1 and θ = 0.01.
+    L2Trim(f64),
+    /// DZ11: L2 sampling with deterministic truncation of entries below
+    /// `ε/(2·√(numeric density))` of the RMS entry — strongest published
+    /// L2 guarantee.  Parameter is ε.
+    Dz11(f64),
+}
+
+impl DistributionKind {
+    /// Display name used in reports/plots (matches the paper's legend).
+    pub fn name(&self) -> String {
+        match self {
+            DistributionKind::Bernstein => "Bernstein".into(),
+            DistributionKind::RowL1 => "Row-L1".into(),
+            DistributionKind::L1 => "L1".into(),
+            DistributionKind::L2 => "L2".into(),
+            DistributionKind::L2Trim(t) => format!("L2 trim {t}"),
+            DistributionKind::Dz11(e) => format!("DZ11 eps={e}"),
+        }
+    }
+
+    /// The method set reproduced in Figure 1.
+    pub fn figure1_set() -> Vec<DistributionKind> {
+        vec![
+            DistributionKind::Bernstein,
+            DistributionKind::RowL1,
+            DistributionKind::L1,
+            DistributionKind::L2,
+            DistributionKind::L2Trim(0.1),
+            DistributionKind::L2Trim(0.01),
+        ]
+    }
+}
+
+/// A prepared entrywise distribution: maps `(row, value) → weight`.
+#[derive(Clone, Debug)]
+pub struct Distribution {
+    /// Which distribution this is.
+    pub kind: DistributionKind,
+    /// Per-row multiplier.
+    rowscale: Vec<f64>,
+    /// Magnitude power: 1 (L1 family) or 2 (L2 family).
+    power: u8,
+    /// Entries with `|v| ≤ trim_abs` get weight zero.
+    trim_abs: f64,
+    /// The Bernstein row distribution ρ (only for `Bernstein`), kept for
+    /// the sketch codec's per-row scale `‖A_(i)‖₁/(s·ρ_i)`.
+    pub rho: Option<Vec<f64>>,
+}
+
+impl Distribution {
+    /// Prepare a distribution from streaming-computable matrix statistics.
+    ///
+    /// * `stats` — one-pass row norms + global norms ([`MatrixStats`]).
+    /// * `s` — sampling budget (Bernstein's ρ depends on it).
+    /// * `delta` — failure probability (Bernstein's α, β depend on it).
+    pub fn prepare(
+        kind: DistributionKind,
+        stats: &MatrixStats,
+        s: u64,
+        delta: f64,
+    ) -> Result<Distribution> {
+        if stats.nnz == 0 {
+            return Err(Error::invalid("cannot sample an all-zero matrix"));
+        }
+        let m = stats.row_l1.len();
+        let (rowscale, power, trim_abs, rho) = match kind {
+            DistributionKind::Bernstein => {
+                let rho = compute_row_distribution(&stats.row_l1, s, stats.n, delta)?;
+                let scale: Vec<f64> = rho
+                    .iter()
+                    .zip(stats.row_l1.iter())
+                    .map(|(&r, &z)| if z > 0.0 { r / z } else { 0.0 })
+                    .collect();
+                (scale, 1u8, 0.0, Some(rho))
+            }
+            DistributionKind::RowL1 => (stats.row_l1.clone(), 1, 0.0, None),
+            DistributionKind::L1 => (vec![1.0; m], 1, 0.0, None),
+            DistributionKind::L2 => (vec![1.0; m], 2, 0.0, None),
+            DistributionKind::L2Trim(theta) => {
+                // zero weight when A_ij² ≤ θ·E[A_ij²]
+                let mean_sq = stats.sum_sq / stats.nnz as f64;
+                (vec![1.0; m], 2, (theta * mean_sq).sqrt(), None)
+            }
+            DistributionKind::Dz11(eps) => {
+                // truncate below (ε/2)·RMS — the DZ11 "discard small
+                // entries deterministically" rule scaled to this matrix.
+                let rms = (stats.sum_sq / stats.nnz as f64).sqrt();
+                (vec![1.0; m], 2, 0.5 * eps * rms, None)
+            }
+        };
+        Ok(Distribution { kind, rowscale, power, trim_abs, rho })
+    }
+
+    /// Unnormalized sampling weight of entry `(i, ·) = v`.
+    #[inline]
+    pub fn weight(&self, row: u32, v: f32) -> f64 {
+        let a = v.abs() as f64;
+        if a <= self.trim_abs {
+            return 0.0;
+        }
+        let mag = if self.power == 1 { a } else { a * a };
+        self.rowscale[row as usize] * mag
+    }
+
+    /// Exact per-row total weights `Σⱼ w_ij`, when derivable from the
+    /// one-pass statistics alone: power-1 rows sum to `rowscale·‖A_(i)‖₁`,
+    /// power-2 rows to `rowscale·Σa²`. Trimmed distributions return `None`
+    /// (their row totals depend on which entries clear the threshold) and
+    /// the pipeline falls back to full-budget workers.
+    ///
+    /// This powers the coordinator's shard-budget pre-split: with exact
+    /// shard weights, each worker's reservoir runs at its multinomial
+    /// share `s_w` instead of the full `s` — total work `O(s·log N)`
+    /// independent of the worker count (see EXPERIMENTS.md §Perf).
+    pub fn row_weight_totals(&self, stats: &MatrixStats) -> Option<Vec<f64>> {
+        if self.trim_abs > 0.0 {
+            return None;
+        }
+        let per_row = if self.power == 1 { &stats.row_l1 } else { &stats.row_sq };
+        Some(
+            self.rowscale
+                .iter()
+                .zip(per_row.iter())
+                .map(|(&sc, &z)| sc * z)
+                .collect(),
+        )
+    }
+
+    /// Exact normalized probability table over the given entries
+    /// (`(row, value)` pairs) — used by tests and the offline alias path.
+    pub fn probabilities(&self, entries: &[(u32, f32)]) -> Vec<f64> {
+        let w: Vec<f64> = entries.iter().map(|&(i, v)| self.weight(i, v)).collect();
+        let total: f64 = w.iter().sum();
+        if total <= 0.0 {
+            return w;
+        }
+        w.into_iter().map(|x| x / total).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Coo, Entry};
+
+    fn stats_of(coo: &Coo) -> MatrixStats {
+        MatrixStats::from_coo(coo)
+    }
+
+    fn toy() -> Coo {
+        Coo::from_entries(
+            2,
+            3,
+            vec![
+                Entry::new(0, 0, 3.0),
+                Entry::new(0, 1, -1.0),
+                Entry::new(1, 2, 2.0),
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn l1_weights_proportional_to_abs() {
+        let st = stats_of(&toy());
+        let d = Distribution::prepare(DistributionKind::L1, &st, 100, 0.1).unwrap();
+        let p = d.probabilities(&[(0, 3.0), (0, -1.0), (1, 2.0)]);
+        assert!((p[0] - 0.5).abs() < 1e-12);
+        assert!((p[1] - 1.0 / 6.0).abs() < 1e-12);
+        assert!((p[2] - 2.0 / 6.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l2_weights_proportional_to_square() {
+        let st = stats_of(&toy());
+        let d = Distribution::prepare(DistributionKind::L2, &st, 100, 0.1).unwrap();
+        let p = d.probabilities(&[(0, 3.0), (0, -1.0), (1, 2.0)]);
+        assert!((p[0] - 9.0 / 14.0).abs() < 1e-12);
+        assert!((p[2] - 4.0 / 14.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn row_l1_scales_by_row_norm() {
+        let st = stats_of(&toy()); // row norms: 4, 2
+        let d = Distribution::prepare(DistributionKind::RowL1, &st, 100, 0.1).unwrap();
+        // weights: 3*4, 1*4, 2*2 = 12, 4, 4
+        let p = d.probabilities(&[(0, 3.0), (0, -1.0), (1, 2.0)]);
+        assert!((p[0] - 0.6).abs() < 1e-12);
+        assert!((p[1] - 0.2).abs() < 1e-12);
+        assert!((p[2] - 0.2).abs() < 1e-12);
+    }
+
+    #[test]
+    fn l2_trim_zeroes_small_entries() {
+        let st = stats_of(&toy()); // mean square = 14/3
+        let d = Distribution::prepare(DistributionKind::L2Trim(0.5), &st, 100, 0.1).unwrap();
+        // threshold |v| = sqrt(0.5·14/3) ≈ 1.53: the -1.0 entry is trimmed
+        assert_eq!(d.weight(0, -1.0), 0.0);
+        assert!(d.weight(0, 3.0) > 0.0);
+        assert!(d.weight(1, 2.0) > 0.0);
+    }
+
+    #[test]
+    fn bernstein_probability_form_is_rho_times_intrarow() {
+        // p_ij = ρ_i·|A_ij|/‖A_(i)‖₁ ⇒ within a row, proportional to |v|;
+        // per-row mass equals ρ_i.
+        let st = stats_of(&toy());
+        let d = Distribution::prepare(DistributionKind::Bernstein, &st, 1000, 0.1).unwrap();
+        let rho = d.rho.clone().unwrap();
+        assert!((rho.iter().sum::<f64>() - 1.0).abs() < 1e-9);
+        let p = d.probabilities(&[(0, 3.0), (0, -1.0), (1, 2.0)]);
+        assert!((p[0] + p[1] - rho[0]).abs() < 1e-9);
+        assert!((p[2] - rho[1]).abs() < 1e-9);
+        assert!((p[0] / p[1] - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn names_stable() {
+        assert_eq!(DistributionKind::Bernstein.name(), "Bernstein");
+        assert_eq!(DistributionKind::L2Trim(0.1).name(), "L2 trim 0.1");
+        assert_eq!(DistributionKind::figure1_set().len(), 6);
+    }
+}

@@ -1,0 +1,156 @@
+//! One-pass matrix statistics — everything a distribution needs to be
+//! prepared, computable in a single stream over the non-zeros (or supplied
+//! a priori, per §3 of the paper: only the *ratios* of row L1 norms matter
+//! and rough estimates suffice).
+
+use crate::sparse::{Coo, Csr, Entry};
+
+/// Streaming-computable statistics of a data matrix.
+#[derive(Clone, Debug)]
+pub struct MatrixStats {
+    /// Rows.
+    pub m: usize,
+    /// Columns.
+    pub n: usize,
+    /// Non-zero count.
+    pub nnz: u64,
+    /// Per-row L1 norms `‖A_(i)‖₁` (or proportional estimates).
+    pub row_l1: Vec<f64>,
+    /// Per-row sums of squares `Σⱼ a_ij²` (for L2-family shard planning).
+    pub row_sq: Vec<f64>,
+    /// `‖A‖₁ = Σ|a_ij|`.
+    pub sum_abs: f64,
+    /// `‖A‖_F² = Σ a_ij²`.
+    pub sum_sq: f64,
+    /// max |a_ij|.
+    pub max_abs: f64,
+}
+
+impl MatrixStats {
+    /// Empty accumulator for a matrix of known shape.
+    pub fn new(m: usize, n: usize) -> MatrixStats {
+        MatrixStats {
+            m,
+            n,
+            nnz: 0,
+            row_l1: vec![0.0; m],
+            row_sq: vec![0.0; m],
+            sum_abs: 0.0,
+            sum_sq: 0.0,
+            max_abs: 0.0,
+        }
+    }
+
+    /// Fold one stream entry.
+    #[inline]
+    pub fn push(&mut self, e: &Entry) {
+        let a = e.val.abs() as f64;
+        self.nnz += 1;
+        self.row_l1[e.row as usize] += a;
+        self.row_sq[e.row as usize] += a * a;
+        self.sum_abs += a;
+        self.sum_sq += a * a;
+        if a > self.max_abs {
+            self.max_abs = a;
+        }
+    }
+
+    /// Merge a shard's statistics (coordinate-wise sums / max).
+    pub fn merge(&mut self, other: &MatrixStats) {
+        assert_eq!(self.m, other.m);
+        assert_eq!(self.n, other.n);
+        self.nnz += other.nnz;
+        self.sum_abs += other.sum_abs;
+        self.sum_sq += other.sum_sq;
+        self.max_abs = self.max_abs.max(other.max_abs);
+        for (a, b) in self.row_l1.iter_mut().zip(other.row_l1.iter()) {
+            *a += b;
+        }
+        for (a, b) in self.row_sq.iter_mut().zip(other.row_sq.iter()) {
+            *a += b;
+        }
+    }
+
+    /// One pass over a COO matrix.
+    pub fn from_coo(coo: &Coo) -> MatrixStats {
+        let mut st = MatrixStats::new(coo.m, coo.n);
+        for e in &coo.entries {
+            st.push(e);
+        }
+        st
+    }
+
+    /// One pass over a CSR matrix.
+    pub fn from_csr(a: &Csr) -> MatrixStats {
+        let mut st = MatrixStats::new(a.m, a.n);
+        for i in 0..a.m {
+            for (j, v) in a.row(i) {
+                st.push(&Entry::new(i as u32, j, v));
+            }
+        }
+        st
+    }
+
+    /// Replace exact row norms with noisy estimates (multiplicative noise
+    /// `exp(σ·N(0,1))`) — models the paper's "rough a-priori estimates"
+    /// mode; used by the robustness experiments.
+    pub fn with_noisy_rows(mut self, sigma: f64, seed: u64) -> MatrixStats {
+        let mut rng = crate::util::rng::Rng::new(seed);
+        for z in self.row_l1.iter_mut() {
+            if *z > 0.0 {
+                *z *= (sigma * rng.normal()).exp();
+            }
+        }
+        self
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn accumulates_correctly() {
+        let coo = Coo::from_entries(
+            2,
+            2,
+            vec![Entry::new(0, 0, 3.0), Entry::new(0, 1, -4.0), Entry::new(1, 1, 1.0)],
+        )
+        .unwrap();
+        let st = MatrixStats::from_coo(&coo);
+        assert_eq!(st.nnz, 3);
+        assert_eq!(st.row_l1, vec![7.0, 1.0]);
+        assert_eq!(st.sum_abs, 8.0);
+        assert_eq!(st.sum_sq, 26.0);
+        assert_eq!(st.max_abs, 4.0);
+    }
+
+    #[test]
+    fn merge_equals_single_pass() {
+        let coo = Coo::from_entries(
+            2,
+            3,
+            vec![Entry::new(0, 0, 1.0), Entry::new(1, 1, 2.0), Entry::new(1, 2, -3.0)],
+        )
+        .unwrap();
+        let full = MatrixStats::from_coo(&coo);
+        let mut a = MatrixStats::new(2, 3);
+        let mut b = MatrixStats::new(2, 3);
+        a.push(&coo.entries[0]);
+        b.push(&coo.entries[1]);
+        b.push(&coo.entries[2]);
+        a.merge(&b);
+        assert_eq!(a.nnz, full.nnz);
+        assert_eq!(a.row_l1, full.row_l1);
+        assert_eq!(a.sum_sq, full.sum_sq);
+    }
+
+    #[test]
+    fn noisy_rows_keep_positivity() {
+        let coo = Coo::from_entries(2, 2, vec![Entry::new(0, 0, 1.0), Entry::new(1, 1, 2.0)])
+            .unwrap();
+        let st = MatrixStats::from_coo(&coo).with_noisy_rows(0.5, 1);
+        assert!(st.row_l1.iter().all(|&z| z > 0.0));
+    }
+}

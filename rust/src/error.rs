@@ -1,0 +1,53 @@
+//! Crate-wide error type.
+
+use thiserror::Error;
+
+/// Errors produced by matsketch.
+#[derive(Error, Debug)]
+pub enum Error {
+    /// Matrix shapes are inconsistent for the requested operation.
+    #[error("shape mismatch: {0}")]
+    Shape(String),
+
+    /// Invalid argument / configuration value.
+    #[error("invalid argument: {0}")]
+    InvalidArg(String),
+
+    /// A numeric routine failed to converge or hit a degenerate input.
+    #[error("numeric failure: {0}")]
+    Numeric(String),
+
+    /// The AOT artifact directory / manifest is missing or malformed.
+    #[error("artifact error: {0}")]
+    Artifact(String),
+
+    /// JSON / config / matrix-market parse error.
+    #[error("parse error: {0}")]
+    Parse(String),
+
+    /// Underlying XLA / PJRT error.
+    #[error("xla error: {0}")]
+    Xla(#[from] xla::Error),
+
+    /// I/O error.
+    #[error("io error: {0}")]
+    Io(#[from] std::io::Error),
+
+    /// Streaming pipeline failure (worker panic, channel torn down, ...).
+    #[error("pipeline error: {0}")]
+    Pipeline(String),
+}
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+impl Error {
+    /// Helper: shape-mismatch error with a formatted message.
+    pub fn shape(msg: impl Into<String>) -> Self {
+        Error::Shape(msg.into())
+    }
+    /// Helper: invalid-argument error with a formatted message.
+    pub fn invalid(msg: impl Into<String>) -> Self {
+        Error::InvalidArg(msg.into())
+    }
+}

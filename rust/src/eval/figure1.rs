@@ -1,0 +1,214 @@
+//! E2 — Figure 1: left/right projection quality vs sample budget, per
+//! dataset × method.
+//!
+//! For each dataset: compute the top-k SVD of `A` once (→ `‖A_k‖_F`), then
+//! for each method and each budget `s` in a log-spaced sweep, sketch,
+//! take the sketch's top-k SVD, and record
+//! `‖P_k^B A‖_F/‖A_k‖_F` and `‖A Q_k^B‖_F/‖A_k‖_F`.
+
+use std::path::Path;
+
+use crate::datasets::DatasetId;
+use crate::distributions::{ahk06_sketch, Ahk06Config, DistributionKind};
+use crate::error::Result;
+use crate::linalg::svd::{rank_k_fro, topk_svd};
+use crate::metrics::quality::{quality_left, quality_right};
+use crate::runtime::DenseEngine;
+use crate::sketch::{sketch_offline, SketchPlan};
+use crate::sparse::Csr;
+use crate::util::log_space;
+
+use super::report::{fixed, Table};
+
+/// Figure-1 sweep parameters.
+#[derive(Clone, Debug)]
+pub struct Figure1Config {
+    /// Evaluation rank (paper: 20).
+    pub k: usize,
+    /// Subspace-iteration rounds for each SVD.
+    pub svd_iters: usize,
+    /// Number of budget points.
+    pub budget_points: usize,
+    /// Budget range as a fraction of nnz: `[lo·nnz, hi·nnz]`.
+    pub budget_lo: f64,
+    /// Upper fraction.
+    pub budget_hi: f64,
+    /// Include the AHK06 baseline (expected-nnz-matched).
+    pub include_ahk06: bool,
+    /// Base seed.
+    pub seed: u64,
+    /// Use the small dataset variants.
+    pub small: bool,
+}
+
+impl Default for Figure1Config {
+    fn default() -> Self {
+        Figure1Config {
+            k: 20,
+            svd_iters: 8,
+            budget_points: 8,
+            budget_lo: 0.02,
+            budget_hi: 2.0,
+            include_ahk06: false,
+            seed: 0,
+            small: false,
+        }
+    }
+}
+
+/// One measurement row.
+#[derive(Clone, Debug)]
+pub struct Figure1Point {
+    /// Dataset.
+    pub dataset: String,
+    /// Method name.
+    pub method: String,
+    /// Budget s.
+    pub s: u64,
+    /// Left quality.
+    pub left: f64,
+    /// Right quality.
+    pub right: f64,
+}
+
+/// Sweep one dataset.
+pub fn figure1_dataset(
+    name: &str,
+    a: &Csr,
+    cfg: &Figure1Config,
+    engine: &dyn DenseEngine,
+) -> Result<Vec<Figure1Point>> {
+    let k = cfg.k;
+    let svd_a = topk_svd(a, k + 4, cfg.svd_iters, cfg.seed ^ 1, engine)?;
+    let a_k_fro = rank_k_fro(&svd_a, k);
+    let budgets = log_space(
+        ((a.nnz() as f64 * cfg.budget_lo) as usize).max(k * 8),
+        ((a.nnz() as f64 * cfg.budget_hi) as usize).max(k * 16),
+        cfg.budget_points,
+    );
+    let mut out = Vec::new();
+    for kind in DistributionKind::figure1_set() {
+        for &s in &budgets {
+            let plan = SketchPlan::new(kind, s as u64).with_seed(cfg.seed ^ s as u64);
+            let sketch = match sketch_offline(a, &plan) {
+                Ok(sk) => sk,
+                Err(err) => {
+                    crate::warn_log!("fig1 {name}/{}/s={s}: {err}", kind.name());
+                    continue;
+                }
+            };
+            let b = sketch.to_csr();
+            let svd_b = topk_svd(&b, k + 4, cfg.svd_iters, cfg.seed ^ 2, engine)?;
+            let left = quality_left(a, &svd_b, a_k_fro, k, engine)?;
+            let right = quality_right(a, &svd_b, a_k_fro, k)?;
+            crate::debug_log!(
+                "fig1 {name} {:<12} s={s:<9} left={left:.3} right={right:.3}",
+                kind.name()
+            );
+            out.push(Figure1Point {
+                dataset: name.to_string(),
+                method: kind.name(),
+                s: s as u64,
+                left,
+                right,
+            });
+        }
+    }
+    if cfg.include_ahk06 {
+        for &s in &budgets {
+            let ahk = Ahk06Config::for_budget(a, s as u64);
+            let b = ahk06_sketch(a, &ahk, cfg.seed ^ (s as u64) ^ 0xA4).to_csr();
+            let svd_b = topk_svd(&b, k + 4, cfg.svd_iters, cfg.seed ^ 3, engine)?;
+            out.push(Figure1Point {
+                dataset: name.to_string(),
+                method: "AHK06".to_string(),
+                s: s as u64,
+                left: quality_left(a, &svd_b, a_k_fro, k, engine)?,
+                right: quality_right(a, &svd_b, a_k_fro, k)?,
+            });
+        }
+    }
+    Ok(out)
+}
+
+/// Full Figure-1 run over the four datasets; writes `figure1.csv` (one row
+/// per point) and a per-dataset markdown summary.
+pub fn run_figure1(
+    dir: &Path,
+    cfg: &Figure1Config,
+    engine: &dyn DenseEngine,
+    datasets: &[DatasetId],
+) -> Result<Vec<Figure1Point>> {
+    let mut all = Vec::new();
+    for id in datasets {
+        let coo = if cfg.small { id.generate_small(cfg.seed) } else { id.generate(cfg.seed) };
+        let a = coo.to_csr();
+        crate::info!(
+            "figure1: {} ({}x{}, nnz={}) on engine={}",
+            id.name(),
+            a.m,
+            a.n,
+            a.nnz(),
+            engine.name()
+        );
+        let pts = figure1_dataset(id.name(), &a, cfg, engine)?;
+        all.extend(pts);
+    }
+    write_figure1(dir, &all)?;
+    Ok(all)
+}
+
+/// Emit the CSV + markdown for a set of points.
+pub fn write_figure1(dir: &Path, points: &[Figure1Point]) -> Result<()> {
+    let mut t = Table::new(
+        "figure1",
+        &["dataset", "method", "s", "log10_s", "left", "right"],
+    );
+    for p in points {
+        t.push(vec![
+            p.dataset.clone(),
+            p.method.clone(),
+            p.s.to_string(),
+            fixed((p.s as f64).log10(), 3),
+            fixed(p.left, 4),
+            fixed(p.right, 4),
+        ]);
+    }
+    t.write(dir)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{synthetic_cf, SyntheticConfig};
+    use crate::runtime::RustEngine;
+
+    #[test]
+    fn sweep_monotone_and_bounded() {
+        // On a small matrix: quality ∈ (0, 1.05], and the largest budget
+        // beats the smallest for the Bernstein method.
+        let a = synthetic_cf(&SyntheticConfig { n: 800, ..Default::default() }).to_csr();
+        let cfg = Figure1Config {
+            k: 8,
+            svd_iters: 6,
+            budget_points: 3,
+            budget_lo: 0.05,
+            budget_hi: 2.0,
+            seed: 5,
+            ..Default::default()
+        };
+        let pts = figure1_dataset("synthetic", &a, &cfg, &RustEngine).unwrap();
+        assert!(!pts.is_empty());
+        for p in &pts {
+            assert!(p.left > 0.0 && p.left < 1.10, "{p:?}");
+            assert!(p.right > 0.0 && p.right < 1.10, "{p:?}");
+        }
+        let bern: Vec<&Figure1Point> =
+            pts.iter().filter(|p| p.method == "Bernstein").collect();
+        let lo = bern.iter().min_by_key(|p| p.s).unwrap();
+        let hi = bern.iter().max_by_key(|p| p.s).unwrap();
+        assert!(hi.left >= lo.left - 0.02, "lo={:?} hi={:?}", lo, hi);
+        assert!(hi.right >= lo.right - 0.02);
+    }
+}

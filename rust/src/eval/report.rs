@@ -1,0 +1,137 @@
+//! Report emission: CSV files and markdown tables under a reports dir.
+
+use std::fs;
+use std::io::Write;
+use std::path::{Path, PathBuf};
+
+use crate::error::Result;
+
+/// A simple row-oriented table writer (CSV + aligned markdown).
+#[derive(Clone, Debug)]
+pub struct Table {
+    /// Table name (file stem).
+    pub name: String,
+    /// Column headers.
+    pub headers: Vec<String>,
+    /// String-rendered rows.
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    /// New empty table.
+    pub fn new(name: &str, headers: &[&str]) -> Table {
+        Table {
+            name: name.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    /// Append a row (must match header count).
+    pub fn push(&mut self, row: Vec<String>) {
+        assert_eq!(row.len(), self.headers.len(), "table {}", self.name);
+        self.rows.push(row);
+    }
+
+    /// Render as CSV.
+    pub fn to_csv(&self) -> String {
+        let mut out = String::new();
+        out.push_str(&self.headers.join(","));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&row.join(","));
+            out.push('\n');
+        }
+        out
+    }
+
+    /// Render as a markdown table.
+    pub fn to_markdown(&self) -> String {
+        let ncols = self.headers.len();
+        let mut width = vec![0usize; ncols];
+        for (i, h) in self.headers.iter().enumerate() {
+            width[i] = h.len();
+        }
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                width[i] = width[i].max(c.len());
+            }
+        }
+        let fmt_row = |cells: &[String]| -> String {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                s.push_str(&format!(" {:<w$} |", c, w = width[i]));
+            }
+            s.push('\n');
+            s
+        };
+        let mut out = fmt_row(&self.headers);
+        out.push('|');
+        for w in &width {
+            out.push_str(&format!("{:-<w$}|", "", w = w + 2));
+        }
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row));
+        }
+        out
+    }
+
+    /// Write `<dir>/<name>.csv` and `<dir>/<name>.md`.
+    pub fn write(&self, dir: &Path) -> Result<PathBuf> {
+        fs::create_dir_all(dir)?;
+        let csv_path = dir.join(format!("{}.csv", self.name));
+        fs::write(&csv_path, self.to_csv())?;
+        let md_path = dir.join(format!("{}.md", self.name));
+        let mut f = fs::File::create(&md_path)?;
+        writeln!(f, "# {}\n", self.name)?;
+        f.write_all(self.to_markdown().as_bytes())?;
+        Ok(csv_path)
+    }
+}
+
+/// Scientific-notation cell matching the paper's table style (`1.3e+4`).
+pub fn sci(x: f64) -> String {
+    if x == 0.0 {
+        return "0".to_string();
+    }
+    format!("{x:.1e}")
+}
+
+/// Fixed-precision cell.
+pub fn fixed(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn csv_and_markdown_render() {
+        let mut t = Table::new("demo", &["a", "bb"]);
+        t.push(vec!["1".into(), "x".into()]);
+        t.push(vec!["22".into(), "yyy".into()]);
+        let csv = t.to_csv();
+        assert!(csv.starts_with("a,bb\n1,x\n"));
+        let md = t.to_markdown();
+        assert!(md.contains("| a  | bb  |"));
+        assert!(md.lines().count() == 4);
+    }
+
+    #[test]
+    fn writes_files() {
+        let dir = std::env::temp_dir().join("matsketch_report_test");
+        let mut t = Table::new("demo", &["a"]);
+        t.push(vec!["1".into()]);
+        let p = t.write(&dir).unwrap();
+        assert!(p.exists());
+        assert!(dir.join("demo.md").exists());
+    }
+
+    #[test]
+    fn sci_format() {
+        assert_eq!(sci(13000.0), "1.3e4");
+        assert_eq!(sci(0.0), "0");
+    }
+}

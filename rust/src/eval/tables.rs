@@ -1,0 +1,125 @@
+//! E1/E4: the §6 matrix-characteristics table and the §4
+//! sample-complexity comparison table.
+
+use std::path::Path;
+
+use crate::datasets::DatasetId;
+use crate::error::Result;
+use crate::metrics::MatrixMetrics;
+use crate::sparse::Csr;
+
+use super::report::{fixed, sci, Table};
+
+/// One row of the characteristics table.
+#[derive(Clone, Debug)]
+pub struct TableRow {
+    /// Dataset name.
+    pub name: String,
+    /// Computed metrics.
+    pub metrics: MatrixMetrics,
+}
+
+/// Compute the characteristics row for one matrix.
+pub fn characteristics(name: &str, a: &Csr, seed: u64) -> TableRow {
+    TableRow {
+        name: name.to_string(),
+        metrics: MatrixMetrics::compute(a, 120, seed),
+    }
+}
+
+/// Run E1 + E4 over the four paper datasets (small = CI scale) and write
+/// `table_characteristics` and `table_sample_complexity` under `dir`.
+pub fn run_tables(dir: &Path, small: bool, seed: u64) -> Result<Vec<TableRow>> {
+    let mut rows = Vec::new();
+    for id in DatasetId::all() {
+        let coo = if small { id.generate_small(seed) } else { id.generate(seed) };
+        crate::info!("tables: {} generated ({}x{}, nnz={})", id.name(), coo.m, coo.n, coo.nnz());
+        rows.push(characteristics(id.name(), &coo.to_csr(), seed));
+    }
+    write_tables(dir, &rows)?;
+    Ok(rows)
+}
+
+/// Emit both tables for precomputed rows.
+pub fn write_tables(dir: &Path, rows: &[TableRow]) -> Result<()> {
+    let mut t1 = Table::new(
+        "table_characteristics",
+        &[
+            "Measure", "m", "n", "nnz(A)", "|A|_1", "|A|_F", "|A|_2", "sr", "nd", "nrd",
+            "cond1", "cond2", "cond3",
+        ],
+    );
+    for r in rows {
+        let m = &r.metrics;
+        t1.push(vec![
+            r.name.clone(),
+            sci(m.m as f64),
+            sci(m.n as f64),
+            sci(m.nnz as f64),
+            sci(m.norm_l1),
+            sci(m.norm_fro),
+            sci(m.norm_spec),
+            sci(m.stable_rank),
+            sci(m.numeric_density),
+            sci(m.numeric_row_density),
+            m.cond1.to_string(),
+            m.cond2.to_string(),
+            m.cond3.to_string(),
+        ]);
+    }
+    t1.write(dir)?;
+
+    // E4: sample bounds at ε = 0.1 (constants dropped, as in the paper's
+    // comparison) and the improvement ratios of Theorem 4.4.
+    let eps = 0.1;
+    let mut t2 = Table::new(
+        "table_sample_complexity",
+        &[
+            "Measure", "s0 (Thm 4.4)", "AM07", "DZ11", "AHK06",
+            "DZ11/ours", "AHK06/ours", "nrd/n",
+        ],
+    );
+    for r in rows {
+        let m = &r.metrics;
+        let ours = m.theorem44_s0(eps, 0.1);
+        let (am07, dz11, ahk06) = m.prior_bounds(eps);
+        t2.push(vec![
+            r.name.clone(),
+            sci(ours),
+            sci(am07),
+            sci(dz11),
+            sci(ahk06),
+            fixed(dz11 / ours, 1),
+            fixed(ahk06 / ours, 3),
+            sci(m.numeric_row_density / m.n as f64),
+        ]);
+    }
+    t2.write(dir)?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::datasets::{synthetic_cf, SyntheticConfig};
+
+    #[test]
+    fn characteristics_row_sane() {
+        let a = synthetic_cf(&SyntheticConfig { n: 1_000, ..Default::default() }).to_csr();
+        let row = characteristics("synthetic", &a, 0);
+        let m = &row.metrics;
+        assert!(m.stable_rank >= 1.0 && m.stable_rank < m.m as f64);
+        assert!(m.numeric_density <= m.nnz as f64 + 1.0);
+        assert!(m.numeric_row_density <= m.n as f64);
+    }
+
+    #[test]
+    fn write_tables_produces_files() {
+        let dir = std::env::temp_dir().join("matsketch_tables_test");
+        let a = synthetic_cf(&SyntheticConfig { n: 600, ..Default::default() }).to_csr();
+        let rows = vec![characteristics("synthetic", &a, 0)];
+        write_tables(&dir, &rows).unwrap();
+        assert!(dir.join("table_characteristics.csv").exists());
+        assert!(dir.join("table_sample_complexity.md").exists());
+    }
+}

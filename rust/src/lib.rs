@@ -1,0 +1,75 @@
+//! # matsketch
+//!
+//! A streaming matrix-sketching framework reproducing *Near-Optimal
+//! Entrywise Sampling for Data Matrices* (Achlioptas, Karnin, Liberty —
+//! NIPS 2013).
+//!
+//! Given an `m×n` data matrix `A` (`n ≫ m`) arriving as an arbitrary-order
+//! stream of non-zero entries, matsketch produces a sparse unbiased sketch
+//! `B` minimizing `‖A − B‖₂` by sampling `s` entries i.i.d. from the
+//! paper's near-optimal **Bernstein distribution**
+//! `p_ij = ρ_i · |A_ij| / ‖A_(i)‖₁` (Algorithm 1), with `O(1)` work per
+//! non-zero and `O(log s)` active memory (Appendix A).
+//!
+//! ## Architecture (three layers)
+//!
+//! * **L3 — Rust coordinator** (this crate): streaming pipeline
+//!   ([`coordinator`]), sampling distributions ([`distributions`]),
+//!   reservoir/binomial/hypergeometric samplers ([`samplers`]), compressed
+//!   sketch codec ([`sketch`]), sparse/dense substrates ([`sparse`],
+//!   [`linalg`]), dataset generators ([`datasets`]), evaluation harness
+//!   ([`eval`], [`metrics`]).
+//! * **L2 — JAX graphs** (`python/compile/model.py`): the FLOP-heavy
+//!   evaluation compute (Gram/apply/proj block ops, power iteration),
+//!   AOT-lowered to HLO text.
+//! * **L1 — Pallas kernels** (`python/compile/kernels/`): tiled MXU-style
+//!   kernels called by the L2 graphs.
+//!
+//! The [`runtime`] module loads the AOT artifacts through the PJRT CPU
+//! client (`xla` crate) and exposes them behind the [`runtime::DenseEngine`]
+//! trait; a pure-Rust fallback implements the same trait so every consumer
+//! is engine-agnostic and the two paths cross-validate in tests.
+//!
+//! ## Quickstart
+//!
+//! ```no_run
+//! use matsketch::prelude::*;
+//!
+//! // 1. A data matrix (here: the paper's synthetic CF generator).
+//! let a = matsketch::datasets::synthetic_cf(&Default::default());
+//! // 2. Sketch it with the Bernstein distribution, s = 100k samples.
+//! let plan = SketchPlan::new(DistributionKind::Bernstein, 100_000).with_seed(7);
+//! let sketch = sketch_matrix(&a, &plan).unwrap();
+//! // 3. Use the sketch: B is sparse, unbiased, and ‖A−B‖₂-near-optimal.
+//! let b = sketch.to_csr();
+//! println!("kept {} of {} entries", b.nnz(), a.nnz());
+//! ```
+
+pub mod config;
+pub mod coordinator;
+pub mod datasets;
+pub mod distributions;
+pub mod error;
+pub mod eval;
+pub mod linalg;
+pub mod metrics;
+pub mod runtime;
+pub mod samplers;
+pub mod sketch;
+pub mod sparse;
+pub mod stream;
+pub mod testing;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Convenience re-exports for downstream users.
+pub mod prelude {
+    pub use crate::coordinator::{sketch_matrix, sketch_stream, Pipeline, PipelineConfig};
+    pub use crate::distributions::{Distribution, DistributionKind};
+    pub use crate::error::{Error, Result};
+    pub use crate::metrics::MatrixMetrics;
+    pub use crate::sketch::{Sketch, SketchPlan};
+    pub use crate::sparse::{Coo, Csr, Dense, Entry};
+    pub use crate::util::rng::Rng;
+}

@@ -1,0 +1,162 @@
+//! Small dense Cholesky factorization and triangular inversion (f64).
+//!
+//! Used for the Cholesky-QR orthonormalization step of the subspace
+//! iteration: `G = YᵀY` (from the XLA gram artifact), `G = LLᵀ`,
+//! `T = L⁻ᵀ`, `Q = Y·T` (XLA apply artifact). K ≤ 32 so cost is trivial.
+
+use crate::error::{Error, Result};
+
+/// Lower-triangular Cholesky factor of a k×k SPD matrix (row-major).
+/// A small diagonal jitter is added on near-singular inputs, growing until
+/// the factorization succeeds (subspace iterates can be rank-deficient in
+/// early rounds).
+pub fn cholesky(g: &[f64], k: usize) -> Result<Vec<f64>> {
+    assert_eq!(g.len(), k * k);
+    let scale = (0..k).map(|i| g[i * k + i]).fold(0.0f64, f64::max).max(1e-300);
+    let mut jitter = 0.0;
+    for attempt in 0..48 {
+        match try_cholesky(g, k, jitter) {
+            Ok(l) => return Ok(l),
+            Err(_) => {
+                jitter = if attempt == 0 { scale * 1e-14 } else { jitter * 10.0 };
+            }
+        }
+    }
+    Err(Error::Numeric("cholesky failed even with jitter".into()))
+}
+
+fn try_cholesky(g: &[f64], k: usize, jitter: f64) -> Result<Vec<f64>> {
+    let mut l = vec![0.0f64; k * k];
+    for i in 0..k {
+        for j in 0..=i {
+            let mut sum = g[i * k + j];
+            if i == j {
+                sum += jitter;
+            }
+            for p in 0..j {
+                sum -= l[i * k + p] * l[j * k + p];
+            }
+            if i == j {
+                if sum <= 0.0 {
+                    return Err(Error::Numeric(format!("non-PD at pivot {i}")));
+                }
+                l[i * k + i] = sum.sqrt();
+            } else {
+                l[i * k + j] = sum / l[j * k + j];
+            }
+        }
+    }
+    Ok(l)
+}
+
+/// Invert a lower-triangular k×k matrix (row-major) by forward substitution.
+pub fn inv_lower(l: &[f64], k: usize) -> Result<Vec<f64>> {
+    assert_eq!(l.len(), k * k);
+    let mut inv = vec![0.0f64; k * k];
+    for col in 0..k {
+        // solve L x = e_col
+        for i in col..k {
+            let mut sum = if i == col { 1.0 } else { 0.0 };
+            for p in col..i {
+                sum -= l[i * k + p] * inv[p * k + col];
+            }
+            let d = l[i * k + i];
+            if d == 0.0 {
+                return Err(Error::Numeric(format!("singular diagonal at {i}")));
+            }
+            inv[i * k + col] = sum / d;
+        }
+    }
+    Ok(inv)
+}
+
+/// The combined Cholesky-QR factor: given `G = YᵀY`, produce `T = L⁻ᵀ`
+/// such that `Q = Y·T` has orthonormal columns.
+pub struct CholeskyQr {
+    /// k
+    pub k: usize,
+    /// `T = L⁻ᵀ` row-major (k×k, upper triangular).
+    pub t: Vec<f64>,
+    /// The Cholesky factor L (row-major lower triangular) — `R = Lᵀ` of QR.
+    pub l: Vec<f64>,
+}
+
+impl CholeskyQr {
+    /// Factor a Gram matrix.
+    pub fn from_gram(g: &[f64], k: usize) -> Result<CholeskyQr> {
+        let l = cholesky(g, k)?;
+        let linv = inv_lower(&l, k)?;
+        // T = (L⁻¹)ᵀ
+        let mut t = vec![0.0f64; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                t[i * k + j] = linv[j * k + i];
+            }
+        }
+        Ok(CholeskyQr { k, t, l })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::dense_ops::{gram, matmul_small, max_offdiag_dev_from_identity};
+    use crate::sparse::Dense;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn cholesky_reconstructs() {
+        // G = M Mᵀ for random M
+        let mut rng = Rng::new(2);
+        let k = 6;
+        let m = Dense::randn(k, k, &mut rng);
+        let mut g = vec![0.0; k * k];
+        for i in 0..k {
+            for j in 0..k {
+                g[i * k + j] = (0..k).map(|p| m.get(i, p) as f64 * m.get(j, p) as f64).sum();
+            }
+        }
+        let l = cholesky(&g, k).unwrap();
+        // L Lᵀ == G
+        for i in 0..k {
+            for j in 0..k {
+                let want: f64 = (0..k).map(|p| l[i * k + p] * l[j * k + p]).sum();
+                assert!((want - g[i * k + j]).abs() < 1e-9);
+            }
+        }
+    }
+
+    #[test]
+    fn inv_lower_inverts() {
+        let l = vec![2.0, 0.0, 0.0, 1.0, 3.0, 0.0, -1.0, 0.5, 4.0];
+        let inv = inv_lower(&l, 3).unwrap();
+        let prod = matmul_small(&l, 3, 3, &inv, 3);
+        assert!(max_offdiag_dev_from_identity(&prod, 3) < 1e-12);
+    }
+
+    #[test]
+    fn cholesky_qr_orthonormalizes() {
+        let mut rng = Rng::new(3);
+        let y = Dense::randn(500, 8, &mut rng);
+        let g = gram(&y);
+        let cqr = CholeskyQr::from_gram(&g, 8).unwrap();
+        let q = crate::linalg::dense_ops::apply_factor(&y, &cqr.t);
+        let gq = gram(&q);
+        assert!(max_offdiag_dev_from_identity(&gq, 8) < 1e-4, "dev={}",
+                max_offdiag_dev_from_identity(&gq, 8));
+    }
+
+    #[test]
+    fn cholesky_handles_near_singular_with_jitter() {
+        // rank-1 Gram matrix
+        let v = [1.0, 2.0, 3.0];
+        let mut g = vec![0.0; 9];
+        for i in 0..3 {
+            for j in 0..3 {
+                g[i * 3 + j] = v[i] * v[j];
+            }
+        }
+        let l = cholesky(&g, 3).unwrap();
+        assert!(l[0] > 0.0);
+    }
+}

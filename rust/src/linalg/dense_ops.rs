@@ -1,0 +1,154 @@
+//! Pure-Rust dense kernels: the fallback implementations of the block ops
+//! that normally run in the AOT XLA artifacts, plus small helpers.
+//! Shapes follow the artifact conventions (row-major, f32 storage, f64
+//! accumulation where it matters for the paper's metrics).
+
+use crate::sparse::Dense;
+
+/// Gram matrix `G = YᵀY` (k×k, f64 accumulation) for a tall-skinny `Y`.
+pub fn gram(y: &Dense) -> Vec<f64> {
+    let (r, k) = (y.rows, y.cols);
+    let mut g = vec![0.0f64; k * k];
+    for i in 0..r {
+        let row = y.row(i);
+        for a in 0..k {
+            let ya = row[a] as f64;
+            if ya == 0.0 {
+                continue;
+            }
+            let grow = &mut g[a * k..(a + 1) * k];
+            for b in a..k {
+                grow[b] += ya * row[b] as f64;
+            }
+        }
+    }
+    // mirror the upper triangle
+    for a in 0..k {
+        for b in 0..a {
+            g[a * k + b] = g[b * k + a];
+        }
+    }
+    g
+}
+
+/// `Q = Y · T` for tall-skinny `Y` (r×k) and small `T` (k×k row-major f64).
+pub fn apply_factor(y: &Dense, t: &[f64]) -> Dense {
+    let (r, k) = (y.rows, y.cols);
+    assert_eq!(t.len(), k * k);
+    let mut out = Dense::zeros(r, k);
+    for i in 0..r {
+        let src = y.row(i);
+        let dst = out.row_mut(i);
+        for a in 0..k {
+            let v = src[a] as f64;
+            if v == 0.0 {
+                continue;
+            }
+            let trow = &t[a * k..(a + 1) * k];
+            for b in 0..k {
+                dst[b] += (v * trow[b]) as f32;
+            }
+        }
+    }
+    out
+}
+
+/// `P = Qᵀ · A` for row blocks `Q` (r×k), `A` (r×c); returns k×c.
+pub fn proj(q: &Dense, a: &Dense) -> Dense {
+    assert_eq!(q.rows, a.rows);
+    let (r, k, c) = (q.rows, q.cols, a.cols);
+    let mut out = Dense::zeros(k, c);
+    for i in 0..r {
+        let qrow = q.row(i);
+        let arow = a.row(i);
+        for x in 0..k {
+            let qv = qrow[x];
+            if qv == 0.0 {
+                continue;
+            }
+            let dst = &mut out.data[x * c..(x + 1) * c];
+            for (d, s) in dst.iter_mut().zip(arow.iter()) {
+                *d += qv * s;
+            }
+        }
+    }
+    out
+}
+
+/// General small matmul `C = A·B` in f64 (for k×k factor algebra).
+pub fn matmul_small(a: &[f64], ar: usize, ac: usize, b: &[f64], bc: usize) -> Vec<f64> {
+    assert_eq!(a.len(), ar * ac);
+    assert_eq!(b.len(), ac * bc);
+    let mut c = vec![0.0; ar * bc];
+    for i in 0..ar {
+        for l in 0..ac {
+            let v = a[i * ac + l];
+            if v == 0.0 {
+                continue;
+            }
+            let brow = &b[l * bc..(l + 1) * bc];
+            let crow = &mut c[i * bc..(i + 1) * bc];
+            for (cv, bv) in crow.iter_mut().zip(brow.iter()) {
+                *cv += v * bv;
+            }
+        }
+    }
+    c
+}
+
+/// Max |off-diagonal| of a k×k symmetric matrix given as row-major f64 —
+/// used to test orthonormality.
+pub fn max_offdiag_dev_from_identity(g: &[f64], k: usize) -> f64 {
+    let mut dev: f64 = 0.0;
+    for i in 0..k {
+        for j in 0..k {
+            let target = if i == j { 1.0 } else { 0.0 };
+            dev = dev.max((g[i * k + j] - target).abs());
+        }
+    }
+    dev
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn gram_matches_naive() {
+        let mut rng = Rng::new(0);
+        let y = Dense::randn(50, 4, &mut rng);
+        let g = gram(&y);
+        for a in 0..4 {
+            for b in 0..4 {
+                let want: f64 = (0..50).map(|i| y.get(i, a) as f64 * y.get(i, b) as f64).sum();
+                assert!((g[a * 4 + b] - want).abs() < 1e-9, "({a},{b})");
+            }
+        }
+    }
+
+    #[test]
+    fn apply_then_proj_consistent() {
+        let mut rng = Rng::new(1);
+        let y = Dense::randn(30, 3, &mut rng);
+        let t = vec![1.0, 0.0, 0.0, 0.0, 2.0, 0.0, 0.0, 0.0, -1.0]; // diag(1,2,-1)
+        let q = apply_factor(&y, &t);
+        for i in 0..30 {
+            assert!((q.get(i, 1) - 2.0 * y.get(i, 1)).abs() < 1e-5);
+            assert!((q.get(i, 2) + y.get(i, 2)).abs() < 1e-5);
+        }
+        let a = Dense::randn(30, 7, &mut rng);
+        let p = proj(&q, &a);
+        let want: f64 = (0..30).map(|i| q.get(i, 0) as f64 * a.get(i, 0) as f64).sum();
+        assert!((p.get(0, 0) as f64 - want).abs() < 1e-3);
+    }
+
+    #[test]
+    fn matmul_small_identity() {
+        let a = vec![1.0, 2.0, 3.0, 4.0];
+        let id = vec![1.0, 0.0, 0.0, 1.0];
+        assert_eq!(matmul_small(&a, 2, 2, &id, 2), a);
+        let b = matmul_small(&a, 2, 2, &a, 2);
+        assert_eq!(b, vec![7.0, 10.0, 15.0, 22.0]);
+    }
+}

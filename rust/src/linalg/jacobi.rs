@@ -1,0 +1,146 @@
+//! Cyclic Jacobi eigensolver for small symmetric matrices (f64).
+//!
+//! Used for the Rayleigh–Ritz step of the subspace-iteration SVD: the
+//! projected k×k problem (k ≤ 32) is tiny, so the classic O(k³) sweep is
+//! more than fast enough and has excellent accuracy.
+
+/// Eigendecomposition of a symmetric k×k matrix (row-major).
+/// Returns `(eigenvalues, eigenvectors)` sorted **descending**; the
+/// eigenvector for `evals[c]` is the column `c` of the returned row-major
+/// matrix (i.e. `evecs[r * k + c]`).
+pub fn jacobi_eigh(a_in: &[f64], k: usize) -> (Vec<f64>, Vec<f64>) {
+    assert_eq!(a_in.len(), k * k);
+    let mut a = a_in.to_vec();
+    let mut v = vec![0.0f64; k * k];
+    for i in 0..k {
+        v[i * k + i] = 1.0;
+    }
+    let max_sweeps = 64;
+    for _sweep in 0..max_sweeps {
+        let mut off = 0.0f64;
+        for i in 0..k {
+            for j in (i + 1)..k {
+                off += a[i * k + j] * a[i * k + j];
+            }
+        }
+        let scale = (0..k).map(|i| a[i * k + i].abs()).fold(0.0f64, f64::max);
+        if off.sqrt() <= 1e-14 * scale.max(1e-300) {
+            break;
+        }
+        for p in 0..k {
+            for q in (p + 1)..k {
+                let apq = a[p * k + q];
+                if apq.abs() < 1e-300 {
+                    continue;
+                }
+                let app = a[p * k + p];
+                let aqq = a[q * k + q];
+                let theta = (aqq - app) / (2.0 * apq);
+                let t = theta.signum() / (theta.abs() + (theta * theta + 1.0).sqrt());
+                let c = 1.0 / (t * t + 1.0).sqrt();
+                let s = t * c;
+                // rotate rows/cols p and q of A
+                for i in 0..k {
+                    let aip = a[i * k + p];
+                    let aiq = a[i * k + q];
+                    a[i * k + p] = c * aip - s * aiq;
+                    a[i * k + q] = s * aip + c * aiq;
+                }
+                for j in 0..k {
+                    let apj = a[p * k + j];
+                    let aqj = a[q * k + j];
+                    a[p * k + j] = c * apj - s * aqj;
+                    a[q * k + j] = s * apj + c * aqj;
+                }
+                // accumulate eigenvectors
+                for i in 0..k {
+                    let vip = v[i * k + p];
+                    let viq = v[i * k + q];
+                    v[i * k + p] = c * vip - s * viq;
+                    v[i * k + q] = s * vip + c * viq;
+                }
+            }
+        }
+    }
+    // extract + sort descending
+    let mut order: Vec<usize> = (0..k).collect();
+    let evals: Vec<f64> = (0..k).map(|i| a[i * k + i]).collect();
+    order.sort_by(|&x, &y| evals[y].partial_cmp(&evals[x]).unwrap());
+    let sorted_evals: Vec<f64> = order.iter().map(|&i| evals[i]).collect();
+    let mut sorted_vecs = vec![0.0f64; k * k];
+    for (newc, &oldc) in order.iter().enumerate() {
+        for r in 0..k {
+            sorted_vecs[r * k + newc] = v[r * k + oldc];
+        }
+    }
+    (sorted_evals, sorted_vecs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn random_sym(k: usize, seed: u64) -> Vec<f64> {
+        let mut rng = Rng::new(seed);
+        let mut a = vec![0.0; k * k];
+        for i in 0..k {
+            for j in 0..=i {
+                let x = rng.normal();
+                a[i * k + j] = x;
+                a[j * k + i] = x;
+            }
+        }
+        a
+    }
+
+    #[test]
+    fn diagonal_matrix_trivial() {
+        let a = vec![3.0, 0.0, 0.0, 0.0, -1.0, 0.0, 0.0, 0.0, 2.0];
+        let (evals, _) = jacobi_eigh(&a, 3);
+        assert!((evals[0] - 3.0).abs() < 1e-12);
+        assert!((evals[1] - 2.0).abs() < 1e-12);
+        assert!((evals[2] + 1.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn reconstruction_and_orthogonality() {
+        let k = 12;
+        let a = random_sym(k, 4);
+        let (evals, vecs) = jacobi_eigh(&a, k);
+        // V diag(e) Vᵀ == A
+        for i in 0..k {
+            for j in 0..k {
+                let mut want = 0.0;
+                for p in 0..k {
+                    want += vecs[i * k + p] * evals[p] * vecs[j * k + p];
+                }
+                assert!((want - a[i * k + j]).abs() < 1e-9, "({i},{j})");
+            }
+        }
+        // VᵀV == I
+        for c1 in 0..k {
+            for c2 in 0..k {
+                let dot: f64 = (0..k).map(|r| vecs[r * k + c1] * vecs[r * k + c2]).sum();
+                let want = if c1 == c2 { 1.0 } else { 0.0 };
+                assert!((dot - want).abs() < 1e-10);
+            }
+        }
+    }
+
+    #[test]
+    fn eigenvalues_sorted_descending() {
+        let a = random_sym(8, 9);
+        let (evals, _) = jacobi_eigh(&a, 8);
+        assert!(evals.windows(2).all(|w| w[0] >= w[1] - 1e-12));
+    }
+
+    #[test]
+    fn trace_preserved() {
+        let k = 10;
+        let a = random_sym(k, 5);
+        let tr: f64 = (0..k).map(|i| a[i * k + i]).sum();
+        let (evals, _) = jacobi_eigh(&a, k);
+        assert!((evals.iter().sum::<f64>() - tr).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,19 @@
+//! Dense linear algebra substrate.
+//!
+//! The small K×K factorizations ([`cholesky`], [`jacobi`]) run here in f64
+//! (they cannot run in the AOT artifacts — xla_extension 0.5.1 rejects the
+//! LAPACK typed-FFI custom-calls jax lowers them to); the FLOP-heavy
+//! tall-skinny products run either in the XLA artifacts
+//! ([`crate::runtime::XlaEngine`]) or the pure-Rust fallback
+//! ([`dense_ops`]), both behind [`crate::runtime::DenseEngine`].
+
+pub mod cholesky;
+pub mod dense_ops;
+pub mod jacobi;
+pub mod power;
+pub mod svd;
+
+pub use cholesky::{cholesky, inv_lower, CholeskyQr};
+pub use jacobi::jacobi_eigh;
+pub use power::spectral_norm;
+pub use svd::{topk_svd, SvdResult};

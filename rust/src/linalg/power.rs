@@ -1,0 +1,102 @@
+//! Spectral norm (‖A‖₂) of sparse matrices by power iteration on `AᵀA`.
+
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+/// Estimate `‖A‖₂ = σ₁(A)` with `iters` power-iteration rounds.
+///
+/// Each round computes `x ← Aᵀ(A·x)` and renormalizes; convergence is
+/// geometric in `(σ₂/σ₁)²`, and the returned value is the Rayleigh
+/// estimate `‖A·x‖₂` of the final unit vector — a lower bound that is
+/// tight (≪1% error) within a few dozen rounds on the paper's matrices.
+pub fn spectral_norm(a: &Csr, iters: usize, seed: u64) -> f64 {
+    let mut rng = Rng::new(seed ^ 0x9e37_79b9);
+    let mut x: Vec<f32> = (0..a.n).map(|_| rng.normal() as f32).collect();
+    let mut y = vec![0.0f32; a.m];
+    let mut sigma = 0.0f64;
+    for _ in 0..iters.max(1) {
+        normalize(&mut x);
+        a.spmv(&x, &mut y);
+        sigma = norm(&y);
+        // x ← Aᵀ y (unnormalized; normalized at loop head)
+        spmv_t(a, &y, &mut x);
+    }
+    sigma
+}
+
+fn spmv_t(a: &Csr, y: &[f32], x: &mut [f32]) {
+    x.iter_mut().for_each(|v| *v = 0.0);
+    for i in 0..a.m {
+        let yi = y[i];
+        if yi == 0.0 {
+            continue;
+        }
+        for (j, v) in a.row(i) {
+            x[j as usize] += v * yi;
+        }
+    }
+}
+
+fn norm(v: &[f32]) -> f64 {
+    v.iter().map(|x| (*x as f64) * (*x as f64)).sum::<f64>().sqrt()
+}
+
+fn normalize(v: &mut [f32]) {
+    let n = norm(v);
+    if n > 0.0 {
+        let inv = (1.0 / n) as f32;
+        v.iter_mut().for_each(|x| *x *= inv);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Coo;
+
+    #[test]
+    fn diagonal_matrix_norm() {
+        let mut coo = Coo::new(4, 4);
+        for (i, v) in [1.0f32, -7.0, 3.0, 2.0].iter().enumerate() {
+            coo.push(i as u32, i as u32, *v);
+        }
+        let a = coo.to_csr();
+        let got = spectral_norm(&a, 100, 0);
+        assert!((got - 7.0).abs() < 1e-3, "got={got}");
+    }
+
+    #[test]
+    fn rank_one_norm_is_product_of_norms() {
+        // A = u vᵀ with ‖u‖=5 (3-4-0...), ‖v‖=13 (5-12)
+        let u = [3.0f32, 4.0];
+        let v = [5.0f32, 12.0];
+        let mut coo = Coo::new(2, 2);
+        for i in 0..2 {
+            for j in 0..2 {
+                coo.push(i as u32, j as u32, u[i] * v[j]);
+            }
+        }
+        let got = spectral_norm(&coo.to_csr(), 50, 1);
+        assert!((got - 65.0).abs() / 65.0 < 1e-6, "got={got}");
+    }
+
+    #[test]
+    fn agrees_with_subspace_svd() {
+        use crate::linalg::svd::topk_svd;
+        use crate::runtime::RustEngine;
+        use crate::util::rng::Rng;
+        let mut rng = Rng::new(5);
+        let mut coo = Coo::new(40, 120);
+        for i in 0..40u32 {
+            for _ in 0..20 {
+                let j = rng.usize_below(120) as u32;
+                coo.push(i, j, rng.normal() as f32);
+            }
+        }
+        let a = coo.to_csr();
+        let s1 = spectral_norm(&a, 200, 2);
+        let svd = topk_svd(&a, 4, 12, 3, &RustEngine).unwrap();
+        assert!((s1 - svd.sigma[0]).abs() / svd.sigma[0] < 5e-3,
+                "power={s1} svd={}", svd.sigma[0]);
+    }
+}

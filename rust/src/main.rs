@@ -1,0 +1,228 @@
+//! matsketch CLI — the L3 leader entrypoint.
+//!
+//! ```text
+//! matsketch tables    [--small] [--seed N] [--out DIR]
+//! matsketch fig1      [--small] [--seed N] [--out DIR] [--k K]
+//!                     [--points P] [--datasets a,b] [--engine xla|rust]
+//! matsketch compress  [--small] [--seed N] [--out DIR]
+//! matsketch theory    [--small] [--seed N] [--out DIR]
+//! matsketch sketch    --input a.bin --s N [--method NAME] [--workers W]
+//!                     [--out sketch.bin]
+//! matsketch gen       --dataset NAME [--seed N] --out a.bin
+//! ```
+
+use std::path::{Path, PathBuf};
+use std::process::ExitCode;
+
+use matsketch::coordinator::{sketch_stream, PipelineConfig};
+use matsketch::datasets::DatasetId;
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::error::{Error, Result};
+use matsketch::eval::{run_compression, run_figure1, run_tables, run_theory, Figure1Config};
+use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
+use matsketch::sketch::{encode_sketch, SketchPlan};
+use matsketch::sparse::io as sparse_io;
+use matsketch::stream::FileStream;
+use matsketch::util::args::Args;
+use matsketch::util::human_bytes;
+use matsketch::util::logging::{set_level, Level};
+use matsketch::{info, warn_log};
+
+fn main() -> ExitCode {
+    match real_main() {
+        Ok(()) => ExitCode::SUCCESS,
+        Err(e) => {
+            eprintln!("error: {e}");
+            ExitCode::FAILURE
+        }
+    }
+}
+
+fn real_main() -> Result<()> {
+    let args = Args::from_env(&["small", "verbose", "help", "include-ahk06"])?;
+    if args.flag("verbose") {
+        set_level(Level::Debug);
+    }
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    if args.flag("help") || cmd == "help" {
+        print_help();
+        return Ok(());
+    }
+    let out: PathBuf = PathBuf::from(args.get_or("out", "reports"));
+    let seed: u64 = args.get_parse_or("seed", 0)?;
+    let small = args.flag("small");
+
+    match cmd {
+        "tables" => {
+            let rows = run_tables(&out, small, seed)?;
+            info!("wrote characteristics + sample-complexity tables for {} matrices", rows.len());
+        }
+        "fig1" => {
+            let engine = pick_engine(args.get("engine"));
+            let cfg = Figure1Config {
+                k: args.get_parse_or("k", 20)?,
+                svd_iters: args.get_parse_or("svd-iters", 8)?,
+                budget_points: args.get_parse_or("points", 8)?,
+                include_ahk06: args.flag("include-ahk06"),
+                seed,
+                small,
+                ..Default::default()
+            };
+            let datasets = parse_datasets(args.get("datasets"))?;
+            let pts = run_figure1(&out, &cfg, engine.as_ref(), &datasets)?;
+            info!("figure1: {} points written to {}", pts.len(), out.display());
+        }
+        "compress" => {
+            let pts = run_compression(&out, small, seed)?;
+            info!("compression: {} points", pts.len());
+        }
+        "theory" => {
+            let pts = run_theory(&out, small, seed)?;
+            info!("theory: {} points", pts.len());
+        }
+        "ablate" => {
+            let engine = pick_engine(args.get("engine"));
+            let pts = matsketch::eval::run_ablation(&out, seed, engine.as_ref())?;
+            info!("ablation: {} points -> {}/ablation.*", pts.len(), out.display());
+        }
+        "gen" => {
+            let name = args
+                .get("dataset")
+                .ok_or_else(|| Error::invalid("gen requires --dataset"))?;
+            let id = DatasetId::parse(name)
+                .ok_or_else(|| Error::invalid(format!("unknown dataset {name}")))?;
+            let coo = if small { id.generate_small(seed) } else { id.generate(seed) };
+            let path = PathBuf::from(
+                args.get("out")
+                    .map(str::to_string)
+                    .unwrap_or_else(|| format!("{name}.bin")),
+            );
+            sparse_io::write_binary(&coo, &path)?;
+            info!(
+                "{}: {}x{}, nnz={} -> {}",
+                name,
+                coo.m,
+                coo.n,
+                coo.nnz(),
+                path.display()
+            );
+        }
+        "sketch" => {
+            let input = args
+                .get("input")
+                .ok_or_else(|| Error::invalid("sketch requires --input <triplets.bin>"))?;
+            let s: u64 = args
+                .get_parse("s")?
+                .ok_or_else(|| Error::invalid("sketch requires --s <budget>"))?;
+            let kind = parse_method(args.get_or("method", "bernstein"))?;
+            // pass 1: stats
+            let mut st_stream = FileStream::open(Path::new(input))?;
+            let (m, n) = {
+                use matsketch::stream::EntryStream;
+                st_stream.shape()
+            };
+            let mut stats = MatrixStats::new(m, n);
+            {
+                use matsketch::stream::EntryStream;
+                while let Some(e) = st_stream.next_entry() {
+                    stats.push(&e);
+                }
+            }
+            // pass 2: streaming sketch
+            let plan = SketchPlan::new(kind, s).with_seed(seed);
+            let cfg = PipelineConfig {
+                workers: args.get_parse_or("workers", 0)?,
+                ..Default::default()
+            };
+            let stream = FileStream::open(Path::new(input))?;
+            let (sketch, metrics) = sketch_stream(stream, &stats, &plan, &cfg)?;
+            info!("pipeline: {}", metrics.summary());
+            let enc = encode_sketch(&sketch)?;
+            info!(
+                "sketch: {} coordinates, {} encoded ({:.2} bits/sample)",
+                sketch.nnz(),
+                human_bytes(enc.bytes.len()),
+                enc.bits_per_sample()
+            );
+            if let Some(outp) = args.get("sketch-out") {
+                std::fs::write(outp, &enc.bytes)?;
+                info!("wrote encoded sketch to {outp}");
+            }
+        }
+        other => {
+            print_help();
+            return Err(Error::invalid(format!("unknown command {other}")));
+        }
+    }
+    Ok(())
+}
+
+fn pick_engine(name: Option<&str>) -> Box<dyn DenseEngine> {
+    match name {
+        Some("rust") => Box::new(RustEngine),
+        Some("xla") => match XlaEngine::from_dir(Path::new(
+            &std::env::var("MATSKETCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".into()),
+        )) {
+            Ok(e) => Box::new(e),
+            Err(e) => {
+                warn_log!("--engine xla requested but unavailable: {e}; using rust");
+                Box::new(RustEngine)
+            }
+        },
+        _ => default_engine(),
+    }
+}
+
+fn parse_datasets(spec: Option<&str>) -> Result<Vec<DatasetId>> {
+    match spec {
+        None => Ok(DatasetId::all().to_vec()),
+        Some(s) => s
+            .split(',')
+            .map(|tok| {
+                DatasetId::parse(tok.trim())
+                    .ok_or_else(|| Error::invalid(format!("unknown dataset {tok}")))
+            })
+            .collect(),
+    }
+}
+
+fn parse_method(name: &str) -> Result<DistributionKind> {
+    match name.to_ascii_lowercase().as_str() {
+        "bernstein" => Ok(DistributionKind::Bernstein),
+        "row-l1" | "rowl1" => Ok(DistributionKind::RowL1),
+        "l1" => Ok(DistributionKind::L1),
+        "l2" => Ok(DistributionKind::L2),
+        "l2-trim-0.1" => Ok(DistributionKind::L2Trim(0.1)),
+        "l2-trim-0.01" => Ok(DistributionKind::L2Trim(0.01)),
+        other => Err(Error::invalid(format!("unknown method {other}"))),
+    }
+}
+
+fn print_help() {
+    println!(
+        "matsketch — near-optimal entrywise sampling for data matrices (NIPS'13)
+
+USAGE: matsketch <command> [options]
+
+COMMANDS:
+  tables     E1/E4: matrix characteristics + sample-complexity tables
+  fig1       E2: Figure-1 quality sweep (all methods x budgets x datasets)
+  compress   E3: sketch codec bits/sample + disc-size ratios
+  theory     E6: eps5 near-optimality checks
+  ablate     E8: row-norm-noise / delta / worker-count ablations
+  gen        generate a dataset to a binary triplet file
+  sketch     stream-sketch a triplet file through the full pipeline
+
+COMMON OPTIONS:
+  --out DIR        report/output directory (default: reports)
+  --seed N         RNG seed (default 0)
+  --small          use reduced-size dataset variants
+  --engine xla|rust  dense-compute engine (default: xla if artifacts exist)
+  --verbose        debug logging
+
+SKETCH OPTIONS:
+  --input FILE --s N [--method bernstein|row-l1|l1|l2|l2-trim-0.1]
+  [--workers W] [--sketch-out FILE]
+"
+    );
+}

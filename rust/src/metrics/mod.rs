@@ -1,0 +1,162 @@
+//! Matrix metrics (§4 of the paper) and the Figure-1 quality harness.
+
+pub mod quality;
+
+pub use quality::{quality_left, quality_right, QualityReport};
+
+use crate::distributions::MatrixStats;
+use crate::linalg::spectral_norm;
+use crate::sparse::Csr;
+
+/// The §6 characteristics table row: norms and the derived metrics
+/// (stable rank, numeric density, numeric row density) plus the
+/// Definition-4.1 data-matrix conditions.
+#[derive(Clone, Debug)]
+pub struct MatrixMetrics {
+    /// Rows.
+    pub m: usize,
+    /// Columns.
+    pub n: usize,
+    /// Non-zeros.
+    pub nnz: u64,
+    /// `‖A‖₁`.
+    pub norm_l1: f64,
+    /// `‖A‖_F`.
+    pub norm_fro: f64,
+    /// `‖A‖₂` (power-iteration estimate).
+    pub norm_spec: f64,
+    /// Stable rank `‖A‖_F²/‖A‖₂²`.
+    pub stable_rank: f64,
+    /// Numeric density `‖A‖₁²/‖A‖_F²`.
+    pub numeric_density: f64,
+    /// Numeric row density `Σᵢ‖A_(i)‖₁²/‖A‖_F²`.
+    pub numeric_row_density: f64,
+    /// Definition 4.1 condition 1: `minᵢ‖A_(i)‖₁ ≥ maxⱼ‖A^(j)‖₁`
+    /// (over non-empty rows).
+    pub cond1: bool,
+    /// Condition 2: `‖A‖₁²/‖A‖₂² ≥ 50m`.
+    pub cond2: bool,
+    /// Condition 3: `m ≥ 50`.
+    pub cond3: bool,
+}
+
+impl MatrixMetrics {
+    /// Compute all metrics (one stats pass + a power iteration).
+    pub fn compute(a: &Csr, power_iters: usize, seed: u64) -> MatrixMetrics {
+        let stats = MatrixStats::from_csr(a);
+        let norm_spec = spectral_norm(a, power_iters, seed);
+        Self::from_parts(a, &stats, norm_spec)
+    }
+
+    /// Compute from precomputed statistics and spectral norm.
+    pub fn from_parts(a: &Csr, stats: &MatrixStats, norm_spec: f64) -> MatrixMetrics {
+        let norm_fro = stats.sum_sq.sqrt();
+        let row_sq: f64 = stats.row_l1.iter().map(|z| z * z).sum();
+        let col_norms = a.to_coo().col_l1_norms();
+        let max_col = col_norms.into_iter().fold(0.0f64, f64::max);
+        let min_row = stats
+            .row_l1
+            .iter()
+            .filter(|&&z| z > 0.0)
+            .fold(f64::INFINITY, |acc, &z| acc.min(z));
+        MatrixMetrics {
+            m: stats.m,
+            n: stats.n,
+            nnz: stats.nnz,
+            norm_l1: stats.sum_abs,
+            norm_fro,
+            norm_spec,
+            stable_rank: stats.sum_sq / (norm_spec * norm_spec),
+            numeric_density: stats.sum_abs * stats.sum_abs / stats.sum_sq,
+            numeric_row_density: row_sq / stats.sum_sq,
+            cond1: min_row >= max_col,
+            cond2: stats.sum_abs * stats.sum_abs / (norm_spec * norm_spec)
+                >= 50.0 * stats.m as f64,
+            cond3: stats.m >= 50,
+        }
+    }
+
+    /// The theoretical sample bound `s₀` of Theorem 4.4 (up to constants):
+    /// `nrd·sr/ε²·log(n/δ) + √(sr·nd/ε²·log(n/δ))`.
+    pub fn theorem44_s0(&self, eps: f64, delta: f64) -> f64 {
+        let log = ((self.n as f64) / delta).ln();
+        let sr = self.stable_rank;
+        self.numeric_row_density * sr / (eps * eps) * log
+            + (sr * self.numeric_density / (eps * eps) * log).sqrt()
+    }
+
+    /// Sample bounds of the prior works in the §4 comparison table.
+    /// Returns (AM07, DZ11, AHK06) up to constants.
+    pub fn prior_bounds(&self, eps: f64) -> (f64, f64, f64) {
+        let n = self.n as f64;
+        let logn = n.ln();
+        let am07 = self.stable_rank * n / (eps * eps) + n * logn * logn;
+        let dz11 = self.stable_rank * n / (eps * eps) * logn;
+        let ahk06 = (self.numeric_density * n).sqrt() / eps;
+        (am07, dz11, ahk06)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Coo, Entry};
+
+    #[test]
+    fn identity_matrix_metrics() {
+        let mut coo = Coo::new(64, 64);
+        for i in 0..64u32 {
+            coo.push(i, i, 1.0);
+        }
+        let m = MatrixMetrics::compute(&coo.to_csr(), 80, 0);
+        assert!((m.norm_l1 - 64.0).abs() < 1e-9);
+        assert!((m.norm_fro - 8.0).abs() < 1e-9);
+        assert!((m.norm_spec - 1.0).abs() < 1e-3);
+        assert!((m.stable_rank - 64.0).abs() < 0.5);
+        assert!((m.numeric_density - 64.0).abs() < 1e-6);
+        assert!((m.numeric_row_density - 1.0).abs() < 1e-9);
+        assert!(m.cond1); // every row/col norm is 1
+        assert!(m.cond2); // 64² / 1 = 4096 ≥ 3200
+        assert!(m.cond3);
+    }
+
+    #[test]
+    fn rank_one_stable_rank_one() {
+        let mut coo = Coo::new(50, 100);
+        for i in 0..50u32 {
+            for j in 0..100u32 {
+                coo.push(i, j, 2.0);
+            }
+        }
+        let m = MatrixMetrics::compute(&coo.to_csr(), 60, 1);
+        assert!((m.stable_rank - 1.0).abs() < 1e-3, "sr={}", m.stable_rank);
+    }
+
+    #[test]
+    fn cond1_fails_for_column_matrix() {
+        // one dense column: column norm dwarfs row norms
+        let mut coo = Coo::new(60, 60);
+        for i in 0..60u32 {
+            coo.push(i, 0, 1.0);
+        }
+        coo.push(0, 1, 0.1);
+        let m = MatrixMetrics::compute(&coo.to_csr(), 40, 2);
+        assert!(!m.cond1);
+    }
+
+    #[test]
+    fn theorem44_bound_decreases_with_eps() {
+        let coo = Coo::from_entries(
+            60,
+            600,
+            (0..60)
+                .flat_map(|i| (0..10).map(move |j| Entry::new(i, i * 10 + j, 1.0)))
+                .collect(),
+        )
+        .unwrap();
+        let m = MatrixMetrics::compute(&coo.to_csr(), 40, 3);
+        assert!(m.theorem44_s0(0.1, 0.1) > m.theorem44_s0(0.5, 0.1));
+        let (am07, dz11, ahk06) = m.prior_bounds(0.1);
+        assert!(am07 > 0.0 && dz11 > 0.0 && ahk06 > 0.0);
+    }
+}

@@ -1,0 +1,162 @@
+//! The Figure-1 quality measure.
+//!
+//! For a sketch `B` of `A` and rank `k`:
+//!
+//! * **left**  — `‖P_k^B A‖_F / ‖A_k‖_F` where `P_k^B` projects onto the
+//!   top-k *left* singular vectors of `B`;
+//! * **right** — `‖A Q_k^B‖_F / ‖A_k‖_F` where `Q_k^B` projects onto the
+//!   top-k *right* singular vectors of `B`.
+//!
+//! `‖P A‖_F² = ‖UᵀA‖_F²` accumulates column-block-wise through the
+//! engine's `proj` op (the Pallas kernel on the XLA path), which is the
+//! FLOP-heavy part of reproducing Figure 1.
+
+use crate::error::Result;
+use crate::linalg::svd::SvdResult;
+use crate::runtime::DenseEngine;
+use crate::sparse::{Csr, Dense};
+
+/// One (method, s) measurement for Figure 1.
+#[derive(Clone, Debug)]
+pub struct QualityReport {
+    /// `‖P_k^B A‖_F / ‖A_k‖_F` — column-space capture.
+    pub left: f64,
+    /// `‖A Q_k^B‖_F / ‖A_k‖_F` — row-space capture.
+    pub right: f64,
+}
+
+/// `‖UᵀA‖_F` for an orthonormal `m×k` basis `U`, streaming dense blocks
+/// of `A` (CSR) through the engine's `proj` op.
+pub fn proj_fro_left(
+    a: &Csr,
+    u: &Dense,
+    engine: &dyn DenseEngine,
+    col_block: usize,
+) -> Result<f64> {
+    assert_eq!(u.rows, a.m);
+    let mut acc = 0.0f64;
+    let mut c0 = 0usize;
+    while c0 < a.n {
+        let cw = col_block.min(a.n - c0);
+        let blk = a.dense_block(0, a.m, c0, cw);
+        let p = engine.proj(u, &blk)?;
+        acc += p.norm_fro_sq();
+        c0 += cw;
+    }
+    Ok(acc.sqrt())
+}
+
+/// `‖A V‖_F` for an orthonormal `n×k` basis `V`: `A·V` via sparse SpMM.
+pub fn proj_fro_right(a: &Csr, v: &Dense) -> f64 {
+    assert_eq!(v.rows, a.n);
+    a.spmm(v).norm_fro()
+}
+
+/// Left quality `‖P_k^B A‖_F / ‖A_k‖_F`.
+///
+/// * `a` — original matrix; `b_svd` — top-≥k SVD of the sketch;
+/// * `a_k_fro` — `‖A_k‖_F` from the SVD of `A` itself;
+/// * `k` — evaluation rank (the paper uses 20).
+pub fn quality_left(
+    a: &Csr,
+    b_svd: &SvdResult,
+    a_k_fro: f64,
+    k: usize,
+    engine: &dyn DenseEngine,
+) -> Result<f64> {
+    let k = k.min(b_svd.sigma.len());
+    let u = truncate_cols(&b_svd.u, k);
+    Ok(proj_fro_left(a, &u, engine, 512)? / a_k_fro)
+}
+
+/// Right quality `‖A Q_k^B‖_F / ‖A_k‖_F`.
+pub fn quality_right(a: &Csr, b_svd: &SvdResult, a_k_fro: f64, k: usize) -> Result<f64> {
+    let k = k.min(b_svd.sigma.len());
+    let v = truncate_cols(&b_svd.v, k);
+    Ok(proj_fro_right(a, &v) / a_k_fro)
+}
+
+/// Keep the first `k` columns of a row-major dense matrix.
+pub fn truncate_cols(x: &Dense, k: usize) -> Dense {
+    assert!(k <= x.cols);
+    let mut out = Dense::zeros(x.rows, k);
+    for i in 0..x.rows {
+        out.row_mut(i).copy_from_slice(&x.row(i)[..k]);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::linalg::svd::{rank_k_fro, topk_svd};
+    use crate::runtime::RustEngine;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn random_sparse(m: usize, n: usize, per_row: usize, seed: u64) -> Csr {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(m, n);
+        for i in 0..m as u32 {
+            for _ in 0..per_row {
+                coo.push(i, rng.usize_below(n) as u32, rng.normal() as f32);
+            }
+        }
+        coo.normalize();
+        coo.to_csr()
+    }
+
+    #[test]
+    fn self_sketch_reaches_one() {
+        // B = A ⇒ both quality ratios are 1 (up to SVD accuracy).
+        let a = random_sparse(40, 160, 25, 0);
+        let engine = RustEngine;
+        let k = 8;
+        let svd_a = topk_svd(&a, k + 4, 12, 1, &engine).unwrap();
+        let a_k = rank_k_fro(&svd_a, k);
+        let left = quality_left(&a, &svd_a, a_k, k, &engine).unwrap();
+        let right = quality_right(&a, &svd_a, a_k, k).unwrap();
+        assert!((left - 1.0).abs() < 0.02, "left={left}");
+        assert!((right - 1.0).abs() < 0.02, "right={right}");
+    }
+
+    #[test]
+    fn random_basis_scores_below_true_basis() {
+        let a = random_sparse(50, 300, 30, 2);
+        let engine = RustEngine;
+        let k = 6;
+        let svd_a = topk_svd(&a, k, 10, 3, &engine).unwrap();
+        let a_k = rank_k_fro(&svd_a, k);
+        // random orthonormal basis as a fake "sketch SVD"
+        let mut rng = Rng::new(4);
+        let ur = crate::linalg::svd::orthonormalize(
+            &Dense::randn(a.m, k, &mut rng),
+            &engine,
+        )
+        .unwrap();
+        let vr = crate::linalg::svd::orthonormalize(
+            &Dense::randn(a.n, k, &mut rng),
+            &engine,
+        )
+        .unwrap();
+        let fake = crate::linalg::svd::SvdResult { u: ur, sigma: vec![1.0; k], v: vr };
+        let left_fake = quality_left(&a, &fake, a_k, k, &engine).unwrap();
+        let left_true = quality_left(&a, &svd_a, a_k, k, &engine).unwrap();
+        assert!(left_fake < left_true, "{left_fake} !< {left_true}");
+        let right_fake = quality_right(&a, &fake, a_k, k).unwrap();
+        assert!(right_fake < 0.9 * left_true);
+    }
+
+    #[test]
+    fn left_proj_matches_direct_computation() {
+        let a = random_sparse(30, 90, 15, 5);
+        let engine = RustEngine;
+        let svd = topk_svd(&a, 5, 10, 6, &engine).unwrap();
+        let u = truncate_cols(&svd.u, 5);
+        let via_engine = proj_fro_left(&a, &u, &engine, 37).unwrap(); // odd block size
+        // direct: ‖UᵀA‖_F via dense block of the whole matrix
+        let full = a.dense_block(0, a.m, 0, a.n);
+        let p = crate::linalg::dense_ops::proj(&u, &full);
+        assert!((via_engine - p.norm_fro()).abs() < 1e-3);
+    }
+}

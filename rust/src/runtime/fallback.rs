@@ -1,0 +1,108 @@
+//! Pure-Rust [`DenseEngine`] — used when artifacts are absent and as the
+//! cross-validation oracle for [`super::XlaEngine`] in tests.
+
+use crate::error::Result;
+use crate::linalg::dense_ops;
+use crate::sparse::Dense;
+
+use super::DenseEngine;
+
+/// Dependency-free engine backed by `linalg::dense_ops`.
+pub struct RustEngine;
+
+impl DenseEngine for RustEngine {
+    fn name(&self) -> &'static str {
+        "rust"
+    }
+
+    fn gram(&self, y: &Dense) -> Result<Vec<f64>> {
+        Ok(dense_ops::gram(y))
+    }
+
+    fn apply(&self, y: &Dense, t: &[f64]) -> Result<Dense> {
+        Ok(dense_ops::apply_factor(y, t))
+    }
+
+    fn proj(&self, q: &Dense, a: &Dense) -> Result<Dense> {
+        Ok(dense_ops::proj(q, a))
+    }
+
+    fn power_iter(&self, g: &[f64], k: usize) -> Result<(f64, Vec<f64>)> {
+        assert_eq!(g.len(), k * k);
+        // Fixed-trip-count power iteration, mirroring the AOT graph.
+        let mut v = vec![1.0f64 / (k as f64).sqrt(); k];
+        let mut lam = 0.0f64;
+        for _ in 0..96 {
+            let mut w = vec![0.0f64; k];
+            for i in 0..k {
+                let gi = &g[i * k..(i + 1) * k];
+                w[i] = gi.iter().zip(v.iter()).map(|(a, b)| a * b).sum();
+            }
+            lam = w.iter().map(|x| x * x).sum::<f64>().sqrt();
+            if lam <= 1e-300 {
+                return Ok((0.0, v));
+            }
+            for (vi, wi) in v.iter_mut().zip(w.iter()) {
+                *vi = wi / lam;
+            }
+        }
+        Ok((lam, v))
+    }
+
+    fn probs(&self, a: &Dense, w: &[f32], power: u8) -> Result<Dense> {
+        assert_eq!(w.len(), a.rows);
+        let mut out = Dense::zeros(a.rows, a.cols);
+        for i in 0..a.rows {
+            let wi = w[i];
+            let src = a.row(i);
+            let dst = out.row_mut(i);
+            match power {
+                1 => {
+                    for (d, s) in dst.iter_mut().zip(src.iter()) {
+                        *d = wi * s.abs();
+                    }
+                }
+                2 => {
+                    for (d, s) in dst.iter_mut().zip(src.iter()) {
+                        *d = wi * s * s;
+                    }
+                }
+                p => panic!("probs power must be 1 or 2, got {p}"),
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn power_iter_on_diagonal() {
+        let g = vec![2.0, 0.0, 0.0, 9.0];
+        let (lam, v) = RustEngine.power_iter(&g, 2).unwrap();
+        assert!((lam - 9.0).abs() < 1e-9);
+        assert!(v[1].abs() > 0.999);
+    }
+
+    #[test]
+    fn probs_powers() {
+        let a = Dense::from_rows(&[&[-2.0, 3.0], &[1.0, -1.0]]);
+        let w = [0.5f32, 2.0];
+        let p1 = RustEngine.probs(&a, &w, 1).unwrap();
+        assert_eq!(p1.data, vec![1.0, 1.5, 2.0, 2.0]);
+        let p2 = RustEngine.probs(&a, &w, 2).unwrap();
+        assert_eq!(p2.data, vec![2.0, 4.5, 2.0, 2.0]);
+    }
+
+    #[test]
+    fn engine_round_trip_orthonormalizes() {
+        let mut rng = Rng::new(1);
+        let y = Dense::randn(300, 6, &mut rng);
+        let q = crate::linalg::svd::orthonormalize(&y, &RustEngine).unwrap();
+        let g = RustEngine.gram(&q).unwrap();
+        assert!(dense_ops::max_offdiag_dev_from_identity(&g, 6) < 1e-4);
+    }
+}

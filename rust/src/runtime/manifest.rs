@@ -1,0 +1,137 @@
+//! `artifacts/manifest.json` — the contract between `python/compile/aot.py`
+//! and the Rust runtime. The runtime is entirely manifest-driven: op names,
+//! file names, and block shapes all come from here.
+
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::util::json::Json;
+
+/// One compiled artifact.
+#[derive(Clone, Debug)]
+pub struct ArtifactEntry {
+    /// Op name (`gram`, `apply`, `proj`, `probs_l1`, `probs_l2`,
+    /// `power_iter`, `subspace_round`).
+    pub op: String,
+    /// HLO text file (relative to the artifact dir).
+    pub file: String,
+    /// Block rows R.
+    pub rows: usize,
+    /// Subspace width K.
+    pub k: usize,
+    /// Dense column block C.
+    pub cols: usize,
+}
+
+/// Parsed manifest.
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    /// Artifact directory.
+    pub dir: PathBuf,
+    /// All entries.
+    pub entries: Vec<ArtifactEntry>,
+}
+
+impl Manifest {
+    /// Load and validate `dir/manifest.json`.
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .map_err(|e| Error::Artifact(format!("cannot read {}: {e}", path.display())))?;
+        let v = Json::parse(&text)?;
+        let version = v
+            .get("version")
+            .and_then(Json::as_usize)
+            .ok_or_else(|| Error::Artifact("manifest missing version".into()))?;
+        if version != 1 {
+            return Err(Error::Artifact(format!("unsupported manifest version {version}")));
+        }
+        let mut entries = Vec::new();
+        for e in v
+            .get("entries")
+            .ok_or_else(|| Error::Artifact("manifest missing entries".into()))?
+            .items()
+        {
+            let field = |name: &str| -> Result<usize> {
+                e.get(name)
+                    .and_then(Json::as_usize)
+                    .ok_or_else(|| Error::Artifact(format!("entry missing {name}")))
+            };
+            entries.push(ArtifactEntry {
+                op: e
+                    .get("op")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Artifact("entry missing op".into()))?
+                    .to_string(),
+                file: e
+                    .get("file")
+                    .and_then(Json::as_str)
+                    .ok_or_else(|| Error::Artifact("entry missing file".into()))?
+                    .to_string(),
+                rows: field("rows")?,
+                k: field("k")?,
+                cols: field("cols")?,
+            });
+        }
+        if entries.is_empty() {
+            return Err(Error::Artifact("manifest has no entries".into()));
+        }
+        Ok(Manifest { dir: dir.to_path_buf(), entries })
+    }
+
+    /// All variants of one op, sorted ascending by block rows.
+    pub fn variants(&self, op: &str) -> Vec<&ArtifactEntry> {
+        let mut v: Vec<&ArtifactEntry> = self.entries.iter().filter(|e| e.op == op).collect();
+        v.sort_by_key(|e| e.rows);
+        v
+    }
+
+    /// Absolute path of an entry's HLO file.
+    pub fn path_of(&self, e: &ArtifactEntry) -> PathBuf {
+        self.dir.join(&e.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn write_manifest(dir: &Path, body: &str) {
+        std::fs::create_dir_all(dir).unwrap();
+        std::fs::write(dir.join("manifest.json"), body).unwrap();
+    }
+
+    #[test]
+    fn parses_minimal_manifest() {
+        let dir = std::env::temp_dir().join("matsketch_manifest_ok");
+        write_manifest(
+            &dir,
+            r#"{"version": 1, "entries": [
+                {"op": "gram", "file": "g.hlo.txt", "rows": 2048, "k": 32, "cols": 512},
+                {"op": "gram", "file": "g2.hlo.txt", "rows": 256, "k": 32, "cols": 512}
+            ]}"#,
+        );
+        let m = Manifest::load(&dir).unwrap();
+        let vs = m.variants("gram");
+        assert_eq!(vs.len(), 2);
+        assert_eq!(vs[0].rows, 256); // sorted ascending
+        assert!(m.variants("nope").is_empty());
+    }
+
+    #[test]
+    fn rejects_bad_version_and_missing_fields() {
+        let dir = std::env::temp_dir().join("matsketch_manifest_bad1");
+        write_manifest(&dir, r#"{"version": 9, "entries": []}"#);
+        assert!(Manifest::load(&dir).is_err());
+        let dir2 = std::env::temp_dir().join("matsketch_manifest_bad2");
+        write_manifest(&dir2, r#"{"version": 1, "entries": [{"op": "gram"}]}"#);
+        assert!(Manifest::load(&dir2).is_err());
+    }
+
+    #[test]
+    fn missing_file_errors() {
+        let dir = std::env::temp_dir().join("matsketch_manifest_nofile");
+        let _ = std::fs::remove_dir_all(&dir);
+        assert!(Manifest::load(&dir).is_err());
+    }
+}

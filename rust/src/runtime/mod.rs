@@ -1,0 +1,59 @@
+//! AOT runtime: load the JAX/Pallas-lowered HLO artifacts and run them on
+//! the PJRT CPU client (`xla` crate). Python never runs here — artifacts
+//! are produced once by `make artifacts`.
+//!
+//! All consumers (SVD, quality metrics, probability tables) are written
+//! against the [`DenseEngine`] trait; [`XlaEngine`] executes the artifacts,
+//! [`RustEngine`] is the dependency-free fallback, and tests cross-validate
+//! the two.
+
+pub mod engine;
+pub mod fallback;
+pub mod manifest;
+
+pub use engine::XlaEngine;
+pub use fallback::RustEngine;
+pub use manifest::{ArtifactEntry, Manifest};
+
+use crate::error::Result;
+use crate::sparse::Dense;
+
+/// Dense block-compute engine: the operations the AOT artifacts implement.
+///
+/// Shapes are caller-natural (any rows/k/c); engines are responsible for
+/// padding to their internal block shapes (padding with zero rows/columns
+/// is exact for every op here — covered by `python/tests/test_kernels.py`
+/// and `rust/tests/integration_runtime.rs`).
+pub trait DenseEngine: Send + Sync {
+    /// Engine name for logs/reports.
+    fn name(&self) -> &'static str;
+
+    /// Gram matrix `G = YᵀY` (row-major k×k, f64).
+    fn gram(&self, y: &Dense) -> Result<Vec<f64>>;
+
+    /// `Q = Y·T` for a small k×k factor `T` (row-major f64).
+    fn apply(&self, y: &Dense, t: &[f64]) -> Result<Dense>;
+
+    /// Projection coefficients `P = Qᵀ·A` (k×c).
+    fn proj(&self, q: &Dense, a: &Dense) -> Result<Dense>;
+
+    /// Dominant eigenpair of a small symmetric PSD matrix (row-major k×k).
+    fn power_iter(&self, g: &[f64], k: usize) -> Result<(f64, Vec<f64>)>;
+
+    /// Entrywise probability table `p_ij = w_i·|a_ij|^power`, `power ∈ {1,2}`.
+    fn probs(&self, a: &Dense, w: &[f32], power: u8) -> Result<Dense>;
+}
+
+/// Pick the best available engine: XLA artifacts if present (directory from
+/// `MATSKETCH_ARTIFACTS`, default `artifacts/`), otherwise the Rust
+/// fallback.
+pub fn default_engine() -> Box<dyn DenseEngine> {
+    let dir = std::env::var("MATSKETCH_ARTIFACTS").unwrap_or_else(|_| "artifacts".to_string());
+    match XlaEngine::from_dir(std::path::Path::new(&dir)) {
+        Ok(e) => Box::new(e),
+        Err(err) => {
+            crate::warn_log!("XLA engine unavailable ({err}); using Rust fallback");
+            Box::new(RustEngine)
+        }
+    }
+}

@@ -1,0 +1,123 @@
+//! Vose alias method: O(n) construction, O(1) sampling from an arbitrary
+//! discrete distribution. The offline sketching path builds one alias
+//! table over all non-zeros of `A` and draws `s` i.i.d. entries from it.
+
+use crate::util::rng::Rng;
+
+/// Immutable alias table.
+#[derive(Clone, Debug)]
+pub struct AliasTable {
+    prob: Vec<f64>,
+    alias: Vec<u32>,
+}
+
+impl AliasTable {
+    /// Build from non-negative weights (not necessarily normalized).
+    /// Zero-weight buckets are never drawn. Panics on empty/zero-total input.
+    pub fn new(weights: &[f64]) -> AliasTable {
+        let n = weights.len();
+        assert!(n > 0, "alias table needs at least one weight");
+        assert!(n <= u32::MAX as usize, "alias table limited to u32 indices");
+        let total: f64 = weights.iter().sum();
+        assert!(total > 0.0 && total.is_finite(), "weights must sum to a positive finite value");
+        let mut prob: Vec<f64> = weights.iter().map(|w| w * n as f64 / total).collect();
+        let mut alias = vec![0u32; n];
+        let mut small: Vec<u32> = Vec::new();
+        let mut large: Vec<u32> = Vec::new();
+        for (i, &p) in prob.iter().enumerate() {
+            if p < 1.0 {
+                small.push(i as u32);
+            } else {
+                large.push(i as u32);
+            }
+        }
+        while let (Some(&s), Some(&l)) = (small.last(), large.last()) {
+            small.pop();
+            prob[l as usize] -= 1.0 - prob[s as usize];
+            alias[s as usize] = l;
+            if prob[l as usize] < 1.0 {
+                large.pop();
+                small.push(l);
+            }
+        }
+        // leftovers are numerically 1.0
+        for &i in small.iter().chain(large.iter()) {
+            prob[i as usize] = 1.0;
+            alias[i as usize] = i;
+        }
+        AliasTable { prob, alias }
+    }
+
+    /// Number of buckets.
+    pub fn len(&self) -> usize {
+        self.prob.len()
+    }
+
+    /// Whether the table is empty (never true post-construction).
+    pub fn is_empty(&self) -> bool {
+        self.prob.is_empty()
+    }
+
+    /// Draw one index.
+    #[inline]
+    pub fn sample(&self, rng: &mut Rng) -> usize {
+        let i = rng.usize_below(self.prob.len());
+        if rng.f64() < self.prob[i] {
+            i
+        } else {
+            self.alias[i] as usize
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matches_distribution() {
+        let weights = [1.0, 0.0, 3.0, 6.0];
+        let t = AliasTable::new(&weights);
+        let mut rng = Rng::new(0);
+        let n = 200_000;
+        let mut counts = [0usize; 4];
+        for _ in 0..n {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        assert_eq!(counts[1], 0);
+        let total: f64 = weights.iter().sum();
+        for i in [0usize, 2, 3] {
+            let want = weights[i] / total;
+            let got = counts[i] as f64 / n as f64;
+            assert!((got - want).abs() < 0.01, "bucket {i}: got {got} want {want}");
+        }
+    }
+
+    #[test]
+    fn uniform_weights() {
+        let t = AliasTable::new(&vec![2.5; 10]);
+        let mut rng = Rng::new(1);
+        let mut counts = [0usize; 10];
+        for _ in 0..100_000 {
+            counts[t.sample(&mut rng)] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn single_bucket() {
+        let t = AliasTable::new(&[42.0]);
+        let mut rng = Rng::new(2);
+        for _ in 0..10 {
+            assert_eq!(t.sample(&mut rng), 0);
+        }
+    }
+
+    #[test]
+    #[should_panic]
+    fn rejects_zero_total() {
+        AliasTable::new(&[0.0, 0.0]);
+    }
+}

@@ -1,0 +1,187 @@
+//! Exact Binomial(n, p) sampling.
+//!
+//! The streaming reservoir draws `binomial(s, w/W)` once per stream item
+//! (Appendix A), where `w/W` is usually tiny — so the expected count is
+//! small and geometric skip-sampling (Devroye's "second waiting time"
+//! method) is both exact and O(successes + 1). For large `n·p` we switch to
+//! the inversion walk from the mode's side, and for `p > 1/2` we use the
+//! complement symmetry.
+
+use crate::util::rng::Rng;
+
+/// Draw from Binomial(n, p) exactly.
+pub fn binomial(rng: &mut Rng, n: u64, p: f64) -> u64 {
+    if n == 0 || p <= 0.0 {
+        return 0;
+    }
+    if p >= 1.0 {
+        return n;
+    }
+    if p > 0.5 {
+        return n - binomial(rng, n, 1.0 - p);
+    }
+    let mean = n as f64 * p;
+    if mean <= 30.0 {
+        geometric_skip(rng, n, p)
+    } else {
+        inversion_from_mode(rng, n, p)
+    }
+}
+
+/// Devroye: count successes by jumping geometric gaps between them.
+/// Exact; expected cost O(n·p + 1).
+fn geometric_skip(rng: &mut Rng, n: u64, p: f64) -> u64 {
+    let mut count = 0u64;
+    let mut pos = 0u64;
+    loop {
+        let g = rng.geometric(p); // failures before next success
+        if g >= n - pos {
+            return count;
+        }
+        pos += g + 1;
+        count += 1;
+        if pos >= n {
+            return count;
+        }
+    }
+}
+
+/// Exact inversion around the mode: evaluate the pmf recurrence outward
+/// from the mode so the expected number of terms is O(√(n·p·(1−p))).
+fn inversion_from_mode(rng: &mut Rng, n: u64, p: f64) -> u64 {
+    let q = 1.0 - p;
+    let mode = (((n + 1) as f64) * p).floor().min(n as f64) as u64;
+    // log pmf at mode via lgamma for numerical stability
+    let ln_pmf_mode = ln_choose(n, mode) + mode as f64 * p.ln() + (n - mode) as f64 * q.ln();
+    let pmf_mode = ln_pmf_mode.exp();
+
+    let u = rng.f64();
+    // walk outward: mode, mode+1, mode-1, mode+2, ...
+    let mut cum = pmf_mode;
+    if u < cum {
+        return mode;
+    }
+    let mut up_k = mode;
+    let mut up_pmf = pmf_mode;
+    let mut down_k = mode;
+    let mut down_pmf = pmf_mode;
+    loop {
+        let mut advanced = false;
+        if up_k < n {
+            // pmf(k+1) = pmf(k) * (n-k)/(k+1) * p/q
+            up_pmf *= ((n - up_k) as f64 / (up_k + 1) as f64) * (p / q);
+            up_k += 1;
+            cum += up_pmf;
+            advanced = true;
+            if u < cum {
+                return up_k;
+            }
+        }
+        if down_k > 0 {
+            // pmf(k-1) = pmf(k) * k/(n-k+1) * q/p
+            down_pmf *= (down_k as f64 / (n - down_k + 1) as f64) * (q / p);
+            down_k -= 1;
+            cum += down_pmf;
+            advanced = true;
+            if u < cum {
+                return down_k;
+            }
+        }
+        if !advanced || cum >= 1.0 - 1e-15 {
+            // numeric tail: clamp to the boundary we ran against
+            return if up_k < n { up_k } else { down_k };
+        }
+    }
+}
+
+/// ln C(n, k) via Stirling/lgamma.
+fn ln_choose(n: u64, k: u64) -> f64 {
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+/// ln(n!) — exact table for small n, Stirling series beyond.
+pub(crate) fn ln_factorial(n: u64) -> f64 {
+    const TABLE_N: usize = 128;
+    static TABLE: std::sync::OnceLock<[f64; TABLE_N]> = std::sync::OnceLock::new();
+    let table = TABLE.get_or_init(|| {
+        let mut t = [0.0f64; TABLE_N];
+        for i in 2..TABLE_N {
+            t[i] = t[i - 1] + (i as f64).ln();
+        }
+        t
+    });
+    if (n as usize) < TABLE_N {
+        return table[n as usize];
+    }
+    let x = n as f64 + 1.0;
+    // Stirling series for ln Γ(x)
+    (x - 0.5) * x.ln() - x + 0.5 * (2.0 * std::f64::consts::PI).ln() + 1.0 / (12.0 * x)
+        - 1.0 / (360.0 * x.powi(3))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn mean_var(samples: &[u64]) -> (f64, f64) {
+        let n = samples.len() as f64;
+        let mean = samples.iter().map(|&x| x as f64).sum::<f64>() / n;
+        let var = samples.iter().map(|&x| (x as f64 - mean).powi(2)).sum::<f64>() / (n - 1.0);
+        (mean, var)
+    }
+
+    #[test]
+    fn edge_cases() {
+        let mut rng = Rng::new(0);
+        assert_eq!(binomial(&mut rng, 0, 0.5), 0);
+        assert_eq!(binomial(&mut rng, 10, 0.0), 0);
+        assert_eq!(binomial(&mut rng, 10, 1.0), 10);
+        for _ in 0..100 {
+            let x = binomial(&mut rng, 5, 0.5);
+            assert!(x <= 5);
+        }
+    }
+
+    #[test]
+    fn small_mean_moments() {
+        // geometric-skip regime
+        let mut rng = Rng::new(1);
+        let (n, p) = (10_000u64, 0.001);
+        let samples: Vec<u64> = (0..20_000).map(|_| binomial(&mut rng, n, p)).collect();
+        let (mean, var) = mean_var(&samples);
+        let em = n as f64 * p;
+        let ev = em * (1.0 - p);
+        assert!((mean - em).abs() < 0.1, "mean={mean} want≈{em}");
+        assert!((var - ev).abs() / ev < 0.05, "var={var} want≈{ev}");
+    }
+
+    #[test]
+    fn large_mean_moments() {
+        // inversion regime
+        let mut rng = Rng::new(2);
+        let (n, p) = (100_000u64, 0.01);
+        let samples: Vec<u64> = (0..20_000).map(|_| binomial(&mut rng, n, p)).collect();
+        let (mean, var) = mean_var(&samples);
+        let em = n as f64 * p; // 1000
+        let ev = em * (1.0 - p);
+        assert!((mean - em).abs() < 1.5, "mean={mean} want≈{em}");
+        assert!((var - ev).abs() / ev < 0.1, "var={var} want≈{ev}");
+    }
+
+    #[test]
+    fn high_p_symmetry() {
+        let mut rng = Rng::new(3);
+        let samples: Vec<u64> = (0..20_000).map(|_| binomial(&mut rng, 100, 0.9)).collect();
+        let (mean, _) = mean_var(&samples);
+        assert!((mean - 90.0).abs() < 0.3, "mean={mean}");
+    }
+
+    #[test]
+    fn ln_factorial_sane() {
+        assert!((ln_factorial(0) - 0.0).abs() < 1e-12);
+        assert!((ln_factorial(5) - 120f64.ln()).abs() < 1e-12);
+        // Stirling branch vs sum for n=200
+        let exact: f64 = (2..=200u64).map(|i| (i as f64).ln()).sum();
+        assert!((ln_factorial(200) - exact).abs() < 1e-8);
+    }
+}

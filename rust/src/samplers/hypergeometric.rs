@@ -1,0 +1,154 @@
+//! Exact Hypergeometric(s, ℓ, k) sampling.
+//!
+//! In the Appendix-A backward replay, `k` balls are thrown into `k`
+//! distinct bins out of `s`, of which `ℓ` are empty; the number hitting
+//! empty bins is hypergeometric. Two exact methods:
+//!
+//! * [`hypergeometric`] — inversion with the pmf recurrence walked from
+//!   the mode (the HyperQuick idea [Ber07]); O(√variance) expected terms.
+//! * [`hypergeometric_seq`] — sequential ball-by-ball simulation, O(k);
+//!   kept as an oracle for the distribution tests.
+
+use super::binomial::ln_factorial;
+use crate::util::rng::Rng;
+
+/// Draw the number of balls landing in empty bins: population `s`,
+/// `l` empty bins, `k` balls into distinct bins (`k ≤ s`, `l ≤ s`).
+pub fn hypergeometric(rng: &mut Rng, s: u64, l: u64, k: u64) -> u64 {
+    assert!(l <= s && k <= s, "hypergeometric: l={l}, k={k}, s={s}");
+    let t_min = k.saturating_sub(s - l);
+    let t_max = k.min(l);
+    if t_min == t_max {
+        return t_min;
+    }
+    // mode of the hypergeometric
+    let mode = (((k + 1) as f64 * (l + 1) as f64) / (s + 2) as f64).floor() as u64;
+    let mode = mode.clamp(t_min, t_max);
+    let ln_pmf = |t: u64| -> f64 {
+        ln_choose(l, t) + ln_choose(s - l, k - t) - ln_choose(s, k)
+    };
+    let pmf_mode = ln_pmf(mode).exp();
+    let u = rng.f64();
+    let mut cum = pmf_mode;
+    if u < cum {
+        return mode;
+    }
+    // walk outward from the mode using the pmf ratio recurrence:
+    // pmf(t+1)/pmf(t) = (l-t)(k-t) / ((t+1)(s-l-k+t+1))
+    let (mut up_t, mut up_pmf) = (mode, pmf_mode);
+    let (mut down_t, mut down_pmf) = (mode, pmf_mode);
+    loop {
+        let mut advanced = false;
+        if up_t < t_max {
+            let num = (l - up_t) as f64 * (k - up_t) as f64;
+            let den = (up_t + 1) as f64 * (s - l - k + up_t + 1) as f64;
+            up_pmf *= num / den;
+            up_t += 1;
+            cum += up_pmf;
+            advanced = true;
+            if u < cum {
+                return up_t;
+            }
+        }
+        if down_t > t_min {
+            // pmf(t-1)/pmf(t) = t (s-l-k+t) / ((l-t+1)(k-t+1))
+            let num = down_t as f64 * (s - l - k + down_t) as f64;
+            let den = (l - down_t + 1) as f64 * (k - down_t + 1) as f64;
+            down_pmf *= num / den;
+            down_t -= 1;
+            cum += down_pmf;
+            advanced = true;
+            if u < cum {
+                return down_t;
+            }
+        }
+        if !advanced || cum >= 1.0 - 1e-15 {
+            return mode;
+        }
+    }
+}
+
+/// O(k) sequential oracle: throw the k balls one at a time; ball j lands
+/// in an empty bin with probability (remaining empties)/(remaining bins).
+pub fn hypergeometric_seq(rng: &mut Rng, s: u64, l: u64, k: u64) -> u64 {
+    assert!(l <= s && k <= s);
+    let mut empties = l;
+    let mut bins = s;
+    let mut hits = 0;
+    for _ in 0..k {
+        if rng.f64() * bins as f64 <= empties as f64 {
+            hits += 1;
+            empties -= 1;
+        }
+        bins -= 1;
+    }
+    hits
+}
+
+fn ln_choose(n: u64, k: u64) -> f64 {
+    if k > n {
+        return f64::NEG_INFINITY;
+    }
+    ln_factorial(n) - ln_factorial(k) - ln_factorial(n - k)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn support_boundaries() {
+        let mut rng = Rng::new(0);
+        // all bins empty -> every ball hits an empty bin
+        assert_eq!(hypergeometric(&mut rng, 10, 10, 4), 4);
+        // no empty bins -> no hits
+        assert_eq!(hypergeometric(&mut rng, 10, 0, 4), 0);
+        // forced: s-l non-empties < k ⇒ at least k-(s-l) hits
+        for _ in 0..50 {
+            let t = hypergeometric(&mut rng, 10, 8, 5);
+            assert!((3..=5).contains(&t));
+        }
+    }
+
+    #[test]
+    fn moments_match_theory() {
+        let mut rng = Rng::new(1);
+        let (s, l, k) = (1000u64, 300u64, 50u64);
+        let n = 30_000;
+        let mut sum = 0.0;
+        let mut sumsq = 0.0;
+        for _ in 0..n {
+            let t = hypergeometric(&mut rng, s, l, k) as f64;
+            sum += t;
+            sumsq += t * t;
+        }
+        let mean = sum / n as f64;
+        let var = sumsq / n as f64 - mean * mean;
+        let em = k as f64 * l as f64 / s as f64; // 15
+        let ev = em * ((s - l) as f64 / s as f64) * ((s - k) as f64 / (s - 1) as f64);
+        assert!((mean - em).abs() < 0.08, "mean={mean} want={em}");
+        assert!((var - ev).abs() / ev < 0.08, "var={var} want={ev}");
+    }
+
+    #[test]
+    fn inversion_matches_sequential_distribution() {
+        // chi-square-ish comparison of the two exact samplers
+        let (s, l, k) = (60u64, 25u64, 12u64);
+        let n = 40_000;
+        let mut h1 = vec![0u64; (k + 1) as usize];
+        let mut h2 = vec![0u64; (k + 1) as usize];
+        let mut r1 = Rng::new(2);
+        let mut r2 = Rng::new(3);
+        for _ in 0..n {
+            h1[hypergeometric(&mut r1, s, l, k) as usize] += 1;
+            h2[hypergeometric_seq(&mut r2, s, l, k) as usize] += 1;
+        }
+        for t in 0..=k as usize {
+            let (a, b) = (h1[t] as f64, h2[t] as f64);
+            if a + b > 100.0 {
+                let rel = (a - b).abs() / (a + b);
+                assert!(rel < 0.1, "bucket {t}: {a} vs {b}");
+            }
+        }
+    }
+}

@@ -1,0 +1,24 @@
+//! Random sampling substrate.
+//!
+//! * [`binomial`] / [`hypergeometric`] — the exact discrete samplers the
+//!   paper's Appendix-A streaming algorithm is built from.
+//! * [`alias`] — Vose alias tables for the offline (in-memory) sampling
+//!   path used by the evaluation harness.
+//! * [`multinomial`] — exact multinomial counts (conditional binomials),
+//!   used by the coordinator's shard merge.
+//! * [`reservoir`] — the paper's O(1)-per-item, O(log s)-active-memory
+//!   parallel weighted reservoir (Appendix A).
+
+pub mod alias;
+pub mod binomial;
+pub mod hypergeometric;
+pub mod multinomial;
+pub mod reservoir;
+pub mod spill;
+
+pub use alias::AliasTable;
+pub use binomial::binomial;
+pub use hypergeometric::hypergeometric;
+pub use multinomial::multinomial_counts;
+pub use reservoir::{ParallelReservoir, WeightedSample};
+pub use spill::{SpillItem, SpillingReservoir};

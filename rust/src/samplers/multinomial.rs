@@ -1,0 +1,82 @@
+//! Exact multinomial counts via the conditional-binomial decomposition.
+//!
+//! Used by the coordinator's merge step: `s` global samples are split
+//! across shards with probabilities proportional to the shards' total
+//! weights; the counts are Multinomial(s, W_w/ΣW).
+
+use super::binomial::binomial;
+use crate::util::rng::Rng;
+
+/// Draw Multinomial(`s`; weights) counts exactly. Weights need not be
+/// normalized; zero weights get zero counts. Returns a count per weight,
+/// summing to `s`.
+pub fn multinomial_counts(rng: &mut Rng, s: u64, weights: &[f64]) -> Vec<u64> {
+    let mut remaining_weight: f64 = weights.iter().sum();
+    let mut remaining = s;
+    let mut out = vec![0u64; weights.len()];
+    for (i, &w) in weights.iter().enumerate() {
+        if remaining == 0 {
+            break;
+        }
+        if w <= 0.0 {
+            continue;
+        }
+        if w >= remaining_weight {
+            out[i] = remaining;
+            remaining = 0;
+            break;
+        }
+        let c = binomial(rng, remaining, (w / remaining_weight).clamp(0.0, 1.0));
+        out[i] = c;
+        remaining -= c;
+        remaining_weight -= w;
+    }
+    // numeric leftovers land in the last positive-weight bucket
+    if remaining > 0 {
+        if let Some(i) = (0..weights.len()).rev().find(|&i| weights[i] > 0.0) {
+            out[i] += remaining;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_sum_to_s() {
+        let mut rng = Rng::new(0);
+        for s in [0u64, 1, 17, 1000] {
+            let c = multinomial_counts(&mut rng, s, &[0.1, 0.0, 2.0, 0.5]);
+            assert_eq!(c.iter().sum::<u64>(), s);
+            assert_eq!(c[1], 0);
+        }
+    }
+
+    #[test]
+    fn means_match_probabilities() {
+        let mut rng = Rng::new(1);
+        let weights = [1.0, 3.0, 6.0];
+        let s = 1000u64;
+        let trials = 2000;
+        let mut sums = [0f64; 3];
+        for _ in 0..trials {
+            let c = multinomial_counts(&mut rng, s, &weights);
+            for i in 0..3 {
+                sums[i] += c[i] as f64;
+            }
+        }
+        for i in 0..3 {
+            let mean = sums[i] / trials as f64;
+            let want = s as f64 * weights[i] / 10.0;
+            assert!((mean - want).abs() / want < 0.02, "bucket {i}: {mean} vs {want}");
+        }
+    }
+
+    #[test]
+    fn single_bucket_gets_everything() {
+        let mut rng = Rng::new(2);
+        assert_eq!(multinomial_counts(&mut rng, 99, &[5.0]), vec![99]);
+    }
+}

@@ -1,0 +1,236 @@
+//! The paper's Appendix-A parallel weighted reservoir.
+//!
+//! Simulates `s` independent weight-proportional reservoir samplers (i.e.
+//! `s` i.i.d. samples *with replacement* from the stream's weight
+//! distribution) with:
+//!
+//! * **O(1) work per stream item** — one `binomial(s, w/W)` draw deciding
+//!   how many of the `s` virtual samplers would adopt this item;
+//! * a forward **sketch** (stack) holding only items adopted by ≥1 sampler
+//!   — length O(s·log(b·N)) where `b = max w / min w`;
+//! * a backward **replay** that resolves which adoptions were final using
+//!   `hypergeometric(s, ℓ, k)` draws and O(log s) live state.
+//!
+//! This is Theorem 4.2's engine: the streaming sketcher runs one of these
+//! per shard with the entry weights of the chosen distribution.
+
+use super::binomial::binomial;
+use super::hypergeometric::hypergeometric;
+use crate::util::rng::Rng;
+
+/// One resolved output: the stream item (by caller-provided payload) and
+/// how many of the `s` samplers committed to it.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct WeightedSample<T> {
+    /// The stream payload.
+    pub item: T,
+    /// Multiplicity `t ≥ 1` among the `s` samplers.
+    pub count: u64,
+}
+
+/// Streaming state of the Appendix-A sampler.
+#[derive(Clone, Debug)]
+pub struct ParallelReservoir<T> {
+    s: u64,
+    total_weight: f64,
+    /// Forward sketch: (item, #samplers that adopted it at push time).
+    sketch: Vec<(T, u64)>,
+    rng: Rng,
+    items_seen: u64,
+}
+
+impl<T: Clone> ParallelReservoir<T> {
+    /// Create a sampler for `s` parallel virtual reservoirs.
+    pub fn new(s: u64, seed: u64) -> Self {
+        assert!(s > 0, "need at least one sample");
+        Self { s, total_weight: 0.0, sketch: Vec::new(), rng: Rng::new(seed), items_seen: 0 }
+    }
+
+    /// Total weight pushed so far.
+    pub fn total_weight(&self) -> f64 {
+        self.total_weight
+    }
+
+    /// Number of items pushed.
+    pub fn items_seen(&self) -> u64 {
+        self.items_seen
+    }
+
+    /// Current forward-sketch length (the O(s log bN) structure).
+    pub fn sketch_len(&self) -> usize {
+        self.sketch.len()
+    }
+
+    /// Push one stream item with weight `w > 0`. O(1): a single binomial
+    /// draw (amortized O(1 + k) including pushing the sketch record).
+    #[inline]
+    pub fn push(&mut self, item: T, w: f64) {
+        debug_assert!(w > 0.0 && w.is_finite(), "weights must be positive, got {w}");
+        self.items_seen += 1;
+        self.total_weight += w;
+        let p = w / self.total_weight;
+        let k = binomial(&mut self.rng, self.s, p);
+        if k > 0 {
+            self.sketch.push((item, k));
+        }
+    }
+
+    /// Merge another reservoir's stream into this one (used by tests; the
+    /// coordinator merges via multinomial over shard weights instead).
+    pub fn push_all<I: IntoIterator<Item = (T, f64)>>(&mut self, items: I) {
+        for (item, w) in items {
+            self.push(item, w);
+        }
+    }
+
+    /// Backward replay: resolve final commitments. Consumes the sampler
+    /// and returns the composition of the `s` samplers' final choices,
+    /// i.e. exactly `s` samples-with-replacement in aggregated
+    /// `(item, count)` form. Returns fewer than `s` total only if the
+    /// stream was empty.
+    pub fn finalize(mut self) -> Vec<WeightedSample<T>> {
+        let mut out = Vec::new();
+        let mut l = self.s; // uncommitted samplers ("empty bins")
+        while l > 0 {
+            let Some((item, k)) = self.sketch.pop() else { break };
+            // k of the s samplers adopted this item at push time; going
+            // backwards, a sampler's first-seen adoption is its final one.
+            let t = hypergeometric(&mut self.rng, self.s, l, k);
+            if t > 0 {
+                l -= t;
+                out.push(WeightedSample { item, count: t });
+            }
+        }
+        out
+    }
+
+    /// Naive O(s)-per-item oracle used by distribution tests: run `s`
+    /// classic weighted reservoir samplers independently.
+    pub fn naive_oracle(
+        items: &[(T, f64)],
+        s: u64,
+        seed: u64,
+    ) -> Vec<WeightedSample<T>>
+    where
+        T: PartialEq,
+    {
+        let mut rng = Rng::new(seed);
+        let mut current: Vec<Option<usize>> = vec![None; s as usize];
+        let mut total = 0.0;
+        for (idx, (_, w)) in items.iter().enumerate() {
+            total += w;
+            let p = w / total;
+            for slot in current.iter_mut() {
+                if rng.f64() < p {
+                    *slot = Some(idx);
+                }
+            }
+        }
+        let mut counts: std::collections::BTreeMap<usize, u64> = Default::default();
+        for slot in current.into_iter().flatten() {
+            *counts.entry(slot).or_default() += 1;
+        }
+        counts
+            .into_iter()
+            .map(|(idx, count)| WeightedSample { item: items[idx].0.clone(), count })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn total_count_is_s() {
+        let mut r = ParallelReservoir::new(1000, 7);
+        for i in 0..5000u32 {
+            r.push(i, 1.0 + (i % 13) as f64);
+        }
+        let samples = r.finalize();
+        let total: u64 = samples.iter().map(|x| x.count).sum();
+        assert_eq!(total, 1000);
+    }
+
+    #[test]
+    fn empty_stream_yields_nothing() {
+        let r: ParallelReservoir<u32> = ParallelReservoir::new(10, 0);
+        assert!(r.finalize().is_empty());
+    }
+
+    #[test]
+    fn single_item_takes_all() {
+        let mut r = ParallelReservoir::new(64, 1);
+        r.push(42u32, 3.0);
+        let samples = r.finalize();
+        assert_eq!(samples.len(), 1);
+        assert_eq!(samples[0], WeightedSample { item: 42, count: 64 });
+    }
+
+    #[test]
+    fn frequencies_proportional_to_weight() {
+        // item weights 1:2:7 — empirical sample shares must match
+        let items: Vec<(u32, f64)> = vec![(0, 1.0), (1, 2.0), (2, 7.0)];
+        let s = 2000u64;
+        let trials = 200;
+        let mut totals = [0u64; 3];
+        for t in 0..trials {
+            let mut r = ParallelReservoir::new(s, 100 + t);
+            // arbitrary order: rotate
+            for k in 0..3 {
+                let (item, w) = items[((t as usize) + k) % 3];
+                r.push(item, w);
+            }
+            for smp in r.finalize() {
+                totals[smp.item as usize] += smp.count;
+            }
+        }
+        let grand: u64 = totals.iter().sum();
+        assert_eq!(grand, s * trials as u64);
+        for (i, want) in [(0usize, 0.1), (1, 0.2), (2, 0.7)] {
+            let got = totals[i] as f64 / grand as f64;
+            assert!((got - want).abs() < 0.01, "item {i}: got {got}, want {want}");
+        }
+    }
+
+    #[test]
+    fn matches_naive_oracle_distribution() {
+        // Compare aggregate frequencies of the O(1)/item sampler vs the
+        // naive O(s)/item oracle on the same weighted stream.
+        let items: Vec<(u32, f64)> = (0..50).map(|i| (i, 1.0 + (i as f64 * 0.3))).collect();
+        let s = 500u64;
+        let trials = 120u64;
+        let mut fast = vec![0u64; 50];
+        let mut slow = vec![0u64; 50];
+        for t in 0..trials {
+            let mut r = ParallelReservoir::new(s, 2000 + t);
+            r.push_all(items.iter().cloned());
+            for smp in r.finalize() {
+                fast[smp.item as usize] += smp.count;
+            }
+            for smp in ParallelReservoir::naive_oracle(&items, s, 9000 + t) {
+                slow[smp.item as usize] += smp.count;
+            }
+        }
+        let total_w: f64 = items.iter().map(|x| x.1).sum();
+        for i in 0..50 {
+            let expect = items[i].1 / total_w;
+            let f = fast[i] as f64 / (s * trials) as f64;
+            let sl = slow[i] as f64 / (s * trials) as f64;
+            assert!((f - expect).abs() < 0.01, "fast item {i}: {f} vs {expect}");
+            assert!((sl - expect).abs() < 0.01, "slow item {i}: {sl} vs {expect}");
+        }
+    }
+
+    #[test]
+    fn sketch_length_is_compact() {
+        // Theorem 4.2: sketch length O(s log(bN)), far below N for small s.
+        let mut r = ParallelReservoir::new(100, 3);
+        for i in 0..200_000u32 {
+            r.push(i, 1.0);
+        }
+        // s·ln(N) ≈ 100 · 12.2 ≈ 1220 ≪ 200k
+        assert!(r.sketch_len() < 5_000, "sketch too long: {}", r.sketch_len());
+        assert!(r.sketch_len() >= 100);
+    }
+}

@@ -1,0 +1,192 @@
+//! Disk-spilling variant of the Appendix-A reservoir.
+//!
+//! The paper stores the forward sketch on *durable storage* and keeps only
+//! O(log s) active memory. [`SpillingReservoir`] reproduces that: sketch
+//! records stream to a temp file as they are produced; the backward
+//! replay reads the file in reverse block order. Used when
+//! `s·log(b·N)` records exceed the in-memory budget.
+
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::PathBuf;
+
+use super::binomial::binomial;
+use super::hypergeometric::hypergeometric;
+use super::reservoir::WeightedSample;
+use crate::error::Result;
+use crate::util::rng::Rng;
+
+/// Fixed-size sketch record: payload (row, col, value) + adoption count.
+const REC_BYTES: usize = 20;
+
+/// Streaming item payload for the spilling reservoir (matrix entries).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SpillItem {
+    /// Row.
+    pub row: u32,
+    /// Column.
+    pub col: u32,
+    /// Value.
+    pub val: f32,
+}
+
+/// Appendix-A reservoir with the forward sketch on disk.
+pub struct SpillingReservoir {
+    s: u64,
+    total_weight: f64,
+    writer: BufWriter<File>,
+    path: PathBuf,
+    records: u64,
+    rng: Rng,
+}
+
+impl SpillingReservoir {
+    /// Create with a temp file under `dir`.
+    pub fn create(dir: &std::path::Path, s: u64, seed: u64) -> Result<SpillingReservoir> {
+        std::fs::create_dir_all(dir)?;
+        let path = dir.join(format!("reservoir_{seed}_{s}.sketch"));
+        let file = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(SpillingReservoir {
+            s,
+            total_weight: 0.0,
+            writer: BufWriter::new(file),
+            path,
+            records: 0,
+            rng: Rng::new(seed),
+        })
+    }
+
+    /// Records spilled so far (the O(s log bN) bound of Theorem 4.2).
+    pub fn records(&self) -> u64 {
+        self.records
+    }
+
+    /// Push one stream item — O(1) plus an amortized sequential write.
+    pub fn push(&mut self, item: SpillItem, w: f64) -> Result<()> {
+        debug_assert!(w > 0.0 && w.is_finite());
+        self.total_weight += w;
+        let k = binomial(&mut self.rng, self.s, w / self.total_weight);
+        if k > 0 {
+            let mut rec = [0u8; REC_BYTES];
+            rec[0..4].copy_from_slice(&item.row.to_le_bytes());
+            rec[4..8].copy_from_slice(&item.col.to_le_bytes());
+            rec[8..12].copy_from_slice(&item.val.to_le_bytes());
+            rec[12..20].copy_from_slice(&k.to_le_bytes());
+            self.writer.write_all(&rec)?;
+            self.records += 1;
+        }
+        Ok(())
+    }
+
+    /// Backward replay straight off the file; deletes the spill file.
+    pub fn finalize(mut self) -> Result<Vec<WeightedSample<SpillItem>>> {
+        self.writer.flush()?;
+        drop(self.writer);
+        let mut file = File::open(&self.path)?;
+        let mut out = Vec::new();
+        let mut l = self.s;
+        // read in reverse blocks of 4096 records
+        const BLOCK: u64 = 4096;
+        let mut remaining = self.records;
+        let mut buf = vec![0u8; (BLOCK as usize) * REC_BYTES];
+        while remaining > 0 && l > 0 {
+            let take = remaining.min(BLOCK);
+            let start = (remaining - take) * REC_BYTES as u64;
+            file.seek(SeekFrom::Start(start))?;
+            let slice = &mut buf[..(take as usize) * REC_BYTES];
+            file.read_exact(slice)?;
+            // iterate records inside the block backwards
+            for idx in (0..take as usize).rev() {
+                if l == 0 {
+                    break;
+                }
+                let rec = &slice[idx * REC_BYTES..(idx + 1) * REC_BYTES];
+                let item = SpillItem {
+                    row: u32::from_le_bytes(rec[0..4].try_into().unwrap()),
+                    col: u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+                    val: f32::from_le_bytes(rec[8..12].try_into().unwrap()),
+                };
+                let k = u64::from_le_bytes(rec[12..20].try_into().unwrap());
+                let t = hypergeometric(&mut self.rng, self.s, l, k.min(self.s));
+                if t > 0 {
+                    l -= t;
+                    out.push(WeightedSample { item, count: t });
+                }
+            }
+            remaining -= take;
+        }
+        let _ = std::fs::remove_file(&self.path);
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::samplers::ParallelReservoir;
+
+    fn tmp() -> PathBuf {
+        std::env::temp_dir().join("matsketch_spill_test")
+    }
+
+    #[test]
+    fn total_count_is_s() {
+        let mut r = SpillingReservoir::create(&tmp(), 500, 1).unwrap();
+        for i in 0..20_000u32 {
+            r.push(SpillItem { row: i % 50, col: i, val: 1.0 }, 1.0 + (i % 7) as f64)
+                .unwrap();
+        }
+        let samples = r.finalize().unwrap();
+        assert_eq!(samples.iter().map(|s| s.count).sum::<u64>(), 500);
+    }
+
+    #[test]
+    fn spill_file_removed_after_finalize() {
+        let dir = tmp();
+        let mut r = SpillingReservoir::create(&dir, 10, 2).unwrap();
+        for i in 0..100u32 {
+            r.push(SpillItem { row: 0, col: i, val: 1.0 }, 1.0).unwrap();
+        }
+        let path = r.path.clone();
+        let _ = r.finalize().unwrap();
+        assert!(!path.exists());
+    }
+
+    #[test]
+    fn distribution_matches_in_memory_reservoir() {
+        // same weighted stream through both engines; compare frequencies
+        let items: Vec<(u32, f64)> = (0..40).map(|i| (i, 1.0 + i as f64 * 0.25)).collect();
+        let s = 400u64;
+        let trials = 150u64;
+        let mut disk = vec![0u64; 40];
+        let mut mem = vec![0u64; 40];
+        for t in 0..trials {
+            let mut r1 = SpillingReservoir::create(&tmp(), s, 100 + t).unwrap();
+            for &(c, w) in &items {
+                r1.push(SpillItem { row: 0, col: c, val: 1.0 }, w).unwrap();
+            }
+            for smp in r1.finalize().unwrap() {
+                disk[smp.item.col as usize] += smp.count;
+            }
+            let mut r2: ParallelReservoir<u32> = ParallelReservoir::new(s, 500 + t);
+            for &(c, w) in &items {
+                r2.push(c, w);
+            }
+            for smp in r2.finalize() {
+                mem[smp.item as usize] += smp.count;
+            }
+        }
+        let total_w: f64 = items.iter().map(|x| x.1).sum();
+        for i in 0..40 {
+            let expect = items[i].1 / total_w;
+            let d = disk[i] as f64 / (s * trials) as f64;
+            let m = mem[i] as f64 / (s * trials) as f64;
+            assert!((d - expect).abs() < 0.012, "disk item {i}: {d} vs {expect}");
+            assert!((m - expect).abs() < 0.012, "mem item {i}: {m} vs {expect}");
+        }
+    }
+}

@@ -1,0 +1,171 @@
+//! Bit-level I/O and Elias-γ codes for the sketch codec.
+
+/// MSB-first bit writer.
+#[derive(Default, Debug)]
+pub struct BitWriter {
+    buf: Vec<u8>,
+    cur: u8,
+    nbits: u8,
+}
+
+impl BitWriter {
+    /// Empty writer.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Append one bit.
+    #[inline]
+    pub fn put_bit(&mut self, bit: bool) {
+        self.cur = (self.cur << 1) | bit as u8;
+        self.nbits += 1;
+        if self.nbits == 8 {
+            self.buf.push(self.cur);
+            self.cur = 0;
+            self.nbits = 0;
+        }
+    }
+
+    /// Append the low `n` bits of `v`, MSB first.
+    pub fn put_bits(&mut self, v: u64, n: u32) {
+        for i in (0..n).rev() {
+            self.put_bit((v >> i) & 1 == 1);
+        }
+    }
+
+    /// Elias-γ code of `v ≥ 1`: (⌊log₂v⌋ zeros) then v's binary digits.
+    pub fn put_gamma(&mut self, v: u64) {
+        debug_assert!(v >= 1);
+        let nbits = 64 - v.leading_zeros();
+        for _ in 0..nbits - 1 {
+            self.put_bit(false);
+        }
+        self.put_bits(v, nbits);
+    }
+
+    /// Total bits written so far.
+    pub fn bit_len(&self) -> usize {
+        self.buf.len() * 8 + self.nbits as usize
+    }
+
+    /// Finish (pad the final byte with zeros) and return the buffer.
+    pub fn finish(mut self) -> Vec<u8> {
+        if self.nbits > 0 {
+            self.cur <<= 8 - self.nbits;
+            self.buf.push(self.cur);
+        }
+        self.buf
+    }
+}
+
+/// MSB-first bit reader.
+#[derive(Debug)]
+pub struct BitReader<'a> {
+    buf: &'a [u8],
+    pos: usize, // bit position
+}
+
+impl<'a> BitReader<'a> {
+    /// Read from a byte buffer.
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    /// Next bit; `None` past the end.
+    #[inline]
+    pub fn get_bit(&mut self) -> Option<bool> {
+        let byte = self.buf.get(self.pos / 8)?;
+        let bit = (byte >> (7 - self.pos % 8)) & 1 == 1;
+        self.pos += 1;
+        Some(bit)
+    }
+
+    /// Next `n` bits as an integer.
+    pub fn get_bits(&mut self, n: u32) -> Option<u64> {
+        let mut v = 0u64;
+        for _ in 0..n {
+            v = (v << 1) | self.get_bit()? as u64;
+        }
+        Some(v)
+    }
+
+    /// Decode one Elias-γ value.
+    pub fn get_gamma(&mut self) -> Option<u64> {
+        let mut zeros = 0u32;
+        while !self.get_bit()? {
+            zeros += 1;
+            if zeros > 64 {
+                return None;
+            }
+        }
+        let rest = self.get_bits(zeros)?;
+        Some((1u64 << zeros) | rest)
+    }
+
+    /// Current bit position.
+    pub fn bit_pos(&self) -> usize {
+        self.pos
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    #[test]
+    fn bits_roundtrip() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b101101, 6);
+        w.put_bits(0xDEAD, 16);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.get_bits(6), Some(0b101101));
+        assert_eq!(r.get_bits(16), Some(0xDEAD));
+    }
+
+    #[test]
+    fn gamma_roundtrip_exhaustive_small() {
+        let mut w = BitWriter::new();
+        for v in 1..=300u64 {
+            w.put_gamma(v);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for v in 1..=300u64 {
+            assert_eq!(r.get_gamma(), Some(v));
+        }
+    }
+
+    #[test]
+    fn gamma_roundtrip_random_large() {
+        let mut rng = Rng::new(0);
+        let vals: Vec<u64> = (0..2000).map(|_| rng.u64_below(1 << 40) + 1).collect();
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.put_gamma(v);
+        }
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        for &v in &vals {
+            assert_eq!(r.get_gamma(), Some(v));
+        }
+    }
+
+    #[test]
+    fn gamma_length_is_2floorlog_plus_1() {
+        for (v, len) in [(1u64, 1usize), (2, 3), (3, 3), (4, 5), (255, 15), (256, 17)] {
+            let mut w = BitWriter::new();
+            w.put_gamma(v);
+            assert_eq!(w.bit_len(), len, "v={v}");
+        }
+    }
+
+    #[test]
+    fn reader_stops_at_end() {
+        let buf = [0xFFu8];
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.get_bits(8), Some(0xFF));
+        assert_eq!(r.get_bit(), None);
+    }
+}

@@ -1,0 +1,216 @@
+//! Sketch construction: the offline (alias-table) path used by the
+//! evaluation harness, and the shared plan type. The streaming path lives
+//! in [`crate::coordinator`].
+
+use crate::distributions::{Distribution, DistributionKind, MatrixStats};
+use crate::error::{Error, Result};
+use crate::samplers::AliasTable;
+use crate::sparse::Csr;
+use crate::util::rng::Rng;
+
+use super::{Sketch, SketchEntry};
+
+/// How to sketch a matrix.
+#[derive(Clone, Debug)]
+pub struct SketchPlan {
+    /// Sampling distribution.
+    pub kind: DistributionKind,
+    /// Sample budget `s` (i.i.d. draws with replacement).
+    pub s: u64,
+    /// Failure probability δ (enters Bernstein's α, β).
+    pub delta: f64,
+    /// RNG seed — all sketches are reproducible.
+    pub seed: u64,
+}
+
+impl SketchPlan {
+    /// Plan with δ = 0.1 and seed 0.
+    pub fn new(kind: DistributionKind, s: u64) -> SketchPlan {
+        SketchPlan { kind, s, delta: 0.1, seed: 0 }
+    }
+
+    /// Override the seed.
+    pub fn with_seed(mut self, seed: u64) -> SketchPlan {
+        self.seed = seed;
+        self
+    }
+
+    /// Override δ.
+    pub fn with_delta(mut self, delta: f64) -> SketchPlan {
+        self.delta = delta;
+        self
+    }
+}
+
+/// Build a sketch of an in-memory CSR matrix by drawing `s` i.i.d. entries
+/// from the plan's distribution via one alias table (O(nnz) setup, O(1)
+/// per draw).
+pub fn sketch_offline(a: &Csr, plan: &SketchPlan) -> Result<Sketch> {
+    if plan.s == 0 {
+        return Err(Error::invalid("sample budget must be positive"));
+    }
+    let stats = MatrixStats::from_csr(a);
+    let dist = Distribution::prepare(plan.kind, &stats, plan.s, plan.delta)?;
+
+    // flat entry list + weights
+    let nnz = a.nnz();
+    let mut rows: Vec<u32> = Vec::with_capacity(nnz);
+    for i in 0..a.m {
+        let c = a.indptr[i + 1] - a.indptr[i];
+        rows.extend(std::iter::repeat(i as u32).take(c));
+    }
+    let mut weights: Vec<f64> = Vec::with_capacity(nnz);
+    let mut total_weight = 0.0f64;
+    for idx in 0..nnz {
+        let w = dist.weight(rows[idx], a.values[idx]);
+        total_weight += w;
+        weights.push(w);
+    }
+    if total_weight <= 0.0 {
+        return Err(Error::invalid(format!(
+            "{} assigns zero weight to every entry",
+            plan.kind.name()
+        )));
+    }
+
+    let table = AliasTable::new(&weights);
+    let mut rng = Rng::new(plan.seed);
+    let mut counts: std::collections::HashMap<usize, u32> = Default::default();
+    for _ in 0..plan.s {
+        *counts.entry(table.sample(&mut rng)).or_default() += 1;
+    }
+
+    let mut entries: Vec<SketchEntry> = counts
+        .into_iter()
+        .map(|(idx, count)| {
+            let p = weights[idx] / total_weight;
+            SketchEntry {
+                row: rows[idx],
+                col: a.indices[idx],
+                count,
+                value: count as f64 * a.values[idx] as f64 / (plan.s as f64 * p),
+            }
+        })
+        .collect();
+    entries.sort_unstable_by(|x, y| (x.row, x.col).cmp(&(y.row, y.col)));
+
+    // per-row codec scale for the L1 family
+    let row_scale = dist.rho.as_ref().map(|rho| {
+        rho.iter()
+            .zip(stats.row_l1.iter())
+            .map(|(&r, &z)| if r > 0.0 { z / (plan.s as f64 * r) } else { 0.0 })
+            .collect()
+    });
+
+    Ok(Sketch {
+        m: a.m,
+        n: a.n,
+        s: plan.s,
+        entries,
+        row_scale,
+        method: plan.kind.name(),
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::{Coo, Entry};
+
+    fn toy_csr() -> Csr {
+        let mut coo = Coo::new(4, 8);
+        let mut rng = Rng::new(99);
+        for i in 0..4u32 {
+            for j in 0..8u32 {
+                coo.push(i, j, (rng.normal() as f32) * (1.0 + i as f32));
+            }
+        }
+        coo.to_csr()
+    }
+
+    #[test]
+    fn total_count_is_s() {
+        let a = toy_csr();
+        for kind in DistributionKind::figure1_set() {
+            let sk = sketch_offline(&a, &SketchPlan::new(kind, 500).with_seed(1)).unwrap();
+            let total: u64 = sk.entries.iter().map(|e| e.count as u64).sum();
+            assert_eq!(total, 500, "{}", sk.method);
+            assert_eq!(sk.s, 500);
+        }
+    }
+
+    #[test]
+    fn sketch_is_unbiased_estimator() {
+        // E[B_ij] = A_ij: average many sketches and compare entrywise.
+        let a = Coo::from_entries(
+            2,
+            2,
+            vec![
+                Entry::new(0, 0, 5.0),
+                Entry::new(0, 1, -2.0),
+                Entry::new(1, 0, 1.0),
+                Entry::new(1, 1, 4.0),
+            ],
+        )
+        .unwrap()
+        .to_csr();
+        let trials = 3000u64;
+        let mut acc = vec![0.0f64; 4];
+        for t in 0..trials {
+            let sk = sketch_offline(
+                &a,
+                &SketchPlan::new(DistributionKind::Bernstein, 8).with_seed(t),
+            )
+            .unwrap();
+            for e in &sk.entries {
+                acc[(e.row * 2 + e.col) as usize] += e.value;
+            }
+        }
+        let want = [5.0, -2.0, 1.0, 4.0];
+        for i in 0..4 {
+            let mean = acc[i] / trials as f64;
+            assert!(
+                (mean - want[i]).abs() < 0.25,
+                "entry {i}: mean={mean} want={}",
+                want[i]
+            );
+        }
+    }
+
+    #[test]
+    fn bernstein_values_are_row_constants() {
+        // For the L1 family, |B_ij|/count must equal the row scale.
+        let a = toy_csr();
+        let sk = sketch_offline(
+            &a,
+            &SketchPlan::new(DistributionKind::Bernstein, 2_000).with_seed(5),
+        )
+        .unwrap();
+        let scale = sk.row_scale.as_ref().unwrap();
+        for e in &sk.entries {
+            let per_draw = e.value.abs() / e.count as f64;
+            let want = scale[e.row as usize];
+            assert!(
+                (per_draw - want).abs() / want < 1e-9,
+                "row {}: {per_draw} vs {want}",
+                e.row
+            );
+        }
+    }
+
+    #[test]
+    fn entries_sorted_row_major() {
+        let a = toy_csr();
+        let sk = sketch_offline(&a, &SketchPlan::new(DistributionKind::L1, 300)).unwrap();
+        assert!(sk
+            .entries
+            .windows(2)
+            .all(|w| (w[0].row, w[0].col) < (w[1].row, w[1].col)));
+    }
+
+    #[test]
+    fn rejects_zero_budget() {
+        let a = toy_csr();
+        assert!(sketch_offline(&a, &SketchPlan::new(DistributionKind::L1, 0)).is_err());
+    }
+}

@@ -1,0 +1,137 @@
+//! Sketch representation, builders, and the compressed codec.
+//!
+//! A sketch is `B = (1/s)·Σ_ℓ B_ℓ` where each `B_ℓ` has a single non-zero
+//! `A_ij/p_ij`. Aggregating repeated draws, every non-zero of `B` is
+//! `B_ij = k_ij·A_ij/(s·p_ij)` with `Σ|k_ij| = s`. For the L1-family
+//! distributions `p_ij = ρ_i·|A_ij|/‖A_(i)‖₁`, so
+//! `B_ij = sign(A_ij)·k_ij·‖A_(i)‖₁/(s·ρ_i)` — the value is a *row
+//! constant* times a small integer, which is what makes the sketch
+//! compressible to a handful of bits per sample (§1 of the paper, codec in
+//! [`encode`]).
+
+pub mod bitio;
+pub mod builder;
+pub mod encode;
+
+pub use builder::{sketch_offline, SketchPlan};
+pub use encode::{decode_sketch, encode_sketch, EncodedSketch};
+
+use crate::sparse::{Coo, Csr};
+
+/// One aggregated sketch sample.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct SketchEntry {
+    /// Row index.
+    pub row: u32,
+    /// Column index.
+    pub col: u32,
+    /// Multiplicity `k_ij ≥ 1` (number of times this entry was drawn).
+    pub count: u32,
+    /// The sketch value `B_ij = k_ij·A_ij/(s·p_ij)`.
+    pub value: f64,
+}
+
+/// A sparse sketch `B` of a data matrix.
+#[derive(Clone, Debug)]
+pub struct Sketch {
+    /// Rows of the sketched matrix.
+    pub m: usize,
+    /// Columns.
+    pub n: usize,
+    /// Total draws `s` (`Σ count`).
+    pub s: u64,
+    /// Aggregated samples, row-major sorted.
+    pub entries: Vec<SketchEntry>,
+    /// Per-row codec scale `‖A_(i)‖₁/(s·ρ_i)` when the distribution is in
+    /// the L1 family (enables the compact encoding); `None` otherwise.
+    pub row_scale: Option<Vec<f64>>,
+    /// Name of the distribution that produced this sketch.
+    pub method: String,
+}
+
+impl Sketch {
+    /// Number of distinct non-zero coordinates.
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Materialize as CSR (for SVD / spectral evaluation).
+    pub fn to_csr(&self) -> Csr {
+        let mut coo = Coo::new(self.m, self.n);
+        for e in &self.entries {
+            coo.push(e.row, e.col, e.value as f32);
+        }
+        coo.to_csr()
+    }
+
+    /// Materialize as COO.
+    pub fn to_coo(&self) -> Coo {
+        let mut coo = Coo::new(self.m, self.n);
+        for e in &self.entries {
+            coo.push(e.row, e.col, e.value as f32);
+        }
+        coo
+    }
+
+    /// Sort entries row-major and merge duplicates (same coordinate drawn
+    /// in different shards).
+    pub fn normalize(&mut self) {
+        self.entries
+            .sort_unstable_by(|a, b| (a.row, a.col).cmp(&(b.row, b.col)));
+        let mut out: Vec<SketchEntry> = Vec::with_capacity(self.entries.len());
+        for e in self.entries.drain(..) {
+            match out.last_mut() {
+                Some(last) if last.row == e.row && last.col == e.col => {
+                    last.count += e.count;
+                    last.value += e.value;
+                }
+                _ => out.push(e),
+            }
+        }
+        self.entries = out;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn normalize_merges() {
+        let mut sk = Sketch {
+            m: 2,
+            n: 2,
+            s: 5,
+            entries: vec![
+                SketchEntry { row: 1, col: 0, count: 2, value: 4.0 },
+                SketchEntry { row: 0, col: 0, count: 1, value: 1.0 },
+                SketchEntry { row: 1, col: 0, count: 2, value: 4.0 },
+            ],
+            row_scale: None,
+            method: "test".into(),
+        };
+        sk.normalize();
+        assert_eq!(sk.nnz(), 2);
+        assert_eq!(sk.entries[1].count, 4);
+        assert_eq!(sk.entries[1].value, 8.0);
+    }
+
+    #[test]
+    fn to_csr_roundtrip_values() {
+        let sk = Sketch {
+            m: 2,
+            n: 3,
+            s: 3,
+            entries: vec![
+                SketchEntry { row: 0, col: 2, count: 1, value: -1.5 },
+                SketchEntry { row: 1, col: 0, count: 2, value: 3.0 },
+            ],
+            row_scale: None,
+            method: "test".into(),
+        };
+        let csr = sk.to_csr();
+        assert_eq!(csr.nnz(), 2);
+        let coo = csr.to_coo();
+        assert!(coo.entries.iter().any(|e| e.row == 0 && e.col == 2 && e.val == -1.5));
+    }
+}

@@ -1,0 +1,194 @@
+//! Triplet (COO) sparse matrices — the streaming interchange form.
+
+use crate::error::{Error, Result};
+
+/// One non-zero entry of a sparse matrix, as it appears on the stream.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct Entry {
+    /// Row index.
+    pub row: u32,
+    /// Column index.
+    pub col: u32,
+    /// Value (non-zero).
+    pub val: f32,
+}
+
+impl Entry {
+    /// Construct an entry.
+    pub fn new(row: u32, col: u32, val: f32) -> Self {
+        Self { row, col, val }
+    }
+}
+
+/// Coordinate-format sparse matrix.
+#[derive(Clone, Debug, Default)]
+pub struct Coo {
+    /// Number of rows.
+    pub m: usize,
+    /// Number of columns.
+    pub n: usize,
+    /// Non-zero entries (arbitrary order unless [`Coo::normalize`]d).
+    pub entries: Vec<Entry>,
+}
+
+impl Coo {
+    /// Empty matrix of the given shape.
+    pub fn new(m: usize, n: usize) -> Self {
+        Self { m, n, entries: Vec::new() }
+    }
+
+    /// From parts, validating indices.
+    pub fn from_entries(m: usize, n: usize, entries: Vec<Entry>) -> Result<Self> {
+        for e in &entries {
+            if e.row as usize >= m || e.col as usize >= n {
+                return Err(Error::shape(format!(
+                    "entry ({}, {}) outside {}x{}",
+                    e.row, e.col, m, n
+                )));
+            }
+        }
+        Ok(Self { m, n, entries })
+    }
+
+    /// Number of stored entries (duplicates counted separately).
+    pub fn nnz(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Push one entry (unchecked shape — hot path).
+    #[inline]
+    pub fn push(&mut self, row: u32, col: u32, val: f32) {
+        self.entries.push(Entry { row, col, val });
+    }
+
+    /// Sort row-major and combine duplicate coordinates by summation;
+    /// drops entries that cancel to zero.
+    pub fn normalize(&mut self) {
+        self.entries
+            .sort_unstable_by(|a, b| (a.row, a.col).cmp(&(b.row, b.col)));
+        let mut out: Vec<Entry> = Vec::with_capacity(self.entries.len());
+        for e in self.entries.drain(..) {
+            match out.last_mut() {
+                Some(last) if last.row == e.row && last.col == e.col => last.val += e.val,
+                _ => out.push(e),
+            }
+        }
+        out.retain(|e| e.val != 0.0);
+        self.entries = out;
+    }
+
+    /// Entrywise L1 norm `‖A‖₁ = Σ|a_ij|`.
+    pub fn norm_l1(&self) -> f64 {
+        self.entries.iter().map(|e| e.val.abs() as f64).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.entries
+            .iter()
+            .map(|e| (e.val as f64) * (e.val as f64))
+            .sum::<f64>()
+            .sqrt()
+    }
+
+    /// Per-row L1 norms `‖A_(i)‖₁`.
+    pub fn row_l1_norms(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.m];
+        for e in &self.entries {
+            out[e.row as usize] += e.val.abs() as f64;
+        }
+        out
+    }
+
+    /// Per-column L1 norms `‖A^(j)‖₁`.
+    pub fn col_l1_norms(&self) -> Vec<f64> {
+        let mut out = vec![0.0; self.n];
+        for e in &self.entries {
+            out[e.col as usize] += e.val.abs() as f64;
+        }
+        out
+    }
+
+    /// Transpose (swaps row/col of every entry).
+    pub fn transpose(&self) -> Coo {
+        Coo {
+            m: self.n,
+            n: self.m,
+            entries: self
+                .entries
+                .iter()
+                .map(|e| Entry { row: e.col, col: e.row, val: e.val })
+                .collect(),
+        }
+    }
+
+    /// Convert to CSR (normalizes duplicates first).
+    pub fn to_csr(&self) -> super::Csr {
+        let mut c = self.clone();
+        c.normalize();
+        super::Csr::from_sorted_coo(&c)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        Coo::from_entries(
+            3,
+            4,
+            vec![
+                Entry::new(0, 0, 1.0),
+                Entry::new(2, 3, -2.0),
+                Entry::new(1, 1, 0.5),
+                Entry::new(0, 0, 1.0), // duplicate
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn normalize_merges_duplicates() {
+        let mut c = sample();
+        c.normalize();
+        assert_eq!(c.nnz(), 3);
+        assert_eq!(c.entries[0], Entry::new(0, 0, 2.0));
+    }
+
+    #[test]
+    fn normalize_drops_cancelled() {
+        let mut c = Coo::new(2, 2);
+        c.push(0, 0, 1.0);
+        c.push(0, 0, -1.0);
+        c.push(1, 1, 3.0);
+        c.normalize();
+        assert_eq!(c.nnz(), 1);
+        assert_eq!(c.entries[0], Entry::new(1, 1, 3.0));
+    }
+
+    #[test]
+    fn norms() {
+        let mut c = sample();
+        c.normalize();
+        assert!((c.norm_l1() - 4.5).abs() < 1e-12);
+        assert!((c.norm_fro() - (4.0f64 + 4.0 + 0.25).sqrt()).abs() < 1e-12);
+        assert_eq!(c.row_l1_norms(), vec![2.0, 0.5, 2.0]);
+        assert_eq!(c.col_l1_norms(), vec![2.0, 0.5, 0.0, 2.0]);
+    }
+
+    #[test]
+    fn shape_validation() {
+        assert!(Coo::from_entries(2, 2, vec![Entry::new(2, 0, 1.0)]).is_err());
+        assert!(Coo::from_entries(2, 2, vec![Entry::new(0, 5, 1.0)]).is_err());
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let c = sample();
+        let t2 = c.transpose().transpose();
+        assert_eq!(c.m, t2.m);
+        assert_eq!(c.n, t2.n);
+        assert_eq!(c.entries.len(), t2.entries.len());
+    }
+}

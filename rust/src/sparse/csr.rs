@@ -1,0 +1,273 @@
+//! Compressed sparse row matrices — the compute format.
+//!
+//! SpMM against tall-skinny dense blocks (`A·X`, `Aᵀ·X`) is the Rust-side
+//! hot path of the evaluation pipeline (subspace iteration); see
+//! EXPERIMENTS.md §Perf for the optimization log.
+
+use super::coo::Coo;
+use super::dense::Dense;
+
+/// CSR sparse matrix (f32 values, u32 column indices).
+#[derive(Clone, Debug)]
+pub struct Csr {
+    /// Rows.
+    pub m: usize,
+    /// Columns.
+    pub n: usize,
+    /// Row pointers, length `m + 1`.
+    pub indptr: Vec<usize>,
+    /// Column indices, length nnz.
+    pub indices: Vec<u32>,
+    /// Values, length nnz.
+    pub values: Vec<f32>,
+}
+
+impl Csr {
+    /// Build from a row-major-sorted, duplicate-free COO.
+    pub fn from_sorted_coo(coo: &Coo) -> Csr {
+        let mut indptr = vec![0usize; coo.m + 1];
+        for e in &coo.entries {
+            indptr[e.row as usize + 1] += 1;
+        }
+        for i in 0..coo.m {
+            indptr[i + 1] += indptr[i];
+        }
+        let mut indices = Vec::with_capacity(coo.nnz());
+        let mut values = Vec::with_capacity(coo.nnz());
+        for e in &coo.entries {
+            indices.push(e.col);
+            values.push(e.val);
+        }
+        Csr { m: coo.m, n: coo.n, indptr, indices, values }
+    }
+
+    /// Number of non-zeros.
+    pub fn nnz(&self) -> usize {
+        self.values.len()
+    }
+
+    /// Iterate one row's `(col, val)` pairs.
+    #[inline]
+    pub fn row(&self, i: usize) -> impl Iterator<Item = (u32, f32)> + '_ {
+        let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+        self.indices[lo..hi].iter().copied().zip(self.values[lo..hi].iter().copied())
+    }
+
+    /// Back to COO.
+    pub fn to_coo(&self) -> Coo {
+        let mut out = Coo::new(self.m, self.n);
+        for i in 0..self.m {
+            for (j, v) in self.row(i) {
+                out.push(i as u32, j, v);
+            }
+        }
+        out
+    }
+
+    /// Transpose via counting sort — O(nnz + n).
+    pub fn transpose(&self) -> Csr {
+        let nnz = self.nnz();
+        let mut indptr = vec![0usize; self.n + 1];
+        for &j in &self.indices {
+            indptr[j as usize + 1] += 1;
+        }
+        for j in 0..self.n {
+            indptr[j + 1] += indptr[j];
+        }
+        let mut indices = vec![0u32; nnz];
+        let mut values = vec![0f32; nnz];
+        let mut next = indptr.clone();
+        for i in 0..self.m {
+            for (j, v) in self.row(i) {
+                let pos = next[j as usize];
+                indices[pos] = i as u32;
+                values[pos] = v;
+                next[j as usize] += 1;
+            }
+        }
+        Csr { m: self.n, n: self.m, indptr, indices, values }
+    }
+
+    /// Dense mat-vec `y = A·x` (`x` length n).
+    pub fn spmv(&self, x: &[f32], y: &mut [f32]) {
+        assert_eq!(x.len(), self.n);
+        assert_eq!(y.len(), self.m);
+        for i in 0..self.m {
+            let mut acc = 0.0f32;
+            for (j, v) in self.row(i) {
+                acc += v * x[j as usize];
+            }
+            y[i] = acc;
+        }
+    }
+
+    /// SpMM `Y = A·X` where `X` is a dense `n×k` block; returns `m×k`.
+    ///
+    /// Row-major X makes the inner loop a contiguous k-wide AXPY — the
+    /// compiler auto-vectorizes it (verified in the §Perf pass).
+    pub fn spmm(&self, x: &Dense) -> Dense {
+        assert_eq!(x.rows, self.n, "spmm: A is {}x{}, X is {}x{}", self.m, self.n, x.rows, x.cols);
+        let k = x.cols;
+        let mut out = Dense::zeros(self.m, k);
+        for i in 0..self.m {
+            let dst = &mut out.data[i * k..(i + 1) * k];
+            let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+            for idx in lo..hi {
+                let j = self.indices[idx] as usize;
+                let v = self.values[idx];
+                let src = &x.data[j * k..j * k + k];
+                for (d, s) in dst.iter_mut().zip(src.iter()) {
+                    *d += v * s;
+                }
+            }
+        }
+        out
+    }
+
+    /// SpMM with the transpose, `Y = Aᵀ·X` where `X` is `m×k`; returns `n×k`.
+    ///
+    /// Scatter formulation over rows of A avoids materializing Aᵀ.
+    pub fn spmm_t(&self, x: &Dense) -> Dense {
+        assert_eq!(x.rows, self.m, "spmm_t: A is {}x{}, X is {}x{}", self.m, self.n, x.rows, x.cols);
+        let k = x.cols;
+        let mut out = Dense::zeros(self.n, k);
+        for i in 0..self.m {
+            let src = &x.data[i * k..(i + 1) * k];
+            let (lo, hi) = (self.indptr[i], self.indptr[i + 1]);
+            for idx in lo..hi {
+                let j = self.indices[idx] as usize;
+                let v = self.values[idx];
+                let dst = &mut out.data[j * k..j * k + k];
+                for (d, s) in dst.iter_mut().zip(src.iter()) {
+                    *d += v * s;
+                }
+            }
+        }
+        out
+    }
+
+    /// Densify a block of rows `[r0, r0+rows) × [c0, c0+cols)` into a
+    /// row-major buffer (used to stream dense blocks to the XLA engine).
+    pub fn dense_block(&self, r0: usize, rows: usize, c0: usize, cols: usize) -> Dense {
+        let mut out = Dense::zeros(rows, cols);
+        let r_hi = (r0 + rows).min(self.m);
+        for i in r0..r_hi {
+            let dst = &mut out.data[(i - r0) * cols..(i - r0 + 1) * cols];
+            for (j, v) in self.row(i) {
+                let j = j as usize;
+                if j >= c0 && j < c0 + cols {
+                    dst[j - c0] = v;
+                }
+            }
+        }
+        out
+    }
+
+    /// Entrywise L1 norm.
+    pub fn norm_l1(&self) -> f64 {
+        self.values.iter().map(|v| v.abs() as f64).sum()
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.values.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Per-row L1 norms.
+    pub fn row_l1_norms(&self) -> Vec<f64> {
+        (0..self.m)
+            .map(|i| self.row(i).map(|(_, v)| v.abs() as f64).sum())
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::Entry;
+
+    fn sample() -> Csr {
+        // [[1, 0, 2], [0, 0, 0], [0, -3, 0.5]]
+        Coo::from_entries(
+            3,
+            3,
+            vec![
+                Entry::new(0, 0, 1.0),
+                Entry::new(0, 2, 2.0),
+                Entry::new(2, 1, -3.0),
+                Entry::new(2, 2, 0.5),
+            ],
+        )
+        .unwrap()
+        .to_csr()
+    }
+
+    #[test]
+    fn roundtrip_coo() {
+        let a = sample();
+        let back = a.to_coo().to_csr();
+        assert_eq!(a.indptr, back.indptr);
+        assert_eq!(a.indices, back.indices);
+        assert_eq!(a.values, back.values);
+    }
+
+    #[test]
+    fn spmv_matches_dense() {
+        let a = sample();
+        let x = [1.0f32, 2.0, 3.0];
+        let mut y = [0.0f32; 3];
+        a.spmv(&x, &mut y);
+        assert_eq!(y, [7.0, 0.0, -4.5]);
+    }
+
+    #[test]
+    fn spmm_matches_spmv_per_column() {
+        let a = sample();
+        let x = Dense::from_rows(&[&[1.0, 4.0], &[2.0, 5.0], &[3.0, 6.0]]);
+        let y = a.spmm(&x);
+        // column 0 = spmv([1,2,3]); column 1 = spmv([4,5,6])
+        assert_eq!(y.get(0, 0), 7.0);
+        assert_eq!(y.get(0, 1), 16.0);
+        assert_eq!(y.get(2, 0), -4.5);
+        assert_eq!(y.get(2, 1), -12.0);
+    }
+
+    #[test]
+    fn spmm_t_matches_transpose_spmm() {
+        let a = sample();
+        let x = Dense::from_rows(&[&[1.0, 0.5], &[2.0, -1.0], &[0.0, 2.0]]);
+        let y1 = a.spmm_t(&x);
+        let y2 = a.transpose().spmm(&x);
+        assert_eq!(y1.data, y2.data);
+    }
+
+    #[test]
+    fn transpose_involution() {
+        let a = sample();
+        let t2 = a.transpose().transpose();
+        assert_eq!(a.indptr, t2.indptr);
+        assert_eq!(a.indices, t2.indices);
+        assert_eq!(a.values, t2.values);
+    }
+
+    #[test]
+    fn dense_block_extracts_window() {
+        let a = sample();
+        let b = a.dense_block(0, 2, 1, 2);
+        // rows 0..2, cols 1..3 of [[1,0,2],[0,0,0]] -> [[0,2],[0,0]]
+        assert_eq!(b.data, vec![0.0, 2.0, 0.0, 0.0]);
+        // out-of-range block rows are zero-padded
+        let c = a.dense_block(2, 4, 0, 3);
+        assert_eq!(c.get(0, 1), -3.0);
+        assert_eq!(c.get(3, 2), 0.0);
+    }
+
+    #[test]
+    fn norms_match_coo() {
+        let a = sample();
+        let c = a.to_coo();
+        assert!((a.norm_l1() - c.norm_l1()).abs() < 1e-12);
+        assert!((a.norm_fro() - c.norm_fro()).abs() < 1e-12);
+        assert_eq!(a.row_l1_norms(), vec![3.0, 0.0, 3.5]);
+    }
+}

@@ -1,0 +1,159 @@
+//! Row-major dense matrices — the interface format between the sparse
+//! substrate and the XLA runtime (PJRT literals are created directly from
+//! the row-major buffer).
+
+/// Row-major dense f32 matrix.
+#[derive(Clone, Debug, PartialEq)]
+pub struct Dense {
+    /// Rows.
+    pub rows: usize,
+    /// Columns.
+    pub cols: usize,
+    /// Row-major data, length `rows * cols`.
+    pub data: Vec<f32>,
+}
+
+impl Dense {
+    /// All-zeros matrix.
+    pub fn zeros(rows: usize, cols: usize) -> Dense {
+        Dense { rows, cols, data: vec![0.0; rows * cols] }
+    }
+
+    /// From a row-slice literal (tests/fixtures).
+    pub fn from_rows(rows: &[&[f32]]) -> Dense {
+        let r = rows.len();
+        let c = if r == 0 { 0 } else { rows[0].len() };
+        let mut data = Vec::with_capacity(r * c);
+        for row in rows {
+            assert_eq!(row.len(), c);
+            data.extend_from_slice(row);
+        }
+        Dense { rows: r, cols: c, data }
+    }
+
+    /// From parts.
+    pub fn from_vec(rows: usize, cols: usize, data: Vec<f32>) -> Dense {
+        assert_eq!(data.len(), rows * cols);
+        Dense { rows, cols, data }
+    }
+
+    /// Gaussian random matrix (for subspace-iteration starts).
+    pub fn randn(rows: usize, cols: usize, rng: &mut crate::util::rng::Rng) -> Dense {
+        let mut d = Dense::zeros(rows, cols);
+        for x in &mut d.data {
+            *x = rng.normal() as f32;
+        }
+        d
+    }
+
+    /// Element accessor.
+    #[inline]
+    pub fn get(&self, i: usize, j: usize) -> f32 {
+        self.data[i * self.cols + j]
+    }
+
+    /// Element setter.
+    #[inline]
+    pub fn set(&mut self, i: usize, j: usize, v: f32) {
+        self.data[i * self.cols + j] = v;
+    }
+
+    /// Borrow row `i`.
+    #[inline]
+    pub fn row(&self, i: usize) -> &[f32] {
+        &self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Mutable row `i`.
+    #[inline]
+    pub fn row_mut(&mut self, i: usize) -> &mut [f32] {
+        &mut self.data[i * self.cols..(i + 1) * self.cols]
+    }
+
+    /// Frobenius norm.
+    pub fn norm_fro(&self) -> f64 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>().sqrt()
+    }
+
+    /// Squared Frobenius norm in f64.
+    pub fn norm_fro_sq(&self) -> f64 {
+        self.data.iter().map(|v| (*v as f64) * (*v as f64)).sum::<f64>()
+    }
+
+    /// Copy a row window `[r0, r0+rows)` zero-padding past the end —
+    /// used to feed fixed-shape XLA blocks.
+    pub fn row_window_padded(&self, r0: usize, rows: usize) -> Dense {
+        let mut out = Dense::zeros(rows, self.cols);
+        let hi = (r0 + rows).min(self.rows);
+        if hi > r0 {
+            out.data[..(hi - r0) * self.cols]
+                .copy_from_slice(&self.data[r0 * self.cols..hi * self.cols]);
+        }
+        out
+    }
+
+    /// Pad (or truncate) the column dimension; extra columns are zero.
+    pub fn with_cols(&self, cols: usize) -> Dense {
+        let mut out = Dense::zeros(self.rows, cols);
+        let c = self.cols.min(cols);
+        for i in 0..self.rows {
+            out.data[i * cols..i * cols + c]
+                .copy_from_slice(&self.data[i * self.cols..i * self.cols + c]);
+        }
+        out
+    }
+
+    /// Transpose (out-of-place).
+    pub fn transpose(&self) -> Dense {
+        let mut out = Dense::zeros(self.cols, self.rows);
+        for i in 0..self.rows {
+            for j in 0..self.cols {
+                out.data[j * self.rows + i] = self.data[i * self.cols + j];
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn constructors_and_accessors() {
+        let mut d = Dense::zeros(2, 3);
+        d.set(1, 2, 5.0);
+        assert_eq!(d.get(1, 2), 5.0);
+        assert_eq!(d.row(1), &[0.0, 0.0, 5.0]);
+        let e = Dense::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(e.get(1, 0), 3.0);
+    }
+
+    #[test]
+    fn window_padding() {
+        let d = Dense::from_rows(&[&[1.0], &[2.0], &[3.0]]);
+        let w = d.row_window_padded(2, 4);
+        assert_eq!(w.data, vec![3.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn with_cols_pads_and_truncates() {
+        let d = Dense::from_rows(&[&[1.0, 2.0], &[3.0, 4.0]]);
+        assert_eq!(d.with_cols(3).row(0), &[1.0, 2.0, 0.0]);
+        assert_eq!(d.with_cols(1).row(1), &[3.0]);
+    }
+
+    #[test]
+    fn transpose_roundtrip() {
+        let d = Dense::from_rows(&[&[1.0, 2.0, 3.0], &[4.0, 5.0, 6.0]]);
+        assert_eq!(d.transpose().transpose(), d);
+        assert_eq!(d.transpose().get(2, 1), 6.0);
+    }
+
+    #[test]
+    fn norms() {
+        let d = Dense::from_rows(&[&[3.0, 4.0]]);
+        assert!((d.norm_fro() - 5.0).abs() < 1e-12);
+        assert!((d.norm_fro_sq() - 25.0).abs() < 1e-12);
+    }
+}

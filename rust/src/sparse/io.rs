@@ -1,0 +1,172 @@
+//! Sparse matrix I/O: MatrixMarket coordinate text and a compact binary
+//! triplet-stream format (the pipeline's durable-storage interchange).
+
+use std::fs::File;
+use std::io::{BufRead, BufReader, BufWriter, Read, Write};
+use std::path::Path;
+
+use super::coo::{Coo, Entry};
+use crate::error::{Error, Result};
+
+/// Write MatrixMarket coordinate format (`%%MatrixMarket matrix coordinate
+/// real general`, 1-based indices).
+pub fn write_matrix_market(coo: &Coo, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    writeln!(w, "%%MatrixMarket matrix coordinate real general")?;
+    writeln!(w, "{} {} {}", coo.m, coo.n, coo.nnz())?;
+    for e in &coo.entries {
+        writeln!(w, "{} {} {}", e.row + 1, e.col + 1, e.val)?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read MatrixMarket coordinate format.
+pub fn read_matrix_market(path: &Path) -> Result<Coo> {
+    let r = BufReader::new(File::open(path)?);
+    let mut lines = r.lines();
+    let header = lines
+        .next()
+        .ok_or_else(|| Error::Parse("empty file".into()))??;
+    if !header.starts_with("%%MatrixMarket matrix coordinate real") {
+        return Err(Error::Parse(format!("unsupported header: {header}")));
+    }
+    let mut size_line = None;
+    for line in lines.by_ref() {
+        let line = line?;
+        if !line.starts_with('%') && !line.trim().is_empty() {
+            size_line = Some(line);
+            break;
+        }
+    }
+    let size_line = size_line.ok_or_else(|| Error::Parse("missing size line".into()))?;
+    let dims: Vec<usize> = size_line
+        .split_whitespace()
+        .map(|t| t.parse().map_err(|_| Error::Parse(format!("bad size {t}"))))
+        .collect::<Result<_>>()?;
+    if dims.len() != 3 {
+        return Err(Error::Parse("size line needs m n nnz".into()));
+    }
+    let (m, n, nnz) = (dims[0], dims[1], dims[2]);
+    let mut entries = Vec::with_capacity(nnz);
+    for line in lines {
+        let line = line?;
+        let t = line.trim();
+        if t.is_empty() || t.starts_with('%') {
+            continue;
+        }
+        let mut it = t.split_whitespace();
+        let (i, j, v) = (
+            it.next().ok_or_else(|| Error::Parse("short row".into()))?,
+            it.next().ok_or_else(|| Error::Parse("short row".into()))?,
+            it.next().ok_or_else(|| Error::Parse("short row".into()))?,
+        );
+        let i: usize = i.parse().map_err(|_| Error::Parse(format!("bad row {i}")))?;
+        let j: usize = j.parse().map_err(|_| Error::Parse(format!("bad col {j}")))?;
+        let v: f32 = v.parse().map_err(|_| Error::Parse(format!("bad val {v}")))?;
+        if i == 0 || j == 0 {
+            return Err(Error::Parse("MatrixMarket is 1-based".into()));
+        }
+        entries.push(Entry::new((i - 1) as u32, (j - 1) as u32, v));
+    }
+    if entries.len() != nnz {
+        return Err(Error::Parse(format!("expected {nnz} entries, got {}", entries.len())));
+    }
+    Coo::from_entries(m, n, entries)
+}
+
+const BIN_MAGIC: &[u8; 8] = b"MSKTRP01";
+
+/// Write the binary triplet-stream format: magic, m, n, nnz (LE u64), then
+/// packed `(u32 row, u32 col, f32 val)` records.
+pub fn write_binary(coo: &Coo, path: &Path) -> Result<()> {
+    let mut w = BufWriter::new(File::create(path)?);
+    w.write_all(BIN_MAGIC)?;
+    w.write_all(&(coo.m as u64).to_le_bytes())?;
+    w.write_all(&(coo.n as u64).to_le_bytes())?;
+    w.write_all(&(coo.nnz() as u64).to_le_bytes())?;
+    for e in &coo.entries {
+        w.write_all(&e.row.to_le_bytes())?;
+        w.write_all(&e.col.to_le_bytes())?;
+        w.write_all(&e.val.to_le_bytes())?;
+    }
+    w.flush()?;
+    Ok(())
+}
+
+/// Read the binary triplet-stream format.
+pub fn read_binary(path: &Path) -> Result<Coo> {
+    let mut r = BufReader::new(File::open(path)?);
+    let mut magic = [0u8; 8];
+    r.read_exact(&mut magic)?;
+    if &magic != BIN_MAGIC {
+        return Err(Error::Parse("bad magic for binary triplet file".into()));
+    }
+    let mut u64buf = [0u8; 8];
+    r.read_exact(&mut u64buf)?;
+    let m = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let n = u64::from_le_bytes(u64buf) as usize;
+    r.read_exact(&mut u64buf)?;
+    let nnz = u64::from_le_bytes(u64buf) as usize;
+    let mut entries = Vec::with_capacity(nnz);
+    let mut rec = [0u8; 12];
+    for _ in 0..nnz {
+        r.read_exact(&mut rec)?;
+        entries.push(Entry::new(
+            u32::from_le_bytes(rec[0..4].try_into().unwrap()),
+            u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+            f32::from_le_bytes(rec[8..12].try_into().unwrap()),
+        ));
+    }
+    Coo::from_entries(m, n, entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> Coo {
+        Coo::from_entries(
+            3,
+            5,
+            vec![Entry::new(0, 4, 1.25), Entry::new(2, 0, -3.5), Entry::new(1, 1, 0.125)],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn matrix_market_roundtrip() {
+        let dir = std::env::temp_dir().join("matsketch_io_test_mm");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.mtx");
+        let a = sample();
+        write_matrix_market(&a, &path).unwrap();
+        let b = read_matrix_market(&path).unwrap();
+        assert_eq!(a.m, b.m);
+        assert_eq!(a.n, b.n);
+        assert_eq!(a.entries, b.entries);
+    }
+
+    #[test]
+    fn binary_roundtrip() {
+        let dir = std::env::temp_dir().join("matsketch_io_test_bin");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("a.bin");
+        let a = sample();
+        write_binary(&a, &path).unwrap();
+        let b = read_binary(&path).unwrap();
+        assert_eq!(a.entries, b.entries);
+        assert_eq!((a.m, a.n), (b.m, b.n));
+    }
+
+    #[test]
+    fn rejects_bad_files() {
+        let dir = std::env::temp_dir().join("matsketch_io_test_bad");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("junk.mtx");
+        std::fs::write(&path, "not a matrix").unwrap();
+        assert!(read_matrix_market(&path).is_err());
+        assert!(read_binary(&path).is_err());
+    }
+}

@@ -1,0 +1,15 @@
+//! Sparse and dense matrix substrate.
+//!
+//! * [`Coo`] — triplet form, the natural streaming/interchange format.
+//! * [`Csr`] — compressed sparse rows, the compute format (SpMV/SpMM).
+//! * [`Dense`] — row-major dense blocks fed to the XLA runtime.
+//! * [`io`] — MatrixMarket + binary triplet-stream readers/writers.
+
+pub mod coo;
+pub mod csr;
+pub mod dense;
+pub mod io;
+
+pub use coo::{Coo, Entry};
+pub use csr::Csr;
+pub use dense::Dense;

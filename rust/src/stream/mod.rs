@@ -1,0 +1,35 @@
+//! Entry streams: the arbitrary-order sources the coordinator ingests.
+//!
+//! The paper's model presents non-zeros one at a time in arbitrary order;
+//! [`EntryStream`] abstracts the source (in-memory, shuffled, file-backed)
+//! so the pipeline code is identical for all of them.
+
+pub mod source;
+
+pub use source::{FileStream, ShuffledStream, VecStream};
+
+use crate::sparse::Entry;
+
+/// A finite stream of matrix non-zeros with known shape.
+pub trait EntryStream {
+    /// `(m, n)` of the underlying matrix.
+    fn shape(&self) -> (usize, usize);
+    /// Next entry, or `None` at end of stream.
+    fn next_entry(&mut self) -> Option<Entry>;
+    /// Optional size hint (number of remaining entries).
+    fn size_hint(&self) -> Option<usize> {
+        None
+    }
+}
+
+impl<S: EntryStream + ?Sized> EntryStream for Box<S> {
+    fn shape(&self) -> (usize, usize) {
+        (**self).shape()
+    }
+    fn next_entry(&mut self) -> Option<Entry> {
+        (**self).next_entry()
+    }
+    fn size_hint(&self) -> Option<usize> {
+        (**self).size_hint()
+    }
+}

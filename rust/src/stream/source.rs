@@ -1,0 +1,179 @@
+//! Concrete entry-stream sources.
+
+use std::fs::File;
+use std::io::{BufReader, Read};
+use std::path::Path;
+
+use super::EntryStream;
+use crate::error::{Error, Result};
+use crate::sparse::{Coo, Entry};
+use crate::util::rng::Rng;
+
+/// In-memory stream over a COO's entries, in stored order.
+pub struct VecStream {
+    m: usize,
+    n: usize,
+    entries: std::vec::IntoIter<Entry>,
+}
+
+impl VecStream {
+    /// Stream a COO matrix (consumes a copy of the entries).
+    pub fn new(coo: &Coo) -> VecStream {
+        VecStream { m: coo.m, n: coo.n, entries: coo.entries.clone().into_iter() }
+    }
+}
+
+impl EntryStream for VecStream {
+    fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+    fn next_entry(&mut self) -> Option<Entry> {
+        self.entries.next()
+    }
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.entries.len())
+    }
+}
+
+/// In-memory stream in a seeded *random* order — models the paper's
+/// "non-zeros presented in arbitrary order".
+pub struct ShuffledStream {
+    inner: VecStream,
+}
+
+impl ShuffledStream {
+    /// Shuffle the COO's entries with the given seed and stream them.
+    pub fn new(coo: &Coo, seed: u64) -> ShuffledStream {
+        let mut entries = coo.entries.clone();
+        Rng::new(seed).shuffle(&mut entries);
+        ShuffledStream {
+            inner: VecStream { m: coo.m, n: coo.n, entries: entries.into_iter() },
+        }
+    }
+}
+
+impl EntryStream for ShuffledStream {
+    fn shape(&self) -> (usize, usize) {
+        self.inner.shape()
+    }
+    fn next_entry(&mut self) -> Option<Entry> {
+        self.inner.next_entry()
+    }
+    fn size_hint(&self) -> Option<usize> {
+        self.inner.size_hint()
+    }
+}
+
+/// Streaming reader over the binary triplet file format
+/// (`sparse::io::write_binary`) — entries never fully materialize in
+/// memory, matching the "durable storage, random access prohibitive" mode.
+pub struct FileStream {
+    m: usize,
+    n: usize,
+    remaining: usize,
+    reader: BufReader<File>,
+}
+
+impl FileStream {
+    /// Open a binary triplet file.
+    pub fn open(path: &Path) -> Result<FileStream> {
+        let mut reader = BufReader::new(File::open(path)?);
+        let mut magic = [0u8; 8];
+        reader.read_exact(&mut magic)?;
+        if &magic != b"MSKTRP01" {
+            return Err(Error::Parse("bad magic".into()));
+        }
+        let mut b = [0u8; 8];
+        reader.read_exact(&mut b)?;
+        let m = u64::from_le_bytes(b) as usize;
+        reader.read_exact(&mut b)?;
+        let n = u64::from_le_bytes(b) as usize;
+        reader.read_exact(&mut b)?;
+        let nnz = u64::from_le_bytes(b) as usize;
+        Ok(FileStream { m, n, remaining: nnz, reader })
+    }
+}
+
+impl EntryStream for FileStream {
+    fn shape(&self) -> (usize, usize) {
+        (self.m, self.n)
+    }
+    fn next_entry(&mut self) -> Option<Entry> {
+        if self.remaining == 0 {
+            return None;
+        }
+        let mut rec = [0u8; 12];
+        if self.reader.read_exact(&mut rec).is_err() {
+            self.remaining = 0;
+            return None;
+        }
+        self.remaining -= 1;
+        Some(Entry::new(
+            u32::from_le_bytes(rec[0..4].try_into().unwrap()),
+            u32::from_le_bytes(rec[4..8].try_into().unwrap()),
+            f32::from_le_bytes(rec[8..12].try_into().unwrap()),
+        ))
+    }
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.remaining)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sparse::io::write_binary;
+
+    fn sample() -> Coo {
+        let mut coo = Coo::new(3, 4);
+        for (i, j, v) in [(0u32, 1u32, 1.0f32), (1, 0, -2.0), (2, 3, 0.5)] {
+            coo.push(i, j, v);
+        }
+        coo
+    }
+
+    #[test]
+    fn vec_stream_yields_all() {
+        let coo = sample();
+        let mut s = VecStream::new(&coo);
+        assert_eq!(s.shape(), (3, 4));
+        assert_eq!(s.size_hint(), Some(3));
+        let mut count = 0;
+        while s.next_entry().is_some() {
+            count += 1;
+        }
+        assert_eq!(count, 3);
+    }
+
+    #[test]
+    fn shuffled_stream_is_permutation() {
+        let mut coo = Coo::new(1, 1000);
+        for j in 0..1000u32 {
+            coo.push(0, j, j as f32 + 1.0);
+        }
+        let mut s = ShuffledStream::new(&coo, 42);
+        let mut cols: Vec<u32> = Vec::new();
+        while let Some(e) = s.next_entry() {
+            cols.push(e.col);
+        }
+        assert_ne!(cols, (0..1000).collect::<Vec<_>>());
+        cols.sort_unstable();
+        assert_eq!(cols, (0..1000).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn file_stream_roundtrip() {
+        let dir = std::env::temp_dir().join("matsketch_stream_test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("s.bin");
+        let coo = sample();
+        write_binary(&coo, &path).unwrap();
+        let mut s = FileStream::open(&path).unwrap();
+        assert_eq!(s.shape(), (3, 4));
+        let mut got = Vec::new();
+        while let Some(e) = s.next_entry() {
+            got.push(e);
+        }
+        assert_eq!(got, coo.entries);
+    }
+}

@@ -1,0 +1,5 @@
+//! Test support utilities, including the mini property-testing harness
+//! ([`prop`]) that stands in for `proptest` (unavailable in the offline
+//! registry — DESIGN.md §4).
+
+pub mod prop;

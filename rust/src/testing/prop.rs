@@ -1,0 +1,128 @@
+//! A compact property-based testing harness.
+//!
+//! `proptest` cannot be fetched in this image, so this module provides the
+//! pieces matsketch's invariant tests need: seeded case generation, a
+//! configurable case count, and greedy input shrinking on failure (halving
+//! numeric parameters while the property still fails), with the failing
+//! seed printed for reproduction.
+
+use crate::util::rng::Rng;
+
+/// Configuration for a property run.
+#[derive(Clone, Copy, Debug)]
+pub struct PropConfig {
+    /// Number of random cases.
+    pub cases: usize,
+    /// Base seed (case i uses `seed + i`).
+    pub seed: u64,
+}
+
+impl Default for PropConfig {
+    fn default() -> Self {
+        PropConfig { cases: 64, seed: 0xC0FFEE }
+    }
+}
+
+/// Run `property` over `cases` generated inputs. `generate` builds an
+/// input from an [`Rng`]; `shrink` proposes smaller variants of a failing
+/// input (return an empty vec to stop). Panics with the seed and the
+/// smallest failing input's debug representation.
+pub fn check<T: std::fmt::Debug + Clone>(
+    cfg: PropConfig,
+    mut generate: impl FnMut(&mut Rng) -> T,
+    mut shrink: impl FnMut(&T) -> Vec<T>,
+    mut property: impl FnMut(&T) -> bool,
+) {
+    for case in 0..cfg.cases {
+        let seed = cfg.seed.wrapping_add(case as u64);
+        let mut rng = Rng::new(seed);
+        let input = generate(&mut rng);
+        if property(&input) {
+            continue;
+        }
+        // shrink greedily
+        let mut smallest = input.clone();
+        loop {
+            let mut advanced = false;
+            for cand in shrink(&smallest) {
+                if !property(&cand) {
+                    smallest = cand;
+                    advanced = true;
+                    break;
+                }
+            }
+            if !advanced {
+                break;
+            }
+        }
+        panic!(
+            "property failed (seed={seed}, case={case});\n  original: {input:?}\n  shrunk:   {smallest:?}"
+        );
+    }
+}
+
+/// Convenience shrinker for `Vec<T>`: propose halves and single-element
+/// removals.
+pub fn shrink_vec<T: Clone>(v: &[T]) -> Vec<Vec<T>> {
+    let mut out = Vec::new();
+    if v.len() > 1 {
+        out.push(v[..v.len() / 2].to_vec());
+        out.push(v[v.len() / 2..].to_vec());
+    }
+    if v.len() > 1 && v.len() <= 16 {
+        for i in 0..v.len() {
+            let mut w = v.to_vec();
+            w.remove(i);
+            out.push(w);
+        }
+    }
+    out
+}
+
+/// Convenience shrinker for positive integers: halvings toward 1.
+pub fn shrink_u64(x: &u64) -> Vec<u64> {
+    if *x <= 1 {
+        vec![]
+    } else {
+        vec![x / 2, x - 1]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let mut ran = 0;
+        check(
+            PropConfig { cases: 10, seed: 1 },
+            |rng| rng.u64_below(100),
+            |x| shrink_u64(x),
+            |_| {
+                ran += 1;
+                true
+            },
+        );
+        assert_eq!(ran, 10);
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn failing_property_panics_with_shrunk_input() {
+        check(
+            PropConfig { cases: 50, seed: 2 },
+            |rng| rng.u64_below(1000) + 10,
+            shrink_u64,
+            |&x| x < 10, // always false
+        );
+    }
+
+    #[test]
+    fn shrinkers_propose_smaller() {
+        assert!(shrink_u64(&100).iter().all(|&x| x < 100));
+        assert!(shrink_u64(&1).is_empty());
+        let halves = shrink_vec(&[1, 2, 3, 4]);
+        assert!(halves.iter().all(|h| h.len() < 4));
+    }
+}

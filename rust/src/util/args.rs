@@ -1,0 +1,118 @@
+//! Tiny CLI argument parser (clap is unavailable offline).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, and positional
+//! arguments; each binary declares its options and gets `--help` text for
+//! free.
+
+use std::collections::BTreeMap;
+
+use crate::error::{Error, Result};
+
+/// Parsed command line.
+#[derive(Debug, Default)]
+pub struct Args {
+    opts: BTreeMap<String, String>,
+    flags: Vec<String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse raw args (excluding argv[0]). `flag_names` lists boolean
+    /// options that take no value.
+    pub fn parse(raw: impl IntoIterator<Item = String>, flag_names: &[&str]) -> Result<Args> {
+        let mut out = Args::default();
+        let mut it = raw.into_iter().peekable();
+        while let Some(tok) = it.next() {
+            if let Some(body) = tok.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.opts.insert(k.to_string(), v.to_string());
+                } else if flag_names.contains(&body) {
+                    out.flags.push(body.to_string());
+                } else {
+                    let v = it
+                        .next()
+                        .ok_or_else(|| Error::invalid(format!("--{body} expects a value")))?;
+                    out.opts.insert(body.to_string(), v);
+                }
+            } else {
+                out.positional.push(tok);
+            }
+        }
+        Ok(out)
+    }
+
+    /// Parse from the process environment.
+    pub fn from_env(flag_names: &[&str]) -> Result<Args> {
+        Args::parse(std::env::args().skip(1), flag_names)
+    }
+
+    /// Option lookup.
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.opts.get(key).map(|s| s.as_str())
+    }
+
+    /// Option with default.
+    pub fn get_or<'a>(&'a self, key: &str, default: &'a str) -> &'a str {
+        self.get(key).unwrap_or(default)
+    }
+
+    /// Typed option lookup.
+    pub fn get_parse<T: std::str::FromStr>(&self, key: &str) -> Result<Option<T>> {
+        match self.get(key) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<T>()
+                .map(Some)
+                .map_err(|_| Error::invalid(format!("--{key}: cannot parse {v:?}"))),
+        }
+    }
+
+    /// Typed option with default.
+    pub fn get_parse_or<T: std::str::FromStr>(&self, key: &str, default: T) -> Result<T> {
+        Ok(self.get_parse(key)?.unwrap_or(default))
+    }
+
+    /// Boolean flag presence.
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+
+    /// Positional arguments.
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sv(xs: &[&str]) -> Vec<String> {
+        xs.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_mixed_forms() {
+        let a = Args::parse(sv(&["cmd", "--s", "1000", "--out=reports", "--verbose", "extra"]),
+                            &["verbose"]).unwrap();
+        assert_eq!(a.positional(), &["cmd".to_string(), "extra".to_string()]);
+        assert_eq!(a.get("s"), Some("1000"));
+        assert_eq!(a.get("out"), Some("reports"));
+        assert!(a.flag("verbose"));
+        assert!(!a.flag("quiet"));
+    }
+
+    #[test]
+    fn typed_accessors() {
+        let a = Args::parse(sv(&["--s", "123", "--eps", "0.5"]), &[]).unwrap();
+        assert_eq!(a.get_parse_or::<usize>("s", 0).unwrap(), 123);
+        assert_eq!(a.get_parse_or::<f64>("eps", 0.0).unwrap(), 0.5);
+        assert_eq!(a.get_parse_or::<usize>("missing", 7).unwrap(), 7);
+        assert!(a.get_parse::<usize>("eps").is_err());
+    }
+
+    #[test]
+    fn missing_value_errors() {
+        assert!(Args::parse(sv(&["--s"]), &[]).is_err());
+    }
+}

@@ -1,0 +1,78 @@
+//! Small self-contained utilities.
+//!
+//! The image's offline crate registry only carries the `xla` dependency
+//! tree, so the usual ecosystem crates (`rand`, `serde`, `clap`, `log`
+//! facade impls) are replaced by the minimal implementations here — see
+//! DESIGN.md §4.
+
+pub mod args;
+pub mod json;
+pub mod logging;
+pub mod rng;
+pub mod stats;
+
+/// Round `x` up to the next multiple of `to` (`to > 0`).
+pub fn round_up(x: usize, to: usize) -> usize {
+    debug_assert!(to > 0);
+    x.div_ceil(to) * to
+}
+
+/// Human-readable byte count.
+pub fn human_bytes(b: usize) -> String {
+    const UNITS: [&str; 5] = ["B", "KiB", "MiB", "GiB", "TiB"];
+    let mut v = b as f64;
+    let mut u = 0;
+    while v >= 1024.0 && u + 1 < UNITS.len() {
+        v /= 1024.0;
+        u += 1;
+    }
+    if u == 0 {
+        format!("{b} B")
+    } else {
+        format!("{v:.2} {}", UNITS[u])
+    }
+}
+
+/// Logarithmically spaced integer grid in `[lo, hi]` with `count` points,
+/// deduplicated and sorted — used for the Figure-1 sample-budget sweeps.
+pub fn log_space(lo: usize, hi: usize, count: usize) -> Vec<usize> {
+    assert!(lo >= 1 && hi >= lo && count >= 1);
+    let (llo, lhi) = ((lo as f64).ln(), (hi as f64).ln());
+    let mut out: Vec<usize> = (0..count)
+        .map(|i| {
+            let t = if count == 1 { 0.0 } else { i as f64 / (count - 1) as f64 };
+            (llo + t * (lhi - llo)).exp().round() as usize
+        })
+        .collect();
+    out.sort_unstable();
+    out.dedup();
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn round_up_works() {
+        assert_eq!(round_up(0, 256), 0);
+        assert_eq!(round_up(1, 256), 256);
+        assert_eq!(round_up(256, 256), 256);
+        assert_eq!(round_up(257, 256), 512);
+    }
+
+    #[test]
+    fn log_space_endpoints_and_monotone() {
+        let g = log_space(10, 100_000, 12);
+        assert_eq!(*g.first().unwrap(), 10);
+        assert_eq!(*g.last().unwrap(), 100_000);
+        assert!(g.windows(2).all(|w| w[0] < w[1]));
+    }
+
+    #[test]
+    fn human_bytes_scales() {
+        assert_eq!(human_bytes(17), "17 B");
+        assert_eq!(human_bytes(2048), "2.00 KiB");
+        assert_eq!(human_bytes(3 * 1024 * 1024), "3.00 MiB");
+    }
+}

@@ -1,0 +1,115 @@
+//! Integration: the experiment drivers end-to-end on reduced workloads —
+//! every paper artifact's code path runs and produces sane output files.
+
+use matsketch::datasets::{synthetic_cf, DatasetId, SyntheticConfig};
+use matsketch::eval::compression::compression_dataset;
+use matsketch::eval::figure1::{figure1_dataset, Figure1Config};
+use matsketch::eval::tables::{characteristics, write_tables};
+use matsketch::eval::theory::theory_for_profile;
+use matsketch::runtime::RustEngine;
+
+fn tmpdir(name: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("matsketch_eval_{name}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn e1_characteristics_profiles_match_paper_regimes() {
+    // The generators must land in the qualitative regimes the paper's
+    // table reports: synthetic/wiki/enron moderate sr, images sr ≈ 1,
+    // enron extremely sparse, images dense.
+    let syn = characteristics(
+        "synthetic",
+        &DatasetId::Synthetic.generate_small(0).to_csr(),
+        0,
+    );
+    assert!(syn.metrics.stable_rank > 3.0 && syn.metrics.stable_rank < 60.0);
+    let img = characteristics("images", &DatasetId::Images.generate_small(0).to_csr(), 0);
+    assert!(img.metrics.stable_rank < 5.0, "images sr={}", img.metrics.stable_rank);
+    let enr = characteristics("enron", &DatasetId::Enron.generate_small(0).to_csr(), 0);
+    let enr_density =
+        enr.metrics.nnz as f64 / (enr.metrics.m as f64 * enr.metrics.n as f64);
+    let img_density =
+        img.metrics.nnz as f64 / (img.metrics.m as f64 * img.metrics.n as f64);
+    assert!(enr_density < 0.05 && img_density > 0.5);
+    // nrd/n must be well below 1 for the text matrices (the §4 key ratio)
+    assert!(enr.metrics.numeric_row_density / enr.metrics.n as f64 <= 0.2);
+}
+
+#[test]
+fn e1_e4_tables_written() {
+    let dir = tmpdir("tables");
+    let rows = vec![characteristics(
+        "synthetic",
+        &synthetic_cf(&SyntheticConfig { n: 500, ..Default::default() }).to_csr(),
+        0,
+    )];
+    write_tables(&dir, &rows).unwrap();
+    let t = std::fs::read_to_string(dir.join("table_characteristics.csv")).unwrap();
+    assert!(t.contains("synthetic"));
+    assert!(std::fs::read_to_string(dir.join("table_sample_complexity.csv"))
+        .unwrap()
+        .contains("synthetic"));
+}
+
+#[test]
+fn e2_figure1_shape_bernstein_competitive() {
+    // Paper insight 1: Bernstein is never (meaningfully) worse than any
+    // other method. Check on the synthetic matrix at the largest budget.
+    let a = synthetic_cf(&SyntheticConfig { n: 1_500, ..Default::default() }).to_csr();
+    let cfg = Figure1Config {
+        k: 10,
+        svd_iters: 7,
+        budget_points: 3,
+        budget_lo: 0.1,
+        budget_hi: 1.0,
+        seed: 2,
+        ..Default::default()
+    };
+    let pts = figure1_dataset("synthetic", &a, &cfg, &RustEngine).unwrap();
+    let max_s = pts.iter().map(|p| p.s).max().unwrap();
+    let at = |m: &str| {
+        pts.iter()
+            .find(|p| p.s == max_s && p.method == m)
+            .map(|p| p.left)
+            .unwrap_or(0.0)
+    };
+    let bern = at("Bernstein");
+    for m in ["L2", "L2 trim 0.01"] {
+        assert!(
+            bern >= at(m) - 0.05,
+            "Bernstein {bern} vs {m} {} at s={max_s}",
+            at(m)
+        );
+    }
+}
+
+#[test]
+fn e3_compression_in_paper_range() {
+    let a = synthetic_cf(&SyntheticConfig { n: 2_000, ..Default::default() }).to_csr();
+    let pts = compression_dataset("synthetic", &a, &[20_000, 100_000], 0).unwrap();
+    for p in &pts {
+        // §1: 5–22 bits/sample measured on the paper's matrices; allow a
+        // wider envelope on the scaled data but require the same order.
+        assert!(p.bits_per_sample < 64.0, "{p:?}");
+        assert!(p.vs_raw_coo < 1.0, "{p:?}");
+    }
+}
+
+#[test]
+fn e6_theory_interpolation_on_real_profile() {
+    let a = DatasetId::Enron.generate_small(1);
+    let z = a.row_l1_norms();
+    let nnz = a.nnz() as u64;
+    let pts = theory_for_profile("enron", &z, a.n, &[nnz / 100, nnz * 100], 0.1, 0)
+        .unwrap();
+    // Bernstein never loses on eps5
+    for p in &pts {
+        assert!(p.eps5_bernstein <= p.eps5_l1 * (1.0 + 1e-9));
+        assert!(p.eps5_bernstein <= p.eps5_rowl1 * (1.0 + 1e-9));
+    }
+    // interpolation direction
+    assert!(pts[0].tv_from_l1 < pts[0].tv_from_rowl1);
+    assert!(pts[1].tv_from_rowl1 < pts[1].tv_from_l1);
+}

@@ -1,0 +1,117 @@
+//! Integration: the full streaming pipeline against the offline
+//! alias-table path — same distribution, statistically indistinguishable
+//! sketches — plus end-to-end file-based runs (gen → stream → sketch →
+//! encode → decode).
+
+use matsketch::coordinator::{sketch_matrix, sketch_stream, PipelineConfig};
+use matsketch::datasets::{enron_like, synthetic_cf, EnronConfig, SyntheticConfig};
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
+use matsketch::sparse::io::{read_binary, write_binary};
+use matsketch::stream::{FileStream, ShuffledStream};
+
+#[test]
+fn streaming_matches_offline_in_expectation() {
+    // Both paths draw s i.i.d. samples from the same p; compare per-row
+    // expected counts over repeated runs.
+    let a = synthetic_cf(&SyntheticConfig { m: 40, n: 400, ..Default::default() });
+    let csr = a.to_csr();
+    let stats = MatrixStats::from_coo(&a);
+    let s = 2_000u64;
+    let trials = 25u64;
+    let mut offline = vec![0f64; a.m];
+    let mut streaming = vec![0f64; a.m];
+    for t in 0..trials {
+        let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(t);
+        let sk1 = sketch_offline(&csr, &plan).unwrap();
+        for e in &sk1.entries {
+            offline[e.row as usize] += e.count as f64;
+        }
+        let (sk2, _) = sketch_stream(
+            ShuffledStream::new(&a, 1000 + t),
+            &stats,
+            &plan,
+            &PipelineConfig { workers: 3, ..Default::default() },
+        )
+        .unwrap();
+        for e in &sk2.entries {
+            streaming[e.row as usize] += e.count as f64;
+        }
+    }
+    let total = (s * trials) as f64;
+    for i in 0..a.m {
+        let p1 = offline[i] / total;
+        let p2 = streaming[i] / total;
+        // row masses are ~rho_i (up to 1/40 each); allow 4-sigma-ish slack
+        let sigma = (p1.max(1e-4) / total).sqrt();
+        assert!(
+            (p1 - p2).abs() < 6.0 * sigma + 0.004,
+            "row {i}: offline {p1:.5} vs streaming {p2:.5}"
+        );
+    }
+}
+
+#[test]
+fn file_based_end_to_end() {
+    let dir = std::env::temp_dir().join("matsketch_it_pipeline");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("enron.bin");
+    let a = enron_like(&EnronConfig { m: 300, n: 3_000, ..Default::default() });
+    write_binary(&a, &path).unwrap();
+
+    // read back identical
+    let a2 = read_binary(&path).unwrap();
+    assert_eq!(a.entries.len(), a2.entries.len());
+
+    // pass 1: stats from the file stream
+    let mut stats = MatrixStats::new(a.m, a.n);
+    {
+        use matsketch::stream::EntryStream;
+        let mut st = FileStream::open(&path).unwrap();
+        while let Some(e) = st.next_entry() {
+            stats.push(&e);
+        }
+    }
+    assert_eq!(stats.nnz, a.nnz() as u64);
+
+    // pass 2: streaming sketch from the file
+    let plan = SketchPlan::new(DistributionKind::Bernstein, 5_000).with_seed(3);
+    let stream = FileStream::open(&path).unwrap();
+    let (sketch, metrics) =
+        sketch_stream(stream, &stats, &plan, &PipelineConfig::default()).unwrap();
+    assert_eq!(metrics.merged_samples, 5_000);
+    assert_eq!(metrics.ingested, a.nnz() as u64);
+
+    // encode → decode roundtrip
+    let enc = encode_sketch(&sketch).unwrap();
+    let back = decode_sketch(&enc, &sketch.method).unwrap();
+    assert_eq!(back.nnz(), sketch.nnz());
+    assert!(enc.bits_per_sample() < 120.0);
+}
+
+#[test]
+fn convenience_sketch_matrix_works_for_all_methods() {
+    let a = synthetic_cf(&SyntheticConfig { m: 30, n: 300, ..Default::default() });
+    for kind in DistributionKind::figure1_set() {
+        let plan = SketchPlan::new(kind, 1_000).with_seed(5);
+        match sketch_matrix(&a, &plan) {
+            Ok(sk) => {
+                let total: u64 = sk.entries.iter().map(|e| e.count as u64).sum();
+                assert_eq!(total, 1_000, "{}", kind.name());
+            }
+            Err(e) => panic!("{} failed: {e}", kind.name()),
+        }
+    }
+}
+
+#[test]
+fn backpressure_with_tiny_channels_still_correct() {
+    let a = synthetic_cf(&SyntheticConfig { m: 50, n: 2_000, ..Default::default() });
+    let stats = MatrixStats::from_coo(&a);
+    let plan = SketchPlan::new(DistributionKind::RowL1, 3_000).with_seed(9);
+    let cfg = PipelineConfig { workers: 4, channel_cap: 1, batch: 16 };
+    let (sk, metrics) =
+        sketch_stream(ShuffledStream::new(&a, 1), &stats, &plan, &cfg).unwrap();
+    assert_eq!(metrics.merged_samples, 3_000);
+    assert_eq!(sk.entries.iter().map(|e| e.count as u64).sum::<u64>(), 3_000);
+}

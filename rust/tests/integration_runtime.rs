@@ -1,0 +1,128 @@
+//! Integration: the XLA engine (AOT artifacts via PJRT) cross-validated
+//! against the pure-Rust engine on every DenseEngine op, plus an
+//! end-to-end SVD comparison. Skipped gracefully when `artifacts/` has
+//! not been built (`make artifacts`).
+
+use matsketch::linalg::svd::topk_svd;
+use matsketch::runtime::{DenseEngine, RustEngine, XlaEngine};
+use matsketch::sparse::{Coo, Dense};
+use matsketch::util::rng::Rng;
+
+fn xla() -> Option<XlaEngine> {
+    let dir = std::path::Path::new("artifacts");
+    match XlaEngine::from_dir(dir) {
+        Ok(e) => Some(e),
+        Err(err) => {
+            eprintln!("skipping XLA integration test (artifacts not built): {err}");
+            None
+        }
+    }
+}
+
+fn close(a: f64, b: f64, tol: f64, what: &str) {
+    // relative tolerance with a small absolute floor: f32-accumulated
+    // entries that are near zero (cancellation) otherwise dominate the
+    // relative error even though they are exact to f32 resolution.
+    let denom = a.abs().max(b.abs()).max(1e-9);
+    assert!((a - b).abs() < tol * denom + 1e-4, "{what}: {a} vs {b}");
+}
+
+#[test]
+fn gram_matches_rust_engine() {
+    let Some(xla) = xla() else { return };
+    let mut rng = Rng::new(0);
+    for rows in [100usize, 256, 300, 2048, 3000] {
+        for k in [4usize, 20, 32] {
+            let y = Dense::randn(rows, k, &mut rng);
+            let g1 = xla.gram(&y).unwrap();
+            let g2 = RustEngine.gram(&y).unwrap();
+            for i in 0..k * k {
+                close(g1[i], g2[i], 1e-3, &format!("gram[{i}] rows={rows} k={k}"));
+            }
+        }
+    }
+}
+
+#[test]
+fn apply_matches_rust_engine() {
+    let Some(xla) = xla() else { return };
+    let mut rng = Rng::new(1);
+    for rows in [64usize, 256, 1000] {
+        let k = 20;
+        let y = Dense::randn(rows, k, &mut rng);
+        let t: Vec<f64> = (0..k * k).map(|_| rng.normal() * 0.3).collect();
+        let q1 = xla.apply(&y, &t).unwrap();
+        let q2 = RustEngine.apply(&y, &t).unwrap();
+        assert_eq!(q1.rows, rows);
+        assert_eq!(q1.cols, k);
+        for i in 0..rows * k {
+            close(q1.data[i] as f64, q2.data[i] as f64, 2e-3, "apply");
+        }
+    }
+}
+
+#[test]
+fn proj_matches_rust_engine_with_col_windows() {
+    let Some(xla) = xla() else { return };
+    let mut rng = Rng::new(2);
+    // cols > artifact C (512) forces column windowing
+    let (rows, k, cols) = (700usize, 24usize, 1200usize);
+    let q = Dense::randn(rows, k, &mut rng);
+    let a = Dense::randn(rows, cols, &mut rng);
+    let p1 = xla.proj(&q, &a).unwrap();
+    let p2 = RustEngine.proj(&q, &a).unwrap();
+    assert_eq!(p1.rows, k);
+    assert_eq!(p1.cols, cols);
+    for i in 0..k * cols {
+        close(p1.data[i] as f64, p2.data[i] as f64, 5e-3, "proj");
+    }
+}
+
+#[test]
+fn power_iter_matches_rust_engine() {
+    let Some(xla) = xla() else { return };
+    let mut rng = Rng::new(3);
+    for k in [2usize, 8, 32] {
+        // PSD matrix
+        let mfac = Dense::randn(k, k, &mut rng);
+        let g = RustEngine.gram(&mfac).unwrap();
+        let (l1, _v1) = xla.power_iter(&g, k).unwrap();
+        let (l2, _v2) = RustEngine.power_iter(&g, k).unwrap();
+        close(l1, l2, 1e-3, &format!("power_iter k={k}"));
+    }
+}
+
+#[test]
+fn probs_matches_rust_engine() {
+    let Some(xla) = xla() else { return };
+    let mut rng = Rng::new(4);
+    let (rows, cols) = (300usize, 700usize);
+    let a = Dense::randn(rows, cols, &mut rng);
+    let w: Vec<f32> = (0..rows).map(|_| rng.f32() + 0.01).collect();
+    for power in [1u8, 2] {
+        let p1 = xla.probs(&a, &w, power).unwrap();
+        let p2 = RustEngine.probs(&a, &w, power).unwrap();
+        for i in 0..rows * cols {
+            close(p1.data[i] as f64, p2.data[i] as f64, 1e-4, "probs");
+        }
+    }
+}
+
+#[test]
+fn svd_through_xla_engine_matches_rust() {
+    let Some(xla) = xla() else { return };
+    let mut rng = Rng::new(5);
+    let mut coo = Coo::new(80, 400);
+    for i in 0..80u32 {
+        for _ in 0..30 {
+            coo.push(i, rng.usize_below(400) as u32, rng.normal() as f32);
+        }
+    }
+    coo.normalize();
+    let a = coo.to_csr();
+    let s_xla = topk_svd(&a, 6, 10, 7, &xla).unwrap();
+    let s_rust = topk_svd(&a, 6, 10, 7, &RustEngine).unwrap();
+    for (x, r) in s_xla.sigma.iter().zip(s_rust.sigma.iter()) {
+        close(*x, *r, 1e-2, "singular value");
+    }
+}

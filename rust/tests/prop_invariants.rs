@@ -1,0 +1,226 @@
+//! Property-based tests of the coordinator/sampler/codec invariants
+//! (mini-harness in `matsketch::testing::prop`; proptest is unavailable
+//! offline — DESIGN.md §4).
+
+use matsketch::coordinator::{sketch_stream, PipelineConfig};
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::samplers::{binomial, hypergeometric, multinomial_counts, ParallelReservoir};
+use matsketch::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
+use matsketch::sparse::{Coo, Entry};
+use matsketch::stream::VecStream;
+use matsketch::testing::prop::{check, shrink_u64, PropConfig};
+use matsketch::util::rng::Rng;
+
+fn random_coo(rng: &mut Rng, max_m: usize, max_n: usize) -> Coo {
+    let m = 2 + rng.usize_below(max_m - 1);
+    let n = 2 + rng.usize_below(max_n - 1);
+    let nnz = 1 + rng.usize_below(m * n / 2 + 1);
+    let mut coo = Coo::new(m, n);
+    for _ in 0..nnz {
+        coo.push(
+            rng.usize_below(m) as u32,
+            rng.usize_below(n) as u32,
+            (rng.normal() as f32).abs() + 0.01,
+        );
+    }
+    coo.normalize();
+    coo
+}
+
+#[test]
+fn prop_binomial_within_support() {
+    check(
+        PropConfig { cases: 200, seed: 10 },
+        |rng| (rng.u64_below(100_000) + 1, rng.f64()),
+        |_| vec![],
+        |&(n, p)| {
+            let mut rng = Rng::new(n ^ 0x1234);
+            let x = binomial(&mut rng, n, p);
+            x <= n
+        },
+    );
+}
+
+#[test]
+fn prop_hypergeometric_within_bounds() {
+    check(
+        PropConfig { cases: 200, seed: 11 },
+        |rng| {
+            let s = rng.u64_below(10_000) + 1;
+            let l = rng.u64_below(s + 1);
+            let k = rng.u64_below(s + 1);
+            (s, l, k)
+        },
+        |_| vec![],
+        |&(s, l, k)| {
+            let mut rng = Rng::new(s.wrapping_mul(31) ^ l);
+            let t = hypergeometric(&mut rng, s, l, k);
+            t <= k && t <= l && t + (s - l) >= k
+        },
+    );
+}
+
+#[test]
+fn prop_multinomial_conserves_total() {
+    check(
+        PropConfig { cases: 100, seed: 12 },
+        |rng| {
+            let s = rng.u64_below(10_000);
+            let k = 1 + rng.usize_below(20);
+            let w: Vec<f64> = (0..k).map(|_| rng.f64() * 3.0).collect();
+            (s, w)
+        },
+        |_| vec![],
+        |(s, w)| {
+            if w.iter().sum::<f64>() <= 0.0 {
+                return true; // degenerate weights are rejected elsewhere
+            }
+            let mut rng = Rng::new(*s ^ 99);
+            multinomial_counts(&mut rng, *s, w).iter().sum::<u64>() == *s
+        },
+    );
+}
+
+#[test]
+fn prop_reservoir_returns_exactly_s() {
+    check(
+        PropConfig { cases: 60, seed: 13 },
+        |rng| {
+            let s = rng.u64_below(500) + 1;
+            let items = 1 + rng.usize_below(2_000);
+            (s, items as u64)
+        },
+        |&(s, items)| shrink_u64(&s).into_iter().map(|s2| (s2.max(1), items)).collect(),
+        |&(s, items)| {
+            let mut r = ParallelReservoir::new(s, s ^ items);
+            let mut rng = Rng::new(items);
+            for i in 0..items {
+                r.push(i, rng.f64_open() * 5.0);
+            }
+            r.finalize().iter().map(|x| x.count).sum::<u64>() == s
+        },
+    );
+}
+
+#[test]
+fn prop_offline_sketch_count_and_support() {
+    // total draws == s and every sketch coordinate exists in A
+    check(
+        PropConfig { cases: 24, seed: 14 },
+        |rng| {
+            let coo = random_coo(rng, 20, 40);
+            let s = rng.u64_below(2_000) + 1;
+            (coo.m, coo.n, coo.entries.clone(), s)
+        },
+        |_| vec![],
+        |(m, n, entries, s)| {
+            let coo = Coo::from_entries(*m, *n, entries.clone()).unwrap();
+            let a = coo.to_csr();
+            let plan = SketchPlan::new(DistributionKind::Bernstein, *s).with_seed(*s);
+            let sk = sketch_offline(&a, &plan).unwrap();
+            let total: u64 = sk.entries.iter().map(|e| e.count as u64).sum();
+            let support_ok = sk.entries.iter().all(|e| {
+                entries.iter().any(|x| x.row == e.row && x.col == e.col)
+            });
+            total == *s && support_ok
+        },
+    );
+}
+
+#[test]
+fn prop_pipeline_invariants() {
+    // merged == s; ingested == nnz; every coordinate in support;
+    // sketch is row-major sorted and duplicate-free.
+    check(
+        PropConfig { cases: 16, seed: 15 },
+        |rng| {
+            let coo = random_coo(rng, 16, 60);
+            let s = rng.u64_below(800) + 1;
+            let workers = 1 + rng.usize_below(4);
+            (coo.m, coo.n, coo.entries.clone(), s, workers)
+        },
+        |_| vec![],
+        |(m, n, entries, s, workers)| {
+            let coo = Coo::from_entries(*m, *n, entries.clone()).unwrap();
+            let stats = MatrixStats::from_coo(&coo);
+            let plan = SketchPlan::new(DistributionKind::L1, *s).with_seed(*s ^ 7);
+            let cfg = PipelineConfig { workers: *workers, ..Default::default() };
+            let (sk, metrics) =
+                sketch_stream(VecStream::new(&coo), &stats, &plan, &cfg).unwrap();
+            let sorted = sk
+                .entries
+                .windows(2)
+                .all(|w| (w[0].row, w[0].col) < (w[1].row, w[1].col));
+            metrics.merged_samples == *s
+                && metrics.ingested == coo.nnz() as u64
+                && sorted
+        },
+    );
+}
+
+#[test]
+fn prop_codec_roundtrip() {
+    check(
+        PropConfig { cases: 24, seed: 16 },
+        |rng| {
+            let coo = random_coo(rng, 12, 128);
+            let s = rng.u64_below(3_000) + 1;
+            let kind = if rng.bernoulli(0.5) {
+                DistributionKind::Bernstein
+            } else {
+                DistributionKind::L2
+            };
+            (coo.m, coo.n, coo.entries.clone(), s, kind)
+        },
+        |_| vec![],
+        |(m, n, entries, s, kind)| {
+            let coo = Coo::from_entries(*m, *n, entries.clone()).unwrap();
+            let a = coo.to_csr();
+            let plan = SketchPlan::new(*kind, *s).with_seed(3);
+            let Ok(sk) = sketch_offline(&a, &plan) else { return true };
+            let enc = encode_sketch(&sk).unwrap();
+            let back = decode_sketch(&enc, &sk.method).unwrap();
+            back.entries.len() == sk.entries.len()
+                && sk
+                    .entries
+                    .iter()
+                    .zip(back.entries.iter())
+                    .all(|(x, y)| {
+                        (x.row, x.col, x.count) == (y.row, y.col, y.count)
+                            && (x.value - y.value).abs()
+                                <= x.value.abs() * 1e-5 + 1e-12
+                    })
+        },
+    );
+}
+
+#[test]
+fn prop_unbiasedness_coarse() {
+    // For a fixed tiny matrix, the empirical mean of B over many seeds
+    // approaches A in Frobenius distance.
+    let coo = Coo::from_entries(
+        2,
+        3,
+        vec![
+            Entry::new(0, 0, 2.0),
+            Entry::new(0, 2, -1.0),
+            Entry::new(1, 1, 3.0),
+        ],
+    )
+    .unwrap();
+    let a = coo.to_csr();
+    let trials = 2_000u64;
+    let mut acc = vec![0.0f64; 6];
+    for t in 0..trials {
+        let plan = SketchPlan::new(DistributionKind::RowL1, 4).with_seed(t);
+        let sk = sketch_offline(&a, &plan).unwrap();
+        for e in &sk.entries {
+            acc[(e.row * 3 + e.col) as usize] += e.value;
+        }
+    }
+    let want = [2.0, 0.0, -1.0, 0.0, 3.0, 0.0];
+    for i in 0..6 {
+        let mean = acc[i] / trials as f64;
+        assert!((mean - want[i]).abs() < 0.2, "cell {i}: {mean} vs {}", want[i]);
+    }
+}
