@@ -15,9 +15,10 @@
 
 use std::time::Instant;
 
-use matsketch::coordinator::{sketch_stream, PipelineConfig};
+use matsketch::coordinator::PipelineConfig;
 use matsketch::datasets::DatasetId;
 use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::Result;
 use matsketch::linalg::svd::{rank_k_fro, topk_svd};
 use matsketch::metrics::quality::{quality_left, quality_right};
@@ -49,7 +50,13 @@ fn main() -> Result<()> {
         let s = (a.nnz() as u64 / 5).max(5_000);
         let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(99);
         let stream = ShuffledStream::new(&coo, 5);
-        let (sketch, metrics) = sketch_stream(stream, &stats, &plan, &PipelineConfig::default())?;
+        let (sketch, metrics) = sketch_entry_stream(
+            SketchMode::Sharded,
+            stream,
+            &stats,
+            &plan,
+            &PipelineConfig::default(),
+        )?;
 
         // evaluate through the AOT engine
         let b = sketch.to_csr();

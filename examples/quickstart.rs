@@ -7,6 +7,7 @@
 
 use matsketch::prelude::*;
 use matsketch::datasets::{synthetic_cf, SyntheticConfig};
+use matsketch::engine::sketch_coo;
 use matsketch::sketch::encode_sketch;
 
 fn main() -> Result<()> {
@@ -15,16 +16,20 @@ fn main() -> Result<()> {
     let a = synthetic_cf(&SyntheticConfig { n: 5_000, seed: 42, ..Default::default() });
     println!("A: {}x{} with {} non-zeros", a.m, a.n, a.nnz());
 
-    // 2. Sketch with s = 10% of nnz. `sketch_matrix` runs the full
-    //    streaming pipeline (stats pass + shuffled-order sampling pass).
+    // 2. Sketch with s = 10% of nnz through the unified engine in sharded
+    //    mode (stats pass + shuffled-order sampling pass). Swapping
+    //    SketchMode::Offline or ::Streaming here changes only the
+    //    execution strategy, never the sampling law.
     let s = (a.nnz() / 10) as u64;
     let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(7);
-    let sketch = sketch_matrix(&a, &plan)?;
+    let (sketch, metrics) =
+        sketch_coo(SketchMode::Sharded, &a, &plan, &PipelineConfig::default())?;
     println!(
-        "B: {} distinct coordinates from {} draws ({}x sparser than A)",
+        "B: {} distinct coordinates from {} draws ({}x sparser than A, {:.1}M nnz/s)",
         sketch.nnz(),
         s,
-        a.nnz() / sketch.nnz().max(1)
+        a.nnz() / sketch.nnz().max(1),
+        metrics.throughput() / 1e6
     );
 
     // 3. The sketch is unbiased (E[B] = A). A low-variance check: for the

@@ -5,9 +5,10 @@
 //! perturb the true row norms by 2x multiplicative noise to model rough
 //! prior knowledge, and also run the "all ratios equal 1" mode).
 
-use matsketch::coordinator::{sketch_stream, PipelineConfig};
+use matsketch::coordinator::PipelineConfig;
 use matsketch::datasets::{synthetic_cf, SyntheticConfig};
 use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::Result;
 use matsketch::linalg::svd::{rank_k_fro, topk_svd};
 use matsketch::metrics::quality::{quality_left, quality_right};
@@ -42,7 +43,8 @@ fn main() -> Result<()> {
     ] {
         let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(11);
         let stream = ShuffledStream::new(&a, 17);
-        let (sketch, metrics) = sketch_stream(stream, &stats, &plan, &cfg)?;
+        let (sketch, metrics) =
+            sketch_entry_stream(SketchMode::Sharded, stream, &stats, &plan, &cfg)?;
         let b = sketch.to_csr();
         let svd_b = topk_svd(&b, k + 4, 8, 2, engine.as_ref())?;
         let left = quality_left(&a_csr, &svd_b, a_k, k, engine.as_ref())?;

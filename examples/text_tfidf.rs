@@ -4,11 +4,12 @@
 
 use matsketch::datasets::{enron_like, EnronConfig};
 use matsketch::distributions::DistributionKind;
+use matsketch::engine::{sketch_csr, PipelineConfig, SketchMode};
 use matsketch::error::Result;
 use matsketch::linalg::svd::{rank_k_fro, topk_svd};
 use matsketch::metrics::quality::{quality_left, quality_right};
 use matsketch::runtime::default_engine;
-use matsketch::sketch::{encode_sketch, sketch_offline, SketchPlan};
+use matsketch::sketch::{encode_sketch, SketchPlan};
 
 fn main() -> Result<()> {
     let a = enron_like(&EnronConfig { m: 1_000, n: 12_000, seed: 1, ..Default::default() })
@@ -25,8 +26,11 @@ fn main() -> Result<()> {
 
     for kind in DistributionKind::figure1_set() {
         let plan = SketchPlan::new(kind, s).with_seed(23);
-        let sk = match sketch_offline(&a, &plan) {
-            Ok(sk) => sk,
+        // the engine's offline (alias-table) mode — the evaluation
+        // reference path behind the same Sketcher trait as streaming
+        let sk = match sketch_csr(SketchMode::Offline, &a, &plan, &PipelineConfig::default())
+        {
+            Ok((sk, _metrics)) => sk,
             Err(e) => {
                 println!("{:<14} failed: {e}", kind.name());
                 continue;

@@ -1,14 +1,15 @@
-//! E5/E7 — end-to-end streaming-pipeline throughput: nnz/s across worker
-//! counts, budgets, and distributions; plus backpressure behaviour with
-//! tiny channels.
+//! E5/E7 — end-to-end streaming-engine throughput: nnz/s across sketcher
+//! modes, worker counts, budgets, and distributions; plus backpressure
+//! behaviour with tiny channels. Everything routes through the unified
+//! `Sketcher` trait (`matsketch::engine`).
 
 #[path = "common/mod.rs"]
 mod common;
 
 use common::{bench_items, default_budget, section};
-use matsketch::coordinator::{sketch_stream, PipelineConfig};
 use matsketch::datasets::{synthetic_cf, SyntheticConfig};
 use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::engine::{sketch_entry_stream, PipelineConfig, SketchMode};
 use matsketch::sketch::SketchPlan;
 use matsketch::stream::VecStream;
 
@@ -19,14 +20,33 @@ fn main() {
     let nnz = a.nnz() as f64;
     println!("pipeline workload: {}x{}, nnz={}", a.m, a.n, a.nnz());
 
+    section("engine: mode comparison (Bernstein, s=nnz/10)");
+    for mode in SketchMode::all() {
+        let cfg = PipelineConfig::default();
+        let plan = SketchPlan::new(DistributionKind::Bernstein, (nnz as u64) / 10)
+            .with_seed(7);
+        bench_items(&format!("engine_mode={}", mode.name()), budget, nnz, || {
+            let (sk, _m) =
+                sketch_entry_stream(mode, VecStream::new(&a), &stats, &plan, &cfg).unwrap();
+            sk.nnz()
+        })
+        .report();
+    }
+
     section("pipeline: worker scaling (Bernstein, s=nnz/10)");
     for workers in [1usize, 2, 4, 8] {
         let cfg = PipelineConfig { workers, ..Default::default() };
         let plan = SketchPlan::new(DistributionKind::Bernstein, (nnz as u64) / 10)
             .with_seed(1);
         bench_items(&format!("pipeline_workers={workers}"), budget, nnz, || {
-            let (sk, _m) =
-                sketch_stream(VecStream::new(&a), &stats, &plan, &cfg).unwrap();
+            let (sk, _m) = sketch_entry_stream(
+                SketchMode::Sharded,
+                VecStream::new(&a),
+                &stats,
+                &plan,
+                &cfg,
+            )
+            .unwrap();
             sk.nnz()
         })
         .report();
@@ -38,7 +58,10 @@ fn main() {
         let cfg = PipelineConfig { workers: 4, ..Default::default() };
         let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(2);
         bench_items(&format!("pipeline_s=nnz/{frac}"), budget, nnz, || {
-            sketch_stream(VecStream::new(&a), &stats, &plan, &cfg).unwrap().0.nnz()
+            sketch_entry_stream(SketchMode::Sharded, VecStream::new(&a), &stats, &plan, &cfg)
+                .unwrap()
+                .0
+                .nnz()
         })
         .report();
     }
@@ -53,16 +76,22 @@ fn main() {
         let cfg = PipelineConfig { workers: 4, ..Default::default() };
         let plan = SketchPlan::new(kind, (nnz as u64) / 10).with_seed(3);
         bench_items(&format!("pipeline_{}", kind.name()), budget, nnz, || {
-            sketch_stream(VecStream::new(&a), &stats, &plan, &cfg).unwrap().0.nnz()
+            sketch_entry_stream(SketchMode::Sharded, VecStream::new(&a), &stats, &plan, &cfg)
+                .unwrap()
+                .0
+                .nnz()
         })
         .report();
     }
 
-    section("pipeline: backpressure (tiny channels)");
-    let cfg = PipelineConfig { workers: 4, channel_cap: 1, batch: 64 };
+    section("pipeline: backpressure (tiny channels, bounded spill)");
+    let cfg = PipelineConfig { workers: 4, channel_cap: 1, batch: 64, spill_cap: 2 };
     let plan = SketchPlan::new(DistributionKind::Bernstein, (nnz as u64) / 10).with_seed(4);
-    bench_items("pipeline_channel_cap=1_batch=64", budget, nnz, || {
-        sketch_stream(VecStream::new(&a), &stats, &plan, &cfg).unwrap().0.nnz()
+    bench_items("pipeline_channel_cap=1_batch=64_spill=2", budget, nnz, || {
+        sketch_entry_stream(SketchMode::Sharded, VecStream::new(&a), &stats, &plan, &cfg)
+            .unwrap()
+            .0
+            .nnz()
     })
     .report();
 }

@@ -1,12 +1,17 @@
 //! E5/§Perf — sampler micro-benchmarks: the O(1)-per-item costs behind
 //! Theorem 4.2 (binomial draw per stream item, hypergeometric replay,
-//! alias draws) and the end-to-end reservoir throughput.
+//! alias draws), the end-to-end reservoir throughput, and each sampler as
+//! hosted by the unified `Sketcher` engine.
 
 #[path = "common/mod.rs"]
 mod common;
 
 use common::{bench_items, default_budget, section};
+use matsketch::datasets::{synthetic_cf, SyntheticConfig};
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::engine::{build_sketcher, PipelineConfig, SketchMode};
 use matsketch::samplers::{binomial, hypergeometric, AliasTable, ParallelReservoir};
+use matsketch::sketch::SketchPlan;
 use matsketch::util::rng::Rng;
 
 fn main() {
@@ -82,4 +87,22 @@ fn main() {
         r.finalize().len()
     })
     .report();
+
+    section("samplers behind the Sketcher trait (ingest+finalize, s=nnz/10)");
+    let a = synthetic_cf(&SyntheticConfig { m: 100, n: 20_000, ..Default::default() });
+    let stats = MatrixStats::from_coo(&a);
+    let nnz = a.nnz() as f64;
+    for mode in SketchMode::all() {
+        let plan =
+            SketchPlan::new(DistributionKind::Bernstein, (nnz as u64) / 10).with_seed(5);
+        bench_items(&format!("sketcher_{}(nnz={})", mode.name(), a.nnz()), budget, nnz, || {
+            let mut sk =
+                build_sketcher(mode, &stats, &plan, &PipelineConfig::default()).unwrap();
+            for chunk in a.entries.chunks(4096) {
+                sk.ingest(chunk).unwrap();
+            }
+            sk.finalize().unwrap().0.nnz()
+        })
+        .report();
+    }
 }

@@ -1,20 +1,20 @@
-//! L3 coordinator — the streaming sketch pipeline.
+//! L3 coordinator — the streaming sketch pipeline façade.
 //!
-//! A leader thread ingests an arbitrary-order entry stream and routes each
-//! non-zero to one of `W` worker threads by row-shard assignment over
-//! bounded channels (backpressure). Each worker runs the paper's
-//! Appendix-A [`crate::samplers::ParallelReservoir`] with the entry
-//! weights of the chosen distribution (O(1) work per non-zero, Theorem
-//! 4.2). At end of stream the merger composes the shard samples into `s`
-//! exact global i.i.d. draws:
+//! Since the engine unification this module is a compatibility layer over
+//! [`crate::engine`]: [`Pipeline`]/[`sketch_stream`] run the **sharded**
+//! [`crate::engine::Sketcher`] (leader routes entries by row shard to `W`
+//! worker reservoirs over bounded backpressured channels; a deterministic
+//! seeded merger composes the shard samples into `s` exact global i.i.d.
+//! draws). The merge law:
 //!
-//! 1. per-shard sample counts `s_w ~ Multinomial(s, W_w/ΣW)` over the
-//!    *observed* shard weights;
-//! 2. a uniformly random `s_w`-subset (multivariate hypergeometric) of
-//!    each shard's `s` exchangeable reservoir samples.
+//! 1. per-shard sample counts `s_w ~ Multinomial(s, W_w/ΣW)` (pre-split
+//!    from stats when derivable, else over the *observed* shard weights);
+//! 2. for the observed path, a uniformly random `s_w`-subset (multivariate
+//!    hypergeometric) of each shard's `s` exchangeable reservoir samples.
 //!
 //! Both steps preserve the i.i.d. law exactly — see
-//! `rust/tests/prop_invariants.rs` for the distributional tests.
+//! `rust/tests/prop_invariants.rs` for the distributional tests, and
+//! `rust/src/engine/` for the mechanics.
 
 pub mod metrics;
 pub mod pipeline;
@@ -22,17 +22,15 @@ pub mod pipeline;
 pub use metrics::PipelineMetrics;
 pub use pipeline::{sketch_stream, Pipeline, PipelineConfig};
 
-use crate::distributions::MatrixStats;
+use crate::engine::{self, SketchMode};
 use crate::error::Result;
 use crate::sketch::{Sketch, SketchPlan};
 use crate::sparse::Coo;
-use crate::stream::ShuffledStream;
 
 /// Convenience: sketch an in-memory matrix through the full streaming
 /// pipeline (two passes: stats, then shuffled-order sampling).
 pub fn sketch_matrix(a: &Coo, plan: &SketchPlan) -> Result<Sketch> {
-    let stats = MatrixStats::from_coo(a);
-    let stream = ShuffledStream::new(a, plan.seed ^ 0xD1CE);
-    let (sketch, _metrics) = sketch_stream(stream, &stats, plan, &PipelineConfig::default())?;
+    let (sketch, _metrics) =
+        engine::sketch_coo(SketchMode::Sharded, a, plan, &PipelineConfig::default())?;
     Ok(sketch)
 }

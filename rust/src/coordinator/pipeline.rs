@@ -1,45 +1,15 @@
-//! The leader/worker streaming pipeline.
+//! The leader/worker streaming pipeline — a thin façade over the unified
+//! [`crate::engine`] in sharded mode. The mechanics (row-hash routing,
+//! worker reservoirs, bounded-spill backpressure, deterministic seeded
+//! merge) live in `engine/{shard, backpressure, merge}`.
 
-use std::sync::mpsc::{sync_channel, Receiver, SyncSender, TrySendError};
-use std::time::Instant;
-
-use crate::distributions::{Distribution, MatrixStats};
-use crate::error::{Error, Result};
-use crate::samplers::{hypergeometric, multinomial_counts, ParallelReservoir};
-use crate::sketch::{Sketch, SketchEntry, SketchPlan};
-use crate::sparse::Entry;
+use crate::distributions::MatrixStats;
+use crate::engine::{self, SketchMode};
+use crate::error::Result;
+use crate::sketch::{Sketch, SketchPlan};
 use crate::stream::EntryStream;
-use crate::util::rng::Rng;
 
-use super::metrics::PipelineMetrics;
-
-/// Pipeline tuning knobs.
-#[derive(Clone, Debug)]
-pub struct PipelineConfig {
-    /// Worker (shard) count. 0 = auto (available_parallelism − 1, min 1).
-    pub workers: usize,
-    /// Bounded channel capacity per worker, in batches.
-    pub channel_cap: usize,
-    /// Entries per batch message (amortizes channel overhead).
-    pub batch: usize,
-}
-
-impl Default for PipelineConfig {
-    fn default() -> Self {
-        PipelineConfig { workers: 0, channel_cap: 64, batch: 4096 }
-    }
-}
-
-impl PipelineConfig {
-    fn effective_workers(&self) -> usize {
-        if self.workers > 0 {
-            return self.workers;
-        }
-        std::thread::available_parallelism()
-            .map(|p| p.get().saturating_sub(1).max(1))
-            .unwrap_or(1)
-    }
-}
+pub use crate::engine::{PipelineConfig, PipelineMetrics};
 
 /// The streaming pipeline object (reusable across runs).
 pub struct Pipeline {
@@ -59,256 +29,11 @@ impl Pipeline {
     /// the paper; only row-norm *ratios* matter for Bernstein/Row-L1).
     pub fn run<S: EntryStream>(
         &self,
-        mut stream: S,
+        stream: S,
         stats: &MatrixStats,
         plan: &SketchPlan,
     ) -> Result<(Sketch, PipelineMetrics)> {
-        if plan.s == 0 {
-            return Err(Error::invalid("sample budget must be positive"));
-        }
-        let (m, n) = stream.shape();
-        if stats.row_l1.len() != m {
-            return Err(Error::shape(format!(
-                "stats rows {} != stream rows {m}",
-                stats.row_l1.len()
-            )));
-        }
-        let dist = Distribution::prepare(plan.kind, stats, plan.s, plan.delta)?;
-        let workers = self.cfg.effective_workers();
-        let t0 = Instant::now();
-        let mut merge_rng = Rng::new(plan.seed ^ 0x4D45_5247);
-
-        // Shard-budget pre-split (§Perf): when per-row weight totals are
-        // derivable from the one-pass stats, draw the per-shard sample
-        // counts up front and run each worker's reservoir at its own
-        // multinomial share s_w — total reservoir work O(s·log N)
-        // independent of the worker count. Trimmed distributions fall
-        // back to full-budget workers + hypergeometric subset merge.
-        // Fibonacci hash + Lemire range reduction (multiply-shift, no
-        // integer division on the per-entry hot path).
-        let wmax = workers.max(1) as u64;
-        let shard_of = move |row: u32| -> usize {
-            let h = (row as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
-            (((h as u128) * (wmax as u128)) >> 64) as usize
-        };
-        let presplit: Option<(Vec<u64>, Vec<f64>)> =
-            dist.row_weight_totals(stats).map(|row_totals| {
-                let mut shard_w = vec![0.0f64; workers];
-                for (i, &w) in row_totals.iter().enumerate() {
-                    shard_w[shard_of(i as u32)] += w;
-                }
-                let total: f64 = shard_w.iter().sum();
-                let counts = multinomial_counts(&mut merge_rng, plan.s, &shard_w);
-                let q: Vec<f64> = shard_w.iter().map(|w| w / total).collect();
-                (counts, q)
-            });
-
-        // --- spawn workers ---
-        struct WorkerOut {
-            shard: usize,
-            samples: Vec<crate::samplers::WeightedSample<Entry>>,
-            total_weight: f64,
-            sketch_records: u64,
-            skipped: u64,
-        }
-        let mut senders: Vec<SyncSender<Vec<Entry>>> = Vec::with_capacity(workers);
-        let mut handles = Vec::with_capacity(workers);
-        for w in 0..workers {
-            let (tx, rx): (SyncSender<Vec<Entry>>, Receiver<Vec<Entry>>) =
-                sync_channel(self.cfg.channel_cap);
-            senders.push(tx);
-            let dist = dist.clone();
-            // pre-split: this worker samples only its multinomial share
-            let budget = match &presplit {
-                Some((counts, _)) => counts[w],
-                None => plan.s,
-            };
-            let seed = plan.seed ^ (0xA5A5_0000 + w as u64);
-            handles.push(std::thread::spawn(move || -> WorkerOut {
-                let mut res: Option<ParallelReservoir<Entry>> =
-                    (budget > 0).then(|| ParallelReservoir::new(budget, seed));
-                let mut skipped = 0u64;
-                let mut total_weight = 0.0f64;
-                for batch in rx.iter() {
-                    for e in batch {
-                        let wgt = dist.weight(e.row, e.val);
-                        if wgt > 0.0 {
-                            total_weight += wgt;
-                            if let Some(r) = res.as_mut() {
-                                r.push(e, wgt);
-                            }
-                        } else {
-                            skipped += 1;
-                        }
-                    }
-                }
-                let sketch_records = res.as_ref().map_or(0, |r| r.sketch_len() as u64);
-                WorkerOut {
-                    shard: w,
-                    samples: res.map_or_else(Vec::new, |r| r.finalize()),
-                    total_weight,
-                    sketch_records,
-                    skipped,
-                }
-            }));
-        }
-
-        // --- leader: route entries by row shard ---
-        let mut metrics = PipelineMetrics {
-            workers,
-            ..Default::default()
-        };
-        let mut batches: Vec<Vec<Entry>> = (0..workers)
-            .map(|_| Vec::with_capacity(self.cfg.batch))
-            .collect();
-        while let Some(e) = stream.next_entry() {
-            if (e.row as usize) >= m || (e.col as usize) >= n {
-                return Err(Error::shape(format!(
-                    "stream entry ({}, {}) outside {m}x{n}",
-                    e.row, e.col
-                )));
-            }
-            metrics.ingested += 1;
-            // row-based sharding: Fibonacci hash of the row id (must
-            // match the shard_of used for the budget pre-split)
-            let shard = shard_of(e.row);
-            let b = &mut batches[shard];
-            b.push(e);
-            if b.len() >= self.cfg.batch {
-                let full = std::mem::replace(b, Vec::with_capacity(self.cfg.batch));
-                send_with_backpressure(&senders[shard], full, &mut metrics);
-            }
-        }
-        for (shard, b) in batches.into_iter().enumerate() {
-            if !b.is_empty() {
-                send_with_backpressure(&senders[shard], b, &mut metrics);
-            }
-        }
-        drop(senders);
-
-        // --- collect worker outputs ---
-        let mut outs: Vec<WorkerOut> = Vec::with_capacity(workers);
-        for h in handles {
-            outs.push(h.join().map_err(|_| Error::Pipeline("worker panicked".into()))?);
-        }
-        outs.sort_by_key(|o| o.shard);
-        for o in &outs {
-            metrics.skipped_zero_weight += o.skipped;
-            metrics.sketch_records += o.sketch_records;
-            metrics.pre_merge_samples += o.samples.iter().map(|s| s.count).sum::<u64>();
-        }
-
-        let total_weight: f64 = outs.iter().map(|o| o.total_weight).sum();
-        if total_weight <= 0.0 {
-            return Err(Error::Pipeline("stream carried no positive-weight entries".into()));
-        }
-        let mut entries: Vec<SketchEntry> = Vec::new();
-        match &presplit {
-            Some((_counts, q)) => {
-                // --- merge, pre-split path: every worker already holds
-                //     exactly its multinomial share. The effective global
-                //     sampling probability of an entry in shard w is
-                //     q_w · w_ij / W_w(observed) — exact even when the
-                //     stats were rough estimates (§3 one-pass mode).
-                for o in &outs {
-                    let qw = q[o.shard];
-                    if o.total_weight <= 0.0 {
-                        continue;
-                    }
-                    for smp in &o.samples {
-                        let e = smp.item;
-                        let w = dist.weight(e.row, e.val);
-                        let p = qw * w / o.total_weight;
-                        entries.push(SketchEntry {
-                            row: e.row,
-                            col: e.col,
-                            count: smp.count as u32,
-                            value: smp.count as f64 * e.val as f64 / (plan.s as f64 * p),
-                        });
-                    }
-                }
-            }
-            None => {
-                // --- merge, fallback path: multinomial over *observed*
-                //     shard weights, then a uniformly random subset
-                //     (hypergeometric chain) of each shard's s samples.
-                let shard_weights: Vec<f64> = outs.iter().map(|o| o.total_weight).collect();
-                let take = multinomial_counts(&mut merge_rng, plan.s, &shard_weights);
-                for (o, &need_total) in outs.iter().zip(take.iter()) {
-                    if need_total == 0 {
-                        continue;
-                    }
-                    let have: u64 = o.samples.iter().map(|s| s.count).sum();
-                    if have < need_total {
-                        return Err(Error::Pipeline(format!(
-                            "shard {} holds {have} samples, needs {need_total}",
-                            o.shard
-                        )));
-                    }
-                    let mut pop = have;
-                    let mut need = need_total;
-                    for smp in &o.samples {
-                        if need == 0 {
-                            break;
-                        }
-                        let t = hypergeometric(&mut merge_rng, pop, smp.count, need);
-                        pop -= smp.count;
-                        need -= t;
-                        if t > 0 {
-                            let e = smp.item;
-                            let w = dist.weight(e.row, e.val);
-                            let p = w / total_weight; // global probability
-                            entries.push(SketchEntry {
-                                row: e.row,
-                                col: e.col,
-                                count: t as u32,
-                                value: t as f64 * e.val as f64 / (plan.s as f64 * p),
-                            });
-                        }
-                    }
-                }
-            }
-        }
-
-        let row_scale = dist.rho.as_ref().map(|rho| {
-            rho.iter()
-                .zip(stats.row_l1.iter())
-                .map(|(&r, &z)| if r > 0.0 { z / (plan.s as f64 * r) } else { 0.0 })
-                .collect()
-        });
-
-        let mut sketch = Sketch {
-            m,
-            n,
-            s: plan.s,
-            entries,
-            row_scale,
-            method: plan.kind.name(),
-        };
-        sketch.normalize();
-        metrics.merged_samples = sketch.entries.iter().map(|e| e.count as u64).sum();
-        metrics.wall = t0.elapsed();
-        Ok((sketch, metrics))
-    }
-}
-
-/// Send a batch, accounting blocked time as backpressure.
-fn send_with_backpressure(
-    tx: &SyncSender<Vec<Entry>>,
-    batch: Vec<Entry>,
-    metrics: &mut PipelineMetrics,
-) {
-    match tx.try_send(batch) {
-        Ok(()) => {}
-        Err(TrySendError::Full(batch)) => {
-            let t = Instant::now();
-            // blocking send; worker will drain
-            let _ = tx.send(batch);
-            metrics.backpressure_wait += t.elapsed();
-        }
-        Err(TrySendError::Disconnected(_)) => {
-            // worker ended early (only on panic; surfaced at join)
-        }
+        engine::sketch_entry_stream(SketchMode::Sharded, stream, stats, plan, &self.cfg)
     }
 }
 
@@ -328,6 +53,7 @@ mod tests {
     use crate::distributions::DistributionKind;
     use crate::sparse::Coo;
     use crate::stream::{ShuffledStream, VecStream};
+    use crate::util::rng::Rng;
 
     fn toy(m: usize, n: usize, seed: u64) -> Coo {
         let mut rng = Rng::new(seed);

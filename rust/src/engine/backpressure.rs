@@ -1,0 +1,169 @@
+//! Leader-side flow control for the sharded sketcher.
+//!
+//! Each shard channel is wrapped in a [`ShardSender`]: batches are
+//! `try_send`-ed first; when the channel is full they park in a bounded
+//! local spill queue (absorbing short worker stalls without blocking the
+//! leader); once the spill bound is exceeded the leader performs a real
+//! blocking `send`, which is the actual backpressure — the stream is read
+//! no faster than the slowest worker drains. Per-shard FIFO order is
+//! preserved (spilled batches always go out before newer ones), and a
+//! disconnected worker (panic) is tolerated here and surfaced at join.
+
+use std::collections::VecDeque;
+use std::sync::mpsc::{SyncSender, TrySendError};
+use std::time::{Duration, Instant};
+
+use crate::sparse::Entry;
+
+/// A shard channel with bounded spill and blocking-send backpressure.
+pub(crate) struct ShardSender {
+    tx: SyncSender<Vec<Entry>>,
+    spill: VecDeque<Vec<Entry>>,
+    spill_cap: usize,
+    blocked: Duration,
+    disconnected: bool,
+}
+
+impl ShardSender {
+    /// Wrap a channel; up to `spill_cap` batches park locally before the
+    /// leader blocks.
+    pub(crate) fn new(tx: SyncSender<Vec<Entry>>, spill_cap: usize) -> ShardSender {
+        ShardSender {
+            tx,
+            spill: VecDeque::new(),
+            spill_cap,
+            blocked: Duration::ZERO,
+            disconnected: false,
+        }
+    }
+
+    /// Move spilled batches into the channel while it has room.
+    fn try_drain(&mut self) {
+        while let Some(b) = self.spill.pop_front() {
+            match self.tx.try_send(b) {
+                Ok(()) => {}
+                Err(TrySendError::Full(b)) => {
+                    self.spill.push_front(b);
+                    break;
+                }
+                Err(TrySendError::Disconnected(_)) => {
+                    self.disconnected = true;
+                    self.spill.clear();
+                    break;
+                }
+            }
+        }
+    }
+
+    /// Enqueue one batch, preserving per-shard FIFO order. Blocks only
+    /// once the local spill bound is exhausted.
+    pub(crate) fn send(&mut self, batch: Vec<Entry>) {
+        if self.disconnected {
+            return;
+        }
+        self.try_drain();
+        if self.spill.is_empty() {
+            match self.tx.try_send(batch) {
+                Ok(()) => return,
+                Err(TrySendError::Full(b)) => self.spill.push_back(b),
+                Err(TrySendError::Disconnected(_)) => {
+                    self.disconnected = true;
+                    return;
+                }
+            }
+        } else {
+            self.spill.push_back(batch);
+        }
+        if self.spill.len() > self.spill_cap {
+            // spill bound exceeded: real backpressure — block until the
+            // worker drains one batch.
+            let front = self.spill.pop_front().expect("spill non-empty");
+            let t = Instant::now();
+            if self.tx.send(front).is_err() {
+                self.disconnected = true;
+                self.spill.clear();
+            }
+            self.blocked += t.elapsed();
+        }
+    }
+
+    /// Flush the remaining spill (blocking where needed), close the
+    /// channel, and report the total time spent blocked.
+    pub(crate) fn finish(mut self) -> Duration {
+        while let Some(b) = self.spill.pop_front() {
+            match self.tx.try_send(b) {
+                Ok(()) => {}
+                Err(TrySendError::Full(b)) => {
+                    let t = Instant::now();
+                    let ok = self.tx.send(b).is_ok();
+                    self.blocked += t.elapsed();
+                    if !ok {
+                        break;
+                    }
+                }
+                Err(TrySendError::Disconnected(_)) => break,
+            }
+        }
+        self.blocked
+        // `self.tx` drops here, closing this shard's channel.
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::mpsc::sync_channel;
+
+    fn batch(col: u32) -> Vec<Entry> {
+        vec![Entry::new(0, col, 1.0)]
+    }
+
+    #[test]
+    fn delivers_everything_in_order_through_a_slow_worker() {
+        let (tx, rx) = sync_channel(1);
+        let mut s = ShardSender::new(tx, 2);
+        let consumer = std::thread::spawn(move || {
+            let mut cols = Vec::new();
+            for b in rx.iter() {
+                for e in b {
+                    cols.push(e.col);
+                }
+                std::thread::sleep(Duration::from_millis(1));
+            }
+            cols
+        });
+        for i in 0..100u32 {
+            s.send(batch(i));
+        }
+        let _blocked = s.finish();
+        let cols = consumer.join().unwrap();
+        assert_eq!(cols.len(), 100);
+        assert!(cols.windows(2).all(|w| w[0] < w[1]), "order broken: {cols:?}");
+    }
+
+    #[test]
+    fn blocks_only_past_the_spill_bound() {
+        // capacity 1 + spill 4: five batches fit without a consumer...
+        let (tx, rx) = sync_channel(1);
+        let mut s = ShardSender::new(tx, 4);
+        for i in 0..5u32 {
+            s.send(batch(i));
+        }
+        assert!(s.blocked.is_zero(), "blocked early: {:?}", s.blocked);
+        // ...and a consumer lets the spill drain at finish.
+        let consumer = std::thread::spawn(move || rx.iter().count());
+        let _ = s.finish();
+        assert_eq!(consumer.join().unwrap(), 5);
+    }
+
+    #[test]
+    fn disconnected_receiver_is_tolerated() {
+        let (tx, rx) = sync_channel(1);
+        drop(rx);
+        let mut s = ShardSender::new(tx, 1);
+        for i in 0..10u32 {
+            s.send(batch(i));
+        }
+        let _ = s.finish(); // must not panic or hang
+    }
+}

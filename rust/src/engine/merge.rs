@@ -1,0 +1,216 @@
+//! Shard-sample merging: compose per-shard reservoir outputs into exactly
+//! `s` global i.i.d. draws.
+//!
+//! Two paths, both exact and both deterministic given the plan seed (the
+//! merge RNG is derived from `plan.seed` alone and shards are visited in
+//! shard-id order):
+//!
+//! * **pre-split** — the per-shard budgets were drawn up front as
+//!   `Multinomial(s, W_w/ΣW)` over stats-derived shard weights, so every
+//!   worker already holds exactly its share; the merge only rescales.
+//! * **observed** — trimmed distributions (stats can't predict shard
+//!   weights): every worker sampled at the full budget `s`; the merge
+//!   draws `Multinomial(s, W_w^obs/ΣW^obs)` over the observed weights and
+//!   takes a uniformly random subset of each shard's exchangeable samples
+//!   via a multivariate-hypergeometric chain.
+
+use crate::distributions::Distribution;
+use crate::error::{Error, Result};
+use crate::samplers::{hypergeometric, multinomial_counts};
+use crate::sketch::SketchEntry;
+use crate::util::rng::Rng;
+
+use super::shard::WorkerOut;
+
+/// Merge when shard budgets were pre-split: the effective global sampling
+/// probability of an entry in shard `w` is `q_w · w_ij / W_w(observed)` —
+/// exact even when the stats were rough estimates (§3 one-pass mode).
+///
+/// `counts` are the pre-split per-shard budgets; a shard that was
+/// assigned budget but observed no positive-weight entries (stats claimed
+/// weight the stream never delivered) is an error — silently dropping its
+/// share would break the engine's exactly-`s`-draws contract.
+pub(crate) fn merge_presplit(
+    outs: &[WorkerOut],
+    counts: &[u64],
+    q: &[f64],
+    dist: &Distribution,
+    s: u64,
+) -> Result<Vec<SketchEntry>> {
+    let mut entries = Vec::new();
+    for o in outs {
+        let have: u64 = o.samples.iter().map(|x| x.count).sum();
+        if have != counts[o.shard] {
+            return Err(Error::Pipeline(format!(
+                "shard {} produced {have} of its pre-split {} samples — \
+                 the stats assigned weight this stream never delivered",
+                o.shard, counts[o.shard]
+            )));
+        }
+        if o.total_weight <= 0.0 {
+            continue; // an empty shard with a zero budget is normal
+        }
+        let qw = q[o.shard];
+        for smp in &o.samples {
+            let e = smp.item;
+            let w = dist.weight(e.row, e.val);
+            let p = qw * w / o.total_weight;
+            entries.push(SketchEntry {
+                row: e.row,
+                col: e.col,
+                count: smp.count as u32,
+                value: smp.count as f64 * e.val as f64 / (s as f64 * p),
+            });
+        }
+    }
+    Ok(entries)
+}
+
+/// Merge over *observed* shard weights: multinomial split of `s`, then a
+/// uniformly random subset (hypergeometric chain) of each shard's `s`
+/// reservoir samples.
+pub(crate) fn merge_observed(
+    outs: &[WorkerOut],
+    rng: &mut Rng,
+    dist: &Distribution,
+    s: u64,
+    total_weight: f64,
+) -> Result<Vec<SketchEntry>> {
+    let shard_weights: Vec<f64> = outs.iter().map(|o| o.total_weight).collect();
+    let take = multinomial_counts(rng, s, &shard_weights);
+    let mut entries = Vec::new();
+    for (o, &need_total) in outs.iter().zip(take.iter()) {
+        if need_total == 0 {
+            continue;
+        }
+        let have: u64 = o.samples.iter().map(|x| x.count).sum();
+        if have < need_total {
+            return Err(Error::Pipeline(format!(
+                "shard {} holds {have} samples, needs {need_total}",
+                o.shard
+            )));
+        }
+        let mut pop = have;
+        let mut need = need_total;
+        for smp in &o.samples {
+            if need == 0 {
+                break;
+            }
+            let t = hypergeometric(rng, pop, smp.count, need);
+            pop -= smp.count;
+            need -= t;
+            if t > 0 {
+                let e = smp.item;
+                let w = dist.weight(e.row, e.val);
+                let p = w / total_weight; // global probability
+                entries.push(SketchEntry {
+                    row: e.row,
+                    col: e.col,
+                    count: t as u32,
+                    value: t as f64 * e.val as f64 / (s as f64 * p),
+                });
+            }
+        }
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::{DistributionKind, MatrixStats};
+    use crate::samplers::WeightedSample;
+    use crate::sparse::{Coo, Entry};
+
+    fn fixture() -> (Distribution, Vec<WorkerOut>) {
+        let coo = Coo::from_entries(
+            2,
+            3,
+            vec![Entry::new(0, 0, 3.0), Entry::new(0, 1, 1.0), Entry::new(1, 2, 2.0)],
+        )
+        .unwrap();
+        let stats = MatrixStats::from_coo(&coo);
+        let dist = Distribution::prepare(DistributionKind::L1, &stats, 10, 0.1).unwrap();
+        let outs = vec![
+            WorkerOut {
+                shard: 0,
+                samples: vec![
+                    WeightedSample { item: Entry::new(0, 0, 3.0), count: 7 },
+                    WeightedSample { item: Entry::new(0, 1, 1.0), count: 3 },
+                ],
+                total_weight: 4.0,
+                sketch_records: 2,
+                skipped: 0,
+            },
+            WorkerOut {
+                shard: 1,
+                samples: vec![WeightedSample { item: Entry::new(1, 2, 2.0), count: 10 }],
+                total_weight: 2.0,
+                sketch_records: 1,
+                skipped: 0,
+            },
+        ];
+        (dist, outs)
+    }
+
+    #[test]
+    fn observed_merge_conserves_s_and_is_seed_deterministic() {
+        let (dist, outs) = fixture();
+        let run = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            merge_observed(&outs, &mut rng, &dist, 10, 6.0).unwrap()
+        };
+        let a = run(42);
+        assert_eq!(a.iter().map(|e| e.count as u64).sum::<u64>(), 10);
+        let b = run(42);
+        assert_eq!(a, b, "same seed must give an identical merge");
+    }
+
+    #[test]
+    fn observed_merge_rejects_underfull_shards() {
+        let (dist, mut outs) = fixture();
+        outs[0].samples[0].count = 1; // shard 0 now holds only 2 samples...
+        outs[0].samples[1].count = 1;
+        outs[1].total_weight = 0.0; // ...and must take all 10 (shard 1 empty)
+        let mut rng = Rng::new(7);
+        let res = merge_observed(&outs, &mut rng, &dist, 10, 4.0);
+        assert!(res.is_err());
+    }
+
+    #[test]
+    fn presplit_merge_rescales_by_shard_probability() {
+        let (dist, outs) = fixture();
+        let counts = [10u64, 10];
+        let q = [4.0 / 6.0, 2.0 / 6.0];
+        let entries = merge_presplit(&outs, &counts, &q, &dist, 20).unwrap();
+        assert_eq!(entries.iter().map(|e| e.count as u64).sum::<u64>(), 20);
+        // entry (0,0): w=3, q0·w/W0 = (2/3)·(3/4) = 0.5; value = 7·3/(20·0.5)
+        let e00 = entries.iter().find(|e| (e.row, e.col) == (0, 0)).unwrap();
+        assert!((e00.value - 7.0 * 3.0 / (20.0 * 0.5)).abs() < 1e-12);
+    }
+
+    #[test]
+    fn presplit_merge_rejects_budget_deficit() {
+        // A shard assigned budget but holding no samples (stats promised
+        // weight the stream never delivered) must error, not shrink s.
+        let (dist, mut outs) = fixture();
+        outs[1].samples.clear();
+        outs[1].total_weight = 0.0;
+        let counts = [10u64, 10];
+        let q = [4.0 / 6.0, 2.0 / 6.0];
+        let err = merge_presplit(&outs, &counts, &q, &dist, 20).unwrap_err();
+        assert!(err.to_string().contains("pre-split"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn presplit_merge_tolerates_zero_budget_empty_shards() {
+        // workers > occupied rows is normal: empty shard, zero budget
+        let (dist, mut outs) = fixture();
+        outs[1].samples.clear();
+        outs[1].total_weight = 0.0;
+        let counts = [10u64, 0];
+        let q = [1.0, 0.0];
+        let entries = merge_presplit(&outs, &counts, &q, &dist, 10).unwrap();
+        assert_eq!(entries.iter().map(|e| e.count as u64).sum::<u64>(), 10);
+    }
+}

@@ -1,0 +1,75 @@
+//! Engine observability: per-run counters the benches and the CLI report.
+//!
+//! One [`PipelineMetrics`] is produced by every [`super::Sketcher`]
+//! finalization, whatever the mode — single-threaded sketchers simply
+//! leave the shard-specific counters at their idle values.
+
+use std::time::Duration;
+
+/// Counters collected by one sketcher run.
+#[derive(Clone, Debug, Default)]
+pub struct PipelineMetrics {
+    /// Non-zeros ingested from the stream.
+    pub ingested: u64,
+    /// Entries whose distribution weight was zero (trimmed) and skipped.
+    pub skipped_zero_weight: u64,
+    /// Worker count used (1 for the single-threaded modes).
+    pub workers: usize,
+    /// Total leader wall time.
+    pub wall: Duration,
+    /// Time the leader spent blocked on full channels (sampled).
+    pub backpressure_wait: Duration,
+    /// Sum of forward-sketch lengths across shards (Theorem 4.2 metric);
+    /// distinct drawn coordinates for the offline mode.
+    pub sketch_records: u64,
+    /// Total reservoir samples before merge (`workers · s`).
+    pub pre_merge_samples: u64,
+    /// Final sample count (= s).
+    pub merged_samples: u64,
+}
+
+impl PipelineMetrics {
+    /// Ingest throughput in entries/second.
+    pub fn throughput(&self) -> f64 {
+        if self.wall.is_zero() {
+            0.0
+        } else {
+            self.ingested as f64 / self.wall.as_secs_f64()
+        }
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{} nnz in {:.3}s ({:.2}M nnz/s), {} workers, {} sketch records, backpressure {:.3}s",
+            self.ingested,
+            self.wall.as_secs_f64(),
+            self.throughput() / 1e6,
+            self.workers,
+            self.sketch_records,
+            self.backpressure_wait.as_secs_f64(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn throughput_computation() {
+        let m = PipelineMetrics {
+            ingested: 1_000_000,
+            wall: Duration::from_secs(2),
+            ..Default::default()
+        };
+        assert!((m.throughput() - 500_000.0).abs() < 1.0);
+        assert!(m.summary().contains("workers"));
+    }
+
+    #[test]
+    fn zero_wall_safe() {
+        let m = PipelineMetrics::default();
+        assert_eq!(m.throughput(), 0.0);
+    }
+}

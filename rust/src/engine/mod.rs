@@ -1,0 +1,370 @@
+//! The unified sketching engine — one [`Sketcher`] contract, three
+//! execution modes, every distribution.
+//!
+//! The paper's promise is O(1)-per-nonzero sketching of a stream presented
+//! in arbitrary order; this module is the single seam through which every
+//! consumer (CLI, eval harness, benches, examples) exercises it. A
+//! sketcher's lifecycle is always *ingest batches → finalize → sketch*:
+//!
+//! ```text
+//!            build_sketcher(mode, stats, plan, cfg)
+//!                             │
+//!        ┌────────────────────┼─────────────────────┐
+//!        ▼                    ▼                     ▼
+//!  SketchMode::Offline  SketchMode::Streaming  SketchMode::Sharded
+//!  (offline.rs)         (reservoir.rs)         (shard.rs)
+//!  alias table over     one Appendix-A         W worker reservoirs
+//!  buffered entries     reservoir, O(s log bN) + exact seeded merge
+//!        │                    │                     │
+//!        └────────────────────┴─────────────────────┘
+//!                             ▼
+//!               ingest(&[Entry])* → finalize()
+//!                             ▼
+//!                  (Sketch, PipelineMetrics)
+//! ```
+//!
+//! ## Module layout
+//!
+//! * `mod.rs` — the [`Sketcher`] trait, [`SketchMode`], the
+//!   [`build_sketcher`] factory, and the stream/matrix drivers
+//!   ([`sketch_entry_stream`], [`sketch_coo`], [`sketch_csr`]).
+//! * [`offline`] — [`AliasSketcher`]: buffer + Vose alias table (the
+//!   evaluation reference path).
+//! * [`reservoir`] — [`ReservoirSketcher`]: one O(1)-per-item Appendix-A
+//!   reservoir, single-threaded.
+//! * [`shard`] — [`ShardedSketcher`] + [`PipelineConfig`]: row-hash
+//!   routing to worker reservoirs with shard-budget pre-splitting.
+//! * [`merge`] — the deterministic seeded merge (pre-split rescale or
+//!   multinomial + hypergeometric subset over observed weights).
+//! * [`backpressure`] — leader-side bounded spill + blocking-send flow
+//!   control for the sharded mode.
+//! * [`metrics`] — [`PipelineMetrics`], produced by every mode.
+//!
+//! All three modes draw `s` i.i.d. samples from the same prepared
+//! [`Distribution`], so sketches are exchangeable across modes — the
+//! cross-mode test in `rust/tests/integration_engine.rs` pins that down
+//! for every [`crate::distributions::DistributionKind::figure1_set`]
+//! member. Later scaling work (async ingestion, multi-backend dispatch,
+//! sketch caching) plugs in as new `SketchMode`s or new `Sketcher` impls
+//! without touching any consumer.
+
+pub mod backpressure;
+pub mod merge;
+pub mod metrics;
+pub mod offline;
+pub mod reservoir;
+pub mod shard;
+
+pub use metrics::PipelineMetrics;
+pub use offline::AliasSketcher;
+pub use reservoir::ReservoirSketcher;
+pub use shard::{PipelineConfig, ShardedSketcher};
+
+use crate::distributions::{Distribution, MatrixStats};
+use crate::error::{Error, Result};
+use crate::sketch::{Sketch, SketchEntry, SketchPlan};
+use crate::sparse::{Coo, Csr, Entry};
+use crate::stream::{EntryStream, ShuffledStream};
+
+/// Which execution strategy a [`Sketcher`] uses.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SketchMode {
+    /// Buffer all entries, then draw from one alias table (exact offline
+    /// reference; O(nnz) memory).
+    Offline,
+    /// One streaming Appendix-A reservoir (O(1)/entry, single thread).
+    Streaming,
+    /// Leader + worker-per-shard reservoirs with an exact merge
+    /// (O(1)/entry, scales with cores).
+    Sharded,
+}
+
+impl SketchMode {
+    /// Display name.
+    pub fn name(&self) -> &'static str {
+        match self {
+            SketchMode::Offline => "offline",
+            SketchMode::Streaming => "streaming",
+            SketchMode::Sharded => "sharded",
+        }
+    }
+
+    /// Every mode, for cross-mode tests and sweeps.
+    pub fn all() -> [SketchMode; 3] {
+        [SketchMode::Offline, SketchMode::Streaming, SketchMode::Sharded]
+    }
+
+    /// Parse a CLI/config spelling.
+    pub fn parse(name: &str) -> Option<SketchMode> {
+        match name.to_ascii_lowercase().as_str() {
+            "offline" | "alias" => Some(SketchMode::Offline),
+            "streaming" | "reservoir" => Some(SketchMode::Streaming),
+            "sharded" | "pipeline" => Some(SketchMode::Sharded),
+            _ => None,
+        }
+    }
+}
+
+/// A sketching engine: ingest entry batches, then finalize into a
+/// [`Sketch`]. All implementations draw `s` i.i.d. samples from the
+/// distribution prepared at construction, so any two sketchers built from
+/// the same `(stats, plan)` are statistically interchangeable.
+pub trait Sketcher {
+    /// Which execution mode this sketcher runs.
+    fn mode(&self) -> SketchMode;
+
+    /// Feed one batch of stream entries (any order, any batching).
+    /// Rejects out-of-shape coordinates.
+    fn ingest(&mut self, batch: &[Entry]) -> Result<()>;
+
+    /// Finish the stream: produce the sketch and the run metrics.
+    fn finalize(self: Box<Self>) -> Result<(Sketch, PipelineMetrics)>;
+}
+
+/// Everything a sketcher mode needs about the run, prepared once by
+/// [`build_sketcher`]: the distribution, the plan, the matrix shape, and
+/// the codec row scales.
+pub(crate) struct EngineContext {
+    pub dist: Distribution,
+    pub plan: SketchPlan,
+    pub m: usize,
+    pub n: usize,
+    /// Per-row codec scale `‖A_(i)‖₁/(s·ρ_i)` for the L1 family.
+    pub row_scale: Option<Vec<f64>>,
+}
+
+impl EngineContext {
+    pub(crate) fn prepare(stats: &MatrixStats, plan: &SketchPlan) -> Result<EngineContext> {
+        if plan.s == 0 {
+            return Err(Error::invalid("sample budget must be positive"));
+        }
+        if stats.row_l1.len() != stats.m {
+            return Err(Error::shape(format!(
+                "stats row_l1 length {} != m {}",
+                stats.row_l1.len(),
+                stats.m
+            )));
+        }
+        let dist = Distribution::prepare(plan.kind, stats, plan.s, plan.delta)?;
+        let row_scale = dist.rho.as_ref().map(|rho| {
+            rho.iter()
+                .zip(stats.row_l1.iter())
+                .map(|(&r, &z)| if r > 0.0 { z / (plan.s as f64 * r) } else { 0.0 })
+                .collect()
+        });
+        Ok(EngineContext {
+            dist,
+            plan: plan.clone(),
+            m: stats.m,
+            n: stats.n,
+            row_scale,
+        })
+    }
+
+    /// Reject out-of-shape stream entries.
+    #[inline]
+    pub(crate) fn check_entry(&self, e: &Entry) -> Result<()> {
+        if (e.row as usize) >= self.m || (e.col as usize) >= self.n {
+            return Err(Error::shape(format!(
+                "stream entry ({}, {}) outside {}x{}",
+                e.row, e.col, self.m, self.n
+            )));
+        }
+        Ok(())
+    }
+
+    /// Assemble the final normalized sketch from merged entries.
+    pub(crate) fn assemble(&self, entries: Vec<SketchEntry>) -> Sketch {
+        let mut sketch = Sketch {
+            m: self.m,
+            n: self.n,
+            s: self.plan.s,
+            entries,
+            row_scale: self.row_scale.clone(),
+            method: self.plan.kind.name(),
+        };
+        sketch.normalize();
+        sketch
+    }
+}
+
+/// Build a sketcher for the given mode. `stats` must describe the matrix
+/// the entries will come from (pass 1 of the two-pass algorithm, or
+/// a-priori row-norm estimates — only row-norm *ratios* matter for the
+/// L1-family distributions, §3 of the paper).
+pub fn build_sketcher(
+    mode: SketchMode,
+    stats: &MatrixStats,
+    plan: &SketchPlan,
+    cfg: &PipelineConfig,
+) -> Result<Box<dyn Sketcher>> {
+    let ctx = EngineContext::prepare(stats, plan)?;
+    Ok(match mode {
+        SketchMode::Offline => Box::new(AliasSketcher::new(ctx)),
+        SketchMode::Streaming => Box::new(ReservoirSketcher::new(ctx)),
+        SketchMode::Sharded => Box::new(ShardedSketcher::spawn(ctx, stats, cfg)),
+    })
+}
+
+/// Drive an [`EntryStream`] through a sketcher of the given mode to
+/// completion. Validates the stream shape against `stats` up front and
+/// surfaces stream-source errors (e.g. a truncated file) immediately.
+pub fn sketch_entry_stream<S: EntryStream>(
+    mode: SketchMode,
+    mut stream: S,
+    stats: &MatrixStats,
+    plan: &SketchPlan,
+    cfg: &PipelineConfig,
+) -> Result<(Sketch, PipelineMetrics)> {
+    let (m, n) = stream.shape();
+    if m != stats.m || n != stats.n {
+        return Err(Error::shape(format!(
+            "stats {}x{} != stream {m}x{n}",
+            stats.m, stats.n
+        )));
+    }
+    let mut sketcher = build_sketcher(mode, stats, plan, cfg)?;
+    let cap = cfg.batch.max(1);
+    let mut buf: Vec<Entry> = Vec::with_capacity(cap);
+    while let Some(e) = stream.next_entry()? {
+        buf.push(e);
+        if buf.len() == cap {
+            sketcher.ingest(&buf)?;
+            buf.clear();
+        }
+    }
+    if !buf.is_empty() {
+        sketcher.ingest(&buf)?;
+    }
+    sketcher.finalize()
+}
+
+/// Sketch an in-memory COO matrix with the given mode: stats pass, then a
+/// seeded shuffled-order sampling pass (the paper's "arbitrary order"
+/// stream model).
+pub fn sketch_coo(
+    mode: SketchMode,
+    a: &Coo,
+    plan: &SketchPlan,
+    cfg: &PipelineConfig,
+) -> Result<(Sketch, PipelineMetrics)> {
+    let stats = MatrixStats::from_coo(a);
+    let stream = ShuffledStream::new(a, plan.seed ^ 0xD1CE);
+    sketch_entry_stream(mode, stream, &stats, plan, cfg)
+}
+
+/// Row-major [`EntryStream`] view over a CSR matrix (no copy of the
+/// underlying arrays).
+struct CsrEntryStream<'a> {
+    a: &'a Csr,
+    row: usize,
+    idx: usize,
+}
+
+impl EntryStream for CsrEntryStream<'_> {
+    fn shape(&self) -> (usize, usize) {
+        (self.a.m, self.a.n)
+    }
+    fn next_entry(&mut self) -> Result<Option<Entry>> {
+        if self.idx >= self.a.nnz() {
+            return Ok(None);
+        }
+        while self.idx >= self.a.indptr[self.row + 1] {
+            self.row += 1;
+        }
+        let e = Entry::new(self.row as u32, self.a.indices[self.idx], self.a.values[self.idx]);
+        self.idx += 1;
+        Ok(Some(e))
+    }
+    fn size_hint(&self) -> Option<usize> {
+        Some(self.a.nnz() - self.idx)
+    }
+}
+
+/// Sketch an in-memory CSR matrix with the given mode (row-major entry
+/// order; order is irrelevant to all three modes' sampling laws).
+pub fn sketch_csr(
+    mode: SketchMode,
+    a: &Csr,
+    plan: &SketchPlan,
+    cfg: &PipelineConfig,
+) -> Result<(Sketch, PipelineMetrics)> {
+    let stats = MatrixStats::from_csr(a);
+    sketch_entry_stream(mode, CsrEntryStream { a, row: 0, idx: 0 }, &stats, plan, cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::DistributionKind;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn toy(m: usize, n: usize, seed: u64) -> Coo {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(m, n);
+        for i in 0..m as u32 {
+            for _ in 0..10 {
+                coo.push(i, rng.usize_below(n) as u32, rng.normal() as f32 + 2.0);
+            }
+        }
+        coo.normalize();
+        coo
+    }
+
+    #[test]
+    fn factory_builds_every_mode() {
+        let a = toy(8, 40, 1);
+        let stats = MatrixStats::from_coo(&a);
+        let plan = SketchPlan::new(DistributionKind::Bernstein, 100).with_seed(2);
+        for mode in SketchMode::all() {
+            let sk = build_sketcher(mode, &stats, &plan, &PipelineConfig::default()).unwrap();
+            assert_eq!(sk.mode(), mode);
+        }
+    }
+
+    #[test]
+    fn zero_budget_rejected_in_every_mode() {
+        let a = toy(4, 16, 3);
+        let stats = MatrixStats::from_coo(&a);
+        let plan = SketchPlan::new(DistributionKind::L1, 0);
+        for mode in SketchMode::all() {
+            assert!(build_sketcher(mode, &stats, &plan, &PipelineConfig::default()).is_err());
+        }
+    }
+
+    #[test]
+    fn out_of_shape_entries_rejected() {
+        let a = toy(4, 16, 4);
+        let stats = MatrixStats::from_coo(&a);
+        let plan = SketchPlan::new(DistributionKind::L1, 10);
+        for mode in SketchMode::all() {
+            let mut sk =
+                build_sketcher(mode, &stats, &plan, &PipelineConfig::default()).unwrap();
+            let bad = [Entry::new(99, 0, 1.0)];
+            assert!(sk.ingest(&bad).is_err(), "{:?}", mode);
+        }
+    }
+
+    #[test]
+    fn mode_names_parse_back() {
+        for mode in SketchMode::all() {
+            assert_eq!(SketchMode::parse(mode.name()), Some(mode));
+        }
+        assert_eq!(SketchMode::parse("pipeline"), Some(SketchMode::Sharded));
+        assert_eq!(SketchMode::parse("nope"), None);
+    }
+
+    #[test]
+    fn sketch_coo_runs_all_modes_at_equal_budget() {
+        let a = toy(10, 60, 5);
+        let plan = SketchPlan::new(DistributionKind::RowL1, 250).with_seed(9);
+        for mode in SketchMode::all() {
+            let (sk, metrics) =
+                sketch_coo(mode, &a, &plan, &PipelineConfig::default()).unwrap();
+            assert_eq!(sk.entries.iter().map(|e| e.count as u64).sum::<u64>(), 250);
+            assert_eq!(metrics.merged_samples, 250);
+            assert_eq!(metrics.ingested, a.nnz() as u64);
+        }
+    }
+}

@@ -1,0 +1,101 @@
+//! Offline (alias-table) sketching behind the [`Sketcher`] trait.
+//!
+//! Buffers the full entry set, then draws `s` i.i.d. entries from one
+//! Vose alias table — O(nnz) setup, O(1) per draw. This is the
+//! evaluation harness's reference path: exact sampling from the prepared
+//! distribution with no streaming approximations to reason about.
+
+use std::collections::HashMap;
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::samplers::AliasTable;
+use crate::sketch::{Sketch, SketchEntry};
+use crate::sparse::Entry;
+use crate::util::rng::Rng;
+
+use super::metrics::PipelineMetrics;
+use super::{EngineContext, SketchMode, Sketcher};
+
+/// The offline [`Sketcher`]: buffer everything, finalize via alias table.
+pub struct AliasSketcher {
+    ctx: EngineContext,
+    entries: Vec<Entry>,
+    t0: Instant,
+}
+
+impl AliasSketcher {
+    pub(crate) fn new(ctx: EngineContext) -> AliasSketcher {
+        AliasSketcher { ctx, entries: Vec::new(), t0: Instant::now() }
+    }
+}
+
+impl Sketcher for AliasSketcher {
+    fn mode(&self) -> SketchMode {
+        SketchMode::Offline
+    }
+
+    fn ingest(&mut self, batch: &[Entry]) -> Result<()> {
+        for e in batch {
+            self.ctx.check_entry(e)?;
+            self.entries.push(*e);
+        }
+        Ok(())
+    }
+
+    fn finalize(self: Box<Self>) -> Result<(Sketch, PipelineMetrics)> {
+        let AliasSketcher { ctx, entries, t0 } = *self;
+        let mut weights: Vec<f64> = Vec::with_capacity(entries.len());
+        let mut total_weight = 0.0f64;
+        let mut skipped = 0u64;
+        for e in &entries {
+            let w = ctx.dist.weight(e.row, e.val);
+            if w <= 0.0 {
+                skipped += 1;
+            }
+            total_weight += w;
+            weights.push(w);
+        }
+        if total_weight <= 0.0 {
+            return Err(Error::invalid(format!(
+                "{} assigns zero weight to every entry",
+                ctx.plan.kind.name()
+            )));
+        }
+
+        let table = AliasTable::new(&weights);
+        let mut rng = Rng::new(ctx.plan.seed);
+        let mut counts: HashMap<usize, u32> = Default::default();
+        for _ in 0..ctx.plan.s {
+            *counts.entry(table.sample(&mut rng)).or_default() += 1;
+        }
+
+        let s = ctx.plan.s;
+        let drawn: Vec<SketchEntry> = counts
+            .into_iter()
+            .map(|(idx, count)| {
+                let e = entries[idx];
+                let p = weights[idx] / total_weight;
+                SketchEntry {
+                    row: e.row,
+                    col: e.col,
+                    count,
+                    value: count as f64 * e.val as f64 / (s as f64 * p),
+                }
+            })
+            .collect();
+
+        let mut metrics = PipelineMetrics {
+            ingested: entries.len() as u64,
+            skipped_zero_weight: skipped,
+            workers: 1,
+            pre_merge_samples: s,
+            ..Default::default()
+        };
+        let sketch = ctx.assemble(drawn);
+        metrics.sketch_records = sketch.entries.len() as u64;
+        metrics.merged_samples = sketch.entries.iter().map(|e| e.count as u64).sum();
+        metrics.wall = t0.elapsed();
+        Ok((sketch, metrics))
+    }
+}

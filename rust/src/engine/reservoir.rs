@@ -1,0 +1,90 @@
+//! Single-threaded streaming sketching behind the [`Sketcher`] trait.
+//!
+//! One Appendix-A [`ParallelReservoir`] at the full budget `s`: O(1) work
+//! per non-zero, O(s·log(bN)) forward-sketch memory, no worker threads or
+//! merge step. This is the minimal-footprint mode — the sharded mode is
+//! this sampler replicated per shard plus an exact merge.
+
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::samplers::ParallelReservoir;
+use crate::sketch::{Sketch, SketchEntry};
+use crate::sparse::Entry;
+
+use super::metrics::PipelineMetrics;
+use super::{EngineContext, SketchMode, Sketcher};
+
+/// The single-thread streaming [`Sketcher`].
+pub struct ReservoirSketcher {
+    ctx: EngineContext,
+    res: ParallelReservoir<Entry>,
+    ingested: u64,
+    skipped: u64,
+    t0: Instant,
+}
+
+impl ReservoirSketcher {
+    pub(crate) fn new(ctx: EngineContext) -> ReservoirSketcher {
+        let res = ParallelReservoir::new(ctx.plan.s, ctx.plan.seed ^ 0x5245_5356);
+        ReservoirSketcher { ctx, res, ingested: 0, skipped: 0, t0: Instant::now() }
+    }
+}
+
+impl Sketcher for ReservoirSketcher {
+    fn mode(&self) -> SketchMode {
+        SketchMode::Streaming
+    }
+
+    fn ingest(&mut self, batch: &[Entry]) -> Result<()> {
+        for e in batch {
+            self.ctx.check_entry(e)?;
+            self.ingested += 1;
+            let w = self.ctx.dist.weight(e.row, e.val);
+            if w > 0.0 {
+                self.res.push(*e, w);
+            } else {
+                self.skipped += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn finalize(self: Box<Self>) -> Result<(Sketch, PipelineMetrics)> {
+        let ReservoirSketcher { ctx, res, ingested, skipped, t0 } = *self;
+        let total_weight = res.total_weight();
+        if total_weight <= 0.0 {
+            return Err(Error::Pipeline("stream carried no positive-weight entries".into()));
+        }
+        let sketch_records = res.sketch_len() as u64;
+        let s = ctx.plan.s;
+        let samples = res.finalize();
+        let drawn: Vec<SketchEntry> = samples
+            .iter()
+            .map(|smp| {
+                let e = smp.item;
+                let w = ctx.dist.weight(e.row, e.val);
+                let p = w / total_weight;
+                SketchEntry {
+                    row: e.row,
+                    col: e.col,
+                    count: smp.count as u32,
+                    value: smp.count as f64 * e.val as f64 / (s as f64 * p),
+                }
+            })
+            .collect();
+
+        let mut metrics = PipelineMetrics {
+            ingested,
+            skipped_zero_weight: skipped,
+            workers: 1,
+            sketch_records,
+            pre_merge_samples: samples.iter().map(|x| x.count).sum(),
+            ..Default::default()
+        };
+        let sketch = ctx.assemble(drawn);
+        metrics.merged_samples = sketch.entries.iter().map(|e| e.count as u64).sum();
+        metrics.wall = t0.elapsed();
+        Ok((sketch, metrics))
+    }
+}

@@ -1,0 +1,247 @@
+//! Shard-parallel sketching: leader-side routing, worker reservoirs, and
+//! the [`ShardedSketcher`] composing them behind the [`Sketcher`] trait.
+//!
+//! A leader (whoever calls [`Sketcher::ingest`]) routes each non-zero to
+//! one of `W` worker threads by a Fibonacci hash of its row id over
+//! bounded channels (see [`super::backpressure`]). Each worker runs the
+//! paper's Appendix-A [`ParallelReservoir`] with the entry weights of the
+//! chosen distribution — O(1) work per non-zero (Theorem 4.2). Finalize
+//! joins the workers and composes their samples into `s` exact global
+//! i.i.d. draws (see [`super::merge`]).
+
+use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::distributions::MatrixStats;
+use crate::error::{Error, Result};
+use crate::samplers::{multinomial_counts, ParallelReservoir, WeightedSample};
+use crate::sketch::Sketch;
+use crate::sparse::Entry;
+use crate::util::rng::Rng;
+
+use super::backpressure::ShardSender;
+use super::metrics::PipelineMetrics;
+use super::{merge, EngineContext, SketchMode, Sketcher};
+
+/// Pipeline tuning knobs.
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    /// Worker (shard) count. 0 = auto (available_parallelism − 1, min 1).
+    pub workers: usize,
+    /// Bounded channel capacity per worker, in batches.
+    pub channel_cap: usize,
+    /// Entries per batch message (amortizes channel overhead).
+    pub batch: usize,
+    /// Leader-side spill bound per shard, in batches: how many batches may
+    /// park locally when a worker's channel is full before the leader
+    /// blocks on `send` (real backpressure).
+    pub spill_cap: usize,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig { workers: 0, channel_cap: 64, batch: 4096, spill_cap: 8 }
+    }
+}
+
+impl PipelineConfig {
+    /// Resolve `workers == 0` to the auto worker count.
+    pub fn effective_workers(&self) -> usize {
+        if self.workers > 0 {
+            return self.workers;
+        }
+        std::thread::available_parallelism()
+            .map(|p| p.get().saturating_sub(1).max(1))
+            .unwrap_or(1)
+    }
+}
+
+/// Row → shard assignment: Fibonacci hash + Lemire range reduction
+/// (multiply-shift, no integer division on the per-entry hot path). The
+/// budget pre-split and the leader's routing must agree on this.
+#[inline]
+pub(crate) fn shard_of(row: u32, workers: u64) -> usize {
+    let h = (row as u64).wrapping_mul(0x9E37_79B9_7F4A_7C15);
+    (((h as u128) * (workers as u128)) >> 64) as usize
+}
+
+/// One worker's finished output.
+pub(crate) struct WorkerOut {
+    pub shard: usize,
+    pub samples: Vec<WeightedSample<Entry>>,
+    pub total_weight: f64,
+    pub sketch_records: u64,
+    pub skipped: u64,
+}
+
+/// The shard-parallel [`Sketcher`]: workers are spawned at construction,
+/// fed through [`Sketcher::ingest`], and joined + merged at finalize.
+pub struct ShardedSketcher {
+    ctx: EngineContext,
+    cfg: PipelineConfig,
+    workers: usize,
+    senders: Vec<ShardSender>,
+    handles: Vec<JoinHandle<WorkerOut>>,
+    batches: Vec<Vec<Entry>>,
+    /// Pre-split per-shard budgets and normalized stats-derived shard
+    /// probabilities (`None` for trimmed distributions).
+    presplit: Option<(Vec<u64>, Vec<f64>)>,
+    merge_rng: Rng,
+    metrics: PipelineMetrics,
+    t0: Instant,
+}
+
+impl ShardedSketcher {
+    /// Spawn the worker threads and wire up the shard channels.
+    ///
+    /// Shard-budget pre-split (§Perf): when per-row weight totals are
+    /// derivable from the one-pass stats, the per-shard sample counts are
+    /// drawn up front and each worker's reservoir runs at its own
+    /// multinomial share `s_w` — total reservoir work O(s·log N)
+    /// independent of the worker count. Trimmed distributions fall back to
+    /// full-budget workers + the hypergeometric subset merge.
+    pub(crate) fn spawn(
+        ctx: EngineContext,
+        stats: &MatrixStats,
+        cfg: &PipelineConfig,
+    ) -> ShardedSketcher {
+        let workers = cfg.effective_workers();
+        let mut merge_rng = Rng::new(ctx.plan.seed ^ 0x4D45_5247);
+        let presplit: Option<(Vec<u64>, Vec<f64>)> =
+            ctx.dist.row_weight_totals(stats).map(|row_totals| {
+                let mut shard_w = vec![0.0f64; workers];
+                for (i, &w) in row_totals.iter().enumerate() {
+                    shard_w[shard_of(i as u32, workers as u64)] += w;
+                }
+                let total: f64 = shard_w.iter().sum();
+                let counts = multinomial_counts(&mut merge_rng, ctx.plan.s, &shard_w);
+                let q: Vec<f64> = shard_w.iter().map(|w| w / total).collect();
+                (counts, q)
+            });
+
+        let mut senders = Vec::with_capacity(workers);
+        let mut handles = Vec::with_capacity(workers);
+        for w in 0..workers {
+            let (tx, rx): (SyncSender<Vec<Entry>>, Receiver<Vec<Entry>>) =
+                sync_channel(cfg.channel_cap.max(1));
+            senders.push(ShardSender::new(tx, cfg.spill_cap));
+            let dist = ctx.dist.clone();
+            // pre-split: this worker samples only its multinomial share
+            let budget = match &presplit {
+                Some((counts, _)) => counts[w],
+                None => ctx.plan.s,
+            };
+            let seed = ctx.plan.seed ^ (0xA5A5_0000 + w as u64);
+            handles.push(std::thread::spawn(move || -> WorkerOut {
+                let mut res: Option<ParallelReservoir<Entry>> =
+                    (budget > 0).then(|| ParallelReservoir::new(budget, seed));
+                let mut skipped = 0u64;
+                let mut total_weight = 0.0f64;
+                for batch in rx.iter() {
+                    for e in batch {
+                        let wgt = dist.weight(e.row, e.val);
+                        if wgt > 0.0 {
+                            total_weight += wgt;
+                            if let Some(r) = res.as_mut() {
+                                r.push(e, wgt);
+                            }
+                        } else {
+                            skipped += 1;
+                        }
+                    }
+                }
+                let sketch_records = res.as_ref().map_or(0, |r| r.sketch_len() as u64);
+                WorkerOut {
+                    shard: w,
+                    samples: res.map_or_else(Vec::new, |r| r.finalize()),
+                    total_weight,
+                    sketch_records,
+                    skipped,
+                }
+            }));
+        }
+
+        let batches = (0..workers).map(|_| Vec::with_capacity(cfg.batch)).collect();
+        ShardedSketcher {
+            ctx,
+            cfg: cfg.clone(),
+            workers,
+            senders,
+            handles,
+            batches,
+            presplit,
+            merge_rng,
+            metrics: PipelineMetrics { workers, ..Default::default() },
+            t0: Instant::now(),
+        }
+    }
+}
+
+impl Sketcher for ShardedSketcher {
+    fn mode(&self) -> SketchMode {
+        SketchMode::Sharded
+    }
+
+    fn ingest(&mut self, batch: &[Entry]) -> Result<()> {
+        for e in batch {
+            self.ctx.check_entry(e)?;
+            self.metrics.ingested += 1;
+            // row-based sharding (must match the budget pre-split)
+            let shard = shard_of(e.row, self.workers as u64);
+            let b = &mut self.batches[shard];
+            b.push(*e);
+            if b.len() >= self.cfg.batch {
+                let full = std::mem::replace(b, Vec::with_capacity(self.cfg.batch));
+                self.senders[shard].send(full);
+            }
+        }
+        Ok(())
+    }
+
+    fn finalize(mut self: Box<Self>) -> Result<(Sketch, PipelineMetrics)> {
+        // flush tail batches, then close every channel (workers exit their
+        // rx loop once the sender side is fully dropped)
+        for (shard, b) in std::mem::take(&mut self.batches).into_iter().enumerate() {
+            if !b.is_empty() {
+                self.senders[shard].send(b);
+            }
+        }
+        for sender in std::mem::take(&mut self.senders) {
+            self.metrics.backpressure_wait += sender.finish();
+        }
+
+        let mut outs = Vec::with_capacity(self.workers);
+        for h in std::mem::take(&mut self.handles) {
+            outs.push(h.join().map_err(|_| Error::Pipeline("worker panicked".into()))?);
+        }
+        outs.sort_by_key(|o| o.shard);
+        for o in &outs {
+            self.metrics.skipped_zero_weight += o.skipped;
+            self.metrics.sketch_records += o.sketch_records;
+            self.metrics.pre_merge_samples += o.samples.iter().map(|s| s.count).sum::<u64>();
+        }
+
+        let total_weight: f64 = outs.iter().map(|o| o.total_weight).sum();
+        if total_weight <= 0.0 {
+            return Err(Error::Pipeline("stream carried no positive-weight entries".into()));
+        }
+        let entries = match &self.presplit {
+            Some((counts, q)) => {
+                merge::merge_presplit(&outs, counts, q, &self.ctx.dist, self.ctx.plan.s)?
+            }
+            None => merge::merge_observed(
+                &outs,
+                &mut self.merge_rng,
+                &self.ctx.dist,
+                self.ctx.plan.s,
+                total_weight,
+            )?,
+        };
+
+        let sketch = self.ctx.assemble(entries);
+        self.metrics.merged_samples = sketch.entries.iter().map(|e| e.count as u64).sum();
+        self.metrics.wall = self.t0.elapsed();
+        Ok((sketch, self.metrics.clone()))
+    }
+}

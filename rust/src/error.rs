@@ -1,41 +1,73 @@
 //! Crate-wide error type.
+//!
+//! Hand-rolled `Display`/`Error` impls — `thiserror` is not available in
+//! the offline build image (DESIGN.md §4).
 
-use thiserror::Error;
+use std::fmt;
 
 /// Errors produced by matsketch.
-#[derive(Error, Debug)]
+#[derive(Debug)]
 pub enum Error {
     /// Matrix shapes are inconsistent for the requested operation.
-    #[error("shape mismatch: {0}")]
     Shape(String),
 
     /// Invalid argument / configuration value.
-    #[error("invalid argument: {0}")]
     InvalidArg(String),
 
     /// A numeric routine failed to converge or hit a degenerate input.
-    #[error("numeric failure: {0}")]
     Numeric(String),
 
     /// The AOT artifact directory / manifest is missing or malformed.
-    #[error("artifact error: {0}")]
     Artifact(String),
 
     /// JSON / config / matrix-market parse error.
-    #[error("parse error: {0}")]
     Parse(String),
 
-    /// Underlying XLA / PJRT error.
-    #[error("xla error: {0}")]
-    Xla(#[from] xla::Error),
+    /// Underlying XLA / PJRT error (only produced by the `pjrt` feature).
+    Xla(String),
 
     /// I/O error.
-    #[error("io error: {0}")]
-    Io(#[from] std::io::Error),
+    Io(std::io::Error),
 
     /// Streaming pipeline failure (worker panic, channel torn down, ...).
-    #[error("pipeline error: {0}")]
     Pipeline(String),
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Shape(m) => write!(f, "shape mismatch: {m}"),
+            Error::InvalidArg(m) => write!(f, "invalid argument: {m}"),
+            Error::Numeric(m) => write!(f, "numeric failure: {m}"),
+            Error::Artifact(m) => write!(f, "artifact error: {m}"),
+            Error::Parse(m) => write!(f, "parse error: {m}"),
+            Error::Xla(m) => write!(f, "xla error: {m}"),
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+#[cfg(feature = "pjrt")]
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Xla(e.to_string())
+    }
 }
 
 /// Crate-wide result alias.
@@ -49,5 +81,25 @@ impl Error {
     /// Helper: invalid-argument error with a formatted message.
     pub fn invalid(msg: impl Into<String>) -> Self {
         Error::InvalidArg(msg.into())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn display_prefixes_are_stable() {
+        assert_eq!(Error::shape("a != b").to_string(), "shape mismatch: a != b");
+        assert_eq!(Error::invalid("bad s").to_string(), "invalid argument: bad s");
+        assert_eq!(Error::Parse("x".into()).to_string(), "parse error: x");
+    }
+
+    #[test]
+    fn io_errors_convert_and_chain() {
+        let io = std::io::Error::new(std::io::ErrorKind::UnexpectedEof, "eof");
+        let e: Error = io.into();
+        assert!(e.to_string().starts_with("io error:"));
+        assert!(std::error::Error::source(&e).is_some());
     }
 }

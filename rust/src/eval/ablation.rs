@@ -10,9 +10,9 @@
 
 use std::path::Path;
 
-use crate::coordinator::{sketch_stream, PipelineConfig};
 use crate::datasets::{synthetic_cf, SyntheticConfig};
 use crate::distributions::{DistributionKind, MatrixStats};
+use crate::engine::{sketch_entry_stream, PipelineConfig, SketchMode};
 use crate::error::Result;
 use crate::linalg::svd::{rank_k_fro, topk_svd};
 use crate::metrics::quality::{quality_left, quality_right};
@@ -47,7 +47,13 @@ fn eval_sketch(
     engine: &dyn DenseEngine,
 ) -> Result<(f64, f64)> {
     let cfg = PipelineConfig { workers, ..Default::default() };
-    let (sk, _) = sketch_stream(ShuffledStream::new(coo, plan.seed), stats, plan, &cfg)?;
+    let (sk, _) = sketch_entry_stream(
+        SketchMode::Sharded,
+        ShuffledStream::new(coo, plan.seed),
+        stats,
+        plan,
+        &cfg,
+    )?;
     let b = sk.to_csr();
     let svd_b = topk_svd(&b, k + 4, 8, plan.seed ^ 5, engine)?;
     Ok((

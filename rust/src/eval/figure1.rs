@@ -10,11 +10,12 @@ use std::path::Path;
 
 use crate::datasets::DatasetId;
 use crate::distributions::{ahk06_sketch, Ahk06Config, DistributionKind};
+use crate::engine::{sketch_csr, PipelineConfig, SketchMode};
 use crate::error::Result;
 use crate::linalg::svd::{rank_k_fro, topk_svd};
 use crate::metrics::quality::{quality_left, quality_right};
 use crate::runtime::DenseEngine;
-use crate::sketch::{sketch_offline, SketchPlan};
+use crate::sketch::SketchPlan;
 use crate::sparse::Csr;
 use crate::util::log_space;
 
@@ -39,6 +40,10 @@ pub struct Figure1Config {
     pub seed: u64,
     /// Use the small dataset variants.
     pub small: bool,
+    /// Which [`crate::engine::Sketcher`] mode produces the sketches
+    /// (offline is the evaluation reference; all modes sample the same
+    /// distribution).
+    pub mode: SketchMode,
 }
 
 impl Default for Figure1Config {
@@ -52,6 +57,7 @@ impl Default for Figure1Config {
             include_ahk06: false,
             seed: 0,
             small: false,
+            mode: SketchMode::Offline,
         }
     }
 }
@@ -90,8 +96,8 @@ pub fn figure1_dataset(
     for kind in DistributionKind::figure1_set() {
         for &s in &budgets {
             let plan = SketchPlan::new(kind, s as u64).with_seed(cfg.seed ^ s as u64);
-            let sketch = match sketch_offline(a, &plan) {
-                Ok(sk) => sk,
+            let sketch = match sketch_csr(cfg.mode, a, &plan, &PipelineConfig::default()) {
+                Ok((sk, _metrics)) => sk,
                 Err(err) => {
                     crate::warn_log!("fig1 {name}/{}/s={s}: {err}", kind.name());
                     continue;

@@ -13,8 +13,10 @@
 //!
 //! ## Architecture (three layers)
 //!
-//! * **L3 — Rust coordinator** (this crate): streaming pipeline
-//!   ([`coordinator`]), sampling distributions ([`distributions`]),
+//! * **L3 — Rust coordinator** (this crate): the unified sketching engine
+//!   ([`engine`]: one `Sketcher` trait, offline/streaming/sharded modes),
+//!   its pipeline façade ([`coordinator`]), sampling distributions
+//!   ([`distributions`]),
 //!   reservoir/binomial/hypergeometric samplers ([`samplers`]), compressed
 //!   sketch codec ([`sketch`]), sparse/dense substrates ([`sparse`],
 //!   [`linalg`]), dataset generators ([`datasets`]), evaluation harness
@@ -49,6 +51,7 @@ pub mod config;
 pub mod coordinator;
 pub mod datasets;
 pub mod distributions;
+pub mod engine;
 pub mod error;
 pub mod eval;
 pub mod linalg;
@@ -67,6 +70,7 @@ pub use error::{Error, Result};
 pub mod prelude {
     pub use crate::coordinator::{sketch_matrix, sketch_stream, Pipeline, PipelineConfig};
     pub use crate::distributions::{Distribution, DistributionKind};
+    pub use crate::engine::{build_sketcher, sketch_entry_stream, SketchMode, Sketcher};
     pub use crate::error::{Error, Result};
     pub use crate::metrics::MatrixMetrics;
     pub use crate::sketch::{Sketch, SketchPlan};

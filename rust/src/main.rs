@@ -7,16 +7,17 @@
 //! matsketch compress  [--small] [--seed N] [--out DIR]
 //! matsketch theory    [--small] [--seed N] [--out DIR]
 //! matsketch sketch    --input a.bin --s N [--method NAME] [--workers W]
-//!                     [--out sketch.bin]
+//!                     [--mode offline|streaming|sharded] [--out sketch.bin]
 //! matsketch gen       --dataset NAME [--seed N] --out a.bin
 //! ```
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
-use matsketch::coordinator::{sketch_stream, PipelineConfig};
+use matsketch::coordinator::PipelineConfig;
 use matsketch::datasets::DatasetId;
 use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::{Error, Result};
 use matsketch::eval::{run_compression, run_figure1, run_tables, run_theory, Figure1Config};
 use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
@@ -115,6 +116,9 @@ fn real_main() -> Result<()> {
                 .get_parse("s")?
                 .ok_or_else(|| Error::invalid("sketch requires --s <budget>"))?;
             let kind = parse_method(args.get_or("method", "bernstein"))?;
+            let mode_name = args.get_or("mode", "sharded");
+            let mode = SketchMode::parse(mode_name)
+                .ok_or_else(|| Error::invalid(format!("unknown mode {mode_name}")))?;
             // pass 1: stats
             let mut st_stream = FileStream::open(Path::new(input))?;
             let (m, n) = {
@@ -124,18 +128,18 @@ fn real_main() -> Result<()> {
             let mut stats = MatrixStats::new(m, n);
             {
                 use matsketch::stream::EntryStream;
-                while let Some(e) = st_stream.next_entry() {
+                while let Some(e) = st_stream.next_entry()? {
                     stats.push(&e);
                 }
             }
-            // pass 2: streaming sketch
+            // pass 2: streaming sketch through the unified engine
             let plan = SketchPlan::new(kind, s).with_seed(seed);
             let cfg = PipelineConfig {
                 workers: args.get_parse_or("workers", 0)?,
                 ..Default::default()
             };
             let stream = FileStream::open(Path::new(input))?;
-            let (sketch, metrics) = sketch_stream(stream, &stats, &plan, &cfg)?;
+            let (sketch, metrics) = sketch_entry_stream(mode, stream, &stats, &plan, &cfg)?;
             info!("pipeline: {}", metrics.summary());
             let enc = encode_sketch(&sketch)?;
             info!(
@@ -222,7 +226,7 @@ COMMON OPTIONS:
 
 SKETCH OPTIONS:
   --input FILE --s N [--method bernstein|row-l1|l1|l2|l2-trim-0.1]
-  [--workers W] [--sketch-out FILE]
+  [--mode offline|streaming|sharded] [--workers W] [--sketch-out FILE]
 "
     );
 }

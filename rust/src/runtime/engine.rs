@@ -1,277 +1,344 @@
 //! [`XlaEngine`] — executes the AOT HLO artifacts on the PJRT CPU client.
 //!
-//! One `PjRtLoadedExecutable` is compiled per manifest entry at
-//! construction and cached for the life of the engine. Callers use natural
-//! shapes; this module windows rows into the artifact block size
-//! (accumulating across windows for reductions) and zero-pads `k`/`c` to
-//! the artifact dimensions — padding is exact for every op (zero rows and
-//! columns contribute nothing to Gram/projection sums, and the padded
-//! power-iteration dimensions carry eigenvalue 0).
+//! The real implementation needs the `xla` crate (PJRT bindings), which is
+//! only present in builds with the `pjrt` feature enabled. Default builds
+//! get a stub whose constructor always fails, so [`super::default_engine`]
+//! falls back to the pure-Rust [`super::RustEngine`]; every consumer is
+//! written against the [`super::DenseEngine`] trait and never notices.
 
-use std::collections::HashMap;
-use std::path::Path;
+#[cfg(feature = "pjrt")]
+pub use pjrt_impl::XlaEngine;
 
-use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+#[cfg(not(feature = "pjrt"))]
+pub use stub::XlaEngine;
 
-use crate::error::{Error, Result};
-use crate::sparse::Dense;
+#[cfg(not(feature = "pjrt"))]
+mod stub {
+    use std::path::Path;
 
-use super::manifest::{ArtifactEntry, Manifest};
-use super::DenseEngine;
+    use crate::error::{Error, Result};
+    use crate::runtime::DenseEngine;
+    use crate::sparse::Dense;
 
-struct Compiled {
-    entry: ArtifactEntry,
-    exe: PjRtLoadedExecutable,
-}
+    /// Stand-in for the PJRT-backed engine in builds without the `pjrt`
+    /// feature. [`XlaEngine::from_dir`] always fails, so callers fall back
+    /// to [`crate::runtime::RustEngine`]; the `DenseEngine` impl exists
+    /// only so the two engines stay interchangeable at the type level.
+    pub struct XlaEngine {
+        _private: (),
+    }
 
-/// PJRT-backed engine. `Send + Sync`: the PJRT CPU client serializes
-/// executions internally; matsketch only calls it from one evaluation
-/// thread at a time.
-pub struct XlaEngine {
-    _client: PjRtClient,
-    /// op name → variants sorted by ascending block rows.
-    ops: HashMap<String, Vec<Compiled>>,
-}
+    fn unavailable() -> Error {
+        Error::Artifact(
+            "matsketch was built without the `pjrt` feature; \
+             XLA artifacts cannot be loaded (the Rust fallback engine is used instead)"
+                .into(),
+        )
+    }
 
-// SAFETY: the xla crate wraps raw pointers without Send/Sync markers; the
-// PJRT CPU client is thread-compatible and matsketch confines engine use to
-// a single thread at a time (benches/eval drive it sequentially).
-unsafe impl Send for XlaEngine {}
-unsafe impl Sync for XlaEngine {}
-
-impl XlaEngine {
-    /// Load every artifact in `dir` (per its manifest) and compile.
-    pub fn from_dir(dir: &Path) -> Result<XlaEngine> {
-        let manifest = Manifest::load(dir)?;
-        let client = PjRtClient::cpu()?;
-        let mut ops: HashMap<String, Vec<Compiled>> = HashMap::new();
-        for entry in &manifest.entries {
-            let path = manifest.path_of(entry);
-            let proto = HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
-            )?;
-            let comp = XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            ops.entry(entry.op.clone())
-                .or_default()
-                .push(Compiled { entry: entry.clone(), exe });
+    impl XlaEngine {
+        /// Always fails in non-`pjrt` builds.
+        pub fn from_dir(_dir: &Path) -> Result<XlaEngine> {
+            Err(unavailable())
         }
-        for v in ops.values_mut() {
-            v.sort_by_key(|c| c.entry.rows);
+    }
+
+    impl DenseEngine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla-unavailable"
         }
-        crate::info!(
-            "XlaEngine: compiled {} artifacts from {}",
-            manifest.entries.len(),
-            dir.display()
-        );
-        Ok(XlaEngine { _client: client, ops })
-    }
-
-    /// Pick the variant with the least padding waste for `rows`.
-    fn pick(&self, op: &str, rows: usize) -> Result<&Compiled> {
-        let vs = self
-            .ops
-            .get(op)
-            .ok_or_else(|| Error::Artifact(format!("no artifact for op {op}")))?;
-        Ok(vs
-            .iter()
-            .find(|c| c.entry.rows >= rows)
-            .unwrap_or_else(|| vs.last().unwrap()))
-    }
-
-    fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<Literal> {
-        debug_assert_eq!(data.len(), rows * cols);
-        Ok(Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
-    }
-
-    fn run(&self, c: &Compiled, args: &[&Literal]) -> Result<Vec<Literal>> {
-        let result = c.exe.execute::<&Literal>(args)?;
-        let lit = result[0][0].to_literal_sync()?;
-        Ok(lit.to_tuple()?)
-    }
-
-    /// Pad `src` (rows×cols) into shape (rows_pad×cols_pad), zero-filled.
-    fn pad_block(src: &Dense, r0: usize, rows_pad: usize, cols_pad: usize) -> Vec<f32> {
-        let mut out = vec![0.0f32; rows_pad * cols_pad];
-        let hi = (r0 + rows_pad).min(src.rows);
-        for i in r0..hi {
-            let srow = src.row(i);
-            let take = srow.len().min(cols_pad);
-            out[(i - r0) * cols_pad..(i - r0) * cols_pad + take]
-                .copy_from_slice(&srow[..take]);
+        fn gram(&self, _y: &Dense) -> Result<Vec<f64>> {
+            Err(unavailable())
         }
-        out
+        fn apply(&self, _y: &Dense, _t: &[f64]) -> Result<Dense> {
+            Err(unavailable())
+        }
+        fn proj(&self, _q: &Dense, _a: &Dense) -> Result<Dense> {
+            Err(unavailable())
+        }
+        fn power_iter(&self, _g: &[f64], _k: usize) -> Result<(f64, Vec<f64>)> {
+            Err(unavailable())
+        }
+        fn probs(&self, _a: &Dense, _w: &[f32], _power: u8) -> Result<Dense> {
+            Err(unavailable())
+        }
     }
 }
 
-impl DenseEngine for XlaEngine {
-    fn name(&self) -> &'static str {
-        "xla"
+#[cfg(feature = "pjrt")]
+mod pjrt_impl {
+    //! One `PjRtLoadedExecutable` is compiled per manifest entry at
+    //! construction and cached for the life of the engine. Callers use
+    //! natural shapes; this module windows rows into the artifact block
+    //! size (accumulating across windows for reductions) and zero-pads
+    //! `k`/`c` to the artifact dimensions — padding is exact for every op
+    //! (zero rows and columns contribute nothing to Gram/projection sums,
+    //! and the padded power-iteration dimensions carry eigenvalue 0).
+
+    use std::collections::HashMap;
+    use std::path::Path;
+
+    use xla::{HloModuleProto, Literal, PjRtClient, PjRtLoadedExecutable, XlaComputation};
+
+    use crate::error::{Error, Result};
+    use crate::runtime::manifest::{ArtifactEntry, Manifest};
+    use crate::runtime::DenseEngine;
+    use crate::sparse::Dense;
+
+    struct Compiled {
+        entry: ArtifactEntry,
+        exe: PjRtLoadedExecutable,
     }
 
-    fn gram(&self, y: &Dense) -> Result<Vec<f64>> {
-        let k = y.cols;
-        let c = self.pick("gram", y.rows)?;
-        let (rr, kk) = (c.entry.rows, c.entry.k);
-        if k > kk {
-            return Err(Error::shape(format!("gram: k={k} exceeds artifact k={kk}")));
-        }
-        let mut acc = vec![0.0f64; kk * kk];
-        let mut r0 = 0;
-        while r0 < y.rows {
-            let buf = Self::pad_block(y, r0, rr, kk);
-            let lit = Self::literal_2d(&buf, rr, kk)?;
-            let outs = self.run(c, &[&lit])?;
-            let g: Vec<f32> = outs[0].to_vec()?;
-            for (a, v) in acc.iter_mut().zip(g.iter()) {
-                *a += *v as f64;
-            }
-            r0 += rr;
-        }
-        // slice kk×kk down to k×k
-        let mut out = vec![0.0f64; k * k];
-        for a in 0..k {
-            for b in 0..k {
-                out[a * k + b] = acc[a * kk + b];
-            }
-        }
-        Ok(out)
+    /// PJRT-backed engine. `Send + Sync`: the PJRT CPU client serializes
+    /// executions internally; matsketch only calls it from one evaluation
+    /// thread at a time.
+    pub struct XlaEngine {
+        _client: PjRtClient,
+        /// op name → variants sorted by ascending block rows.
+        ops: HashMap<String, Vec<Compiled>>,
     }
 
-    fn apply(&self, y: &Dense, t: &[f64]) -> Result<Dense> {
-        let k = y.cols;
-        assert_eq!(t.len(), k * k);
-        let c = self.pick("apply", y.rows)?;
-        let (rr, kk) = (c.entry.rows, c.entry.k);
-        if k > kk {
-            return Err(Error::shape(format!("apply: k={k} exceeds artifact k={kk}")));
-        }
-        // pad T to kk×kk (zero pad: extra output columns are zero, sliced off)
-        let mut tpad = vec![0.0f32; kk * kk];
-        for a in 0..k {
-            for b in 0..k {
-                tpad[a * kk + b] = t[a * k + b] as f32;
+    // SAFETY: the xla crate wraps raw pointers without Send/Sync markers; the
+    // PJRT CPU client is thread-compatible and matsketch confines engine use to
+    // a single thread at a time (benches/eval drive it sequentially).
+    unsafe impl Send for XlaEngine {}
+    unsafe impl Sync for XlaEngine {}
+
+    impl XlaEngine {
+        /// Load every artifact in `dir` (per its manifest) and compile.
+        pub fn from_dir(dir: &Path) -> Result<XlaEngine> {
+            let manifest = Manifest::load(dir)?;
+            let client = PjRtClient::cpu()?;
+            let mut ops: HashMap<String, Vec<Compiled>> = HashMap::new();
+            for entry in &manifest.entries {
+                let path = manifest.path_of(entry);
+                let proto = HloModuleProto::from_text_file(
+                    path.to_str().ok_or_else(|| Error::Artifact("non-utf8 path".into()))?,
+                )?;
+                let comp = XlaComputation::from_proto(&proto);
+                let exe = client.compile(&comp)?;
+                ops.entry(entry.op.clone())
+                    .or_default()
+                    .push(Compiled { entry: entry.clone(), exe });
             }
+            for v in ops.values_mut() {
+                v.sort_by_key(|c| c.entry.rows);
+            }
+            crate::info!(
+                "XlaEngine: compiled {} artifacts from {}",
+                manifest.entries.len(),
+                dir.display()
+            );
+            Ok(XlaEngine { _client: client, ops })
         }
-        let t_lit = Self::literal_2d(&tpad, kk, kk)?;
-        let mut out = Dense::zeros(y.rows, k);
-        let mut r0 = 0;
-        while r0 < y.rows {
-            let buf = Self::pad_block(y, r0, rr, kk);
-            let lit = Self::literal_2d(&buf, rr, kk)?;
-            let outs = self.run(c, &[&lit, &t_lit])?;
-            let q: Vec<f32> = outs[0].to_vec()?;
-            let hi = (r0 + rr).min(y.rows);
+
+        /// Pick the variant with the least padding waste for `rows`.
+        fn pick(&self, op: &str, rows: usize) -> Result<&Compiled> {
+            let vs = self
+                .ops
+                .get(op)
+                .ok_or_else(|| Error::Artifact(format!("no artifact for op {op}")))?;
+            Ok(vs
+                .iter()
+                .find(|c| c.entry.rows >= rows)
+                .unwrap_or_else(|| vs.last().unwrap()))
+        }
+
+        fn literal_2d(data: &[f32], rows: usize, cols: usize) -> Result<Literal> {
+            debug_assert_eq!(data.len(), rows * cols);
+            Ok(Literal::vec1(data).reshape(&[rows as i64, cols as i64])?)
+        }
+
+        fn run(&self, c: &Compiled, args: &[&Literal]) -> Result<Vec<Literal>> {
+            let result = c.exe.execute::<&Literal>(args)?;
+            let lit = result[0][0].to_literal_sync()?;
+            Ok(lit.to_tuple()?)
+        }
+
+        /// Pad `src` (rows×cols) into shape (rows_pad×cols_pad), zero-filled.
+        fn pad_block(src: &Dense, r0: usize, rows_pad: usize, cols_pad: usize) -> Vec<f32> {
+            let mut out = vec![0.0f32; rows_pad * cols_pad];
+            let hi = (r0 + rows_pad).min(src.rows);
             for i in r0..hi {
-                out.row_mut(i).copy_from_slice(&q[(i - r0) * kk..(i - r0) * kk + k]);
+                let srow = src.row(i);
+                let take = srow.len().min(cols_pad);
+                out[(i - r0) * cols_pad..(i - r0) * cols_pad + take]
+                    .copy_from_slice(&srow[..take]);
             }
-            r0 += rr;
+            out
         }
-        Ok(out)
     }
 
-    fn proj(&self, q: &Dense, a: &Dense) -> Result<Dense> {
-        assert_eq!(q.rows, a.rows);
-        let (k, cols) = (q.cols, a.cols);
-        let c = self.pick("proj", q.rows)?;
-        let (rr, kk, cc) = (c.entry.rows, c.entry.k, c.entry.cols);
-        if k > kk {
-            return Err(Error::shape(format!("proj: k={k} exceeds artifact k={kk}")));
+    impl DenseEngine for XlaEngine {
+        fn name(&self) -> &'static str {
+            "xla"
         }
-        let mut out = Dense::zeros(k, cols);
-        let mut c0 = 0;
-        while c0 < cols {
-            let cw = cc.min(cols - c0);
-            let mut acc = vec![0.0f64; kk * cc];
+
+        fn gram(&self, y: &Dense) -> Result<Vec<f64>> {
+            let k = y.cols;
+            let c = self.pick("gram", y.rows)?;
+            let (rr, kk) = (c.entry.rows, c.entry.k);
+            if k > kk {
+                return Err(Error::shape(format!("gram: k={k} exceeds artifact k={kk}")));
+            }
+            let mut acc = vec![0.0f64; kk * kk];
             let mut r0 = 0;
-            while r0 < q.rows {
-                let qbuf = Self::pad_block(q, r0, rr, kk);
-                // column-window of A, padded
-                let mut abuf = vec![0.0f32; rr * cc];
-                let hi = (r0 + rr).min(a.rows);
-                for i in r0..hi {
-                    let srow = &a.row(i)[c0..c0 + cw];
-                    abuf[(i - r0) * cc..(i - r0) * cc + cw].copy_from_slice(srow);
-                }
-                let q_lit = Self::literal_2d(&qbuf, rr, kk)?;
-                let a_lit = Self::literal_2d(&abuf, rr, cc)?;
-                let outs = self.run(c, &[&q_lit, &a_lit])?;
-                let p: Vec<f32> = outs[0].to_vec()?;
-                for (av, pv) in acc.iter_mut().zip(p.iter()) {
-                    *av += *pv as f64;
+            while r0 < y.rows {
+                let buf = Self::pad_block(y, r0, rr, kk);
+                let lit = Self::literal_2d(&buf, rr, kk)?;
+                let outs = self.run(c, &[&lit])?;
+                let g: Vec<f32> = outs[0].to_vec()?;
+                for (a, v) in acc.iter_mut().zip(g.iter()) {
+                    *a += *v as f64;
                 }
                 r0 += rr;
             }
-            for x in 0..k {
-                for j in 0..cw {
-                    out.set(x, c0 + j, acc[x * cc + j] as f32);
+            // slice kk×kk down to k×k
+            let mut out = vec![0.0f64; k * k];
+            for a in 0..k {
+                for b in 0..k {
+                    out[a * k + b] = acc[a * kk + b];
                 }
             }
-            c0 += cw;
+            Ok(out)
         }
-        Ok(out)
-    }
 
-    fn power_iter(&self, g: &[f64], k: usize) -> Result<(f64, Vec<f64>)> {
-        assert_eq!(g.len(), k * k);
-        let c = self.pick("power_iter", 0)?;
-        let kk = c.entry.k;
-        if k > kk {
-            return Err(Error::shape(format!("power_iter: k={k} exceeds artifact k={kk}")));
-        }
-        let mut gpad = vec![0.0f32; kk * kk];
-        for a in 0..k {
-            for b in 0..k {
-                gpad[a * kk + b] = g[a * k + b] as f32;
+        fn apply(&self, y: &Dense, t: &[f64]) -> Result<Dense> {
+            let k = y.cols;
+            assert_eq!(t.len(), k * k);
+            let c = self.pick("apply", y.rows)?;
+            let (rr, kk) = (c.entry.rows, c.entry.k);
+            if k > kk {
+                return Err(Error::shape(format!("apply: k={k} exceeds artifact k={kk}")));
             }
-        }
-        // v0: ones on the live dimensions, zero on padding, so the padded
-        // (eigenvalue-0) dimensions never mix in.
-        let mut v0 = vec![0.0f32; kk];
-        v0[..k].iter_mut().for_each(|x| *x = 1.0);
-        let g_lit = Self::literal_2d(&gpad, kk, kk)?;
-        let v_lit = Literal::vec1(&v0);
-        let outs = self.run(c, &[&g_lit, &v_lit])?;
-        let lam: Vec<f32> = outs[0].to_vec()?;
-        let v: Vec<f32> = outs[1].to_vec()?;
-        Ok((lam[0] as f64, v[..k].iter().map(|&x| x as f64).collect()))
-    }
-
-    fn probs(&self, a: &Dense, w: &[f32], power: u8) -> Result<Dense> {
-        assert_eq!(w.len(), a.rows);
-        let op = match power {
-            1 => "probs_l1",
-            2 => "probs_l2",
-            p => return Err(Error::invalid(format!("probs power must be 1|2, got {p}"))),
-        };
-        let c = self.pick(op, a.rows)?;
-        let (rr, cc) = (c.entry.rows, c.entry.cols);
-        let mut out = Dense::zeros(a.rows, a.cols);
-        let mut c0 = 0;
-        while c0 < a.cols {
-            let cw = cc.min(a.cols - c0);
+            // pad T to kk×kk (zero pad: extra output columns are zero, sliced off)
+            let mut tpad = vec![0.0f32; kk * kk];
+            for a in 0..k {
+                for b in 0..k {
+                    tpad[a * kk + b] = t[a * k + b] as f32;
+                }
+            }
+            let t_lit = Self::literal_2d(&tpad, kk, kk)?;
+            let mut out = Dense::zeros(y.rows, k);
             let mut r0 = 0;
-            while r0 < a.rows {
-                let hi = (r0 + rr).min(a.rows);
-                let mut abuf = vec![0.0f32; rr * cc];
-                let mut wbuf = vec![0.0f32; rr];
+            while r0 < y.rows {
+                let buf = Self::pad_block(y, r0, rr, kk);
+                let lit = Self::literal_2d(&buf, rr, kk)?;
+                let outs = self.run(c, &[&lit, &t_lit])?;
+                let q: Vec<f32> = outs[0].to_vec()?;
+                let hi = (r0 + rr).min(y.rows);
                 for i in r0..hi {
-                    abuf[(i - r0) * cc..(i - r0) * cc + cw]
-                        .copy_from_slice(&a.row(i)[c0..c0 + cw]);
-                    wbuf[i - r0] = w[i];
-                }
-                let a_lit = Self::literal_2d(&abuf, rr, cc)?;
-                let w_lit = Self::literal_2d(&wbuf, rr, 1)?;
-                let outs = self.run(c, &[&a_lit, &w_lit])?;
-                let p: Vec<f32> = outs[0].to_vec()?;
-                for i in r0..hi {
-                    out.row_mut(i)[c0..c0 + cw]
-                        .copy_from_slice(&p[(i - r0) * cc..(i - r0) * cc + cw]);
+                    out.row_mut(i).copy_from_slice(&q[(i - r0) * kk..(i - r0) * kk + k]);
                 }
                 r0 += rr;
             }
-            c0 += cw;
+            Ok(out)
         }
-        Ok(out)
+
+        fn proj(&self, q: &Dense, a: &Dense) -> Result<Dense> {
+            assert_eq!(q.rows, a.rows);
+            let (k, cols) = (q.cols, a.cols);
+            let c = self.pick("proj", q.rows)?;
+            let (rr, kk, cc) = (c.entry.rows, c.entry.k, c.entry.cols);
+            if k > kk {
+                return Err(Error::shape(format!("proj: k={k} exceeds artifact k={kk}")));
+            }
+            let mut out = Dense::zeros(k, cols);
+            let mut c0 = 0;
+            while c0 < cols {
+                let cw = cc.min(cols - c0);
+                let mut acc = vec![0.0f64; kk * cc];
+                let mut r0 = 0;
+                while r0 < q.rows {
+                    let qbuf = Self::pad_block(q, r0, rr, kk);
+                    // column-window of A, padded
+                    let mut abuf = vec![0.0f32; rr * cc];
+                    let hi = (r0 + rr).min(a.rows);
+                    for i in r0..hi {
+                        let srow = &a.row(i)[c0..c0 + cw];
+                        abuf[(i - r0) * cc..(i - r0) * cc + cw].copy_from_slice(srow);
+                    }
+                    let q_lit = Self::literal_2d(&qbuf, rr, kk)?;
+                    let a_lit = Self::literal_2d(&abuf, rr, cc)?;
+                    let outs = self.run(c, &[&q_lit, &a_lit])?;
+                    let p: Vec<f32> = outs[0].to_vec()?;
+                    for (av, pv) in acc.iter_mut().zip(p.iter()) {
+                        *av += *pv as f64;
+                    }
+                    r0 += rr;
+                }
+                for x in 0..k {
+                    for j in 0..cw {
+                        out.set(x, c0 + j, acc[x * cc + j] as f32);
+                    }
+                }
+                c0 += cw;
+            }
+            Ok(out)
+        }
+
+        fn power_iter(&self, g: &[f64], k: usize) -> Result<(f64, Vec<f64>)> {
+            assert_eq!(g.len(), k * k);
+            let c = self.pick("power_iter", 0)?;
+            let kk = c.entry.k;
+            if k > kk {
+                return Err(Error::shape(format!("power_iter: k={k} exceeds artifact k={kk}")));
+            }
+            let mut gpad = vec![0.0f32; kk * kk];
+            for a in 0..k {
+                for b in 0..k {
+                    gpad[a * kk + b] = g[a * k + b] as f32;
+                }
+            }
+            // v0: ones on the live dimensions, zero on padding, so the padded
+            // (eigenvalue-0) dimensions never mix in.
+            let mut v0 = vec![0.0f32; kk];
+            v0[..k].iter_mut().for_each(|x| *x = 1.0);
+            let g_lit = Self::literal_2d(&gpad, kk, kk)?;
+            let v_lit = Literal::vec1(&v0);
+            let outs = self.run(c, &[&g_lit, &v_lit])?;
+            let lam: Vec<f32> = outs[0].to_vec()?;
+            let v: Vec<f32> = outs[1].to_vec()?;
+            Ok((lam[0] as f64, v[..k].iter().map(|&x| x as f64).collect()))
+        }
+
+        fn probs(&self, a: &Dense, w: &[f32], power: u8) -> Result<Dense> {
+            assert_eq!(w.len(), a.rows);
+            let op = match power {
+                1 => "probs_l1",
+                2 => "probs_l2",
+                p => return Err(Error::invalid(format!("probs power must be 1|2, got {p}"))),
+            };
+            let c = self.pick(op, a.rows)?;
+            let (rr, cc) = (c.entry.rows, c.entry.cols);
+            let mut out = Dense::zeros(a.rows, a.cols);
+            let mut c0 = 0;
+            while c0 < a.cols {
+                let cw = cc.min(a.cols - c0);
+                let mut r0 = 0;
+                while r0 < a.rows {
+                    let hi = (r0 + rr).min(a.rows);
+                    let mut abuf = vec![0.0f32; rr * cc];
+                    let mut wbuf = vec![0.0f32; rr];
+                    for i in r0..hi {
+                        abuf[(i - r0) * cc..(i - r0) * cc + cw]
+                            .copy_from_slice(&a.row(i)[c0..c0 + cw]);
+                        wbuf[i - r0] = w[i];
+                    }
+                    let a_lit = Self::literal_2d(&abuf, rr, cc)?;
+                    let w_lit = Self::literal_2d(&wbuf, rr, 1)?;
+                    let outs = self.run(c, &[&a_lit, &w_lit])?;
+                    let p: Vec<f32> = outs[0].to_vec()?;
+                    for i in r0..hi {
+                        out.row_mut(i)[c0..c0 + cw]
+                            .copy_from_slice(&p[(i - r0) * cc..(i - r0) * cc + cw]);
+                    }
+                    r0 += rr;
+                }
+                c0 += cw;
+            }
+            Ok(out)
+        }
     }
 }

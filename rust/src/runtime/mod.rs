@@ -3,9 +3,10 @@
 //! are produced once by `make artifacts`.
 //!
 //! All consumers (SVD, quality metrics, probability tables) are written
-//! against the [`DenseEngine`] trait; [`XlaEngine`] executes the artifacts,
-//! [`RustEngine`] is the dependency-free fallback, and tests cross-validate
-//! the two.
+//! against the [`DenseEngine`] trait; [`XlaEngine`] executes the artifacts
+//! (requires the `pjrt` cargo feature + the vendored `xla` crate — a stub
+//! that always falls back otherwise), [`RustEngine`] is the
+//! dependency-free fallback, and tests cross-validate the two.
 
 pub mod engine;
 pub mod fallback;

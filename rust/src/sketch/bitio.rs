@@ -168,4 +168,135 @@ mod tests {
         assert_eq!(r.get_bits(8), Some(0xFF));
         assert_eq!(r.get_bit(), None);
     }
+
+    #[test]
+    fn gamma_v1_and_u64_max_edges_roundtrip() {
+        // v=1 is the shortest code (a single 1-bit); v=u64::MAX the
+        // longest (63 zeros + 64 digits = 127 bits). Adjacent values make
+        // sure neither code bleeds into its neighbours.
+        let mut w = BitWriter::new();
+        w.put_gamma(1);
+        w.put_gamma(u64::MAX);
+        w.put_gamma(1);
+        w.put_gamma(u64::MAX - 1);
+        assert_eq!(w.bit_len(), 1 + 127 + 1 + 127);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.get_gamma(), Some(1));
+        assert_eq!(r.get_gamma(), Some(u64::MAX));
+        assert_eq!(r.get_gamma(), Some(1));
+        assert_eq!(r.get_gamma(), Some(u64::MAX - 1));
+    }
+
+    #[test]
+    fn final_byte_padding_boundary() {
+        // Every alignment of the final byte: n written bits leave
+        // (8 - n % 8) % 8 zero pad bits, which must neither corrupt the
+        // payload nor decode as an extra value.
+        for n in 1..=32u32 {
+            let mut w = BitWriter::new();
+            for i in 0..n {
+                w.put_bit(i % 2 == 0);
+            }
+            assert_eq!(w.bit_len(), n as usize);
+            let buf = w.finish();
+            assert_eq!(buf.len(), (n as usize).div_ceil(8), "n={n}");
+            let mut r = BitReader::new(&buf);
+            for i in 0..n {
+                assert_eq!(r.get_bit(), Some(i % 2 == 0), "n={n} bit {i}");
+            }
+            // pad bits are zeros, then a hard end
+            for _ in n..(buf.len() as u32 * 8) {
+                assert_eq!(r.get_bit(), Some(false), "n={n}: pad bit not zero");
+            }
+            assert_eq!(r.get_bit(), None, "n={n}: read past the buffer");
+        }
+    }
+
+    #[test]
+    fn padding_never_decodes_as_a_value() {
+        // 5-bit payload (γ(5) = 00101) leaves 3 zero pad bits: a decoder
+        // walking the stream must get exactly one value then a clean end.
+        let mut w = BitWriter::new();
+        w.put_gamma(5);
+        let buf = w.finish();
+        let mut r = BitReader::new(&buf);
+        assert_eq!(r.get_gamma(), Some(5));
+        assert_eq!(r.get_gamma(), None);
+    }
+
+    #[test]
+    fn prop_gamma_stream_roundtrips_bit_exact() {
+        use crate::testing::prop::{check, shrink_vec, PropConfig};
+        check(
+            PropConfig { cases: 150, seed: 0xB170 },
+            |rng| {
+                let n = 1 + rng.usize_below(80);
+                (0..n)
+                    .map(|_| match rng.u64_below(5) {
+                        0 => 1 + rng.u64_below(8),                 // shortest codes
+                        1 => 1 + rng.u64_below(1 << 16),           // mid-range
+                        2 => u64::MAX - rng.u64_below(1 << 8),     // near the top
+                        3 => (1u64 << (rng.u64_below(63) as u32)), // power-of-two boundaries
+                        _ => (rng.next_u64() >> (rng.u64_below(64) as u32)).max(1),
+                    })
+                    .collect::<Vec<u64>>()
+            },
+            |v| shrink_vec(v),
+            |vals| {
+                let mut w = BitWriter::new();
+                for &v in vals {
+                    w.put_gamma(v);
+                }
+                let payload_bits = w.bit_len();
+                let buf = w.finish();
+                // finish() pads the final byte with < 8 zero bits
+                let padded = buf.len() * 8;
+                if padded < payload_bits || padded - payload_bits >= 8 {
+                    return false;
+                }
+                let mut r = BitReader::new(&buf);
+                vals.iter().all(|&v| r.get_gamma() == Some(v))
+                    && r.bit_pos() == payload_bits
+            },
+        );
+    }
+
+    #[test]
+    fn prop_mixed_bits_and_gammas_roundtrip() {
+        // The codec interleaves fixed-width fields, γ codes, and sign
+        // bits; the bit cursor must stay exact across any interleaving.
+        use crate::testing::prop::{check, shrink_vec, PropConfig};
+        check(
+            PropConfig { cases: 100, seed: 0xB171 },
+            |rng| {
+                let n = 1 + rng.usize_below(40);
+                (0..n)
+                    .map(|_| {
+                        let width = 1 + rng.u64_below(32) as u32;
+                        let value = rng.next_u64() & ((1u64 << width) - 1);
+                        let gamma = 1 + rng.u64_below(1 << 20);
+                        let sign = rng.bernoulli(0.5);
+                        (width, value, gamma, sign)
+                    })
+                    .collect::<Vec<(u32, u64, u64, bool)>>()
+            },
+            |v| shrink_vec(v),
+            |fields| {
+                let mut w = BitWriter::new();
+                for &(width, value, gamma, sign) in fields {
+                    w.put_bits(value, width);
+                    w.put_gamma(gamma);
+                    w.put_bit(sign);
+                }
+                let buf = w.finish();
+                let mut r = BitReader::new(&buf);
+                fields.iter().all(|&(width, value, gamma, sign)| {
+                    r.get_bits(width) == Some(value)
+                        && r.get_gamma() == Some(gamma)
+                        && r.get_bit() == Some(sign)
+                })
+            },
+        );
+    }
 }

@@ -1,14 +1,13 @@
-//! Sketch construction: the offline (alias-table) path used by the
-//! evaluation harness, and the shared plan type. The streaming path lives
-//! in [`crate::coordinator`].
+//! Sketch construction: the shared plan type and the offline entry point,
+//! routed through the unified [`crate::engine`] (alias-table mode). The
+//! streaming paths live behind the same [`crate::engine::Sketcher`] trait.
 
-use crate::distributions::{Distribution, DistributionKind, MatrixStats};
-use crate::error::{Error, Result};
-use crate::samplers::AliasTable;
+use crate::distributions::DistributionKind;
+use crate::engine::{self, PipelineConfig, SketchMode};
+use crate::error::Result;
 use crate::sparse::Csr;
-use crate::util::rng::Rng;
 
-use super::{Sketch, SketchEntry};
+use super::Sketch;
 
 /// How to sketch a matrix.
 #[derive(Clone, Debug)]
@@ -44,78 +43,19 @@ impl SketchPlan {
 
 /// Build a sketch of an in-memory CSR matrix by drawing `s` i.i.d. entries
 /// from the plan's distribution via one alias table (O(nnz) setup, O(1)
-/// per draw).
+/// per draw). Equivalent to [`engine::sketch_csr`] in
+/// [`SketchMode::Offline`] with the run metrics dropped.
 pub fn sketch_offline(a: &Csr, plan: &SketchPlan) -> Result<Sketch> {
-    if plan.s == 0 {
-        return Err(Error::invalid("sample budget must be positive"));
-    }
-    let stats = MatrixStats::from_csr(a);
-    let dist = Distribution::prepare(plan.kind, &stats, plan.s, plan.delta)?;
-
-    // flat entry list + weights
-    let nnz = a.nnz();
-    let mut rows: Vec<u32> = Vec::with_capacity(nnz);
-    for i in 0..a.m {
-        let c = a.indptr[i + 1] - a.indptr[i];
-        rows.extend(std::iter::repeat(i as u32).take(c));
-    }
-    let mut weights: Vec<f64> = Vec::with_capacity(nnz);
-    let mut total_weight = 0.0f64;
-    for idx in 0..nnz {
-        let w = dist.weight(rows[idx], a.values[idx]);
-        total_weight += w;
-        weights.push(w);
-    }
-    if total_weight <= 0.0 {
-        return Err(Error::invalid(format!(
-            "{} assigns zero weight to every entry",
-            plan.kind.name()
-        )));
-    }
-
-    let table = AliasTable::new(&weights);
-    let mut rng = Rng::new(plan.seed);
-    let mut counts: std::collections::HashMap<usize, u32> = Default::default();
-    for _ in 0..plan.s {
-        *counts.entry(table.sample(&mut rng)).or_default() += 1;
-    }
-
-    let mut entries: Vec<SketchEntry> = counts
-        .into_iter()
-        .map(|(idx, count)| {
-            let p = weights[idx] / total_weight;
-            SketchEntry {
-                row: rows[idx],
-                col: a.indices[idx],
-                count,
-                value: count as f64 * a.values[idx] as f64 / (plan.s as f64 * p),
-            }
-        })
-        .collect();
-    entries.sort_unstable_by(|x, y| (x.row, x.col).cmp(&(y.row, y.col)));
-
-    // per-row codec scale for the L1 family
-    let row_scale = dist.rho.as_ref().map(|rho| {
-        rho.iter()
-            .zip(stats.row_l1.iter())
-            .map(|(&r, &z)| if r > 0.0 { z / (plan.s as f64 * r) } else { 0.0 })
-            .collect()
-    });
-
-    Ok(Sketch {
-        m: a.m,
-        n: a.n,
-        s: plan.s,
-        entries,
-        row_scale,
-        method: plan.kind.name(),
-    })
+    let (sketch, _metrics) =
+        engine::sketch_csr(SketchMode::Offline, a, plan, &PipelineConfig::default())?;
+    Ok(sketch)
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sparse::{Coo, Entry};
+    use crate::util::rng::Rng;
 
     fn toy_csr() -> Csr {
         let mut coo = Coo::new(4, 8);

@@ -1,21 +1,24 @@
-//! Entry streams: the arbitrary-order sources the coordinator ingests.
+//! Entry streams: the arbitrary-order sources the engine ingests.
 //!
 //! The paper's model presents non-zeros one at a time in arbitrary order;
 //! [`EntryStream`] abstracts the source (in-memory, shuffled, file-backed)
-//! so the pipeline code is identical for all of them.
+//! so every [`crate::engine::Sketcher`] mode is identical for all of them.
 
 pub mod source;
 
 pub use source::{FileStream, ShuffledStream, VecStream};
 
+use crate::error::Result;
 use crate::sparse::Entry;
 
 /// A finite stream of matrix non-zeros with known shape.
 pub trait EntryStream {
     /// `(m, n)` of the underlying matrix.
     fn shape(&self) -> (usize, usize);
-    /// Next entry, or `None` at end of stream.
-    fn next_entry(&mut self) -> Option<Entry>;
+    /// Next entry. `Ok(None)` at a clean end of stream; `Err` when the
+    /// source is corrupt (e.g. a truncated file) — a short read is never
+    /// silently treated as end-of-stream.
+    fn next_entry(&mut self) -> Result<Option<Entry>>;
     /// Optional size hint (number of remaining entries).
     fn size_hint(&self) -> Option<usize> {
         None
@@ -26,7 +29,7 @@ impl<S: EntryStream + ?Sized> EntryStream for Box<S> {
     fn shape(&self) -> (usize, usize) {
         (**self).shape()
     }
-    fn next_entry(&mut self) -> Option<Entry> {
+    fn next_entry(&mut self) -> Result<Option<Entry>> {
         (**self).next_entry()
     }
     fn size_hint(&self) -> Option<usize> {

@@ -27,8 +27,8 @@ impl EntryStream for VecStream {
     fn shape(&self) -> (usize, usize) {
         (self.m, self.n)
     }
-    fn next_entry(&mut self) -> Option<Entry> {
-        self.entries.next()
+    fn next_entry(&mut self) -> Result<Option<Entry>> {
+        Ok(self.entries.next())
     }
     fn size_hint(&self) -> Option<usize> {
         Some(self.entries.len())
@@ -56,7 +56,7 @@ impl EntryStream for ShuffledStream {
     fn shape(&self) -> (usize, usize) {
         self.inner.shape()
     }
-    fn next_entry(&mut self) -> Option<Entry> {
+    fn next_entry(&mut self) -> Result<Option<Entry>> {
         self.inner.next_entry()
     }
     fn size_hint(&self) -> Option<usize> {
@@ -64,9 +64,18 @@ impl EntryStream for ShuffledStream {
     }
 }
 
+/// Header bytes of the binary triplet format: magic + m + n + nnz.
+const HEADER_BYTES: u64 = 8 + 8 + 8 + 8;
+/// Bytes per `(u32 row, u32 col, f32 val)` record.
+const RECORD_BYTES: u64 = 12;
+
 /// Streaming reader over the binary triplet file format
 /// (`sparse::io::write_binary`) — entries never fully materialize in
 /// memory, matching the "durable storage, random access prohibitive" mode.
+///
+/// The header `nnz` is validated against the file's payload length at
+/// open, and a short read mid-stream surfaces as [`Error::Parse`] instead
+/// of a silent early end-of-stream.
 pub struct FileStream {
     m: usize,
     n: usize,
@@ -75,9 +84,17 @@ pub struct FileStream {
 }
 
 impl FileStream {
-    /// Open a binary triplet file.
+    /// Open a binary triplet file. For regular files the payload length
+    /// is validated against the header's `nnz` (`header + nnz · 12`
+    /// bytes) up front, so a truncated or padded file never masquerades
+    /// as a clean stream; non-regular inputs (FIFOs, device files) have
+    /// no meaningful length and rely on the per-record truncation check
+    /// in [`EntryStream::next_entry`].
     pub fn open(path: &Path) -> Result<FileStream> {
-        let mut reader = BufReader::new(File::open(path)?);
+        let file = File::open(path)?;
+        let meta = file.metadata()?;
+        let file_len = meta.len();
+        let mut reader = BufReader::new(file);
         let mut magic = [0u8; 8];
         reader.read_exact(&mut magic)?;
         if &magic != b"MSKTRP01" {
@@ -90,6 +107,18 @@ impl FileStream {
         let n = u64::from_le_bytes(b) as usize;
         reader.read_exact(&mut b)?;
         let nnz = u64::from_le_bytes(b) as usize;
+        let expect_len = (nnz as u64)
+            .checked_mul(RECORD_BYTES)
+            .and_then(|payload| payload.checked_add(HEADER_BYTES))
+            .ok_or_else(|| {
+                Error::Parse(format!("triplet header nnz={nnz} overflows the format"))
+            })?;
+        if meta.is_file() && file_len != expect_len {
+            return Err(Error::Parse(format!(
+                "triplet file length mismatch: header says nnz={nnz} \
+                 ({expect_len} bytes expected), file is {file_len} bytes"
+            )));
+        }
         Ok(FileStream { m, n, remaining: nnz, reader })
     }
 }
@@ -98,21 +127,25 @@ impl EntryStream for FileStream {
     fn shape(&self) -> (usize, usize) {
         (self.m, self.n)
     }
-    fn next_entry(&mut self) -> Option<Entry> {
+    fn next_entry(&mut self) -> Result<Option<Entry>> {
         if self.remaining == 0 {
-            return None;
+            return Ok(None);
         }
         let mut rec = [0u8; 12];
-        if self.reader.read_exact(&mut rec).is_err() {
+        if let Err(e) = self.reader.read_exact(&mut rec) {
+            // Surface truncation as a parse error — never a clean EOF.
+            let missing = self.remaining;
             self.remaining = 0;
-            return None;
+            return Err(Error::Parse(format!(
+                "truncated triplet stream: {missing} records still expected ({e})"
+            )));
         }
         self.remaining -= 1;
-        Some(Entry::new(
+        Ok(Some(Entry::new(
             u32::from_le_bytes(rec[0..4].try_into().unwrap()),
             u32::from_le_bytes(rec[4..8].try_into().unwrap()),
             f32::from_le_bytes(rec[8..12].try_into().unwrap()),
-        ))
+        )))
     }
     fn size_hint(&self) -> Option<usize> {
         Some(self.remaining)
@@ -132,6 +165,12 @@ mod tests {
         coo
     }
 
+    fn tmp_dir(name: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(name);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
     #[test]
     fn vec_stream_yields_all() {
         let coo = sample();
@@ -139,7 +178,7 @@ mod tests {
         assert_eq!(s.shape(), (3, 4));
         assert_eq!(s.size_hint(), Some(3));
         let mut count = 0;
-        while s.next_entry().is_some() {
+        while s.next_entry().unwrap().is_some() {
             count += 1;
         }
         assert_eq!(count, 3);
@@ -153,7 +192,7 @@ mod tests {
         }
         let mut s = ShuffledStream::new(&coo, 42);
         let mut cols: Vec<u32> = Vec::new();
-        while let Some(e) = s.next_entry() {
+        while let Some(e) = s.next_entry().unwrap() {
             cols.push(e.col);
         }
         assert_ne!(cols, (0..1000).collect::<Vec<_>>());
@@ -163,17 +202,101 @@ mod tests {
 
     #[test]
     fn file_stream_roundtrip() {
-        let dir = std::env::temp_dir().join("matsketch_stream_test");
-        std::fs::create_dir_all(&dir).unwrap();
+        let dir = tmp_dir("matsketch_stream_test");
         let path = dir.join("s.bin");
         let coo = sample();
         write_binary(&coo, &path).unwrap();
         let mut s = FileStream::open(&path).unwrap();
         assert_eq!(s.shape(), (3, 4));
         let mut got = Vec::new();
-        while let Some(e) = s.next_entry() {
+        while let Some(e) = s.next_entry().unwrap() {
             got.push(e);
         }
         assert_eq!(got, coo.entries);
+    }
+
+    #[test]
+    fn open_rejects_truncated_payload() {
+        // header claims 3 records but the payload holds fewer bytes
+        let dir = tmp_dir("matsketch_stream_test_trunc_open");
+        let path = dir.join("short.bin");
+        write_binary(&sample(), &path).unwrap();
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - 5).unwrap();
+        drop(f);
+        let err = FileStream::open(&path).unwrap_err();
+        assert!(
+            err.to_string().contains("length mismatch"),
+            "unexpected error: {err}"
+        );
+    }
+
+    #[test]
+    fn open_rejects_overflowing_header_nnz() {
+        // a hostile header whose nnz·12 overflows u64 must be a parse
+        // error, not an arithmetic panic
+        let dir = tmp_dir("matsketch_stream_test_overflow");
+        let path = dir.join("evil.bin");
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(b"MSKTRP01");
+        bytes.extend_from_slice(&3u64.to_le_bytes());
+        bytes.extend_from_slice(&4u64.to_le_bytes());
+        bytes.extend_from_slice(&u64::MAX.to_le_bytes());
+        std::fs::write(&path, &bytes).unwrap();
+        let err = FileStream::open(&path).unwrap_err();
+        assert!(err.to_string().contains("overflow"), "unexpected error: {err}");
+    }
+
+    #[test]
+    fn open_rejects_trailing_garbage() {
+        let dir = tmp_dir("matsketch_stream_test_pad");
+        let path = dir.join("padded.bin");
+        write_binary(&sample(), &path).unwrap();
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.extend_from_slice(&[0u8; 7]); // not a whole record
+        std::fs::write(&path, &bytes).unwrap();
+        assert!(FileStream::open(&path).is_err());
+    }
+
+    #[test]
+    fn truncation_mid_stream_is_a_parse_error_not_eof() {
+        // Regression for the silent-EOF bug: a file truncated *after* open
+        // (or any short read) must surface as Error::Parse, not Ok(None).
+        let dir = tmp_dir("matsketch_stream_test_trunc_read");
+        let path = dir.join("cut.bin");
+        // larger than FileStream's internal read buffer, so truncation
+        // past the buffered prefix is actually observed
+        let mut coo = Coo::new(10, 2000);
+        for j in 0..2000u32 {
+            coo.push(j % 10, j, 1.0 + j as f32);
+        }
+        write_binary(&coo, &path).unwrap();
+        let mut s = FileStream::open(&path).unwrap();
+        // cut the file mid-record once the stream is already open
+        let full = std::fs::metadata(&path).unwrap().len();
+        let f = std::fs::OpenOptions::new().write(true).open(&path).unwrap();
+        f.set_len(full - (RECORD_BYTES + 3)).unwrap();
+        drop(f);
+        let mut saw_err = false;
+        let mut yielded = 0usize;
+        loop {
+            match s.next_entry() {
+                Ok(Some(_)) => yielded += 1,
+                Ok(None) => break,
+                Err(e) => {
+                    assert!(
+                        e.to_string().contains("truncated triplet stream"),
+                        "unexpected error: {e}"
+                    );
+                    saw_err = true;
+                    break;
+                }
+            }
+        }
+        assert!(saw_err, "truncated stream ended cleanly after {yielded} entries");
+        assert!(yielded < coo.nnz());
+        // after the error the stream stays terminated
+        assert!(matches!(s.next_entry(), Ok(None)));
     }
 }

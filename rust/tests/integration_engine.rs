@@ -1,0 +1,194 @@
+//! Integration: the unified `Sketcher` engine — offline (alias),
+//! streaming (reservoir), and sharded (pipeline) modes all run through the
+//! one trait and produce valid sketches of identical budget `s` for every
+//! Figure-1 distribution on a fixed synthetic matrix.
+
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::engine::{
+    build_sketcher, sketch_entry_stream, PipelineConfig, SketchMode,
+};
+use matsketch::sketch::SketchPlan;
+use matsketch::sparse::{Coo, Entry};
+use matsketch::stream::ShuffledStream;
+use matsketch::util::rng::Rng;
+
+/// Fixed synthetic matrix: 24×160, ~12 entries per row, values bounded
+/// away from zero so even the trimmed-L2 baselines keep most entries.
+fn fixed_matrix() -> Coo {
+    let mut rng = Rng::new(0xF1F1);
+    let mut coo = Coo::new(24, 160);
+    for i in 0..24u32 {
+        for _ in 0..12 {
+            let v = (rng.normal() as f32) + 2.0;
+            coo.push(i, rng.usize_below(160) as u32, v);
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+#[test]
+fn all_modes_produce_budget_s_for_every_figure1_distribution() {
+    let a = fixed_matrix();
+    let stats = MatrixStats::from_coo(&a);
+    let s = 600u64;
+    for kind in DistributionKind::figure1_set() {
+        for mode in SketchMode::all() {
+            let plan = SketchPlan::new(kind, s).with_seed(11);
+            let (sk, metrics) = sketch_entry_stream(
+                mode,
+                ShuffledStream::new(&a, 5),
+                &stats,
+                &plan,
+                &PipelineConfig::default(),
+            )
+            .unwrap_or_else(|e| panic!("{} in {} mode: {e}", kind.name(), mode.name()));
+
+            let what = format!("{} / {}", kind.name(), mode.name());
+            // identical budget across modes
+            let total: u64 = sk.entries.iter().map(|e| e.count as u64).sum();
+            assert_eq!(total, s, "{what}: total draws");
+            assert_eq!(sk.s, s, "{what}: recorded budget");
+            assert_eq!(metrics.merged_samples, s, "{what}: merged samples");
+            assert_eq!(metrics.ingested, a.nnz() as u64, "{what}: ingested");
+            // a valid sketch: right shape, in-bounds sorted unique
+            // coordinates drawn from A's support, positive multiplicities
+            assert_eq!((sk.m, sk.n), (a.m, a.n), "{what}: shape");
+            assert!(
+                sk.entries
+                    .windows(2)
+                    .all(|w| (w[0].row, w[0].col) < (w[1].row, w[1].col)),
+                "{what}: not sorted/unique"
+            );
+            for e in &sk.entries {
+                assert!((e.row as usize) < sk.m && (e.col as usize) < sk.n, "{what}");
+                assert!(e.count >= 1, "{what}: zero-count entry");
+                assert!(
+                    a.entries.iter().any(|x| x.row == e.row && x.col == e.col),
+                    "{what}: ({}, {}) outside A's support",
+                    e.row,
+                    e.col
+                );
+            }
+            assert_eq!(sk.method, kind.name(), "{what}: method label");
+        }
+    }
+}
+
+#[test]
+fn every_mode_is_unbiased_on_a_tiny_matrix() {
+    let a = Coo::from_entries(
+        2,
+        2,
+        vec![
+            Entry::new(0, 0, 4.0),
+            Entry::new(0, 1, -1.0),
+            Entry::new(1, 1, 2.0),
+        ],
+    )
+    .unwrap();
+    let stats = MatrixStats::from_coo(&a);
+    let trials = 1200u64;
+    for mode in SketchMode::all() {
+        let mut acc = [[0.0f64; 2]; 2];
+        for t in 0..trials {
+            let plan = SketchPlan::new(DistributionKind::L1, 6).with_seed(t);
+            let (sk, _) = sketch_entry_stream(
+                mode,
+                ShuffledStream::new(&a, t),
+                &stats,
+                &plan,
+                &PipelineConfig { workers: 2, ..Default::default() },
+            )
+            .unwrap();
+            for e in &sk.entries {
+                acc[e.row as usize][e.col as usize] += e.value;
+            }
+        }
+        let want = [[4.0, -1.0], [0.0, 2.0]];
+        for i in 0..2 {
+            for j in 0..2 {
+                let mean = acc[i][j] / trials as f64;
+                assert!(
+                    (mean - want[i][j]).abs() < 0.35,
+                    "{} ({i},{j}): mean={mean} want={}",
+                    mode.name(),
+                    want[i][j]
+                );
+            }
+        }
+    }
+}
+
+#[test]
+fn modes_agree_on_row_sampling_frequencies() {
+    // All modes draw from the same distribution, so per-row sample masses
+    // must agree across modes up to sampling noise.
+    let a = fixed_matrix();
+    let stats = MatrixStats::from_coo(&a);
+    let s = 500u64;
+    let trials = 30u64;
+    let mut row_mass = vec![[0.0f64; 3]; a.m];
+    for (which, mode) in SketchMode::all().into_iter().enumerate() {
+        for t in 0..trials {
+            let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(1000 + t);
+            let (sk, _) = sketch_entry_stream(
+                mode,
+                ShuffledStream::new(&a, 7 * t + which as u64),
+                &stats,
+                &plan,
+                &PipelineConfig::default(),
+            )
+            .unwrap();
+            for e in &sk.entries {
+                row_mass[e.row as usize][which] += e.count as f64;
+            }
+        }
+    }
+    let total = (s * trials) as f64;
+    for i in 0..a.m {
+        let p = [
+            row_mass[i][0] / total,
+            row_mass[i][1] / total,
+            row_mass[i][2] / total,
+        ];
+        let sigma = (p[0].max(1e-4) / total).sqrt();
+        for which in 1..3 {
+            assert!(
+                (p[0] - p[which]).abs() < 6.0 * sigma + 0.01,
+                "row {i}: offline {:.5} vs mode#{which} {:.5}",
+                p[0],
+                p[which]
+            );
+        }
+    }
+}
+
+#[test]
+fn trait_object_lifecycle_ingest_then_finalize() {
+    // Drive a Box<dyn Sketcher> by hand (the engine's contract: ingest
+    // batches of any shape, then finalize).
+    let a = fixed_matrix();
+    let stats = MatrixStats::from_coo(&a);
+    let plan = SketchPlan::new(DistributionKind::RowL1, 321).with_seed(8);
+    for mode in SketchMode::all() {
+        let mut sk =
+            build_sketcher(mode, &stats, &plan, &PipelineConfig::default()).unwrap();
+        assert_eq!(sk.mode(), mode);
+        // deliberately ragged batch sizes
+        let mut fed = 0usize;
+        for chunk in a.entries.chunks(7) {
+            sk.ingest(chunk).unwrap();
+            fed += chunk.len();
+        }
+        assert_eq!(fed, a.nnz());
+        let (sketch, metrics) = sk.finalize().unwrap();
+        assert_eq!(metrics.ingested, a.nnz() as u64);
+        assert_eq!(
+            sketch.entries.iter().map(|e| e.count as u64).sum::<u64>(),
+            321,
+            "{}",
+            mode.name()
+        );
+    }
+}

@@ -68,7 +68,7 @@ fn file_based_end_to_end() {
     {
         use matsketch::stream::EntryStream;
         let mut st = FileStream::open(&path).unwrap();
-        while let Some(e) = st.next_entry() {
+        while let Some(e) = st.next_entry().unwrap() {
             stats.push(&e);
         }
     }
@@ -109,7 +109,7 @@ fn backpressure_with_tiny_channels_still_correct() {
     let a = synthetic_cf(&SyntheticConfig { m: 50, n: 2_000, ..Default::default() });
     let stats = MatrixStats::from_coo(&a);
     let plan = SketchPlan::new(DistributionKind::RowL1, 3_000).with_seed(9);
-    let cfg = PipelineConfig { workers: 4, channel_cap: 1, batch: 16 };
+    let cfg = PipelineConfig { workers: 4, channel_cap: 1, batch: 16, ..Default::default() };
     let (sk, metrics) =
         sketch_stream(ShuffledStream::new(&a, 1), &stats, &plan, &cfg).unwrap();
     assert_eq!(metrics.merged_samples, 3_000);
