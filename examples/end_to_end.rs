@@ -7,12 +7,15 @@
 //!  3. evaluate sketches with the AOT XLA engine (L2 JAX graphs + L1
 //!     Pallas kernels via PJRT): subspace-iteration SVD + Figure-1 quality;
 //!  4. encode sketches with the compact codec and report bits/sample;
-//!  5. print the paper's headline metric per dataset.
+//!  5. print the paper's headline metric per dataset;
+//!  6. persist one sketch into the on-disk store, read it back, and serve
+//!     concurrent matvec queries from the compressed payload.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
+use std::sync::Arc;
 use std::time::Instant;
 
 use matsketch::coordinator::PipelineConfig;
@@ -23,8 +26,10 @@ use matsketch::error::Result;
 use matsketch::linalg::svd::{rank_k_fro, topk_svd};
 use matsketch::metrics::quality::{quality_left, quality_right};
 use matsketch::runtime::default_engine;
+use matsketch::serve::{Query, QueryOutcome, QueryServer, ServableSketch, SketchStore, StoreKey};
 use matsketch::sketch::{encode_sketch, SketchPlan};
 use matsketch::stream::ShuffledStream;
+use matsketch::util::rng::Rng;
 
 fn main() -> Result<()> {
     let engine = default_engine();
@@ -77,6 +82,61 @@ fn main() -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
-    println!("\nAll layers composed: L3 streaming pipeline -> L2/L1 AOT artifacts via PJRT.");
+    // 6. serving layer: persist a sketch, read it back, answer queries
+    // concurrently straight off the compressed payload.
+    let store_dir = std::env::temp_dir().join("matsketch-e2e-store");
+    let store = SketchStore::open(&store_dir)?;
+    let coo = DatasetId::Synthetic.generate_small(0);
+    let s = (coo.nnz() as u64 / 5).max(5_000);
+    let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(99);
+    let key = StoreKey::new("synthetic-small", &plan.kind.name(), s, plan.seed);
+    let (enc, cache_hit) = store.get_or_build(&key, || {
+        let stats = MatrixStats::from_coo(&coo);
+        let (sk, _) = sketch_entry_stream(
+            SketchMode::Sharded,
+            ShuffledStream::new(&coo, 5),
+            &stats,
+            &plan,
+            &PipelineConfig::default(),
+        )?;
+        Ok(sk)
+    })?;
+    println!(
+        "\nstore: {} ({}), cache {}",
+        key.file_name(),
+        store.dir().display(),
+        if cache_hit { "hit" } else { "miss -> built + persisted" }
+    );
+
+    let servable = Arc::new(ServableSketch::new(enc, plan.kind.name()));
+    let (_, n) = servable.shape();
+    let server = QueryServer::start(Arc::clone(&servable), 4);
+    let mut rng = Rng::new(7);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let pending = server.submit_batch(vec![
+        Query::Matvec(x),
+        Query::TopK(5),
+        Query::Row(0),
+    ]);
+    for p in pending {
+        match p.wait()? {
+            QueryOutcome::Vector(y) => {
+                let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+                println!("  matvec: |y|_2 = {norm:.4e}");
+            }
+            QueryOutcome::Entries(es) => println!("  entries: {} returned", es.len()),
+        }
+    }
+    let stats = server.shutdown();
+    println!(
+        "  served {} queries across {} workers",
+        stats.total(),
+        stats.served_per_worker.len()
+    );
+
+    println!(
+        "\nAll layers composed: L3 streaming pipeline -> L2/L1 AOT artifacts via PJRT \
+         -> serving layer."
+    );
     Ok(())
 }

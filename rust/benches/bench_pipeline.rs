@@ -85,7 +85,13 @@ fn main() {
     }
 
     section("pipeline: backpressure (tiny channels, bounded spill)");
-    let cfg = PipelineConfig { workers: 4, channel_cap: 1, batch: 64, spill_cap: 2 };
+    let cfg = PipelineConfig {
+        workers: 4,
+        channel_cap: 1,
+        batch: 64,
+        spill_cap: 2,
+        ..Default::default()
+    };
     let plan = SketchPlan::new(DistributionKind::Bernstein, (nnz as u64) / 10).with_seed(4);
     bench_items("pipeline_channel_cap=1_batch=64_spill=2", budget, nnz, || {
         sketch_entry_stream(SketchMode::Sharded, VecStream::new(&a), &stats, &plan, &cfg)

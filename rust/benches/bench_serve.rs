@@ -1,0 +1,92 @@
+//! E10 — serving-path throughput: matvec queries/sec executed directly on
+//! the Elias-γ compressed sketch vs the decode-then-CSR fallback, across
+//! the Figure-1 distributions; plus `QueryServer` concurrent-reader
+//! scaling.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use common::{bench_items, default_budget, section};
+use matsketch::datasets::{synthetic_cf, SyntheticConfig};
+use matsketch::distributions::DistributionKind;
+use matsketch::serve::{self, Query, QueryServer, ServableSketch};
+use matsketch::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
+use matsketch::util::rng::Rng;
+
+fn main() {
+    let budget = default_budget();
+    let a = synthetic_cf(&SyntheticConfig { m: 100, n: 20_000, ..Default::default() })
+        .to_csr();
+    let s = (a.nnz() as u64) / 10;
+    println!("serve workload: {}x{}, nnz={}, s={s}", a.m, a.n, a.nnz());
+
+    let mut rng = Rng::new(0xBE7C);
+    let x: Vec<f64> = (0..a.n).map(|_| rng.normal()).collect();
+    let xf: Vec<f32> = x.iter().map(|&v| v as f32).collect();
+
+    section("matvec: compressed path vs decode-then-CSR (per query)");
+    for kind in DistributionKind::figure1_set() {
+        let sk = sketch_offline(&a, &SketchPlan::new(kind, s).with_seed(3)).unwrap();
+        let enc = encode_sketch(&sk).unwrap();
+        let name = kind.name();
+        let nnz = sk.nnz() as f64;
+
+        bench_items(&format!("matvec_compressed[{name}]"), budget, nnz, || {
+            serve::matvec(&enc, &x).unwrap()
+        })
+        .report();
+
+        bench_items(&format!("matvec_decode_then_csr[{name}]"), budget, nnz, || {
+            // the fallback pays a full decode + CSR build on every query
+            let dec = decode_sketch(&enc, &name).unwrap();
+            let csr = dec.to_csr();
+            let mut y = vec![0.0f32; csr.m];
+            csr.spmv(&xf, &mut y);
+            y
+        })
+        .report();
+
+        // steady-state fallback: CSR materialized once, spmv per query
+        let csr = decode_sketch(&enc, &name).unwrap().to_csr();
+        bench_items(&format!("matvec_csr_hot[{name}]"), budget, nnz, || {
+            let mut y = vec![0.0f32; csr.m];
+            csr.spmv(&xf, &mut y);
+            y
+        })
+        .report();
+    }
+
+    section("top-k: compressed path (Bernstein)");
+    let sk = sketch_offline(&a, &SketchPlan::new(DistributionKind::Bernstein, s).with_seed(3))
+        .unwrap();
+    let enc = encode_sketch(&sk).unwrap();
+    for k in [10usize, 100] {
+        bench_items(&format!("top_{k}_compressed"), budget, sk.nnz() as f64, || {
+            serve::top_k(&enc, k).unwrap()
+        })
+        .report();
+    }
+
+    section("QueryServer: concurrent matvec readers (Bernstein)");
+    let servable = Arc::new(ServableSketch::new(enc, DistributionKind::Bernstein.name()));
+    for readers in [1usize, 2, 4, 8] {
+        let queries = 32usize;
+        bench_items(
+            &format!("server_readers={readers}"),
+            budget,
+            queries as f64,
+            || {
+                let server = QueryServer::start(Arc::clone(&servable), readers);
+                let pending =
+                    server.submit_batch(vec![Query::Matvec(x.clone()); queries]);
+                for p in pending {
+                    p.wait().unwrap();
+                }
+                server.shutdown().total()
+            },
+        )
+        .report();
+    }
+}

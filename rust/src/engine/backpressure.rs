@@ -15,12 +15,25 @@ use std::time::{Duration, Instant};
 
 use crate::sparse::Entry;
 
+use super::metrics::{spill_depth_bucket, SPILL_DEPTH_BUCKETS};
+
+/// What one shard's sender observed over its lifetime, reported at
+/// [`ShardSender::finish`] and folded into
+/// [`super::PipelineMetrics`].
+pub(crate) struct SenderReport {
+    /// Total time spent in blocking sends (real backpressure).
+    pub blocked: Duration,
+    /// Histogram of the spill-queue depth observed after each send.
+    pub depth_hist: [u64; SPILL_DEPTH_BUCKETS],
+}
+
 /// A shard channel with bounded spill and blocking-send backpressure.
 pub(crate) struct ShardSender {
     tx: SyncSender<Vec<Entry>>,
     spill: VecDeque<Vec<Entry>>,
     spill_cap: usize,
     blocked: Duration,
+    depth_hist: [u64; SPILL_DEPTH_BUCKETS],
     disconnected: bool,
 }
 
@@ -33,6 +46,7 @@ impl ShardSender {
             spill: VecDeque::new(),
             spill_cap,
             blocked: Duration::ZERO,
+            depth_hist: [0; SPILL_DEPTH_BUCKETS],
             disconnected: false,
         }
     }
@@ -64,7 +78,10 @@ impl ShardSender {
         self.try_drain();
         if self.spill.is_empty() {
             match self.tx.try_send(batch) {
-                Ok(()) => return,
+                Ok(()) => {
+                    self.depth_hist[0] += 1;
+                    return;
+                }
                 Err(TrySendError::Full(b)) => self.spill.push_back(b),
                 Err(TrySendError::Disconnected(_)) => {
                     self.disconnected = true;
@@ -74,6 +91,7 @@ impl ShardSender {
         } else {
             self.spill.push_back(batch);
         }
+        self.depth_hist[spill_depth_bucket(self.spill.len())] += 1;
         if self.spill.len() > self.spill_cap {
             // spill bound exceeded: real backpressure — block until the
             // worker drains one batch.
@@ -88,8 +106,8 @@ impl ShardSender {
     }
 
     /// Flush the remaining spill (blocking where needed), close the
-    /// channel, and report the total time spent blocked.
-    pub(crate) fn finish(mut self) -> Duration {
+    /// channel, and report what this sender observed.
+    pub(crate) fn finish(mut self) -> SenderReport {
         while let Some(b) = self.spill.pop_front() {
             match self.tx.try_send(b) {
                 Ok(()) => {}
@@ -104,7 +122,7 @@ impl ShardSender {
                 Err(TrySendError::Disconnected(_)) => break,
             }
         }
-        self.blocked
+        SenderReport { blocked: self.blocked, depth_hist: self.depth_hist }
         // `self.tx` drops here, closing this shard's channel.
     }
 }
@@ -153,6 +171,25 @@ mod tests {
         // ...and a consumer lets the spill drain at finish.
         let consumer = std::thread::spawn(move || rx.iter().count());
         let _ = s.finish();
+        assert_eq!(consumer.join().unwrap(), 5);
+    }
+
+    #[test]
+    fn depth_histogram_tracks_spill_occupancy() {
+        // no consumer, capacity 1, spill 4: the first batch goes to the
+        // channel (depth 0), the next ones pile into the spill queue.
+        let (tx, rx) = sync_channel(1);
+        let mut s = ShardSender::new(tx, 4);
+        for i in 0..5u32 {
+            s.send(batch(i));
+        }
+        assert_eq!(s.depth_hist[0], 1, "first send should find depth 0");
+        let observed: u64 = s.depth_hist.iter().sum();
+        assert_eq!(observed, 5, "every send observed once");
+        assert!(s.depth_hist[1..].iter().sum::<u64>() >= 4);
+        let consumer = std::thread::spawn(move || rx.iter().count());
+        let report = s.finish();
+        assert_eq!(report.depth_hist.iter().sum::<u64>(), 5);
         assert_eq!(consumer.join().unwrap(), 5);
     }
 

@@ -6,6 +6,26 @@
 
 use std::time::Duration;
 
+/// Buckets in the per-shard spill-depth histogram: bucket 0 is depth 0
+/// (batch went straight to the channel), bucket `i ≥ 1` covers depths
+/// `[2^(i-1), 2^i)`, and the last bucket is open-ended.
+pub const SPILL_DEPTH_BUCKETS: usize = 8;
+
+/// Human labels for the histogram buckets, index-aligned.
+pub const SPILL_DEPTH_LABELS: [&str; SPILL_DEPTH_BUCKETS] =
+    ["0", "1", "2-3", "4-7", "8-15", "16-31", "32-63", "64+"];
+
+/// Histogram bucket for an observed spill-queue depth.
+#[inline]
+pub fn spill_depth_bucket(depth: usize) -> usize {
+    if depth == 0 {
+        0
+    } else {
+        let b = (usize::BITS - depth.leading_zeros()) as usize; // floor(log2)+1
+        b.min(SPILL_DEPTH_BUCKETS - 1)
+    }
+}
+
 /// Counters collected by one sketcher run.
 #[derive(Clone, Debug, Default)]
 pub struct PipelineMetrics {
@@ -19,6 +39,12 @@ pub struct PipelineMetrics {
     pub wall: Duration,
     /// Time the leader spent blocked on full channels (sampled).
     pub backpressure_wait: Duration,
+    /// Per-shard histograms of the leader-side spill-queue depth observed
+    /// at each send (index = shard id; see [`spill_depth_bucket`]). Empty
+    /// for single-threaded modes. This is the tuning signal for
+    /// `spill_cap` / `channel_cap`: persistent mass in the high buckets
+    /// means a shard's worker can't keep up with the leader.
+    pub spill_depth_hist: Vec<[u64; SPILL_DEPTH_BUCKETS]>,
     /// Sum of forward-sketch lengths across shards (Theorem 4.2 metric);
     /// distinct drawn coordinates for the offline mode.
     pub sketch_records: u64,
@@ -38,9 +64,32 @@ impl PipelineMetrics {
         }
     }
 
+    /// Spill-depth histogram aggregated across shards.
+    pub fn spill_depth_total(&self) -> [u64; SPILL_DEPTH_BUCKETS] {
+        let mut out = [0u64; SPILL_DEPTH_BUCKETS];
+        for shard in &self.spill_depth_hist {
+            for (o, &c) in out.iter_mut().zip(shard.iter()) {
+                *o += c;
+            }
+        }
+        out
+    }
+
+    /// Fraction of sends that found a non-empty spill queue (0 when the
+    /// histogram is empty, i.e. a single-threaded mode).
+    pub fn spill_nonzero_fraction(&self) -> f64 {
+        let total = self.spill_depth_total();
+        let all: u64 = total.iter().sum();
+        if all == 0 {
+            0.0
+        } else {
+            (all - total[0]) as f64 / all as f64
+        }
+    }
+
     /// One-line human summary.
     pub fn summary(&self) -> String {
-        format!(
+        let mut s = format!(
             "{} nnz in {:.3}s ({:.2}M nnz/s), {} workers, {} sketch records, backpressure {:.3}s",
             self.ingested,
             self.wall.as_secs_f64(),
@@ -48,7 +97,14 @@ impl PipelineMetrics {
             self.workers,
             self.sketch_records,
             self.backpressure_wait.as_secs_f64(),
-        )
+        );
+        if !self.spill_depth_hist.is_empty() {
+            s.push_str(&format!(
+                ", spill depth >0 on {:.1}% of sends",
+                self.spill_nonzero_fraction() * 100.0
+            ));
+        }
+        s
     }
 }
 
@@ -71,5 +127,38 @@ mod tests {
     fn zero_wall_safe() {
         let m = PipelineMetrics::default();
         assert_eq!(m.throughput(), 0.0);
+        assert_eq!(m.spill_nonzero_fraction(), 0.0);
+        assert!(!m.summary().contains("spill depth"));
+    }
+
+    #[test]
+    fn spill_buckets_cover_powers_of_two() {
+        assert_eq!(spill_depth_bucket(0), 0);
+        assert_eq!(spill_depth_bucket(1), 1);
+        assert_eq!(spill_depth_bucket(2), 2);
+        assert_eq!(spill_depth_bucket(3), 2);
+        assert_eq!(spill_depth_bucket(4), 3);
+        assert_eq!(spill_depth_bucket(7), 3);
+        assert_eq!(spill_depth_bucket(8), 4);
+        assert_eq!(spill_depth_bucket(63), 6);
+        assert_eq!(spill_depth_bucket(64), 7);
+        assert_eq!(spill_depth_bucket(1_000_000), 7);
+        assert_eq!(SPILL_DEPTH_LABELS.len(), SPILL_DEPTH_BUCKETS);
+    }
+
+    #[test]
+    fn spill_aggregation_across_shards() {
+        let mut m = PipelineMetrics::default();
+        let mut h0 = [0u64; SPILL_DEPTH_BUCKETS];
+        h0[0] = 90;
+        h0[2] = 10;
+        let mut h1 = [0u64; SPILL_DEPTH_BUCKETS];
+        h1[0] = 100;
+        m.spill_depth_hist = vec![h0, h1];
+        let total = m.spill_depth_total();
+        assert_eq!(total[0], 190);
+        assert_eq!(total[2], 10);
+        assert!((m.spill_nonzero_fraction() - 0.05).abs() < 1e-12);
+        assert!(m.summary().contains("spill depth"));
     }
 }

@@ -1,4 +1,4 @@
-//! The unified sketching engine — one [`Sketcher`] contract, three
+//! The unified sketching engine — one [`Sketcher`] contract, four
 //! execution modes, every distribution.
 //!
 //! The paper's promise is O(1)-per-nonzero sketching of a stream presented
@@ -9,14 +9,15 @@
 //! ```text
 //!            build_sketcher(mode, stats, plan, cfg)
 //!                             │
-//!        ┌────────────────────┼─────────────────────┐
-//!        ▼                    ▼                     ▼
-//!  SketchMode::Offline  SketchMode::Streaming  SketchMode::Sharded
-//!  (offline.rs)         (reservoir.rs)         (shard.rs)
-//!  alias table over     one Appendix-A         W worker reservoirs
-//!  buffered entries     reservoir, O(s log bN) + exact seeded merge
-//!        │                    │                     │
-//!        └────────────────────┴─────────────────────┘
+//!     ┌──────────────┬────────┴───────┬────────────────┐
+//!     ▼              ▼                ▼                ▼
+//!  ::Offline      ::Streaming     ::Spilling       ::Sharded
+//!  (offline.rs)   (reservoir.rs)  (spilling.rs)    (shard.rs)
+//!  alias table    one Appendix-A  reservoir with   W worker reservoirs
+//!  over buffered  reservoir,      forward sketch   + exact seeded
+//!  entries        O(s log bN)     on disk          merge
+//!     │              │                │                │
+//!     └──────────────┴────────┬───────┴────────────────┘
 //!                             ▼
 //!               ingest(&[Entry])* → finalize()
 //!                             ▼
@@ -32,6 +33,9 @@
 //!   evaluation reference path).
 //! * [`reservoir`] — [`ReservoirSketcher`]: one O(1)-per-item Appendix-A
 //!   reservoir, single-threaded.
+//! * [`spilling`] — [`SpillingSketcher`]: the same reservoir with its
+//!   forward sketch on durable storage (O(log s) active memory), for
+//!   budgets where `s·log(bN)` records exceed RAM.
 //! * [`shard`] — [`ShardedSketcher`] + [`PipelineConfig`]: row-hash
 //!   routing to worker reservoirs with shard-budget pre-splitting.
 //! * [`merge`] — the deterministic seeded merge (pre-split rescale or
@@ -40,7 +44,7 @@
 //!   control for the sharded mode.
 //! * [`metrics`] — [`PipelineMetrics`], produced by every mode.
 //!
-//! All three modes draw `s` i.i.d. samples from the same prepared
+//! All modes draw `s` i.i.d. samples from the same prepared
 //! [`Distribution`], so sketches are exchangeable across modes — the
 //! cross-mode test in `rust/tests/integration_engine.rs` pins that down
 //! for every [`crate::distributions::DistributionKind::figure1_set`]
@@ -54,11 +58,13 @@ pub mod metrics;
 pub mod offline;
 pub mod reservoir;
 pub mod shard;
+pub mod spilling;
 
 pub use metrics::PipelineMetrics;
 pub use offline::AliasSketcher;
 pub use reservoir::ReservoirSketcher;
 pub use shard::{PipelineConfig, ShardedSketcher};
+pub use spilling::SpillingSketcher;
 
 use crate::distributions::{Distribution, MatrixStats};
 use crate::error::{Error, Result};
@@ -74,6 +80,10 @@ pub enum SketchMode {
     Offline,
     /// One streaming Appendix-A reservoir (O(1)/entry, single thread).
     Streaming,
+    /// The streaming reservoir with its forward sketch spilled to disk
+    /// (O(1)/entry, O(log s) active memory) — for budgets whose
+    /// `s·log(bN)` sketch records exceed RAM.
+    Spilling,
     /// Leader + worker-per-shard reservoirs with an exact merge
     /// (O(1)/entry, scales with cores).
     Sharded,
@@ -85,13 +95,19 @@ impl SketchMode {
         match self {
             SketchMode::Offline => "offline",
             SketchMode::Streaming => "streaming",
+            SketchMode::Spilling => "spilling",
             SketchMode::Sharded => "sharded",
         }
     }
 
     /// Every mode, for cross-mode tests and sweeps.
-    pub fn all() -> [SketchMode; 3] {
-        [SketchMode::Offline, SketchMode::Streaming, SketchMode::Sharded]
+    pub fn all() -> [SketchMode; 4] {
+        [
+            SketchMode::Offline,
+            SketchMode::Streaming,
+            SketchMode::Spilling,
+            SketchMode::Sharded,
+        ]
     }
 
     /// Parse a CLI/config spelling.
@@ -99,6 +115,7 @@ impl SketchMode {
         match name.to_ascii_lowercase().as_str() {
             "offline" | "alias" => Some(SketchMode::Offline),
             "streaming" | "reservoir" => Some(SketchMode::Streaming),
+            "spilling" | "spill" => Some(SketchMode::Spilling),
             "sharded" | "pipeline" => Some(SketchMode::Sharded),
             _ => None,
         }
@@ -202,6 +219,7 @@ pub fn build_sketcher(
     Ok(match mode {
         SketchMode::Offline => Box::new(AliasSketcher::new(ctx)),
         SketchMode::Streaming => Box::new(ReservoirSketcher::new(ctx)),
+        SketchMode::Spilling => Box::new(SpillingSketcher::new(ctx, &cfg.spill_dir)?),
         SketchMode::Sharded => Box::new(ShardedSketcher::spawn(ctx, stats, cfg)),
     })
 }
@@ -282,7 +300,7 @@ impl EntryStream for CsrEntryStream<'_> {
 }
 
 /// Sketch an in-memory CSR matrix with the given mode (row-major entry
-/// order; order is irrelevant to all three modes' sampling laws).
+/// order; order is irrelevant to every mode's sampling law).
 pub fn sketch_csr(
     mode: SketchMode,
     a: &Csr,

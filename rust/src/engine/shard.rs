@@ -9,6 +9,7 @@
 //! joins the workers and composes their samples into `s` exact global
 //! i.i.d. draws (see [`super::merge`]).
 
+use std::path::PathBuf;
 use std::sync::mpsc::{sync_channel, Receiver, SyncSender};
 use std::thread::JoinHandle;
 use std::time::Instant;
@@ -37,11 +38,20 @@ pub struct PipelineConfig {
     /// park locally when a worker's channel is full before the leader
     /// blocks on `send` (real backpressure).
     pub spill_cap: usize,
+    /// Scratch directory for [`SketchMode::Spilling`]'s on-disk forward
+    /// sketches (each run creates and removes a private subdirectory).
+    pub spill_dir: PathBuf,
 }
 
 impl Default for PipelineConfig {
     fn default() -> Self {
-        PipelineConfig { workers: 0, channel_cap: 64, batch: 4096, spill_cap: 8 }
+        PipelineConfig {
+            workers: 0,
+            channel_cap: 64,
+            batch: 4096,
+            spill_cap: 8,
+            spill_dir: std::env::temp_dir().join("matsketch-spill"),
+        }
     }
 }
 
@@ -208,7 +218,9 @@ impl Sketcher for ShardedSketcher {
             }
         }
         for sender in std::mem::take(&mut self.senders) {
-            self.metrics.backpressure_wait += sender.finish();
+            let report = sender.finish();
+            self.metrics.backpressure_wait += report.blocked;
+            self.metrics.spill_depth_hist.push(report.depth_hist);
         }
 
         let mut outs = Vec::with_capacity(self.workers);

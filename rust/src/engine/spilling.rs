@@ -1,0 +1,200 @@
+//! Disk-spilling streaming sketching behind the [`Sketcher`] trait.
+//!
+//! One Appendix-A reservoir whose forward sketch lives on durable storage
+//! ([`crate::samplers::SpillingReservoir`]): O(1) work per non-zero and
+//! only O(log s) *active memory*, so budgets where the `s·log(bN)`
+//! forward-sketch records exceed RAM still finalize. The sampling law is
+//! identical to [`super::ReservoirSketcher`] — only the sketch's home
+//! (disk vs heap) differs — so it participates in the cross-mode
+//! budget-equality tests like every other mode.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::samplers::{SpillItem, SpillingReservoir};
+use crate::sketch::{Sketch, SketchEntry};
+use crate::sparse::Entry;
+
+use super::metrics::PipelineMetrics;
+use super::{EngineContext, SketchMode, Sketcher};
+
+/// Distinguishes concurrent spilling runs (tests, parallel sketchers)
+/// inside one process; combined with the pid for cross-process safety.
+static SPILL_RUN: AtomicU64 = AtomicU64::new(0);
+
+/// A private scratch directory removed recursively on drop, so the spill
+/// file never outlives its run — success, error, or an abandoned
+/// (never-finalized) sketcher alike.
+struct ScratchDir(PathBuf);
+
+impl Drop for ScratchDir {
+    fn drop(&mut self) {
+        let _ = std::fs::remove_dir_all(&self.0);
+    }
+}
+
+/// The disk-spilling [`Sketcher`].
+pub struct SpillingSketcher {
+    ctx: EngineContext,
+    // field order matters: `res` (and its open file handle) must drop
+    // before `dir` removes the directory
+    res: SpillingReservoir,
+    dir: ScratchDir,
+    total_weight: f64,
+    ingested: u64,
+    skipped: u64,
+    t0: Instant,
+}
+
+impl SpillingSketcher {
+    /// Create with a unique scratch directory under `spill_dir`.
+    pub(crate) fn new(ctx: EngineContext, spill_dir: &Path) -> Result<SpillingSketcher> {
+        let run = SPILL_RUN.fetch_add(1, Ordering::Relaxed);
+        let dir = ScratchDir(spill_dir.join(format!("run-{}-{run}", std::process::id())));
+        let res = SpillingReservoir::create(&dir.0, ctx.plan.s, ctx.plan.seed ^ 0x5350_494C)?;
+        Ok(SpillingSketcher {
+            ctx,
+            res,
+            dir,
+            total_weight: 0.0,
+            ingested: 0,
+            skipped: 0,
+            t0: Instant::now(),
+        })
+    }
+}
+
+impl Sketcher for SpillingSketcher {
+    fn mode(&self) -> SketchMode {
+        SketchMode::Spilling
+    }
+
+    fn ingest(&mut self, batch: &[Entry]) -> Result<()> {
+        for e in batch {
+            self.ctx.check_entry(e)?;
+            self.ingested += 1;
+            let w = self.ctx.dist.weight(e.row, e.val);
+            if w > 0.0 {
+                self.total_weight += w;
+                self.res
+                    .push(SpillItem { row: e.row, col: e.col, val: e.val }, w)?;
+            } else {
+                self.skipped += 1;
+            }
+        }
+        Ok(())
+    }
+
+    fn finalize(self: Box<Self>) -> Result<(Sketch, PipelineMetrics)> {
+        let SpillingSketcher { ctx, res, dir, total_weight, ingested, skipped, t0 } = *self;
+        if total_weight <= 0.0 {
+            return Err(Error::Pipeline("stream carried no positive-weight entries".into()));
+        }
+        let sketch_records = res.records();
+        let s = ctx.plan.s;
+        let samples = res.finalize()?;
+        // the reservoir has consumed its file: remove the scratch dir now;
+        // error paths and abandoned sketchers clean up via ScratchDir::drop
+        drop(dir);
+        let drawn: Vec<SketchEntry> = samples
+            .iter()
+            .map(|smp| {
+                let it = smp.item;
+                let w = ctx.dist.weight(it.row, it.val);
+                let p = w / total_weight;
+                SketchEntry {
+                    row: it.row,
+                    col: it.col,
+                    count: smp.count as u32,
+                    value: smp.count as f64 * it.val as f64 / (s as f64 * p),
+                }
+            })
+            .collect();
+
+        let mut metrics = PipelineMetrics {
+            ingested,
+            skipped_zero_weight: skipped,
+            workers: 1,
+            sketch_records,
+            pre_merge_samples: samples.iter().map(|x| x.count).sum(),
+            ..Default::default()
+        };
+        let sketch = ctx.assemble(drawn);
+        metrics.merged_samples = sketch.entries.iter().map(|e| e.count as u64).sum();
+        metrics.wall = t0.elapsed();
+        Ok((sketch, metrics))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::{DistributionKind, MatrixStats};
+    use crate::engine::{build_sketcher, PipelineConfig};
+    use crate::sketch::SketchPlan;
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn toy(m: usize, n: usize, seed: u64) -> Coo {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(m, n);
+        for i in 0..m as u32 {
+            for _ in 0..10 {
+                coo.push(i, rng.usize_below(n) as u32, rng.normal() as f32 + 2.0);
+            }
+        }
+        coo.normalize();
+        coo
+    }
+
+    #[test]
+    fn spilling_mode_produces_budget_s() {
+        let a = toy(8, 64, 1);
+        let stats = MatrixStats::from_coo(&a);
+        let plan = SketchPlan::new(DistributionKind::Bernstein, 300).with_seed(4);
+        let cfg = PipelineConfig::default();
+        let mut sk = build_sketcher(SketchMode::Spilling, &stats, &plan, &cfg).unwrap();
+        assert_eq!(sk.mode(), SketchMode::Spilling);
+        sk.ingest(&a.entries).unwrap();
+        let (sketch, metrics) = sk.finalize().unwrap();
+        assert_eq!(
+            sketch.entries.iter().map(|e| e.count as u64).sum::<u64>(),
+            300
+        );
+        assert_eq!(metrics.merged_samples, 300);
+        assert_eq!(metrics.ingested, a.nnz() as u64);
+        assert!(metrics.sketch_records > 0);
+    }
+
+    #[test]
+    fn spilling_matches_streaming_sampling_frequencies() {
+        // same law as the in-memory reservoir: per-row masses agree
+        let a = toy(10, 80, 2);
+        let stats = MatrixStats::from_coo(&a);
+        let trials = 40u64;
+        let s = 400u64;
+        let mut mass = vec![[0.0f64; 2]; a.m];
+        for t in 0..trials {
+            for (which, mode) in [SketchMode::Streaming, SketchMode::Spilling]
+                .into_iter()
+                .enumerate()
+            {
+                let plan = SketchPlan::new(DistributionKind::L1, s).with_seed(900 + t);
+                let mut sk = build_sketcher(mode, &stats, &plan, &PipelineConfig::default())
+                    .unwrap();
+                sk.ingest(&a.entries).unwrap();
+                let (sketch, _) = sk.finalize().unwrap();
+                for e in &sketch.entries {
+                    mass[e.row as usize][which] += e.count as f64;
+                }
+            }
+        }
+        let total = (s * trials) as f64;
+        for i in 0..a.m {
+            let d = (mass[i][0] - mass[i][1]).abs() / total;
+            assert!(d < 0.03, "row {i}: streaming {} vs spilling {}", mass[i][0], mass[i][1]);
+        }
+    }
+}

@@ -90,6 +90,28 @@ impl Table {
     }
 }
 
+/// Per-shard spill-depth histogram table (engine backpressure telemetry):
+/// one row per `(run, shard)`, one column per depth bucket. Runs whose
+/// metrics carry no histogram (single-threaded modes, cache hits) are
+/// skipped.
+pub fn spill_depth_table(
+    name: &str,
+    runs: &[(String, crate::engine::PipelineMetrics)],
+) -> Table {
+    use crate::engine::metrics::SPILL_DEPTH_LABELS;
+    let mut headers: Vec<&str> = vec!["run", "shard"];
+    headers.extend(SPILL_DEPTH_LABELS.iter().copied());
+    let mut t = Table::new(name, &headers);
+    for (label, m) in runs {
+        for (shard, hist) in m.spill_depth_hist.iter().enumerate() {
+            let mut row = vec![label.clone(), shard.to_string()];
+            row.extend(hist.iter().map(|c| c.to_string()));
+            t.push(row);
+        }
+    }
+    t
+}
+
 /// Scientific-notation cell matching the paper's table style (`1.3e+4`).
 pub fn sci(x: f64) -> String {
     if x == 0.0 {
@@ -133,5 +155,23 @@ mod tests {
     fn sci_format() {
         assert_eq!(sci(13000.0), "1.3e4");
         assert_eq!(sci(0.0), "0");
+    }
+
+    #[test]
+    fn spill_table_rows_per_shard() {
+        use crate::engine::metrics::SPILL_DEPTH_BUCKETS;
+        use crate::engine::PipelineMetrics;
+        let mut m = PipelineMetrics::default();
+        let mut h = [0u64; SPILL_DEPTH_BUCKETS];
+        h[0] = 3;
+        m.spill_depth_hist = vec![h, h];
+        let runs = vec![
+            ("sharded".to_string(), m),
+            ("offline".to_string(), PipelineMetrics::default()),
+        ];
+        let t = spill_depth_table("spill_depth", &runs);
+        assert_eq!(t.rows.len(), 2); // two shards, zero for the offline run
+        assert_eq!(t.headers.len(), 2 + SPILL_DEPTH_BUCKETS);
+        assert_eq!(t.rows[1][1], "1");
     }
 }

@@ -1,0 +1,188 @@
+//! E9 — serving-layer throughput: concurrent-reader queries/sec against
+//! the compressed sketch, fed from the persistent [`SketchStore`].
+//!
+//! For each dataset the driver resolves the sketch through the store
+//! (building + persisting on the first run, hitting the cache on repeats),
+//! then measures [`QueryServer`] matvec throughput at several reader
+//! counts. Two tables land in the report directory:
+//!
+//! * `serving` — dataset × readers → queries/sec (the ≥1
+//!   concurrent-reader throughput numbers);
+//! * `serving_spill_depth` — per-shard spill-depth histograms from the
+//!   sharded sketch builds that fed the store (backpressure telemetry).
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Instant;
+
+use crate::datasets::DatasetId;
+use crate::distributions::DistributionKind;
+use crate::engine::{self, PipelineConfig, SketchMode};
+use crate::error::Result;
+use crate::serve::{Query, QueryServer, ServableSketch, SketchStore, StoreKey};
+use crate::sketch::SketchPlan;
+use crate::util::rng::Rng;
+
+use super::report::{fixed, spill_depth_table, Table};
+
+/// Serve-bench knobs.
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// Concurrent reader (worker) counts to measure.
+    pub readers: Vec<usize>,
+    /// Queries per measurement.
+    pub queries: usize,
+    /// Budget as `s = nnz / budget_frac` (min 1000).
+    pub budget_frac: u64,
+    /// Sketching / query seed.
+    pub seed: u64,
+    /// Use reduced-size dataset variants.
+    pub small: bool,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        ServeConfig {
+            readers: vec![1, 2, 4],
+            queries: 64,
+            budget_frac: 10,
+            seed: 0,
+            small: true,
+        }
+    }
+}
+
+/// One throughput measurement.
+#[derive(Clone, Debug)]
+pub struct ServePoint {
+    /// Dataset name.
+    pub dataset: String,
+    /// Distribution name.
+    pub method: String,
+    /// Sample budget.
+    pub s: u64,
+    /// Concurrent readers.
+    pub readers: usize,
+    /// Queries issued.
+    pub queries: u64,
+    /// Measured queries/second.
+    pub qps: f64,
+    /// Whether the sketch came from the store cache.
+    pub cache_hit: bool,
+}
+
+/// Run the serving benchmark; writes `serving.csv`/`.md` and
+/// `serving_spill_depth.csv`/`.md` under `dir`, using (and populating)
+/// the sketch store at `store_dir`.
+pub fn run_serve_bench(
+    dir: &Path,
+    store_dir: &Path,
+    cfg: &ServeConfig,
+    datasets: &[DatasetId],
+) -> Result<Vec<ServePoint>> {
+    let store = SketchStore::open(store_dir)?;
+    let kind = DistributionKind::Bernstein;
+    let mut points = Vec::new();
+    let mut build_metrics: Vec<(String, engine::PipelineMetrics)> = Vec::new();
+
+    for id in datasets {
+        let coo = if cfg.small { id.generate_small(cfg.seed) } else { id.generate(cfg.seed) };
+        let s = (coo.nnz() as u64 / cfg.budget_frac.max(1)).max(1_000);
+        let plan = SketchPlan::new(kind, s).with_seed(cfg.seed);
+        let key = StoreKey::new(id.name(), &kind.name(), s, cfg.seed);
+
+        let mut metrics_slot: Option<engine::PipelineMetrics> = None;
+        let (enc, cache_hit) = store.get_or_build(&key, || {
+            let (sk, metrics) =
+                engine::sketch_coo(SketchMode::Sharded, &coo, &plan, &PipelineConfig::default())?;
+            metrics_slot = Some(metrics);
+            Ok(sk)
+        })?;
+        if let Some(m) = metrics_slot {
+            crate::info!("serving: built {} ({})", key.file_name(), m.summary());
+            build_metrics.push((id.name().to_string(), m));
+        } else {
+            crate::info!("serving: store cache hit for {}", key.file_name());
+        }
+
+        let sketch = Arc::new(ServableSketch::new(enc, kind.name()));
+        let (_, n) = sketch.shape();
+        let mut rng = Rng::new(cfg.seed ^ 0x51_52_59);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+
+        for &readers in &cfg.readers {
+            // build the query batch outside the timed window so qps
+            // measures serving, not submission-side vector clones
+            let batch: Vec<Query> = vec![Query::Matvec(x.clone()); cfg.queries];
+            let server = QueryServer::start(Arc::clone(&sketch), readers);
+            let t0 = Instant::now();
+            let pending = server.submit_batch(batch);
+            for p in pending {
+                p.wait()?;
+            }
+            let wall = t0.elapsed().as_secs_f64();
+            let stats = server.shutdown();
+            debug_assert_eq!(stats.total(), cfg.queries as u64);
+            let qps = if wall > 0.0 { cfg.queries as f64 / wall } else { 0.0 };
+            points.push(ServePoint {
+                dataset: id.name().to_string(),
+                method: kind.name(),
+                s,
+                readers,
+                queries: cfg.queries as u64,
+                qps,
+                cache_hit,
+            });
+        }
+    }
+
+    let mut t = Table::new(
+        "serving",
+        &["dataset", "method", "s", "readers", "queries", "qps", "cache"],
+    );
+    for p in &points {
+        t.push(vec![
+            p.dataset.clone(),
+            p.method.clone(),
+            p.s.to_string(),
+            p.readers.to_string(),
+            p.queries.to_string(),
+            fixed(p.qps, 1),
+            if p.cache_hit { "hit".into() } else { "build".into() },
+        ]);
+    }
+    t.write(dir)?;
+    spill_depth_table("serving_spill_depth", &build_metrics).write(dir)?;
+    Ok(points)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serve_bench_reports_throughput_and_hits_cache_on_rerun() {
+        let base = std::env::temp_dir()
+            .join(format!("matsketch_serving_eval_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let out = base.join("reports");
+        let store = base.join("store");
+        let cfg = ServeConfig {
+            readers: vec![1, 2],
+            queries: 8,
+            ..Default::default()
+        };
+        let datasets = [DatasetId::Synthetic];
+        let pts = run_serve_bench(&out, &store, &cfg, &datasets).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts.iter().all(|p| p.qps > 0.0));
+        assert!(pts.iter().all(|p| !p.cache_hit));
+        assert!(out.join("serving.csv").exists());
+        assert!(out.join("serving_spill_depth.csv").exists());
+
+        // second run must come from the store
+        let pts2 = run_serve_bench(&out, &store, &cfg, &datasets).unwrap();
+        assert!(pts2.iter().all(|p| p.cache_hit));
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -14,11 +14,14 @@
 //! ## Architecture (three layers)
 //!
 //! * **L3 — Rust coordinator** (this crate): the unified sketching engine
-//!   ([`engine`]: one `Sketcher` trait, offline/streaming/sharded modes),
+//!   ([`engine`]: one `Sketcher` trait, offline/streaming/spilling/sharded
+//!   modes),
 //!   its pipeline façade ([`coordinator`]), sampling distributions
 //!   ([`distributions`]),
 //!   reservoir/binomial/hypergeometric samplers ([`samplers`]), compressed
-//!   sketch codec ([`sketch`]), sparse/dense substrates ([`sparse`],
+//!   sketch codec ([`sketch`]), the serving layer ([`serve`]: persistent
+//!   sketch store + compressed-path query engine + multi-threaded
+//!   [`serve::QueryServer`]), sparse/dense substrates ([`sparse`],
 //!   [`linalg`]), dataset generators ([`datasets`]), evaluation harness
 //!   ([`eval`], [`metrics`]).
 //! * **L2 — JAX graphs** (`python/compile/model.py`): the FLOP-heavy
@@ -58,6 +61,7 @@ pub mod linalg;
 pub mod metrics;
 pub mod runtime;
 pub mod samplers;
+pub mod serve;
 pub mod sketch;
 pub mod sparse;
 pub mod stream;
@@ -73,6 +77,7 @@ pub mod prelude {
     pub use crate::engine::{build_sketcher, sketch_entry_stream, SketchMode, Sketcher};
     pub use crate::error::{Error, Result};
     pub use crate::metrics::MatrixMetrics;
+    pub use crate::serve::{QueryServer, ServableSketch, SketchStore, StoreKey};
     pub use crate::sketch::{Sketch, SketchPlan};
     pub use crate::sparse::{Coo, Csr, Dense, Entry};
     pub use crate::util::rng::Rng;

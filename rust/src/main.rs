@@ -1,14 +1,19 @@
 //! matsketch CLI — the L3 leader entrypoint.
 //!
 //! ```text
-//! matsketch tables    [--small] [--seed N] [--out DIR]
-//! matsketch fig1      [--small] [--seed N] [--out DIR] [--k K]
-//!                     [--points P] [--datasets a,b] [--engine xla|rust]
-//! matsketch compress  [--small] [--seed N] [--out DIR]
-//! matsketch theory    [--small] [--seed N] [--out DIR]
-//! matsketch sketch    --input a.bin --s N [--method NAME] [--workers W]
-//!                     [--mode offline|streaming|sharded] [--out sketch.bin]
-//! matsketch gen       --dataset NAME [--seed N] --out a.bin
+//! matsketch tables      [--small] [--seed N] [--out DIR]
+//! matsketch fig1        [--small] [--seed N] [--out DIR] [--k K]
+//!                       [--points P] [--datasets a,b] [--engine xla|rust]
+//! matsketch compress    [--small] [--seed N] [--out DIR]
+//! matsketch theory      [--small] [--seed N] [--out DIR]
+//! matsketch sketch      --input a.bin --s N [--method NAME] [--workers W]
+//!                       [--mode offline|streaming|spilling|sharded]
+//!                       [--store DIR] [--force] [--sketch-out FILE]
+//! matsketch query       --dataset NAME --s N [--method NAME] [--store DIR]
+//!                       --op matvec|matvec-t|row|col|top-k [--k K] [--index I]
+//! matsketch serve-bench [--small] [--seed N] [--out DIR] [--store DIR]
+//!                       [--readers 1,2,4] [--queries Q] [--datasets a,b]
+//! matsketch gen         --dataset NAME [--seed N] --out a.bin
 //! ```
 
 use std::path::{Path, PathBuf};
@@ -21,12 +26,14 @@ use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::{Error, Result};
 use matsketch::eval::{run_compression, run_figure1, run_tables, run_theory, Figure1Config};
 use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
+use matsketch::serve::{Query, QueryOutcome, ServableSketch, SketchStore, StoreKey};
 use matsketch::sketch::{encode_sketch, SketchPlan};
 use matsketch::sparse::io as sparse_io;
 use matsketch::stream::FileStream;
 use matsketch::util::args::Args;
 use matsketch::util::human_bytes;
 use matsketch::util::logging::{set_level, Level};
+use matsketch::util::rng::Rng;
 use matsketch::{info, warn_log};
 
 fn main() -> ExitCode {
@@ -40,7 +47,7 @@ fn main() -> ExitCode {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::from_env(&["small", "verbose", "help", "include-ahk06"])?;
+    let args = Args::from_env(&["small", "verbose", "help", "include-ahk06", "force"])?;
     if args.flag("verbose") {
         set_level(Level::Debug);
     }
@@ -119,32 +126,84 @@ fn real_main() -> Result<()> {
             let mode_name = args.get_or("mode", "sharded");
             let mode = SketchMode::parse(mode_name)
                 .ok_or_else(|| Error::invalid(format!("unknown mode {mode_name}")))?;
-            // pass 1: stats
-            let mut st_stream = FileStream::open(Path::new(input))?;
-            let (m, n) = {
-                use matsketch::stream::EntryStream;
-                st_stream.shape()
-            };
-            let mut stats = MatrixStats::new(m, n);
-            {
-                use matsketch::stream::EntryStream;
-                while let Some(e) = st_stream.next_entry()? {
-                    stats.push(&e);
+            let store = SketchStore::open(args.get_or("store", "sketch-store"))?;
+            let key = StoreKey::new(&dataset_label(&args, input), &kind.name(), s, seed);
+
+            // cache lookup first: a repeated run at the same
+            // (dataset, method, s, seed) is served from the store.
+            // --force skips the lookup entirely (also the escape hatch for
+            // a corrupt entry). A hit is still rejected as stale when the
+            // input file is newer than the store entry (the input was
+            // regenerated) or its header shape no longer matches the
+            // stored sketch (a different matrix under the same label).
+            let cached = if args.flag("force") { None } else { store.get(&key)? };
+            let cached = match cached {
+                Some(stored) => {
+                    if input_newer_than(input, &store.path_for(&key)) {
+                        info!("{input} is newer than the stored sketch; re-sketching");
+                        None
+                    } else {
+                        let (im, in_) = {
+                            use matsketch::stream::EntryStream;
+                            FileStream::open(Path::new(input))?.shape()
+                        };
+                        if (im, in_) != (stored.enc.m, stored.enc.n) {
+                            info!(
+                                "{input} is {im}x{in_} but the stored sketch is {}x{}; \
+                                 re-sketching",
+                                stored.enc.m, stored.enc.n
+                            );
+                            None
+                        } else {
+                            Some(stored)
+                        }
+                    }
                 }
-            }
-            // pass 2: streaming sketch through the unified engine
-            let plan = SketchPlan::new(kind, s).with_seed(seed);
-            let cfg = PipelineConfig {
-                workers: args.get_parse_or("workers", 0)?,
-                ..Default::default()
+                None => None,
             };
-            let stream = FileStream::open(Path::new(input))?;
-            let (sketch, metrics) = sketch_entry_stream(mode, stream, &stats, &plan, &cfg)?;
-            info!("pipeline: {}", metrics.summary());
-            let enc = encode_sketch(&sketch)?;
+            let enc = match cached {
+                Some(stored) => {
+                    info!("store hit: {} (skipping re-sketch)", store.path_for(&key).display());
+                    if args.get("mode").is_some() {
+                        info!(
+                            "note: --mode {mode_name} not exercised on a store hit \
+                             (sketches are mode-exchangeable); use --force to re-sketch"
+                        );
+                    }
+                    stored.enc
+                }
+                None => {
+                    // pass 1: stats
+                    let mut st_stream = FileStream::open(Path::new(input))?;
+                    let (m, n) = {
+                        use matsketch::stream::EntryStream;
+                        st_stream.shape()
+                    };
+                    let mut stats = MatrixStats::new(m, n);
+                    {
+                        use matsketch::stream::EntryStream;
+                        while let Some(e) = st_stream.next_entry()? {
+                            stats.push(&e);
+                        }
+                    }
+                    // pass 2: streaming sketch through the unified engine
+                    let plan = SketchPlan::new(kind, s).with_seed(seed);
+                    let cfg = PipelineConfig {
+                        workers: args.get_parse_or("workers", 0)?,
+                        ..Default::default()
+                    };
+                    let stream = FileStream::open(Path::new(input))?;
+                    let (sketch, metrics) =
+                        sketch_entry_stream(mode, stream, &stats, &plan, &cfg)?;
+                    info!("pipeline: {}", metrics.summary());
+                    let enc = encode_sketch(&sketch)?;
+                    let path = store.put(&key, &enc)?;
+                    info!("stored sketch at {}", path.display());
+                    enc
+                }
+            };
             info!(
-                "sketch: {} coordinates, {} encoded ({:.2} bits/sample)",
-                sketch.nnz(),
+                "sketch: {} encoded ({:.2} bits/sample)",
                 human_bytes(enc.bytes.len()),
                 enc.bits_per_sample()
             );
@@ -153,9 +212,147 @@ fn real_main() -> Result<()> {
                 info!("wrote encoded sketch to {outp}");
             }
         }
+        "query" => {
+            let store = SketchStore::open(args.get_or("store", "sketch-store"))?;
+            let dataset = args
+                .get("dataset")
+                .ok_or_else(|| Error::invalid("query requires --dataset <label>"))?;
+            let s: u64 = args
+                .get_parse("s")?
+                .ok_or_else(|| Error::invalid("query requires --s <budget>"))?;
+            let kind = parse_method(args.get_or("method", "bernstein"))?;
+            let key = StoreKey::new(dataset, &kind.name(), s, seed);
+            let stored = store.get(&key)?.ok_or_else(|| {
+                Error::invalid(format!(
+                    "no stored sketch {} under {} — run `matsketch sketch` first",
+                    key.file_name(),
+                    store.dir().display()
+                ))
+            })?;
+            let sketch = ServableSketch::from_stored(stored);
+            let (m, n) = sketch.shape();
+            info!("serving {}x{} sketch, s={} ({})", m, n, key.s, sketch.method);
+            run_query(&args, &sketch)?;
+        }
+        "serve-bench" => {
+            let cfg = matsketch::eval::ServeConfig {
+                readers: parse_usize_list(args.get_or("readers", "1,2,4"))?,
+                queries: args.get_parse_or("queries", 64)?,
+                budget_frac: args.get_parse_or("budget-frac", 10)?,
+                seed,
+                small,
+            };
+            let datasets = parse_datasets(args.get("datasets"))?;
+            let store_dir = PathBuf::from(args.get_or("store", "sketch-store"));
+            let pts = matsketch::eval::run_serve_bench(&out, &store_dir, &cfg, &datasets)?;
+            for p in &pts {
+                info!(
+                    "serve-bench: {} readers={} -> {:.1} queries/s",
+                    p.dataset, p.readers, p.qps
+                );
+            }
+            info!("serve-bench: {} points -> {}/serving.*", pts.len(), out.display());
+        }
         other => {
             print_help();
             return Err(Error::invalid(format!("unknown command {other}")));
+        }
+    }
+    Ok(())
+}
+
+/// Whether `input` was modified after the stored sketch at `entry` (when
+/// both timestamps are available): a cache hit for a since-regenerated
+/// input file must not serve a sketch of the old matrix.
+fn input_newer_than(input: &str, entry: &Path) -> bool {
+    let mtime = |p: &Path| std::fs::metadata(p).and_then(|m| m.modified()).ok();
+    match (mtime(Path::new(input)), mtime(entry)) {
+        (Some(a), Some(b)) => a > b,
+        _ => false,
+    }
+}
+
+/// Dataset label for the store key: explicit `--dataset`, else the input
+/// file stem.
+fn dataset_label(args: &Args, input: &str) -> String {
+    if let Some(d) = args.get("dataset") {
+        return d.to_string();
+    }
+    Path::new(input)
+        .file_stem()
+        .and_then(|s| s.to_str())
+        .unwrap_or("input")
+        .to_string()
+}
+
+/// Parse a comma-separated list of positive integers (e.g. `--readers 1,2,4`).
+fn parse_usize_list(spec: &str) -> Result<Vec<usize>> {
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let t = tok.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(
+            t.parse::<usize>()
+                .map_err(|_| Error::invalid(format!("bad count {t:?} in list {spec:?}")))?,
+        );
+    }
+    if out.is_empty() {
+        return Err(Error::invalid(format!("empty list {spec:?}")));
+    }
+    Ok(out)
+}
+
+/// Execute one `query` subcommand op against a loaded sketch and print
+/// the answer.
+fn run_query(args: &Args, sketch: &ServableSketch) -> Result<()> {
+    let (m, n) = sketch.shape();
+    let op = args.get_or("op", "top-k");
+    let query = match op {
+        "matvec" | "matvec-t" => {
+            // deterministic pseudo-random probe vector (reproducible runs)
+            let x_seed: u64 = args.get_parse_or("x-seed", 1)?;
+            let len = if op == "matvec" { n } else { m };
+            let mut rng = Rng::new(x_seed);
+            let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
+            if op == "matvec" {
+                Query::Matvec(x)
+            } else {
+                Query::MatvecT(x)
+            }
+        }
+        "row" => Query::Row(args.get_parse_or::<u32>("index", 0)?),
+        "col" => Query::Col(args.get_parse_or::<u32>("index", 0)?),
+        "top-k" | "topk" => Query::TopK(args.get_parse_or("k", 10)?),
+        other => return Err(Error::invalid(format!("unknown query op {other}"))),
+    };
+    match sketch.answer(&query)? {
+        QueryOutcome::Vector(y) => {
+            let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+            let mut heavy: Vec<(usize, f64)> = y.iter().copied().enumerate().collect();
+            heavy.sort_by(|a, b| {
+                b.1.abs()
+                    .partial_cmp(&a.1.abs())
+                    .unwrap_or(std::cmp::Ordering::Equal)
+            });
+            heavy.truncate(5);
+            println!("len={} l2_norm={norm:.6e}", y.len());
+            for (i, v) in heavy {
+                println!("  y[{i}] = {v:.6e}");
+            }
+        }
+        QueryOutcome::Entries(es) => {
+            println!("{} entries", es.len());
+            for e in es.iter().take(20) {
+                println!(
+                    "  ({}, {})  count={}  value={:.6e}",
+                    e.row, e.col, e.count, e.value
+                );
+            }
+            if es.len() > 20 {
+                println!("  ... {} more", es.len() - 20);
+            }
         }
     }
     Ok(())
@@ -209,24 +406,37 @@ fn print_help() {
 USAGE: matsketch <command> [options]
 
 COMMANDS:
-  tables     E1/E4: matrix characteristics + sample-complexity tables
-  fig1       E2: Figure-1 quality sweep (all methods x budgets x datasets)
-  compress   E3: sketch codec bits/sample + disc-size ratios
-  theory     E6: eps5 near-optimality checks
-  ablate     E8: row-norm-noise / delta / worker-count ablations
-  gen        generate a dataset to a binary triplet file
-  sketch     stream-sketch a triplet file through the full pipeline
+  tables       E1/E4: matrix characteristics + sample-complexity tables
+  fig1         E2: Figure-1 quality sweep (all methods x budgets x datasets)
+  compress     E3: sketch codec bits/sample + disc-size ratios
+  theory       E6: eps5 near-optimality checks
+  ablate       E8: row-norm-noise / delta / worker-count ablations
+  serve-bench  E9: concurrent query-serving throughput from the store
+  gen          generate a dataset to a binary triplet file
+  sketch       stream-sketch a triplet file into the sketch store
+  query        answer a matvec / slice / top-k query from a stored sketch
 
 COMMON OPTIONS:
   --out DIR        report/output directory (default: reports)
   --seed N         RNG seed (default 0)
   --small          use reduced-size dataset variants
   --engine xla|rust  dense-compute engine (default: xla if artifacts exist)
+  --store DIR      sketch store directory (default: sketch-store)
   --verbose        debug logging
 
 SKETCH OPTIONS:
   --input FILE --s N [--method bernstein|row-l1|l1|l2|l2-trim-0.1]
-  [--mode offline|streaming|sharded] [--workers W] [--sketch-out FILE]
+  [--mode offline|streaming|spilling|sharded] [--workers W]
+  [--dataset LABEL] [--force] [--sketch-out FILE]
+  The encoded sketch lands in the store keyed by
+  (dataset, method, s, seed); a re-run with the same key is a cache hit.
+
+QUERY OPTIONS:
+  --dataset LABEL --s N [--method NAME]
+  --op matvec|matvec-t|row|col|top-k [--k K] [--index I] [--x-seed N]
+
+SERVE-BENCH OPTIONS:
+  [--readers 1,2,4] [--queries Q] [--budget-frac F] [--datasets a,b]
 "
     );
 }

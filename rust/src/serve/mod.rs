@@ -1,0 +1,35 @@
+//! The serving layer: persist sketches, answer queries against them.
+//!
+//! Building the sketch is half the paper's story; the payoff is *serving*
+//! approximate matrix queries from the compressed sketch instead of from
+//! `A` (cf. §1's disc-size argument, and the downstream-use framing in
+//! BKK20 / fast sketched matrix multiplication). This module turns the
+//! repo from a sketch builder into a sketch service:
+//!
+//! * [`store`] — a versioned on-disk container (magic / header / FNV-1a
+//!   checksum, written via [`crate::sketch::bitio`]) plus [`SketchStore`],
+//!   a directory keyed by `(dataset, distribution, budget s, seed)` so
+//!   repeated runs reuse cached sketches instead of re-sketching.
+//! * [`query`] — matvec (`B·x`, `Bᵀ·x`), row/column slices, and top-k
+//!   heaviest entries executed *directly on the Elias-γ compressed
+//!   payload* via [`crate::sketch::encode::SketchCursor`] (streaming
+//!   decode, no full [`crate::sketch::Sketch`] materialization), with
+//!   decoded-path twins for cross-checking.
+//! * [`server`] — [`QueryServer`]: one immutable compressed sketch shared
+//!   across worker threads answering batched [`Query`] requests.
+//!
+//! CLI entry points: `matsketch sketch` writes into the store,
+//! `matsketch query` answers one query from it, and
+//! `matsketch serve-bench` measures concurrent-reader throughput into the
+//! eval report (see `eval::serving`).
+
+pub mod query;
+pub mod server;
+pub mod store;
+
+pub use query::{
+    col_slice, decoded_matvec, decoded_matvec_t, decoded_top_k, matvec, matvec_t, row_slice,
+    top_k,
+};
+pub use server::{Pending, Query, QueryOutcome, QueryServer, ServableSketch, ServerStats};
+pub use store::{SketchStore, StoreKey, StoredSketch};

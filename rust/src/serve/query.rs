@@ -1,0 +1,253 @@
+//! Query execution directly on the Elias-γ compressed sketch.
+//!
+//! Every operator streams the payload through
+//! [`crate::sketch::encode::SketchCursor`] — one pass, O(1) decode state,
+//! no full [`Sketch`] materialization. The `decoded_*` twins run the same
+//! f64 accumulation over a decoded [`Sketch`]'s entry list (which the
+//! cursor produces in the same row-major order), so the two paths agree
+//! exactly and cross-check each other in `tests/integration_serve.rs`.
+
+use std::cmp::Ordering;
+
+use crate::error::{Error, Result};
+use crate::sketch::encode::SketchCursor;
+use crate::sketch::{EncodedSketch, Sketch, SketchEntry};
+
+/// `y = B·x` computed off the compressed payload (`x` length n, `y`
+/// length m).
+pub fn matvec(enc: &EncodedSketch, x: &[f64]) -> Result<Vec<f64>> {
+    let mut cur = SketchCursor::open(enc)?;
+    let (m, n) = (cur.m, cur.n);
+    if x.len() != n {
+        return Err(Error::shape(format!(
+            "matvec: x has {} entries, B has {n} columns",
+            x.len()
+        )));
+    }
+    let mut y = vec![0.0f64; m];
+    while let Some(e) = cur.next_entry()? {
+        check_bounds(&e, m, n)?;
+        y[e.row as usize] += e.value * x[e.col as usize];
+    }
+    Ok(y)
+}
+
+/// `y = Bᵀ·x` computed off the compressed payload (`x` length m, `y`
+/// length n).
+pub fn matvec_t(enc: &EncodedSketch, x: &[f64]) -> Result<Vec<f64>> {
+    let mut cur = SketchCursor::open(enc)?;
+    let (m, n) = (cur.m, cur.n);
+    if x.len() != m {
+        return Err(Error::shape(format!(
+            "matvec_t: x has {} entries, B has {m} rows",
+            x.len()
+        )));
+    }
+    let mut y = vec![0.0f64; n];
+    while let Some(e) = cur.next_entry()? {
+        check_bounds(&e, m, n)?;
+        y[e.col as usize] += e.value * x[e.row as usize];
+    }
+    Ok(y)
+}
+
+/// All entries of row `i`, in column order. Stops decoding as soon as the
+/// row-major stream passes row `i`.
+pub fn row_slice(enc: &EncodedSketch, i: u32) -> Result<Vec<SketchEntry>> {
+    let mut cur = SketchCursor::open(enc)?;
+    if i as usize >= cur.m {
+        return Err(Error::shape(format!("row {i} outside {} rows", cur.m)));
+    }
+    let mut out = Vec::new();
+    while let Some(e) = cur.next_entry()? {
+        if e.row > i {
+            break;
+        }
+        if e.row == i {
+            out.push(e);
+        }
+    }
+    Ok(out)
+}
+
+/// All entries of column `j`, in row order (full payload scan).
+pub fn col_slice(enc: &EncodedSketch, j: u32) -> Result<Vec<SketchEntry>> {
+    let mut cur = SketchCursor::open(enc)?;
+    if j as usize >= cur.n {
+        return Err(Error::shape(format!("column {j} outside {} columns", cur.n)));
+    }
+    let mut out = Vec::new();
+    while let Some(e) = cur.next_entry()? {
+        if e.col == j {
+            out.push(e);
+        }
+    }
+    Ok(out)
+}
+
+/// Deterministic heaviness order: larger `|value|` first, ties broken by
+/// `(row, col)` ascending. Entries have unique coordinates, so this is a
+/// strict total order and the compressed / decoded top-k paths agree
+/// element-for-element.
+pub fn rank_cmp(a: &SketchEntry, b: &SketchEntry) -> Ordering {
+    b.value
+        .abs()
+        .partial_cmp(&a.value.abs())
+        .unwrap_or(Ordering::Equal)
+        .then_with(|| (a.row, a.col).cmp(&(b.row, b.col)))
+}
+
+/// The `k` heaviest entries by `|value|`, heaviest first, computed with a
+/// k-bounded selection buffer over the streaming decode.
+pub fn top_k(enc: &EncodedSketch, k: usize) -> Result<Vec<SketchEntry>> {
+    let mut cur = SketchCursor::open(enc)?;
+    if k == 0 {
+        return Ok(Vec::new());
+    }
+    // cap the eager allocation: a user-supplied k may far exceed the
+    // sketch's entry count, and the buffer grows on demand anyway
+    let mut top: Vec<SketchEntry> = Vec::with_capacity(k.min(1024) + 1);
+    while let Some(e) = cur.next_entry()? {
+        if top.len() == k {
+            let lightest = top.last().expect("top non-empty when len == k");
+            if rank_cmp(lightest, &e) != Ordering::Greater {
+                continue;
+            }
+        }
+        let pos = top.partition_point(|t| rank_cmp(t, &e) == Ordering::Less);
+        top.insert(pos, e);
+        if top.len() > k {
+            top.pop();
+        }
+    }
+    Ok(top)
+}
+
+/// Reference matvec over a decoded sketch: identical f64 accumulation
+/// order to [`matvec`] (the entry list is row-major, exactly the cursor's
+/// emission order).
+pub fn decoded_matvec(sk: &Sketch, x: &[f64]) -> Result<Vec<f64>> {
+    if x.len() != sk.n {
+        return Err(Error::shape(format!(
+            "decoded_matvec: x has {} entries, B has {} columns",
+            x.len(),
+            sk.n
+        )));
+    }
+    let mut y = vec![0.0f64; sk.m];
+    for e in &sk.entries {
+        y[e.row as usize] += e.value * x[e.col as usize];
+    }
+    Ok(y)
+}
+
+/// Reference transposed matvec over a decoded sketch (see
+/// [`decoded_matvec`]).
+pub fn decoded_matvec_t(sk: &Sketch, x: &[f64]) -> Result<Vec<f64>> {
+    if x.len() != sk.m {
+        return Err(Error::shape(format!(
+            "decoded_matvec_t: x has {} entries, B has {} rows",
+            x.len(),
+            sk.m
+        )));
+    }
+    let mut y = vec![0.0f64; sk.n];
+    for e in &sk.entries {
+        y[e.col as usize] += e.value * x[e.row as usize];
+    }
+    Ok(y)
+}
+
+/// Reference top-k over a decoded sketch: full sort under [`rank_cmp`].
+pub fn decoded_top_k(sk: &Sketch, k: usize) -> Vec<SketchEntry> {
+    let mut all = sk.entries.clone();
+    all.sort_by(rank_cmp);
+    all.truncate(k);
+    all
+}
+
+#[inline]
+fn check_bounds(e: &SketchEntry, m: usize, n: usize) -> Result<()> {
+    if (e.row as usize) >= m || (e.col as usize) >= n {
+        return Err(Error::Parse(format!(
+            "sketch payload entry ({}, {}) outside {m}x{n}",
+            e.row, e.col
+        )));
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::DistributionKind;
+    use crate::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn toy(kind: DistributionKind) -> (EncodedSketch, Sketch) {
+        let mut rng = Rng::new(7);
+        let mut coo = Coo::new(12, 90);
+        for i in 0..12u32 {
+            for _ in 0..15 {
+                coo.push(i, rng.usize_below(90) as u32, rng.normal() as f32 + 1.0);
+            }
+        }
+        let a = coo.to_csr();
+        let sk = sketch_offline(&a, &SketchPlan::new(kind, 500).with_seed(1)).unwrap();
+        let enc = encode_sketch(&sk).unwrap();
+        let dec = decode_sketch(&enc, &sk.method).unwrap();
+        (enc, dec)
+    }
+
+    #[test]
+    fn compressed_matvec_matches_decoded_exactly() {
+        for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+            let (enc, dec) = toy(kind);
+            let mut rng = Rng::new(42);
+            let x: Vec<f64> = (0..dec.n).map(|_| rng.normal()).collect();
+            let xt: Vec<f64> = (0..dec.m).map(|_| rng.normal()).collect();
+            assert_eq!(matvec(&enc, &x).unwrap(), decoded_matvec(&dec, &x).unwrap());
+            assert_eq!(
+                matvec_t(&enc, &xt).unwrap(),
+                decoded_matvec_t(&dec, &xt).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn slices_match_decoded_filter() {
+        let (enc, dec) = toy(DistributionKind::Bernstein);
+        for i in [0u32, 5, 11] {
+            let want: Vec<SketchEntry> =
+                dec.entries.iter().copied().filter(|e| e.row == i).collect();
+            assert_eq!(row_slice(&enc, i).unwrap(), want, "row {i}");
+        }
+        let j = dec.entries[0].col;
+        let want: Vec<SketchEntry> = dec.entries.iter().copied().filter(|e| e.col == j).collect();
+        assert_eq!(col_slice(&enc, j).unwrap(), want);
+        assert!(row_slice(&enc, 1_000).is_err());
+        assert!(col_slice(&enc, 100_000).is_err());
+    }
+
+    #[test]
+    fn top_k_matches_full_sort_and_is_ordered() {
+        let (enc, dec) = toy(DistributionKind::Bernstein);
+        for k in [0usize, 1, 7, 50, 10_000] {
+            let got = top_k(&enc, k).unwrap();
+            let want = decoded_top_k(&dec, k);
+            assert_eq!(got, want, "k={k}");
+            assert!(
+                got.windows(2).all(|w| rank_cmp(&w[0], &w[1]) == Ordering::Less),
+                "k={k}: not strictly ordered"
+            );
+        }
+    }
+
+    #[test]
+    fn shape_mismatches_rejected() {
+        let (enc, dec) = toy(DistributionKind::L2);
+        assert!(matvec(&enc, &vec![0.0; dec.n + 1]).is_err());
+        assert!(matvec_t(&enc, &vec![0.0; dec.m + 1]).is_err());
+    }
+}

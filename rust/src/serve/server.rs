@@ -1,0 +1,272 @@
+//! The multi-threaded serving front: one immutable loaded sketch shared
+//! across worker threads answering batched query requests.
+//!
+//! A [`QueryServer`] owns `W` workers pulling [`Query`] jobs off a shared
+//! queue; each job carries its own reply channel, so callers submit
+//! (optionally in batches), keep working, and [`Pending::wait`] when they
+//! need the answer. The sketch stays in its compressed form for the whole
+//! server lifetime — workers answer straight off the Elias-γ payload via
+//! [`super::query`], so serving memory is the compressed size, not the
+//! decoded one.
+
+use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+
+use crate::error::{Error, Result};
+use crate::sketch::{encode_sketch, EncodedSketch, Sketch, SketchEntry};
+
+use super::query;
+use super::store::StoredSketch;
+
+/// An immutable, shareable loaded sketch: what a [`QueryServer`] serves.
+#[derive(Clone, Debug)]
+pub struct ServableSketch {
+    /// The compressed payload queries execute against.
+    pub enc: EncodedSketch,
+    /// Distribution name (provenance, reporting).
+    pub method: String,
+}
+
+impl ServableSketch {
+    /// Wrap an already-encoded sketch.
+    pub fn new(enc: EncodedSketch, method: impl Into<String>) -> ServableSketch {
+        ServableSketch { enc, method: method.into() }
+    }
+
+    /// Encode and wrap an in-memory sketch.
+    pub fn from_sketch(sk: &Sketch) -> Result<ServableSketch> {
+        Ok(ServableSketch { enc: encode_sketch(sk)?, method: sk.method.clone() })
+    }
+
+    /// Wrap a sketch read back from the store.
+    pub fn from_stored(stored: StoredSketch) -> ServableSketch {
+        ServableSketch { enc: stored.enc, method: stored.method }
+    }
+
+    /// `(m, n)` of the served matrix sketch.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.enc.m, self.enc.n)
+    }
+
+    /// Answer one query synchronously (the worker body; also usable
+    /// directly for single-threaded callers and cross-checks).
+    pub fn answer(&self, q: &Query) -> Result<QueryOutcome> {
+        Ok(match q {
+            Query::Matvec(x) => QueryOutcome::Vector(query::matvec(&self.enc, x)?),
+            Query::MatvecT(x) => QueryOutcome::Vector(query::matvec_t(&self.enc, x)?),
+            Query::Row(i) => QueryOutcome::Entries(query::row_slice(&self.enc, *i)?),
+            Query::Col(j) => QueryOutcome::Entries(query::col_slice(&self.enc, *j)?),
+            Query::TopK(k) => QueryOutcome::Entries(query::top_k(&self.enc, *k)?),
+        })
+    }
+}
+
+/// One serving request.
+#[derive(Clone, Debug)]
+pub enum Query {
+    /// `y = B·x` (`x` length n).
+    Matvec(Vec<f64>),
+    /// `y = Bᵀ·x` (`x` length m).
+    MatvecT(Vec<f64>),
+    /// All entries of one row.
+    Row(u32),
+    /// All entries of one column.
+    Col(u32),
+    /// The k heaviest entries by `|value|`.
+    TopK(usize),
+}
+
+/// A serving answer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryOutcome {
+    /// Dense result vector (matvec family).
+    Vector(Vec<f64>),
+    /// Entry list (slices, top-k).
+    Entries(Vec<SketchEntry>),
+}
+
+/// One in-flight job: the query plus its private reply channel.
+struct Job {
+    query: Query,
+    reply: SyncSender<Result<QueryOutcome>>,
+}
+
+/// Handle to one submitted query's eventual answer.
+pub struct Pending {
+    rx: Receiver<Result<QueryOutcome>>,
+}
+
+impl Pending {
+    /// Block until the worker answers.
+    pub fn wait(self) -> Result<QueryOutcome> {
+        match self.rx.recv() {
+            Ok(r) => r,
+            Err(_) => Err(Error::Pipeline(
+                "query worker dropped the reply channel".into(),
+            )),
+        }
+    }
+}
+
+/// Per-run serving counters, returned by [`QueryServer::shutdown`].
+#[derive(Clone, Debug, Default)]
+pub struct ServerStats {
+    /// Queries answered by each worker.
+    pub served_per_worker: Vec<u64>,
+}
+
+impl ServerStats {
+    /// Total queries answered.
+    pub fn total(&self) -> u64 {
+        self.served_per_worker.iter().sum()
+    }
+}
+
+/// A pool of worker threads answering queries against one shared
+/// compressed sketch.
+pub struct QueryServer {
+    sketch: Arc<ServableSketch>,
+    tx: Sender<Job>,
+    handles: Vec<JoinHandle<u64>>,
+}
+
+impl QueryServer {
+    /// Spawn `workers` (min 1) threads serving `sketch`.
+    pub fn start(sketch: Arc<ServableSketch>, workers: usize) -> QueryServer {
+        let workers = workers.max(1);
+        let (tx, rx) = channel::<Job>();
+        let rx = Arc::new(Mutex::new(rx));
+        let mut handles = Vec::with_capacity(workers);
+        for _ in 0..workers {
+            let rx = Arc::clone(&rx);
+            let sk = Arc::clone(&sketch);
+            handles.push(std::thread::spawn(move || -> u64 {
+                let mut served = 0u64;
+                loop {
+                    // hold the queue lock only for the dequeue, not the
+                    // (possibly long) answer computation
+                    let job = match rx.lock() {
+                        Ok(guard) => guard.recv(),
+                        Err(_) => break,
+                    };
+                    let Ok(job) = job else { break };
+                    let out = sk.answer(&job.query);
+                    // a caller that dropped its Pending is fine to ignore
+                    let _ = job.reply.send(out);
+                    served += 1;
+                }
+                served
+            }));
+        }
+        QueryServer { sketch, tx, handles }
+    }
+
+    /// The served sketch.
+    pub fn sketch(&self) -> &Arc<ServableSketch> {
+        &self.sketch
+    }
+
+    /// Worker count.
+    pub fn workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Enqueue one query; returns immediately with a wait handle.
+    pub fn submit(&self, query: Query) -> Pending {
+        let (reply, rx) = sync_channel(1);
+        // if every worker is gone the Pending surfaces it at wait()
+        let _ = self.tx.send(Job { query, reply });
+        Pending { rx }
+    }
+
+    /// Enqueue a batch; answers can be awaited in any order.
+    pub fn submit_batch(&self, queries: Vec<Query>) -> Vec<Pending> {
+        queries.into_iter().map(|q| self.submit(q)).collect()
+    }
+
+    /// Close the queue, join every worker, and report serving stats.
+    pub fn shutdown(self) -> ServerStats {
+        drop(self.tx);
+        let served_per_worker: Vec<u64> = self
+            .handles
+            .into_iter()
+            .map(|h| h.join().unwrap_or(0))
+            .collect();
+        ServerStats { served_per_worker }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::DistributionKind;
+    use crate::sketch::{sketch_offline, SketchPlan};
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn servable() -> ServableSketch {
+        let mut rng = Rng::new(11);
+        let mut coo = Coo::new(10, 64);
+        for i in 0..10u32 {
+            for _ in 0..12 {
+                coo.push(i, rng.usize_below(64) as u32, rng.normal() as f32 + 1.5);
+            }
+        }
+        let a = coo.to_csr();
+        let sk =
+            sketch_offline(&a, &SketchPlan::new(DistributionKind::Bernstein, 400)).unwrap();
+        ServableSketch::from_sketch(&sk).unwrap()
+    }
+
+    #[test]
+    fn concurrent_answers_match_direct_answers() {
+        let sk = Arc::new(servable());
+        let (m, n) = sk.shape();
+        let server = QueryServer::start(Arc::clone(&sk), 4);
+        assert_eq!(server.workers(), 4);
+
+        let mut rng = Rng::new(5);
+        let queries: Vec<Query> = (0..24usize)
+            .map(|i| match i % 4 {
+                0 => Query::Matvec((0..n).map(|_| rng.normal()).collect()),
+                1 => Query::MatvecT((0..m).map(|_| rng.normal()).collect()),
+                2 => Query::Row((i % m) as u32),
+                _ => Query::TopK(5),
+            })
+            .collect();
+        let pending = server.submit_batch(queries.clone());
+        for (q, p) in queries.iter().zip(pending) {
+            let got = p.wait().unwrap();
+            let want = sk.answer(q).unwrap();
+            assert_eq!(got, want);
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.total(), 24);
+        assert_eq!(stats.served_per_worker.len(), 4);
+    }
+
+    #[test]
+    fn bad_query_surfaces_as_error_not_poison() {
+        let sk = Arc::new(servable());
+        let server = QueryServer::start(Arc::clone(&sk), 2);
+        // wrong-length x: the error comes back on the reply channel and
+        // the server keeps serving afterwards
+        assert!(server.submit(Query::Matvec(vec![1.0; 3])).wait().is_err());
+        let ok = server.submit(Query::TopK(3)).wait().unwrap();
+        match ok {
+            QueryOutcome::Entries(es) => assert_eq!(es.len(), 3),
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn zero_workers_clamps_to_one() {
+        let sk = Arc::new(servable());
+        let server = QueryServer::start(sk, 0);
+        assert_eq!(server.workers(), 1);
+        server.submit(Query::TopK(1)).wait().unwrap();
+        assert_eq!(server.shutdown().total(), 1);
+    }
+}

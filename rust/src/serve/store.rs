@@ -1,0 +1,548 @@
+//! The persistent sketch store: a versioned on-disk container around
+//! [`EncodedSketch`], keyed by `(dataset, distribution, budget s, seed)`.
+//!
+//! ## File format (version 1)
+//!
+//! Everything is written MSB-first through [`crate::sketch::bitio`]; every
+//! header field is a whole number of bytes, so the payload starts
+//! byte-aligned:
+//!
+//! | field          | size     | contents                                  |
+//! |----------------|----------|-------------------------------------------|
+//! | magic          | 4 B      | `"MSKS"`                                  |
+//! | version        | 2 B      | format version (currently 1)              |
+//! | flags          | 2 B      | bit 0: compact (row-scale) payload form   |
+//! | dataset length | 2 B      | byte length of the dataset label          |
+//! | dataset        | ≤64 KiB  | dataset label (UTF-8)                     |
+//! | method length  | 2 B      | byte length of the method name            |
+//! | method         | ≤64 KiB  | distribution name (UTF-8)                 |
+//! | m              | 4 B      | rows                                      |
+//! | n              | 4 B      | columns                                   |
+//! | s              | 8 B      | sample budget                             |
+//! | seed           | 8 B      | RNG seed of the sketching run             |
+//! | header bits    | 8 B      | payload codec header size in bits         |
+//! | body bits      | 8 B      | payload codec body size in bits           |
+//! | payload bytes  | 8 B      | payload length in bytes                   |
+//! | checksum       | 8 B      | FNV-1a 64 over header fields + payload    |
+//! | payload        | variable | the [`EncodedSketch`] bit stream          |
+//!
+//! The checksum covers every byte before it *and* the payload, so a
+//! flipped bit in any header field (identity, shape, budget, flags) is
+//! caught, not just payload damage. The container records the *full*
+//! [`StoreKey`] identity — dataset, method, `s`, seed — and
+//! [`SketchStore::get`] validates it against the requested key, so even a
+//! file-name collision (two labels sanitizing to the same name) is
+//! detected at read time instead of silently serving the wrong sketch.
+//!
+//! A reader rejects bad magic, unknown versions, any size mismatch between
+//! the declared and actual payload (truncated *or* padded files), and
+//! checksum mismatches — a stored sketch either round-trips bit-identically
+//! or fails loudly, never silently serves corrupt data.
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+use crate::sketch::bitio::{BitReader, BitWriter};
+use crate::sketch::{encode_sketch, EncodedSketch, Sketch};
+
+/// File magic: "MSKS" (matsketch sketch store).
+pub const STORE_MAGIC: [u8; 4] = *b"MSKS";
+
+/// Current container format version.
+pub const STORE_VERSION: u16 = 1;
+
+/// Extension used for store files.
+pub const STORE_EXT: &str = "msk";
+
+/// FNV-1a 64-bit initial state.
+const FNV_OFFSET: u64 = 0xCBF2_9CE4_8422_2325;
+
+/// Fold `bytes` into a running FNV-1a 64 state (chainable across
+/// non-contiguous regions, e.g. header then payload).
+pub fn fnv1a64_extend(mut h: u64, bytes: &[u8]) -> u64 {
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
+}
+
+/// FNV-1a 64-bit checksum (dependency-free, stable across platforms).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_extend(FNV_OFFSET, bytes)
+}
+
+/// Identity of a stored sketch: the inputs that make a sketching run
+/// reproducible. Two runs with equal keys produce statistically identical
+/// sketches, so the store can serve the cached one.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct StoreKey {
+    /// Dataset label (e.g. a [`crate::datasets::DatasetId`] name or an
+    /// input file stem).
+    pub dataset: String,
+    /// Distribution name ([`crate::distributions::DistributionKind::name`]).
+    pub method: String,
+    /// Sample budget `s`.
+    pub s: u64,
+    /// RNG seed of the sketching run.
+    pub seed: u64,
+}
+
+impl StoreKey {
+    /// Build a key.
+    pub fn new(dataset: &str, method: &str, s: u64, seed: u64) -> StoreKey {
+        StoreKey {
+            dataset: dataset.to_string(),
+            method: method.to_string(),
+            s,
+            seed,
+        }
+    }
+
+    /// Deterministic file name: sanitized components joined with `__`.
+    pub fn file_name(&self) -> String {
+        format!(
+            "{}__{}__s{}__seed{}.{STORE_EXT}",
+            sanitize(&self.dataset),
+            sanitize(&self.method),
+            self.s,
+            self.seed
+        )
+    }
+}
+
+/// Lower-case a label and replace every non-alphanumeric run with one `-`
+/// so method names like `"L2 trim 0.1"` become safe file-name components.
+fn sanitize(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    let mut pending_dash = false;
+    for c in s.chars() {
+        if c.is_ascii_alphanumeric() {
+            if pending_dash && !out.is_empty() {
+                out.push('-');
+            }
+            pending_dash = false;
+            out.push(c.to_ascii_lowercase());
+        } else {
+            pending_dash = true;
+        }
+    }
+    if out.is_empty() {
+        out.push('x');
+    }
+    out
+}
+
+/// A sketch read back from the store, with the identity recorded at
+/// write time.
+#[derive(Clone, Debug)]
+pub struct StoredSketch {
+    /// The encoded payload, bit-identical to what was written.
+    pub enc: EncodedSketch,
+    /// Dataset label recorded at write time.
+    pub dataset: String,
+    /// Distribution name recorded at write time.
+    pub method: String,
+    /// Sketching seed recorded at write time.
+    pub seed: u64,
+}
+
+impl StoredSketch {
+    /// The key this entry was written under.
+    pub fn key(&self) -> StoreKey {
+        StoreKey::new(&self.dataset, &self.method, self.enc.s, self.seed)
+    }
+}
+
+fn put_str(w: &mut BitWriter, label: &str, what: &str) -> Result<()> {
+    let bytes = label.as_bytes();
+    if bytes.len() > u16::MAX as usize {
+        return Err(Error::invalid(format!("{what} longer than 64 KiB")));
+    }
+    w.put_bits(bytes.len() as u64, 16);
+    for &b in bytes {
+        w.put_bits(b as u64, 8);
+    }
+    Ok(())
+}
+
+/// Serialize an encoded sketch plus its [`StoreKey`] identity into the
+/// container format.
+pub fn encode_container(enc: &EncodedSketch, key: &StoreKey) -> Result<Vec<u8>> {
+    if enc.m > u32::MAX as usize || enc.n > u32::MAX as usize {
+        return Err(Error::invalid("sketch dimensions exceed u32"));
+    }
+    let mut w = BitWriter::new();
+    for b in STORE_MAGIC {
+        w.put_bits(b as u64, 8);
+    }
+    w.put_bits(STORE_VERSION as u64, 16);
+    let flags: u16 = enc.compact as u16;
+    w.put_bits(flags as u64, 16);
+    put_str(&mut w, &key.dataset, "dataset label")?;
+    put_str(&mut w, &key.method, "method name")?;
+    w.put_bits(enc.m as u64, 32);
+    w.put_bits(enc.n as u64, 32);
+    w.put_bits(enc.s, 64);
+    w.put_bits(key.seed, 64);
+    w.put_bits(enc.header_bits as u64, 64);
+    w.put_bits(enc.body_bits as u64, 64);
+    w.put_bits(enc.bytes.len() as u64, 64);
+    let mut out = w.finish();
+    // checksum covers every header byte so far plus the payload
+    let sum = fnv1a64_extend(fnv1a64(&out), &enc.bytes);
+    out.extend_from_slice(&sum.to_be_bytes());
+    out.extend_from_slice(&enc.bytes);
+    Ok(out)
+}
+
+/// Parse a store container back into its encoded sketch. Rejects bad
+/// magic, unknown versions, truncated or padded files, and checksum
+/// mismatches.
+pub fn decode_container(data: &[u8]) -> Result<StoredSketch> {
+    let err = |what: &str| Error::Parse(format!("sketch store: {what}"));
+    let mut r = BitReader::new(data);
+    for want in STORE_MAGIC {
+        let got = r.get_bits(8).ok_or_else(|| err("truncated header"))?;
+        if got != want as u64 {
+            return Err(err("bad magic (not a sketch store file)"));
+        }
+    }
+    let version = r.get_bits(16).ok_or_else(|| err("truncated header"))?;
+    if version != STORE_VERSION as u64 {
+        return Err(Error::Parse(format!(
+            "sketch store: unsupported version {version} (expected {STORE_VERSION})"
+        )));
+    }
+    let flags = r.get_bits(16).ok_or_else(|| err("truncated header"))?;
+    let compact = flags & 1 == 1;
+    let dataset = get_str(&mut r, "dataset label")?;
+    let method = get_str(&mut r, "method name")?;
+    let m = r.get_bits(32).ok_or_else(|| err("truncated header"))? as usize;
+    let n = r.get_bits(32).ok_or_else(|| err("truncated header"))? as usize;
+    let s = r.get_bits(64).ok_or_else(|| err("truncated header"))?;
+    let seed = r.get_bits(64).ok_or_else(|| err("truncated header"))?;
+    let header_bits = r.get_bits(64).ok_or_else(|| err("truncated header"))? as usize;
+    let body_bits = r.get_bits(64).ok_or_else(|| err("truncated header"))? as usize;
+    let payload_len = r.get_bits(64).ok_or_else(|| err("truncated header"))? as usize;
+    let checksum = r.get_bits(64).ok_or_else(|| err("truncated header"))?;
+
+    debug_assert_eq!(r.bit_pos() % 8, 0, "store header must stay byte-aligned");
+    let header_bytes = r.bit_pos() / 8;
+    let actual = data.len().saturating_sub(header_bytes);
+    if actual < payload_len {
+        return Err(err("truncated payload"));
+    }
+    if actual > payload_len {
+        return Err(err("trailing bytes after payload"));
+    }
+    let payload = data[header_bytes..].to_vec();
+    // the stored sum covers all header bytes before the checksum field
+    // plus the payload
+    let covered = &data[..header_bytes - 8];
+    let got_sum = fnv1a64_extend(fnv1a64(covered), &payload);
+    if got_sum != checksum {
+        return Err(Error::Parse(format!(
+            "sketch store: checksum mismatch (stored {checksum:#018x}, computed {got_sum:#018x})"
+        )));
+    }
+    Ok(StoredSketch {
+        enc: EncodedSketch {
+            m,
+            n,
+            s,
+            header_bits,
+            body_bits,
+            bytes: payload,
+            compact,
+        },
+        dataset,
+        method,
+        seed,
+    })
+}
+
+fn get_str(r: &mut BitReader<'_>, what: &str) -> Result<String> {
+    let err = |msg: String| Error::Parse(format!("sketch store: {msg}"));
+    let len = r
+        .get_bits(16)
+        .ok_or_else(|| err("truncated header".into()))? as usize;
+    let mut bytes = Vec::with_capacity(len);
+    for _ in 0..len {
+        bytes.push(r.get_bits(8).ok_or_else(|| err("truncated header".into()))? as u8);
+    }
+    String::from_utf8(bytes).map_err(|_| err(format!("{what} is not valid UTF-8")))
+}
+
+/// Write one encoded sketch to `path` in the container format (through a
+/// writer-unique sibling temp file + rename, so neither a crashed writer
+/// nor two concurrent writers of the same key can leave a half-written
+/// store entry behind).
+pub fn write_encoded(path: &Path, enc: &EncodedSketch, key: &StoreKey) -> Result<()> {
+    use std::sync::atomic::{AtomicU64, Ordering};
+    static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
+    let data = encode_container(enc, key)?;
+    let seq = WRITE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let tmp = path.with_extension(format!(
+        "{STORE_EXT}.tmp-{}-{seq}",
+        std::process::id()
+    ));
+    fs::write(&tmp, &data)?;
+    fs::rename(&tmp, path)?;
+    Ok(())
+}
+
+/// Read one encoded sketch back from `path`.
+pub fn read_encoded(path: &Path) -> Result<StoredSketch> {
+    let data = fs::read(path)?;
+    decode_container(&data)
+}
+
+/// A directory of stored sketches, one file per [`StoreKey`].
+#[derive(Clone, Debug)]
+pub struct SketchStore {
+    dir: PathBuf,
+}
+
+impl SketchStore {
+    /// Open (creating if necessary) a store rooted at `dir`.
+    pub fn open(dir: impl Into<PathBuf>) -> Result<SketchStore> {
+        let dir = dir.into();
+        fs::create_dir_all(&dir)?;
+        Ok(SketchStore { dir })
+    }
+
+    /// Store root.
+    pub fn dir(&self) -> &Path {
+        &self.dir
+    }
+
+    /// File path a key maps to.
+    pub fn path_for(&self, key: &StoreKey) -> PathBuf {
+        self.dir.join(key.file_name())
+    }
+
+    /// Whether a sketch for `key` is present (without validating it).
+    pub fn contains(&self, key: &StoreKey) -> bool {
+        self.path_for(key).is_file()
+    }
+
+    /// Persist an encoded sketch under `key`; returns the file path.
+    pub fn put(&self, key: &StoreKey, enc: &EncodedSketch) -> Result<PathBuf> {
+        let path = self.path_for(key);
+        write_encoded(&path, enc, key)?;
+        Ok(path)
+    }
+
+    /// Load the sketch stored under `key`. `Ok(None)` when absent; `Err`
+    /// when present but corrupt or recorded under a *different* identity
+    /// — two labels can sanitize to the same file name, and serving the
+    /// wrong sketch silently is never acceptable.
+    pub fn get(&self, key: &StoreKey) -> Result<Option<StoredSketch>> {
+        let path = self.path_for(key);
+        if !path.is_file() {
+            return Ok(None);
+        }
+        let stored = read_encoded(&path)?;
+        let recorded = stored.key();
+        if recorded != *key {
+            return Err(Error::Parse(format!(
+                "sketch store: {} holds ({}, {}, s={}, seed={}) but ({}, {}, s={}, seed={}) \
+                 was requested (file-name collision?)",
+                path.display(),
+                recorded.dataset,
+                recorded.method,
+                recorded.s,
+                recorded.seed,
+                key.dataset,
+                key.method,
+                key.s,
+                key.seed,
+            )));
+        }
+        Ok(Some(stored))
+    }
+
+    /// Cache lookup with build-on-miss: returns the encoded sketch and
+    /// whether it came from the store (`true`) or was freshly built and
+    /// persisted (`false`). This is what lets repeated CLI / eval runs at
+    /// the same `(dataset, method, s, seed)` skip re-sketching entirely.
+    pub fn get_or_build(
+        &self,
+        key: &StoreKey,
+        build: impl FnOnce() -> Result<Sketch>,
+    ) -> Result<(EncodedSketch, bool)> {
+        if let Some(stored) = self.get(key)? {
+            return Ok((stored.enc, true));
+        }
+        let sketch = build()?;
+        let enc = encode_sketch(&sketch)?;
+        self.put(key, &enc)?;
+        Ok((enc, false))
+    }
+
+    /// Keys' file names currently present (for listing / debugging).
+    pub fn entries(&self) -> Result<Vec<PathBuf>> {
+        let mut out = Vec::new();
+        for de in fs::read_dir(&self.dir)? {
+            let p = de?.path();
+            if p.extension().and_then(|e| e.to_str()) == Some(STORE_EXT) {
+                out.push(p);
+            }
+        }
+        out.sort();
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::DistributionKind;
+    use crate::sketch::{decode_sketch, sketch_offline, SketchPlan};
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn tmp_store(tag: &str) -> PathBuf {
+        std::env::temp_dir().join(format!("matsketch_store_{tag}_{}", std::process::id()))
+    }
+
+    fn toy_encoded(kind: DistributionKind, seed: u64) -> (EncodedSketch, String) {
+        let mut rng = Rng::new(seed);
+        let mut coo = Coo::new(16, 256);
+        for i in 0..16u32 {
+            for _ in 0..20 {
+                coo.push(i, rng.usize_below(256) as u32, rng.normal() as f32 + 0.5);
+            }
+        }
+        let a = coo.to_csr();
+        let sk = sketch_offline(&a, &SketchPlan::new(kind, 800).with_seed(seed)).unwrap();
+        (encode_sketch(&sk).unwrap(), sk.method)
+    }
+
+    #[test]
+    fn container_roundtrip_bit_identical() {
+        for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+            let (enc, method) = toy_encoded(kind, 3);
+            let key = StoreKey::new("toy", &method, enc.s, 3);
+            let data = encode_container(&enc, &key).unwrap();
+            let back = decode_container(&data).unwrap();
+            assert_eq!(back.enc.bytes, enc.bytes, "{method}: payload changed");
+            assert_eq!(back.enc.m, enc.m);
+            assert_eq!(back.enc.n, enc.n);
+            assert_eq!(back.enc.s, enc.s);
+            assert_eq!(back.enc.header_bits, enc.header_bits);
+            assert_eq!(back.enc.body_bits, enc.body_bits);
+            assert_eq!(back.enc.compact, enc.compact);
+            assert_eq!(back.key(), key);
+            // decoded sketches agree entry-for-entry
+            let a = decode_sketch(&enc, &method).unwrap();
+            let b = decode_sketch(&back.enc, &back.method).unwrap();
+            assert_eq!(a.entries, b.entries);
+        }
+    }
+
+    #[test]
+    fn container_rejects_corruption() {
+        let (enc, method) = toy_encoded(DistributionKind::Bernstein, 4);
+        let key = StoreKey::new("toy", &method, enc.s, 4);
+        let good = encode_container(&enc, &key).unwrap();
+        let header_len = good.len() - enc.bytes.len();
+
+        // flipped payload byte -> checksum mismatch
+        let mut bad = good.clone();
+        let last = bad.len() - 1;
+        bad[last] ^= 0x40;
+        let e = decode_container(&bad).unwrap_err().to_string();
+        assert!(e.contains("checksum"), "{e}");
+
+        // flipped header field byte (the last byte of the `s` field, 41
+        // bytes before the end of the header) -> checksum mismatch too
+        let mut hbad = good.clone();
+        hbad[header_len - 41] ^= 0x01;
+        let e = decode_container(&hbad).unwrap_err().to_string();
+        assert!(e.contains("checksum"), "{e}");
+
+        // truncated payload
+        let e = decode_container(&good[..good.len() - 3]).unwrap_err().to_string();
+        assert!(e.contains("truncated"), "{e}");
+
+        // padded payload
+        let mut padded = good.clone();
+        padded.push(0);
+        let e = decode_container(&padded).unwrap_err().to_string();
+        assert!(e.contains("trailing"), "{e}");
+
+        // bad magic
+        let mut wrong = good.clone();
+        wrong[0] = b'X';
+        let e = decode_container(&wrong).unwrap_err().to_string();
+        assert!(e.contains("magic"), "{e}");
+
+        // unsupported version
+        let mut vers = good;
+        vers[5] = 0xEE;
+        let e = decode_container(&vers).unwrap_err().to_string();
+        assert!(e.contains("version"), "{e}");
+    }
+
+    #[test]
+    fn store_put_get_and_cache() {
+        let dir = tmp_store("putget");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SketchStore::open(&dir).unwrap();
+        let key = StoreKey::new("toy", "Bernstein", 800, 3);
+        assert!(!store.contains(&key));
+        assert!(store.get(&key).unwrap().is_none());
+
+        let (enc, _) = toy_encoded(DistributionKind::Bernstein, 3);
+        store.put(&key, &enc).unwrap();
+        assert!(store.contains(&key));
+        let back = store.get(&key).unwrap().unwrap();
+        assert_eq!(back.enc.bytes, enc.bytes);
+        assert_eq!(back.dataset, "toy");
+        assert_eq!(back.method, "Bernstein");
+        assert_eq!(back.seed, 3);
+        assert_eq!(store.entries().unwrap().len(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn file_name_collision_is_detected_not_served() {
+        // "Data.v2" and "data-v2" sanitize to the same file name; the
+        // recorded identity must reject the mismatched read.
+        let dir = tmp_store("collision");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SketchStore::open(&dir).unwrap();
+        let (enc, _) = toy_encoded(DistributionKind::Bernstein, 5);
+        let written = StoreKey::new("Data.v2", "Bernstein", enc.s, 5);
+        let requested = StoreKey::new("data-v2", "Bernstein", enc.s, 5);
+        assert_eq!(written.file_name(), requested.file_name());
+        store.put(&written, &enc).unwrap();
+        assert!(store.get(&written).unwrap().is_some());
+        let e = store.get(&requested).unwrap_err().to_string();
+        assert!(e.contains("collision"), "{e}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn key_file_names_are_sanitized_and_distinct() {
+        let a = StoreKey::new("enron", "L2 trim 0.1", 1000, 0);
+        let b = StoreKey::new("enron", "L2 trim 0.01", 1000, 0);
+        assert_eq!(a.file_name(), "enron__l2-trim-0-1__s1000__seed0.msk");
+        assert_ne!(a.file_name(), b.file_name());
+        // different budgets / seeds also separate
+        assert_ne!(
+            StoreKey::new("x", "L1", 10, 0).file_name(),
+            StoreKey::new("x", "L1", 10, 1).file_name()
+        );
+    }
+
+    #[test]
+    fn fnv_vectors() {
+        // standard FNV-1a 64 test vectors
+        assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+    }
+}

@@ -134,53 +134,121 @@ fn count_rows(entries: &[SketchEntry]) -> usize {
     rows
 }
 
+/// A streaming decoder over an [`EncodedSketch`]'s payload: yields entries
+/// in row-major order straight off the Elias-γ bit stream, without ever
+/// materializing a [`Sketch`]. This is what the serving layer
+/// ([`crate::serve`]) runs matvec/top-k queries on; [`decode_sketch`] is a
+/// thin collect over it, so both paths share one decode semantics.
+pub struct SketchCursor<'a> {
+    reader: BitReader<'a>,
+    /// Rows of the sketched matrix.
+    pub m: usize,
+    /// Columns.
+    pub n: usize,
+    /// Total draws `s`.
+    pub s: u64,
+    /// Whether the compact row-scale form was used.
+    pub compact: bool,
+    row_scale: Option<Vec<f64>>,
+    rows_left: usize,
+    row_entries_left: usize,
+    prev_row: u64,
+    prev_col: u64,
+}
+
+fn truncated() -> Error {
+    Error::Parse("truncated sketch".into())
+}
+
+impl<'a> SketchCursor<'a> {
+    /// Decode the header and position the cursor at the first entry.
+    pub fn open(enc: &'a EncodedSketch) -> Result<SketchCursor<'a>> {
+        let mut r = BitReader::new(&enc.bytes);
+        let m = r.get_bits(32).ok_or_else(truncated)? as usize;
+        let n = r.get_bits(32).ok_or_else(truncated)? as usize;
+        let s = r.get_bits(64).ok_or_else(truncated)?;
+        let compact = r.get_bit().ok_or_else(truncated)?;
+        let row_scale = if compact {
+            let mut scales = Vec::with_capacity(m);
+            for _ in 0..m {
+                let bits = r.get_bits(32).ok_or_else(truncated)? as u32;
+                scales.push(f32::from_bits(bits) as f64);
+            }
+            Some(scales)
+        } else {
+            None
+        };
+        let rows_left = (r.get_gamma().ok_or_else(truncated)? - 1) as usize;
+        Ok(SketchCursor {
+            reader: r,
+            m,
+            n,
+            s,
+            compact,
+            row_scale,
+            rows_left,
+            row_entries_left: 0,
+            prev_row: 0,
+            prev_col: 0,
+        })
+    }
+
+    /// Per-row codec scales (present iff `compact`).
+    pub fn row_scale(&self) -> Option<&[f64]> {
+        self.row_scale.as_deref()
+    }
+
+    /// Next decoded entry, row-major; `Ok(None)` at a clean end. A payload
+    /// that runs out mid-entry surfaces as `Error::Parse`, never a silent
+    /// truncation.
+    pub fn next_entry(&mut self) -> Result<Option<SketchEntry>> {
+        if self.row_entries_left == 0 {
+            if self.rows_left == 0 {
+                return Ok(None);
+            }
+            self.rows_left -= 1;
+            self.prev_row += self.reader.get_gamma().ok_or_else(truncated)? - 1;
+            self.row_entries_left = self.reader.get_gamma().ok_or_else(truncated)? as usize;
+            if self.row_entries_left == 0 {
+                return Err(Error::Parse("empty row group in sketch payload".into()));
+            }
+            self.prev_col = 0;
+        }
+        self.row_entries_left -= 1;
+        self.prev_col += self.reader.get_gamma().ok_or_else(truncated)? - 1;
+        let row = self.prev_row;
+        let col = self.prev_col;
+        let k = self.reader.get_gamma().ok_or_else(truncated)? as u32;
+        let value = if self.compact {
+            let neg = self.reader.get_bit().ok_or_else(truncated)?;
+            let scale = *self
+                .row_scale
+                .as_ref()
+                .and_then(|sc| sc.get(row as usize))
+                .ok_or_else(|| Error::Parse(format!("row {row} outside scale table")))?;
+            let v = k as f64 * scale;
+            if neg {
+                -v
+            } else {
+                v
+            }
+        } else {
+            let bits = self.reader.get_bits(32).ok_or_else(truncated)? as u32;
+            f32::from_bits(bits) as f64
+        };
+        Ok(Some(SketchEntry { row: row as u32, col: col as u32, count: k, value }))
+    }
+}
+
 /// Decode an encoded sketch (exact inverse of [`encode_sketch`] up to f32
 /// rounding of values/scales).
 pub fn decode_sketch(enc: &EncodedSketch, method: &str) -> Result<Sketch> {
-    let mut r = BitReader::new(&enc.bytes);
-    let err = || Error::Parse("truncated sketch".into());
-    let m = r.get_bits(32).ok_or_else(err)? as usize;
-    let n = r.get_bits(32).ok_or_else(err)? as usize;
-    let s = r.get_bits(64).ok_or_else(err)?;
-    let compact = r.get_bit().ok_or_else(err)?;
-    let row_scale = if compact {
-        let mut scales = Vec::with_capacity(m);
-        for _ in 0..m {
-            let bits = r.get_bits(32).ok_or_else(err)? as u32;
-            scales.push(f32::from_bits(bits) as f64);
-        }
-        Some(scales)
-    } else {
-        None
-    };
-    let nrows = (r.get_gamma().ok_or_else(err)? - 1) as usize;
+    let mut cur = SketchCursor::open(enc)?;
     let mut entries = Vec::new();
-    let mut prev_row = 0u64;
-    for _ in 0..nrows {
-        let row = prev_row + r.get_gamma().ok_or_else(err)? - 1;
-        prev_row = row;
-        let cnt = r.get_gamma().ok_or_else(err)? as usize;
-        let mut prev_col = 0u64;
-        for _ in 0..cnt {
-            let col = prev_col + r.get_gamma().ok_or_else(err)? - 1;
-            prev_col = col;
-            let k = r.get_gamma().ok_or_else(err)? as u32;
-            let value = if compact {
-                let neg = r.get_bit().ok_or_else(err)?;
-                let scale = row_scale.as_ref().unwrap()[row as usize];
-                let v = k as f64 * scale;
-                if neg {
-                    -v
-                } else {
-                    v
-                }
-            } else {
-                let bits = r.get_bits(32).ok_or_else(err)? as u32;
-                f32::from_bits(bits) as f64
-            };
-            entries.push(SketchEntry { row: row as u32, col: col as u32, count: k, value });
-        }
+    while let Some(e) = cur.next_entry()? {
+        entries.push(e);
     }
+    let SketchCursor { m, n, s, row_scale, .. } = cur;
     Ok(Sketch { m, n, s, entries, row_scale, method: method.to_string() })
 }
 

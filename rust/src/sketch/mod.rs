@@ -14,7 +14,7 @@ pub mod builder;
 pub mod encode;
 
 pub use builder::{sketch_offline, SketchPlan};
-pub use encode::{decode_sketch, encode_sketch, EncodedSketch};
+pub use encode::{decode_sketch, encode_sketch, EncodedSketch, SketchCursor};
 
 use crate::sparse::{Coo, Csr};
 

@@ -1,7 +1,8 @@
 //! Integration: the unified `Sketcher` engine — offline (alias),
-//! streaming (reservoir), and sharded (pipeline) modes all run through the
-//! one trait and produce valid sketches of identical budget `s` for every
-//! Figure-1 distribution on a fixed synthetic matrix.
+//! streaming (reservoir), spilling (disk-backed reservoir), and sharded
+//! (pipeline) modes all run through the one trait and produce valid
+//! sketches of identical budget `s` for every Figure-1 distribution on a
+//! fixed synthetic matrix.
 
 use matsketch::distributions::{DistributionKind, MatrixStats};
 use matsketch::engine::{
@@ -128,7 +129,9 @@ fn modes_agree_on_row_sampling_frequencies() {
     let stats = MatrixStats::from_coo(&a);
     let s = 500u64;
     let trials = 30u64;
-    let mut row_mass = vec![[0.0f64; 3]; a.m];
+    const MODES: usize = 4;
+    assert_eq!(SketchMode::all().len(), MODES);
+    let mut row_mass = vec![[0.0f64; MODES]; a.m];
     for (which, mode) in SketchMode::all().into_iter().enumerate() {
         for t in 0..trials {
             let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(1000 + t);
@@ -147,18 +150,14 @@ fn modes_agree_on_row_sampling_frequencies() {
     }
     let total = (s * trials) as f64;
     for i in 0..a.m {
-        let p = [
-            row_mass[i][0] / total,
-            row_mass[i][1] / total,
-            row_mass[i][2] / total,
-        ];
+        let p: Vec<f64> = (0..MODES).map(|w| row_mass[i][w] / total).collect();
         let sigma = (p[0].max(1e-4) / total).sqrt();
-        for which in 1..3 {
+        for (which, &pw) in p.iter().enumerate().skip(1) {
             assert!(
-                (p[0] - p[which]).abs() < 6.0 * sigma + 0.01,
+                (p[0] - pw).abs() < 6.0 * sigma + 0.01,
                 "row {i}: offline {:.5} vs mode#{which} {:.5}",
                 p[0],
-                p[which]
+                pw
             );
         }
     }

@@ -1,0 +1,236 @@
+//! Integration: the serving subsystem — store round-trips are
+//! bit-identical (with corruption/truncation rejected), and the
+//! compressed-path query engine agrees exactly with the decode-then-CSR
+//! fallback for sketches produced by every `SketchMode`.
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::engine::{sketch_entry_stream, PipelineConfig, SketchMode};
+use matsketch::serve::{
+    self, Query, QueryOutcome, QueryServer, ServableSketch, SketchStore, StoreKey,
+};
+use matsketch::sketch::{decode_sketch, encode_sketch, EncodedSketch, SketchPlan};
+use matsketch::sparse::Coo;
+use matsketch::stream::ShuffledStream;
+use matsketch::util::rng::Rng;
+
+fn fixed_matrix() -> Coo {
+    let mut rng = Rng::new(0x5EAF);
+    let mut coo = Coo::new(20, 140);
+    for i in 0..20u32 {
+        for _ in 0..14 {
+            coo.push(i, rng.usize_below(140) as u32, (rng.normal() as f32) + 2.0);
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+fn sketch_with(mode: SketchMode, kind: DistributionKind, s: u64) -> matsketch::sketch::Sketch {
+    let a = fixed_matrix();
+    let stats = MatrixStats::from_coo(&a);
+    let plan = SketchPlan::new(kind, s).with_seed(21);
+    let (sk, _) = sketch_entry_stream(
+        mode,
+        ShuffledStream::new(&a, 9),
+        &stats,
+        &plan,
+        &PipelineConfig::default(),
+    )
+    .unwrap();
+    sk
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("matsketch_itest_{tag}_{}", std::process::id()))
+}
+
+#[test]
+fn store_roundtrip_is_bit_identical() {
+    let dir = tmp_dir("roundtrip");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = SketchStore::open(&dir).unwrap();
+    // both payload forms: compact (Bernstein row scales) and generic (L2)
+    for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+        let sk = sketch_with(SketchMode::Offline, kind, 700);
+        let enc = encode_sketch(&sk).unwrap();
+        let key = StoreKey::new("fixed", &sk.method, 700, 21);
+        store.put(&key, &enc).unwrap();
+        let back = store.get(&key).unwrap().unwrap();
+
+        // encode -> write -> read is bit-identical
+        assert_eq!(back.enc.bytes, enc.bytes, "{}", sk.method);
+        assert_eq!(
+            (back.enc.m, back.enc.n, back.enc.s, back.enc.compact),
+            (enc.m, enc.n, enc.s, enc.compact)
+        );
+        assert_eq!(back.enc.header_bits, enc.header_bits);
+        assert_eq!(back.enc.body_bits, enc.body_bits);
+        assert_eq!(back.method, sk.method);
+
+        // ... and decode_sketch over the read-back payload reproduces the
+        // decoded original exactly (same bytes, same decoder)
+        let d1 = decode_sketch(&enc, &sk.method).unwrap();
+        let d2 = decode_sketch(&back.enc, &back.method).unwrap();
+        assert_eq!(d1.entries, d2.entries);
+        assert_eq!(d1.row_scale, d2.row_scale);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn store_rejects_corrupted_checksum_and_truncated_file() {
+    let dir = tmp_dir("corrupt");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = SketchStore::open(&dir).unwrap();
+    let sk = sketch_with(SketchMode::Streaming, DistributionKind::Bernstein, 500);
+    let enc = encode_sketch(&sk).unwrap();
+    let key = StoreKey::new("fixed", &sk.method, 500, 21);
+    let path = store.put(&key, &enc).unwrap();
+    let good = std::fs::read(&path).unwrap();
+
+    // corrupted payload byte -> checksum rejection
+    let mut bad = good.clone();
+    let last = bad.len() - 1;
+    bad[last] ^= 0x20;
+    std::fs::write(&path, &bad).unwrap();
+    let err = store.get(&key).unwrap_err().to_string();
+    assert!(err.contains("checksum"), "unexpected error: {err}");
+
+    // truncated file -> rejection (never a silent partial sketch)
+    std::fs::write(&path, &good[..good.len() - 7]).unwrap();
+    let err = store.get(&key).unwrap_err().to_string();
+    assert!(err.contains("truncated"), "unexpected error: {err}");
+
+    // restored file reads fine again
+    std::fs::write(&path, &good).unwrap();
+    assert_eq!(store.get(&key).unwrap().unwrap().enc.bytes, enc.bytes);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: compressed-path matvec / top-k results match the
+/// decode-then-CSR fallback exactly (identical f64 accumulation order)
+/// for sketches from every `SketchMode`, in both payload forms.
+#[test]
+fn compressed_queries_match_decoded_fallback_in_every_mode() {
+    for mode in SketchMode::all() {
+        for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+            let sk = sketch_with(mode, kind, 600);
+            let enc = encode_sketch(&sk).unwrap();
+            let dec = decode_sketch(&enc, &sk.method).unwrap();
+            let what = format!("{} / {}", mode.name(), sk.method);
+
+            let mut rng = Rng::new(33);
+            let x: Vec<f64> = (0..dec.n).map(|_| rng.normal()).collect();
+            let xt: Vec<f64> = (0..dec.m).map(|_| rng.normal()).collect();
+
+            let y = serve::matvec(&enc, &x).unwrap();
+            let y_ref = serve::decoded_matvec(&dec, &x).unwrap();
+            assert_eq!(y.len(), y_ref.len(), "{what}");
+            for (i, (a, b)) in y.iter().zip(y_ref.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
+                    "{what}: y[{i}] = {a} vs {b}"
+                );
+            }
+            let yt = serve::matvec_t(&enc, &xt).unwrap();
+            let yt_ref = serve::decoded_matvec_t(&dec, &xt).unwrap();
+            for (i, (a, b)) in yt.iter().zip(yt_ref.iter()).enumerate() {
+                assert!(
+                    (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
+                    "{what}: yt[{i}] = {a} vs {b}"
+                );
+            }
+
+            for k in [1usize, 10, 100_000] {
+                assert_eq!(
+                    serve::top_k(&enc, k).unwrap(),
+                    serve::decoded_top_k(&dec, k),
+                    "{what}: top-{k}"
+                );
+            }
+
+            for i in [0u32, (dec.m as u32) - 1] {
+                let want: Vec<_> = dec.entries.iter().copied().filter(|e| e.row == i).collect();
+                assert_eq!(serve::row_slice(&enc, i).unwrap(), want, "{what}: row {i}");
+            }
+        }
+    }
+}
+
+#[test]
+fn query_server_concurrent_answers_match_direct() {
+    let sk = sketch_with(SketchMode::Sharded, DistributionKind::Bernstein, 800);
+    let servable = Arc::new(ServableSketch::from_sketch(&sk).unwrap());
+    let (m, n) = servable.shape();
+    let server = QueryServer::start(Arc::clone(&servable), 4);
+
+    let mut rng = Rng::new(77);
+    let queries: Vec<Query> = (0..40usize)
+        .map(|i| match i % 5 {
+            0 => Query::Matvec((0..n).map(|_| rng.normal()).collect()),
+            1 => Query::MatvecT((0..m).map(|_| rng.normal()).collect()),
+            2 => Query::Row((i % m) as u32),
+            3 => Query::Col((i % n) as u32),
+            _ => Query::TopK(1 + i % 9),
+        })
+        .collect();
+    let pending = server.submit_batch(queries.clone());
+    for (q, p) in queries.iter().zip(pending) {
+        assert_eq!(p.wait().unwrap(), servable.answer(q).unwrap());
+    }
+    let stats = server.shutdown();
+    assert_eq!(stats.total(), 40);
+}
+
+#[test]
+fn store_get_or_build_builds_once_then_hits() {
+    let dir = tmp_dir("cache");
+    let _ = std::fs::remove_dir_all(&dir);
+    let store = SketchStore::open(&dir).unwrap();
+    let key = StoreKey::new("fixed", "Bernstein", 400, 21);
+
+    let mut builds = 0u32;
+    let (enc1, hit1) = store
+        .get_or_build(&key, || {
+            builds += 1;
+            Ok(sketch_with(SketchMode::Offline, DistributionKind::Bernstein, 400))
+        })
+        .unwrap();
+    assert!(!hit1);
+    assert_eq!(builds, 1);
+
+    let (enc2, hit2) = store
+        .get_or_build(&key, || {
+            builds += 1;
+            Ok(sketch_with(SketchMode::Offline, DistributionKind::Bernstein, 400))
+        })
+        .unwrap();
+    assert!(hit2);
+    assert_eq!(builds, 1, "cache hit must not re-sketch");
+    assert_eq!(enc1.bytes, enc2.bytes);
+
+    // a served sketch from the cache answers queries
+    let servable = ServableSketch::new(enc2, "Bernstein");
+    match servable.answer(&Query::TopK(5)).unwrap() {
+        QueryOutcome::Entries(es) => assert_eq!(es.len(), 5),
+        other => panic!("unexpected outcome {other:?}"),
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn spilling_mode_sketch_serves_like_any_other() {
+    // the ROADMAP-item mode: spill to disk, then serve from the encoding
+    let sk = sketch_with(SketchMode::Spilling, DistributionKind::Bernstein, 500);
+    assert_eq!(sk.entries.iter().map(|e| e.count as u64).sum::<u64>(), 500);
+    let enc: EncodedSketch = encode_sketch(&sk).unwrap();
+    assert!(enc.compact);
+    let mut rng = Rng::new(1);
+    let x: Vec<f64> = (0..sk.n).map(|_| rng.normal()).collect();
+    let y = serve::matvec(&enc, &x).unwrap();
+    let y_ref = serve::decoded_matvec(&decode_sketch(&enc, &sk.method).unwrap(), &x).unwrap();
+    assert_eq!(y, y_ref);
+}
