@@ -9,7 +9,9 @@
 //!  4. encode sketches with the compact codec and report bits/sample;
 //!  5. print the paper's headline metric per dataset;
 //!  6. persist one sketch into the on-disk store, read it back, and serve
-//!     concurrent matvec queries from the compressed payload.
+//!     concurrent matvec queries from the compressed payload;
+//!  7. expose the store over TCP (wire protocol v1) and answer the same
+//!     queries remotely, byte-identical to the in-process path.
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end
@@ -25,8 +27,11 @@ use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::Result;
 use matsketch::linalg::svd::{rank_k_fro, topk_svd};
 use matsketch::metrics::quality::{quality_left, quality_right};
+use matsketch::net::{NetServer, NetServerConfig, RemoteSketchClient};
 use matsketch::runtime::default_engine;
-use matsketch::serve::{Query, QueryOutcome, QueryServer, ServableSketch, SketchStore, StoreKey};
+use matsketch::serve::{
+    coo_fingerprint, Query, QueryOutcome, QueryServer, ServableSketch, SketchStore, StoreKey,
+};
 use matsketch::sketch::{encode_sketch, SketchPlan};
 use matsketch::stream::ShuffledStream;
 use matsketch::util::rng::Rng;
@@ -89,7 +94,8 @@ fn main() -> Result<()> {
     let coo = DatasetId::Synthetic.generate_small(0);
     let s = (coo.nnz() as u64 / 5).max(5_000);
     let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(99);
-    let key = StoreKey::new("synthetic-small", &plan.kind.name(), s, plan.seed);
+    let key = StoreKey::new("synthetic-small", &plan.kind.name(), s, plan.seed)
+        .with_fingerprint(coo_fingerprint(&coo));
     let (enc, cache_hit) = store.get_or_build(&key, || {
         let stats = MatrixStats::from_coo(&coo);
         let (sk, _) = sketch_entry_stream(
@@ -108,7 +114,7 @@ fn main() -> Result<()> {
         if cache_hit { "hit" } else { "miss -> built + persisted" }
     );
 
-    let servable = Arc::new(ServableSketch::new(enc, plan.kind.name()));
+    let servable = Arc::new(ServableSketch::new(enc, plan.kind.name())?);
     let (_, n) = servable.shape();
     let server = QueryServer::start(Arc::clone(&servable), 4);
     let mut rng = Rng::new(7);
@@ -134,9 +140,37 @@ fn main() -> Result<()> {
         stats.served_per_worker.len()
     );
 
+    // 7. the network front: the same store served over TCP; remote
+    // answers are byte-identical to the in-process path.
+    let net = NetServer::bind(
+        SketchStore::open(&store_dir)?,
+        "127.0.0.1:0",
+        NetServerConfig::default(),
+    )?;
+    let addr = net.local_addr().to_string();
+    let mut client = RemoteSketchClient::connect(&addr)?;
+    let info = client.open(&key)?;
+    println!("\nnet: serving {}x{} sketch at {addr}", info.m, info.n);
+    let mut rng = Rng::new(7);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    for q in [Query::Matvec(x), Query::TopK(5), Query::Row(0)] {
+        let remote = client.query(&key, &q)?;
+        let local = servable.answer(&q)?;
+        assert_eq!(remote, local, "remote answer differs from in-process");
+        match remote {
+            QueryOutcome::Vector(y) => println!("  remote matvec: len {} (== local)", y.len()),
+            QueryOutcome::Entries(es) => {
+                println!("  remote entries: {} returned (== local)", es.len())
+            }
+        }
+    }
+    client.shutdown_server()?;
+    let net_stats = net.wait();
+    println!("  net: {} frames over {} connections", net_stats.frames, net_stats.connections);
+
     println!(
         "\nAll layers composed: L3 streaming pipeline -> L2/L1 AOT artifacts via PJRT \
-         -> serving layer."
+         -> serving layer -> network front."
     );
     Ok(())
 }

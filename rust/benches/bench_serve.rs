@@ -12,7 +12,9 @@ use common::{bench_items, default_budget, section};
 use matsketch::datasets::{synthetic_cf, SyntheticConfig};
 use matsketch::distributions::DistributionKind;
 use matsketch::serve::{self, Query, QueryServer, ServableSketch};
-use matsketch::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
+use matsketch::sketch::{
+    decode_sketch, encode_sketch, row_group_index, sketch_offline, PayloadHeader, SketchPlan,
+};
 use matsketch::util::rng::Rng;
 
 fn main() {
@@ -69,8 +71,55 @@ fn main() {
         .report();
     }
 
+    // ROADMAP flagged the per-query header re-read (the m-entry
+    // row-scale table) as dominating row/top-k latency on tall matrices;
+    // ServableSketch now parses it once. Quantify the win on a tall
+    // sketch: cold = one-shot ops (header parsed per query), cached =
+    // the *_h forms, indexed = the store's per-row seek index.
+    section("header cache + row index: tall matrix (20000 x 100) row/top-k");
+    {
+        let tall = synthetic_cf(&SyntheticConfig { m: 20_000, n: 100, ..Default::default() })
+            .to_csr();
+        let s_tall = (tall.nnz() as u64) / 10;
+        let plan = SketchPlan::new(DistributionKind::Bernstein, s_tall).with_seed(3);
+        let sk = sketch_offline(&tall, &plan).unwrap();
+        let enc = encode_sketch(&sk).unwrap();
+        let header = PayloadHeader::parse(&enc).unwrap();
+        let index = row_group_index(&enc).unwrap();
+        let mut rng = Rng::new(0x7A11);
+        let rows: Vec<u32> = (0..64).map(|_| rng.usize_below(tall.m) as u32).collect();
+        let per = rows.len() as f64;
+
+        bench_items("row_slice_cold_header", budget, per, || {
+            rows.iter().map(|&i| serve::row_slice(&enc, i).unwrap().len()).sum::<usize>()
+        })
+        .report();
+        bench_items("row_slice_cached_header", budget, per, || {
+            rows.iter()
+                .map(|&i| serve::row_slice_h(&enc, &header, i).unwrap().len())
+                .sum::<usize>()
+        })
+        .report();
+        bench_items("row_slice_indexed", budget, per, || {
+            rows.iter()
+                .map(|&i| serve::row_slice_indexed(&enc, &header, &index, i).unwrap().len())
+                .sum::<usize>()
+        })
+        .report();
+
+        bench_items("top_10_cold_header", budget, 1.0, || {
+            serve::top_k(&enc, 10).unwrap()
+        })
+        .report();
+        bench_items("top_10_cached_header", budget, 1.0, || {
+            serve::top_k_h(&enc, &header, 10).unwrap()
+        })
+        .report();
+    }
+
     section("QueryServer: concurrent matvec readers (Bernstein)");
-    let servable = Arc::new(ServableSketch::new(enc, DistributionKind::Bernstein.name()));
+    let servable =
+        Arc::new(ServableSketch::new(enc, DistributionKind::Bernstein.name()).unwrap());
     for readers in [1usize, 2, 4, 8] {
         let queries = 32usize;
         bench_items(

@@ -6,11 +6,14 @@
 //! * [`compression`] — E3 (bits/sample and the disc-size comparison).
 //! * [`theory`] — E6 (ε₅ near-optimality checks).
 //! * [`serving`] — E9 (store-fed concurrent query-serving throughput).
+//! * [`netbench`] — E11 (remote wire-protocol serving throughput +
+//!   latency percentiles).
 //! * [`report`] — CSV/markdown emission shared by all drivers.
 
 pub mod ablation;
 pub mod compression;
 pub mod figure1;
+pub mod netbench;
 pub mod report;
 pub mod serving;
 pub mod tables;
@@ -19,6 +22,7 @@ pub mod theory;
 pub use ablation::run_ablation;
 pub use compression::run_compression;
 pub use figure1::{run_figure1, Figure1Config};
+pub use netbench::{run_net_bench, NetBenchConfig, NetPoint};
 pub use serving::{run_serve_bench, ServeConfig, ServePoint};
 pub use tables::{run_tables, TableRow};
 pub use theory::run_theory;

@@ -1,0 +1,268 @@
+//! E11 — network serving throughput: closed-loop remote query load
+//! against a live wire-protocol server, reported next to the in-process
+//! `serving.*` numbers.
+//!
+//! Default mode self-hosts: each dataset's sketch is resolved through
+//! the persistent store (build + persist on first run, fingerprint-
+//! checked cache hit on repeats), a [`NetServer`] is bound on an
+//! ephemeral loopback port, and [`run_load`] drives it at several client
+//! counts. Passing `addr` instead points the load at an already-running
+//! `matsketch serve` process. One table lands in the report directory:
+//!
+//! * `net_serving` — dataset × clients → queries/sec + latency
+//!   percentiles (p50/p95/p99 µs).
+
+use std::path::Path;
+use std::time::Duration;
+
+use crate::datasets::DatasetId;
+use crate::distributions::DistributionKind;
+use crate::engine::{self, PipelineConfig, SketchMode};
+use crate::error::Result;
+use crate::net::{run_load, LoadGenConfig, LoadOp, NetServer, NetServerConfig};
+use crate::serve::{coo_fingerprint, SketchStore, StoreKey};
+use crate::sketch::SketchPlan;
+
+use super::report::{fixed, Table};
+
+/// Net-bench knobs.
+#[derive(Clone, Debug)]
+pub struct NetBenchConfig {
+    /// Concurrent client counts to measure.
+    pub clients: Vec<usize>,
+    /// Queries per client per measurement (ignored with `duration_secs`).
+    pub queries: usize,
+    /// Run each measurement for a fixed time instead (the CI smoke).
+    pub duration_secs: Option<f64>,
+    /// Operation mix, cycled per query.
+    pub ops: Vec<LoadOp>,
+    /// `k` for top-k queries.
+    pub top_k: usize,
+    /// Budget as `s = nnz / budget_frac` (min 1000).
+    pub budget_frac: u64,
+    /// Sketching / query seed.
+    pub seed: u64,
+    /// Use reduced-size dataset variants.
+    pub small: bool,
+    /// Server-side query workers per sketch (self-hosted mode).
+    pub workers: usize,
+}
+
+impl Default for NetBenchConfig {
+    fn default() -> Self {
+        NetBenchConfig {
+            clients: vec![1, 2, 8],
+            queries: 64,
+            duration_secs: None,
+            ops: vec![LoadOp::Matvec, LoadOp::Row, LoadOp::TopK],
+            top_k: 10,
+            budget_frac: 10,
+            seed: 0,
+            small: true,
+            workers: 4,
+        }
+    }
+}
+
+/// One remote-throughput measurement.
+#[derive(Clone, Debug)]
+pub struct NetPoint {
+    /// Dataset name.
+    pub dataset: String,
+    /// Distribution name.
+    pub method: String,
+    /// Sample budget.
+    pub s: u64,
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Successful queries.
+    pub queries: u64,
+    /// Failed queries.
+    pub errors: u64,
+    /// Queries per second.
+    pub qps: f64,
+    /// Median latency (µs).
+    pub p50_us: f64,
+    /// 95th percentile latency (µs).
+    pub p95_us: f64,
+    /// 99th percentile latency (µs).
+    pub p99_us: f64,
+}
+
+/// Run the network serving benchmark; writes `net_serving.csv`/`.md`
+/// under `dir`. With `addr = None` the server is self-hosted on loopback
+/// over the store at `store_dir` (populating it as needed); with
+/// `addr = Some(..)` an external `matsketch serve` is measured and the
+/// store is only used to derive the same keys the server holds.
+pub fn run_net_bench(
+    dir: &Path,
+    store_dir: &Path,
+    addr: Option<&str>,
+    cfg: &NetBenchConfig,
+    datasets: &[DatasetId],
+) -> Result<Vec<NetPoint>> {
+    let store = SketchStore::open(store_dir)?;
+    let kind = DistributionKind::Bernstein;
+    let mut points = Vec::new();
+
+    // resolve every dataset's key (and, when self-hosting, make sure the
+    // store actually holds its sketch) before any server starts
+    let mut keys: Vec<(DatasetId, StoreKey)> = Vec::new();
+    for id in datasets {
+        let coo = if cfg.small { id.generate_small(cfg.seed) } else { id.generate(cfg.seed) };
+        let s = (coo.nnz() as u64 / cfg.budget_frac.max(1)).max(1_000);
+        let plan = SketchPlan::new(kind, s).with_seed(cfg.seed);
+        let key = StoreKey::new(id.name(), &kind.name(), s, cfg.seed)
+            .with_fingerprint(coo_fingerprint(&coo));
+        if addr.is_none() {
+            let (_, cache_hit) = store.get_or_build(&key, || {
+                let (sk, _) = engine::sketch_coo(
+                    SketchMode::Sharded,
+                    &coo,
+                    &plan,
+                    &PipelineConfig::default(),
+                )?;
+                Ok(sk)
+            })?;
+            crate::info!(
+                "net-bench: {} {}",
+                key.file_name(),
+                if cache_hit { "from store cache" } else { "built + persisted" }
+            );
+        }
+        keys.push((*id, key));
+    }
+
+    // self-host on an ephemeral loopback port unless aimed at a live server
+    let server = match addr {
+        Some(_) => None,
+        None => Some(NetServer::bind(
+            SketchStore::open(store_dir)?,
+            "127.0.0.1:0",
+            NetServerConfig {
+                workers_per_sketch: cfg.workers.max(1),
+                // every client holds one connection; leave headroom
+                max_connections: cfg.clients.iter().copied().max().unwrap_or(1) * 2 + 8,
+                ..Default::default()
+            },
+        )?),
+    };
+    let target = match (&server, addr) {
+        (Some(srv), _) => srv.local_addr().to_string(),
+        (None, Some(a)) => a.to_string(),
+        (None, None) => unreachable!("either self-hosted or external"),
+    };
+
+    let result = measure_all(&keys, cfg, &target, &mut points);
+    if let Some(server) = server {
+        let stats = server.shutdown();
+        crate::info!(
+            "net-bench: server served {} frames over {} connections ({} faults)",
+            stats.frames,
+            stats.connections,
+            stats.faults
+        );
+    }
+    result?;
+
+    net_serving_table(&points).write(dir)?;
+    Ok(points)
+}
+
+/// Drive every `(dataset, key) × client-count` measurement against
+/// `target`, collecting points (split out so the caller can always shut
+/// the self-hosted server down, even on error).
+fn measure_all(
+    keys: &[(DatasetId, StoreKey)],
+    cfg: &NetBenchConfig,
+    target: &str,
+    points: &mut Vec<NetPoint>,
+) -> Result<()> {
+    for (id, key) in keys {
+        for &clients in &cfg.clients {
+            let load_cfg = LoadGenConfig {
+                clients,
+                queries_per_client: cfg.queries,
+                duration: cfg.duration_secs.map(Duration::from_secs_f64),
+                ops: cfg.ops.clone(),
+                top_k: cfg.top_k,
+                seed: cfg.seed,
+            };
+            let report = run_load(target, key, &load_cfg)?;
+            crate::info!(
+                "net-bench: {} clients={} -> {:.1} q/s (p50 {:.0} µs, p99 {:.0} µs)",
+                id.name(),
+                clients,
+                report.qps,
+                report.p50_us,
+                report.p99_us
+            );
+            points.push(NetPoint {
+                dataset: id.name().to_string(),
+                method: key.method.clone(),
+                s: key.s,
+                clients,
+                queries: report.queries,
+                errors: report.errors,
+                qps: report.qps,
+                p50_us: report.p50_us,
+                p95_us: report.p95_us,
+                p99_us: report.p99_us,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Render net-bench points as the `net_serving` report table.
+pub fn net_serving_table(points: &[NetPoint]) -> Table {
+    let mut t = Table::new(
+        "net_serving",
+        &[
+            "dataset", "method", "s", "clients", "queries", "errors", "qps", "p50_us",
+            "p95_us", "p99_us",
+        ],
+    );
+    for p in points {
+        t.push(vec![
+            p.dataset.clone(),
+            p.method.clone(),
+            p.s.to_string(),
+            p.clients.to_string(),
+            p.queries.to_string(),
+            p.errors.to_string(),
+            fixed(p.qps, 1),
+            fixed(p.p50_us, 1),
+            fixed(p.p95_us, 1),
+            fixed(p.p99_us, 1),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn net_bench_self_hosts_and_reports() {
+        let base =
+            std::env::temp_dir().join(format!("matsketch_netbench_eval_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let out = base.join("reports");
+        let store = base.join("store");
+        let cfg = NetBenchConfig {
+            clients: vec![1, 2],
+            queries: 6,
+            ..Default::default()
+        };
+        let datasets = [DatasetId::Synthetic];
+        let pts = run_net_bench(&out, &store, None, &cfg, &datasets).unwrap();
+        assert_eq!(pts.len(), 2);
+        assert!(pts.iter().all(|p| p.qps > 0.0 && p.errors == 0));
+        assert!(pts.iter().all(|p| p.p50_us <= p.p95_us && p.p95_us <= p.p99_us));
+        assert!(out.join("net_serving.csv").exists());
+        assert!(out.join("net_serving.md").exists());
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -89,7 +89,10 @@ pub fn run_serve_bench(
         let coo = if cfg.small { id.generate_small(cfg.seed) } else { id.generate(cfg.seed) };
         let s = (coo.nnz() as u64 / cfg.budget_frac.max(1)).max(1_000);
         let plan = SketchPlan::new(kind, s).with_seed(cfg.seed);
-        let key = StoreKey::new(id.name(), &kind.name(), s, cfg.seed);
+        // content fingerprint ties the cache entry to this exact input
+        // matrix: a regenerated dataset reads back as a stale miss
+        let key = StoreKey::new(id.name(), &kind.name(), s, cfg.seed)
+            .with_fingerprint(crate::serve::coo_fingerprint(&coo));
 
         let mut metrics_slot: Option<engine::PipelineMetrics> = None;
         let (enc, cache_hit) = store.get_or_build(&key, || {
@@ -105,7 +108,7 @@ pub fn run_serve_bench(
             crate::info!("serving: store cache hit for {}", key.file_name());
         }
 
-        let sketch = Arc::new(ServableSketch::new(enc, kind.name()));
+        let sketch = Arc::new(ServableSketch::new(enc, kind.name())?);
         let (_, n) = sketch.shape();
         let mut rng = Rng::new(cfg.seed ^ 0x51_52_59);
         let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();

@@ -21,7 +21,9 @@
 //!   reservoir/binomial/hypergeometric samplers ([`samplers`]), compressed
 //!   sketch codec ([`sketch`]), the serving layer ([`serve`]: persistent
 //!   sketch store + compressed-path query engine + multi-threaded
-//!   [`serve::QueryServer`]), sparse/dense substrates ([`sparse`],
+//!   [`serve::QueryServer`]), the network front ([`net`]: zero-dependency
+//!   wire protocol, TCP server, remote client, load generator),
+//!   sparse/dense substrates ([`sparse`],
 //!   [`linalg`]), dataset generators ([`datasets`]), evaluation harness
 //!   ([`eval`], [`metrics`]).
 //! * **L2 — JAX graphs** (`python/compile/model.py`): the FLOP-heavy
@@ -59,6 +61,7 @@ pub mod error;
 pub mod eval;
 pub mod linalg;
 pub mod metrics;
+pub mod net;
 pub mod runtime;
 pub mod samplers;
 pub mod serve;
@@ -77,6 +80,7 @@ pub mod prelude {
     pub use crate::engine::{build_sketcher, sketch_entry_stream, SketchMode, Sketcher};
     pub use crate::error::{Error, Result};
     pub use crate::metrics::MatrixMetrics;
+    pub use crate::net::{NetServer, NetServerConfig, RemoteSketchClient};
     pub use crate::serve::{QueryServer, ServableSketch, SketchStore, StoreKey};
     pub use crate::sketch::{Sketch, SketchPlan};
     pub use crate::sparse::{Coo, Csr, Dense, Entry};

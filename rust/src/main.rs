@@ -13,6 +13,12 @@
 //!                       --op matvec|matvec-t|row|col|top-k [--k K] [--index I]
 //! matsketch serve-bench [--small] [--seed N] [--out DIR] [--store DIR]
 //!                       [--readers 1,2,4] [--queries Q] [--datasets a,b]
+//! matsketch serve       --addr HOST:PORT [--store DIR] [--workers W]
+//!                       [--max-conns N] [--timeout-secs S]
+//!                       [--shutdown-after-secs S]
+//! matsketch net-bench   [--addr HOST:PORT] [--clients 1,2,8] [--queries Q]
+//!                       [--duration-secs S] [--ops matvec,row,top-k]
+//!                       [--datasets a,b] [--store DIR] [--out DIR]
 //! matsketch gen         --dataset NAME [--seed N] --out a.bin
 //! ```
 
@@ -25,8 +31,9 @@ use matsketch::distributions::{DistributionKind, MatrixStats};
 use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::{Error, Result};
 use matsketch::eval::{run_compression, run_figure1, run_tables, run_theory, Figure1Config};
+use matsketch::net::{LoadOp, NetServer, NetServerConfig, RemoteSketchClient};
 use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
-use matsketch::serve::{Query, QueryOutcome, ServableSketch, SketchStore, StoreKey};
+use matsketch::serve::{Fingerprinter, Query, QueryOutcome, ServableSketch, SketchStore, StoreKey};
 use matsketch::sketch::{encode_sketch, SketchPlan};
 use matsketch::sparse::io as sparse_io;
 use matsketch::stream::FileStream;
@@ -127,36 +134,49 @@ fn real_main() -> Result<()> {
             let mode = SketchMode::parse(mode_name)
                 .ok_or_else(|| Error::invalid(format!("unknown mode {mode_name}")))?;
             let store = SketchStore::open(args.get_or("store", "sketch-store"))?;
-            let key = StoreKey::new(&dataset_label(&args, input), &kind.name(), s, seed);
 
-            // cache lookup first: a repeated run at the same
-            // (dataset, method, s, seed) is served from the store.
-            // --force skips the lookup entirely (also the escape hatch for
-            // a corrupt entry). A hit is still rejected as stale when the
-            // input file is newer than the store entry (the input was
-            // regenerated) or its header shape no longer matches the
-            // stored sketch (a different matrix under the same label).
+            // pass 1: stats + content fingerprint in one sweep. The
+            // fingerprint goes into the store key, so staleness is
+            // decided by what the input *contains*, not just mtime.
+            let mut st_stream = FileStream::open(Path::new(input))?;
+            let (m, n) = {
+                use matsketch::stream::EntryStream;
+                st_stream.shape()
+            };
+            let mut stats = MatrixStats::new(m, n);
+            let mut fp = Fingerprinter::new();
+            {
+                use matsketch::stream::EntryStream;
+                while let Some(e) = st_stream.next_entry()? {
+                    stats.push(&e);
+                    fp.push(&e);
+                }
+            }
+            let key = StoreKey::new(&dataset_label(&args, input), &kind.name(), s, seed)
+                .with_fingerprint(fp.finish());
+
+            // cache lookup: a repeated run at the same (dataset, method,
+            // s, seed) over unchanged input data is served from the
+            // store; a changed input reads as a stale miss. --force skips
+            // the lookup entirely (also the escape hatch for a corrupt
+            // entry). Legacy v1 entries carry no fingerprint, so for them
+            // the mtime + shape heuristics still apply.
             let cached = if args.flag("force") { None } else { store.get(&key)? };
             let cached = match cached {
                 Some(stored) => {
-                    if input_newer_than(input, &store.path_for(&key)) {
-                        info!("{input} is newer than the stored sketch; re-sketching");
+                    if stored.fingerprint == 0
+                        && input_newer_than(input, &store.path_for(&key))
+                    {
+                        info!("{input} is newer than the stored v1 sketch; re-sketching");
+                        None
+                    } else if (m, n) != (stored.enc.m, stored.enc.n) {
+                        info!(
+                            "{input} is {m}x{n} but the stored sketch is {}x{}; re-sketching",
+                            stored.enc.m, stored.enc.n
+                        );
                         None
                     } else {
-                        let (im, in_) = {
-                            use matsketch::stream::EntryStream;
-                            FileStream::open(Path::new(input))?.shape()
-                        };
-                        if (im, in_) != (stored.enc.m, stored.enc.n) {
-                            info!(
-                                "{input} is {im}x{in_} but the stored sketch is {}x{}; \
-                                 re-sketching",
-                                stored.enc.m, stored.enc.n
-                            );
-                            None
-                        } else {
-                            Some(stored)
-                        }
+                        Some(stored)
                     }
                 }
                 None => None,
@@ -173,19 +193,6 @@ fn real_main() -> Result<()> {
                     stored.enc
                 }
                 None => {
-                    // pass 1: stats
-                    let mut st_stream = FileStream::open(Path::new(input))?;
-                    let (m, n) = {
-                        use matsketch::stream::EntryStream;
-                        st_stream.shape()
-                    };
-                    let mut stats = MatrixStats::new(m, n);
-                    {
-                        use matsketch::stream::EntryStream;
-                        while let Some(e) = st_stream.next_entry()? {
-                            stats.push(&e);
-                        }
-                    }
                     // pass 2: streaming sketch through the unified engine
                     let plan = SketchPlan::new(kind, s).with_seed(seed);
                     let cfg = PipelineConfig {
@@ -229,7 +236,7 @@ fn real_main() -> Result<()> {
                     store.dir().display()
                 ))
             })?;
-            let sketch = ServableSketch::from_stored(stored);
+            let sketch = ServableSketch::from_stored(stored)?;
             let (m, n) = sketch.shape();
             info!("serving {}x{} sketch, s={} ({})", m, n, key.s, sketch.method);
             run_query(&args, &sketch)?;
@@ -252,6 +259,72 @@ fn real_main() -> Result<()> {
                 );
             }
             info!("serve-bench: {} points -> {}/serving.*", pts.len(), out.display());
+        }
+        "serve" => {
+            let addr = args.get_or("addr", "127.0.0.1:7300");
+            let store = SketchStore::open(args.get_or("store", "sketch-store"))?;
+            let timeout_secs: f64 = args.get_parse_or("timeout-secs", 60.0)?;
+            let timeout = if timeout_secs > 0.0 {
+                Some(std::time::Duration::from_secs_f64(timeout_secs))
+            } else {
+                None
+            };
+            let cfg = NetServerConfig {
+                workers_per_sketch: args.get_parse_or("workers", 4)?,
+                max_connections: args.get_parse_or("max-conns", 64)?,
+                read_timeout: timeout,
+                write_timeout: timeout,
+            };
+            let server = NetServer::bind(store, addr, cfg)?;
+            let local = server.local_addr();
+            info!(
+                "serving on {local}; stop with the wire Shutdown sentinel \
+                 (e.g. `matsketch net-shutdown --addr {local}`)"
+            );
+            if let Some(secs) = args.get_parse::<f64>("shutdown-after-secs")? {
+                // timed self-shutdown (CI smoke / demos): send ourselves
+                // the sentinel after the deadline
+                std::thread::spawn(move || {
+                    std::thread::sleep(std::time::Duration::from_secs_f64(secs.max(0.0)));
+                    if let Ok(mut c) = RemoteSketchClient::connect(&local.to_string()) {
+                        let _ = c.shutdown_server();
+                    }
+                });
+            }
+            let stats = server.wait();
+            info!(
+                "served {} frames over {} connections ({} faults)",
+                stats.frames, stats.connections, stats.faults
+            );
+        }
+        "net-shutdown" => {
+            let addr = args.get_or("addr", "127.0.0.1:7300");
+            let mut client = RemoteSketchClient::connect(addr)?;
+            client.shutdown_server()?;
+            info!("server at {addr} acknowledged shutdown");
+        }
+        "net-bench" => {
+            let cfg = matsketch::eval::NetBenchConfig {
+                clients: parse_usize_list(args.get_or("clients", "1,2,8"))?,
+                queries: args.get_parse_or("queries", 64)?,
+                duration_secs: args.get_parse::<f64>("duration-secs")?,
+                ops: parse_ops(args.get_or("ops", "matvec,row,top-k"))?,
+                top_k: args.get_parse_or("k", 10)?,
+                budget_frac: args.get_parse_or("budget-frac", 10)?,
+                seed,
+                small,
+                workers: args.get_parse_or("workers", 4)?,
+            };
+            let datasets = parse_datasets(args.get("datasets"))?;
+            let store_dir = PathBuf::from(args.get_or("store", "sketch-store"));
+            let pts = matsketch::eval::run_net_bench(
+                &out,
+                &store_dir,
+                args.get("addr"),
+                &cfg,
+                &datasets,
+            )?;
+            info!("net-bench: {} points -> {}/net_serving.*", pts.len(), out.display());
         }
         other => {
             print_help();
@@ -283,6 +356,25 @@ fn dataset_label(args: &Args, input: &str) -> String {
         .and_then(|s| s.to_str())
         .unwrap_or("input")
         .to_string()
+}
+
+/// Parse a comma-separated load-op mix (e.g. `--ops matvec,row,top-k`).
+fn parse_ops(spec: &str) -> Result<Vec<LoadOp>> {
+    let mut out = Vec::new();
+    for tok in spec.split(',') {
+        let t = tok.trim();
+        if t.is_empty() {
+            continue;
+        }
+        out.push(
+            LoadOp::parse(t)
+                .ok_or_else(|| Error::invalid(format!("unknown op {t:?} in mix {spec:?}")))?,
+        );
+    }
+    if out.is_empty() {
+        return Err(Error::invalid(format!("empty op mix {spec:?}")));
+    }
+    Ok(out)
 }
 
 /// Parse a comma-separated list of positive integers (e.g. `--readers 1,2,4`).
@@ -412,9 +504,12 @@ COMMANDS:
   theory       E6: eps5 near-optimality checks
   ablate       E8: row-norm-noise / delta / worker-count ablations
   serve-bench  E9: concurrent query-serving throughput from the store
+  net-bench    E11: remote serving throughput + latency percentiles over TCP
   gen          generate a dataset to a binary triplet file
   sketch       stream-sketch a triplet file into the sketch store
   query        answer a matvec / slice / top-k query from a stored sketch
+  serve        serve the sketch store over TCP (wire protocol v1)
+  net-shutdown send the graceful-shutdown sentinel to a running server
 
 COMMON OPTIONS:
   --out DIR        report/output directory (default: reports)
@@ -437,6 +532,19 @@ QUERY OPTIONS:
 
 SERVE-BENCH OPTIONS:
   [--readers 1,2,4] [--queries Q] [--budget-frac F] [--datasets a,b]
+
+SERVE OPTIONS:
+  --addr HOST:PORT [--workers W] [--max-conns N] [--timeout-secs S]
+  [--shutdown-after-secs S]
+  Serves every sketch in the store; clients open by
+  (dataset, method, s, seed) and stream matvec / slice / top-k answers.
+
+NET-BENCH OPTIONS:
+  [--addr HOST:PORT] [--clients 1,2,8] [--queries Q] [--duration-secs S]
+  [--ops matvec,matvec-t,row,col,top-k] [--k K] [--workers W]
+  [--budget-frac F] [--datasets a,b]
+  Without --addr the server is self-hosted on an ephemeral loopback port
+  over --store; results land in reports/net_serving.*
 "
     );
 }

@@ -1,0 +1,290 @@
+//! The blocking remote query client.
+//!
+//! [`RemoteSketchClient`] speaks the [`super::wire`] protocol over one
+//! TCP connection: open sketches by [`StoreKey`], run every
+//! [`Query`] kind, and **pipeline** batches (all requests written before
+//! any response is read — the server answers in order, so one round trip
+//! covers the whole batch). On a broken connection the client redials
+//! once and transparently re-opens its sketch handles, which are
+//! connection-scoped on the server.
+
+use std::collections::VecDeque;
+use std::io::{self, BufReader, BufWriter};
+use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::time::Duration;
+
+use crate::error::{Error, Result};
+use crate::serve::{Query, QueryOutcome, StoreKey};
+
+use super::wire::{self, Request, Response, SketchInfo};
+
+/// Default connect / read / write timeout.
+const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Maximum requests in flight during [`RemoteSketchClient::pipeline`]:
+/// the server answers strictly in order and fully writes each answer
+/// before reading the next request, so unbounded write-ahead could fill
+/// both sockets' buffers and deadlock. Eight keeps the latency win while
+/// bounding outstanding responses.
+const PIPELINE_WINDOW: usize = 8;
+
+struct Conn {
+    reader: BufReader<TcpStream>,
+    writer: BufWriter<TcpStream>,
+}
+
+/// A blocking wire-protocol client with request pipelining and one-shot
+/// reconnect.
+pub struct RemoteSketchClient {
+    addr: SocketAddr,
+    timeout: Option<Duration>,
+    conn: Option<Conn>,
+    next_id: u64,
+    /// Sketches opened on the *current* connection: `(key, handle)`.
+    /// Cleared on reconnect (handles are connection-scoped server-side)
+    /// and re-established lazily.
+    opened: Vec<(StoreKey, u32)>,
+}
+
+impl RemoteSketchClient {
+    /// Resolve `addr` (e.g. `"127.0.0.1:7300"`) and connect with the
+    /// default timeout.
+    pub fn connect(addr: &str) -> Result<RemoteSketchClient> {
+        Self::connect_with_timeout(addr, Some(DEFAULT_TIMEOUT))
+    }
+
+    /// [`RemoteSketchClient::connect`] with an explicit timeout
+    /// (`None` = block forever).
+    pub fn connect_with_timeout(
+        addr: &str,
+        timeout: Option<Duration>,
+    ) -> Result<RemoteSketchClient> {
+        let resolved = addr
+            .to_socket_addrs()?
+            .next()
+            .ok_or_else(|| Error::invalid(format!("address {addr:?} resolves to nothing")))?;
+        let mut client = RemoteSketchClient {
+            addr: resolved,
+            timeout,
+            conn: None,
+            next_id: 0,
+            opened: Vec::new(),
+        };
+        client.ensure_conn()?;
+        Ok(client)
+    }
+
+    /// The server address this client dials.
+    pub fn addr(&self) -> SocketAddr {
+        self.addr
+    }
+
+    fn ensure_conn(&mut self) -> Result<&mut Conn> {
+        if self.conn.is_none() {
+            let stream = match self.timeout {
+                Some(t) => TcpStream::connect_timeout(&self.addr, t)?,
+                None => TcpStream::connect(self.addr)?,
+            };
+            let _ = stream.set_nodelay(true);
+            stream.set_read_timeout(self.timeout)?;
+            stream.set_write_timeout(self.timeout)?;
+            let reader = BufReader::new(stream.try_clone()?);
+            self.conn = Some(Conn { reader, writer: BufWriter::new(stream) });
+            self.opened.clear();
+        }
+        Ok(self.conn.as_mut().expect("connection just ensured"))
+    }
+
+    /// Drop the connection (and its connection-scoped handles); the next
+    /// call redials.
+    fn reset(&mut self) {
+        self.conn = None;
+        self.opened.clear();
+    }
+
+    fn fresh_id(&mut self) -> u64 {
+        self.next_id += 1;
+        self.next_id
+    }
+
+    /// Write one request frame.
+    fn send(&mut self, req: &Request) -> Result<u64> {
+        let id = self.fresh_id();
+        let bytes = wire::encode_request(id, req);
+        let conn = self.ensure_conn()?;
+        wire::write_frame(&mut conn.writer, &bytes)?;
+        Ok(id)
+    }
+
+    /// Read one response frame, enforcing the expected echoed id.
+    fn recv(&mut self, expect_id: u64) -> Result<Response> {
+        let conn = self
+            .conn
+            .as_mut()
+            .ok_or_else(|| Error::Pipeline("recv without a connection".into()))?;
+        let header = wire::read_frame_header(&mut conn.reader)?.ok_or_else(|| {
+            Error::Io(io::Error::new(
+                io::ErrorKind::UnexpectedEof,
+                "server closed the connection",
+            ))
+        })?;
+        let h = wire::parse_frame_header(&header).map_err(Error::from)?;
+        let payload = wire::read_payload(&mut conn.reader, h.len)?;
+        let resp = wire::decode_response(h.opcode, &payload).map_err(Error::from)?;
+        if h.request_id != expect_id {
+            // a refusal the server issued before reading any request
+            // (busy, frame fault) carries id 0: surface the typed error,
+            // not a bogus desync complaint
+            if matches!(resp, Response::Error { .. }) {
+                return Err(Self::remote_err(resp));
+            }
+            return Err(Error::Pipeline(format!(
+                "response id {} does not match request id {expect_id} \
+                 (pipelining desynchronised)",
+                h.request_id
+            )));
+        }
+        Ok(resp)
+    }
+
+    /// One request/response exchange.
+    fn call(&mut self, req: &Request) -> Result<Response> {
+        let id = self.send(req)?;
+        self.recv(id)
+    }
+
+    /// `call` with a one-shot reconnect on connection-level failure —
+    /// the retry makes remote serving survive server restarts and
+    /// idle-timeout reaps without bothering the caller.
+    fn call_retry(&mut self, req: &Request) -> Result<Response> {
+        match self.call(req) {
+            Err(Error::Io(_)) => {
+                self.reset();
+                self.call(req)
+            }
+            other => other,
+        }
+    }
+
+    /// Turn a remote error response into a local [`Error`].
+    fn remote_err(resp: Response) -> Error {
+        match resp {
+            Response::Error { code, message } => {
+                Error::Pipeline(format!("remote: {message} ({})", code.name()))
+            }
+            other => Error::Pipeline(format!("remote: unexpected response {other:?}")),
+        }
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        match self.call_retry(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(Self::remote_err(other)),
+        }
+    }
+
+    /// Enumerate the sketches the server's store holds.
+    pub fn list_sketches(&mut self) -> Result<Vec<SketchInfo>> {
+        match self.call_retry(&Request::ListSketches)? {
+            Response::SketchList(infos) => Ok(infos),
+            other => Err(Self::remote_err(other)),
+        }
+    }
+
+    /// Ask the server to shut down gracefully (the wire sentinel).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        match self.call_retry(&Request::Shutdown)? {
+            Response::ShuttingDown => Ok(()),
+            other => Err(Self::remote_err(other)),
+        }
+    }
+
+    /// Open `key` on the server (idempotent per connection) and return
+    /// its identity + shape.
+    pub fn open(&mut self, key: &StoreKey) -> Result<SketchInfo> {
+        // make sure the connection is up *before* consulting the handle
+        // cache: a dead connection invalidates it on redial
+        self.ensure_conn()?;
+        match self.call_retry(&Request::OpenSketch(key.clone()))? {
+            Response::SketchOpened { handle, info } => {
+                if !self.opened.iter().any(|(k, _)| k.same_identity(key)) {
+                    self.opened.push((key.clone(), handle));
+                }
+                Ok(info)
+            }
+            other => Err(Self::remote_err(other)),
+        }
+    }
+
+    /// The current connection's handle for `key`, opening it if needed.
+    fn handle_for(&mut self, key: &StoreKey) -> Result<u32> {
+        self.ensure_conn()?;
+        if let Some((_, h)) = self.opened.iter().find(|(k, _)| k.same_identity(key)) {
+            return Ok(*h);
+        }
+        self.open(key)?;
+        self.opened
+            .iter()
+            .find(|(k, _)| k.same_identity(key))
+            .map(|(_, h)| *h)
+            .ok_or_else(|| Error::Pipeline("open succeeded but recorded no handle".into()))
+    }
+
+    /// Execute one query against the sketch stored under `key`.
+    pub fn query(&mut self, key: &StoreKey, query: &Query) -> Result<QueryOutcome> {
+        match self.query_once(key, query) {
+            Err(Error::Io(_)) => {
+                // redial once; handle_for re-opens on the new connection
+                self.reset();
+                self.query_once(key, query)
+            }
+            other => other,
+        }
+    }
+
+    fn query_once(&mut self, key: &StoreKey, query: &Query) -> Result<QueryOutcome> {
+        let handle = self.handle_for(key)?;
+        let req = Request::Query { handle, query: query.clone() };
+        match self.call(&req)? {
+            Response::Answer(outcome) => Ok(outcome),
+            other => Err(Self::remote_err(other)),
+        }
+    }
+
+    /// Pipeline a batch: requests are written ahead of the responses
+    /// being read, so the whole batch costs ~one round trip instead of
+    /// `queries.len()`. In-flight requests are capped at
+    /// [`PIPELINE_WINDOW`] — the client drains a response before sending
+    /// past the window, so outstanding data stays bounded and a batch of
+    /// large answers cannot mutually wedge both ends on full socket
+    /// buffers. Per-query failures come back as `Err` entries without
+    /// aborting the batch.
+    pub fn pipeline(
+        &mut self,
+        key: &StoreKey,
+        queries: &[Query],
+    ) -> Result<Vec<Result<QueryOutcome>>> {
+        let handle = self.handle_for(key)?;
+        let mut ids = VecDeque::with_capacity(PIPELINE_WINDOW);
+        let mut out = Vec::with_capacity(queries.len());
+        let collect = |resp: Response| match resp {
+            Response::Answer(outcome) => Ok(outcome),
+            other => Err(Self::remote_err(other)),
+        };
+        for q in queries {
+            if ids.len() >= PIPELINE_WINDOW {
+                let id = ids.pop_front().expect("window non-empty");
+                let resp = self.recv(id)?;
+                out.push(collect(resp));
+            }
+            let req = Request::Query { handle, query: q.clone() };
+            ids.push_back(self.send(&req)?);
+        }
+        for id in ids {
+            let resp = self.recv(id)?;
+            out.push(collect(resp));
+        }
+        Ok(out)
+    }
+}

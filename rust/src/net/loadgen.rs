@@ -1,0 +1,248 @@
+//! Closed-loop load generation against a live wire-protocol server.
+//!
+//! `N` client threads each hold one connection, open the target sketch,
+//! and issue queries back-to-back (closed loop: the next query starts
+//! when the previous answer lands). Per-query wall latencies are
+//! recorded and aggregated into throughput plus a latency histogram
+//! (p50/p95/p99 via [`crate::util::stats::quantiles`]) — the numbers
+//! `matsketch net-bench` reports into the eval tables next to the
+//! in-process `serving.*` ones.
+
+use std::time::{Duration, Instant};
+
+use crate::error::{Error, Result};
+use crate::serve::{Query, StoreKey};
+use crate::util::rng::Rng;
+use crate::util::stats::quantiles;
+use crate::warn_log;
+
+use super::client::RemoteSketchClient;
+
+/// Which operation mix a load run issues.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum LoadOp {
+    /// `B·x` with a client-seeded dense probe vector.
+    Matvec,
+    /// `Bᵀ·x`.
+    MatvecT,
+    /// Random row slice.
+    Row,
+    /// Random column slice.
+    Col,
+    /// Top-k heaviest entries.
+    TopK,
+}
+
+impl LoadOp {
+    /// Parse a CLI token (`matvec`, `matvec-t`, `row`, `col`, `top-k`).
+    pub fn parse(tok: &str) -> Option<LoadOp> {
+        match tok.trim().to_ascii_lowercase().as_str() {
+            "matvec" => Some(LoadOp::Matvec),
+            "matvec-t" | "matvect" => Some(LoadOp::MatvecT),
+            "row" => Some(LoadOp::Row),
+            "col" => Some(LoadOp::Col),
+            "top-k" | "topk" => Some(LoadOp::TopK),
+            _ => None,
+        }
+    }
+
+    /// Stable name (reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            LoadOp::Matvec => "matvec",
+            LoadOp::MatvecT => "matvec-t",
+            LoadOp::Row => "row",
+            LoadOp::Col => "col",
+            LoadOp::TopK => "top-k",
+        }
+    }
+}
+
+/// Load-run knobs.
+#[derive(Clone, Debug)]
+pub struct LoadGenConfig {
+    /// Concurrent client connections.
+    pub clients: usize,
+    /// Queries per client (ignored when `duration` is set).
+    pub queries_per_client: usize,
+    /// Run for this long instead of a fixed count (the CI smoke mode).
+    pub duration: Option<Duration>,
+    /// Operation mix, cycled per query.
+    pub ops: Vec<LoadOp>,
+    /// `k` for [`LoadOp::TopK`] queries.
+    pub top_k: usize,
+    /// Base RNG seed (each client derives its own stream).
+    pub seed: u64,
+}
+
+impl Default for LoadGenConfig {
+    fn default() -> Self {
+        LoadGenConfig {
+            clients: 4,
+            queries_per_client: 64,
+            duration: None,
+            ops: vec![LoadOp::Matvec, LoadOp::Row, LoadOp::TopK],
+            top_k: 10,
+            seed: 0,
+        }
+    }
+}
+
+/// Aggregated result of one load run.
+#[derive(Clone, Debug)]
+pub struct LoadReport {
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Queries answered successfully.
+    pub queries: u64,
+    /// Queries that errored (excluded from latencies).
+    pub errors: u64,
+    /// Wall-clock of the whole run in seconds.
+    pub wall_secs: f64,
+    /// Successful queries per second.
+    pub qps: f64,
+    /// Latency histogram over successful queries, microseconds.
+    pub p50_us: f64,
+    /// 95th percentile latency (µs).
+    pub p95_us: f64,
+    /// 99th percentile latency (µs).
+    pub p99_us: f64,
+    /// Mean latency (µs).
+    pub mean_us: f64,
+    /// Worst observed latency (µs).
+    pub max_us: f64,
+}
+
+/// After this many *consecutive* failures a client gives up instead of
+/// spinning on a dead server.
+const MAX_CONSECUTIVE_ERRORS: u32 = 10;
+
+/// Run one closed-loop measurement of `key` served at `addr`.
+pub fn run_load(addr: &str, key: &StoreKey, cfg: &LoadGenConfig) -> Result<LoadReport> {
+    if cfg.clients == 0 || cfg.ops.is_empty() {
+        return Err(Error::invalid("load run needs ≥ 1 client and a non-empty op mix"));
+    }
+    let t0 = Instant::now();
+    let deadline = cfg.duration.map(|d| t0 + d);
+    let mut workers = Vec::with_capacity(cfg.clients);
+    for c in 0..cfg.clients {
+        let addr = addr.to_string();
+        let key = key.clone();
+        let cfg = cfg.clone();
+        workers.push(std::thread::spawn(move || -> Result<(Vec<f64>, u64)> {
+            client_loop(&addr, &key, &cfg, c as u64, deadline)
+        }));
+    }
+    let mut latencies_us: Vec<f64> = Vec::new();
+    let mut errors = 0u64;
+    let mut first_err: Option<Error> = None;
+    for w in workers {
+        match w.join() {
+            Ok(Ok((lats, errs))) => {
+                latencies_us.extend(lats);
+                errors += errs;
+            }
+            Ok(Err(e)) => {
+                errors += 1;
+                if first_err.is_none() {
+                    first_err = Some(e);
+                }
+            }
+            Err(_) => {
+                errors += 1;
+                if first_err.is_none() {
+                    first_err = Some(Error::Pipeline("load client panicked".into()));
+                }
+            }
+        }
+    }
+    let wall_secs = t0.elapsed().as_secs_f64();
+    if latencies_us.is_empty() {
+        // nothing succeeded: surface the root cause instead of a report
+        // full of zeros
+        return Err(first_err.unwrap_or_else(|| {
+            Error::Pipeline("load run produced no successful queries".into())
+        }));
+    }
+    if let Some(e) = first_err {
+        warn_log!("net-bench: some load clients failed: {e}");
+    }
+    let qs = quantiles(&latencies_us, &[0.5, 0.95, 0.99]);
+    Ok(LoadReport {
+        clients: cfg.clients,
+        queries: latencies_us.len() as u64,
+        errors,
+        wall_secs,
+        qps: if wall_secs > 0.0 { latencies_us.len() as f64 / wall_secs } else { 0.0 },
+        p50_us: qs[0],
+        p95_us: qs[1],
+        p99_us: qs[2],
+        mean_us: latencies_us.iter().sum::<f64>() / latencies_us.len() as f64,
+        max_us: latencies_us.iter().cloned().fold(0.0, f64::max),
+    })
+}
+
+/// One client's closed loop. Returns (per-query latencies µs, error
+/// count).
+fn client_loop(
+    addr: &str,
+    key: &StoreKey,
+    cfg: &LoadGenConfig,
+    client_idx: u64,
+    deadline: Option<Instant>,
+) -> Result<(Vec<f64>, u64)> {
+    let mut client = RemoteSketchClient::connect(addr)?;
+    let info = client.open(key)?;
+    let (m, n) = (info.m as usize, info.n as usize);
+    let mut rng = Rng::new(cfg.seed ^ (0x10AD_0000 + client_idx));
+    // fixed dense probes per client: the run measures serving, not
+    // client-side vector generation
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let xt: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+
+    let mut latencies = Vec::new();
+    let mut errors = 0u64;
+    let mut consecutive = 0u32;
+    let mut i = 0usize;
+    loop {
+        match deadline {
+            Some(d) => {
+                if Instant::now() >= d {
+                    break;
+                }
+            }
+            None => {
+                if i >= cfg.queries_per_client {
+                    break;
+                }
+            }
+        }
+        let query = match cfg.ops[i % cfg.ops.len()] {
+            LoadOp::Matvec => Query::Matvec(x.clone()),
+            LoadOp::MatvecT => Query::MatvecT(xt.clone()),
+            LoadOp::Row => Query::Row(rng.usize_below(m.max(1)) as u32),
+            LoadOp::Col => Query::Col(rng.usize_below(n.max(1)) as u32),
+            LoadOp::TopK => Query::TopK(cfg.top_k),
+        };
+        let t = Instant::now();
+        match client.query(key, &query) {
+            Ok(_) => {
+                latencies.push(t.elapsed().as_secs_f64() * 1e6);
+                consecutive = 0;
+            }
+            Err(e) => {
+                errors += 1;
+                consecutive += 1;
+                if consecutive >= MAX_CONSECUTIVE_ERRORS {
+                    warn_log!(
+                        "net-bench: client {client_idx} giving up after \
+                         {consecutive} consecutive errors: {e}"
+                    );
+                    break;
+                }
+            }
+        }
+        i += 1;
+    }
+    Ok((latencies, errors))
+}

@@ -1,0 +1,40 @@
+//! The network serving front: remote access to the sketch service.
+//!
+//! PR 2 made the repo a sketch *service*, but only in-process — the
+//! paper's operational payoff (a sketch small enough to hold resident
+//! and cheap enough to query under heavy traffic, §1) needs remote
+//! clients hitting a long-lived server that owns the compressed payload.
+//! This module adds that layer with **zero external dependencies**
+//! (std-only TCP):
+//!
+//! * [`wire`] — the versioned, length-prefixed binary protocol: one
+//!   opcode per serving operation (matvec / transpose-matvec / row / col
+//!   / top-k, plus `Ping`, `ListSketches`, `OpenSketch`, and the
+//!   `Shutdown` sentinel), with typed error responses for malformed,
+//!   truncated, oversized, or wrong-version frames.
+//! * [`server`] — [`NetServer`]: a multi-threaded `TcpListener` acceptor
+//!   owning a [`crate::serve::SketchStore`], lazily opening sketches
+//!   into shared [`crate::serve::ServableSketch`]es and dispatching onto
+//!   the in-process [`crate::serve::QueryServer`] worker pools;
+//!   connection limit, read/write timeouts, graceful shutdown.
+//! * [`client`] — [`RemoteSketchClient`]: blocking, pipelining,
+//!   reconnecting; used by the CLI, the load generator, and the
+//!   loopback byte-equality tests.
+//! * [`loadgen`] — closed-loop multi-client load generation reporting
+//!   throughput + latency percentiles (`matsketch net-bench`, eval
+//!   driver in [`crate::eval::netbench`]).
+//!
+//! The wire layer adds no second compute path: every remote answer is
+//! produced by the same [`crate::serve::ServableSketch::answer`] as the
+//! in-process one and is pinned byte-for-byte equal to it in
+//! `tests/integration_net.rs`.
+
+pub mod client;
+pub mod loadgen;
+pub mod server;
+pub mod wire;
+
+pub use client::RemoteSketchClient;
+pub use loadgen::{run_load, LoadGenConfig, LoadOp, LoadReport};
+pub use server::{NetServer, NetServerConfig, NetServerStats};
+pub use wire::{ErrCode, Request, Response, SketchInfo, WIRE_VERSION};

@@ -1,0 +1,526 @@
+//! The TCP serving front: a multi-threaded acceptor that owns a
+//! [`SketchStore`], lazily opens stored sketches into shared immutable
+//! [`ServableSketch`]es, and dispatches decoded wire requests onto the
+//! existing in-process [`QueryServer`] worker pools.
+//!
+//! One handler thread per connection reads frames, answers them **in
+//! order** (so client-side pipelining gets in-order responses), and
+//! applies the wire error discipline: payload faults answer with the
+//! echoed request id and keep the connection; frame faults (bad magic /
+//! version / oversized) answer best-effort and close, because the frame
+//! boundary is lost. A connection limit, read/write timeouts, and a
+//! graceful shutdown path (the wire `Shutdown` sentinel, or
+//! [`NetServer::shutdown`] in-process) bound resource use.
+//!
+//! The in-process path stays the single source of truth: every answer is
+//! produced by the same [`ServableSketch::answer`] the local
+//! [`QueryServer`] runs, and the loopback integration test pins remote
+//! bytes to in-process bytes for every query kind.
+
+use std::collections::HashMap;
+use std::io::{self, BufReader, BufWriter};
+use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::serve::{QueryServer, ServableSketch, SketchStore, StoreKey};
+use crate::{debug_log, info, warn_log};
+
+use super::wire::{
+    self, encode_response, ErrCode, Request, Response, SketchInfo, WireFault,
+    FRAME_HEADER_LEN, MAX_PAYLOAD,
+};
+
+/// Tuning knobs for [`NetServer`].
+#[derive(Clone, Debug)]
+pub struct NetServerConfig {
+    /// Query workers spawned per opened sketch (min 1).
+    pub workers_per_sketch: usize,
+    /// Concurrent connections accepted before new ones get a typed
+    /// `busy` error.
+    pub max_connections: usize,
+    /// Per-connection read timeout (idle connections are reaped after
+    /// this long); `None` = wait forever.
+    pub read_timeout: Option<Duration>,
+    /// Per-connection write timeout.
+    pub write_timeout: Option<Duration>,
+}
+
+impl Default for NetServerConfig {
+    fn default() -> Self {
+        NetServerConfig {
+            workers_per_sketch: 4,
+            max_connections: 64,
+            read_timeout: Some(Duration::from_secs(60)),
+            write_timeout: Some(Duration::from_secs(60)),
+        }
+    }
+}
+
+/// Counters reported at shutdown.
+#[derive(Clone, Debug, Default)]
+pub struct NetServerStats {
+    /// Connections accepted (including ones turned away busy).
+    pub connections: u64,
+    /// Frames answered (all response kinds).
+    pub frames: u64,
+    /// Typed error responses among them.
+    pub faults: u64,
+}
+
+/// One opened sketch: its in-process query worker pool (which owns the
+/// shared immutable [`ServableSketch`]) plus wire-facing identity.
+/// Dropping the last `Arc` drops the pool's job sender, which winds the
+/// workers down.
+struct SketchService {
+    server: QueryServer,
+    info: SketchInfo,
+    fingerprint: u64,
+}
+
+struct Shared {
+    store: SketchStore,
+    cfg: NetServerConfig,
+    addr: SocketAddr,
+    shutdown: AtomicBool,
+    conn_seq: AtomicU64,
+    conns: AtomicUsize,
+    connections: AtomicU64,
+    frames: AtomicU64,
+    faults: AtomicU64,
+    /// Lazily opened sketches, shared across connections, keyed by store
+    /// file name.
+    services: Mutex<HashMap<String, Arc<SketchService>>>,
+    /// Live connection sockets, closed to unblock handlers at shutdown.
+    live: Mutex<HashMap<u64, TcpStream>>,
+}
+
+impl Shared {
+    fn shutting_down(&self) -> bool {
+        self.shutdown.load(Ordering::SeqCst)
+    }
+
+    /// Flip the shutdown flag and poke the acceptor awake with a
+    /// throwaway loopback connection.
+    fn trigger_shutdown(&self) {
+        if !self.shutdown.swap(true, Ordering::SeqCst) {
+            let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
+        }
+    }
+}
+
+/// The network server: binds, accepts, serves until shut down.
+pub struct NetServer {
+    shared: Arc<Shared>,
+    acceptor: JoinHandle<()>,
+}
+
+impl NetServer {
+    /// Bind `addr` (e.g. `"127.0.0.1:7300"`, port 0 for ephemeral) over
+    /// `store` and start accepting in a background thread.
+    pub fn bind(store: SketchStore, addr: &str, cfg: NetServerConfig) -> Result<NetServer> {
+        let listener = TcpListener::bind(addr)?;
+        let local = listener.local_addr()?;
+        let shared = Arc::new(Shared {
+            store,
+            cfg,
+            addr: local,
+            shutdown: AtomicBool::new(false),
+            conn_seq: AtomicU64::new(0),
+            conns: AtomicUsize::new(0),
+            connections: AtomicU64::new(0),
+            frames: AtomicU64::new(0),
+            faults: AtomicU64::new(0),
+            services: Mutex::new(HashMap::new()),
+            live: Mutex::new(HashMap::new()),
+        });
+        let acceptor = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(listener, shared))
+        };
+        info!("net: serving on {local}");
+        Ok(NetServer { shared, acceptor })
+    }
+
+    /// The bound address (resolves port 0).
+    pub fn local_addr(&self) -> SocketAddr {
+        self.shared.addr
+    }
+
+    /// Whether a shutdown has been requested (wire sentinel or local).
+    pub fn is_shutting_down(&self) -> bool {
+        self.shared.shutting_down()
+    }
+
+    /// Request a graceful shutdown and wait for the acceptor and every
+    /// connection handler to finish.
+    pub fn shutdown(self) -> NetServerStats {
+        self.shared.trigger_shutdown();
+        self.wait()
+    }
+
+    /// Wait until a shutdown is requested (e.g. by the wire sentinel)
+    /// and teardown completes, then report stats.
+    pub fn wait(self) -> NetServerStats {
+        let _ = self.acceptor.join();
+        NetServerStats {
+            connections: self.shared.connections.load(Ordering::SeqCst),
+            frames: self.shared.frames.load(Ordering::SeqCst),
+            faults: self.shared.faults.load(Ordering::SeqCst),
+        }
+    }
+}
+
+fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
+    let mut handlers: Vec<JoinHandle<()>> = Vec::new();
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(pair) => pair,
+            Err(e) => {
+                if shared.shutting_down() {
+                    break;
+                }
+                warn_log!("net: accept failed: {e}");
+                continue;
+            }
+        };
+        if shared.shutting_down() {
+            // the wake-up poke, or a client racing the shutdown
+            refuse(stream, ErrCode::ShuttingDown, "server is shutting down");
+            break;
+        }
+        shared.connections.fetch_add(1, Ordering::SeqCst);
+        // reap finished handler threads so a long-lived server doesn't
+        // accumulate join handles
+        handlers.retain(|h| !h.is_finished());
+        if shared.conns.load(Ordering::SeqCst) >= shared.cfg.max_connections {
+            shared.faults.fetch_add(1, Ordering::SeqCst);
+            refuse(stream, ErrCode::Busy, "connection limit reached");
+            continue;
+        }
+        shared.conns.fetch_add(1, Ordering::SeqCst);
+        let id = shared.conn_seq.fetch_add(1, Ordering::SeqCst);
+        if let Ok(clone) = stream.try_clone() {
+            shared.live.lock().expect("live registry poisoned").insert(id, clone);
+        }
+        debug_log!("net: connection {id} from {peer}");
+        let shared2 = Arc::clone(&shared);
+        handlers.push(std::thread::spawn(move || {
+            handle_connection(&shared2, stream);
+            shared2.conns.fetch_sub(1, Ordering::SeqCst);
+            shared2.live.lock().expect("live registry poisoned").remove(&id);
+        }));
+    }
+    // teardown: close every live socket to unblock blocked readers, then
+    // join the handlers
+    for (_, s) in shared.live.lock().expect("live registry poisoned").drain() {
+        let _ = s.shutdown(Shutdown::Both);
+    }
+    for h in handlers {
+        let _ = h.join();
+    }
+    // dropping the services drops each QueryServer's job sender, winding
+    // the worker pools down
+    shared.services.lock().expect("services registry poisoned").clear();
+    info!("net: shut down cleanly");
+}
+
+/// Turn a connection away with one typed error frame (request id 0: no
+/// request was read).
+fn refuse(stream: TcpStream, code: ErrCode, message: &str) {
+    let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
+    let mut w = BufWriter::new(stream);
+    let resp = Response::Error { code, message: message.into() };
+    let _ = wire::write_frame(&mut w, &encode_response(0, &resp));
+}
+
+fn handle_connection(shared: &Shared, stream: TcpStream) {
+    let _ = stream.set_nodelay(true);
+    let _ = stream.set_read_timeout(shared.cfg.read_timeout);
+    let _ = stream.set_write_timeout(shared.cfg.write_timeout);
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            warn_log!("net: could not clone connection stream: {e}");
+            return;
+        }
+    };
+    let mut reader = BufReader::new(reader_stream);
+    let mut writer = BufWriter::new(stream);
+    // connection-scoped handle table: index = handle value
+    let mut handles: Vec<Arc<SketchService>> = Vec::new();
+
+    loop {
+        let header = match wire::read_frame_header(&mut reader) {
+            Ok(None) => break, // clean close
+            Ok(Some(h)) => h,
+            Err(e) => {
+                // a half-written header (truncated-length corpus case):
+                // reply best-effort, then close — the framing is gone.
+                // Timeouts reap idle connections silently.
+                if e.kind() == io::ErrorKind::UnexpectedEof {
+                    send_fault(shared, &mut writer, 0, ErrCode::Malformed, &e.to_string());
+                }
+                break;
+            }
+        };
+        let (request_id, mut resp, close_after) = match wire::parse_frame_header(&header) {
+            Err(WireFault { code, message }) => {
+                // frame fault: typed reply, then drop the connection
+                (0, Response::Error { code, message }, true)
+            }
+            Ok(h) => {
+                let payload = match wire::read_payload(&mut reader, h.len) {
+                    Ok(p) => p,
+                    Err(e) => {
+                        // mid-payload disconnect / timeout
+                        if e.kind() == io::ErrorKind::UnexpectedEof {
+                            send_fault(
+                                shared,
+                                &mut writer,
+                                h.request_id,
+                                ErrCode::Malformed,
+                                &e.to_string(),
+                            );
+                        }
+                        break;
+                    }
+                };
+                match wire::decode_request(h.opcode, &payload) {
+                    // payload fault: typed reply, connection stays up
+                    Err(WireFault { code, message }) => {
+                        (h.request_id, Response::Error { code, message }, false)
+                    }
+                    Ok(req) => {
+                        let is_shutdown = matches!(req, Request::Shutdown);
+                        (h.request_id, answer(shared, &mut handles, req), is_shutdown)
+                    }
+                }
+            }
+        };
+        let is_shutdown_ack = matches!(resp, Response::ShuttingDown);
+        let mut frame_bytes = encode_response(request_id, &resp);
+        if frame_bytes.len() - FRAME_HEADER_LEN > MAX_PAYLOAD as usize {
+            // the answer itself busts the frame cap (giant matvec result /
+            // slice): the wire contract still owes the client a typed
+            // error, not a frame its own parser must reject
+            resp = Response::Error {
+                code: ErrCode::Oversized,
+                message: format!(
+                    "answer of {} bytes exceeds the {MAX_PAYLOAD}-byte frame cap; \
+                     narrow the query",
+                    frame_bytes.len() - FRAME_HEADER_LEN
+                ),
+            };
+            frame_bytes = encode_response(request_id, &resp);
+        }
+        if matches!(resp, Response::Error { .. }) {
+            shared.faults.fetch_add(1, Ordering::SeqCst);
+        }
+        shared.frames.fetch_add(1, Ordering::SeqCst);
+        let wrote = wire::write_frame(&mut writer, &frame_bytes).is_ok();
+        if is_shutdown_ack {
+            // trigger only after the acknowledgement is on the wire, so
+            // teardown (which force-closes live sockets) cannot race the
+            // client out of its reply
+            shared.trigger_shutdown();
+        }
+        if !wrote || close_after {
+            break;
+        }
+    }
+}
+
+/// Best-effort typed error reply for faults where the connection is about
+/// to close anyway; write errors are ignored (the peer may be gone).
+fn send_fault(
+    shared: &Shared,
+    writer: &mut BufWriter<TcpStream>,
+    request_id: u64,
+    code: ErrCode,
+    message: &str,
+) {
+    shared.faults.fetch_add(1, Ordering::SeqCst);
+    shared.frames.fetch_add(1, Ordering::SeqCst);
+    let resp = Response::Error { code, message: message.into() };
+    let _ = wire::write_frame(writer, &encode_response(request_id, &resp));
+}
+
+/// Execute one decoded request against the shared state.
+fn answer(shared: &Shared, handles: &mut Vec<Arc<SketchService>>, req: Request) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::Shutdown => {
+            // the actual trigger happens in handle_connection *after* the
+            // acknowledgement frame is written
+            info!("net: shutdown sentinel received");
+            Response::ShuttingDown
+        }
+        Request::ListSketches => match list_sketches(shared) {
+            Ok(infos) => Response::SketchList(infos),
+            Err(e) => Response::Error { code: ErrCode::Store, message: e.to_string() },
+        },
+        Request::OpenSketch(key) => match open_service(shared, &key) {
+            Ok(svc) => {
+                let info = svc.info.clone();
+                // re-opening an already-open sketch reuses (and
+                // refreshes, after an eviction) its handle slot, so a
+                // client looping OpenSketch cannot grow the table
+                let existing = handles.iter().position(|h| {
+                    h.info.dataset == info.dataset
+                        && h.info.method == info.method
+                        && h.info.s == info.s
+                        && h.info.seed == info.seed
+                });
+                let handle = match existing {
+                    Some(pos) => {
+                        handles[pos] = svc;
+                        pos
+                    }
+                    None => {
+                        handles.push(svc);
+                        handles.len() - 1
+                    }
+                };
+                Response::SketchOpened { handle: handle as u32, info }
+            }
+            Err(e) => Response::Error { code: ErrCode::Store, message: e.to_string() },
+        },
+        Request::Query { handle, query } => {
+            let Some(svc) = handles.get(handle as usize) else {
+                return Response::Error {
+                    code: ErrCode::BadHandle,
+                    message: format!(
+                        "handle {handle} not opened on this connection \
+                         ({} open)",
+                        handles.len()
+                    ),
+                };
+            };
+            // dispatch onto the sketch's QueryServer worker pool; the
+            // handler thread blocks on this one answer, which keeps
+            // per-connection responses in order for pipelined clients
+            match svc.server.submit(query).wait() {
+                Ok(outcome) => Response::Answer(outcome),
+                Err(e) => Response::Error { code: ErrCode::Query, message: e.to_string() },
+            }
+        }
+    }
+}
+
+fn sketch_info(key: &StoreKey, sketch: &ServableSketch) -> SketchInfo {
+    let (m, n) = sketch.shape();
+    SketchInfo {
+        dataset: key.dataset.clone(),
+        method: key.method.clone(),
+        s: key.s,
+        seed: key.seed,
+        m: m as u64,
+        n: n as u64,
+        compact: sketch.enc.compact,
+    }
+}
+
+/// Open (or reuse) the shared service for `key`: the sketch is normally
+/// loaded from the store once and its worker pool is shared by every
+/// connection that opens it. A cached service whose recorded input
+/// fingerprint conflicts with the request is evicted and reloaded from
+/// disk — so a re-sketched input is picked up by a long-lived server
+/// without a restart (fingerprint-less opens keep the cached payload).
+///
+/// The registry lock is **not** held across the disk load: opening one
+/// multi-GB sketch must not stall every other connection's open. Two
+/// connections racing the same first open may both read the file; the
+/// loser adopts the winner's service so each sketch still ends up with
+/// exactly one worker pool.
+fn open_service(shared: &Shared, key: &StoreKey) -> Result<Arc<SketchService>> {
+    let file = key.file_name();
+    {
+        let mut services = shared.services.lock().expect("services registry poisoned");
+        if let Some(svc) = services.get(&file).cloned() {
+            let recorded = StoreKey::new(
+                &svc.info.dataset,
+                &svc.info.method,
+                svc.info.s,
+                svc.info.seed,
+            );
+            if !recorded.same_identity(key) {
+                return Err(crate::error::Error::invalid(format!(
+                    "stored sketch {file} holds ({}, {}, s={}, seed={}), not the requested \
+                     ({}, {}, s={}, seed={}) (file-name collision?)",
+                    recorded.dataset,
+                    recorded.method,
+                    recorded.s,
+                    recorded.seed,
+                    key.dataset,
+                    key.method,
+                    key.s,
+                    key.seed,
+                )));
+            }
+            if key.fingerprint != 0
+                && svc.fingerprint != 0
+                && key.fingerprint != svc.fingerprint
+            {
+                // the input was re-sketched since this service loaded (or
+                // the client is stale): drop the cached payload and fall
+                // through to a fresh store read, which settles who is
+                // right
+                info!("net: evicting cached {file} (input fingerprint changed)");
+                services.remove(&file);
+            } else {
+                return Ok(svc);
+            }
+        }
+    }
+
+    // slow path, lock released: read + validate + index the sketch
+    let stored = shared.store.get(key)?.ok_or_else(|| {
+        crate::error::Error::invalid(format!(
+            "no stored sketch {file} under {} (absent or stale) — run `matsketch sketch` first",
+            shared.store.dir().display()
+        ))
+    })?;
+    let fingerprint = stored.fingerprint;
+    let sketch = Arc::new(ServableSketch::from_stored(stored)?);
+    let info = sketch_info(key, &sketch);
+    info!(
+        "net: opened {file} ({}x{}, s={}) with {} workers",
+        info.m, info.n, info.s, shared.cfg.workers_per_sketch
+    );
+    let server = QueryServer::start(sketch, shared.cfg.workers_per_sketch);
+    let svc = Arc::new(SketchService { server, info, fingerprint });
+
+    let mut services = shared.services.lock().expect("services registry poisoned");
+    if let Some(winner) = services.get(&file) {
+        // a racing open finished first; both loads came from the same
+        // file, so adopt the winner's pool and drop ours
+        return Ok(Arc::clone(winner));
+    }
+    services.insert(file, Arc::clone(&svc));
+    Ok(svc)
+}
+
+/// Enumerate the store by reading each entry's container header only —
+/// listing a store of huge entries never touches their payloads.
+fn list_sketches(shared: &Shared) -> Result<Vec<SketchInfo>> {
+    let mut out = Vec::new();
+    for path in shared.store.entries()? {
+        match crate::serve::store::read_header(&path) {
+            Ok(info) => out.push(SketchInfo {
+                dataset: info.dataset,
+                method: info.method,
+                s: info.s,
+                seed: info.seed,
+                m: info.m as u64,
+                n: info.n as u64,
+                compact: info.compact,
+            }),
+            Err(e) => warn_log!("net: skipping unreadable store entry {}: {e}", path.display()),
+        }
+    }
+    Ok(out)
+}

@@ -1,0 +1,865 @@
+//! The wire protocol: a versioned, length-prefixed binary framing with
+//! one codec per serving operation. Zero dependencies — plain `std::io`
+//! over big-endian bytes.
+//!
+//! ## Frame layout
+//!
+//! Every message — request or response — is one frame:
+//!
+//! | field       | size | contents                                    |
+//! |-------------|------|---------------------------------------------|
+//! | magic       | 4 B  | `"MSKW"`                                    |
+//! | version     | 2 B  | protocol version (currently 1)              |
+//! | opcode      | 1 B  | message kind (below)                        |
+//! | reserved    | 1 B  | 0 (ignored on read)                         |
+//! | request id  | 8 B  | caller-chosen; echoed verbatim in responses |
+//! | payload len | 4 B  | body length in bytes (≤ [`MAX_PAYLOAD`])    |
+//! | payload     | var. | opcode-specific body                        |
+//!
+//! Request opcodes: `0x01` Ping, `0x02` ListSketches, `0x03` OpenSketch,
+//! `0x04` Shutdown (the graceful-stop sentinel), `0x10` Matvec,
+//! `0x11` MatvecT, `0x12` RowSlice, `0x13` ColSlice, `0x14` TopK.
+//! Response opcodes: `0x81` Pong, `0x82` SketchList, `0x83` SketchOpened,
+//! `0x84` ShuttingDown, `0x90` Vector, `0x91` Entries, `0xFF` Error.
+//!
+//! f64 values travel as their IEEE-754 bit patterns, so a remote answer
+//! is **byte-for-byte identical** to the in-process one — the loopback
+//! integration test pins this for every query kind.
+//!
+//! ## Error discipline
+//!
+//! A malformed, truncated, oversized, or wrong-version frame must produce
+//! a typed [`Response::Error`] — never a panic, never a silent drop.
+//! Faults split into two severities, which is why header parsing and
+//! payload decoding are separate steps:
+//!
+//! * **frame faults** (bad magic / version / oversized length): framing
+//!   is lost, so the server replies best-effort and closes the
+//!   connection;
+//! * **payload faults** (unknown opcode, short/trailing/garbled body):
+//!   the frame boundary is intact, so the server replies with the echoed
+//!   request id and keeps serving the connection.
+
+use std::io::{self, Read, Write};
+
+use crate::error::Error;
+use crate::serve::{Query, QueryOutcome, StoreKey};
+use crate::sketch::SketchEntry;
+
+/// Frame magic: "MSKW" (matsketch wire).
+pub const WIRE_MAGIC: [u8; 4] = *b"MSKW";
+
+/// Current protocol version.
+pub const WIRE_VERSION: u16 = 1;
+
+/// Fixed frame-header size in bytes.
+pub const FRAME_HEADER_LEN: usize = 20;
+
+/// Largest accepted payload (64 MiB): bounds allocation on both sides
+/// and turns a garbage length field into a typed error instead of an
+/// out-of-memory attempt.
+pub const MAX_PAYLOAD: u32 = 64 << 20;
+
+// --- request opcodes ---
+const OP_PING: u8 = 0x01;
+const OP_LIST: u8 = 0x02;
+const OP_OPEN: u8 = 0x03;
+const OP_SHUTDOWN: u8 = 0x04;
+const OP_MATVEC: u8 = 0x10;
+const OP_MATVEC_T: u8 = 0x11;
+const OP_ROW: u8 = 0x12;
+const OP_COL: u8 = 0x13;
+const OP_TOP_K: u8 = 0x14;
+
+// --- response opcodes ---
+const OP_PONG: u8 = 0x81;
+const OP_SKETCH_LIST: u8 = 0x82;
+const OP_SKETCH_OPENED: u8 = 0x83;
+const OP_SHUTTING_DOWN: u8 = 0x84;
+const OP_VECTOR: u8 = 0x90;
+const OP_ENTRIES: u8 = 0x91;
+const OP_ERROR: u8 = 0xFF;
+
+/// Typed error codes carried by [`Response::Error`].
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// Frame or payload failed to parse (bad magic, short body, trailing
+    /// bytes, bad counts).
+    Malformed,
+    /// Protocol version not spoken by this server.
+    BadVersion,
+    /// Declared payload length exceeds [`MAX_PAYLOAD`].
+    Oversized,
+    /// Opcode not recognised (or a response opcode sent as a request).
+    UnknownOpcode,
+    /// Sketch handle not opened on this connection.
+    BadHandle,
+    /// Sketch store lookup failed (absent, corrupt, collided).
+    Store,
+    /// Query execution failed (shape mismatch, bad payload).
+    Query,
+    /// Connection limit reached.
+    Busy,
+    /// Server is shutting down.
+    ShuttingDown,
+}
+
+impl ErrCode {
+    /// Wire value.
+    pub fn as_u16(self) -> u16 {
+        match self {
+            ErrCode::Malformed => 1,
+            ErrCode::BadVersion => 2,
+            ErrCode::Oversized => 3,
+            ErrCode::UnknownOpcode => 4,
+            ErrCode::BadHandle => 5,
+            ErrCode::Store => 6,
+            ErrCode::Query => 7,
+            ErrCode::Busy => 8,
+            ErrCode::ShuttingDown => 9,
+        }
+    }
+
+    /// Inverse of [`ErrCode::as_u16`]; unknown values map to `Malformed`
+    /// (a protocol-level fault either way).
+    pub fn from_u16(v: u16) -> ErrCode {
+        match v {
+            2 => ErrCode::BadVersion,
+            3 => ErrCode::Oversized,
+            4 => ErrCode::UnknownOpcode,
+            5 => ErrCode::BadHandle,
+            6 => ErrCode::Store,
+            7 => ErrCode::Query,
+            8 => ErrCode::Busy,
+            9 => ErrCode::ShuttingDown,
+            _ => ErrCode::Malformed,
+        }
+    }
+
+    /// Stable lower-case name (reports, error messages).
+    pub fn name(self) -> &'static str {
+        match self {
+            ErrCode::Malformed => "malformed",
+            ErrCode::BadVersion => "bad-version",
+            ErrCode::Oversized => "oversized",
+            ErrCode::UnknownOpcode => "unknown-opcode",
+            ErrCode::BadHandle => "bad-handle",
+            ErrCode::Store => "store",
+            ErrCode::Query => "query",
+            ErrCode::Busy => "busy",
+            ErrCode::ShuttingDown => "shutting-down",
+        }
+    }
+}
+
+/// A typed protocol fault: what went wrong, as both a machine-readable
+/// code (for the [`Response::Error`] reply) and a human message.
+#[derive(Clone, Debug)]
+pub struct WireFault {
+    /// Machine-readable fault class.
+    pub code: ErrCode,
+    /// Human-readable detail.
+    pub message: String,
+}
+
+impl WireFault {
+    fn new(code: ErrCode, message: impl Into<String>) -> WireFault {
+        WireFault { code, message: message.into() }
+    }
+}
+
+impl From<WireFault> for Error {
+    fn from(f: WireFault) -> Error {
+        Error::Parse(format!("wire: {} ({})", f.message, f.code.name()))
+    }
+}
+
+/// Shorthand for fallible wire-level parsing.
+pub type WireResult<T> = std::result::Result<T, WireFault>;
+
+/// One decoded request.
+#[derive(Clone, Debug)]
+pub enum Request {
+    /// Liveness probe.
+    Ping,
+    /// Enumerate the sketches the server's store holds.
+    ListSketches,
+    /// Open a stored sketch for querying; answers with a handle.
+    OpenSketch(StoreKey),
+    /// Execute one query against an opened handle.
+    Query {
+        /// Handle from a prior [`Response::SketchOpened`].
+        handle: u32,
+        /// The operation, reusing the in-process [`Query`] type.
+        query: Query,
+    },
+    /// Graceful-shutdown sentinel: the server finishes in-flight work,
+    /// acknowledges with [`Response::ShuttingDown`], and stops accepting.
+    Shutdown,
+}
+
+/// Identity + shape of one served sketch, as listed / opened over the
+/// wire.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SketchInfo {
+    /// Dataset label.
+    pub dataset: String,
+    /// Distribution name.
+    pub method: String,
+    /// Sample budget `s`.
+    pub s: u64,
+    /// Sketching seed.
+    pub seed: u64,
+    /// Rows.
+    pub m: u64,
+    /// Columns.
+    pub n: u64,
+    /// Whether the payload uses the compact row-scale form.
+    pub compact: bool,
+}
+
+/// One decoded response.
+#[derive(Clone, Debug)]
+pub enum Response {
+    /// Liveness answer.
+    Pong,
+    /// The store's current contents.
+    SketchList(Vec<SketchInfo>),
+    /// A sketch is ready for queries under `handle` (valid on this
+    /// connection only).
+    SketchOpened {
+        /// Connection-scoped handle to pass with queries.
+        handle: u32,
+        /// Identity + shape of the opened sketch.
+        info: SketchInfo,
+    },
+    /// A query answer, reusing the in-process [`QueryOutcome`] type.
+    Answer(QueryOutcome),
+    /// Acknowledges a [`Request::Shutdown`].
+    ShuttingDown,
+    /// Typed failure; the request id in the frame says which request
+    /// (0 when the fault predates knowing one).
+    Error {
+        /// Fault class.
+        code: ErrCode,
+        /// Human-readable detail.
+        message: String,
+    },
+}
+
+/// A parsed frame header.
+#[derive(Clone, Copy, Debug)]
+pub struct FrameHeader {
+    /// Message kind.
+    pub opcode: u8,
+    /// Caller-chosen id, echoed in responses.
+    pub request_id: u64,
+    /// Payload length in bytes.
+    pub len: u32,
+}
+
+// ---------------------------------------------------------------------
+// byte-level writers / readers
+// ---------------------------------------------------------------------
+
+fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_be_bytes());
+}
+
+fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_be_bytes());
+}
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    // labels over 64 KiB cannot exist in a StoreKey (the store enforces
+    // the same u16 bound), so truncation can never trigger here
+    let bytes = s.as_bytes();
+    let len = bytes.len().min(u16::MAX as usize);
+    put_u16(out, len as u16);
+    out.extend_from_slice(&bytes[..len]);
+}
+
+/// Cursor over one received payload; every read is bounds-checked and
+/// the caller finishes with [`Rd::done`] so trailing garbage is a typed
+/// fault, not silently ignored.
+struct Rd<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn new(buf: &'a [u8]) -> Rd<'a> {
+        Rd { buf, pos: 0 }
+    }
+
+    fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    fn take(&mut self, n: usize) -> WireResult<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(WireFault::new(
+                ErrCode::Malformed,
+                format!("payload short: wanted {n} more bytes, have {}", self.remaining()),
+            ));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> WireResult<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> WireResult<u16> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> WireResult<u32> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> WireResult<u64> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn f64(&mut self) -> WireResult<f64> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    fn str(&mut self) -> WireResult<String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| WireFault::new(ErrCode::Malformed, "string is not valid UTF-8"))
+    }
+
+    /// A count field about to drive `count * elem_bytes` of reads: reject
+    /// counts the remaining payload cannot possibly hold, *before*
+    /// allocating for them.
+    fn count(&mut self, elem_bytes: usize) -> WireResult<usize> {
+        let count = self.u32()? as usize;
+        if count.saturating_mul(elem_bytes) > self.remaining() {
+            return Err(WireFault::new(
+                ErrCode::Malformed,
+                format!("count {count} exceeds payload ({} bytes left)", self.remaining()),
+            ));
+        }
+        Ok(count)
+    }
+
+    fn done(self) -> WireResult<()> {
+        if self.pos != self.buf.len() {
+            return Err(WireFault::new(
+                ErrCode::Malformed,
+                format!("{} trailing payload bytes", self.buf.len() - self.pos),
+            ));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// frame encoding
+// ---------------------------------------------------------------------
+
+// NOTE: no length assertion here — an over-cap frame is legal to *build*
+// (the server detects it post-encode and substitutes a typed Oversized
+// error; a peer receiving one rejects it at parse_frame_header).
+fn frame(opcode: u8, request_id: u64, payload: Vec<u8>) -> Vec<u8> {
+    let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
+    out.extend_from_slice(&WIRE_MAGIC);
+    put_u16(&mut out, WIRE_VERSION);
+    out.push(opcode);
+    out.push(0); // reserved
+    put_u64(&mut out, request_id);
+    put_u32(&mut out, payload.len() as u32);
+    out.extend_from_slice(&payload);
+    out
+}
+
+fn put_vec_f64(out: &mut Vec<u8>, xs: &[f64]) {
+    put_u32(out, xs.len() as u32);
+    for &v in xs {
+        put_f64(out, v);
+    }
+}
+
+fn put_info(out: &mut Vec<u8>, info: &SketchInfo) {
+    put_str(out, &info.dataset);
+    put_str(out, &info.method);
+    put_u64(out, info.s);
+    put_u64(out, info.seed);
+    put_u64(out, info.m);
+    put_u64(out, info.n);
+    out.push(info.compact as u8);
+}
+
+fn get_info(rd: &mut Rd<'_>) -> WireResult<SketchInfo> {
+    Ok(SketchInfo {
+        dataset: rd.str()?,
+        method: rd.str()?,
+        s: rd.u64()?,
+        seed: rd.u64()?,
+        m: rd.u64()?,
+        n: rd.u64()?,
+        compact: rd.u8()? != 0,
+    })
+}
+
+/// Encode one request as a complete frame.
+pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
+    match req {
+        Request::Ping => frame(OP_PING, request_id, Vec::new()),
+        Request::ListSketches => frame(OP_LIST, request_id, Vec::new()),
+        Request::Shutdown => frame(OP_SHUTDOWN, request_id, Vec::new()),
+        Request::OpenSketch(key) => {
+            let mut p = Vec::new();
+            put_str(&mut p, &key.dataset);
+            put_str(&mut p, &key.method);
+            put_u64(&mut p, key.s);
+            put_u64(&mut p, key.seed);
+            put_u64(&mut p, key.fingerprint);
+            frame(OP_OPEN, request_id, p)
+        }
+        Request::Query { handle, query } => {
+            let mut p = Vec::new();
+            put_u32(&mut p, *handle);
+            let opcode = match query {
+                Query::Matvec(x) => {
+                    put_vec_f64(&mut p, x);
+                    OP_MATVEC
+                }
+                Query::MatvecT(x) => {
+                    put_vec_f64(&mut p, x);
+                    OP_MATVEC_T
+                }
+                Query::Row(i) => {
+                    put_u32(&mut p, *i);
+                    OP_ROW
+                }
+                Query::Col(j) => {
+                    put_u32(&mut p, *j);
+                    OP_COL
+                }
+                Query::TopK(k) => {
+                    put_u64(&mut p, *k as u64);
+                    OP_TOP_K
+                }
+            };
+            frame(opcode, request_id, p)
+        }
+    }
+}
+
+/// Encode one response as a complete frame.
+pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
+    match resp {
+        Response::Pong => frame(OP_PONG, request_id, Vec::new()),
+        Response::ShuttingDown => frame(OP_SHUTTING_DOWN, request_id, Vec::new()),
+        Response::SketchList(infos) => {
+            let mut p = Vec::new();
+            put_u32(&mut p, infos.len() as u32);
+            for info in infos {
+                put_info(&mut p, info);
+            }
+            frame(OP_SKETCH_LIST, request_id, p)
+        }
+        Response::SketchOpened { handle, info } => {
+            let mut p = Vec::new();
+            put_u32(&mut p, *handle);
+            put_info(&mut p, info);
+            frame(OP_SKETCH_OPENED, request_id, p)
+        }
+        Response::Answer(QueryOutcome::Vector(y)) => {
+            let mut p = Vec::new();
+            put_vec_f64(&mut p, y);
+            frame(OP_VECTOR, request_id, p)
+        }
+        Response::Answer(QueryOutcome::Entries(es)) => {
+            let mut p = Vec::new();
+            put_u32(&mut p, es.len() as u32);
+            for e in es {
+                put_u32(&mut p, e.row);
+                put_u32(&mut p, e.col);
+                put_u32(&mut p, e.count);
+                put_f64(&mut p, e.value);
+            }
+            frame(OP_ENTRIES, request_id, p)
+        }
+        Response::Error { code, message } => {
+            let mut p = Vec::new();
+            put_u16(&mut p, code.as_u16());
+            put_str(&mut p, message);
+            frame(OP_ERROR, request_id, p)
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// frame decoding
+// ---------------------------------------------------------------------
+
+/// Read one fixed-size frame header. `Ok(None)` on a clean close (EOF
+/// before the first byte); an EOF mid-header is a truncated frame and
+/// surfaces as `UnexpectedEof`.
+pub fn read_frame_header(r: &mut impl Read) -> io::Result<Option<[u8; FRAME_HEADER_LEN]>> {
+    let mut buf = [0u8; FRAME_HEADER_LEN];
+    let mut filled = 0usize;
+    while filled < buf.len() {
+        match r.read(&mut buf[filled..]) {
+            Ok(0) if filled == 0 => return Ok(None),
+            Ok(0) => {
+                return Err(io::Error::new(
+                    io::ErrorKind::UnexpectedEof,
+                    format!("connection closed {filled} bytes into a frame header"),
+                ));
+            }
+            Ok(n) => filled += n,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(buf))
+}
+
+/// Validate a frame header's magic / version / length bounds.
+pub fn parse_frame_header(buf: &[u8; FRAME_HEADER_LEN]) -> WireResult<FrameHeader> {
+    if buf[0..4] != WIRE_MAGIC {
+        return Err(WireFault::new(
+            ErrCode::Malformed,
+            "bad magic (not a matsketch wire frame)",
+        ));
+    }
+    let version = u16::from_be_bytes([buf[4], buf[5]]);
+    if version != WIRE_VERSION {
+        return Err(WireFault::new(
+            ErrCode::BadVersion,
+            format!("protocol version {version} (this server speaks {WIRE_VERSION})"),
+        ));
+    }
+    let opcode = buf[6];
+    let request_id = u64::from_be_bytes(buf[8..16].try_into().unwrap());
+    let len = u32::from_be_bytes(buf[16..20].try_into().unwrap());
+    if len > MAX_PAYLOAD {
+        return Err(WireFault::new(
+            ErrCode::Oversized,
+            format!("declared payload of {len} bytes exceeds the {MAX_PAYLOAD}-byte cap"),
+        ));
+    }
+    Ok(FrameHeader { opcode, request_id, len })
+}
+
+/// Read a frame's payload (`len` already validated by
+/// [`parse_frame_header`]).
+pub fn read_payload(r: &mut impl Read, len: u32) -> io::Result<Vec<u8>> {
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf)?;
+    Ok(buf)
+}
+
+/// Decode a request payload.
+pub fn decode_request(opcode: u8, payload: &[u8]) -> WireResult<Request> {
+    let mut rd = Rd::new(payload);
+    let req = match opcode {
+        OP_PING => Request::Ping,
+        OP_LIST => Request::ListSketches,
+        OP_SHUTDOWN => Request::Shutdown,
+        OP_OPEN => {
+            let dataset = rd.str()?;
+            let method = rd.str()?;
+            let s = rd.u64()?;
+            let seed = rd.u64()?;
+            let fingerprint = rd.u64()?;
+            Request::OpenSketch(
+                StoreKey::new(&dataset, &method, s, seed).with_fingerprint(fingerprint),
+            )
+        }
+        OP_MATVEC | OP_MATVEC_T => {
+            let handle = rd.u32()?;
+            let count = rd.count(8)?;
+            let mut x = Vec::with_capacity(count);
+            for _ in 0..count {
+                x.push(rd.f64()?);
+            }
+            let query = if opcode == OP_MATVEC { Query::Matvec(x) } else { Query::MatvecT(x) };
+            Request::Query { handle, query }
+        }
+        OP_ROW | OP_COL => {
+            let handle = rd.u32()?;
+            let index = rd.u32()?;
+            let query = if opcode == OP_ROW { Query::Row(index) } else { Query::Col(index) };
+            Request::Query { handle, query }
+        }
+        OP_TOP_K => {
+            let handle = rd.u32()?;
+            let k = rd.u64()?;
+            Request::Query { handle, query: Query::TopK(k as usize) }
+        }
+        other => {
+            return Err(WireFault::new(
+                ErrCode::UnknownOpcode,
+                format!("unknown request opcode {other:#04x}"),
+            ));
+        }
+    };
+    rd.done()?;
+    Ok(req)
+}
+
+/// Decode a response payload.
+pub fn decode_response(opcode: u8, payload: &[u8]) -> WireResult<Response> {
+    let mut rd = Rd::new(payload);
+    let resp = match opcode {
+        OP_PONG => Response::Pong,
+        OP_SHUTTING_DOWN => Response::ShuttingDown,
+        OP_SKETCH_LIST => {
+            // a SketchInfo is at least 4 length/flag bytes + 4 u64s
+            let count = rd.count(2 + 2 + 8 * 4 + 1)?;
+            let mut infos = Vec::with_capacity(count);
+            for _ in 0..count {
+                infos.push(get_info(&mut rd)?);
+            }
+            Response::SketchList(infos)
+        }
+        OP_SKETCH_OPENED => {
+            let handle = rd.u32()?;
+            let info = get_info(&mut rd)?;
+            Response::SketchOpened { handle, info }
+        }
+        OP_VECTOR => {
+            let count = rd.count(8)?;
+            let mut y = Vec::with_capacity(count);
+            for _ in 0..count {
+                y.push(rd.f64()?);
+            }
+            Response::Answer(QueryOutcome::Vector(y))
+        }
+        OP_ENTRIES => {
+            let count = rd.count(4 + 4 + 4 + 8)?;
+            let mut es = Vec::with_capacity(count);
+            for _ in 0..count {
+                es.push(SketchEntry {
+                    row: rd.u32()?,
+                    col: rd.u32()?,
+                    count: rd.u32()?,
+                    value: rd.f64()?,
+                });
+            }
+            Response::Answer(QueryOutcome::Entries(es))
+        }
+        OP_ERROR => {
+            let code = ErrCode::from_u16(rd.u16()?);
+            let message = rd.str()?;
+            Response::Error { code, message }
+        }
+        other => {
+            return Err(WireFault::new(
+                ErrCode::UnknownOpcode,
+                format!("unknown response opcode {other:#04x}"),
+            ));
+        }
+    };
+    rd.done()?;
+    Ok(resp)
+}
+
+/// Write a complete frame (already encoded) and flush it.
+pub fn write_frame(w: &mut impl Write, bytes: &[u8]) -> io::Result<()> {
+    w.write_all(bytes)?;
+    w.flush()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_request(req: &Request) -> Request {
+        let bytes = encode_request(42, req);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.request_id, 42);
+        assert_eq!(h.len as usize, bytes.len() - FRAME_HEADER_LEN);
+        decode_request(h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap()
+    }
+
+    fn roundtrip_response(resp: &Response) -> Response {
+        let bytes = encode_response(7, resp);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.request_id, 7);
+        decode_response(h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap()
+    }
+
+    fn info() -> SketchInfo {
+        SketchInfo {
+            dataset: "enron".into(),
+            method: "Bernstein".into(),
+            s: 123_456,
+            seed: 9,
+            m: 400,
+            n: 65_000,
+            compact: true,
+        }
+    }
+
+    #[test]
+    fn every_request_opcode_roundtrips() {
+        let key = StoreKey::new("wiki", "L2 trim 0.1", 9_999, 3).with_fingerprint(0xBEEF);
+        let cases = vec![
+            Request::Ping,
+            Request::ListSketches,
+            Request::Shutdown,
+            Request::OpenSketch(key.clone()),
+            Request::Query { handle: 5, query: Query::Matvec(vec![1.5, -2.25, f64::MIN]) },
+            Request::Query { handle: 6, query: Query::MatvecT(vec![0.0, 3.75]) },
+            Request::Query { handle: 7, query: Query::Row(11) },
+            Request::Query { handle: 8, query: Query::Col(0) },
+            Request::Query { handle: 9, query: Query::TopK(1_000) },
+        ];
+        for req in &cases {
+            match (req, roundtrip_request(req)) {
+                (Request::Ping, Request::Ping) => {}
+                (Request::ListSketches, Request::ListSketches) => {}
+                (Request::Shutdown, Request::Shutdown) => {}
+                (Request::OpenSketch(a), Request::OpenSketch(b)) => assert_eq!(*a, b),
+                (
+                    Request::Query { handle: ha, query: qa },
+                    Request::Query { handle: hb, query: qb },
+                ) => {
+                    assert_eq!(*ha, hb);
+                    match (qa, qb) {
+                        (Query::Matvec(a), Query::Matvec(b)) => assert_eq!(*a, b),
+                        (Query::MatvecT(a), Query::MatvecT(b)) => assert_eq!(*a, b),
+                        (Query::Row(a), Query::Row(b)) => assert_eq!(*a, b),
+                        (Query::Col(a), Query::Col(b)) => assert_eq!(*a, b),
+                        (Query::TopK(a), Query::TopK(b)) => assert_eq!(*a, b),
+                        other => panic!("query kind changed: {other:?}"),
+                    }
+                }
+                other => panic!("request kind changed: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn every_response_opcode_roundtrips() {
+        let entries = vec![
+            SketchEntry { row: 0, col: 3, count: 2, value: -1.25 },
+            SketchEntry { row: 9, col: 0, count: 1, value: f64::MAX },
+        ];
+        let cases = vec![
+            Response::Pong,
+            Response::ShuttingDown,
+            Response::SketchList(vec![info(), SketchInfo { compact: false, ..info() }]),
+            Response::SketchOpened { handle: 3, info: info() },
+            Response::Answer(QueryOutcome::Vector(vec![0.5, -0.0, 1e300])),
+            Response::Answer(QueryOutcome::Entries(entries.clone())),
+            Response::Error { code: ErrCode::BadHandle, message: "no handle 4".into() },
+        ];
+        for resp in &cases {
+            match (resp, roundtrip_response(resp)) {
+                (Response::Pong, Response::Pong) => {}
+                (Response::ShuttingDown, Response::ShuttingDown) => {}
+                (Response::SketchList(a), Response::SketchList(b)) => assert_eq!(*a, b),
+                (
+                    Response::SketchOpened { handle: ha, info: ia },
+                    Response::SketchOpened { handle: hb, info: ib },
+                ) => {
+                    assert_eq!(*ha, hb);
+                    assert_eq!(*ia, ib);
+                }
+                (Response::Answer(a), Response::Answer(b)) => assert_eq!(*a, b),
+                (
+                    Response::Error { code: ca, message: ma },
+                    Response::Error { code: cb, message: mb },
+                ) => {
+                    assert_eq!(*ca, cb);
+                    assert_eq!(*ma, mb);
+                }
+                other => panic!("response kind changed: {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn f64_bits_survive_exactly() {
+        // byte-identity over the wire hinges on bit-pattern transport:
+        // NaN payloads, signed zero, subnormals all round-trip
+        let tricky = vec![f64::NAN, -0.0, f64::MIN_POSITIVE / 2.0, f64::INFINITY];
+        let bytes = encode_response(1, &Response::Answer(QueryOutcome::Vector(tricky.clone())));
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        match decode_response(h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap() {
+            Response::Answer(QueryOutcome::Vector(y)) => {
+                assert_eq!(y.len(), tricky.len());
+                for (a, b) in tricky.iter().zip(&y) {
+                    assert_eq!(a.to_bits(), b.to_bits());
+                }
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn header_faults_are_typed() {
+        let good = encode_request(1, &Request::Ping);
+        let mut h: [u8; FRAME_HEADER_LEN] = good[..FRAME_HEADER_LEN].try_into().unwrap();
+
+        let mut bad_magic = h;
+        bad_magic[0] = b'X';
+        assert_eq!(parse_frame_header(&bad_magic).unwrap_err().code, ErrCode::Malformed);
+
+        let mut bad_version = h;
+        bad_version[5] = 99;
+        assert_eq!(parse_frame_header(&bad_version).unwrap_err().code, ErrCode::BadVersion);
+
+        // giant declared length
+        h[16..20].copy_from_slice(&u32::MAX.to_be_bytes());
+        assert_eq!(parse_frame_header(&h).unwrap_err().code, ErrCode::Oversized);
+    }
+
+    #[test]
+    fn payload_faults_are_typed() {
+        // trailing bytes
+        let mut bytes = encode_request(1, &Request::Query { handle: 1, query: Query::Row(2) });
+        bytes.push(0xAA);
+        let fault = decode_request(OP_ROW, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // short payload
+        let fault = decode_request(OP_ROW, &[0, 0]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // count that can't fit the payload (giant vector claim)
+        let mut p = Vec::new();
+        put_u32(&mut p, 1); // handle
+        put_u32(&mut p, u32::MAX); // claimed element count
+        let fault = decode_request(OP_MATVEC, &p).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // unknown opcode
+        let fault = decode_request(0x6F, &[]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::UnknownOpcode);
+    }
+
+    #[test]
+    fn clean_close_vs_truncated_header() {
+        let mut empty: &[u8] = &[];
+        assert!(read_frame_header(&mut empty).unwrap().is_none());
+
+        let good = encode_request(1, &Request::Ping);
+        let mut partial: &[u8] = &good[..7];
+        let err = read_frame_header(&mut partial).unwrap_err();
+        assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+}

@@ -21,15 +21,20 @@
 //! CLI entry points: `matsketch sketch` writes into the store,
 //! `matsketch query` answers one query from it, and
 //! `matsketch serve-bench` measures concurrent-reader throughput into the
-//! eval report (see `eval::serving`).
+//! eval report (see `eval::serving`). Remote traffic goes through the
+//! network front ([`crate::net`]): `matsketch serve` exposes this layer
+//! over TCP and `matsketch net-bench` load-tests it.
 
 pub mod query;
 pub mod server;
 pub mod store;
 
 pub use query::{
-    col_slice, decoded_matvec, decoded_matvec_t, decoded_top_k, matvec, matvec_t, row_slice,
-    top_k,
+    col_slice, col_slice_h, decoded_matvec, decoded_matvec_t, decoded_top_k, matvec, matvec_h,
+    matvec_t, matvec_t_h, row_slice, row_slice_h, row_slice_indexed, top_k, top_k_h,
 };
 pub use server::{Pending, Query, QueryOutcome, QueryServer, ServableSketch, ServerStats};
-pub use store::{SketchStore, StoreKey, StoredSketch};
+pub use store::{
+    coo_fingerprint, read_header, Fingerprinter, SketchStore, StoreEntryInfo, StoreKey,
+    StoredSketch,
+};

@@ -6,24 +6,37 @@
 //! f64 accumulation over a decoded [`Sketch`]'s entry list (which the
 //! cursor produces in the same row-major order), so the two paths agree
 //! exactly and cross-check each other in `tests/integration_serve.rs`.
+//!
+//! Each operator comes in two forms: the one-shot form (`matvec`, …)
+//! parses the payload header itself, and the `*_h` form takes an
+//! already-parsed [`PayloadHeader`] so a long-lived server
+//! ([`super::ServableSketch`]) pays the O(m) row-scale-table parse once
+//! per sketch instead of once per query. [`row_slice_indexed`]
+//! additionally takes the store's per-row offset index for an O(1) seek
+//! instead of a scan.
 
 use std::cmp::Ordering;
 
 use crate::error::{Error, Result};
 use crate::sketch::encode::SketchCursor;
-use crate::sketch::{EncodedSketch, Sketch, SketchEntry};
+use crate::sketch::{EncodedSketch, PayloadHeader, Sketch, SketchEntry};
 
 /// `y = B·x` computed off the compressed payload (`x` length n, `y`
 /// length m).
 pub fn matvec(enc: &EncodedSketch, x: &[f64]) -> Result<Vec<f64>> {
-    let mut cur = SketchCursor::open(enc)?;
-    let (m, n) = (cur.m, cur.n);
+    matvec_h(enc, &PayloadHeader::parse(enc)?, x)
+}
+
+/// [`matvec`] with a pre-parsed payload header.
+pub fn matvec_h(enc: &EncodedSketch, header: &PayloadHeader, x: &[f64]) -> Result<Vec<f64>> {
+    let (m, n) = (header.m, header.n);
     if x.len() != n {
         return Err(Error::shape(format!(
             "matvec: x has {} entries, B has {n} columns",
             x.len()
         )));
     }
+    let mut cur = SketchCursor::with_header(enc, header);
     let mut y = vec![0.0f64; m];
     while let Some(e) = cur.next_entry()? {
         check_bounds(&e, m, n)?;
@@ -35,14 +48,19 @@ pub fn matvec(enc: &EncodedSketch, x: &[f64]) -> Result<Vec<f64>> {
 /// `y = Bᵀ·x` computed off the compressed payload (`x` length m, `y`
 /// length n).
 pub fn matvec_t(enc: &EncodedSketch, x: &[f64]) -> Result<Vec<f64>> {
-    let mut cur = SketchCursor::open(enc)?;
-    let (m, n) = (cur.m, cur.n);
+    matvec_t_h(enc, &PayloadHeader::parse(enc)?, x)
+}
+
+/// [`matvec_t`] with a pre-parsed payload header.
+pub fn matvec_t_h(enc: &EncodedSketch, header: &PayloadHeader, x: &[f64]) -> Result<Vec<f64>> {
+    let (m, n) = (header.m, header.n);
     if x.len() != m {
         return Err(Error::shape(format!(
             "matvec_t: x has {} entries, B has {m} rows",
             x.len()
         )));
     }
+    let mut cur = SketchCursor::with_header(enc, header);
     let mut y = vec![0.0f64; n];
     while let Some(e) = cur.next_entry()? {
         check_bounds(&e, m, n)?;
@@ -54,10 +72,20 @@ pub fn matvec_t(enc: &EncodedSketch, x: &[f64]) -> Result<Vec<f64>> {
 /// All entries of row `i`, in column order. Stops decoding as soon as the
 /// row-major stream passes row `i`.
 pub fn row_slice(enc: &EncodedSketch, i: u32) -> Result<Vec<SketchEntry>> {
-    let mut cur = SketchCursor::open(enc)?;
-    if i as usize >= cur.m {
-        return Err(Error::shape(format!("row {i} outside {} rows", cur.m)));
+    row_slice_h(enc, &PayloadHeader::parse(enc)?, i)
+}
+
+/// [`row_slice`] with a pre-parsed payload header (still a scan from the
+/// front; see [`row_slice_indexed`] for the O(1) seek).
+pub fn row_slice_h(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    i: u32,
+) -> Result<Vec<SketchEntry>> {
+    if i as usize >= header.m {
+        return Err(Error::shape(format!("row {i} outside {} rows", header.m)));
     }
+    let mut cur = SketchCursor::with_header(enc, header);
     let mut out = Vec::new();
     while let Some(e) = cur.next_entry()? {
         if e.row > i {
@@ -70,12 +98,55 @@ pub fn row_slice(enc: &EncodedSketch, i: u32) -> Result<Vec<SketchEntry>> {
     Ok(out)
 }
 
+/// [`row_slice`] through the store's per-row offset index
+/// (`(row id, payload bit offset)` pairs, ascending): binary-search the
+/// row, seek straight to its group, decode only that group. Produces
+/// exactly the scan result — an index entry pointing at the wrong group
+/// is detected and reported, never silently served.
+pub fn row_slice_indexed(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    index: &[(u32, u64)],
+    i: u32,
+) -> Result<Vec<SketchEntry>> {
+    if i as usize >= header.m {
+        return Err(Error::shape(format!("row {i} outside {} rows", header.m)));
+    }
+    let pos = match index.binary_search_by_key(&i, |&(row, _)| row) {
+        // a valid row with no sampled entries: the empty slice
+        Err(_) => return Ok(Vec::new()),
+        Ok(pos) => pos,
+    };
+    let prev_row = if pos == 0 { 0 } else { index[pos - 1].0 };
+    let mut cur = SketchCursor::row_group_at(enc, header, index[pos].1, prev_row);
+    let mut out = Vec::new();
+    while let Some(e) = cur.next_entry()? {
+        if e.row != i {
+            return Err(Error::Parse(format!(
+                "row index for row {i} points at a group of row {}",
+                e.row
+            )));
+        }
+        out.push(e);
+    }
+    Ok(out)
+}
+
 /// All entries of column `j`, in row order (full payload scan).
 pub fn col_slice(enc: &EncodedSketch, j: u32) -> Result<Vec<SketchEntry>> {
-    let mut cur = SketchCursor::open(enc)?;
-    if j as usize >= cur.n {
-        return Err(Error::shape(format!("column {j} outside {} columns", cur.n)));
+    col_slice_h(enc, &PayloadHeader::parse(enc)?, j)
+}
+
+/// [`col_slice`] with a pre-parsed payload header.
+pub fn col_slice_h(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    j: u32,
+) -> Result<Vec<SketchEntry>> {
+    if j as usize >= header.n {
+        return Err(Error::shape(format!("column {j} outside {} columns", header.n)));
     }
+    let mut cur = SketchCursor::with_header(enc, header);
     let mut out = Vec::new();
     while let Some(e) = cur.next_entry()? {
         if e.col == j {
@@ -100,7 +171,12 @@ pub fn rank_cmp(a: &SketchEntry, b: &SketchEntry) -> Ordering {
 /// The `k` heaviest entries by `|value|`, heaviest first, computed with a
 /// k-bounded selection buffer over the streaming decode.
 pub fn top_k(enc: &EncodedSketch, k: usize) -> Result<Vec<SketchEntry>> {
-    let mut cur = SketchCursor::open(enc)?;
+    top_k_h(enc, &PayloadHeader::parse(enc)?, k)
+}
+
+/// [`top_k`] with a pre-parsed payload header.
+pub fn top_k_h(enc: &EncodedSketch, header: &PayloadHeader, k: usize) -> Result<Vec<SketchEntry>> {
+    let mut cur = SketchCursor::with_header(enc, header);
     if k == 0 {
         return Ok(Vec::new());
     }
@@ -228,6 +304,40 @@ mod tests {
         assert_eq!(col_slice(&enc, j).unwrap(), want);
         assert!(row_slice(&enc, 1_000).is_err());
         assert!(col_slice(&enc, 100_000).is_err());
+    }
+
+    #[test]
+    fn indexed_row_slice_matches_scan_for_every_row() {
+        for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+            let (enc, dec) = toy(kind);
+            let header = PayloadHeader::parse(&enc).unwrap();
+            let index = crate::sketch::row_group_index(&enc).unwrap();
+            for i in 0..dec.m as u32 {
+                assert_eq!(
+                    row_slice_indexed(&enc, &header, &index, i).unwrap(),
+                    row_slice(&enc, i).unwrap(),
+                    "{kind:?} row {i}"
+                );
+            }
+            assert!(row_slice_indexed(&enc, &header, &index, dec.m as u32).is_err());
+        }
+    }
+
+    #[test]
+    fn header_variants_match_one_shot_forms() {
+        let (enc, dec) = toy(DistributionKind::Bernstein);
+        let header = PayloadHeader::parse(&enc).unwrap();
+        let mut rng = Rng::new(8);
+        let x: Vec<f64> = (0..dec.n).map(|_| rng.normal()).collect();
+        let xt: Vec<f64> = (0..dec.m).map(|_| rng.normal()).collect();
+        assert_eq!(matvec(&enc, &x).unwrap(), matvec_h(&enc, &header, &x).unwrap());
+        assert_eq!(
+            matvec_t(&enc, &xt).unwrap(),
+            matvec_t_h(&enc, &header, &xt).unwrap()
+        );
+        assert_eq!(top_k(&enc, 9).unwrap(), top_k_h(&enc, &header, 9).unwrap());
+        let j = dec.entries[0].col;
+        assert_eq!(col_slice(&enc, j).unwrap(), col_slice_h(&enc, &header, j).unwrap());
     }
 
     #[test]

@@ -14,34 +14,61 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
 use crate::error::{Error, Result};
-use crate::sketch::{encode_sketch, EncodedSketch, Sketch, SketchEntry};
+use crate::sketch::{
+    encode_sketch, row_group_index_h, EncodedSketch, PayloadHeader, Sketch, SketchEntry,
+};
 
 use super::query;
 use super::store::StoredSketch;
 
 /// An immutable, shareable loaded sketch: what a [`QueryServer`] serves.
+///
+/// Loading parses the payload header (the O(m) row-scale table — ROADMAP
+/// flags re-reading it per query as dominating row/top-k latency on tall
+/// matrices) and materializes the per-row seek index **once**; every
+/// query after that reuses both, so serving cost is the query itself, not
+/// repeated header decodes.
 #[derive(Clone, Debug)]
 pub struct ServableSketch {
     /// The compressed payload queries execute against.
     pub enc: EncodedSketch,
     /// Distribution name (provenance, reporting).
     pub method: String,
+    /// Header parsed once at load time (row scales behind an `Arc`).
+    header: PayloadHeader,
+    /// `(row id, payload bit offset)` seek index, ascending.
+    row_index: Vec<(u32, u64)>,
 }
 
 impl ServableSketch {
-    /// Wrap an already-encoded sketch.
-    pub fn new(enc: EncodedSketch, method: impl Into<String>) -> ServableSketch {
-        ServableSketch { enc, method: method.into() }
+    /// Wrap an already-encoded sketch: parse its header and build the
+    /// row seek index once, up front. Fails on a corrupt payload —
+    /// loudly, at load time, not mid-query.
+    pub fn new(enc: EncodedSketch, method: impl Into<String>) -> Result<ServableSketch> {
+        let header = PayloadHeader::parse(&enc)?;
+        let row_index = row_group_index_h(&enc, &header)?;
+        Ok(ServableSketch { enc, method: method.into(), header, row_index })
     }
 
     /// Encode and wrap an in-memory sketch.
     pub fn from_sketch(sk: &Sketch) -> Result<ServableSketch> {
-        Ok(ServableSketch { enc: encode_sketch(sk)?, method: sk.method.clone() })
+        Self::new(encode_sketch(sk)?, sk.method.clone())
     }
 
-    /// Wrap a sketch read back from the store.
-    pub fn from_stored(stored: StoredSketch) -> ServableSketch {
-        ServableSketch { enc: stored.enc, method: stored.method }
+    /// Wrap a sketch read back from the store, reusing the persisted
+    /// row index when the container carries one (format v2).
+    pub fn from_stored(stored: StoredSketch) -> Result<ServableSketch> {
+        let header = PayloadHeader::parse(&stored.enc)?;
+        let row_index = match stored.row_index {
+            Some(index) => index,
+            None => row_group_index_h(&stored.enc, &header)?,
+        };
+        Ok(ServableSketch {
+            enc: stored.enc,
+            method: stored.method,
+            header,
+            row_index,
+        })
     }
 
     /// `(m, n)` of the served matrix sketch.
@@ -49,15 +76,36 @@ impl ServableSketch {
         (self.enc.m, self.enc.n)
     }
 
+    /// The payload header parsed at load time.
+    pub fn header(&self) -> &PayloadHeader {
+        &self.header
+    }
+
+    /// The per-row seek index built (or loaded) at load time.
+    pub fn row_index(&self) -> &[(u32, u64)] {
+        &self.row_index
+    }
+
     /// Answer one query synchronously (the worker body; also usable
-    /// directly for single-threaded callers and cross-checks).
+    /// directly for single-threaded callers and cross-checks). Row
+    /// slices seek through the index; everything else streams from the
+    /// cached header.
     pub fn answer(&self, q: &Query) -> Result<QueryOutcome> {
         Ok(match q {
-            Query::Matvec(x) => QueryOutcome::Vector(query::matvec(&self.enc, x)?),
-            Query::MatvecT(x) => QueryOutcome::Vector(query::matvec_t(&self.enc, x)?),
-            Query::Row(i) => QueryOutcome::Entries(query::row_slice(&self.enc, *i)?),
-            Query::Col(j) => QueryOutcome::Entries(query::col_slice(&self.enc, *j)?),
-            Query::TopK(k) => QueryOutcome::Entries(query::top_k(&self.enc, *k)?),
+            Query::Matvec(x) => QueryOutcome::Vector(query::matvec_h(&self.enc, &self.header, x)?),
+            Query::MatvecT(x) => {
+                QueryOutcome::Vector(query::matvec_t_h(&self.enc, &self.header, x)?)
+            }
+            Query::Row(i) => QueryOutcome::Entries(query::row_slice_indexed(
+                &self.enc,
+                &self.header,
+                &self.row_index,
+                *i,
+            )?),
+            Query::Col(j) => {
+                QueryOutcome::Entries(query::col_slice_h(&self.enc, &self.header, *j)?)
+            }
+            Query::TopK(k) => QueryOutcome::Entries(query::top_k_h(&self.enc, &self.header, *k)?),
         })
     }
 }

@@ -1,7 +1,7 @@
 //! The persistent sketch store: a versioned on-disk container around
 //! [`EncodedSketch`], keyed by `(dataset, distribution, budget s, seed)`.
 //!
-//! ## File format (version 1)
+//! ## File format (version 2; version-1 files remain readable)
 //!
 //! Everything is written MSB-first through [`crate::sketch::bitio`]; every
 //! header field is a whole number of bytes, so the payload starts
@@ -10,8 +10,9 @@
 //! | field          | size     | contents                                  |
 //! |----------------|----------|-------------------------------------------|
 //! | magic          | 4 B      | `"MSKS"`                                  |
-//! | version        | 2 B      | format version (currently 1)              |
-//! | flags          | 2 B      | bit 0: compact (row-scale) payload form   |
+//! | version        | 2 B      | format version (currently 2)              |
+//! | flags          | 2 B      | bit 0: compact payload form; bit 1: a     |
+//! |                |          | per-row offset index follows the payload  |
 //! | dataset length | 2 B      | byte length of the dataset label          |
 //! | dataset        | ≤64 KiB  | dataset label (UTF-8)                     |
 //! | method length  | 2 B      | byte length of the method name            |
@@ -20,16 +21,29 @@
 //! | n              | 4 B      | columns                                   |
 //! | s              | 8 B      | sample budget                             |
 //! | seed           | 8 B      | RNG seed of the sketching run             |
+//! | fingerprint    | 8 B      | FNV-1a 64 of the *input matrix* entry     |
+//! |                |          | stream (0 = unknown); v2 only             |
 //! | header bits    | 8 B      | payload codec header size in bits         |
 //! | body bits      | 8 B      | payload codec body size in bits           |
 //! | payload bytes  | 8 B      | payload length in bytes                   |
-//! | checksum       | 8 B      | FNV-1a 64 over header fields + payload    |
+//! | index bytes    | 8 B      | row-index section length (0 = none); v2   |
+//! | checksum       | 8 B      | FNV-1a 64 over header + payload + index   |
 //! | payload        | variable | the [`EncodedSketch`] bit stream          |
+//! | row index      | variable | entry count (4 B), then per occupied row  |
+//! |                |          | its id (4 B) + payload bit offset (8 B)   |
 //!
-//! The checksum covers every byte before it *and* the payload, so a
-//! flipped bit in any header field (identity, shape, budget, flags) is
-//! caught, not just payload damage. The container records the *full*
-//! [`StoreKey`] identity — dataset, method, `s`, seed — and
+//! The **fingerprint** ties a store entry to the exact input matrix it was
+//! sketched from: a cache lookup whose key carries a different (non-zero)
+//! fingerprint is *stale* — the input regenerated under the same label —
+//! and reads back as a miss so callers rebuild, instead of relying on
+//! mtime + shape heuristics alone. The **row index** (flags bit 1) gives
+//! [`crate::sketch::SketchCursor::row_group_at`] an O(1) seek to any
+//! row's entries on the compressed path.
+//!
+//! The checksum covers every byte before it *and* the payload and index,
+//! so a flipped bit in any header field (identity, shape, budget, flags)
+//! is caught, not just payload damage. The container records the *full*
+//! [`StoreKey`] identity — dataset, method, `s`, seed, fingerprint — and
 //! [`SketchStore::get`] validates it against the requested key, so even a
 //! file-name collision (two labels sanitizing to the same name) is
 //! detected at read time instead of silently serving the wrong sketch.
@@ -44,13 +58,23 @@ use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
 use crate::sketch::bitio::{BitReader, BitWriter};
-use crate::sketch::{encode_sketch, EncodedSketch, Sketch};
+use crate::sketch::{encode_sketch, row_group_index, EncodedSketch, Sketch};
+use crate::sparse::Entry;
 
 /// File magic: "MSKS" (matsketch sketch store).
 pub const STORE_MAGIC: [u8; 4] = *b"MSKS";
 
 /// Current container format version.
-pub const STORE_VERSION: u16 = 1;
+pub const STORE_VERSION: u16 = 2;
+
+/// Oldest container version still readable.
+pub const STORE_VERSION_MIN: u16 = 1;
+
+/// Flags bit 0: the payload uses the compact (row-scale) form.
+pub const FLAG_COMPACT: u16 = 1;
+
+/// Flags bit 1: a per-row offset index follows the payload.
+pub const FLAG_ROW_INDEX: u16 = 1 << 1;
 
 /// Extension used for store files.
 pub const STORE_EXT: &str = "msk";
@@ -73,6 +97,58 @@ pub fn fnv1a64(bytes: &[u8]) -> u64 {
     fnv1a64_extend(FNV_OFFSET, bytes)
 }
 
+/// Incremental FNV-1a 64 over a stream of matrix entries — the content
+/// fingerprint recorded in [`StoreKey`] / the `.msk` header. Entries hash
+/// as `(row, col, value-bits)` big-endian, so the fingerprint is stable
+/// across platforms and entry-stream implementations; it is
+/// order-sensitive, matching the deterministic order of dataset
+/// generators and triplet files. `finish` never returns 0 (the "unknown"
+/// sentinel).
+#[derive(Clone, Debug)]
+pub struct Fingerprinter {
+    h: u64,
+}
+
+impl Default for Fingerprinter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl Fingerprinter {
+    /// Fresh accumulator.
+    pub fn new() -> Fingerprinter {
+        Fingerprinter { h: FNV_OFFSET }
+    }
+
+    /// Fold one entry into the fingerprint.
+    pub fn push(&mut self, e: &Entry) {
+        let mut buf = [0u8; 12];
+        buf[0..4].copy_from_slice(&e.row.to_be_bytes());
+        buf[4..8].copy_from_slice(&e.col.to_be_bytes());
+        buf[8..12].copy_from_slice(&e.val.to_bits().to_be_bytes());
+        self.h = fnv1a64_extend(self.h, &buf);
+    }
+
+    /// The fingerprint; remapped away from the 0 sentinel.
+    pub fn finish(&self) -> u64 {
+        if self.h == 0 {
+            1
+        } else {
+            self.h
+        }
+    }
+}
+
+/// Fingerprint of an in-memory COO matrix (its entry list in order).
+pub fn coo_fingerprint(coo: &crate::sparse::Coo) -> u64 {
+    let mut fp = Fingerprinter::new();
+    for e in &coo.entries {
+        fp.push(e);
+    }
+    fp.finish()
+}
+
 /// Identity of a stored sketch: the inputs that make a sketching run
 /// reproducible. Two runs with equal keys produce statistically identical
 /// sketches, so the store can serve the cached one.
@@ -87,17 +163,39 @@ pub struct StoreKey {
     pub s: u64,
     /// RNG seed of the sketching run.
     pub seed: u64,
+    /// Content fingerprint of the input matrix ([`Fingerprinter`]);
+    /// 0 = unknown. Not part of the file name — a fingerprint change under
+    /// the same label means the cached entry is *stale*, not distinct.
+    pub fingerprint: u64,
 }
 
 impl StoreKey {
-    /// Build a key.
+    /// Build a key with an unknown (unchecked) input fingerprint.
     pub fn new(dataset: &str, method: &str, s: u64, seed: u64) -> StoreKey {
         StoreKey {
             dataset: dataset.to_string(),
             method: method.to_string(),
             s,
             seed,
+            fingerprint: 0,
         }
+    }
+
+    /// Attach the input matrix's content fingerprint.
+    pub fn with_fingerprint(mut self, fingerprint: u64) -> StoreKey {
+        self.fingerprint = fingerprint;
+        self
+    }
+
+    /// Whether two keys name the same sketch identity (dataset, method,
+    /// `s`, seed) — the fields the file name is derived from. Fingerprints
+    /// are deliberately excluded: a mismatch there means *stale*, which
+    /// [`SketchStore::get`] turns into a rebuild, not a collision error.
+    pub fn same_identity(&self, other: &StoreKey) -> bool {
+        self.dataset == other.dataset
+            && self.method == other.method
+            && self.s == other.s
+            && self.seed == other.seed
     }
 
     /// Deterministic file name: sanitized components joined with `__`.
@@ -146,12 +244,19 @@ pub struct StoredSketch {
     pub method: String,
     /// Sketching seed recorded at write time.
     pub seed: u64,
+    /// Input-matrix content fingerprint recorded at write time (0 for
+    /// version-1 files, which predate fingerprints).
+    pub fingerprint: u64,
+    /// Per-row `(row id, payload bit offset)` seek index, ascending in
+    /// row id (absent for version-1 files).
+    pub row_index: Option<Vec<(u32, u64)>>,
 }
 
 impl StoredSketch {
     /// The key this entry was written under.
     pub fn key(&self) -> StoreKey {
         StoreKey::new(&self.dataset, &self.method, self.enc.s, self.seed)
+            .with_fingerprint(self.fingerprint)
     }
 }
 
@@ -168,17 +273,30 @@ fn put_str(w: &mut BitWriter, label: &str, what: &str) -> Result<()> {
 }
 
 /// Serialize an encoded sketch plus its [`StoreKey`] identity into the
-/// container format.
+/// container format (version 2: fingerprint field + per-row seek index).
 pub fn encode_container(enc: &EncodedSketch, key: &StoreKey) -> Result<Vec<u8>> {
     if enc.m > u32::MAX as usize || enc.n > u32::MAX as usize {
         return Err(Error::invalid("sketch dimensions exceed u32"));
     }
+    // one payload walk up front: the row-group seek index
+    let index = row_group_index(enc)?;
+    let index_bytes = {
+        let mut iw = BitWriter::new();
+        iw.put_bits(index.len() as u64, 32);
+        for &(row, off) in &index {
+            iw.put_bits(row as u64, 32);
+            iw.put_bits(off, 64);
+        }
+        iw.finish()
+    };
+
     let mut w = BitWriter::new();
     for b in STORE_MAGIC {
         w.put_bits(b as u64, 8);
     }
     w.put_bits(STORE_VERSION as u64, 16);
-    let flags: u16 = enc.compact as u16;
+    let mut flags: u16 = if enc.compact { FLAG_COMPACT } else { 0 };
+    flags |= FLAG_ROW_INDEX;
     w.put_bits(flags as u64, 16);
     put_str(&mut w, &key.dataset, "dataset label")?;
     put_str(&mut w, &key.method, "method name")?;
@@ -186,21 +304,45 @@ pub fn encode_container(enc: &EncodedSketch, key: &StoreKey) -> Result<Vec<u8>> 
     w.put_bits(enc.n as u64, 32);
     w.put_bits(enc.s, 64);
     w.put_bits(key.seed, 64);
+    w.put_bits(key.fingerprint, 64);
     w.put_bits(enc.header_bits as u64, 64);
     w.put_bits(enc.body_bits as u64, 64);
     w.put_bits(enc.bytes.len() as u64, 64);
+    w.put_bits(index_bytes.len() as u64, 64);
     let mut out = w.finish();
-    // checksum covers every header byte so far plus the payload
-    let sum = fnv1a64_extend(fnv1a64(&out), &enc.bytes);
+    // checksum covers every header byte so far plus the payload and index
+    let sum = fnv1a64_extend(fnv1a64_extend(fnv1a64(&out), &enc.bytes), &index_bytes);
     out.extend_from_slice(&sum.to_be_bytes());
     out.extend_from_slice(&enc.bytes);
+    out.extend_from_slice(&index_bytes);
     Ok(out)
 }
 
-/// Parse a store container back into its encoded sketch. Rejects bad
-/// magic, unknown versions, truncated or padded files, and checksum
-/// mismatches.
-pub fn decode_container(data: &[u8]) -> Result<StoredSketch> {
+/// Every container-header field, plus where the header ends — shared by
+/// the full reader ([`decode_container`]) and the header-only one
+/// ([`read_header`]).
+struct RawHeader {
+    dataset: String,
+    method: String,
+    m: usize,
+    n: usize,
+    s: u64,
+    seed: u64,
+    fingerprint: u64,
+    header_bits: usize,
+    body_bits: usize,
+    payload_len: usize,
+    index_len: usize,
+    checksum: u64,
+    compact: bool,
+    has_index: bool,
+    /// Byte length of the header (fields through the checksum).
+    header_bytes: usize,
+}
+
+/// Parse the container header (magic through checksum) from the front of
+/// `data`; `data` may be just a file prefix.
+fn parse_container_header(data: &[u8]) -> Result<RawHeader> {
     let err = |what: &str| Error::Parse(format!("sketch store: {what}"));
     let mut r = BitReader::new(data);
     for want in STORE_MAGIC {
@@ -210,57 +352,183 @@ pub fn decode_container(data: &[u8]) -> Result<StoredSketch> {
         }
     }
     let version = r.get_bits(16).ok_or_else(|| err("truncated header"))?;
-    if version != STORE_VERSION as u64 {
+    if !(STORE_VERSION_MIN as u64..=STORE_VERSION as u64).contains(&version) {
         return Err(Error::Parse(format!(
-            "sketch store: unsupported version {version} (expected {STORE_VERSION})"
+            "sketch store: unsupported version {version} \
+             (expected {STORE_VERSION_MIN}..={STORE_VERSION})"
         )));
     }
     let flags = r.get_bits(16).ok_or_else(|| err("truncated header"))?;
-    let compact = flags & 1 == 1;
+    let compact = flags & FLAG_COMPACT as u64 != 0;
+    let has_index = version >= 2 && flags & FLAG_ROW_INDEX as u64 != 0;
     let dataset = get_str(&mut r, "dataset label")?;
     let method = get_str(&mut r, "method name")?;
     let m = r.get_bits(32).ok_or_else(|| err("truncated header"))? as usize;
     let n = r.get_bits(32).ok_or_else(|| err("truncated header"))? as usize;
     let s = r.get_bits(64).ok_or_else(|| err("truncated header"))?;
     let seed = r.get_bits(64).ok_or_else(|| err("truncated header"))?;
+    let fingerprint = if version >= 2 {
+        r.get_bits(64).ok_or_else(|| err("truncated header"))?
+    } else {
+        0
+    };
     let header_bits = r.get_bits(64).ok_or_else(|| err("truncated header"))? as usize;
     let body_bits = r.get_bits(64).ok_or_else(|| err("truncated header"))? as usize;
     let payload_len = r.get_bits(64).ok_or_else(|| err("truncated header"))? as usize;
+    let index_len = if version >= 2 {
+        r.get_bits(64).ok_or_else(|| err("truncated header"))? as usize
+    } else {
+        0
+    };
     let checksum = r.get_bits(64).ok_or_else(|| err("truncated header"))?;
-
     debug_assert_eq!(r.bit_pos() % 8, 0, "store header must stay byte-aligned");
-    let header_bytes = r.bit_pos() / 8;
-    let actual = data.len().saturating_sub(header_bytes);
-    if actual < payload_len {
-        return Err(err("truncated payload"));
-    }
-    if actual > payload_len {
-        return Err(err("trailing bytes after payload"));
-    }
-    let payload = data[header_bytes..].to_vec();
-    // the stored sum covers all header bytes before the checksum field
-    // plus the payload
-    let covered = &data[..header_bytes - 8];
-    let got_sum = fnv1a64_extend(fnv1a64(covered), &payload);
-    if got_sum != checksum {
-        return Err(Error::Parse(format!(
-            "sketch store: checksum mismatch (stored {checksum:#018x}, computed {got_sum:#018x})"
-        )));
-    }
-    Ok(StoredSketch {
-        enc: EncodedSketch {
-            m,
-            n,
-            s,
-            header_bits,
-            body_bits,
-            bytes: payload,
-            compact,
-        },
+    Ok(RawHeader {
         dataset,
         method,
+        m,
+        n,
+        s,
         seed,
+        fingerprint,
+        header_bits,
+        body_bits,
+        payload_len,
+        index_len,
+        checksum,
+        compact,
+        has_index,
+        header_bytes: r.bit_pos() / 8,
     })
+}
+
+/// Parse a store container back into its encoded sketch. Reads container
+/// versions 1 (no fingerprint / row index) and 2. Rejects bad magic,
+/// unknown versions, truncated or padded files, and checksum mismatches.
+pub fn decode_container(data: &[u8]) -> Result<StoredSketch> {
+    let err = |what: &str| Error::Parse(format!("sketch store: {what}"));
+    let h = parse_container_header(data)?;
+    let declared = h
+        .payload_len
+        .checked_add(h.index_len)
+        .ok_or_else(|| err("declared section lengths overflow"))?;
+    let actual = data.len().saturating_sub(h.header_bytes);
+    if actual < declared {
+        return Err(err("truncated payload"));
+    }
+    if actual > declared {
+        return Err(err("trailing bytes after payload"));
+    }
+    let payload = data[h.header_bytes..h.header_bytes + h.payload_len].to_vec();
+    let index_bytes = &data[h.header_bytes + h.payload_len..];
+    // the stored sum covers all header bytes before the checksum field
+    // plus the payload and (v2) the index section
+    let covered = &data[..h.header_bytes - 8];
+    let got_sum = fnv1a64_extend(fnv1a64_extend(fnv1a64(covered), &payload), index_bytes);
+    if got_sum != h.checksum {
+        return Err(Error::Parse(format!(
+            "sketch store: checksum mismatch (stored {:#018x}, computed {got_sum:#018x})",
+            h.checksum
+        )));
+    }
+    let row_index = if h.has_index {
+        Some(parse_row_index(index_bytes, h.payload_len, h.m)?)
+    } else {
+        None
+    };
+    Ok(StoredSketch {
+        enc: EncodedSketch {
+            m: h.m,
+            n: h.n,
+            s: h.s,
+            header_bits: h.header_bits,
+            body_bits: h.body_bits,
+            bytes: payload,
+            compact: h.compact,
+        },
+        dataset: h.dataset,
+        method: h.method,
+        seed: h.seed,
+        fingerprint: h.fingerprint,
+        row_index,
+    })
+}
+
+/// Identity + shape of a store entry, read from its header alone.
+#[derive(Clone, Debug)]
+pub struct StoreEntryInfo {
+    /// Dataset label recorded at write time.
+    pub dataset: String,
+    /// Distribution name recorded at write time.
+    pub method: String,
+    /// Sample budget.
+    pub s: u64,
+    /// Sketching seed.
+    pub seed: u64,
+    /// Input content fingerprint (0 for v1 entries).
+    pub fingerprint: u64,
+    /// Rows.
+    pub m: usize,
+    /// Columns.
+    pub n: usize,
+    /// Whether the payload uses the compact row-scale form.
+    pub compact: bool,
+}
+
+/// Largest possible container header: fixed fields plus two 64 KiB
+/// labels.
+const MAX_HEADER_BYTES: usize = 4 + 2 + 2 + 2 * (2 + u16::MAX as usize) + 4 + 4 + 8 * 8;
+
+/// Read one entry's identity + shape from its header alone — no payload
+/// I/O, allocation, or checksumming, so listing a store of multi-GB
+/// entries stays O(header bytes) per file. Serving still goes through
+/// the fully validated [`read_encoded`] path.
+pub fn read_header(path: &Path) -> Result<StoreEntryInfo> {
+    use std::io::Read;
+    let mut prefix = Vec::new();
+    fs::File::open(path)?
+        .take(MAX_HEADER_BYTES as u64)
+        .read_to_end(&mut prefix)?;
+    let h = parse_container_header(&prefix)?;
+    Ok(StoreEntryInfo {
+        dataset: h.dataset,
+        method: h.method,
+        s: h.s,
+        seed: h.seed,
+        fingerprint: h.fingerprint,
+        m: h.m,
+        n: h.n,
+        compact: h.compact,
+    })
+}
+
+/// Parse the row-index section: entry count, then ascending
+/// `(row, bit offset)` pairs pointing into the payload.
+fn parse_row_index(bytes: &[u8], payload_len: usize, m: usize) -> Result<Vec<(u32, u64)>> {
+    let err = |what: &str| Error::Parse(format!("sketch store: row index: {what}"));
+    let mut r = BitReader::new(bytes);
+    let count = r.get_bits(32).ok_or_else(|| err("truncated"))? as usize;
+    if bytes.len() != 4 + count * 12 {
+        return Err(err("length disagrees with entry count"));
+    }
+    let payload_bits = (payload_len as u64).saturating_mul(8);
+    let mut out = Vec::with_capacity(count);
+    let mut prev_row: Option<u32> = None;
+    for _ in 0..count {
+        let row = r.get_bits(32).ok_or_else(|| err("truncated"))? as u32;
+        let off = r.get_bits(64).ok_or_else(|| err("truncated"))?;
+        if row as usize >= m {
+            return Err(err("row id outside the sketch"));
+        }
+        if prev_row.is_some_and(|p| p >= row) {
+            return Err(err("row ids not strictly ascending"));
+        }
+        if off >= payload_bits {
+            return Err(err("bit offset outside the payload"));
+        }
+        prev_row = Some(row);
+        out.push((row, off));
+    }
+    Ok(out)
 }
 
 fn get_str(r: &mut BitReader<'_>, what: &str) -> Result<String> {
@@ -335,7 +603,10 @@ impl SketchStore {
         Ok(path)
     }
 
-    /// Load the sketch stored under `key`. `Ok(None)` when absent; `Err`
+    /// Load the sketch stored under `key`. `Ok(None)` when absent **or
+    /// stale** (both the key and the entry carry non-zero input
+    /// fingerprints and they disagree — the input matrix changed under
+    /// the same label, so callers should rebuild and overwrite); `Err`
     /// when present but corrupt or recorded under a *different* identity
     /// — two labels can sanitize to the same file name, and serving the
     /// wrong sketch silently is never acceptable.
@@ -346,7 +617,7 @@ impl SketchStore {
         }
         let stored = read_encoded(&path)?;
         let recorded = stored.key();
-        if recorded != *key {
+        if !recorded.same_identity(key) {
             return Err(Error::Parse(format!(
                 "sketch store: {} holds ({}, {}, s={}, seed={}) but ({}, {}, s={}, seed={}) \
                  was requested (file-name collision?)",
@@ -360,6 +631,19 @@ impl SketchStore {
                 key.s,
                 key.seed,
             )));
+        }
+        if key.fingerprint != 0
+            && recorded.fingerprint != 0
+            && key.fingerprint != recorded.fingerprint
+        {
+            crate::info!(
+                "sketch store: {} is stale (input fingerprint {:#018x} != stored {:#018x}); \
+                 treating as a miss",
+                path.display(),
+                key.fingerprint,
+                recorded.fingerprint
+            );
+            return Ok(None);
         }
         Ok(Some(stored))
     }
@@ -425,7 +709,7 @@ mod tests {
     fn container_roundtrip_bit_identical() {
         for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
             let (enc, method) = toy_encoded(kind, 3);
-            let key = StoreKey::new("toy", &method, enc.s, 3);
+            let key = StoreKey::new("toy", &method, enc.s, 3).with_fingerprint(0xF00D);
             let data = encode_container(&enc, &key).unwrap();
             let back = decode_container(&data).unwrap();
             assert_eq!(back.enc.bytes, enc.bytes, "{method}: payload changed");
@@ -435,7 +719,14 @@ mod tests {
             assert_eq!(back.enc.header_bits, enc.header_bits);
             assert_eq!(back.enc.body_bits, enc.body_bits);
             assert_eq!(back.enc.compact, enc.compact);
+            assert_eq!(back.fingerprint, 0xF00D);
             assert_eq!(back.key(), key);
+            // the appended seek index round-trips exactly
+            assert_eq!(
+                back.row_index.as_deref(),
+                Some(row_group_index(&enc).unwrap().as_slice()),
+                "{method}: row index changed"
+            );
             // decoded sketches agree entry-for-entry
             let a = decode_sketch(&enc, &method).unwrap();
             let b = decode_sketch(&back.enc, &back.method).unwrap();
@@ -448,19 +739,19 @@ mod tests {
         let (enc, method) = toy_encoded(DistributionKind::Bernstein, 4);
         let key = StoreKey::new("toy", &method, enc.s, 4);
         let good = encode_container(&enc, &key).unwrap();
-        let header_len = good.len() - enc.bytes.len();
 
-        // flipped payload byte -> checksum mismatch
+        // flipped payload byte (well past the header) -> checksum mismatch
         let mut bad = good.clone();
         let last = bad.len() - 1;
         bad[last] ^= 0x40;
         let e = decode_container(&bad).unwrap_err().to_string();
         assert!(e.contains("checksum"), "{e}");
 
-        // flipped header field byte (the last byte of the `s` field, 41
-        // bytes before the end of the header) -> checksum mismatch too
+        // flipped header field byte (the last byte of the `s` field,
+        // located from the front of the header) -> checksum mismatch too
+        let s_off = 4 + 2 + 2 + (2 + "toy".len()) + (2 + method.len()) + 4 + 4;
         let mut hbad = good.clone();
-        hbad[header_len - 41] ^= 0x01;
+        hbad[s_off + 7] ^= 0x01;
         let e = decode_container(&hbad).unwrap_err().to_string();
         assert!(e.contains("checksum"), "{e}");
 
@@ -485,6 +776,133 @@ mod tests {
         vers[5] = 0xEE;
         let e = decode_container(&vers).unwrap_err().to_string();
         assert!(e.contains("version"), "{e}");
+    }
+
+    /// Hand-build a version-1 container (no fingerprint, no index) for the
+    /// given payload — the pre-PR-3 writer, kept verbatim so old store
+    /// files provably stay readable.
+    fn encode_container_v1(enc: &EncodedSketch, key: &StoreKey) -> Vec<u8> {
+        let mut w = BitWriter::new();
+        for b in STORE_MAGIC {
+            w.put_bits(b as u64, 8);
+        }
+        w.put_bits(1, 16); // version 1
+        w.put_bits(enc.compact as u64, 16);
+        put_str(&mut w, &key.dataset, "dataset label").unwrap();
+        put_str(&mut w, &key.method, "method name").unwrap();
+        w.put_bits(enc.m as u64, 32);
+        w.put_bits(enc.n as u64, 32);
+        w.put_bits(enc.s, 64);
+        w.put_bits(key.seed, 64);
+        w.put_bits(enc.header_bits as u64, 64);
+        w.put_bits(enc.body_bits as u64, 64);
+        w.put_bits(enc.bytes.len() as u64, 64);
+        let mut out = w.finish();
+        let sum = fnv1a64_extend(fnv1a64(&out), &enc.bytes);
+        out.extend_from_slice(&sum.to_be_bytes());
+        out.extend_from_slice(&enc.bytes);
+        out
+    }
+
+    #[test]
+    fn version1_files_remain_readable() {
+        let (enc, method) = toy_encoded(DistributionKind::Bernstein, 6);
+        let key = StoreKey::new("legacy", &method, enc.s, 6);
+        let v1 = encode_container_v1(&enc, &key);
+        let back = decode_container(&v1).unwrap();
+        assert_eq!(back.enc.bytes, enc.bytes);
+        assert_eq!(back.fingerprint, 0, "v1 predates fingerprints");
+        assert!(back.row_index.is_none(), "v1 has no seek index");
+        assert_eq!(back.key(), key);
+        // a v1 entry on disk serves through the store like any other
+        let dir = tmp_store("v1compat");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SketchStore::open(&dir).unwrap();
+        std::fs::write(store.path_for(&key), &v1).unwrap();
+        let got = store.get(&key).unwrap().unwrap();
+        assert_eq!(got.enc.bytes, enc.bytes);
+        // even when the caller now knows the input fingerprint: a stored
+        // fingerprint of 0 is "unknown", not "mismatched"
+        let fp_key = key.clone().with_fingerprint(0xABCD);
+        assert!(store.get(&fp_key).unwrap().is_some());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprint_mismatch_reads_as_stale_miss() {
+        let dir = tmp_store("stale");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SketchStore::open(&dir).unwrap();
+        let (enc, method) = toy_encoded(DistributionKind::Bernstein, 7);
+        let written = StoreKey::new("toy", &method, enc.s, 7).with_fingerprint(0x1111);
+        store.put(&written, &enc).unwrap();
+
+        // same fingerprint -> hit; unknown fingerprint -> hit
+        assert!(store.get(&written).unwrap().is_some());
+        let unknown = written.clone().with_fingerprint(0);
+        assert!(store.get(&unknown).unwrap().is_some());
+
+        // different fingerprint -> stale miss (not an error), and a
+        // rebuild through get_or_build overwrites the stale entry
+        let changed = written.clone().with_fingerprint(0x2222);
+        assert!(store.get(&changed).unwrap().is_none());
+        let (_, hit) = store
+            .get_or_build(&changed, || {
+                let mut rng = Rng::new(99);
+                let mut coo = Coo::new(16, 256);
+                for i in 0..16u32 {
+                    for _ in 0..20 {
+                        coo.push(i, rng.usize_below(256) as u32, rng.normal() as f32 + 0.5);
+                    }
+                }
+                let a = coo.to_csr();
+                sketch_offline(
+                    &a,
+                    &SketchPlan::new(DistributionKind::Bernstein, enc.s).with_seed(7),
+                )
+            })
+            .unwrap();
+        assert!(!hit, "stale entry must rebuild");
+        assert_eq!(
+            store.get(&changed).unwrap().unwrap().fingerprint,
+            0x2222,
+            "rebuild must overwrite the stale fingerprint"
+        );
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_header_reads_identity_without_payload_validation() {
+        let dir = tmp_store("hdr");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SketchStore::open(&dir).unwrap();
+        let (enc, method) = toy_encoded(DistributionKind::Bernstein, 8);
+        let key = StoreKey::new("toy", &method, enc.s, 8).with_fingerprint(0xFEED);
+        let path = store.put(&key, &enc).unwrap();
+        let info = read_header(&path).unwrap();
+        assert_eq!(info.dataset, "toy");
+        assert_eq!(info.method, method);
+        assert_eq!((info.m, info.n, info.s), (enc.m, enc.n, enc.s));
+        assert_eq!(info.fingerprint, 0xFEED);
+        assert_eq!(info.compact, enc.compact);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn fingerprinter_is_order_sensitive_and_stable() {
+        let a = Entry { row: 1, col: 2, val: 3.5 };
+        let b = Entry { row: 2, col: 1, val: 3.5 };
+        let fp = |es: &[Entry]| {
+            let mut f = Fingerprinter::new();
+            for e in es {
+                f.push(e);
+            }
+            f.finish()
+        };
+        assert_eq!(fp(&[a, b]), fp(&[a, b]));
+        assert_ne!(fp(&[a, b]), fp(&[b, a]));
+        assert_ne!(fp(&[a]), fp(&[a, b]));
+        assert_ne!(fp(&[a]), 0, "0 is reserved for unknown");
     }
 
     #[test]

@@ -71,6 +71,14 @@ impl<'a> BitReader<'a> {
         Self { buf, pos: 0 }
     }
 
+    /// Read from a byte buffer starting at bit position `bit_pos` — the
+    /// seek primitive behind cached-header cursor opens and the per-row
+    /// offset index. A position past the end is legal and yields `None`
+    /// on the first read, exactly like an exhausted reader.
+    pub fn new_at(buf: &'a [u8], bit_pos: usize) -> Self {
+        Self { buf, pos: bit_pos }
+    }
+
     /// Next bit; `None` past the end.
     #[inline]
     pub fn get_bit(&mut self) -> Option<bool> {
@@ -159,6 +167,21 @@ mod tests {
             w.put_gamma(v);
             assert_eq!(w.bit_len(), len, "v={v}");
         }
+    }
+
+    #[test]
+    fn new_at_resumes_mid_stream() {
+        let mut w = BitWriter::new();
+        w.put_bits(0b1011, 4);
+        w.put_gamma(77);
+        w.put_gamma(5);
+        let buf = w.finish();
+        // position of γ(5): 4 prefix bits + |γ(77)| = 13 bits
+        let mut r = BitReader::new_at(&buf, 17);
+        assert_eq!(r.get_gamma(), Some(5));
+        // past-the-end start is a clean immediate end
+        let mut r = BitReader::new_at(&buf, buf.len() * 8);
+        assert_eq!(r.get_bit(), None);
     }
 
     #[test]

@@ -12,6 +12,8 @@
 //! f32 value per entry instead of (k, sign). [`EncodedSketch::bits_per_sample`]
 //! is the §1 metric (paper: 5–22 bits/sample).
 
+use std::sync::Arc;
+
 use crate::error::{Error, Result};
 use crate::sketch::bitio::{BitReader, BitWriter};
 
@@ -134,6 +136,66 @@ fn count_rows(entries: &[SketchEntry]) -> usize {
     rows
 }
 
+/// The parsed payload header: everything [`SketchCursor::open`] reads
+/// before the first row group, in decoded form. Parsing it is O(m) for
+/// compact payloads (the m-entry row-scale table), which ROADMAP flags as
+/// dominating row/top-k latency on tall matrices when repeated per query —
+/// so the serving layer parses once, caches the result, and opens cursors
+/// through [`SketchCursor::with_header`] instead. The scale table sits
+/// behind an [`Arc`] so cached headers clone in O(1).
+#[derive(Clone, Debug)]
+pub struct PayloadHeader {
+    /// Rows of the sketched matrix.
+    pub m: usize,
+    /// Columns.
+    pub n: usize,
+    /// Total draws `s`.
+    pub s: u64,
+    /// Whether the compact row-scale form was used.
+    pub compact: bool,
+    /// Occupied row groups in the body.
+    pub rows: usize,
+    /// Bit offset of the first row group (end of the header fields).
+    pub body_start: usize,
+    row_scale: Option<Arc<Vec<f64>>>,
+}
+
+impl PayloadHeader {
+    /// Decode the header fields of `enc`'s payload.
+    pub fn parse(enc: &EncodedSketch) -> Result<PayloadHeader> {
+        let mut r = BitReader::new(&enc.bytes);
+        let m = r.get_bits(32).ok_or_else(truncated)? as usize;
+        let n = r.get_bits(32).ok_or_else(truncated)? as usize;
+        let s = r.get_bits(64).ok_or_else(truncated)?;
+        let compact = r.get_bit().ok_or_else(truncated)?;
+        let row_scale = if compact {
+            let mut scales = Vec::with_capacity(m);
+            for _ in 0..m {
+                let bits = r.get_bits(32).ok_or_else(truncated)? as u32;
+                scales.push(f32::from_bits(bits) as f64);
+            }
+            Some(Arc::new(scales))
+        } else {
+            None
+        };
+        let rows = (r.get_gamma().ok_or_else(truncated)? - 1) as usize;
+        Ok(PayloadHeader {
+            m,
+            n,
+            s,
+            compact,
+            rows,
+            body_start: r.bit_pos(),
+            row_scale,
+        })
+    }
+
+    /// Per-row codec scales (present iff `compact`).
+    pub fn row_scale(&self) -> Option<&[f64]> {
+        self.row_scale.as_deref().map(|v| v.as_slice())
+    }
+}
+
 /// A streaming decoder over an [`EncodedSketch`]'s payload: yields entries
 /// in row-major order straight off the Elias-γ bit stream, without ever
 /// materializing a [`Sketch`]. This is what the serving layer
@@ -149,7 +211,7 @@ pub struct SketchCursor<'a> {
     pub s: u64,
     /// Whether the compact row-scale form was used.
     pub compact: bool,
-    row_scale: Option<Vec<f64>>,
+    row_scale: Option<Arc<Vec<f64>>>,
     rows_left: usize,
     row_entries_left: usize,
     prev_row: u64,
@@ -163,39 +225,56 @@ fn truncated() -> Error {
 impl<'a> SketchCursor<'a> {
     /// Decode the header and position the cursor at the first entry.
     pub fn open(enc: &'a EncodedSketch) -> Result<SketchCursor<'a>> {
-        let mut r = BitReader::new(&enc.bytes);
-        let m = r.get_bits(32).ok_or_else(truncated)? as usize;
-        let n = r.get_bits(32).ok_or_else(truncated)? as usize;
-        let s = r.get_bits(64).ok_or_else(truncated)?;
-        let compact = r.get_bit().ok_or_else(truncated)?;
-        let row_scale = if compact {
-            let mut scales = Vec::with_capacity(m);
-            for _ in 0..m {
-                let bits = r.get_bits(32).ok_or_else(truncated)? as u32;
-                scales.push(f32::from_bits(bits) as f64);
-            }
-            Some(scales)
-        } else {
-            None
-        };
-        let rows_left = (r.get_gamma().ok_or_else(truncated)? - 1) as usize;
-        Ok(SketchCursor {
-            reader: r,
-            m,
-            n,
-            s,
-            compact,
-            row_scale,
-            rows_left,
+        let header = PayloadHeader::parse(enc)?;
+        Ok(Self::with_header(enc, &header))
+    }
+
+    /// Position a cursor at the first entry using an already-parsed
+    /// header — O(1), no re-read of the m-entry scale table. The caller
+    /// guarantees `header` was parsed from this `enc`.
+    pub fn with_header(enc: &'a EncodedSketch, header: &PayloadHeader) -> SketchCursor<'a> {
+        SketchCursor {
+            reader: BitReader::new_at(&enc.bytes, header.body_start),
+            m: header.m,
+            n: header.n,
+            s: header.s,
+            compact: header.compact,
+            row_scale: header.row_scale.clone(),
+            rows_left: header.rows,
             row_entries_left: 0,
             prev_row: 0,
             prev_col: 0,
-        })
+        }
+    }
+
+    /// Position a cursor at one row group whose first bit is `bit_offset`
+    /// into the payload, with `prev_row` the row id of the *previous*
+    /// group (0 for the first). Exactly one group is yielded, then a clean
+    /// end — this is the O(1) row-slice seek behind the store's per-row
+    /// offset index.
+    pub fn row_group_at(
+        enc: &'a EncodedSketch,
+        header: &PayloadHeader,
+        bit_offset: u64,
+        prev_row: u32,
+    ) -> SketchCursor<'a> {
+        SketchCursor {
+            reader: BitReader::new_at(&enc.bytes, bit_offset as usize),
+            m: header.m,
+            n: header.n,
+            s: header.s,
+            compact: header.compact,
+            row_scale: header.row_scale.clone(),
+            rows_left: 1,
+            row_entries_left: 0,
+            prev_row: prev_row as u64,
+            prev_col: 0,
+        }
     }
 
     /// Per-row codec scales (present iff `compact`).
     pub fn row_scale(&self) -> Option<&[f64]> {
-        self.row_scale.as_deref()
+        self.row_scale.as_deref().map(|v| v.as_slice())
     }
 
     /// Next decoded entry, row-major; `Ok(None)` at a clean end. A payload
@@ -249,7 +328,52 @@ pub fn decode_sketch(enc: &EncodedSketch, method: &str) -> Result<Sketch> {
         entries.push(e);
     }
     let SketchCursor { m, n, s, row_scale, .. } = cur;
+    let row_scale = row_scale.map(|a| Arc::try_unwrap(a).unwrap_or_else(|a| (*a).clone()));
     Ok(Sketch { m, n, s, entries, row_scale, method: method.to_string() })
+}
+
+/// Walk the payload body once and record, for every occupied row group,
+/// `(row id, bit offset of the group's first bit)`. Feeding an offset and
+/// the *previous* group's row id into [`SketchCursor::row_group_at`]
+/// decodes that one group without touching the rest of the payload —
+/// the store appends this table to `.msk` files for O(1) row-slice seeks.
+pub fn row_group_index(enc: &EncodedSketch) -> Result<Vec<(u32, u64)>> {
+    let header = PayloadHeader::parse(enc)?;
+    row_group_index_h(enc, &header)
+}
+
+/// [`row_group_index`] with a pre-parsed payload header — callers that
+/// already hold one (e.g. [`crate::serve::ServableSketch`] loading) skip
+/// a second O(m) header decode.
+pub fn row_group_index_h(enc: &EncodedSketch, header: &PayloadHeader) -> Result<Vec<(u32, u64)>> {
+    let mut r = BitReader::new_at(&enc.bytes, header.body_start);
+    let mut out = Vec::with_capacity(header.rows);
+    let mut prev_row = 0u64;
+    for _ in 0..header.rows {
+        let group_start = r.bit_pos() as u64;
+        prev_row += r.get_gamma().ok_or_else(truncated)? - 1;
+        if prev_row >= header.m as u64 {
+            return Err(Error::Parse(format!(
+                "sketch payload row {prev_row} outside {} rows",
+                header.m
+            )));
+        }
+        out.push((prev_row as u32, group_start));
+        let count = r.get_gamma().ok_or_else(truncated)?;
+        if count == 0 {
+            return Err(Error::Parse("empty row group in sketch payload".into()));
+        }
+        for _ in 0..count {
+            r.get_gamma().ok_or_else(truncated)?; // column delta
+            r.get_gamma().ok_or_else(truncated)?; // multiplicity k
+            if header.compact {
+                r.get_bit().ok_or_else(truncated)?; // sign
+            } else {
+                r.get_bits(32).ok_or_else(truncated)?; // f32 value
+            }
+        }
+    }
+    Ok(out)
 }
 
 #[cfg(test)]
@@ -320,6 +444,56 @@ mod tests {
         // body bits/sample in the paper's reported 5–22 range
         let bps = enc.body_bits_per_sample();
         assert!((2.0..40.0).contains(&bps), "bits/sample={bps}");
+    }
+
+    #[test]
+    fn cached_header_cursor_matches_cold_open() {
+        for (kind, seed) in [(DistributionKind::Bernstein, 4u64), (DistributionKind::L2, 5)] {
+            let a = random_csr(24, 1024, 30, seed);
+            let sk = sketch_offline(&a, &SketchPlan::new(kind, 2_000)).unwrap();
+            let enc = encode_sketch(&sk).unwrap();
+            let header = PayloadHeader::parse(&enc).unwrap();
+            assert_eq!((header.m, header.n, header.s), (enc.m, enc.n, enc.s));
+            assert_eq!(header.compact, enc.compact);
+            assert_eq!(header.row_scale().is_some(), enc.compact);
+
+            let mut cold = SketchCursor::open(&enc).unwrap();
+            let mut warm = SketchCursor::with_header(&enc, &header);
+            loop {
+                let a = cold.next_entry().unwrap();
+                let b = warm.next_entry().unwrap();
+                assert_eq!(a, b);
+                if a.is_none() {
+                    break;
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn row_group_index_seeks_to_every_row() {
+        for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+            let a = random_csr(40, 2048, 25, 7);
+            let sk = sketch_offline(&a, &SketchPlan::new(kind, 3_000).with_seed(9)).unwrap();
+            let enc = encode_sketch(&sk).unwrap();
+            let header = PayloadHeader::parse(&enc).unwrap();
+            let index = row_group_index(&enc).unwrap();
+            assert_eq!(index.len(), header.rows);
+            assert!(index.windows(2).all(|w| w[0].0 < w[1].0), "rows ascending");
+
+            let dec = decode_sketch(&enc, &sk.method).unwrap();
+            for (pos, &(row, off)) in index.iter().enumerate() {
+                let prev_row = if pos == 0 { 0 } else { index[pos - 1].0 };
+                let mut cur = SketchCursor::row_group_at(&enc, &header, off, prev_row);
+                let mut got = Vec::new();
+                while let Some(e) = cur.next_entry().unwrap() {
+                    got.push(e);
+                }
+                let want: Vec<SketchEntry> =
+                    dec.entries.iter().copied().filter(|e| e.row == row).collect();
+                assert_eq!(got, want, "{kind:?} row {row}");
+            }
+        }
     }
 
     #[test]

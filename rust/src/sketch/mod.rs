@@ -14,7 +14,10 @@ pub mod builder;
 pub mod encode;
 
 pub use builder::{sketch_offline, SketchPlan};
-pub use encode::{decode_sketch, encode_sketch, EncodedSketch, SketchCursor};
+pub use encode::{
+    decode_sketch, encode_sketch, row_group_index, row_group_index_h, EncodedSketch,
+    PayloadHeader, SketchCursor,
+};
 
 use crate::sparse::{Coo, Csr};
 

@@ -77,6 +77,27 @@ pub fn quantile(xs: &[f64], q: f64) -> f64 {
     }
 }
 
+/// Several quantiles of one sample with a single sort (the latency
+/// histogram path: p50/p95/p99 over thousands of per-query timings).
+/// Each `q ∈ [0, 1]`, linear interpolation, matching [`quantile`].
+pub fn quantiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
+    assert!(!xs.is_empty());
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    qs.iter()
+        .map(|q| {
+            let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+            let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+            if lo == hi {
+                v[lo]
+            } else {
+                let t = pos - lo as f64;
+                v[lo] * (1.0 - t) + v[hi] * t
+            }
+        })
+        .collect()
+}
+
 /// Median absolute deviation — the bench harness's robust spread measure.
 pub fn mad(xs: &[f64]) -> f64 {
     let med = quantile(xs, 0.5);
@@ -108,6 +129,16 @@ mod tests {
         assert_eq!(quantile(&xs, 0.0), 1.0);
         assert_eq!(quantile(&xs, 1.0), 4.0);
         assert!((quantile(&xs, 0.5) - 2.5).abs() < 1e-12);
+    }
+
+    #[test]
+    fn quantiles_match_one_at_a_time() {
+        let xs = [5.0, 3.0, 1.0, 2.0, 4.0, 9.0];
+        let qs = [0.0, 0.5, 0.95, 0.99, 1.0];
+        let batch = quantiles(&xs, &qs);
+        for (q, got) in qs.iter().zip(&batch) {
+            assert_eq!(*got, quantile(&xs, *q), "q={q}");
+        }
     }
 
     #[test]

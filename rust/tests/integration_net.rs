@@ -1,0 +1,395 @@
+//! Integration: the network serving front. A live loopback server must
+//! answer every query kind **byte-identically** to the in-process
+//! `QueryServer` for every Figure-1 distribution, stay healthy under
+//! concurrent clients, and survive the malformed-frame corpus.
+
+use std::io::{Read, Write};
+use std::net::TcpStream;
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+use std::time::Duration;
+
+use matsketch::distributions::DistributionKind;
+use matsketch::engine::{self, PipelineConfig, SketchMode};
+use matsketch::net::wire::{self, FRAME_HEADER_LEN, WIRE_MAGIC, WIRE_VERSION};
+use matsketch::net::{ErrCode, NetServer, NetServerConfig, RemoteSketchClient, Response};
+use matsketch::serve::{
+    coo_fingerprint, Query, QueryOutcome, QueryServer, ServableSketch, SketchStore, StoreKey,
+};
+use matsketch::sketch::{encode_sketch, SketchPlan};
+use matsketch::sparse::Coo;
+use matsketch::util::rng::Rng;
+
+const BUDGET: u64 = 600;
+const SEED: u64 = 21;
+
+fn fixed_matrix() -> Coo {
+    let mut rng = Rng::new(0x7E57_4E7);
+    let mut coo = Coo::new(24, 160);
+    for i in 0..24u32 {
+        for _ in 0..12 {
+            coo.push(i, rng.usize_below(160) as u32, (rng.normal() as f32) + 1.5);
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("matsketch_net_itest_{tag}_{}", std::process::id()))
+}
+
+/// Build + persist one sketch per Figure-1 distribution, returning the
+/// keys plus in-process reference sketches loaded back from the store
+/// (the same path the server takes).
+fn populate_store(store: &SketchStore) -> Vec<(StoreKey, Arc<ServableSketch>)> {
+    let coo = fixed_matrix();
+    let fp = coo_fingerprint(&coo);
+    let mut out = Vec::new();
+    for kind in DistributionKind::figure1_set() {
+        let plan = SketchPlan::new(kind, BUDGET).with_seed(SEED);
+        let (sk, _) = engine::sketch_coo(
+            SketchMode::Offline,
+            &coo,
+            &plan,
+            &PipelineConfig::default(),
+        )
+        .unwrap();
+        let enc = encode_sketch(&sk).unwrap();
+        let key = StoreKey::new("fixed", &sk.method, BUDGET, SEED).with_fingerprint(fp);
+        store.put(&key, &enc).unwrap();
+        let reference =
+            Arc::new(ServableSketch::from_stored(store.get(&key).unwrap().unwrap()).unwrap());
+        out.push((key, reference));
+    }
+    out
+}
+
+fn start_server(store_dir: &Path, max_connections: usize) -> NetServer {
+    NetServer::bind(
+        SketchStore::open(store_dir).unwrap(),
+        "127.0.0.1:0",
+        NetServerConfig {
+            workers_per_sketch: 2,
+            max_connections,
+            read_timeout: Some(Duration::from_secs(10)),
+            write_timeout: Some(Duration::from_secs(10)),
+        },
+    )
+    .unwrap()
+}
+
+/// Exact f64-bit equality: what "byte-identical over the wire" means
+/// after decoding.
+fn assert_bit_identical(got: &QueryOutcome, want: &QueryOutcome, what: &str) {
+    match (got, want) {
+        (QueryOutcome::Vector(a), QueryOutcome::Vector(b)) => {
+            assert_eq!(a.len(), b.len(), "{what}: length");
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                assert_eq!(x.to_bits(), y.to_bits(), "{what}: y[{i}]");
+            }
+        }
+        (QueryOutcome::Entries(a), QueryOutcome::Entries(b)) => {
+            assert_eq!(a.len(), b.len(), "{what}: length");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!((x.row, x.col, x.count), (y.row, y.col, y.count), "{what}");
+                assert_eq!(x.value.to_bits(), y.value.to_bits(), "{what}");
+            }
+        }
+        _ => panic!("{what}: outcome kinds differ"),
+    }
+}
+
+fn query_mix(m: usize, n: usize, rng: &mut Rng) -> Vec<Query> {
+    vec![
+        Query::Matvec((0..n).map(|_| rng.normal()).collect()),
+        Query::MatvecT((0..m).map(|_| rng.normal()).collect()),
+        Query::Row(0),
+        Query::Row((m - 1) as u32),
+        Query::Row(rng.usize_below(m) as u32),
+        Query::Col(rng.usize_below(n) as u32),
+        Query::TopK(1),
+        Query::TopK(7),
+        Query::TopK(100_000),
+    ]
+}
+
+/// Acceptance: for every Figure-1 distribution, every query kind served
+/// over the wire equals the in-process `QueryServer` answer bit for bit.
+#[test]
+fn remote_answers_byte_identical_for_every_method() {
+    let dir = tmp_dir("byteident");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sketches = populate_store(&SketchStore::open(&dir).unwrap());
+    assert_eq!(sketches.len(), 6);
+    let server = start_server(&dir, 16);
+    let addr = server.local_addr().to_string();
+
+    let mut client = RemoteSketchClient::connect(&addr).unwrap();
+    client.ping().unwrap();
+    assert_eq!(client.list_sketches().unwrap().len(), sketches.len());
+
+    for (key, reference) in &sketches {
+        let (m, n) = reference.shape();
+        let info = client.open(key).unwrap();
+        assert_eq!((info.m as usize, info.n as usize), (m, n), "{}", key.method);
+        assert_eq!(info.method, key.method);
+
+        // the in-process reference goes through a real QueryServer
+        let local = QueryServer::start(Arc::clone(reference), 2);
+        let mut rng = Rng::new(33);
+        for (qi, q) in query_mix(m, n, &mut rng).into_iter().enumerate() {
+            let want = local.submit(q.clone()).wait().unwrap();
+            let got = client.query(key, &q).unwrap();
+            assert_bit_identical(&got, &want, &format!("{} query {qi}", key.method));
+        }
+        local.shutdown();
+
+        // pipelined batch: one write burst, in-order responses
+        let mut rng = Rng::new(44);
+        let batch = query_mix(m, n, &mut rng);
+        let answers = client.pipeline(key, &batch).unwrap();
+        assert_eq!(answers.len(), batch.len());
+        for (qi, (q, got)) in batch.iter().zip(answers).enumerate() {
+            let want = reference.answer(q).unwrap();
+            assert_bit_identical(&got.unwrap(), &want, &format!("{} pipelined {qi}", key.method));
+        }
+    }
+
+    // remote error discipline: a shape-mismatched matvec is a typed
+    // error, and the connection keeps serving afterwards
+    let (key0, _) = &sketches[0];
+    let err = client.query(key0, &Query::Matvec(vec![1.0; 3])).unwrap_err().to_string();
+    assert!(err.contains("query") || err.contains("shape"), "{err}");
+    client.ping().unwrap();
+
+    let stats = server.shutdown();
+    assert!(stats.frames > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: ≥ 8 concurrent remote clients all observe byte-identical
+/// answers.
+#[test]
+fn eight_concurrent_clients_match_direct_answers() {
+    let dir = tmp_dir("concurrent");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sketches = populate_store(&SketchStore::open(&dir).unwrap());
+    let (key, reference) = sketches
+        .iter()
+        .find(|(k, _)| k.method == "Bernstein")
+        .expect("Bernstein sketch present")
+        .clone();
+    let server = start_server(&dir, 32);
+    let addr = server.local_addr().to_string();
+
+    let mut workers = Vec::new();
+    for c in 0..8u64 {
+        let addr = addr.clone();
+        let key = key.clone();
+        let reference = Arc::clone(&reference);
+        workers.push(std::thread::spawn(move || {
+            let mut client = RemoteSketchClient::connect(&addr).unwrap();
+            let (m, n) = reference.shape();
+            let mut rng = Rng::new(1000 + c);
+            for (qi, q) in query_mix(m, n, &mut rng).into_iter().enumerate() {
+                let want = reference.answer(&q).unwrap();
+                let got = client.query(&key, &q).unwrap();
+                assert_bit_identical(&got, &want, &format!("client {c} query {qi}"));
+            }
+        }));
+    }
+    for w in workers {
+        w.join().expect("concurrent client panicked");
+    }
+    let stats = server.shutdown();
+    assert!(stats.connections >= 8);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+fn raw_header(magic: [u8; 4], version: u16, opcode: u8, request_id: u64, len: u32) -> Vec<u8> {
+    let mut h = Vec::with_capacity(FRAME_HEADER_LEN);
+    h.extend_from_slice(&magic);
+    h.extend_from_slice(&version.to_be_bytes());
+    h.push(opcode);
+    h.push(0);
+    h.extend_from_slice(&request_id.to_be_bytes());
+    h.extend_from_slice(&len.to_be_bytes());
+    h
+}
+
+/// Read one response frame off a raw socket.
+fn read_raw_response(stream: &mut TcpStream) -> Option<(u64, Response)> {
+    let header = wire::read_frame_header(stream).ok()??;
+    let h = wire::parse_frame_header(&header).ok()?;
+    let payload = wire::read_payload(stream, h.len).ok()?;
+    Some((h.request_id, wire::decode_response(h.opcode, &payload).ok()?))
+}
+
+fn expect_error_code(stream: &mut TcpStream, want: ErrCode, what: &str) {
+    match read_raw_response(stream) {
+        Some((_, Response::Error { code, .. })) => assert_eq!(code, want, "{what}"),
+        other => panic!("{what}: expected typed error, got {other:?}"),
+    }
+}
+
+/// Acceptance: the malformed-frame corpus — truncated length, bad magic,
+/// wrong version, giant declared length, mid-payload disconnect — never
+/// kills the server; it answers subsequent requests normally.
+#[test]
+fn malformed_frame_corpus_never_kills_the_server() {
+    let dir = tmp_dir("malformed");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sketches = populate_store(&SketchStore::open(&dir).unwrap());
+    let (key, reference) = &sketches[0];
+    let server = start_server(&dir, 16);
+    let addr = server.local_addr();
+
+    let assert_alive = |what: &str| {
+        let mut client = RemoteSketchClient::connect(&addr.to_string()).unwrap();
+        client.ping().unwrap_or_else(|e| panic!("after {what}: ping failed: {e}"));
+        let got = client.query(key, &Query::TopK(3)).unwrap();
+        assert_bit_identical(
+            &got,
+            &reference.answer(&Query::TopK(3)).unwrap(),
+            &format!("after {what}"),
+        );
+    };
+
+    // 1. truncated frame header: 10 of 20 bytes, then disconnect
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let good = wire::encode_request(1, &matsketch::net::Request::Ping);
+        s.write_all(&good[..10]).unwrap();
+        drop(s);
+    }
+    assert_alive("truncated header");
+
+    // 2. bad magic: typed malformed error, then the server closes
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(&raw_header(*b"JUNK", WIRE_VERSION, 0x01, 5, 0)).unwrap();
+        expect_error_code(&mut s, ErrCode::Malformed, "bad magic");
+        // connection is closed after a frame fault
+        let mut rest = Vec::new();
+        let _ = s.read_to_end(&mut rest);
+        assert!(rest.is_empty(), "no stray bytes after the error frame");
+    }
+    assert_alive("bad magic");
+
+    // 3. wrong protocol version
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(&raw_header(WIRE_MAGIC, WIRE_VERSION + 7, 0x01, 6, 0)).unwrap();
+        expect_error_code(&mut s, ErrCode::BadVersion, "wrong version");
+    }
+    assert_alive("wrong version");
+
+    // 4. giant declared payload length
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(&raw_header(WIRE_MAGIC, WIRE_VERSION, 0x01, 7, u32::MAX)).unwrap();
+        expect_error_code(&mut s, ErrCode::Oversized, "giant length");
+    }
+    assert_alive("giant length");
+
+    // 5. mid-payload disconnect: a valid matvec frame cut short
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        let frame = wire::encode_request(
+            8,
+            &matsketch::net::Request::Query {
+                handle: 0,
+                query: Query::Matvec(vec![1.0; 64]),
+            },
+        );
+        s.write_all(&frame[..FRAME_HEADER_LEN + 11]).unwrap();
+        drop(s);
+    }
+    assert_alive("mid-payload disconnect");
+
+    // 6. unknown opcode: typed error, and the SAME connection keeps
+    // working afterwards (payload faults do not cost the connection)
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        s.write_all(&raw_header(WIRE_MAGIC, WIRE_VERSION, 0x6F, 9, 0)).unwrap();
+        expect_error_code(&mut s, ErrCode::UnknownOpcode, "unknown opcode");
+        let ping = wire::encode_request(10, &matsketch::net::Request::Ping);
+        s.write_all(&ping).unwrap();
+        match read_raw_response(&mut s) {
+            Some((10, Response::Pong)) => {}
+            other => panic!("same-connection ping after payload fault: {other:?}"),
+        }
+    }
+    assert_alive("unknown opcode");
+
+    let stats = server.shutdown();
+    assert!(stats.faults >= 5, "typed faults recorded: {}", stats.faults);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The wire Shutdown sentinel winds the whole server down gracefully.
+#[test]
+fn shutdown_sentinel_stops_the_server() {
+    let dir = tmp_dir("sentinel");
+    let _ = std::fs::remove_dir_all(&dir);
+    populate_store(&SketchStore::open(&dir).unwrap());
+    let server = start_server(&dir, 16);
+    let addr = server.local_addr();
+
+    let mut client = RemoteSketchClient::connect(&addr.to_string()).unwrap();
+    client.ping().unwrap();
+    client.shutdown_server().unwrap();
+
+    // wait() returns because the sentinel triggered teardown
+    let stats = server.wait();
+    assert!(stats.frames >= 2);
+
+    // the port no longer accepts wire traffic
+    let refused = match TcpStream::connect_timeout(&addr, Duration::from_millis(500)) {
+        Err(_) => true,
+        Ok(mut s) => {
+            // a racing accept may still succeed; the server must not
+            // answer a ping on it
+            let ping = wire::encode_request(1, &matsketch::net::Request::Ping);
+            let _ = s.write_all(&ping);
+            !matches!(read_raw_response(&mut s), Some((_, Response::Pong)))
+        }
+    };
+    assert!(refused, "server still answering after shutdown");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Handles are connection-scoped: a fresh connection cannot query with a
+/// stale handle, and the error is typed.
+#[test]
+fn unopened_handle_is_a_typed_error() {
+    let dir = tmp_dir("badhandle");
+    let _ = std::fs::remove_dir_all(&dir);
+    populate_store(&SketchStore::open(&dir).unwrap());
+    let server = start_server(&dir, 16);
+    let addr = server.local_addr();
+
+    let mut s = TcpStream::connect(addr).unwrap();
+    s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+    let frame = wire::encode_request(
+        3,
+        &matsketch::net::Request::Query { handle: 42, query: Query::TopK(1) },
+    );
+    s.write_all(&frame).unwrap();
+    expect_error_code(&mut s, ErrCode::BadHandle, "unopened handle");
+    // and an open for an absent sketch is a typed store error
+    let missing = StoreKey::new("no-such-dataset", "Bernstein", 1, 0);
+    let frame = wire::encode_request(4, &matsketch::net::Request::OpenSketch(missing));
+    s.write_all(&frame).unwrap();
+    expect_error_code(&mut s, ErrCode::Store, "absent sketch");
+    drop(s);
+
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

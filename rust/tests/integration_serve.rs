@@ -213,7 +213,7 @@ fn store_get_or_build_builds_once_then_hits() {
     assert_eq!(enc1.bytes, enc2.bytes);
 
     // a served sketch from the cache answers queries
-    let servable = ServableSketch::new(enc2, "Bernstein");
+    let servable = ServableSketch::new(enc2, "Bernstein").unwrap();
     match servable.answer(&Query::TopK(5)).unwrap() {
         QueryOutcome::Entries(es) => assert_eq!(es.len(), 5),
         other => panic!("unexpected outcome {other:?}"),
