@@ -8,18 +8,19 @@
 //!     Pallas kernels via PJRT): subspace-iteration SVD + Figure-1 quality;
 //!  4. encode sketches with the compact codec and report bits/sample;
 //!  5. print the paper's headline metric per dataset;
-//!  6. persist one sketch into the on-disk store, read it back, and serve
-//!     concurrent matvec queries from the compressed payload;
-//!  7. expose the store over TCP (wire protocol v1) and answer the same
-//!     queries remotely, byte-identical to the in-process path.
+//!  6. persist one sketch into the on-disk store and drive the **same**
+//!     query script through the unified `SketchClient` API twice — the
+//!     in-process `LocalClient` and, over a live TCP server, the
+//!     `RemoteClient` — asserting the two backends answer identically
+//!     (matvec, batched matvec, top-k, row slice).
 //!
 //! ```bash
 //! make artifacts && cargo run --release --example end_to_end
 //! ```
 
-use std::sync::Arc;
 use std::time::Instant;
 
+use matsketch::api::{LocalClient, QueryRequest, QueryResponse, RemoteClient, SketchClient};
 use matsketch::coordinator::PipelineConfig;
 use matsketch::datasets::DatasetId;
 use matsketch::distributions::{DistributionKind, MatrixStats};
@@ -27,14 +28,48 @@ use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::Result;
 use matsketch::linalg::svd::{rank_k_fro, topk_svd};
 use matsketch::metrics::quality::{quality_left, quality_right};
-use matsketch::net::{NetServer, NetServerConfig, RemoteSketchClient};
+use matsketch::net::{NetServer, NetServerConfig};
 use matsketch::runtime::default_engine;
-use matsketch::serve::{
-    coo_fingerprint, Query, QueryOutcome, QueryServer, ServableSketch, SketchStore, StoreKey,
-};
-use matsketch::sketch::{encode_sketch, SketchPlan};
+use matsketch::serve::{coo_fingerprint, SketchStore, StoreKey};
+use matsketch::sketch::SketchPlan;
 use matsketch::stream::ShuffledStream;
 use matsketch::util::rng::Rng;
+
+/// The shared serving demo: one request script, any backend. Returns the
+/// responses so the caller can pin local == remote.
+fn serve_demo(
+    client: &mut dyn SketchClient,
+    key: &StoreKey,
+    label: &str,
+) -> Result<Vec<QueryResponse>> {
+    let info = client.open(key)?;
+    println!("\n{label}: serving {}x{} sketch (s={})", info.m, info.n, info.s);
+    let mut rng = Rng::new(7);
+    let x: Vec<f64> = (0..info.n as usize).map(|_| rng.normal()).collect();
+    let script = vec![
+        QueryRequest::Matvec(x.clone()),
+        QueryRequest::MatvecBatch(vec![x.clone(), x.iter().map(|v| -v).collect()]),
+        QueryRequest::TopK(5),
+        QueryRequest::Row(0),
+    ];
+    let mut out = Vec::new();
+    for answer in client.query_batch(key, script)? {
+        let answer = answer?;
+        match &answer {
+            QueryResponse::Vector(y) => {
+                let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+                println!("  matvec: |y|_2 = {norm:.4e}");
+            }
+            QueryResponse::Vectors(ys) => {
+                println!("  batched matvec: {} vectors in one payload pass", ys.len())
+            }
+            QueryResponse::Entries(es) => println!("  entries: {} returned", es.len()),
+        }
+        out.push(answer);
+    }
+    client.close()?;
+    Ok(out)
+}
 
 fn main() -> Result<()> {
     let engine = default_engine();
@@ -73,7 +108,7 @@ fn main() -> Result<()> {
         let svd_b = topk_svd(&b, k + 4, 8, 2, engine.as_ref())?;
         let left = quality_left(&a, &svd_b, a_k, k, engine.as_ref())?;
         let right = quality_right(&a, &svd_b, a_k, k)?;
-        let enc = encode_sketch(&sketch)?;
+        let enc = matsketch::sketch::encode_sketch(&sketch)?;
 
         println!(
             "{:<11} {:>9} {:>11} {:>8.3} {:>8.3} {:>8.2} {:>11.2} {:>9.1}",
@@ -87,8 +122,9 @@ fn main() -> Result<()> {
             t0.elapsed().as_secs_f64()
         );
     }
-    // 6. serving layer: persist a sketch, read it back, answer queries
-    // concurrently straight off the compressed payload.
+    // 6. the serving story, through the one client API: persist a
+    // sketch, then run the identical query script against the local
+    // backend and a live TCP server, and pin the answers equal.
     let store_dir = std::env::temp_dir().join("matsketch-e2e-store");
     let store = SketchStore::open(&store_dir)?;
     let coo = DatasetId::Synthetic.generate_small(0);
@@ -96,7 +132,7 @@ fn main() -> Result<()> {
     let plan = SketchPlan::new(DistributionKind::Bernstein, s).with_seed(99);
     let key = StoreKey::new("synthetic-small", &plan.kind.name(), s, plan.seed)
         .with_fingerprint(coo_fingerprint(&coo));
-    let (enc, cache_hit) = store.get_or_build(&key, || {
+    let (_, cache_hit) = store.get_or_build(&key, || {
         let stats = MatrixStats::from_coo(&coo);
         let (sk, _) = sketch_entry_stream(
             SketchMode::Sharded,
@@ -114,63 +150,33 @@ fn main() -> Result<()> {
         if cache_hit { "hit" } else { "miss -> built + persisted" }
     );
 
-    let servable = Arc::new(ServableSketch::new(enc, plan.kind.name())?);
-    let (_, n) = servable.shape();
-    let server = QueryServer::start(Arc::clone(&servable), 4);
-    let mut rng = Rng::new(7);
-    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    let pending = server.submit_batch(vec![
-        Query::Matvec(x),
-        Query::TopK(5),
-        Query::Row(0),
-    ]);
-    for p in pending {
-        match p.wait()? {
-            QueryOutcome::Vector(y) => {
-                let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
-                println!("  matvec: |y|_2 = {norm:.4e}");
-            }
-            QueryOutcome::Entries(es) => println!("  entries: {} returned", es.len()),
-        }
-    }
-    let stats = server.shutdown();
-    println!(
-        "  served {} queries across {} workers",
-        stats.total(),
-        stats.served_per_worker.len()
-    );
+    // local backend
+    let mut local = LocalClient::new(store);
+    let local_answers = serve_demo(&mut local, &key, "local client")?;
 
-    // 7. the network front: the same store served over TCP; remote
-    // answers are byte-identical to the in-process path.
+    // remote backend: same script over the wire
     let net = NetServer::bind(
         SketchStore::open(&store_dir)?,
         "127.0.0.1:0",
         NetServerConfig::default(),
     )?;
     let addr = net.local_addr().to_string();
-    let mut client = RemoteSketchClient::connect(&addr)?;
-    let info = client.open(&key)?;
-    println!("\nnet: serving {}x{} sketch at {addr}", info.m, info.n);
-    let mut rng = Rng::new(7);
-    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
-    for q in [Query::Matvec(x), Query::TopK(5), Query::Row(0)] {
-        let remote = client.query(&key, &q)?;
-        let local = servable.answer(&q)?;
-        assert_eq!(remote, local, "remote answer differs from in-process");
-        match remote {
-            QueryOutcome::Vector(y) => println!("  remote matvec: len {} (== local)", y.len()),
-            QueryOutcome::Entries(es) => {
-                println!("  remote entries: {} returned (== local)", es.len())
-            }
-        }
-    }
-    client.shutdown_server()?;
+    let mut remote = RemoteClient::connect(&addr)?;
+    let remote_answers = serve_demo(&mut remote, &key, "remote client")?;
+
+    assert_eq!(
+        local_answers, remote_answers,
+        "remote answers differ from in-process"
+    );
+    println!("  backends agree: {} answers identical over TCP", remote_answers.len());
+
+    remote.shutdown_server()?;
     let net_stats = net.wait();
     println!("  net: {} frames over {} connections", net_stats.frames, net_stats.connections);
 
     println!(
         "\nAll layers composed: L3 streaming pipeline -> L2/L1 AOT artifacts via PJRT \
-         -> serving layer -> network front."
+         -> sketch store -> one SketchClient API over local + TCP backends."
     );
     Ok(())
 }

@@ -1,7 +1,7 @@
 //! E10 — serving-path throughput: matvec queries/sec executed directly on
 //! the Elias-γ compressed sketch vs the decode-then-CSR fallback, across
-//! the Figure-1 distributions; plus `QueryServer` concurrent-reader
-//! scaling.
+//! the Figure-1 distributions; the batched single-pass SpMM vs k
+//! independent matvecs; plus `QueryServer` concurrent-reader scaling.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -9,12 +9,11 @@ mod common;
 use std::sync::Arc;
 
 use common::{bench_items, default_budget, section};
+use matsketch::api::{QueryRequest, QueryResponse};
 use matsketch::datasets::{synthetic_cf, SyntheticConfig};
 use matsketch::distributions::DistributionKind;
-use matsketch::serve::{self, Query, QueryServer, ServableSketch};
-use matsketch::sketch::{
-    decode_sketch, encode_sketch, row_group_index, sketch_offline, PayloadHeader, SketchPlan,
-};
+use matsketch::serve::{self, QueryServer, ServableSketch};
+use matsketch::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
 use matsketch::util::rng::Rng;
 
 fn main() {
@@ -71,12 +70,36 @@ fn main() {
         .report();
     }
 
+    // the serving_batch.* story: one payload pass for k right-hand sides
+    // vs k independent passes. Throughput is reported per matvec, so the
+    // batched lines should climb with k while the independent ones stay
+    // flat — that gap is the amortized Elias-γ decode.
+    section("batched matvec: one-pass SpMM vs k independent matvecs (Bernstein)");
+    {
+        let mut rng = Rng::new(0xBA7C);
+        for k in [1usize, 4, 16] {
+            let xs: Vec<Vec<f64>> = (0..k)
+                .map(|_| (0..a.n).map(|_| rng.normal()).collect())
+                .collect();
+            let per = (sk.nnz() as f64) * k as f64;
+            bench_items(&format!("matvec_batch_one_pass[k={k}]"), budget, per, || {
+                serve::matvec_batch(&enc, &xs).unwrap()
+            })
+            .report();
+            bench_items(&format!("matvec_independent[k={k}]"), budget, per, || {
+                xs.iter().map(|xi| serve::matvec(&enc, xi).unwrap()).collect::<Vec<_>>()
+            })
+            .report();
+        }
+    }
+
     // ROADMAP flagged the per-query header re-read (the m-entry
     // row-scale table) as dominating row/top-k latency on tall matrices;
-    // ServableSketch now parses it once. Quantify the win on a tall
-    // sketch: cold = one-shot ops (header parsed per query), cached =
-    // the *_h forms, indexed = the store's per-row seek index.
-    section("header cache + row index: tall matrix (20000 x 100) row/top-k");
+    // plan selection now lives behind ServableSketch::answer (header
+    // parsed + row index built once at load). Quantify the win on a tall
+    // sketch: cold = one-shot free functions (header parsed per query),
+    // planned = the served path (cached header + row seek index).
+    section("plan selection: tall matrix (20000 x 100) row/top-k");
     {
         let tall = synthetic_cf(&SyntheticConfig { m: 20_000, n: 100, ..Default::default() })
             .to_csr();
@@ -84,35 +107,31 @@ fn main() {
         let plan = SketchPlan::new(DistributionKind::Bernstein, s_tall).with_seed(3);
         let sk = sketch_offline(&tall, &plan).unwrap();
         let enc = encode_sketch(&sk).unwrap();
-        let header = PayloadHeader::parse(&enc).unwrap();
-        let index = row_group_index(&enc).unwrap();
+        let servable = ServableSketch::new(enc.clone(), plan.kind.name()).unwrap();
         let mut rng = Rng::new(0x7A11);
         let rows: Vec<u32> = (0..64).map(|_| rng.usize_below(tall.m) as u32).collect();
         let per = rows.len() as f64;
 
-        bench_items("row_slice_cold_header", budget, per, || {
+        bench_items("row_slice_cold_one_shot", budget, per, || {
             rows.iter().map(|&i| serve::row_slice(&enc, i).unwrap().len()).sum::<usize>()
         })
         .report();
-        bench_items("row_slice_cached_header", budget, per, || {
+        bench_items("row_slice_planned", budget, per, || {
             rows.iter()
-                .map(|&i| serve::row_slice_h(&enc, &header, i).unwrap().len())
-                .sum::<usize>()
-        })
-        .report();
-        bench_items("row_slice_indexed", budget, per, || {
-            rows.iter()
-                .map(|&i| serve::row_slice_indexed(&enc, &header, &index, i).unwrap().len())
+                .map(|&i| match servable.answer(&QueryRequest::Row(i)).unwrap() {
+                    QueryResponse::Entries(es) => es.len(),
+                    _ => unreachable!("row answers are entry lists"),
+                })
                 .sum::<usize>()
         })
         .report();
 
-        bench_items("top_10_cold_header", budget, 1.0, || {
+        bench_items("top_10_cold_one_shot", budget, 1.0, || {
             serve::top_k(&enc, 10).unwrap()
         })
         .report();
-        bench_items("top_10_cached_header", budget, 1.0, || {
-            serve::top_k_h(&enc, &header, 10).unwrap()
+        bench_items("top_10_planned", budget, 1.0, || {
+            servable.answer(&QueryRequest::TopK(10)).unwrap()
         })
         .report();
     }
@@ -129,7 +148,7 @@ fn main() {
             || {
                 let server = QueryServer::start(Arc::clone(&servable), readers);
                 let pending =
-                    server.submit_batch(vec![Query::Matvec(x.clone()); queries]);
+                    server.submit_batch(vec![QueryRequest::Matvec(x.clone()); queries]);
                 for p in pending {
                     p.wait().unwrap();
                 }

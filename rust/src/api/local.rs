@@ -1,0 +1,248 @@
+//! The in-process backend: [`LocalClient`] serves queries straight from
+//! a [`SketchStore`] through per-sketch [`QueryServer`] worker pools.
+
+use std::collections::HashMap;
+use std::path::Path;
+use std::sync::Arc;
+
+use crate::error::{Error, Result};
+use crate::serve::{read_header, QueryServer, ServableSketch, SketchStore, StoreKey};
+use crate::warn_log;
+
+use super::{QueryRequest, QueryResponse, SketchClient, SketchInfo};
+
+/// One opened sketch: its worker pool (owning the shared immutable
+/// [`ServableSketch`]) plus the identity it was opened under.
+struct OpenedSketch {
+    key: StoreKey,
+    fingerprint: u64,
+    server: QueryServer,
+    info: SketchInfo,
+}
+
+/// The in-process [`SketchClient`]: a [`SketchStore`] plus lazily opened
+/// [`QueryServer`] worker pools, one per sketch.
+///
+/// Execution-plan selection happens *inside* this client (via
+/// `ServableSketch::answer`): the payload header is parsed once at open,
+/// row slices seek through the per-row offset index, and everything else
+/// streams off the cached header. Callers never pick a call form — the
+/// header-cached / indexed variants of the query executors are no longer
+/// public API.
+pub struct LocalClient {
+    store: SketchStore,
+    workers: usize,
+    opened: HashMap<String, OpenedSketch>,
+}
+
+impl LocalClient {
+    /// Default query workers per opened sketch.
+    pub const DEFAULT_WORKERS: usize = 4;
+
+    /// A client over an already-opened store.
+    pub fn new(store: SketchStore) -> LocalClient {
+        LocalClient { store, workers: Self::DEFAULT_WORKERS, opened: HashMap::new() }
+    }
+
+    /// A client over the store directory at `dir` (created if absent).
+    pub fn open_dir(dir: impl AsRef<Path>) -> Result<LocalClient> {
+        Ok(Self::new(SketchStore::open(dir.as_ref())?))
+    }
+
+    /// Set the worker-pool size used for sketches opened *after* this
+    /// call (min 1).
+    pub fn with_workers(mut self, workers: usize) -> LocalClient {
+        self.workers = workers.max(1);
+        self
+    }
+
+    /// The underlying store directory.
+    pub fn store_dir(&self) -> &Path {
+        self.store.dir()
+    }
+
+    /// The opened entry for `key`, loading it from the store on first
+    /// use and evicting + reloading when the requested input fingerprint
+    /// conflicts with the cached one (a re-sketched input must be picked
+    /// up without a restart; fingerprint-less opens keep the cache).
+    fn ensure_open(&mut self, key: &StoreKey) -> Result<&OpenedSketch> {
+        let file = key.file_name();
+        let mut stale = false;
+        if let Some(o) = self.opened.get(&file) {
+            if !o.key.same_identity(key) {
+                return Err(Error::invalid(format!(
+                    "open slot {file} holds ({}, {}, s={}, seed={}), not the requested \
+                     ({}, {}, s={}, seed={}) (file-name collision?)",
+                    o.key.dataset,
+                    o.key.method,
+                    o.key.s,
+                    o.key.seed,
+                    key.dataset,
+                    key.method,
+                    key.s,
+                    key.seed,
+                )));
+            }
+            stale =
+                key.fingerprint != 0 && o.fingerprint != 0 && key.fingerprint != o.fingerprint;
+        }
+        if stale {
+            if let Some(o) = self.opened.remove(&file) {
+                o.server.shutdown();
+            }
+        }
+        if !self.opened.contains_key(&file) {
+            let stored = self.store.get(key)?.ok_or_else(|| {
+                Error::invalid(format!(
+                    "no stored sketch {file} under {} (absent or stale) — run \
+                     `matsketch sketch` first",
+                    self.store.dir().display()
+                ))
+            })?;
+            let fingerprint = stored.fingerprint;
+            let sketch = Arc::new(ServableSketch::from_stored(stored)?);
+            let (m, n) = sketch.shape();
+            let info = SketchInfo {
+                dataset: key.dataset.clone(),
+                method: key.method.clone(),
+                s: key.s,
+                seed: key.seed,
+                m: m as u64,
+                n: n as u64,
+                compact: sketch.enc.compact,
+            };
+            let server = QueryServer::start(sketch, self.workers);
+            self.opened.insert(
+                file.clone(),
+                OpenedSketch { key: key.clone(), fingerprint, server, info },
+            );
+        }
+        Ok(self.opened.get(&file).expect("entry just ensured"))
+    }
+}
+
+impl SketchClient for LocalClient {
+    fn open(&mut self, key: &StoreKey) -> Result<SketchInfo> {
+        Ok(self.ensure_open(key)?.info.clone())
+    }
+
+    fn list(&mut self) -> Result<Vec<SketchInfo>> {
+        let mut out = Vec::new();
+        for path in self.store.entries()? {
+            match read_header(&path) {
+                Ok(h) => out.push(SketchInfo {
+                    dataset: h.dataset,
+                    method: h.method,
+                    s: h.s,
+                    seed: h.seed,
+                    m: h.m as u64,
+                    n: h.n as u64,
+                    compact: h.compact,
+                }),
+                Err(e) => {
+                    warn_log!("api: skipping unreadable store entry {}: {e}", path.display())
+                }
+            }
+        }
+        Ok(out)
+    }
+
+    fn query(&mut self, key: &StoreKey, request: &QueryRequest) -> Result<QueryResponse> {
+        self.ensure_open(key)?.server.submit(request.clone()).wait()
+    }
+
+    fn query_batch(
+        &mut self,
+        key: &StoreKey,
+        requests: Vec<QueryRequest>,
+    ) -> Result<Vec<Result<QueryResponse>>> {
+        let pending = self.ensure_open(key)?.server.submit_batch(requests);
+        Ok(pending.into_iter().map(|p| p.wait()).collect())
+    }
+
+    fn close(&mut self) -> Result<()> {
+        for (_, o) in self.opened.drain() {
+            o.server.shutdown();
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::DistributionKind;
+    use crate::sketch::{encode_sketch, sketch_offline, SketchPlan};
+    use crate::sparse::Coo;
+    use crate::util::rng::Rng;
+
+    fn populated_store(dir: &Path) -> (SketchStore, StoreKey) {
+        let store = SketchStore::open(dir).unwrap();
+        let mut rng = Rng::new(5);
+        let mut coo = Coo::new(8, 40);
+        for i in 0..8u32 {
+            for _ in 0..10 {
+                coo.push(i, rng.usize_below(40) as u32, rng.normal() as f32 + 1.0);
+            }
+        }
+        let a = coo.to_csr();
+        let sk =
+            sketch_offline(&a, &SketchPlan::new(DistributionKind::Bernstein, 300)).unwrap();
+        let key = StoreKey::new("toy", &sk.method, 300, 0);
+        store.put(&key, &encode_sketch(&sk).unwrap()).unwrap();
+        (store, key)
+    }
+
+    #[test]
+    fn open_query_list_close_roundtrip() {
+        let dir = std::env::temp_dir()
+            .join(format!("matsketch_api_local_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let (store, key) = populated_store(&dir);
+        let mut client = LocalClient::new(store).with_workers(2);
+
+        let info = client.open(&key).unwrap();
+        assert_eq!((info.m, info.n), (8, 40));
+        assert_eq!(client.list().unwrap().len(), 1);
+
+        // single vs batched matvec: bit-identical
+        let x: Vec<f64> = (0..40).map(|i| i as f64 * 0.25 - 3.0).collect();
+        let single = client.query(&key, &QueryRequest::Matvec(x.clone())).unwrap();
+        let batched = client
+            .query(&key, &QueryRequest::MatvecBatch(vec![x.clone(), x]))
+            .unwrap();
+        match (single, batched) {
+            (QueryResponse::Vector(y), QueryResponse::Vectors(ys)) => {
+                assert_eq!(ys.len(), 2);
+                assert_eq!(ys[0], y);
+                assert_eq!(ys[1], ys[0]);
+            }
+            other => panic!("unexpected outcome {other:?}"),
+        }
+
+        // batch errors come back per-entry, not as a batch abort
+        let batch = vec![QueryRequest::TopK(3), QueryRequest::Matvec(vec![0.0; 7])];
+        let answers = client.query_batch(&key, batch).unwrap();
+        assert_eq!(answers.len(), 2);
+        assert!(answers[0].is_ok());
+        assert!(answers[1].is_err());
+
+        client.close().unwrap();
+        // reusable after close: pools are re-acquired lazily
+        assert!(client.query(&key, &QueryRequest::TopK(1)).is_ok());
+        client.close().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn absent_sketch_is_a_typed_error() {
+        let dir = std::env::temp_dir()
+            .join(format!("matsketch_api_local_absent_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut client = LocalClient::open_dir(&dir).unwrap();
+        let missing = StoreKey::new("nope", "Bernstein", 1, 0);
+        let err = client.open(&missing).unwrap_err().to_string();
+        assert!(err.contains("no stored sketch"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,132 @@
+//! The one query surface: [`SketchClient`] over typed requests and
+//! responses, implemented by both the in-process and the remote backend.
+//!
+//! The paper's payoff is that the sketch `B` stands in for `A` in
+//! downstream linear algebra, and downstream consumers want a single
+//! "multiply / slice / top-k against the sketch" interface — not one per
+//! transport. Before this module the repo had three divergent query
+//! surfaces: the free functions in `serve::query` (with caller-picked
+//! header-cached / indexed / decoded call forms), the method set on
+//! `net::client::RemoteSketchClient`, and ad-hoc wiring in the CLI and
+//! eval harnesses. This module collapses them into one vocabulary:
+//!
+//! * [`QueryRequest`] / [`QueryResponse`] — the typed operations and
+//!   answers, shared verbatim by the in-process query engine
+//!   ([`crate::serve`]), the wire protocol ([`crate::net::wire`]), and
+//!   every caller. Includes the batched matvec
+//!   ([`QueryRequest::MatvecBatch`]): `k` right-hand sides multiplied in
+//!   **one pass** over the compressed payload.
+//! * [`SketchClient`] — `open` / `list` / `query` / `query_batch` /
+//!   `close`, the whole client API.
+//! * [`LocalClient`] — in-process backend: wraps a
+//!   [`crate::serve::SketchStore`] and serves each opened sketch from a
+//!   [`crate::serve::QueryServer`] worker pool. Execution-plan selection
+//!   (cached payload header, per-row offset index, streaming scan) lives
+//!   *inside* — callers never pick a call form.
+//! * [`RemoteClient`] — the same API over TCP, wrapping the pipelining,
+//!   reconnecting wire client.
+//!
+//! The two backends answer **byte-identically**: every response is
+//! produced by the same `ServableSketch::answer` execution, and the wire
+//! transports f64s as IEEE-754 bit patterns. The backend-equivalence
+//! suite (`rust/tests/integration_api.rs`) drives both through identical
+//! request scripts and asserts bit-equality for every request kind.
+
+use crate::error::Result;
+use crate::serve::StoreKey;
+use crate::sketch::SketchEntry;
+
+mod local;
+mod remote;
+
+pub use local::LocalClient;
+pub use remote::RemoteClient;
+
+/// One query against an opened sketch — the single request vocabulary
+/// shared by the in-process engine, the wire protocol, and every caller.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryRequest {
+    /// `y = B·x` (`x` length n).
+    Matvec(Vec<f64>),
+    /// `y = Bᵀ·x` (`x` length m).
+    MatvecT(Vec<f64>),
+    /// `Y = B·X` for `k` right-hand sides (each length n), executed in
+    /// one pass over the compressed payload. Answer order matches `k`
+    /// independent [`QueryRequest::Matvec`] calls bit-for-bit.
+    MatvecBatch(Vec<Vec<f64>>),
+    /// All entries of one row.
+    Row(u32),
+    /// All entries of one column.
+    Col(u32),
+    /// The k heaviest entries by `|value|`.
+    TopK(usize),
+}
+
+/// A query answer.
+#[derive(Clone, Debug, PartialEq)]
+pub enum QueryResponse {
+    /// Dense result vector (matvec family).
+    Vector(Vec<f64>),
+    /// One dense result vector per batched right-hand side.
+    Vectors(Vec<Vec<f64>>),
+    /// Entry list (slices, top-k).
+    Entries(Vec<SketchEntry>),
+}
+
+/// Identity + shape of one served sketch, as listed / opened through a
+/// [`SketchClient`] (and carried verbatim over the wire).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SketchInfo {
+    /// Dataset label.
+    pub dataset: String,
+    /// Distribution name.
+    pub method: String,
+    /// Sample budget `s`.
+    pub s: u64,
+    /// Sketching seed.
+    pub seed: u64,
+    /// Rows.
+    pub m: u64,
+    /// Columns.
+    pub n: u64,
+    /// Whether the payload uses the compact row-scale form.
+    pub compact: bool,
+}
+
+/// A boxed client, the form harnesses thread through worker threads.
+pub type BoxedSketchClient = Box<dyn SketchClient + Send>;
+
+/// The unified query surface over a sketch backend.
+///
+/// Implemented by [`LocalClient`] (in-process: sketch store + worker
+/// pools) and [`RemoteClient`] (TCP wire protocol). Both answer
+/// byte-identically, so harnesses written against
+/// `&mut dyn SketchClient` run unchanged — and comparably — on either.
+pub trait SketchClient {
+    /// Open the sketch stored under `key` for querying; idempotent.
+    /// Returns its identity + shape.
+    fn open(&mut self, key: &StoreKey) -> Result<SketchInfo>;
+
+    /// Enumerate the sketches this backend can serve.
+    fn list(&mut self) -> Result<Vec<SketchInfo>>;
+
+    /// Execute one request against the sketch under `key` (opening it
+    /// first if needed).
+    fn query(&mut self, key: &StoreKey, request: &QueryRequest) -> Result<QueryResponse>;
+
+    /// Execute a batch through the backend's batched path (worker-pool
+    /// fan-out locally, request pipelining remotely). Requests are taken
+    /// by value so submission is zero-copy — benchmarks build the batch
+    /// outside the timed window and hand it over whole. One result per
+    /// request, in order; a per-request failure comes back as its `Err`
+    /// entry without aborting the rest.
+    fn query_batch(
+        &mut self,
+        key: &StoreKey,
+        requests: Vec<QueryRequest>,
+    ) -> Result<Vec<Result<QueryResponse>>>;
+
+    /// Release backend resources (worker pools, connections). The client
+    /// may be reused afterwards; backends re-acquire lazily.
+    fn close(&mut self) -> Result<()>;
+}

@@ -1,0 +1,79 @@
+//! The remote backend: [`RemoteClient`] speaks the wire protocol through
+//! the pipelining, reconnecting TCP client in [`crate::net`].
+
+use std::net::SocketAddr;
+use std::time::Duration;
+
+use crate::error::Result;
+use crate::net::RemoteSketchClient;
+use crate::serve::StoreKey;
+
+use super::{QueryRequest, QueryResponse, SketchClient, SketchInfo};
+
+/// The remote [`SketchClient`]: one TCP connection to a
+/// `matsketch serve` process, with batch pipelining (a `query_batch`
+/// costs ~one round trip) and a one-shot reconnect + handle re-open on
+/// broken connections.
+///
+/// Answers are byte-identical to [`super::LocalClient`] over the same
+/// store: the server runs the same execution the local backend does, and
+/// f64s travel as IEEE-754 bit patterns.
+pub struct RemoteClient {
+    inner: RemoteSketchClient,
+}
+
+impl RemoteClient {
+    /// Resolve `addr` (e.g. `"127.0.0.1:7300"`) and connect with the
+    /// default timeout.
+    pub fn connect(addr: &str) -> Result<RemoteClient> {
+        Ok(RemoteClient { inner: RemoteSketchClient::connect(addr)? })
+    }
+
+    /// [`RemoteClient::connect`] with an explicit timeout (`None` =
+    /// block forever).
+    pub fn connect_with_timeout(addr: &str, timeout: Option<Duration>) -> Result<RemoteClient> {
+        Ok(RemoteClient { inner: RemoteSketchClient::connect_with_timeout(addr, timeout)? })
+    }
+
+    /// The server address this client dials.
+    pub fn addr(&self) -> SocketAddr {
+        self.inner.addr()
+    }
+
+    /// Liveness probe.
+    pub fn ping(&mut self) -> Result<()> {
+        self.inner.ping()
+    }
+
+    /// Ask the server to shut down gracefully (the wire sentinel).
+    pub fn shutdown_server(&mut self) -> Result<()> {
+        self.inner.shutdown_server()
+    }
+}
+
+impl SketchClient for RemoteClient {
+    fn open(&mut self, key: &StoreKey) -> Result<SketchInfo> {
+        self.inner.open(key)
+    }
+
+    fn list(&mut self) -> Result<Vec<SketchInfo>> {
+        self.inner.list_sketches()
+    }
+
+    fn query(&mut self, key: &StoreKey, request: &QueryRequest) -> Result<QueryResponse> {
+        self.inner.query(key, request)
+    }
+
+    fn query_batch(
+        &mut self,
+        key: &StoreKey,
+        requests: Vec<QueryRequest>,
+    ) -> Result<Vec<Result<QueryResponse>>> {
+        self.inner.pipeline(key, requests)
+    }
+
+    fn close(&mut self) -> Result<()> {
+        self.inner.disconnect();
+        Ok(())
+    }
+}

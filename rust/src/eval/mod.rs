@@ -23,6 +23,6 @@ pub use ablation::run_ablation;
 pub use compression::run_compression;
 pub use figure1::{run_figure1, Figure1Config};
 pub use netbench::{run_net_bench, NetBenchConfig, NetPoint};
-pub use serving::{run_serve_bench, ServeConfig, ServePoint};
+pub use serving::{run_serve_bench, BatchPoint, ServeConfig, ServePoint};
 pub use tables::{run_tables, TableRow};
 pub use theory::run_theory;

@@ -1,6 +1,8 @@
 //! E11 — network serving throughput: closed-loop remote query load
-//! against a live wire-protocol server, reported next to the in-process
-//! `serving.*` numbers.
+//! against a live wire-protocol server, driven through the unified
+//! [`crate::api::SketchClient`] surface (the load generator only sees
+//! `dyn SketchClient`) and reported next to the in-process `serving.*`
+//! numbers — same harness, different backend, directly comparable.
 //!
 //! Default mode self-hosts: each dataset's sketch is resolved through
 //! the persistent store (build + persist on first run, fingerprint-
@@ -38,6 +40,8 @@ pub struct NetBenchConfig {
     pub ops: Vec<LoadOp>,
     /// `k` for top-k queries.
     pub top_k: usize,
+    /// Right-hand sides per `matvec-batch` request in the op mix.
+    pub batch_k: usize,
     /// Budget as `s = nnz / budget_frac` (min 1000).
     pub budget_frac: u64,
     /// Sketching / query seed.
@@ -56,6 +60,7 @@ impl Default for NetBenchConfig {
             duration_secs: None,
             ops: vec![LoadOp::Matvec, LoadOp::Row, LoadOp::TopK],
             top_k: 10,
+            batch_k: 4,
             budget_frac: 10,
             seed: 0,
             small: true,
@@ -186,6 +191,7 @@ fn measure_all(
                 duration: cfg.duration_secs.map(Duration::from_secs_f64),
                 ops: cfg.ops.clone(),
                 top_k: cfg.top_k,
+                batch_k: cfg.batch_k,
                 seed: cfg.seed,
             };
             let report = run_load(target, key, &load_cfg)?;

@@ -1,25 +1,33 @@
 //! E9 — serving-layer throughput: concurrent-reader queries/sec against
-//! the compressed sketch, fed from the persistent [`SketchStore`].
+//! the compressed sketch, measured through the unified client API
+//! ([`crate::api::SketchClient`]) over a [`LocalClient`], fed from the
+//! persistent sketch store.
 //!
 //! For each dataset the driver resolves the sketch through the store
 //! (building + persisting on the first run, hitting the cache on repeats),
-//! then measures [`QueryServer`] matvec throughput at several reader
-//! counts. Two tables land in the report directory:
+//! then measures batched-matvec throughput at several reader counts.
+//! Because the harness only sees `dyn SketchClient`, the same
+//! measurement runs unmodified against a remote backend — the
+//! `net_serving.*` tables from `eval::netbench` are directly comparable.
+//! Three tables land in the report directory:
 //!
 //! * `serving` — dataset × readers → queries/sec (the ≥1
 //!   concurrent-reader throughput numbers);
+//! * `serving_batch` — dataset × batch size k → single-pass
+//!   [`QueryRequest::MatvecBatch`] vs k independent matvecs (the
+//!   payload-decode amortization win);
 //! * `serving_spill_depth` — per-shard spill-depth histograms from the
 //!   sharded sketch builds that fed the store (backpressure telemetry).
 
 use std::path::Path;
-use std::sync::Arc;
 use std::time::Instant;
 
+use crate::api::{LocalClient, QueryRequest, SketchClient};
 use crate::datasets::DatasetId;
 use crate::distributions::DistributionKind;
 use crate::engine::{self, PipelineConfig, SketchMode};
 use crate::error::Result;
-use crate::serve::{Query, QueryServer, ServableSketch, SketchStore, StoreKey};
+use crate::serve::{SketchStore, StoreKey};
 use crate::sketch::SketchPlan;
 use crate::util::rng::Rng;
 
@@ -32,6 +40,9 @@ pub struct ServeConfig {
     pub readers: Vec<usize>,
     /// Queries per measurement.
     pub queries: usize,
+    /// Batch sizes for the single-pass SpMM table (`MatvecBatch` with k
+    /// right-hand sides vs k independent matvecs).
+    pub batch_ks: Vec<usize>,
     /// Budget as `s = nnz / budget_frac` (min 1000).
     pub budget_frac: u64,
     /// Sketching / query seed.
@@ -45,6 +56,7 @@ impl Default for ServeConfig {
         ServeConfig {
             readers: vec![1, 2, 4],
             queries: 64,
+            batch_ks: vec![1, 4, 16],
             budget_frac: 10,
             seed: 0,
             small: true,
@@ -71,9 +83,38 @@ pub struct ServePoint {
     pub cache_hit: bool,
 }
 
-/// Run the serving benchmark; writes `serving.csv`/`.md` and
-/// `serving_spill_depth.csv`/`.md` under `dir`, using (and populating)
-/// the sketch store at `store_dir`.
+/// One batched-SpMM measurement: `MatvecBatch` with `k` right-hand sides
+/// (one payload pass) vs `k` independent matvecs (`k` passes), on one
+/// worker so the comparison isolates decode amortization.
+#[derive(Clone, Debug)]
+pub struct BatchPoint {
+    /// Dataset name.
+    pub dataset: String,
+    /// Distribution name.
+    pub method: String,
+    /// Sample budget.
+    pub s: u64,
+    /// Right-hand sides per batch.
+    pub k: usize,
+    /// Batches timed.
+    pub reps: usize,
+    /// Mean µs per `MatvecBatch(k)` request.
+    pub batch_us: f64,
+    /// Mean µs for the k independent matvecs it replaces.
+    pub indep_us: f64,
+}
+
+impl BatchPoint {
+    /// Independent-path time over batched-path time (> 1 = batching
+    /// wins).
+    pub fn speedup(&self) -> f64 {
+        if self.batch_us > 0.0 { self.indep_us / self.batch_us } else { 0.0 }
+    }
+}
+
+/// Run the serving benchmark; writes `serving.csv`/`.md`,
+/// `serving_batch.csv`/`.md`, and `serving_spill_depth.csv`/`.md` under
+/// `dir`, using (and populating) the sketch store at `store_dir`.
 pub fn run_serve_bench(
     dir: &Path,
     store_dir: &Path,
@@ -83,6 +124,7 @@ pub fn run_serve_bench(
     let store = SketchStore::open(store_dir)?;
     let kind = DistributionKind::Bernstein;
     let mut points = Vec::new();
+    let mut batch_points = Vec::new();
     let mut build_metrics: Vec<(String, engine::PipelineMetrics)> = Vec::new();
 
     for id in datasets {
@@ -95,7 +137,7 @@ pub fn run_serve_bench(
             .with_fingerprint(crate::serve::coo_fingerprint(&coo));
 
         let mut metrics_slot: Option<engine::PipelineMetrics> = None;
-        let (enc, cache_hit) = store.get_or_build(&key, || {
+        let (_, cache_hit) = store.get_or_build(&key, || {
             let (sk, metrics) =
                 engine::sketch_coo(SketchMode::Sharded, &coo, &plan, &PipelineConfig::default())?;
             metrics_slot = Some(metrics);
@@ -108,24 +150,26 @@ pub fn run_serve_bench(
             crate::info!("serving: store cache hit for {}", key.file_name());
         }
 
-        let sketch = Arc::new(ServableSketch::new(enc, kind.name())?);
-        let (_, n) = sketch.shape();
+        let n = coo.n;
         let mut rng = Rng::new(cfg.seed ^ 0x51_52_59);
         let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
 
         for &readers in &cfg.readers {
-            // build the query batch outside the timed window so qps
-            // measures serving, not submission-side vector clones
-            let batch: Vec<Query> = vec![Query::Matvec(x.clone()); cfg.queries];
-            let server = QueryServer::start(Arc::clone(&sketch), readers);
+            // one client per reader count: its worker pool is the
+            // concurrency under test
+            let mut client =
+                LocalClient::new(SketchStore::open(store_dir)?).with_workers(readers);
+            client.open(&key)?;
+            // build the query batch outside the timed window and hand it
+            // over by value, so qps measures serving, not
+            // submission-side vector clones
+            let batch = vec![QueryRequest::Matvec(x.clone()); cfg.queries];
             let t0 = Instant::now();
-            let pending = server.submit_batch(batch);
-            for p in pending {
-                p.wait()?;
+            for answer in client.query_batch(&key, batch)? {
+                answer?;
             }
             let wall = t0.elapsed().as_secs_f64();
-            let stats = server.shutdown();
-            debug_assert_eq!(stats.total(), cfg.queries as u64);
+            client.close()?;
             let qps = if wall > 0.0 { cfg.queries as f64 / wall } else { 0.0 };
             points.push(ServePoint {
                 dataset: id.name().to_string(),
@@ -137,6 +181,8 @@ pub fn run_serve_bench(
                 cache_hit,
             });
         }
+
+        batch_points.extend(measure_batches(store_dir, &key, id.name(), s, cfg, &x)?);
     }
 
     let mut t = Table::new(
@@ -155,8 +201,82 @@ pub fn run_serve_bench(
         ]);
     }
     t.write(dir)?;
+    serving_batch_table(&batch_points).write(dir)?;
     spill_depth_table("serving_spill_depth", &build_metrics).write(dir)?;
     Ok(points)
+}
+
+/// Time `MatvecBatch(k)` against k independent matvecs through one
+/// single-worker client: same compute resources, so the ratio isolates
+/// what the one-pass SpMM saves in repeated payload decodes.
+fn measure_batches(
+    store_dir: &Path,
+    key: &StoreKey,
+    dataset: &str,
+    s: u64,
+    cfg: &ServeConfig,
+    x: &[f64],
+) -> Result<Vec<BatchPoint>> {
+    let mut out = Vec::new();
+    let mut client = LocalClient::new(SketchStore::open(store_dir)?).with_workers(1);
+    client.open(key)?;
+    let reps = (cfg.queries / 8).clamp(2, 16);
+    for &k in &cfg.batch_ks {
+        if k == 0 {
+            continue;
+        }
+        // all requests are pre-built outside the timed windows and
+        // submitted by value, so both sides time pure serving; the
+        // single worker drains each batch sequentially
+        let xs: Vec<Vec<f64>> = vec![x.to_vec(); k];
+        let batched = vec![QueryRequest::MatvecBatch(xs); reps];
+        let independent = vec![QueryRequest::Matvec(x.to_vec()); k * reps];
+
+        let t0 = Instant::now();
+        for answer in client.query_batch(key, batched)? {
+            answer?;
+        }
+        let batch_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+
+        let t0 = Instant::now();
+        for answer in client.query_batch(key, independent)? {
+            answer?;
+        }
+        let indep_us = t0.elapsed().as_secs_f64() * 1e6 / reps as f64;
+
+        out.push(BatchPoint {
+            dataset: dataset.to_string(),
+            method: key.method.clone(),
+            s,
+            k,
+            reps,
+            batch_us,
+            indep_us,
+        });
+    }
+    client.close()?;
+    Ok(out)
+}
+
+/// Render batch points as the `serving_batch` report table.
+pub fn serving_batch_table(points: &[BatchPoint]) -> Table {
+    let mut t = Table::new(
+        "serving_batch",
+        &["dataset", "method", "s", "k", "reps", "batch_us", "indep_us", "speedup"],
+    );
+    for p in points {
+        t.push(vec![
+            p.dataset.clone(),
+            p.method.clone(),
+            p.s.to_string(),
+            p.k.to_string(),
+            p.reps.to_string(),
+            fixed(p.batch_us, 1),
+            fixed(p.indep_us, 1),
+            fixed(p.speedup(), 2),
+        ]);
+    }
+    t
 }
 
 #[cfg(test)]
@@ -173,6 +293,7 @@ mod tests {
         let cfg = ServeConfig {
             readers: vec![1, 2],
             queries: 8,
+            batch_ks: vec![1, 4],
             ..Default::default()
         };
         let datasets = [DatasetId::Synthetic];
@@ -181,6 +302,7 @@ mod tests {
         assert!(pts.iter().all(|p| p.qps > 0.0));
         assert!(pts.iter().all(|p| !p.cache_hit));
         assert!(out.join("serving.csv").exists());
+        assert!(out.join("serving_batch.csv").exists());
         assert!(out.join("serving_spill_depth.csv").exists());
 
         // second run must come from the store

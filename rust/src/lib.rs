@@ -21,7 +21,10 @@
 //!   reservoir/binomial/hypergeometric samplers ([`samplers`]), compressed
 //!   sketch codec ([`sketch`]), the serving layer ([`serve`]: persistent
 //!   sketch store + compressed-path query engine + multi-threaded
-//!   [`serve::QueryServer`]), the network front ([`net`]: zero-dependency
+//!   [`serve::QueryServer`]), the unified client API ([`api`]: the
+//!   [`api::SketchClient`] trait over typed requests/responses, with
+//!   in-process and remote backends answering byte-identically), the
+//!   network front ([`net`]: zero-dependency
 //!   wire protocol, TCP server, remote client, load generator),
 //!   sparse/dense substrates ([`sparse`],
 //!   [`linalg`]), dataset generators ([`datasets`]), evaluation harness
@@ -52,6 +55,7 @@
 //! println!("kept {} of {} entries", b.nnz(), a.nnz());
 //! ```
 
+pub mod api;
 pub mod config;
 pub mod coordinator;
 pub mod datasets;
@@ -75,12 +79,15 @@ pub use error::{Error, Result};
 
 /// Convenience re-exports for downstream users.
 pub mod prelude {
+    pub use crate::api::{
+        LocalClient, QueryRequest, QueryResponse, RemoteClient, SketchClient, SketchInfo,
+    };
     pub use crate::coordinator::{sketch_matrix, sketch_stream, Pipeline, PipelineConfig};
     pub use crate::distributions::{Distribution, DistributionKind};
     pub use crate::engine::{build_sketcher, sketch_entry_stream, SketchMode, Sketcher};
     pub use crate::error::{Error, Result};
     pub use crate::metrics::MatrixMetrics;
-    pub use crate::net::{NetServer, NetServerConfig, RemoteSketchClient};
+    pub use crate::net::{NetServer, NetServerConfig};
     pub use crate::serve::{QueryServer, ServableSketch, SketchStore, StoreKey};
     pub use crate::sketch::{Sketch, SketchPlan};
     pub use crate::sparse::{Coo, Csr, Dense, Entry};

@@ -10,30 +10,41 @@
 //!                       [--mode offline|streaming|spilling|sharded]
 //!                       [--store DIR] [--force] [--sketch-out FILE]
 //! matsketch query       --dataset NAME --s N [--method NAME] [--store DIR]
-//!                       --op matvec|matvec-t|row|col|top-k [--k K] [--index I]
+//!                       [--addr HOST:PORT]
+//!                       --op matvec|matvec-t|matvec-batch|row|col|top-k
+//!                       [--k K] [--index I] [--x-seed N] [--batch-k K]
 //! matsketch serve-bench [--small] [--seed N] [--out DIR] [--store DIR]
-//!                       [--readers 1,2,4] [--queries Q] [--datasets a,b]
+//!                       [--readers 1,2,4] [--queries Q] [--batch-ks 1,4,16]
+//!                       [--datasets a,b]
 //! matsketch serve       --addr HOST:PORT [--store DIR] [--workers W]
 //!                       [--max-conns N] [--timeout-secs S]
 //!                       [--shutdown-after-secs S]
 //! matsketch net-bench   [--addr HOST:PORT] [--clients 1,2,8] [--queries Q]
 //!                       [--duration-secs S] [--ops matvec,row,top-k]
-//!                       [--datasets a,b] [--store DIR] [--out DIR]
+//!                       [--batch-k K] [--datasets a,b] [--store DIR]
+//!                       [--out DIR]
 //! matsketch gen         --dataset NAME [--seed N] --out a.bin
 //! ```
+//!
+//! Every query path — local store or remote server — goes through one
+//! surface: the `SketchClient` trait (`matsketch::api`). `--addr` flips
+//! the backend; nothing else about the invocation changes.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
+use matsketch::api::{
+    LocalClient, QueryRequest, QueryResponse, RemoteClient, SketchClient, SketchInfo,
+};
 use matsketch::coordinator::PipelineConfig;
 use matsketch::datasets::DatasetId;
 use matsketch::distributions::{DistributionKind, MatrixStats};
 use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::{Error, Result};
 use matsketch::eval::{run_compression, run_figure1, run_tables, run_theory, Figure1Config};
-use matsketch::net::{LoadOp, NetServer, NetServerConfig, RemoteSketchClient};
+use matsketch::net::{LoadOp, NetServer, NetServerConfig};
 use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
-use matsketch::serve::{Fingerprinter, Query, QueryOutcome, ServableSketch, SketchStore, StoreKey};
+use matsketch::serve::{Fingerprinter, SketchStore, StoreKey};
 use matsketch::sketch::{encode_sketch, SketchPlan};
 use matsketch::sparse::io as sparse_io;
 use matsketch::stream::FileStream;
@@ -220,7 +231,6 @@ fn real_main() -> Result<()> {
             }
         }
         "query" => {
-            let store = SketchStore::open(args.get_or("store", "sketch-store"))?;
             let dataset = args
                 .get("dataset")
                 .ok_or_else(|| Error::invalid("query requires --dataset <label>"))?;
@@ -229,22 +239,30 @@ fn real_main() -> Result<()> {
                 .ok_or_else(|| Error::invalid("query requires --s <budget>"))?;
             let kind = parse_method(args.get_or("method", "bernstein"))?;
             let key = StoreKey::new(dataset, &kind.name(), s, seed);
-            let stored = store.get(&key)?.ok_or_else(|| {
-                Error::invalid(format!(
-                    "no stored sketch {} under {} — run `matsketch sketch` first",
-                    key.file_name(),
-                    store.dir().display()
-                ))
-            })?;
-            let sketch = ServableSketch::from_stored(stored)?;
-            let (m, n) = sketch.shape();
-            info!("serving {}x{} sketch, s={} ({})", m, n, key.s, sketch.method);
-            run_query(&args, &sketch)?;
+            // one surface, two backends: --addr targets a live
+            // `matsketch serve`, otherwise the local store answers
+            let mut client: Box<dyn SketchClient> = match args.get("addr") {
+                Some(addr) => Box::new(RemoteClient::connect(addr)?),
+                None => Box::new(LocalClient::open_dir(args.get_or("store", "sketch-store"))?),
+            };
+            let info = client.open(&key)?;
+            info!(
+                "serving {}x{} sketch, s={} ({}, {})",
+                info.m,
+                info.n,
+                key.s,
+                info.method,
+                if args.get("addr").is_some() { "remote" } else { "local" }
+            );
+            let result = run_query(&args, client.as_mut(), &key, &info);
+            client.close()?;
+            result?;
         }
         "serve-bench" => {
             let cfg = matsketch::eval::ServeConfig {
                 readers: parse_usize_list(args.get_or("readers", "1,2,4"))?,
                 queries: args.get_parse_or("queries", 64)?,
+                batch_ks: parse_usize_list(args.get_or("batch-ks", "1,4,16"))?,
                 budget_frac: args.get_parse_or("budget-frac", 10)?,
                 seed,
                 small,
@@ -258,7 +276,11 @@ fn real_main() -> Result<()> {
                     p.dataset, p.readers, p.qps
                 );
             }
-            info!("serve-bench: {} points -> {}/serving.*", pts.len(), out.display());
+            info!(
+                "serve-bench: {} points -> {}/serving.* + serving_batch.*",
+                pts.len(),
+                out.display()
+            );
         }
         "serve" => {
             let addr = args.get_or("addr", "127.0.0.1:7300");
@@ -286,7 +308,7 @@ fn real_main() -> Result<()> {
                 // the sentinel after the deadline
                 std::thread::spawn(move || {
                     std::thread::sleep(std::time::Duration::from_secs_f64(secs.max(0.0)));
-                    if let Ok(mut c) = RemoteSketchClient::connect(&local.to_string()) {
+                    if let Ok(mut c) = RemoteClient::connect(&local.to_string()) {
                         let _ = c.shutdown_server();
                     }
                 });
@@ -299,7 +321,7 @@ fn real_main() -> Result<()> {
         }
         "net-shutdown" => {
             let addr = args.get_or("addr", "127.0.0.1:7300");
-            let mut client = RemoteSketchClient::connect(addr)?;
+            let mut client = RemoteClient::connect(addr)?;
             client.shutdown_server()?;
             info!("server at {addr} acknowledged shutdown");
         }
@@ -310,6 +332,7 @@ fn real_main() -> Result<()> {
                 duration_secs: args.get_parse::<f64>("duration-secs")?,
                 ops: parse_ops(args.get_or("ops", "matvec,row,top-k"))?,
                 top_k: args.get_parse_or("k", 10)?,
+                batch_k: args.get_parse_or("batch-k", 4)?,
                 budget_frac: args.get_parse_or("budget-frac", 10)?,
                 seed,
                 small,
@@ -396,45 +419,84 @@ fn parse_usize_list(spec: &str) -> Result<Vec<usize>> {
     Ok(out)
 }
 
-/// Execute one `query` subcommand op against a loaded sketch and print
-/// the answer.
-fn run_query(args: &Args, sketch: &ServableSketch) -> Result<()> {
-    let (m, n) = sketch.shape();
-    let op = args.get_or("op", "top-k");
-    let query = match op {
-        "matvec" | "matvec-t" => {
-            // deterministic pseudo-random probe vector (reproducible runs)
-            let x_seed: u64 = args.get_parse_or("x-seed", 1)?;
-            let len = if op == "matvec" { n } else { m };
-            let mut rng = Rng::new(x_seed);
-            let x: Vec<f64> = (0..len).map(|_| rng.normal()).collect();
-            if op == "matvec" {
-                Query::Matvec(x)
-            } else {
-                Query::MatvecT(x)
-            }
-        }
-        "row" => Query::Row(args.get_parse_or::<u32>("index", 0)?),
-        "col" => Query::Col(args.get_parse_or::<u32>("index", 0)?),
-        "top-k" | "topk" => Query::TopK(args.get_parse_or("k", 10)?),
+/// Build the [`QueryRequest`] for one `query` subcommand invocation.
+///
+/// Parsing is strict: an option the chosen `--op` does not consume is an
+/// error, not silently ignored, and a malformed value errors instead of
+/// falling back to a default — so `--op row --idnex 3` or
+/// `--op top-k --index 3` can never silently query row 0 / the default k.
+fn parse_query_request(args: &Args, op: &str, m: usize, n: usize) -> Result<QueryRequest> {
+    let used: &[&str] = match op {
+        "matvec" | "matvec-t" => &["x-seed"],
+        "matvec-batch" => &["x-seed", "batch-k"],
+        "row" | "col" => &["index"],
+        "top-k" | "topk" => &["k"],
         other => return Err(Error::invalid(format!("unknown query op {other}"))),
     };
-    match sketch.answer(&query)? {
-        QueryOutcome::Vector(y) => {
-            let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
-            let mut heavy: Vec<(usize, f64)> = y.iter().copied().enumerate().collect();
-            heavy.sort_by(|a, b| {
-                b.1.abs()
-                    .partial_cmp(&a.1.abs())
-                    .unwrap_or(std::cmp::Ordering::Equal)
-            });
-            heavy.truncate(5);
-            println!("len={} l2_norm={norm:.6e}", y.len());
-            for (i, v) in heavy {
-                println!("  y[{i}] = {v:.6e}");
+    for opt in ["index", "k", "x-seed", "batch-k"] {
+        if args.get(opt).is_some() && !used.contains(&opt) {
+            return Err(Error::invalid(format!(
+                "--{opt} is not used by --op {op} (it takes --{})",
+                used.join(", --")
+            )));
+        }
+    }
+    Ok(match op {
+        "matvec" | "matvec-t" | "matvec-batch" => {
+            // deterministic pseudo-random probe vector (reproducible runs)
+            let x_seed: u64 = args.get_parse_or("x-seed", 1)?;
+            let len = if op == "matvec-t" { m } else { n };
+            let mut rng = Rng::new(x_seed);
+            match op {
+                "matvec" => QueryRequest::Matvec((0..len).map(|_| rng.normal()).collect()),
+                "matvec-t" => QueryRequest::MatvecT((0..len).map(|_| rng.normal()).collect()),
+                _ => {
+                    let k: usize = args.get_parse_or("batch-k", 4)?;
+                    if k == 0 {
+                        return Err(Error::invalid("--batch-k must be ≥ 1"));
+                    }
+                    QueryRequest::MatvecBatch(
+                        (0..k)
+                            .map(|_| (0..len).map(|_| rng.normal()).collect())
+                            .collect(),
+                    )
+                }
             }
         }
-        QueryOutcome::Entries(es) => {
+        "row" | "col" => {
+            let index: u32 = args.get_parse("index")?.ok_or_else(|| {
+                Error::invalid(format!("--op {op} requires an explicit --index <I>"))
+            })?;
+            if op == "row" {
+                QueryRequest::Row(index)
+            } else {
+                QueryRequest::Col(index)
+            }
+        }
+        _ => QueryRequest::TopK(args.get_parse_or("k", 10)?),
+    })
+}
+
+/// Execute one `query` subcommand op through the client API (the sketch
+/// is already opened; `info` carries its shape) and print the answer.
+fn run_query(
+    args: &Args,
+    client: &mut dyn SketchClient,
+    key: &StoreKey,
+    info: &SketchInfo,
+) -> Result<()> {
+    let (m, n) = (info.m as usize, info.n as usize);
+    let op = args.get_or("op", "top-k");
+    let request = parse_query_request(args, op, m, n)?;
+    match client.query(key, &request)? {
+        QueryResponse::Vector(y) => print_vector(&y),
+        QueryResponse::Vectors(ys) => {
+            println!("{} result vectors", ys.len());
+            for y in &ys {
+                print_vector(y);
+            }
+        }
+        QueryResponse::Entries(es) => {
             println!("{} entries", es.len());
             for e in es.iter().take(20) {
                 println!(
@@ -448,6 +510,70 @@ fn run_query(args: &Args, sketch: &ServableSketch) -> Result<()> {
         }
     }
     Ok(())
+}
+
+/// Print a dense result vector: its l2 norm plus the 5 heaviest slots.
+fn print_vector(y: &[f64]) {
+    let norm = y.iter().map(|v| v * v).sum::<f64>().sqrt();
+    let mut heavy: Vec<(usize, f64)> = y.iter().copied().enumerate().collect();
+    heavy.sort_by(|a, b| {
+        b.1.abs()
+            .partial_cmp(&a.1.abs())
+            .unwrap_or(std::cmp::Ordering::Equal)
+    });
+    heavy.truncate(5);
+    println!("len={} l2_norm={norm:.6e}", y.len());
+    for (i, v) in heavy {
+        println!("  y[{i}] = {v:.6e}");
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn q_args(raw: &[&str]) -> Args {
+        Args::parse(raw.iter().map(|s| s.to_string()), &[]).unwrap()
+    }
+
+    #[test]
+    fn query_parsing_is_strict() {
+        // row/col demand an explicit index — no silent row 0
+        let err = parse_query_request(&q_args(&["--op", "row"]), "row", 10, 20).unwrap_err();
+        assert!(err.to_string().contains("--index"), "{err}");
+        match parse_query_request(&q_args(&["--op", "row", "--index", "3"]), "row", 10, 20) {
+            Ok(QueryRequest::Row(3)) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // malformed values error instead of falling back to defaults
+        assert!(
+            parse_query_request(&q_args(&["--index", "zer0"]), "row", 10, 20).is_err()
+        );
+        assert!(parse_query_request(&q_args(&["--k", "ten"]), "top-k", 10, 20).is_err());
+
+        // options the op does not consume are rejected, not ignored
+        let err =
+            parse_query_request(&q_args(&["--index", "3"]), "top-k", 10, 20).unwrap_err();
+        assert!(err.to_string().contains("not used"), "{err}");
+        assert!(parse_query_request(&q_args(&["--k", "5"]), "matvec", 10, 20).is_err());
+
+        // happy paths
+        match parse_query_request(&q_args(&["--k", "5"]), "top-k", 10, 20) {
+            Ok(QueryRequest::TopK(5)) => {}
+            other => panic!("unexpected {other:?}"),
+        }
+        match parse_query_request(&q_args(&["--batch-k", "3"]), "matvec-batch", 10, 20) {
+            Ok(QueryRequest::MatvecBatch(xs)) => {
+                assert_eq!(xs.len(), 3);
+                assert!(xs.iter().all(|x| x.len() == 20));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+        assert!(parse_query_request(&q_args(&["--batch-k", "0"]), "matvec-batch", 10, 20)
+            .is_err());
+        assert!(parse_query_request(&q_args(&[]), "transpose", 10, 20).is_err());
+    }
 }
 
 fn pick_engine(name: Option<&str>) -> Box<dyn DenseEngine> {
@@ -503,12 +629,12 @@ COMMANDS:
   compress     E3: sketch codec bits/sample + disc-size ratios
   theory       E6: eps5 near-optimality checks
   ablate       E8: row-norm-noise / delta / worker-count ablations
-  serve-bench  E9: concurrent query-serving throughput from the store
+  serve-bench  E9: concurrent + batched query-serving throughput (local client)
   net-bench    E11: remote serving throughput + latency percentiles over TCP
   gen          generate a dataset to a binary triplet file
   sketch       stream-sketch a triplet file into the sketch store
-  query        answer a matvec / slice / top-k query from a stored sketch
-  serve        serve the sketch store over TCP (wire protocol v1)
+  query        answer a matvec / slice / top-k query (local store or --addr)
+  serve        serve the sketch store over TCP (wire protocol v2, v1 accepted)
   net-shutdown send the graceful-shutdown sentinel to a running server
 
 COMMON OPTIONS:
@@ -527,11 +653,17 @@ SKETCH OPTIONS:
   (dataset, method, s, seed); a re-run with the same key is a cache hit.
 
 QUERY OPTIONS:
-  --dataset LABEL --s N [--method NAME]
-  --op matvec|matvec-t|row|col|top-k [--k K] [--index I] [--x-seed N]
+  --dataset LABEL --s N [--method NAME] [--addr HOST:PORT]
+  --op matvec|matvec-t|matvec-batch|row|col|top-k
+  [--k K] [--index I] [--x-seed N] [--batch-k K]
+  Goes through the unified SketchClient API: without --addr the local
+  store answers, with --addr a remote server does — same output either
+  way. row/col require an explicit --index; options the op does not use
+  are rejected.
 
 SERVE-BENCH OPTIONS:
-  [--readers 1,2,4] [--queries Q] [--budget-frac F] [--datasets a,b]
+  [--readers 1,2,4] [--queries Q] [--batch-ks 1,4,16] [--budget-frac F]
+  [--datasets a,b]
 
 SERVE OPTIONS:
   --addr HOST:PORT [--workers W] [--max-conns N] [--timeout-secs S]
@@ -541,8 +673,8 @@ SERVE OPTIONS:
 
 NET-BENCH OPTIONS:
   [--addr HOST:PORT] [--clients 1,2,8] [--queries Q] [--duration-secs S]
-  [--ops matvec,matvec-t,row,col,top-k] [--k K] [--workers W]
-  [--budget-frac F] [--datasets a,b]
+  [--ops matvec,matvec-t,matvec-batch,row,col,top-k] [--k K] [--batch-k K]
+  [--workers W] [--budget-frac F] [--datasets a,b]
   Without --addr the server is self-hosted on an ephemeral loopback port
   over --store; results land in reports/net_serving.*
 "

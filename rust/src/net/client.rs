@@ -2,7 +2,7 @@
 //!
 //! [`RemoteSketchClient`] speaks the [`super::wire`] protocol over one
 //! TCP connection: open sketches by [`StoreKey`], run every
-//! [`Query`] kind, and **pipeline** batches (all requests written before
+//! [`QueryRequest`] kind, and **pipeline** batches (all requests written before
 //! any response is read — the server answers in order, so one round trip
 //! covers the whole batch). On a broken connection the client redials
 //! once and transparently re-opens its sketch handles, which are
@@ -13,10 +13,11 @@ use std::io::{self, BufReader, BufWriter};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
 use std::time::Duration;
 
+use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::error::{Error, Result};
-use crate::serve::{Query, QueryOutcome, StoreKey};
+use crate::serve::StoreKey;
 
-use super::wire::{self, Request, Response, SketchInfo};
+use super::wire::{self, Request, Response};
 
 /// Default connect / read / write timeout.
 const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
@@ -100,6 +101,13 @@ impl RemoteSketchClient {
     fn reset(&mut self) {
         self.conn = None;
         self.opened.clear();
+    }
+
+    /// Hang up now. The client stays usable — any later call redials and
+    /// re-opens handles lazily. This is what
+    /// [`crate::api::SketchClient::close`] maps to.
+    pub fn disconnect(&mut self) {
+        self.reset();
     }
 
     fn fresh_id(&mut self) -> u64 {
@@ -232,7 +240,7 @@ impl RemoteSketchClient {
     }
 
     /// Execute one query against the sketch stored under `key`.
-    pub fn query(&mut self, key: &StoreKey, query: &Query) -> Result<QueryOutcome> {
+    pub fn query(&mut self, key: &StoreKey, query: &QueryRequest) -> Result<QueryResponse> {
         match self.query_once(key, query) {
             Err(Error::Io(_)) => {
                 // redial once; handle_for re-opens on the new connection
@@ -243,7 +251,7 @@ impl RemoteSketchClient {
         }
     }
 
-    fn query_once(&mut self, key: &StoreKey, query: &Query) -> Result<QueryOutcome> {
+    fn query_once(&mut self, key: &StoreKey, query: &QueryRequest) -> Result<QueryResponse> {
         let handle = self.handle_for(key)?;
         let req = Request::Query { handle, query: query.clone() };
         match self.call(&req)? {
@@ -255,7 +263,7 @@ impl RemoteSketchClient {
     /// Pipeline a batch: requests are written ahead of the responses
     /// being read, so the whole batch costs ~one round trip instead of
     /// `queries.len()`. In-flight requests are capped at
-    /// [`PIPELINE_WINDOW`] — the client drains a response before sending
+    /// `PIPELINE_WINDOW` (8) — the client drains a response before sending
     /// past the window, so outstanding data stays bounded and a batch of
     /// large answers cannot mutually wedge both ends on full socket
     /// buffers. Per-query failures come back as `Err` entries without
@@ -263,8 +271,8 @@ impl RemoteSketchClient {
     pub fn pipeline(
         &mut self,
         key: &StoreKey,
-        queries: &[Query],
-    ) -> Result<Vec<Result<QueryOutcome>>> {
+        queries: Vec<QueryRequest>,
+    ) -> Result<Vec<Result<QueryResponse>>> {
         let handle = self.handle_for(key)?;
         let mut ids = VecDeque::with_capacity(PIPELINE_WINDOW);
         let mut out = Vec::with_capacity(queries.len());
@@ -278,7 +286,7 @@ impl RemoteSketchClient {
                 let resp = self.recv(id)?;
                 out.push(collect(resp));
             }
-            let req = Request::Query { handle, query: q.clone() };
+            let req = Request::Query { handle, query: q };
             ids.push_back(self.send(&req)?);
         }
         for id in ids {

@@ -1,22 +1,26 @@
-//! Closed-loop load generation against a live wire-protocol server.
+//! Closed-loop load generation against any [`crate::api::SketchClient`]
+//! backend.
 //!
-//! `N` client threads each hold one connection, open the target sketch,
-//! and issue queries back-to-back (closed loop: the next query starts
-//! when the previous answer lands). Per-query wall latencies are
-//! recorded and aggregated into throughput plus a latency histogram
-//! (p50/p95/p99 via [`crate::util::stats::quantiles`]) — the numbers
+//! `N` client threads each hold one backend client (a fresh TCP
+//! connection for remote runs, a [`crate::api::LocalClient`] for
+//! in-process baselines), open the target sketch, and issue queries
+//! back-to-back (closed loop: the next query starts when the previous
+//! answer lands). Per-query wall latencies are recorded and aggregated
+//! into throughput plus a latency histogram (p50/p95/p99 via
+//! [`crate::util::stats::quantiles`]) — the numbers
 //! `matsketch net-bench` reports into the eval tables next to the
-//! in-process `serving.*` ones.
+//! in-process `serving.*` ones. Because the harness only sees
+//! `dyn SketchClient`, the same loop measures either backend and the
+//! two reports are directly comparable.
 
 use std::time::{Duration, Instant};
 
+use crate::api::{BoxedSketchClient, QueryRequest, RemoteClient};
 use crate::error::{Error, Result};
-use crate::serve::{Query, StoreKey};
+use crate::serve::StoreKey;
 use crate::util::rng::Rng;
 use crate::util::stats::quantiles;
 use crate::warn_log;
-
-use super::client::RemoteSketchClient;
 
 /// Which operation mix a load run issues.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -25,6 +29,8 @@ pub enum LoadOp {
     Matvec,
     /// `Bᵀ·x`.
     MatvecT,
+    /// Batched `B·X` (`batch_k` right-hand sides in one request).
+    MatvecBatch,
     /// Random row slice.
     Row,
     /// Random column slice.
@@ -34,11 +40,13 @@ pub enum LoadOp {
 }
 
 impl LoadOp {
-    /// Parse a CLI token (`matvec`, `matvec-t`, `row`, `col`, `top-k`).
+    /// Parse a CLI token (`matvec`, `matvec-t`, `matvec-batch`, `row`,
+    /// `col`, `top-k`).
     pub fn parse(tok: &str) -> Option<LoadOp> {
         match tok.trim().to_ascii_lowercase().as_str() {
             "matvec" => Some(LoadOp::Matvec),
             "matvec-t" | "matvect" => Some(LoadOp::MatvecT),
+            "matvec-batch" | "matvecbatch" | "batch" => Some(LoadOp::MatvecBatch),
             "row" => Some(LoadOp::Row),
             "col" => Some(LoadOp::Col),
             "top-k" | "topk" => Some(LoadOp::TopK),
@@ -51,6 +59,7 @@ impl LoadOp {
         match self {
             LoadOp::Matvec => "matvec",
             LoadOp::MatvecT => "matvec-t",
+            LoadOp::MatvecBatch => "matvec-batch",
             LoadOp::Row => "row",
             LoadOp::Col => "col",
             LoadOp::TopK => "top-k",
@@ -71,6 +80,8 @@ pub struct LoadGenConfig {
     pub ops: Vec<LoadOp>,
     /// `k` for [`LoadOp::TopK`] queries.
     pub top_k: usize,
+    /// Right-hand sides per [`LoadOp::MatvecBatch`] request.
+    pub batch_k: usize,
     /// Base RNG seed (each client derives its own stream).
     pub seed: u64,
 }
@@ -83,6 +94,7 @@ impl Default for LoadGenConfig {
             duration: None,
             ops: vec![LoadOp::Matvec, LoadOp::Row, LoadOp::TopK],
             top_k: 10,
+            batch_k: 4,
             seed: 0,
         }
     }
@@ -117,45 +129,64 @@ pub struct LoadReport {
 /// spinning on a dead server.
 const MAX_CONSECUTIVE_ERRORS: u32 = 10;
 
-/// Run one closed-loop measurement of `key` served at `addr`.
+/// Run one closed-loop measurement of `key` served at the wire address
+/// `addr` (each load client dials its own connection).
 pub fn run_load(addr: &str, key: &StoreKey, cfg: &LoadGenConfig) -> Result<LoadReport> {
+    run_load_with(
+        |_| Ok(Box::new(RemoteClient::connect(addr)?) as BoxedSketchClient),
+        key,
+        cfg,
+    )
+}
+
+/// Run one closed-loop measurement of `key` against whatever backend
+/// `make_client` produces — one client per load thread (`RemoteClient`
+/// for a live server, [`crate::api::LocalClient`] for the in-process
+/// baseline the remote numbers are compared to).
+pub fn run_load_with<F>(make_client: F, key: &StoreKey, cfg: &LoadGenConfig) -> Result<LoadReport>
+where
+    F: Fn(usize) -> Result<BoxedSketchClient> + Sync,
+{
     if cfg.clients == 0 || cfg.ops.is_empty() {
         return Err(Error::invalid("load run needs ≥ 1 client and a non-empty op mix"));
     }
     let t0 = Instant::now();
     let deadline = cfg.duration.map(|d| t0 + d);
-    let mut workers = Vec::with_capacity(cfg.clients);
-    for c in 0..cfg.clients {
-        let addr = addr.to_string();
-        let key = key.clone();
-        let cfg = cfg.clone();
-        workers.push(std::thread::spawn(move || -> Result<(Vec<f64>, u64)> {
-            client_loop(&addr, &key, &cfg, c as u64, deadline)
-        }));
-    }
     let mut latencies_us: Vec<f64> = Vec::new();
     let mut errors = 0u64;
     let mut first_err: Option<Error> = None;
-    for w in workers {
-        match w.join() {
-            Ok(Ok((lats, errs))) => {
-                latencies_us.extend(lats);
-                errors += errs;
-            }
-            Ok(Err(e)) => {
-                errors += 1;
-                if first_err.is_none() {
-                    first_err = Some(e);
+
+    std::thread::scope(|scope| {
+        let mut workers = Vec::with_capacity(cfg.clients);
+        for c in 0..cfg.clients {
+            let make_client = &make_client;
+            workers.push(scope.spawn(move || -> Result<(Vec<f64>, u64)> {
+                let mut client = make_client(c)?;
+                client_loop(client.as_mut(), key, cfg, c as u64, deadline)
+            }));
+        }
+        for w in workers {
+            match w.join() {
+                Ok(Ok((lats, errs))) => {
+                    latencies_us.extend(lats);
+                    errors += errs;
                 }
-            }
-            Err(_) => {
-                errors += 1;
-                if first_err.is_none() {
-                    first_err = Some(Error::Pipeline("load client panicked".into()));
+                Ok(Err(e)) => {
+                    errors += 1;
+                    if first_err.is_none() {
+                        first_err = Some(e);
+                    }
+                }
+                Err(_) => {
+                    errors += 1;
+                    if first_err.is_none() {
+                        first_err = Some(Error::Pipeline("load client panicked".into()));
+                    }
                 }
             }
         }
-    }
+    });
+
     let wall_secs = t0.elapsed().as_secs_f64();
     if latencies_us.is_empty() {
         // nothing succeeded: surface the root cause instead of a report
@@ -182,16 +213,15 @@ pub fn run_load(addr: &str, key: &StoreKey, cfg: &LoadGenConfig) -> Result<LoadR
     })
 }
 
-/// One client's closed loop. Returns (per-query latencies µs, error
-/// count).
+/// One client's closed loop over the trait surface. Returns (per-query
+/// latencies µs, error count).
 fn client_loop(
-    addr: &str,
+    client: &mut dyn crate::api::SketchClient,
     key: &StoreKey,
     cfg: &LoadGenConfig,
     client_idx: u64,
     deadline: Option<Instant>,
 ) -> Result<(Vec<f64>, u64)> {
-    let mut client = RemoteSketchClient::connect(addr)?;
     let info = client.open(key)?;
     let (m, n) = (info.m as usize, info.n as usize);
     let mut rng = Rng::new(cfg.seed ^ (0x10AD_0000 + client_idx));
@@ -199,6 +229,9 @@ fn client_loop(
     // client-side vector generation
     let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
     let xt: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    let xs: Vec<Vec<f64>> = (0..cfg.batch_k.max(1))
+        .map(|_| (0..n).map(|_| rng.normal()).collect())
+        .collect();
 
     let mut latencies = Vec::new();
     let mut errors = 0u64;
@@ -218,11 +251,12 @@ fn client_loop(
             }
         }
         let query = match cfg.ops[i % cfg.ops.len()] {
-            LoadOp::Matvec => Query::Matvec(x.clone()),
-            LoadOp::MatvecT => Query::MatvecT(xt.clone()),
-            LoadOp::Row => Query::Row(rng.usize_below(m.max(1)) as u32),
-            LoadOp::Col => Query::Col(rng.usize_below(n.max(1)) as u32),
-            LoadOp::TopK => Query::TopK(cfg.top_k),
+            LoadOp::Matvec => QueryRequest::Matvec(x.clone()),
+            LoadOp::MatvecT => QueryRequest::MatvecT(xt.clone()),
+            LoadOp::MatvecBatch => QueryRequest::MatvecBatch(xs.clone()),
+            LoadOp::Row => QueryRequest::Row(rng.usize_below(m.max(1)) as u32),
+            LoadOp::Col => QueryRequest::Col(rng.usize_below(n.max(1)) as u32),
+            LoadOp::TopK => QueryRequest::TopK(cfg.top_k),
         };
         let t = Instant::now();
         match client.query(key, &query) {
@@ -244,5 +278,6 @@ fn client_loop(
         }
         i += 1;
     }
+    let _ = client.close();
     Ok((latencies, errors))
 }

@@ -7,27 +7,29 @@
 //! This module adds that layer with **zero external dependencies**
 //! (std-only TCP):
 //!
-//! * [`wire`] — the versioned, length-prefixed binary protocol: one
-//!   opcode per serving operation (matvec / transpose-matvec / row / col
-//!   / top-k, plus `Ping`, `ListSketches`, `OpenSketch`, and the
-//!   `Shutdown` sentinel), with typed error responses for malformed,
-//!   truncated, oversized, or wrong-version frames.
+//! * [`wire`] — the versioned, length-prefixed binary protocol (v2): one
+//!   opcode per [`crate::api::QueryRequest`] variant (matvec /
+//!   transpose-matvec / batched matvec / row / col / top-k, plus `Ping`,
+//!   `ListSketches`, `OpenSketch`, and the `Shutdown` sentinel), with
+//!   typed error responses for malformed, truncated, oversized, or
+//!   wrong-version frames. v1 frames stay decodable.
 //! * [`server`] — [`NetServer`]: a multi-threaded `TcpListener` acceptor
 //!   owning a [`crate::serve::SketchStore`], lazily opening sketches
 //!   into shared [`crate::serve::ServableSketch`]es and dispatching onto
 //!   the in-process [`crate::serve::QueryServer`] worker pools;
 //!   connection limit, read/write timeouts, graceful shutdown.
-//! * [`client`] — [`RemoteSketchClient`]: blocking, pipelining,
-//!   reconnecting; used by the CLI, the load generator, and the
-//!   loopback byte-equality tests.
-//! * [`loadgen`] — closed-loop multi-client load generation reporting
-//!   throughput + latency percentiles (`matsketch net-bench`, eval
-//!   driver in [`crate::eval::netbench`]).
+//! * [`client`] — [`RemoteSketchClient`]: the blocking, pipelining,
+//!   reconnecting transport behind [`crate::api::RemoteClient`]. Callers
+//!   outside this module and [`crate::api`] go through the
+//!   [`crate::api::SketchClient`] trait, not this type.
+//! * [`loadgen`] — closed-loop multi-client load generation over
+//!   `dyn SketchClient`, reporting throughput + latency percentiles
+//!   (`matsketch net-bench`, eval driver in `eval::netbench`).
 //!
 //! The wire layer adds no second compute path: every remote answer is
 //! produced by the same [`crate::serve::ServableSketch::answer`] as the
-//! in-process one and is pinned byte-for-byte equal to it in
-//! `tests/integration_net.rs`.
+//! in-process one, and the backend-equivalence suite
+//! (`rust/tests/integration_api.rs`) pins the two byte-for-byte equal.
 
 pub mod client;
 pub mod loadgen;
@@ -35,6 +37,6 @@ pub mod server;
 pub mod wire;
 
 pub use client::RemoteSketchClient;
-pub use loadgen::{run_load, LoadGenConfig, LoadOp, LoadReport};
+pub use loadgen::{run_load, run_load_with, LoadGenConfig, LoadOp, LoadReport};
 pub use server::{NetServer, NetServerConfig, NetServerStats};
-pub use wire::{ErrCode, Request, Response, SketchInfo, WIRE_VERSION};
+pub use wire::{ErrCode, Request, Response, WIRE_VERSION};

@@ -25,13 +25,14 @@ use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::Duration;
 
+use crate::api::SketchInfo;
 use crate::error::Result;
 use crate::serve::{QueryServer, ServableSketch, SketchStore, StoreKey};
 use crate::{debug_log, info, warn_log};
 
 use super::wire::{
-    self, encode_response, ErrCode, Request, Response, SketchInfo, WireFault,
-    FRAME_HEADER_LEN, MAX_PAYLOAD,
+    self, encode_response, encode_response_v, ErrCode, Request, Response, WireFault,
+    FRAME_HEADER_LEN, MAX_PAYLOAD, WIRE_VERSION,
 };
 
 /// Tuning knobs for [`NetServer`].
@@ -259,50 +260,68 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
             Ok(Some(h)) => h,
             Err(e) => {
                 // a half-written header (truncated-length corpus case):
-                // reply best-effort, then close — the framing is gone.
+                // reply best-effort, then close — the framing is gone
+                // (and so is the peer's version: reply at ours).
                 // Timeouts reap idle connections silently.
                 if e.kind() == io::ErrorKind::UnexpectedEof {
-                    send_fault(shared, &mut writer, 0, ErrCode::Malformed, &e.to_string());
+                    send_fault(
+                        shared,
+                        &mut writer,
+                        WIRE_VERSION,
+                        0,
+                        ErrCode::Malformed,
+                        &e.to_string(),
+                    );
                 }
                 break;
             }
         };
-        let (request_id, mut resp, close_after) = match wire::parse_frame_header(&header) {
-            Err(WireFault { code, message }) => {
-                // frame fault: typed reply, then drop the connection
-                (0, Response::Error { code, message }, true)
-            }
-            Ok(h) => {
-                let payload = match wire::read_payload(&mut reader, h.len) {
-                    Ok(p) => p,
-                    Err(e) => {
-                        // mid-payload disconnect / timeout
-                        if e.kind() == io::ErrorKind::UnexpectedEof {
-                            send_fault(
-                                shared,
-                                &mut writer,
-                                h.request_id,
-                                ErrCode::Malformed,
-                                &e.to_string(),
-                            );
+        // answers go out at the version the request arrived in, so a v1
+        // peer never receives a v2 frame; frame faults (version unknown
+        // or unacceptable) reply best-effort at the current version
+        let (version, request_id, mut resp, close_after) =
+            match wire::parse_frame_header(&header) {
+                Err(WireFault { code, message }) => {
+                    // frame fault: typed reply, then drop the connection
+                    (WIRE_VERSION, 0, Response::Error { code, message }, true)
+                }
+                Ok(h) => {
+                    let payload = match wire::read_payload(&mut reader, h.len) {
+                        Ok(p) => p,
+                        Err(e) => {
+                            // mid-payload disconnect / timeout
+                            if e.kind() == io::ErrorKind::UnexpectedEof {
+                                send_fault(
+                                    shared,
+                                    &mut writer,
+                                    h.version,
+                                    h.request_id,
+                                    ErrCode::Malformed,
+                                    &e.to_string(),
+                                );
+                            }
+                            break;
                         }
-                        break;
-                    }
-                };
-                match wire::decode_request(h.opcode, &payload) {
-                    // payload fault: typed reply, connection stays up
-                    Err(WireFault { code, message }) => {
-                        (h.request_id, Response::Error { code, message }, false)
-                    }
-                    Ok(req) => {
-                        let is_shutdown = matches!(req, Request::Shutdown);
-                        (h.request_id, answer(shared, &mut handles, req), is_shutdown)
+                    };
+                    match wire::decode_request(h.version, h.opcode, &payload) {
+                        // payload fault: typed reply, connection stays up
+                        Err(WireFault { code, message }) => {
+                            (h.version, h.request_id, Response::Error { code, message }, false)
+                        }
+                        Ok(req) => {
+                            let is_shutdown = matches!(req, Request::Shutdown);
+                            (
+                                h.version,
+                                h.request_id,
+                                answer(shared, &mut handles, req),
+                                is_shutdown,
+                            )
+                        }
                     }
                 }
-            }
-        };
+            };
         let is_shutdown_ack = matches!(resp, Response::ShuttingDown);
-        let mut frame_bytes = encode_response(request_id, &resp);
+        let mut frame_bytes = encode_response_v(version, request_id, &resp);
         if frame_bytes.len() - FRAME_HEADER_LEN > MAX_PAYLOAD as usize {
             // the answer itself busts the frame cap (giant matvec result /
             // slice): the wire contract still owes the client a typed
@@ -315,7 +334,7 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
                     frame_bytes.len() - FRAME_HEADER_LEN
                 ),
             };
-            frame_bytes = encode_response(request_id, &resp);
+            frame_bytes = encode_response_v(version, request_id, &resp);
         }
         if matches!(resp, Response::Error { .. }) {
             shared.faults.fetch_add(1, Ordering::SeqCst);
@@ -335,10 +354,14 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
 }
 
 /// Best-effort typed error reply for faults where the connection is about
-/// to close anyway; write errors are ignored (the peer may be gone).
+/// to close anyway; write errors are ignored (the peer may be gone). The
+/// reply goes out at `version` — the faulting frame's own, when its
+/// header parsed far enough to know it — so even error frames honour the
+/// "a v1 peer never receives a v2 frame" contract.
 fn send_fault(
     shared: &Shared,
     writer: &mut BufWriter<TcpStream>,
+    version: u16,
     request_id: u64,
     code: ErrCode,
     message: &str,
@@ -346,7 +369,7 @@ fn send_fault(
     shared.faults.fetch_add(1, Ordering::SeqCst);
     shared.frames.fetch_add(1, Ordering::SeqCst);
     let resp = Response::Error { code, message: message.into() };
-    let _ = wire::write_frame(writer, &encode_response(request_id, &resp));
+    let _ = wire::write_frame(writer, &encode_response_v(version, request_id, &resp));
 }
 
 /// Execute one decoded request against the shared state.

@@ -9,7 +9,7 @@
 //! | field       | size | contents                                    |
 //! |-------------|------|---------------------------------------------|
 //! | magic       | 4 B  | `"MSKW"`                                    |
-//! | version     | 2 B  | protocol version (currently 1)              |
+//! | version     | 2 B  | protocol version (currently 2; 1 accepted)  |
 //! | opcode      | 1 B  | message kind (below)                        |
 //! | reserved    | 1 B  | 0 (ignored on read)                         |
 //! | request id  | 8 B  | caller-chosen; echoed verbatim in responses |
@@ -18,13 +18,26 @@
 //!
 //! Request opcodes: `0x01` Ping, `0x02` ListSketches, `0x03` OpenSketch,
 //! `0x04` Shutdown (the graceful-stop sentinel), `0x10` Matvec,
-//! `0x11` MatvecT, `0x12` RowSlice, `0x13` ColSlice, `0x14` TopK.
-//! Response opcodes: `0x81` Pong, `0x82` SketchList, `0x83` SketchOpened,
-//! `0x84` ShuttingDown, `0x90` Vector, `0x91` Entries, `0xFF` Error.
+//! `0x11` MatvecT, `0x12` RowSlice, `0x13` ColSlice, `0x14` TopK,
+//! `0x15` MatvecBatch (v2+). Response opcodes: `0x81` Pong,
+//! `0x82` SketchList, `0x83` SketchOpened, `0x84` ShuttingDown,
+//! `0x90` Vector, `0x91` Entries, `0x92` Vectors (v2+), `0xFF` Error.
+//!
+//! ## Versioning
+//!
+//! Version 2 adds the batched matvec (`MatvecBatch` → `Vectors`).
+//! Interop works in both directions: the server accepts any version
+//! from [`MIN_WIRE_VERSION`] through [`WIRE_VERSION`] and answers each
+//! request at the version the request arrived in, while clients encode
+//! each request at the minimum version its operation needs
+//! ([`request_version`]) — so a v1 peer never sees a v2 frame, and an
+//! upgraded client still speaks to a v1 server for every v1-era
+//! operation. The v2-only opcodes inside a v1-marked frame are a typed
+//! `unknown-opcode` fault, not a silent accept.
 //!
 //! f64 values travel as their IEEE-754 bit patterns, so a remote answer
-//! is **byte-for-byte identical** to the in-process one — the loopback
-//! integration test pins this for every query kind.
+//! is **byte-for-byte identical** to the in-process one — the
+//! backend-equivalence suite pins this for every request kind.
 //!
 //! ## Error discipline
 //!
@@ -36,21 +49,26 @@
 //! * **frame faults** (bad magic / version / oversized length): framing
 //!   is lost, so the server replies best-effort and closes the
 //!   connection;
-//! * **payload faults** (unknown opcode, short/trailing/garbled body):
-//!   the frame boundary is intact, so the server replies with the echoed
-//!   request id and keeps serving the connection.
+//! * **payload faults** (unknown opcode, short/trailing/garbled body, a
+//!   batch count the payload cannot hold): the frame boundary is intact,
+//!   so the server replies with the echoed request id and keeps serving
+//!   the connection.
 
 use std::io::{self, Read, Write};
 
+use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::error::Error;
-use crate::serve::{Query, QueryOutcome, StoreKey};
+use crate::serve::StoreKey;
 use crate::sketch::SketchEntry;
 
 /// Frame magic: "MSKW" (matsketch wire).
 pub const WIRE_MAGIC: [u8; 4] = *b"MSKW";
 
-/// Current protocol version.
-pub const WIRE_VERSION: u16 = 1;
+/// Current protocol version (v2: batched matvec).
+pub const WIRE_VERSION: u16 = 2;
+
+/// Oldest protocol version still accepted on the wire.
+pub const MIN_WIRE_VERSION: u16 = 1;
 
 /// Fixed frame-header size in bytes.
 pub const FRAME_HEADER_LEN: usize = 20;
@@ -70,6 +88,7 @@ const OP_MATVEC_T: u8 = 0x11;
 const OP_ROW: u8 = 0x12;
 const OP_COL: u8 = 0x13;
 const OP_TOP_K: u8 = 0x14;
+const OP_MATVEC_BATCH: u8 = 0x15;
 
 // --- response opcodes ---
 const OP_PONG: u8 = 0x81;
@@ -78,6 +97,7 @@ const OP_SKETCH_OPENED: u8 = 0x83;
 const OP_SHUTTING_DOWN: u8 = 0x84;
 const OP_VECTOR: u8 = 0x90;
 const OP_ENTRIES: u8 = 0x91;
+const OP_VECTORS: u8 = 0x92;
 const OP_ERROR: u8 = 0xFF;
 
 /// Typed error codes carried by [`Response::Error`].
@@ -90,7 +110,8 @@ pub enum ErrCode {
     BadVersion,
     /// Declared payload length exceeds [`MAX_PAYLOAD`].
     Oversized,
-    /// Opcode not recognised (or a response opcode sent as a request).
+    /// Opcode not recognised (or a response opcode sent as a request, or
+    /// a v2-only opcode inside a v1 frame).
     UnknownOpcode,
     /// Sketch handle not opened on this connection.
     BadHandle,
@@ -178,7 +199,7 @@ impl From<WireFault> for Error {
 pub type WireResult<T> = std::result::Result<T, WireFault>;
 
 /// One decoded request.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Request {
     /// Liveness probe.
     Ping,
@@ -190,36 +211,16 @@ pub enum Request {
     Query {
         /// Handle from a prior [`Response::SketchOpened`].
         handle: u32,
-        /// The operation, reusing the in-process [`Query`] type.
-        query: Query,
+        /// The operation, in the shared [`QueryRequest`] vocabulary.
+        query: QueryRequest,
     },
     /// Graceful-shutdown sentinel: the server finishes in-flight work,
     /// acknowledges with [`Response::ShuttingDown`], and stops accepting.
     Shutdown,
 }
 
-/// Identity + shape of one served sketch, as listed / opened over the
-/// wire.
-#[derive(Clone, Debug, PartialEq, Eq)]
-pub struct SketchInfo {
-    /// Dataset label.
-    pub dataset: String,
-    /// Distribution name.
-    pub method: String,
-    /// Sample budget `s`.
-    pub s: u64,
-    /// Sketching seed.
-    pub seed: u64,
-    /// Rows.
-    pub m: u64,
-    /// Columns.
-    pub n: u64,
-    /// Whether the payload uses the compact row-scale form.
-    pub compact: bool,
-}
-
 /// One decoded response.
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, PartialEq)]
 pub enum Response {
     /// Liveness answer.
     Pong,
@@ -233,8 +234,8 @@ pub enum Response {
         /// Identity + shape of the opened sketch.
         info: SketchInfo,
     },
-    /// A query answer, reusing the in-process [`QueryOutcome`] type.
-    Answer(QueryOutcome),
+    /// A query answer, in the shared [`QueryResponse`] vocabulary.
+    Answer(QueryResponse),
     /// Acknowledges a [`Request::Shutdown`].
     ShuttingDown,
     /// Typed failure; the request id in the frame says which request
@@ -250,6 +251,9 @@ pub enum Response {
 /// A parsed frame header.
 #[derive(Clone, Copy, Debug)]
 pub struct FrameHeader {
+    /// Protocol version the frame was sent in (within the accepted
+    /// range; responses echo it so old peers never see new frames).
+    pub version: u16,
     /// Message kind.
     pub opcode: u8,
     /// Caller-chosen id, echoed in responses.
@@ -357,6 +361,15 @@ impl<'a> Rd<'a> {
         Ok(count)
     }
 
+    fn vec_f64(&mut self) -> WireResult<Vec<f64>> {
+        let count = self.count(8)?;
+        let mut xs = Vec::with_capacity(count);
+        for _ in 0..count {
+            xs.push(self.f64()?);
+        }
+        Ok(xs)
+    }
+
     fn done(self) -> WireResult<()> {
         if self.pos != self.buf.len() {
             return Err(WireFault::new(
@@ -375,10 +388,10 @@ impl<'a> Rd<'a> {
 // NOTE: no length assertion here — an over-cap frame is legal to *build*
 // (the server detects it post-encode and substitutes a typed Oversized
 // error; a peer receiving one rejects it at parse_frame_header).
-fn frame(opcode: u8, request_id: u64, payload: Vec<u8>) -> Vec<u8> {
+fn frame(version: u16, opcode: u8, request_id: u64, payload: Vec<u8>) -> Vec<u8> {
     let mut out = Vec::with_capacity(FRAME_HEADER_LEN + payload.len());
     out.extend_from_slice(&WIRE_MAGIC);
-    put_u16(&mut out, WIRE_VERSION);
+    put_u16(&mut out, version);
     out.push(opcode);
     out.push(0); // reserved
     put_u64(&mut out, request_id);
@@ -416,12 +429,25 @@ fn get_info(rd: &mut Rd<'_>) -> WireResult<SketchInfo> {
     })
 }
 
-/// Encode one request as a complete frame.
-pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
+/// The lowest protocol version that can carry `req`. Requests go out at
+/// this version (not blanket [`WIRE_VERSION`]) so an upgraded client
+/// keeps talking to a v1 server for every v1-era operation — only the
+/// genuinely new ones force the newer protocol.
+pub fn request_version(req: &Request) -> u16 {
     match req {
-        Request::Ping => frame(OP_PING, request_id, Vec::new()),
-        Request::ListSketches => frame(OP_LIST, request_id, Vec::new()),
-        Request::Shutdown => frame(OP_SHUTDOWN, request_id, Vec::new()),
+        Request::Query { query: QueryRequest::MatvecBatch(_), .. } => 2,
+        _ => MIN_WIRE_VERSION,
+    }
+}
+
+/// Encode one request as a complete frame, at the minimum version its
+/// operation needs (see [`request_version`]).
+pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
+    let version = request_version(req);
+    match req {
+        Request::Ping => frame(version, OP_PING, request_id, Vec::new()),
+        Request::ListSketches => frame(version, OP_LIST, request_id, Vec::new()),
+        Request::Shutdown => frame(version, OP_SHUTDOWN, request_id, Vec::new()),
         Request::OpenSketch(key) => {
             let mut p = Vec::new();
             put_str(&mut p, &key.dataset);
@@ -429,63 +455,80 @@ pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
             put_u64(&mut p, key.s);
             put_u64(&mut p, key.seed);
             put_u64(&mut p, key.fingerprint);
-            frame(OP_OPEN, request_id, p)
+            frame(version, OP_OPEN, request_id, p)
         }
         Request::Query { handle, query } => {
             let mut p = Vec::new();
             put_u32(&mut p, *handle);
             let opcode = match query {
-                Query::Matvec(x) => {
+                QueryRequest::Matvec(x) => {
                     put_vec_f64(&mut p, x);
                     OP_MATVEC
                 }
-                Query::MatvecT(x) => {
+                QueryRequest::MatvecT(x) => {
                     put_vec_f64(&mut p, x);
                     OP_MATVEC_T
                 }
-                Query::Row(i) => {
+                QueryRequest::MatvecBatch(xs) => {
+                    put_u32(&mut p, xs.len() as u32);
+                    for x in xs {
+                        put_vec_f64(&mut p, x);
+                    }
+                    OP_MATVEC_BATCH
+                }
+                QueryRequest::Row(i) => {
                     put_u32(&mut p, *i);
                     OP_ROW
                 }
-                Query::Col(j) => {
+                QueryRequest::Col(j) => {
                     put_u32(&mut p, *j);
                     OP_COL
                 }
-                Query::TopK(k) => {
+                QueryRequest::TopK(k) => {
                     put_u64(&mut p, *k as u64);
                     OP_TOP_K
                 }
             };
-            frame(opcode, request_id, p)
+            frame(version, opcode, request_id, p)
         }
     }
 }
 
-/// Encode one response as a complete frame.
-pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
+/// Encode one response as a complete frame at `version` — servers echo
+/// the version the request arrived in, so a v1 peer never receives a v2
+/// frame its parser would reject.
+pub fn encode_response_v(version: u16, request_id: u64, resp: &Response) -> Vec<u8> {
     match resp {
-        Response::Pong => frame(OP_PONG, request_id, Vec::new()),
-        Response::ShuttingDown => frame(OP_SHUTTING_DOWN, request_id, Vec::new()),
+        Response::Pong => frame(version, OP_PONG, request_id, Vec::new()),
+        Response::ShuttingDown => frame(version, OP_SHUTTING_DOWN, request_id, Vec::new()),
         Response::SketchList(infos) => {
             let mut p = Vec::new();
             put_u32(&mut p, infos.len() as u32);
             for info in infos {
                 put_info(&mut p, info);
             }
-            frame(OP_SKETCH_LIST, request_id, p)
+            frame(version, OP_SKETCH_LIST, request_id, p)
         }
         Response::SketchOpened { handle, info } => {
             let mut p = Vec::new();
             put_u32(&mut p, *handle);
             put_info(&mut p, info);
-            frame(OP_SKETCH_OPENED, request_id, p)
+            frame(version, OP_SKETCH_OPENED, request_id, p)
         }
-        Response::Answer(QueryOutcome::Vector(y)) => {
+        Response::Answer(QueryResponse::Vector(y)) => {
             let mut p = Vec::new();
             put_vec_f64(&mut p, y);
-            frame(OP_VECTOR, request_id, p)
+            frame(version, OP_VECTOR, request_id, p)
         }
-        Response::Answer(QueryOutcome::Entries(es)) => {
+        Response::Answer(QueryResponse::Vectors(ys)) => {
+            let mut p = Vec::new();
+            put_u32(&mut p, ys.len() as u32);
+            for y in ys {
+                put_vec_f64(&mut p, y);
+            }
+            frame(version, OP_VECTORS, request_id, p)
+        }
+        Response::Answer(QueryResponse::Entries(es)) => {
             let mut p = Vec::new();
             put_u32(&mut p, es.len() as u32);
             for e in es {
@@ -494,15 +537,20 @@ pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
                 put_u32(&mut p, e.count);
                 put_f64(&mut p, e.value);
             }
-            frame(OP_ENTRIES, request_id, p)
+            frame(version, OP_ENTRIES, request_id, p)
         }
         Response::Error { code, message } => {
             let mut p = Vec::new();
             put_u16(&mut p, code.as_u16());
             put_str(&mut p, message);
-            frame(OP_ERROR, request_id, p)
+            frame(version, OP_ERROR, request_id, p)
         }
     }
+}
+
+/// [`encode_response_v`] at the current [`WIRE_VERSION`].
+pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
+    encode_response_v(WIRE_VERSION, request_id, resp)
 }
 
 // ---------------------------------------------------------------------
@@ -541,10 +589,13 @@ pub fn parse_frame_header(buf: &[u8; FRAME_HEADER_LEN]) -> WireResult<FrameHeade
         ));
     }
     let version = u16::from_be_bytes([buf[4], buf[5]]);
-    if version != WIRE_VERSION {
+    if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
         return Err(WireFault::new(
             ErrCode::BadVersion,
-            format!("protocol version {version} (this server speaks {WIRE_VERSION})"),
+            format!(
+                "protocol version {version} (this peer speaks \
+                 {MIN_WIRE_VERSION}..={WIRE_VERSION})"
+            ),
         ));
     }
     let opcode = buf[6];
@@ -556,7 +607,7 @@ pub fn parse_frame_header(buf: &[u8; FRAME_HEADER_LEN]) -> WireResult<FrameHeade
             format!("declared payload of {len} bytes exceeds the {MAX_PAYLOAD}-byte cap"),
         ));
     }
-    Ok(FrameHeader { opcode, request_id, len })
+    Ok(FrameHeader { version, opcode, request_id, len })
 }
 
 /// Read a frame's payload (`len` already validated by
@@ -567,8 +618,10 @@ pub fn read_payload(r: &mut impl Read, len: u32) -> io::Result<Vec<u8>> {
     Ok(buf)
 }
 
-/// Decode a request payload.
-pub fn decode_request(opcode: u8, payload: &[u8]) -> WireResult<Request> {
+/// Decode a request payload. `version` is the frame's declared protocol
+/// version: opcodes newer than it are rejected as unknown (a v1 peer
+/// cannot legally send a v2-only operation).
+pub fn decode_request(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Request> {
     let mut rd = Rd::new(payload);
     let req = match opcode {
         OP_PING => Request::Ping,
@@ -586,29 +639,48 @@ pub fn decode_request(opcode: u8, payload: &[u8]) -> WireResult<Request> {
         }
         OP_MATVEC | OP_MATVEC_T => {
             let handle = rd.u32()?;
-            let count = rd.count(8)?;
-            let mut x = Vec::with_capacity(count);
-            for _ in 0..count {
-                x.push(rd.f64()?);
-            }
-            let query = if opcode == OP_MATVEC { Query::Matvec(x) } else { Query::MatvecT(x) };
+            let x = rd.vec_f64()?;
+            let query = if opcode == OP_MATVEC {
+                QueryRequest::Matvec(x)
+            } else {
+                QueryRequest::MatvecT(x)
+            };
             Request::Query { handle, query }
+        }
+        OP_MATVEC_BATCH if version >= 2 => {
+            let handle = rd.u32()?;
+            // each batched vector carries at least its own 4-byte length
+            let count = rd.count(4)?;
+            let mut xs = Vec::with_capacity(count);
+            for _ in 0..count {
+                xs.push(rd.vec_f64()?);
+            }
+            Request::Query { handle, query: QueryRequest::MatvecBatch(xs) }
         }
         OP_ROW | OP_COL => {
             let handle = rd.u32()?;
             let index = rd.u32()?;
-            let query = if opcode == OP_ROW { Query::Row(index) } else { Query::Col(index) };
+            let query = if opcode == OP_ROW {
+                QueryRequest::Row(index)
+            } else {
+                QueryRequest::Col(index)
+            };
             Request::Query { handle, query }
         }
         OP_TOP_K => {
             let handle = rd.u32()?;
             let k = rd.u64()?;
-            Request::Query { handle, query: Query::TopK(k as usize) }
+            Request::Query { handle, query: QueryRequest::TopK(k as usize) }
         }
         other => {
+            let hint = if other == OP_MATVEC_BATCH {
+                " (MatvecBatch needs protocol v2)"
+            } else {
+                ""
+            };
             return Err(WireFault::new(
                 ErrCode::UnknownOpcode,
-                format!("unknown request opcode {other:#04x}"),
+                format!("unknown request opcode {other:#04x}{hint}"),
             ));
         }
     };
@@ -636,13 +708,14 @@ pub fn decode_response(opcode: u8, payload: &[u8]) -> WireResult<Response> {
             let info = get_info(&mut rd)?;
             Response::SketchOpened { handle, info }
         }
-        OP_VECTOR => {
-            let count = rd.count(8)?;
-            let mut y = Vec::with_capacity(count);
+        OP_VECTOR => Response::Answer(QueryResponse::Vector(rd.vec_f64()?)),
+        OP_VECTORS => {
+            let count = rd.count(4)?;
+            let mut ys = Vec::with_capacity(count);
             for _ in 0..count {
-                y.push(rd.f64()?);
+                ys.push(rd.vec_f64()?);
             }
-            Response::Answer(QueryOutcome::Vector(y))
+            Response::Answer(QueryResponse::Vectors(ys))
         }
         OP_ENTRIES => {
             let count = rd.count(4 + 4 + 4 + 8)?;
@@ -655,7 +728,7 @@ pub fn decode_response(opcode: u8, payload: &[u8]) -> WireResult<Response> {
                     value: rd.f64()?,
                 });
             }
-            Response::Answer(QueryOutcome::Entries(es))
+            Response::Answer(QueryResponse::Entries(es))
         }
         OP_ERROR => {
             let code = ErrCode::from_u16(rd.u16()?);
@@ -687,9 +760,10 @@ mod tests {
         let bytes = encode_request(42, req);
         let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
         let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.version, request_version(req));
         assert_eq!(h.request_id, 42);
         assert_eq!(h.len as usize, bytes.len() - FRAME_HEADER_LEN);
-        decode_request(h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap()
+        decode_request(h.version, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap()
     }
 
     fn roundtrip_response(resp: &Response) -> Response {
@@ -720,34 +794,29 @@ mod tests {
             Request::ListSketches,
             Request::Shutdown,
             Request::OpenSketch(key.clone()),
-            Request::Query { handle: 5, query: Query::Matvec(vec![1.5, -2.25, f64::MIN]) },
-            Request::Query { handle: 6, query: Query::MatvecT(vec![0.0, 3.75]) },
-            Request::Query { handle: 7, query: Query::Row(11) },
-            Request::Query { handle: 8, query: Query::Col(0) },
-            Request::Query { handle: 9, query: Query::TopK(1_000) },
+            Request::Query {
+                handle: 5,
+                query: QueryRequest::Matvec(vec![1.5, -2.25, f64::MIN]),
+            },
+            Request::Query { handle: 6, query: QueryRequest::MatvecT(vec![0.0, 3.75]) },
+            Request::Query {
+                handle: 10,
+                query: QueryRequest::MatvecBatch(vec![
+                    vec![1.0, 2.0],
+                    vec![-0.5, 0.25],
+                    Vec::new(),
+                ]),
+            },
+            Request::Query {
+                handle: 11,
+                query: QueryRequest::MatvecBatch(Vec::new()),
+            },
+            Request::Query { handle: 7, query: QueryRequest::Row(11) },
+            Request::Query { handle: 8, query: QueryRequest::Col(0) },
+            Request::Query { handle: 9, query: QueryRequest::TopK(1_000) },
         ];
         for req in &cases {
-            match (req, roundtrip_request(req)) {
-                (Request::Ping, Request::Ping) => {}
-                (Request::ListSketches, Request::ListSketches) => {}
-                (Request::Shutdown, Request::Shutdown) => {}
-                (Request::OpenSketch(a), Request::OpenSketch(b)) => assert_eq!(*a, b),
-                (
-                    Request::Query { handle: ha, query: qa },
-                    Request::Query { handle: hb, query: qb },
-                ) => {
-                    assert_eq!(*ha, hb);
-                    match (qa, qb) {
-                        (Query::Matvec(a), Query::Matvec(b)) => assert_eq!(*a, b),
-                        (Query::MatvecT(a), Query::MatvecT(b)) => assert_eq!(*a, b),
-                        (Query::Row(a), Query::Row(b)) => assert_eq!(*a, b),
-                        (Query::Col(a), Query::Col(b)) => assert_eq!(*a, b),
-                        (Query::TopK(a), Query::TopK(b)) => assert_eq!(*a, b),
-                        other => panic!("query kind changed: {other:?}"),
-                    }
-                }
-                other => panic!("request kind changed: {other:?}"),
-            }
+            assert_eq!(roundtrip_request(req), *req);
         }
     }
 
@@ -762,32 +831,13 @@ mod tests {
             Response::ShuttingDown,
             Response::SketchList(vec![info(), SketchInfo { compact: false, ..info() }]),
             Response::SketchOpened { handle: 3, info: info() },
-            Response::Answer(QueryOutcome::Vector(vec![0.5, -0.0, 1e300])),
-            Response::Answer(QueryOutcome::Entries(entries.clone())),
+            Response::Answer(QueryResponse::Vector(vec![0.5, -0.0, 1e300])),
+            Response::Answer(QueryResponse::Vectors(vec![vec![1.0], vec![], vec![2.0, 3.0]])),
+            Response::Answer(QueryResponse::Entries(entries.clone())),
             Response::Error { code: ErrCode::BadHandle, message: "no handle 4".into() },
         ];
         for resp in &cases {
-            match (resp, roundtrip_response(resp)) {
-                (Response::Pong, Response::Pong) => {}
-                (Response::ShuttingDown, Response::ShuttingDown) => {}
-                (Response::SketchList(a), Response::SketchList(b)) => assert_eq!(*a, b),
-                (
-                    Response::SketchOpened { handle: ha, info: ia },
-                    Response::SketchOpened { handle: hb, info: ib },
-                ) => {
-                    assert_eq!(*ha, hb);
-                    assert_eq!(*ia, ib);
-                }
-                (Response::Answer(a), Response::Answer(b)) => assert_eq!(*a, b),
-                (
-                    Response::Error { code: ca, message: ma },
-                    Response::Error { code: cb, message: mb },
-                ) => {
-                    assert_eq!(*ca, cb);
-                    assert_eq!(*ma, mb);
-                }
-                other => panic!("response kind changed: {other:?}"),
-            }
+            assert_eq!(roundtrip_response(resp), *resp);
         }
     }
 
@@ -796,11 +846,12 @@ mod tests {
         // byte-identity over the wire hinges on bit-pattern transport:
         // NaN payloads, signed zero, subnormals all round-trip
         let tricky = vec![f64::NAN, -0.0, f64::MIN_POSITIVE / 2.0, f64::INFINITY];
-        let bytes = encode_response(1, &Response::Answer(QueryOutcome::Vector(tricky.clone())));
+        let bytes =
+            encode_response(1, &Response::Answer(QueryResponse::Vector(tricky.clone())));
         let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
         let h = parse_frame_header(&header).unwrap();
         match decode_response(h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap() {
-            Response::Answer(QueryOutcome::Vector(y)) => {
+            Response::Answer(QueryResponse::Vector(y)) => {
                 assert_eq!(y.len(), tricky.len());
                 for (a, b) in tricky.iter().zip(&y) {
                     assert_eq!(a.to_bits(), b.to_bits());
@@ -823,32 +874,94 @@ mod tests {
         bad_version[5] = 99;
         assert_eq!(parse_frame_header(&bad_version).unwrap_err().code, ErrCode::BadVersion);
 
+        let mut zero_version = h;
+        zero_version[4] = 0;
+        zero_version[5] = 0;
+        assert_eq!(
+            parse_frame_header(&zero_version).unwrap_err().code,
+            ErrCode::BadVersion
+        );
+
         // giant declared length
         h[16..20].copy_from_slice(&u32::MAX.to_be_bytes());
         assert_eq!(parse_frame_header(&h).unwrap_err().code, ErrCode::Oversized);
     }
 
     #[test]
+    fn v1_frames_stay_decodable_and_gate_v2_opcodes() {
+        // a v1-marked Ping parses and decodes
+        let mut bytes = encode_request(3, &Request::Ping);
+        bytes[4..6].copy_from_slice(&1u16.to_be_bytes());
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.version, 1);
+        assert_eq!(
+            decode_request(h.version, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
+            Request::Ping
+        );
+
+        // ... but the v2-only MatvecBatch opcode inside it is rejected
+        let batch = Request::Query {
+            handle: 1,
+            query: QueryRequest::MatvecBatch(vec![vec![1.0]]),
+        };
+        let bytes = encode_request(4, &batch);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        let fault = decode_request(1, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::UnknownOpcode);
+        assert!(fault.message.contains("v2"), "{}", fault.message);
+        // the same payload under v2 decodes fine
+        assert_eq!(
+            decode_request(2, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
+            batch
+        );
+
+        // responses echo the requested version
+        let v1_resp = encode_response_v(1, 9, &Response::Pong);
+        assert_eq!(u16::from_be_bytes([v1_resp[4], v1_resp[5]]), 1);
+    }
+
+    #[test]
     fn payload_faults_are_typed() {
         // trailing bytes
-        let mut bytes = encode_request(1, &Request::Query { handle: 1, query: Query::Row(2) });
+        let mut bytes = encode_request(
+            1,
+            &Request::Query { handle: 1, query: QueryRequest::Row(2) },
+        );
         bytes.push(0xAA);
-        let fault = decode_request(OP_ROW, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        let fault =
+            decode_request(WIRE_VERSION, OP_ROW, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
         assert_eq!(fault.code, ErrCode::Malformed);
 
         // short payload
-        let fault = decode_request(OP_ROW, &[0, 0]).unwrap_err();
+        let fault = decode_request(WIRE_VERSION, OP_ROW, &[0, 0]).unwrap_err();
         assert_eq!(fault.code, ErrCode::Malformed);
 
         // count that can't fit the payload (giant vector claim)
         let mut p = Vec::new();
         put_u32(&mut p, 1); // handle
         put_u32(&mut p, u32::MAX); // claimed element count
-        let fault = decode_request(OP_MATVEC, &p).unwrap_err();
+        let fault = decode_request(WIRE_VERSION, OP_MATVEC, &p).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // batch count the payload cannot hold (the v2 corpus entry)
+        let mut p = Vec::new();
+        put_u32(&mut p, 1); // handle
+        put_u32(&mut p, 1_000_000); // claimed batch of a million vectors
+        let fault = decode_request(WIRE_VERSION, OP_MATVEC_BATCH, &p).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // inner vector length overrunning the batch payload
+        let mut p = Vec::new();
+        put_u32(&mut p, 1); // handle
+        put_u32(&mut p, 1); // one vector
+        put_u32(&mut p, 500); // ... claiming 500 f64s with none present
+        let fault = decode_request(WIRE_VERSION, OP_MATVEC_BATCH, &p).unwrap_err();
         assert_eq!(fault.code, ErrCode::Malformed);
 
         // unknown opcode
-        let fault = decode_request(0x6F, &[]).unwrap_err();
+        let fault = decode_request(WIRE_VERSION, 0x6F, &[]).unwrap_err();
         assert_eq!(fault.code, ErrCode::UnknownOpcode);
     }
 

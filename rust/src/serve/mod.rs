@@ -3,37 +3,40 @@
 //! Building the sketch is half the paper's story; the payoff is *serving*
 //! approximate matrix queries from the compressed sketch instead of from
 //! `A` (cf. §1's disc-size argument, and the downstream-use framing in
-//! BKK20 / fast sketched matrix multiplication). This module turns the
-//! repo from a sketch builder into a sketch service:
+//! BKK20 / fast sketched matrix multiplication). This module holds the
+//! serving machinery; the **query surface callers use is
+//! [`crate::api::SketchClient`]**, whose local backend wraps the types
+//! here:
 //!
 //! * [`store`] — a versioned on-disk container (magic / header / FNV-1a
 //!   checksum, written via [`crate::sketch::bitio`]) plus [`SketchStore`],
 //!   a directory keyed by `(dataset, distribution, budget s, seed)` so
 //!   repeated runs reuse cached sketches instead of re-sketching.
-//! * [`query`] — matvec (`B·x`, `Bᵀ·x`), row/column slices, and top-k
-//!   heaviest entries executed *directly on the Elias-γ compressed
-//!   payload* via [`crate::sketch::encode::SketchCursor`] (streaming
-//!   decode, no full [`crate::sketch::Sketch`] materialization), with
-//!   decoded-path twins for cross-checking.
+//! * [`query`] — matvec (`B·x`, `Bᵀ·x`, batched multi-x SpMM), row/column
+//!   slices, and top-k heaviest entries executed *directly on the Elias-γ
+//!   compressed payload* via [`crate::sketch::encode::SketchCursor`]
+//!   (streaming decode, no full [`crate::sketch::Sketch`]
+//!   materialization). Only the one-shot forms are public (for
+//!   benchmarks); the header-cached / index-seeking / decoded-reference
+//!   variants are crate-internal execution plans picked by
+//!   [`ServableSketch::answer`].
 //! * [`server`] — [`QueryServer`]: one immutable compressed sketch shared
-//!   across worker threads answering batched [`Query`] requests.
+//!   across worker threads answering batched
+//!   [`crate::api::QueryRequest`]s over per-job reply channels.
 //!
 //! CLI entry points: `matsketch sketch` writes into the store,
-//! `matsketch query` answers one query from it, and
-//! `matsketch serve-bench` measures concurrent-reader throughput into the
-//! eval report (see `eval::serving`). Remote traffic goes through the
-//! network front ([`crate::net`]): `matsketch serve` exposes this layer
-//! over TCP and `matsketch net-bench` load-tests it.
+//! `matsketch query` answers one query from it (locally or against a
+//! remote server), and `matsketch serve-bench` measures concurrent-reader
+//! throughput into the eval report (see `eval::serving`). Remote traffic
+//! goes through the network front ([`crate::net`]): `matsketch serve`
+//! exposes this layer over TCP and `matsketch net-bench` load-tests it.
 
 pub mod query;
 pub mod server;
 pub mod store;
 
-pub use query::{
-    col_slice, col_slice_h, decoded_matvec, decoded_matvec_t, decoded_top_k, matvec, matvec_h,
-    matvec_t, matvec_t_h, row_slice, row_slice_h, row_slice_indexed, top_k, top_k_h,
-};
-pub use server::{Pending, Query, QueryOutcome, QueryServer, ServableSketch, ServerStats};
+pub use query::{col_slice, matvec, matvec_batch, matvec_t, rank_cmp, row_slice, top_k};
+pub use server::{Pending, QueryServer, ServableSketch, ServerStats};
 pub use store::{
     coo_fingerprint, read_header, Fingerprinter, SketchStore, StoreEntryInfo, StoreKey,
     StoredSketch,

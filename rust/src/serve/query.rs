@@ -2,18 +2,17 @@
 //!
 //! Every operator streams the payload through
 //! [`crate::sketch::encode::SketchCursor`] — one pass, O(1) decode state,
-//! no full [`Sketch`] materialization. The `decoded_*` twins run the same
-//! f64 accumulation over a decoded [`Sketch`]'s entry list (which the
-//! cursor produces in the same row-major order), so the two paths agree
-//! exactly and cross-check each other in `tests/integration_serve.rs`.
+//! no full [`Sketch`] materialization. The crate-internal `decoded_*`
+//! twins run the same f64 accumulation over a decoded [`Sketch`]'s entry
+//! list (which the cursor produces in the same row-major order), so the
+//! two paths agree exactly and cross-check each other in unit tests.
 //!
-//! Each operator comes in two forms: the one-shot form (`matvec`, …)
-//! parses the payload header itself, and the `*_h` form takes an
-//! already-parsed [`PayloadHeader`] so a long-lived server
-//! ([`super::ServableSketch`]) pays the O(m) row-scale-table parse once
-//! per sketch instead of once per query. [`row_slice_indexed`]
-//! additionally takes the store's per-row offset index for an O(1) seek
-//! instead of a scan.
+//! Only the one-shot forms (`matvec`, `matvec_batch`, …) are public, and
+//! they exist for benchmarks and low-level callers; everything above this
+//! module goes through [`crate::api::SketchClient`], which picks the
+//! execution plan (cached payload header, per-row offset index, streaming
+//! scan) internally. The header-cached `*_h` forms, the index-seeking row
+//! slice, and the decoded twins are `pub(crate)` execution plans, not API.
 
 use std::cmp::Ordering;
 
@@ -27,8 +26,12 @@ pub fn matvec(enc: &EncodedSketch, x: &[f64]) -> Result<Vec<f64>> {
     matvec_h(enc, &PayloadHeader::parse(enc)?, x)
 }
 
-/// [`matvec`] with a pre-parsed payload header.
-pub fn matvec_h(enc: &EncodedSketch, header: &PayloadHeader, x: &[f64]) -> Result<Vec<f64>> {
+/// `matvec` with a pre-parsed payload header.
+pub(crate) fn matvec_h(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    x: &[f64],
+) -> Result<Vec<f64>> {
     let (m, n) = (header.m, header.n);
     if x.len() != n {
         return Err(Error::shape(format!(
@@ -51,8 +54,12 @@ pub fn matvec_t(enc: &EncodedSketch, x: &[f64]) -> Result<Vec<f64>> {
     matvec_t_h(enc, &PayloadHeader::parse(enc)?, x)
 }
 
-/// [`matvec_t`] with a pre-parsed payload header.
-pub fn matvec_t_h(enc: &EncodedSketch, header: &PayloadHeader, x: &[f64]) -> Result<Vec<f64>> {
+/// `matvec_t` with a pre-parsed payload header.
+pub(crate) fn matvec_t_h(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    x: &[f64],
+) -> Result<Vec<f64>> {
     let (m, n) = (header.m, header.n);
     if x.len() != m {
         return Err(Error::shape(format!(
@@ -69,15 +76,57 @@ pub fn matvec_t_h(enc: &EncodedSketch, header: &PayloadHeader, x: &[f64]) -> Res
     Ok(y)
 }
 
+/// `Y = B·X` for a batch of right-hand sides (each length n), executed
+/// in **one pass** over the compressed payload: every decoded entry
+/// updates all k accumulators, so the Elias-γ decode cost is paid once
+/// for the whole batch instead of once per right-hand side.
+///
+/// Each output vector is bit-identical to the corresponding independent
+/// [`matvec`] call — the per-vector f64 accumulation order is the same
+/// row-major entry sequence.
+pub fn matvec_batch(enc: &EncodedSketch, xs: &[Vec<f64>]) -> Result<Vec<Vec<f64>>> {
+    matvec_batch_h(enc, &PayloadHeader::parse(enc)?, xs)
+}
+
+/// `matvec_batch` with a pre-parsed payload header.
+pub(crate) fn matvec_batch_h(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    xs: &[Vec<f64>],
+) -> Result<Vec<Vec<f64>>> {
+    let (m, n) = (header.m, header.n);
+    for (i, x) in xs.iter().enumerate() {
+        if x.len() != n {
+            return Err(Error::shape(format!(
+                "matvec_batch: x[{i}] has {} entries, B has {n} columns",
+                x.len()
+            )));
+        }
+    }
+    if xs.is_empty() {
+        return Ok(Vec::new());
+    }
+    let mut ys = vec![vec![0.0f64; m]; xs.len()];
+    let mut cur = SketchCursor::with_header(enc, header);
+    while let Some(e) = cur.next_entry()? {
+        check_bounds(&e, m, n)?;
+        let (r, c) = (e.row as usize, e.col as usize);
+        for (y, x) in ys.iter_mut().zip(xs) {
+            y[r] += e.value * x[c];
+        }
+    }
+    Ok(ys)
+}
+
 /// All entries of row `i`, in column order. Stops decoding as soon as the
 /// row-major stream passes row `i`.
 pub fn row_slice(enc: &EncodedSketch, i: u32) -> Result<Vec<SketchEntry>> {
     row_slice_h(enc, &PayloadHeader::parse(enc)?, i)
 }
 
-/// [`row_slice`] with a pre-parsed payload header (still a scan from the
-/// front; see [`row_slice_indexed`] for the O(1) seek).
-pub fn row_slice_h(
+/// `row_slice` with a pre-parsed payload header (still a scan from the
+/// front; the index-seeking plan below does the O(1) seek).
+pub(crate) fn row_slice_h(
     enc: &EncodedSketch,
     header: &PayloadHeader,
     i: u32,
@@ -98,12 +147,12 @@ pub fn row_slice_h(
     Ok(out)
 }
 
-/// [`row_slice`] through the store's per-row offset index
+/// `row_slice` through the store's per-row offset index
 /// (`(row id, payload bit offset)` pairs, ascending): binary-search the
 /// row, seek straight to its group, decode only that group. Produces
 /// exactly the scan result — an index entry pointing at the wrong group
 /// is detected and reported, never silently served.
-pub fn row_slice_indexed(
+pub(crate) fn row_slice_indexed(
     enc: &EncodedSketch,
     header: &PayloadHeader,
     index: &[(u32, u64)],
@@ -137,8 +186,8 @@ pub fn col_slice(enc: &EncodedSketch, j: u32) -> Result<Vec<SketchEntry>> {
     col_slice_h(enc, &PayloadHeader::parse(enc)?, j)
 }
 
-/// [`col_slice`] with a pre-parsed payload header.
-pub fn col_slice_h(
+/// `col_slice` with a pre-parsed payload header.
+pub(crate) fn col_slice_h(
     enc: &EncodedSketch,
     header: &PayloadHeader,
     j: u32,
@@ -174,8 +223,12 @@ pub fn top_k(enc: &EncodedSketch, k: usize) -> Result<Vec<SketchEntry>> {
     top_k_h(enc, &PayloadHeader::parse(enc)?, k)
 }
 
-/// [`top_k`] with a pre-parsed payload header.
-pub fn top_k_h(enc: &EncodedSketch, header: &PayloadHeader, k: usize) -> Result<Vec<SketchEntry>> {
+/// `top_k` with a pre-parsed payload header.
+pub(crate) fn top_k_h(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    k: usize,
+) -> Result<Vec<SketchEntry>> {
     let mut cur = SketchCursor::with_header(enc, header);
     if k == 0 {
         return Ok(Vec::new());
@@ -202,7 +255,7 @@ pub fn top_k_h(enc: &EncodedSketch, header: &PayloadHeader, k: usize) -> Result<
 /// Reference matvec over a decoded sketch: identical f64 accumulation
 /// order to [`matvec`] (the entry list is row-major, exactly the cursor's
 /// emission order).
-pub fn decoded_matvec(sk: &Sketch, x: &[f64]) -> Result<Vec<f64>> {
+pub(crate) fn decoded_matvec(sk: &Sketch, x: &[f64]) -> Result<Vec<f64>> {
     if x.len() != sk.n {
         return Err(Error::shape(format!(
             "decoded_matvec: x has {} entries, B has {} columns",
@@ -218,8 +271,8 @@ pub fn decoded_matvec(sk: &Sketch, x: &[f64]) -> Result<Vec<f64>> {
 }
 
 /// Reference transposed matvec over a decoded sketch (see
-/// [`decoded_matvec`]).
-pub fn decoded_matvec_t(sk: &Sketch, x: &[f64]) -> Result<Vec<f64>> {
+/// `decoded_matvec`).
+pub(crate) fn decoded_matvec_t(sk: &Sketch, x: &[f64]) -> Result<Vec<f64>> {
     if x.len() != sk.m {
         return Err(Error::shape(format!(
             "decoded_matvec_t: x has {} entries, B has {} rows",
@@ -235,7 +288,7 @@ pub fn decoded_matvec_t(sk: &Sketch, x: &[f64]) -> Result<Vec<f64>> {
 }
 
 /// Reference top-k over a decoded sketch: full sort under [`rank_cmp`].
-pub fn decoded_top_k(sk: &Sketch, k: usize) -> Vec<SketchEntry> {
+pub(crate) fn decoded_top_k(sk: &Sketch, k: usize) -> Vec<SketchEntry> {
     let mut all = sk.entries.clone();
     all.sort_by(rank_cmp);
     all.truncate(k);
@@ -289,6 +342,40 @@ mod tests {
                 decoded_matvec_t(&dec, &xt).unwrap()
             );
         }
+    }
+
+    #[test]
+    fn batched_matvec_matches_independent_matvecs_bitwise() {
+        for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+            let (enc, dec) = toy(kind);
+            let mut rng = Rng::new(91);
+            let xs: Vec<Vec<f64>> = (0..5)
+                .map(|_| (0..dec.n).map(|_| rng.normal()).collect())
+                .collect();
+            let ys = matvec_batch(&enc, &xs).unwrap();
+            assert_eq!(ys.len(), xs.len());
+            for (x, y) in xs.iter().zip(&ys) {
+                let want = matvec(&enc, x).unwrap();
+                assert_eq!(y.len(), want.len());
+                for (a, b) in y.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn batched_matvec_edge_cases() {
+        let (enc, dec) = toy(DistributionKind::Bernstein);
+        // empty batch: empty answer, no decode
+        assert!(matvec_batch(&enc, &[]).unwrap().is_empty());
+        // any shape-mismatched member rejects the whole batch
+        let good = vec![0.5f64; dec.n];
+        let bad = vec![0.5f64; dec.n + 1];
+        assert!(matvec_batch(&enc, &[good.clone(), bad]).is_err());
+        // k = 1 equals the single-vector path bitwise
+        let ys = matvec_batch(&enc, std::slice::from_ref(&good)).unwrap();
+        assert_eq!(ys[0], matvec(&enc, &good).unwrap());
     }
 
     #[test]

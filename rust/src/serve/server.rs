@@ -1,21 +1,27 @@
-//! The multi-threaded serving front: one immutable loaded sketch shared
+//! The multi-threaded serving core: one immutable loaded sketch shared
 //! across worker threads answering batched query requests.
 //!
-//! A [`QueryServer`] owns `W` workers pulling [`Query`] jobs off a shared
-//! queue; each job carries its own reply channel, so callers submit
-//! (optionally in batches), keep working, and [`Pending::wait`] when they
-//! need the answer. The sketch stays in its compressed form for the whole
-//! server lifetime — workers answer straight off the Elias-γ payload via
-//! [`super::query`], so serving memory is the compressed size, not the
-//! decoded one.
+//! A [`QueryServer`] owns `W` workers pulling [`QueryRequest`] jobs off a
+//! shared queue; each job carries its own reply channel, so callers
+//! submit (optionally in batches), keep working, and [`Pending::wait`]
+//! when they need the answer. The sketch stays in its compressed form for
+//! the whole server lifetime — workers answer straight off the Elias-γ
+//! payload via [`super::query`], so serving memory is the compressed
+//! size, not the decoded one.
+//!
+//! Callers do not drive this type directly any more: the public query
+//! surface is [`crate::api::SketchClient`], whose in-process backend
+//! ([`crate::api::LocalClient`]) and network front ([`crate::net`]) both
+//! dispatch onto these pools.
 
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
 
+use crate::api::{QueryRequest, QueryResponse};
 use crate::error::{Error, Result};
 use crate::sketch::{
-    encode_sketch, row_group_index_h, EncodedSketch, PayloadHeader, Sketch, SketchEntry,
+    encode_sketch, row_group_index_h, EncodedSketch, PayloadHeader, Sketch,
 };
 
 use super::query;
@@ -86,68 +92,52 @@ impl ServableSketch {
         &self.row_index
     }
 
-    /// Answer one query synchronously (the worker body; also usable
-    /// directly for single-threaded callers and cross-checks). Row
-    /// slices seek through the index; everything else streams from the
-    /// cached header.
-    pub fn answer(&self, q: &Query) -> Result<QueryOutcome> {
+    /// Answer one request synchronously (the worker body; also usable
+    /// directly for single-threaded callers and cross-checks). This is
+    /// where the execution plan is selected: row slices seek through the
+    /// index, batched matvecs share one payload pass, everything else
+    /// streams from the cached header.
+    pub fn answer(&self, q: &QueryRequest) -> Result<QueryResponse> {
         Ok(match q {
-            Query::Matvec(x) => QueryOutcome::Vector(query::matvec_h(&self.enc, &self.header, x)?),
-            Query::MatvecT(x) => {
-                QueryOutcome::Vector(query::matvec_t_h(&self.enc, &self.header, x)?)
+            QueryRequest::Matvec(x) => {
+                QueryResponse::Vector(query::matvec_h(&self.enc, &self.header, x)?)
             }
-            Query::Row(i) => QueryOutcome::Entries(query::row_slice_indexed(
+            QueryRequest::MatvecT(x) => {
+                QueryResponse::Vector(query::matvec_t_h(&self.enc, &self.header, x)?)
+            }
+            QueryRequest::MatvecBatch(xs) => {
+                QueryResponse::Vectors(query::matvec_batch_h(&self.enc, &self.header, xs)?)
+            }
+            QueryRequest::Row(i) => QueryResponse::Entries(query::row_slice_indexed(
                 &self.enc,
                 &self.header,
                 &self.row_index,
                 *i,
             )?),
-            Query::Col(j) => {
-                QueryOutcome::Entries(query::col_slice_h(&self.enc, &self.header, *j)?)
+            QueryRequest::Col(j) => {
+                QueryResponse::Entries(query::col_slice_h(&self.enc, &self.header, *j)?)
             }
-            Query::TopK(k) => QueryOutcome::Entries(query::top_k_h(&self.enc, &self.header, *k)?),
+            QueryRequest::TopK(k) => {
+                QueryResponse::Entries(query::top_k_h(&self.enc, &self.header, *k)?)
+            }
         })
     }
 }
 
-/// One serving request.
-#[derive(Clone, Debug)]
-pub enum Query {
-    /// `y = B·x` (`x` length n).
-    Matvec(Vec<f64>),
-    /// `y = Bᵀ·x` (`x` length m).
-    MatvecT(Vec<f64>),
-    /// All entries of one row.
-    Row(u32),
-    /// All entries of one column.
-    Col(u32),
-    /// The k heaviest entries by `|value|`.
-    TopK(usize),
-}
-
-/// A serving answer.
-#[derive(Clone, Debug, PartialEq)]
-pub enum QueryOutcome {
-    /// Dense result vector (matvec family).
-    Vector(Vec<f64>),
-    /// Entry list (slices, top-k).
-    Entries(Vec<SketchEntry>),
-}
-
-/// One in-flight job: the query plus its private reply channel.
+/// One in-flight job: the request plus its private reply channel.
 struct Job {
-    query: Query,
-    reply: SyncSender<Result<QueryOutcome>>,
+    request: QueryRequest,
+    reply: SyncSender<Result<QueryResponse>>,
 }
 
-/// Handle to one submitted query's eventual answer.
+/// Handle to one submitted request's eventual answer.
 pub struct Pending {
-    rx: Receiver<Result<QueryOutcome>>,
+    rx: Receiver<Result<QueryResponse>>,
 }
 
 impl Pending {
     /// Block until the worker answers.
-    pub fn wait(self) -> Result<QueryOutcome> {
+    pub fn wait(self) -> Result<QueryResponse> {
         match self.rx.recv() {
             Ok(r) => r,
             Err(_) => Err(Error::Pipeline(
@@ -171,7 +161,7 @@ impl ServerStats {
     }
 }
 
-/// A pool of worker threads answering queries against one shared
+/// A pool of worker threads answering requests against one shared
 /// compressed sketch.
 pub struct QueryServer {
     sketch: Arc<ServableSketch>,
@@ -199,7 +189,7 @@ impl QueryServer {
                         Err(_) => break,
                     };
                     let Ok(job) = job else { break };
-                    let out = sk.answer(&job.query);
+                    let out = sk.answer(&job.request);
                     // a caller that dropped its Pending is fine to ignore
                     let _ = job.reply.send(out);
                     served += 1;
@@ -220,17 +210,17 @@ impl QueryServer {
         self.handles.len()
     }
 
-    /// Enqueue one query; returns immediately with a wait handle.
-    pub fn submit(&self, query: Query) -> Pending {
+    /// Enqueue one request; returns immediately with a wait handle.
+    pub fn submit(&self, request: QueryRequest) -> Pending {
         let (reply, rx) = sync_channel(1);
         // if every worker is gone the Pending surfaces it at wait()
-        let _ = self.tx.send(Job { query, reply });
+        let _ = self.tx.send(Job { request, reply });
         Pending { rx }
     }
 
     /// Enqueue a batch; answers can be awaited in any order.
-    pub fn submit_batch(&self, queries: Vec<Query>) -> Vec<Pending> {
-        queries.into_iter().map(|q| self.submit(q)).collect()
+    pub fn submit_batch(&self, requests: Vec<QueryRequest>) -> Vec<Pending> {
+        requests.into_iter().map(|q| self.submit(q)).collect()
     }
 
     /// Close the queue, join every worker, and report serving stats.
@@ -275,16 +265,19 @@ mod tests {
         assert_eq!(server.workers(), 4);
 
         let mut rng = Rng::new(5);
-        let queries: Vec<Query> = (0..24usize)
-            .map(|i| match i % 4 {
-                0 => Query::Matvec((0..n).map(|_| rng.normal()).collect()),
-                1 => Query::MatvecT((0..m).map(|_| rng.normal()).collect()),
-                2 => Query::Row((i % m) as u32),
-                _ => Query::TopK(5),
+        let requests: Vec<QueryRequest> = (0..24usize)
+            .map(|i| match i % 5 {
+                0 => QueryRequest::Matvec((0..n).map(|_| rng.normal()).collect()),
+                1 => QueryRequest::MatvecT((0..m).map(|_| rng.normal()).collect()),
+                2 => QueryRequest::MatvecBatch(
+                    (0..3).map(|_| (0..n).map(|_| rng.normal()).collect()).collect(),
+                ),
+                3 => QueryRequest::Row((i % m) as u32),
+                _ => QueryRequest::TopK(5),
             })
             .collect();
-        let pending = server.submit_batch(queries.clone());
-        for (q, p) in queries.iter().zip(pending) {
+        let pending = server.submit_batch(requests.clone());
+        for (q, p) in requests.iter().zip(pending) {
             let got = p.wait().unwrap();
             let want = sk.answer(q).unwrap();
             assert_eq!(got, want);
@@ -295,15 +288,35 @@ mod tests {
     }
 
     #[test]
+    fn batched_matvec_answer_matches_independent_answers() {
+        let sk = servable();
+        let (_, n) = sk.shape();
+        let mut rng = Rng::new(9);
+        let xs: Vec<Vec<f64>> =
+            (0..4).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let QueryResponse::Vectors(ys) =
+            sk.answer(&QueryRequest::MatvecBatch(xs.clone())).unwrap()
+        else {
+            panic!("batch answer is not Vectors");
+        };
+        for (x, y) in xs.into_iter().zip(ys) {
+            assert_eq!(
+                sk.answer(&QueryRequest::Matvec(x)).unwrap(),
+                QueryResponse::Vector(y)
+            );
+        }
+    }
+
+    #[test]
     fn bad_query_surfaces_as_error_not_poison() {
         let sk = Arc::new(servable());
         let server = QueryServer::start(Arc::clone(&sk), 2);
         // wrong-length x: the error comes back on the reply channel and
         // the server keeps serving afterwards
-        assert!(server.submit(Query::Matvec(vec![1.0; 3])).wait().is_err());
-        let ok = server.submit(Query::TopK(3)).wait().unwrap();
+        assert!(server.submit(QueryRequest::Matvec(vec![1.0; 3])).wait().is_err());
+        let ok = server.submit(QueryRequest::TopK(3)).wait().unwrap();
         match ok {
-            QueryOutcome::Entries(es) => assert_eq!(es.len(), 3),
+            QueryResponse::Entries(es) => assert_eq!(es.len(), 3),
             other => panic!("unexpected outcome {other:?}"),
         }
         server.shutdown();
@@ -314,7 +327,7 @@ mod tests {
         let sk = Arc::new(servable());
         let server = QueryServer::start(sk, 0);
         assert_eq!(server.workers(), 1);
-        server.submit(Query::TopK(1)).wait().unwrap();
+        server.submit(QueryRequest::TopK(1)).wait().unwrap();
         assert_eq!(server.shutdown().total(), 1);
     }
 }

@@ -1,0 +1,311 @@
+//! Integration: the unified client API. One request script — every
+//! `QueryRequest` variant, including the batched matvec — is driven
+//! through both backends (`LocalClient` in-process, `RemoteClient` over
+//! a live loopback server) for every Figure-1 distribution, and the
+//! responses must be **byte-identical**. This parameterized suite
+//! replaces the hand-rolled remote-vs-local pin loops that used to live
+//! in `integration_net.rs`.
+
+use std::path::{Path, PathBuf};
+use std::time::Duration;
+
+use matsketch::api::{
+    LocalClient, QueryRequest, QueryResponse, RemoteClient, SketchClient, SketchInfo,
+};
+use matsketch::distributions::DistributionKind;
+use matsketch::engine::{self, PipelineConfig, SketchMode};
+use matsketch::net::{
+    run_load, run_load_with, LoadGenConfig, LoadOp, NetServer, NetServerConfig,
+};
+use matsketch::serve::{coo_fingerprint, SketchStore, StoreKey};
+use matsketch::sketch::{encode_sketch, SketchPlan};
+use matsketch::sparse::Coo;
+use matsketch::util::rng::Rng;
+
+const BUDGET: u64 = 600;
+const SEED: u64 = 21;
+
+fn fixed_matrix() -> Coo {
+    let mut rng = Rng::new(0x7E57_4E7);
+    let mut coo = Coo::new(24, 160);
+    for i in 0..24u32 {
+        for _ in 0..12 {
+            coo.push(i, rng.usize_below(160) as u32, (rng.normal() as f32) + 1.5);
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("matsketch_api_itest_{tag}_{}", std::process::id()))
+}
+
+/// Build + persist one sketch per Figure-1 distribution, returning the
+/// keys plus each sketch's shape.
+fn populate_store(store: &SketchStore) -> Vec<(StoreKey, usize, usize)> {
+    let coo = fixed_matrix();
+    let fp = coo_fingerprint(&coo);
+    let mut out = Vec::new();
+    for kind in DistributionKind::figure1_set() {
+        let plan = SketchPlan::new(kind, BUDGET).with_seed(SEED);
+        let (sk, _) = engine::sketch_coo(
+            SketchMode::Offline,
+            &coo,
+            &plan,
+            &PipelineConfig::default(),
+        )
+        .unwrap();
+        let enc = encode_sketch(&sk).unwrap();
+        let key = StoreKey::new("fixed", &sk.method, BUDGET, SEED).with_fingerprint(fp);
+        store.put(&key, &enc).unwrap();
+        out.push((key, sk.m, sk.n));
+    }
+    out
+}
+
+fn start_server(store_dir: &Path, max_connections: usize) -> NetServer {
+    NetServer::bind(
+        SketchStore::open(store_dir).unwrap(),
+        "127.0.0.1:0",
+        NetServerConfig {
+            workers_per_sketch: 2,
+            max_connections,
+            read_timeout: Some(Duration::from_secs(10)),
+            write_timeout: Some(Duration::from_secs(10)),
+        },
+    )
+    .unwrap()
+}
+
+/// The request script every backend is driven through: all `QueryRequest`
+/// variants, edge indices, and a batched matvec whose first right-hand
+/// side equals the single matvec probe (so batch-vs-single equivalence is
+/// pinned too). Seeded, so both backends see identical requests.
+fn request_script(m: usize, n: usize, seed: u64) -> Vec<QueryRequest> {
+    let mut rng = Rng::new(seed);
+    let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let x2: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+    let xt: Vec<f64> = (0..m).map(|_| rng.normal()).collect();
+    vec![
+        QueryRequest::Matvec(x.clone()),
+        QueryRequest::MatvecT(xt),
+        QueryRequest::MatvecBatch(vec![x.clone()]),
+        QueryRequest::MatvecBatch(vec![x, x2.clone(), x2]),
+        QueryRequest::Row(0),
+        QueryRequest::Row((m - 1) as u32),
+        QueryRequest::Row(rng.usize_below(m) as u32),
+        QueryRequest::Col(rng.usize_below(n) as u32),
+        QueryRequest::TopK(1),
+        QueryRequest::TopK(7),
+        QueryRequest::TopK(100_000),
+    ]
+}
+
+/// Exact f64-bit equality: what "byte-identical across backends" means
+/// after decoding.
+fn assert_bit_identical(got: &QueryResponse, want: &QueryResponse, what: &str) {
+    fn vec_eq(a: &[f64], b: &[f64], what: &str) {
+        assert_eq!(a.len(), b.len(), "{what}: length");
+        for (i, (x, y)) in a.iter().zip(b).enumerate() {
+            assert_eq!(x.to_bits(), y.to_bits(), "{what}: y[{i}]");
+        }
+    }
+    match (got, want) {
+        (QueryResponse::Vector(a), QueryResponse::Vector(b)) => vec_eq(a, b, what),
+        (QueryResponse::Vectors(a), QueryResponse::Vectors(b)) => {
+            assert_eq!(a.len(), b.len(), "{what}: batch size");
+            for (i, (x, y)) in a.iter().zip(b).enumerate() {
+                vec_eq(x, y, &format!("{what}[{i}]"));
+            }
+        }
+        (QueryResponse::Entries(a), QueryResponse::Entries(b)) => {
+            assert_eq!(a.len(), b.len(), "{what}: length");
+            for (x, y) in a.iter().zip(b) {
+                assert_eq!((x.row, x.col, x.count), (y.row, y.col, y.count), "{what}");
+                assert_eq!(x.value.to_bits(), y.value.to_bits(), "{what}");
+            }
+        }
+        _ => panic!("{what}: response kinds differ ({got:?} vs {want:?})"),
+    }
+}
+
+/// Drive one backend through the script, once request-by-request and
+/// once through the batched path, asserting the two submission paths
+/// agree before returning the answers.
+fn run_script(
+    client: &mut dyn SketchClient,
+    key: &StoreKey,
+    script: &[QueryRequest],
+    what: &str,
+) -> Vec<QueryResponse> {
+    let one_by_one: Vec<QueryResponse> = script
+        .iter()
+        .map(|q| client.query(key, q).unwrap())
+        .collect();
+    let batched = client.query_batch(key, script.to_vec()).unwrap();
+    assert_eq!(batched.len(), script.len(), "{what}: batch answer count");
+    for (i, (single, batch)) in one_by_one.iter().zip(batched).enumerate() {
+        assert_bit_identical(&batch.unwrap(), single, &format!("{what}: batch[{i}]"));
+    }
+    one_by_one
+}
+
+/// Acceptance: for every Figure-1 distribution and every `QueryRequest`
+/// variant (including the batched matvec over the wire), the local and
+/// remote backends answer byte-identically — through both the one-shot
+/// and the batched submission paths.
+#[test]
+fn backends_answer_identically_for_every_method_and_request() {
+    let dir = tmp_dir("equiv");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sketches = populate_store(&SketchStore::open(&dir).unwrap());
+    assert_eq!(sketches.len(), 6);
+    let server = start_server(&dir, 16);
+    let addr = server.local_addr().to_string();
+
+    let mut local = LocalClient::open_dir(&dir).unwrap().with_workers(2);
+    let mut remote = RemoteClient::connect(&addr).unwrap();
+    remote.ping().unwrap();
+
+    for (key, m, n) in &sketches {
+        let what = &key.method;
+        let local_info = local.open(key).unwrap();
+        let remote_info = remote.open(key).unwrap();
+        assert_eq!(local_info, remote_info, "{what}: open() info");
+        assert_eq!((local_info.m as usize, local_info.n as usize), (*m, *n), "{what}");
+
+        let script = request_script(*m, *n, 33);
+        let local_answers = run_script(&mut local, key, &script, &format!("{what} local"));
+        let remote_answers = run_script(&mut remote, key, &script, &format!("{what} remote"));
+        for (qi, (l, r)) in local_answers.iter().zip(&remote_answers).enumerate() {
+            assert_bit_identical(r, l, &format!("{what} script[{qi}]"));
+        }
+
+        // the batched matvec equals its per-vector singles, end to end
+        let QueryResponse::Vectors(batch) = &local_answers[3] else {
+            panic!("{what}: script[3] is the k=3 batch");
+        };
+        let QueryRequest::MatvecBatch(xs) = &script[3] else {
+            panic!("script[3] kind");
+        };
+        for (x, y) in xs.iter().zip(batch) {
+            let single = local.query(key, &QueryRequest::Matvec(x.clone())).unwrap();
+            assert_bit_identical(
+                &single,
+                &QueryResponse::Vector(y.clone()),
+                &format!("{what} batch-vs-single"),
+            );
+        }
+    }
+
+    // error parity: a shape-mismatched matvec fails on both backends and
+    // neither connection / pool is poisoned by it
+    let (key0, _, _) = &sketches[0];
+    let bad = QueryRequest::Matvec(vec![1.0; 3]);
+    assert!(local.query(key0, &bad).is_err());
+    assert!(remote.query(key0, &bad).is_err());
+    assert!(local.query(key0, &QueryRequest::TopK(1)).is_ok());
+    assert!(remote.query(key0, &QueryRequest::TopK(1)).is_ok());
+    // ... including inside a batch: per-entry errors, batch not aborted
+    let mixed = vec![QueryRequest::TopK(2), bad, QueryRequest::TopK(2)];
+    for answers in [
+        local.query_batch(key0, mixed.clone()).unwrap(),
+        remote.query_batch(key0, mixed).unwrap(),
+    ] {
+        assert_eq!(answers.len(), 3);
+        assert!(answers[0].is_ok() && answers[2].is_ok());
+        assert!(answers[1].is_err());
+    }
+
+    // list() agrees (order-insensitively) across backends
+    let sort = |mut v: Vec<SketchInfo>| {
+        v.sort_by(|a, b| {
+            (&a.dataset, &a.method, a.s, a.seed).cmp(&(&b.dataset, &b.method, b.s, b.seed))
+        });
+        v
+    };
+    assert_eq!(sort(local.list().unwrap()), sort(remote.list().unwrap()));
+
+    local.close().unwrap();
+    remote.close().unwrap();
+    let stats = server.shutdown();
+    assert!(stats.frames > 0);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance: 8 concurrent client pairs (one local, one remote each)
+/// all observe byte-identical answers for the same scripts.
+#[test]
+fn concurrent_client_pairs_stay_equivalent() {
+    let dir = tmp_dir("concurrent");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sketches = populate_store(&SketchStore::open(&dir).unwrap());
+    let (key, m, n) = sketches
+        .iter()
+        .find(|(k, _, _)| k.method == "Bernstein")
+        .expect("Bernstein sketch present")
+        .clone();
+    let server = start_server(&dir, 32);
+    let addr = server.local_addr().to_string();
+
+    std::thread::scope(|scope| {
+        for c in 0..8u64 {
+            let addr = &addr;
+            let dir = &dir;
+            let key = &key;
+            scope.spawn(move || {
+                let mut local = LocalClient::open_dir(dir).unwrap();
+                let mut remote = RemoteClient::connect(addr).unwrap();
+                let script = request_script(m, n, 1000 + c);
+                let want = run_script(&mut local, key, &script, &format!("pair {c} local"));
+                let got = run_script(&mut remote, key, &script, &format!("pair {c} remote"));
+                for (qi, (l, r)) in want.iter().zip(&got).enumerate() {
+                    assert_bit_identical(r, l, &format!("pair {c} script[{qi}]"));
+                }
+            });
+        }
+    });
+    let stats = server.shutdown();
+    assert!(stats.connections >= 8);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The load generator runs unmodified over either backend — the harness
+/// only sees `dyn SketchClient` — and the op mix exercises the batched
+/// matvec opcode under load.
+#[test]
+fn loadgen_drives_both_backends_through_the_trait() {
+    let dir = tmp_dir("loadgen");
+    let _ = std::fs::remove_dir_all(&dir);
+    let sketches = populate_store(&SketchStore::open(&dir).unwrap());
+    let (key, _, _) = &sketches[0];
+    let cfg = LoadGenConfig {
+        clients: 2,
+        queries_per_client: 12,
+        ops: vec![LoadOp::Matvec, LoadOp::MatvecBatch, LoadOp::Row, LoadOp::TopK],
+        batch_k: 3,
+        ..Default::default()
+    };
+
+    // in-process baseline: a LocalClient per load thread
+    let local_report = run_load_with(
+        |_| Ok(Box::new(LocalClient::open_dir(&dir)?) as Box<dyn SketchClient + Send>),
+        key,
+        &cfg,
+    )
+    .unwrap();
+    assert_eq!(local_report.queries, 24);
+    assert_eq!(local_report.errors, 0);
+    assert!(local_report.qps > 0.0);
+
+    // identical harness over TCP
+    let server = start_server(&dir, 16);
+    let addr = server.local_addr().to_string();
+    let remote_report = run_load(&addr, key, &cfg).unwrap();
+    assert_eq!(remote_report.queries, 24);
+    assert_eq!(remote_report.errors, 0);
+    assert!(remote_report.p50_us <= remote_report.p99_us);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -1,17 +1,18 @@
 //! Integration: the serving subsystem — store round-trips are
 //! bit-identical (with corruption/truncation rejected), and the
-//! compressed-path query engine agrees exactly with the decode-then-CSR
-//! fallback for sketches produced by every `SketchMode`.
+//! compressed-path query engine agrees exactly with the decode-then-
+//! reference fallback for sketches produced by every `SketchMode`.
+//! (The reference accumulations are computed inline here: the crate's
+//! `decoded_*` twins are internal execution plans, not public API.)
 
 use std::path::PathBuf;
 use std::sync::Arc;
 
+use matsketch::api::{QueryRequest, QueryResponse};
 use matsketch::distributions::{DistributionKind, MatrixStats};
 use matsketch::engine::{sketch_entry_stream, PipelineConfig, SketchMode};
-use matsketch::serve::{
-    self, Query, QueryOutcome, QueryServer, ServableSketch, SketchStore, StoreKey,
-};
-use matsketch::sketch::{decode_sketch, encode_sketch, EncodedSketch, SketchPlan};
+use matsketch::serve::{self, QueryServer, ServableSketch, SketchStore, StoreKey};
+use matsketch::sketch::{decode_sketch, encode_sketch, EncodedSketch, Sketch, SketchPlan};
 use matsketch::sparse::Coo;
 use matsketch::stream::ShuffledStream;
 use matsketch::util::rng::Rng;
@@ -45,6 +46,33 @@ fn sketch_with(mode: SketchMode, kind: DistributionKind, s: u64) -> matsketch::s
 
 fn tmp_dir(tag: &str) -> PathBuf {
     std::env::temp_dir().join(format!("matsketch_itest_{tag}_{}", std::process::id()))
+}
+
+/// Reference `B·x` over a decoded sketch: same f64 accumulation order as
+/// the compressed path (row-major entries).
+fn reference_matvec(sk: &Sketch, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0f64; sk.m];
+    for e in &sk.entries {
+        y[e.row as usize] += e.value * x[e.col as usize];
+    }
+    y
+}
+
+/// Reference `Bᵀ·x` over a decoded sketch.
+fn reference_matvec_t(sk: &Sketch, x: &[f64]) -> Vec<f64> {
+    let mut y = vec![0.0f64; sk.n];
+    for e in &sk.entries {
+        y[e.col as usize] += e.value * x[e.row as usize];
+    }
+    y
+}
+
+/// Reference top-k over a decoded sketch: full sort under `rank_cmp`.
+fn reference_top_k(sk: &Sketch, k: usize) -> Vec<matsketch::sketch::SketchEntry> {
+    let mut all = sk.entries.clone();
+    all.sort_by(serve::rank_cmp);
+    all.truncate(k);
+    all
 }
 
 #[test]
@@ -110,9 +138,10 @@ fn store_rejects_corrupted_checksum_and_truncated_file() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
-/// Acceptance: compressed-path matvec / top-k results match the
-/// decode-then-CSR fallback exactly (identical f64 accumulation order)
-/// for sketches from every `SketchMode`, in both payload forms.
+/// Acceptance: compressed-path matvec / batched matvec / top-k results
+/// match the decode-then-reference fallback exactly (identical f64
+/// accumulation order) for sketches from every `SketchMode`, in both
+/// payload forms.
 #[test]
 fn compressed_queries_match_decoded_fallback_in_every_mode() {
     for mode in SketchMode::all() {
@@ -127,7 +156,7 @@ fn compressed_queries_match_decoded_fallback_in_every_mode() {
             let xt: Vec<f64> = (0..dec.m).map(|_| rng.normal()).collect();
 
             let y = serve::matvec(&enc, &x).unwrap();
-            let y_ref = serve::decoded_matvec(&dec, &x).unwrap();
+            let y_ref = reference_matvec(&dec, &x);
             assert_eq!(y.len(), y_ref.len(), "{what}");
             for (i, (a, b)) in y.iter().zip(y_ref.iter()).enumerate() {
                 assert!(
@@ -136,7 +165,7 @@ fn compressed_queries_match_decoded_fallback_in_every_mode() {
                 );
             }
             let yt = serve::matvec_t(&enc, &xt).unwrap();
-            let yt_ref = serve::decoded_matvec_t(&dec, &xt).unwrap();
+            let yt_ref = reference_matvec_t(&dec, &xt);
             for (i, (a, b)) in yt.iter().zip(yt_ref.iter()).enumerate() {
                 assert!(
                     (a - b).abs() <= 1e-12 * (1.0 + a.abs()),
@@ -144,10 +173,16 @@ fn compressed_queries_match_decoded_fallback_in_every_mode() {
                 );
             }
 
+            // the one-pass batched SpMM equals per-vector matvecs bitwise
+            let x2: Vec<f64> = (0..dec.n).map(|_| rng.normal()).collect();
+            let ys = serve::matvec_batch(&enc, &[x.clone(), x2.clone()]).unwrap();
+            assert_eq!(ys[0], y, "{what}: batch[0]");
+            assert_eq!(ys[1], serve::matvec(&enc, &x2).unwrap(), "{what}: batch[1]");
+
             for k in [1usize, 10, 100_000] {
                 assert_eq!(
                     serve::top_k(&enc, k).unwrap(),
-                    serve::decoded_top_k(&dec, k),
+                    reference_top_k(&dec, k),
                     "{what}: top-{k}"
                 );
             }
@@ -168,17 +203,20 @@ fn query_server_concurrent_answers_match_direct() {
     let server = QueryServer::start(Arc::clone(&servable), 4);
 
     let mut rng = Rng::new(77);
-    let queries: Vec<Query> = (0..40usize)
-        .map(|i| match i % 5 {
-            0 => Query::Matvec((0..n).map(|_| rng.normal()).collect()),
-            1 => Query::MatvecT((0..m).map(|_| rng.normal()).collect()),
-            2 => Query::Row((i % m) as u32),
-            3 => Query::Col((i % n) as u32),
-            _ => Query::TopK(1 + i % 9),
+    let requests: Vec<QueryRequest> = (0..40usize)
+        .map(|i| match i % 6 {
+            0 => QueryRequest::Matvec((0..n).map(|_| rng.normal()).collect()),
+            1 => QueryRequest::MatvecT((0..m).map(|_| rng.normal()).collect()),
+            2 => QueryRequest::MatvecBatch(
+                (0..2).map(|_| (0..n).map(|_| rng.normal()).collect()).collect(),
+            ),
+            3 => QueryRequest::Row((i % m) as u32),
+            4 => QueryRequest::Col((i % n) as u32),
+            _ => QueryRequest::TopK(1 + i % 9),
         })
         .collect();
-    let pending = server.submit_batch(queries.clone());
-    for (q, p) in queries.iter().zip(pending) {
+    let pending = server.submit_batch(requests.clone());
+    for (q, p) in requests.iter().zip(pending) {
         assert_eq!(p.wait().unwrap(), servable.answer(q).unwrap());
     }
     let stats = server.shutdown();
@@ -214,8 +252,8 @@ fn store_get_or_build_builds_once_then_hits() {
 
     // a served sketch from the cache answers queries
     let servable = ServableSketch::new(enc2, "Bernstein").unwrap();
-    match servable.answer(&Query::TopK(5)).unwrap() {
-        QueryOutcome::Entries(es) => assert_eq!(es.len(), 5),
+    match servable.answer(&QueryRequest::TopK(5)).unwrap() {
+        QueryResponse::Entries(es) => assert_eq!(es.len(), 5),
         other => panic!("unexpected outcome {other:?}"),
     }
     let _ = std::fs::remove_dir_all(&dir);
@@ -231,6 +269,6 @@ fn spilling_mode_sketch_serves_like_any_other() {
     let mut rng = Rng::new(1);
     let x: Vec<f64> = (0..sk.n).map(|_| rng.normal()).collect();
     let y = serve::matvec(&enc, &x).unwrap();
-    let y_ref = serve::decoded_matvec(&decode_sketch(&enc, &sk.method).unwrap(), &x).unwrap();
+    let y_ref = reference_matvec(&decode_sketch(&enc, &sk.method).unwrap(), &x);
     assert_eq!(y, y_ref);
 }
