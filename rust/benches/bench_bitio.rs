@@ -1,0 +1,287 @@
+//! E12 — decode-path throughput: the word-level γ codec vs the scalar
+//! per-bit baseline, and row-parallel compressed matvec worker scaling
+//! on the tall-matrix shape. Since every serving op streams off the
+//! Elias-γ payload, γ-decode throughput *is* serving throughput.
+//!
+//! Besides the usual bench lines, this binary writes the perf-trajectory
+//! artifacts CI asserts on: `<out>/decode_throughput.{csv,md}` and
+//! `<out>/BENCH_decode.json` (γ-decode MB/s for both codecs, the
+//! speedup, matvec GFLOP-equivalents, and per-worker-count scaling).
+//! `--out DIR` overrides the default `reports` directory.
+
+#[path = "common/mod.rs"]
+mod common;
+
+use std::sync::Arc;
+
+use common::{bench_items, default_budget, section, BenchResult};
+use matsketch::api::{QueryRequest, QueryResponse};
+use matsketch::datasets::{synthetic_cf, SyntheticConfig};
+use matsketch::distributions::DistributionKind;
+use matsketch::eval::report::{fixed, Table};
+use matsketch::serve::{QueryServer, ServableSketch};
+use matsketch::sketch::bitio::scalar::{ScalarBitReader, ScalarBitWriter};
+use matsketch::sketch::bitio::{BitReader, BitWriter};
+use matsketch::sketch::{encode_sketch, sketch_offline, SketchPlan};
+use matsketch::util::json::{num, obj, Json};
+use matsketch::util::rng::Rng;
+
+/// A γ-value stream shaped like a sketch payload body: mostly small
+/// column deltas and multiplicities, a tail of large row jumps.
+fn payload_like_values(count: usize, seed: u64) -> Vec<u64> {
+    let mut rng = Rng::new(seed);
+    (0..count)
+        .map(|_| match rng.u64_below(16) {
+            0..=9 => 1 + rng.u64_below(8),            // small deltas dominate
+            10..=13 => 1 + rng.u64_below(1 << 10),    // medium gaps
+            14 => 1 + rng.u64_below(1 << 24),         // large gaps
+            _ => 1 + rng.u64_below(u64::MAX >> 16),   // rare huge jumps
+        })
+        .collect()
+}
+
+fn main() {
+    let out = out_dir();
+    let budget = default_budget();
+    let mut table = Table::new(
+        "decode_throughput",
+        &["section", "name", "median_us", "throughput", "unit", "speedup"],
+    );
+    let mut json: Vec<(&str, Json)> = Vec::new();
+
+    // --- γ codec: word-level vs per-bit scalar baseline ---
+    let vals = payload_like_values(2_000_000, 0xB17);
+    let mut w = BitWriter::new();
+    for &v in &vals {
+        w.put_gamma(v);
+    }
+    let payload = w.finish();
+    let mb = payload.len() as f64 / 1e6;
+    println!(
+        "γ stream: {} values, {:.2} MB encoded ({:.2} bits/value)",
+        vals.len(),
+        mb,
+        payload.len() as f64 * 8.0 / vals.len() as f64
+    );
+
+    section("γ encode: word-level writer vs per-bit baseline");
+    let enc_scalar = bench_items("gamma_encode_scalar", budget, vals.len() as f64, || {
+        let mut w = ScalarBitWriter::new();
+        for &v in &vals {
+            w.put_gamma(v);
+        }
+        w.finish().len()
+    });
+    enc_scalar.report();
+    let enc_word = bench_items("gamma_encode_word", budget, vals.len() as f64, || {
+        let mut w = BitWriter::new();
+        for &v in &vals {
+            w.put_gamma(v);
+        }
+        w.finish().len()
+    });
+    enc_word.report();
+
+    // the put_bits satellite micro-bench: byte-aligned fixed-width runs
+    // (the store-container header path) — the old writer looped put_bit
+    section("aligned put_bits: word-level writer vs per-bit baseline");
+    let words: Vec<u64> = {
+        let mut rng = Rng::new(0xA11);
+        (0..500_000).map(|_| rng.next_u64()).collect()
+    };
+    let putbits_scalar = bench_items("put_bits64_scalar", budget, words.len() as f64, || {
+        let mut w = ScalarBitWriter::new();
+        for &v in &words {
+            w.put_bits(v, 64);
+        }
+        w.finish().len()
+    });
+    putbits_scalar.report();
+    let putbits_word = bench_items("put_bits64_word", budget, words.len() as f64, || {
+        let mut w = BitWriter::new();
+        for &v in &words {
+            w.put_bits(v, 64);
+        }
+        w.finish().len()
+    });
+    putbits_word.report();
+
+    section("γ decode: word-level reader vs per-bit baseline");
+    let dec_scalar = bench_items("gamma_decode_scalar", budget, vals.len() as f64, || {
+        let mut r = ScalarBitReader::new(&payload);
+        let mut sum = 0u64;
+        while let Some(v) = r.get_gamma() {
+            sum = sum.wrapping_add(v);
+        }
+        sum
+    });
+    dec_scalar.report();
+    let dec_word = bench_items("gamma_decode_word", budget, vals.len() as f64, || {
+        let mut r = BitReader::new(&payload);
+        let mut sum = 0u64;
+        while let Some(v) = r.get_gamma() {
+            sum = sum.wrapping_add(v);
+        }
+        sum
+    });
+    dec_word.report();
+
+    let scalar_mbs = mb / dec_scalar.median;
+    let word_mbs = mb / dec_word.median;
+    let decode_speedup = word_mbs / scalar_mbs;
+    println!(
+        "γ decode: scalar {scalar_mbs:.1} MB/s, word {word_mbs:.1} MB/s \
+         ({decode_speedup:.2}x, target ≥3x)"
+    );
+
+    push_codec_row(&mut table, "gamma_encode", "scalar", &enc_scalar, mb, 1.0);
+    push_codec_row(
+        &mut table,
+        "gamma_encode",
+        "word",
+        &enc_word,
+        mb,
+        enc_scalar.median / enc_word.median,
+    );
+    push_codec_row(&mut table, "put_bits64", "scalar", &putbits_scalar, 4.0, 1.0);
+    push_codec_row(
+        &mut table,
+        "put_bits64",
+        "word",
+        &putbits_word,
+        4.0,
+        putbits_scalar.median / putbits_word.median,
+    );
+    push_codec_row(&mut table, "gamma_decode", "scalar", &dec_scalar, mb, 1.0);
+    push_codec_row(&mut table, "gamma_decode", "word", &dec_word, mb, decode_speedup);
+    json.push(("gamma_decode_scalar_mb_s", num(scalar_mbs)));
+    json.push(("gamma_decode_word_mb_s", num(word_mbs)));
+    json.push(("gamma_decode_speedup", num(decode_speedup)));
+    json.push(("gamma_encode_speedup", num(enc_scalar.median / enc_word.median)));
+    json.push(("put_bits64_speedup", num(putbits_scalar.median / putbits_word.median)));
+
+    // --- row-parallel matvec scaling on the tall-matrix shape ---
+    section("row-parallel matvec: 20000-row sketch, worker scaling");
+    let tall = synthetic_cf(&SyntheticConfig { m: 20_000, n: 100, ..Default::default() })
+        .to_csr();
+    let s_tall = (tall.nnz() as u64) / 10;
+    let plan = SketchPlan::new(DistributionKind::Bernstein, s_tall).with_seed(3);
+    let sk = sketch_offline(&tall, &plan).unwrap();
+    let enc = encode_sketch(&sk).unwrap();
+    let nnz = sk.nnz() as f64;
+    let servable = Arc::new(ServableSketch::new(enc, plan.kind.name()).unwrap());
+    println!(
+        "tall sketch: {}x{}, {} stored entries, {} occupied rows",
+        tall.m,
+        tall.n,
+        sk.nnz(),
+        servable.row_index().len()
+    );
+    let mut rng = Rng::new(0x7A11);
+    let x: Vec<f64> = (0..tall.n).map(|_| rng.normal()).collect();
+
+    let queries_per_iter = 8usize;
+    let mut base_median = 0.0f64;
+    let mut scaling: Vec<(usize, f64, f64)> = Vec::new(); // (workers, qps, speedup)
+    for workers in [1usize, 2, 4] {
+        // split threshold 1 so the single-query fork/reduce path is what
+        // w>1 measures; submissions are sequential, so the speedup is
+        // pure row-parallel decode scaling, not request concurrency
+        let server = QueryServer::start_with(Arc::clone(&servable), workers, 1);
+        let r = bench_items(
+            &format!("matvec_split_workers={workers}"),
+            budget,
+            nnz * queries_per_iter as f64,
+            || {
+                for _ in 0..queries_per_iter {
+                    let QueryResponse::Vector(y) =
+                        server.submit(QueryRequest::Matvec(x.clone())).wait().unwrap()
+                    else {
+                        unreachable!("matvec answers are vectors");
+                    };
+                    std::hint::black_box(y);
+                }
+            },
+        );
+        r.report();
+        server.shutdown();
+        if workers == 1 {
+            base_median = r.median;
+        }
+        let qps = queries_per_iter as f64 / r.median;
+        let gflops = 2.0 * nnz * queries_per_iter as f64 / r.median / 1e9;
+        let speedup = base_median / r.median;
+        table.push(vec![
+            "matvec".into(),
+            format!("workers={workers}"),
+            fixed(r.median * 1e6 / queries_per_iter as f64, 1),
+            fixed(qps, 1),
+            "queries/s".into(),
+            fixed(speedup, 2),
+        ]);
+        json.push((
+            match workers {
+                1 => "matvec_workers_1_qps",
+                2 => "matvec_workers_2_qps",
+                _ => "matvec_workers_4_qps",
+            },
+            num(qps),
+        ));
+        scaling.push((workers, qps, speedup));
+        println!(
+            "  workers={workers}: {qps:.1} queries/s, {gflops:.3} GFLOP-equiv, \
+             {speedup:.2}x vs 1 worker"
+        );
+    }
+    let gflops_best = scaling
+        .iter()
+        .map(|&(_, qps, _)| 2.0 * nnz * qps / 1e9)
+        .fold(0.0f64, f64::max);
+    json.push(("matvec_gflop_equiv_best", num(gflops_best)));
+    json.push((
+        "matvec_speedup_4_workers",
+        num(scaling.last().map(|&(_, _, s)| s).unwrap_or(0.0)),
+    ));
+
+    // --- perf-trajectory artifacts ---
+    table.write(&out).expect("write decode_throughput tables");
+    let json_path = out.join("BENCH_decode.json");
+    std::fs::write(&json_path, obj(json).to_string()).expect("write BENCH_decode.json");
+    println!(
+        "\nwrote {}/decode_throughput.{{csv,md}} and {}",
+        out.display(),
+        json_path.display()
+    );
+}
+
+/// `--out DIR` (default `reports`), tolerated anywhere in the arg list.
+fn out_dir() -> std::path::PathBuf {
+    let mut args = std::env::args();
+    while let Some(arg) = args.next() {
+        if arg == "--out" {
+            if let Some(dir) = args.next() {
+                return dir.into();
+            }
+        }
+    }
+    "reports".into()
+}
+
+/// One codec row: throughput in MB/s of the shared payload size.
+fn push_codec_row(
+    table: &mut Table,
+    section: &str,
+    name: &str,
+    r: &BenchResult,
+    mb: f64,
+    speedup: f64,
+) {
+    table.push(vec![
+        section.into(),
+        name.into(),
+        fixed(r.median * 1e6, 1),
+        fixed(mb / r.median, 1),
+        "MB/s".into(),
+        fixed(speedup, 2),
+    ]);
+}

@@ -84,6 +84,51 @@ fn main() {
         .report();
     }
 
+    // ROADMAP "leader-path micro-perf": would a per-entry `ingest_one`
+    // trait method beat the buffered stream driver on the sharded path?
+    // Measured exactly — `ingest(&[e])` per entry (what an ingest_one
+    // default method would do) vs the default batched driver. The
+    // buffered form stays unless per-entry wins; numbers are recorded
+    // in ROADMAP.md.
+    section("leader ingest granularity: buffered driver vs per-entry ingest");
+    {
+        use matsketch::engine::build_sketcher;
+        use matsketch::stream::EntryStream;
+        for workers in [1usize, 4] {
+            let cfg = PipelineConfig { workers, ..Default::default() };
+            let plan = SketchPlan::new(DistributionKind::Bernstein, (nnz as u64) / 10)
+                .with_seed(5);
+            bench_items(
+                &format!("leader_buffered_batch{}_w{workers}", cfg.batch),
+                budget,
+                nnz,
+                || {
+                    sketch_entry_stream(
+                        SketchMode::Sharded,
+                        VecStream::new(&a),
+                        &stats,
+                        &plan,
+                        &cfg,
+                    )
+                    .unwrap()
+                    .0
+                    .nnz()
+                },
+            )
+            .report();
+            bench_items(&format!("leader_ingest_one_w{workers}"), budget, nnz, || {
+                let mut sketcher =
+                    build_sketcher(SketchMode::Sharded, &stats, &plan, &cfg).unwrap();
+                let mut stream = VecStream::new(&a);
+                while let Some(e) = stream.next_entry().unwrap() {
+                    sketcher.ingest(std::slice::from_ref(&e)).unwrap();
+                }
+                sketcher.finalize().unwrap().0.nnz()
+            })
+            .report();
+        }
+    }
+
     section("pipeline: backpressure (tiny channels, bounded spill)");
     let cfg = PipelineConfig {
         workers: 4,

@@ -134,6 +134,26 @@ fn main() {
             servable.answer(&QueryRequest::TopK(10)).unwrap()
         })
         .report();
+
+        // row-parallel matvec on the same tall sketch: one query at a
+        // time, split across the pool via the per-row offset index with
+        // a deterministic in-order reduction (answers bit-identical to
+        // the sequential scan) — the speedup from workers=1 to 4 is the
+        // decode-path scaling story reported in decode_throughput.*
+        section("row-parallel matvec: tall sketch (20000 x 100) worker scaling");
+        let tall_served = Arc::new(servable);
+        let xs_tall: Vec<f64> = (0..tall.n).map(|_| rng.normal()).collect();
+        for workers in [1usize, 2, 4] {
+            let server = QueryServer::start_with(Arc::clone(&tall_served), workers, 1);
+            bench_items(
+                &format!("matvec_split_workers={workers}"),
+                budget,
+                sk.nnz() as f64,
+                || server.submit(QueryRequest::Matvec(xs_tall.clone())).wait().unwrap(),
+            )
+            .report();
+            server.shutdown();
+        }
     }
 
     section("QueryServer: concurrent matvec readers (Bernstein)");

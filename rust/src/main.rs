@@ -14,8 +14,8 @@
 //!                       --op matvec|matvec-t|matvec-batch|row|col|top-k
 //!                       [--k K] [--index I] [--x-seed N] [--batch-k K]
 //! matsketch serve-bench [--small] [--seed N] [--out DIR] [--store DIR]
-//!                       [--readers 1,2,4] [--queries Q] [--batch-ks 1,4,16]
-//!                       [--datasets a,b]
+//!                       [--readers 1,2,4 | --workers 1,2,4] [--queries Q]
+//!                       [--batch-ks 1,4,16] [--datasets a,b]
 //! matsketch serve       --addr HOST:PORT [--store DIR] [--workers W]
 //!                       [--max-conns N] [--timeout-secs S]
 //!                       [--shutdown-after-secs S]
@@ -259,8 +259,13 @@ fn real_main() -> Result<()> {
             result?;
         }
         "serve-bench" => {
+            // --workers is an alias for --readers: the reader counts ARE
+            // the per-sketch worker-pool sizes under test (and, on tall
+            // sketches, the row-parallel split width per query)
+            let readers_spec =
+                args.get("workers").unwrap_or_else(|| args.get_or("readers", "1,2,4"));
             let cfg = matsketch::eval::ServeConfig {
-                readers: parse_usize_list(args.get_or("readers", "1,2,4"))?,
+                readers: parse_usize_list(readers_spec)?,
                 queries: args.get_parse_or("queries", 64)?,
                 batch_ks: parse_usize_list(args.get_or("batch-ks", "1,4,16"))?,
                 budget_frac: args.get_parse_or("budget-frac", 10)?,
@@ -664,6 +669,9 @@ QUERY OPTIONS:
 SERVE-BENCH OPTIONS:
   [--readers 1,2,4] [--queries Q] [--batch-ks 1,4,16] [--budget-frac F]
   [--datasets a,b]
+  --workers is accepted as an alias for --readers (the reader counts are
+  the per-sketch worker-pool sizes, which also row-parallelize single
+  matvec/top-k queries on tall sketches).
 
 SERVE OPTIONS:
   --addr HOST:PORT [--workers W] [--max-conns N] [--timeout-secs S]

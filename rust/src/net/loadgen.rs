@@ -7,7 +7,9 @@
 //! back-to-back (closed loop: the next query starts when the previous
 //! answer lands). Per-query wall latencies are recorded and aggregated
 //! into throughput plus a latency histogram (p50/p95/p99 via
-//! [`crate::util::stats::quantiles`]) — the numbers
+//! [`crate::util::stats::quantiles_in_place`], which selects order
+//! statistics in the owned latency buffer instead of sorting a clone) —
+//! the numbers
 //! `matsketch net-bench` reports into the eval tables next to the
 //! in-process `serving.*` ones. Because the harness only sees
 //! `dyn SketchClient`, the same loop measures either backend and the
@@ -19,7 +21,7 @@ use crate::api::{BoxedSketchClient, QueryRequest, RemoteClient};
 use crate::error::{Error, Result};
 use crate::serve::StoreKey;
 use crate::util::rng::Rng;
-use crate::util::stats::quantiles;
+use crate::util::stats::quantiles_in_place;
 use crate::warn_log;
 
 /// Which operation mix a load run issues.
@@ -198,7 +200,11 @@ where
     if let Some(e) = first_err {
         warn_log!("net-bench: some load clients failed: {e}");
     }
-    let qs = quantiles(&latencies_us, &[0.5, 0.95, 0.99]);
+    // mean/max are permutation-invariant, so the owned latency buffer
+    // doubles as the selection scratch: no clone, no sort
+    let mean_us = latencies_us.iter().sum::<f64>() / latencies_us.len() as f64;
+    let max_us = latencies_us.iter().cloned().fold(0.0, f64::max);
+    let qs = quantiles_in_place(&mut latencies_us, &[0.5, 0.95, 0.99]);
     Ok(LoadReport {
         clients: cfg.clients,
         queries: latencies_us.len() as u64,
@@ -208,8 +214,8 @@ where
         p50_us: qs[0],
         p95_us: qs[1],
         p99_us: qs[2],
-        mean_us: latencies_us.iter().sum::<f64>() / latencies_us.len() as f64,
-        max_us: latencies_us.iter().cloned().fold(0.0, f64::max),
+        mean_us,
+        max_us,
     })
 }
 

@@ -22,7 +22,11 @@
 //!   [`ServableSketch::answer`].
 //! * [`server`] — [`QueryServer`]: one immutable compressed sketch shared
 //!   across worker threads answering batched
-//!   [`crate::api::QueryRequest`]s over per-job reply channels.
+//!   [`crate::api::QueryRequest`]s over per-job reply channels. Large
+//!   matvec / batched-matvec / top-k requests are **row-parallel**: the
+//!   per-row offset index splits one query into contiguous windows
+//!   across the pool, reduced in window order so answers stay
+//!   bit-identical to the sequential scan.
 //!
 //! CLI entry points: `matsketch sketch` writes into the store,
 //! `matsketch query` answers one query from it (locally or against a

@@ -181,6 +181,114 @@ pub(crate) fn row_slice_indexed(
     Ok(out)
 }
 
+/// Walk the row-group window `index[lo..hi]`, calling
+/// `f(group ordinal within the window, entry)` for every entry in
+/// stream order — the shared group-transition tracking (and over-decode
+/// guard) behind both split-matvec executors.
+fn walk_groups(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    index: &[(u32, u64)],
+    lo: usize,
+    hi: usize,
+    mut f: impl FnMut(usize, SketchEntry),
+) -> Result<()> {
+    let (m, n) = (header.m, header.n);
+    let mut cur = SketchCursor::row_range(enc, header, index, lo, hi);
+    let mut ord = 0usize;
+    let mut last_row = u32::MAX;
+    while let Some(e) = cur.next_entry()? {
+        check_bounds(&e, m, n)?;
+        if e.row != last_row {
+            if last_row != u32::MAX {
+                ord += 1;
+            }
+            last_row = e.row;
+            if ord >= hi - lo {
+                return Err(Error::Parse(
+                    "row window decoded more groups than its index range".into(),
+                ));
+            }
+        }
+        f(ord, e);
+    }
+    Ok(())
+}
+
+/// Per-row-group partial matvec over the contiguous window
+/// `index[lo..hi]`: returns one f64 sum per group, in window order. Each
+/// group's sum is accumulated over its entries in stream order — exactly
+/// the contribution the sequential [`matvec`] scan writes into
+/// `y[group row]` — so scattering the partials of disjoint windows back
+/// by group row reproduces the sequential answer **bit-identically**.
+pub(crate) fn matvec_groups(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    index: &[(u32, u64)],
+    lo: usize,
+    hi: usize,
+    x: &[f64],
+) -> Result<Vec<f64>> {
+    if x.len() != header.n {
+        return Err(Error::shape(format!(
+            "matvec: x has {} entries, B has {} columns",
+            x.len(),
+            header.n
+        )));
+    }
+    let mut sums = vec![0.0f64; hi - lo];
+    walk_groups(enc, header, index, lo, hi, |ord, e| {
+        sums[ord] += e.value * x[e.col as usize];
+    })?;
+    Ok(sums)
+}
+
+/// Batched form of [`matvec_groups`]: one pass over the window, one
+/// per-group sum row per right-hand side (`out[vector][group]`). Each
+/// (vector, group) accumulation order matches [`matvec_batch`]'s exactly.
+pub(crate) fn matvec_batch_groups(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    index: &[(u32, u64)],
+    lo: usize,
+    hi: usize,
+    xs: &[Vec<f64>],
+) -> Result<Vec<Vec<f64>>> {
+    for (i, x) in xs.iter().enumerate() {
+        if x.len() != header.n {
+            return Err(Error::shape(format!(
+                "matvec_batch: x[{i}] has {} entries, B has {} columns",
+                x.len(),
+                header.n
+            )));
+        }
+    }
+    let mut sums = vec![vec![0.0f64; hi - lo]; xs.len()];
+    walk_groups(enc, header, index, lo, hi, |ord, e| {
+        let c = e.col as usize;
+        for (s, x) in sums.iter_mut().zip(xs) {
+            s[ord] += e.value * x[c];
+        }
+    })?;
+    Ok(sums)
+}
+
+/// Window-local top-k over `index[lo..hi]` under [`rank_cmp`]. Because
+/// the ranking is a strict total order (coordinates are unique), merging
+/// the window-local top-k lists of a disjoint cover and re-truncating
+/// reproduces the global [`top_k`] answer element-for-element.
+pub(crate) fn top_k_groups(
+    enc: &EncodedSketch,
+    header: &PayloadHeader,
+    index: &[(u32, u64)],
+    lo: usize,
+    hi: usize,
+    k: usize,
+) -> Result<Vec<SketchEntry>> {
+    let mut cur = SketchCursor::row_range(enc, header, index, lo, hi);
+    top_k_cursor(&mut cur, k)
+}
+
 /// All entries of column `j`, in row order (full payload scan).
 pub fn col_slice(enc: &EncodedSketch, j: u32) -> Result<Vec<SketchEntry>> {
     col_slice_h(enc, &PayloadHeader::parse(enc)?, j)
@@ -230,6 +338,13 @@ pub(crate) fn top_k_h(
     k: usize,
 ) -> Result<Vec<SketchEntry>> {
     let mut cur = SketchCursor::with_header(enc, header);
+    top_k_cursor(&mut cur, k)
+}
+
+/// The k-bounded selection body shared by the full-payload and
+/// row-window top-k plans: drain `cur`, keeping the `k` heaviest entries
+/// under [`rank_cmp`], heaviest first.
+fn top_k_cursor(cur: &mut SketchCursor<'_>, k: usize) -> Result<Vec<SketchEntry>> {
     if k == 0 {
         return Ok(Vec::new());
     }
@@ -438,6 +553,65 @@ mod tests {
                 got.windows(2).all(|w| rank_cmp(&w[0], &w[1]) == Ordering::Less),
                 "k={k}: not strictly ordered"
             );
+        }
+    }
+
+    #[test]
+    fn group_partials_reassemble_sequential_answers_bitwise() {
+        for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+            let (enc, dec) = toy(kind);
+            let header = PayloadHeader::parse(&enc).unwrap();
+            let index = crate::sketch::row_group_index(&enc).unwrap();
+            let g = index.len();
+            let mut rng = Rng::new(17);
+            let x: Vec<f64> = (0..dec.n).map(|_| rng.normal()).collect();
+
+            // matvec: scatter per-group partial sums of any contiguous
+            // cover back by group row == the sequential scan, bitwise
+            let want = matvec(&enc, &x).unwrap();
+            for chunks in [1usize, 2, 3, g] {
+                let mut y = vec![0.0f64; dec.m];
+                let mut lo = 0usize;
+                for c in 0..chunks {
+                    let hi = (g * (c + 1)) / chunks;
+                    let sums = matvec_groups(&enc, &header, &index, lo, hi, &x).unwrap();
+                    assert_eq!(sums.len(), hi - lo);
+                    for (off, s) in sums.iter().enumerate() {
+                        y[index[lo + off].0 as usize] = *s;
+                    }
+                    lo = hi;
+                }
+                for (a, b) in y.iter().zip(&want) {
+                    assert_eq!(a.to_bits(), b.to_bits(), "{kind:?} chunks={chunks}");
+                }
+            }
+
+            // top-k: merging window-local top-k lists re-truncated under
+            // rank_cmp equals the global answer element-for-element
+            let want_k = top_k(&enc, 7).unwrap();
+            let mid = g / 2;
+            let mut cand = top_k_groups(&enc, &header, &index, 0, mid, 7).unwrap();
+            cand.extend(top_k_groups(&enc, &header, &index, mid, g, 7).unwrap());
+            cand.sort_by(rank_cmp);
+            cand.truncate(7);
+            assert_eq!(cand, want_k, "{kind:?}");
+
+            // batched matvec partials
+            let xs: Vec<Vec<f64>> = (0..3)
+                .map(|_| (0..dec.n).map(|_| rng.normal()).collect())
+                .collect();
+            let want_b = matvec_batch(&enc, &xs).unwrap();
+            let sums = matvec_batch_groups(&enc, &header, &index, 0, g, &xs).unwrap();
+            assert_eq!(sums.len(), xs.len());
+            for (v, wv) in sums.iter().zip(&want_b) {
+                for (off, s) in v.iter().enumerate() {
+                    assert_eq!(
+                        s.to_bits(),
+                        wv[index[off].0 as usize].to_bits(),
+                        "{kind:?} batch partial"
+                    );
+                }
+            }
         }
     }
 

@@ -1,19 +1,34 @@
 //! The multi-threaded serving core: one immutable loaded sketch shared
 //! across worker threads answering batched query requests.
 //!
-//! A [`QueryServer`] owns `W` workers pulling [`QueryRequest`] jobs off a
-//! shared queue; each job carries its own reply channel, so callers
+//! A [`QueryServer`] owns `W` workers pulling tasks off a shared queue;
+//! each submitted request carries its own reply channel, so callers
 //! submit (optionally in batches), keep working, and [`Pending::wait`]
 //! when they need the answer. The sketch stays in its compressed form for
 //! the whole server lifetime — workers answer straight off the Elias-γ
 //! payload via [`super::query`], so serving memory is the compressed
 //! size, not the decoded one.
 //!
+//! ## Row-parallel queries
+//!
+//! On sketches with at least [`QueryServer::DEFAULT_SPLIT_MIN_GROUPS`]
+//! occupied rows, a single matvec / batched-matvec / top-k request is
+//! **split across the pool**: the per-row offset index is partitioned
+//! into `W` contiguous windows, each worker decodes one window
+//! ([`crate::sketch::SketchCursor::row_range`]) into a partial result,
+//! and the last finisher reduces the partials **in window order** —
+//! per-row f64 accumulation order is exactly the sequential scan's, so
+//! the combined answer is bit-identical to a one-thread answer (pinned
+//! in `tests/integration_serve.rs` for every Figure-1 distribution).
+//! `Bᵀ·x` and column slices stay sequential (their accumulations cross
+//! rows), and row slices already seek through the index.
+//!
 //! Callers do not drive this type directly any more: the public query
 //! surface is [`crate::api::SketchClient`], whose in-process backend
 //! ([`crate::api::LocalClient`]) and network front ([`crate::net`]) both
 //! dispatch onto these pools.
 
+use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -21,7 +36,7 @@ use std::thread::JoinHandle;
 use crate::api::{QueryRequest, QueryResponse};
 use crate::error::{Error, Result};
 use crate::sketch::{
-    encode_sketch, row_group_index_h, EncodedSketch, PayloadHeader, Sketch,
+    encode_sketch, row_group_index_h, EncodedSketch, PayloadHeader, Sketch, SketchEntry,
 };
 
 use super::query;
@@ -124,10 +139,145 @@ impl ServableSketch {
     }
 }
 
-/// One in-flight job: the request plus its private reply channel.
-struct Job {
-    request: QueryRequest,
+/// One unit of worker work: a whole request, or one window of a
+/// row-parallel split.
+enum Task {
+    /// One request answered sequentially, with its private reply channel.
+    Whole {
+        request: QueryRequest,
+        reply: SyncSender<Result<QueryResponse>>,
+    },
+    /// One contiguous row-group window of a split request.
+    Shard { plan: Arc<SplitPlan>, chunk: usize },
+}
+
+/// Which operator a row-parallel split runs. Only row-separable
+/// operators split: matvec and batched matvec (each output row is one
+/// row group's private sum) and top-k (a strict total order, so
+/// window-local winners merge exactly).
+enum SplitOp {
+    Matvec(Vec<f64>),
+    MatvecBatch(Vec<Vec<f64>>),
+    TopK(usize),
+}
+
+/// One window's partial result.
+enum Partial {
+    /// Per-group sums, window order ([`query::matvec_groups`]).
+    Sums(Vec<f64>),
+    /// Per-vector per-group sums ([`query::matvec_batch_groups`]).
+    SumsBatch(Vec<Vec<f64>>),
+    /// Window-local top-k ([`query::top_k_groups`]).
+    TopK(Vec<SketchEntry>),
+}
+
+/// Collected window partials of one split request, indexed by chunk.
+type PartialSlots = Vec<Option<Result<Partial>>>;
+
+/// Shared state of one split request: the operator, the row-group
+/// windows, the collected partials, and the reply channel. The last
+/// worker to finish its window performs the reduction — partials are
+/// combined **in window order**, never completion order, so the answer
+/// is deterministic and bit-identical to the sequential scan.
+struct SplitPlan {
+    op: SplitOp,
+    /// Contiguous `[lo, hi)` windows into the row-group index, ascending.
+    ranges: Vec<(usize, usize)>,
+    partials: Mutex<PartialSlots>,
+    remaining: AtomicUsize,
     reply: SyncSender<Result<QueryResponse>>,
+}
+
+impl SplitPlan {
+    /// Decode and accumulate one window.
+    fn run_chunk(&self, sk: &ServableSketch, chunk: usize) -> Result<Partial> {
+        let (lo, hi) = self.ranges[chunk];
+        let (enc, header, index) = (&sk.enc, sk.header(), sk.row_index());
+        Ok(match &self.op {
+            SplitOp::Matvec(x) => {
+                Partial::Sums(query::matvec_groups(enc, header, index, lo, hi, x)?)
+            }
+            SplitOp::MatvecBatch(xs) => {
+                Partial::SumsBatch(query::matvec_batch_groups(enc, header, index, lo, hi, xs)?)
+            }
+            SplitOp::TopK(k) => {
+                Partial::TopK(query::top_k_groups(enc, header, index, lo, hi, *k)?)
+            }
+        })
+    }
+
+    /// Record `chunk`'s partial; the last finisher reduces and replies.
+    /// Returns `true` iff this call completed (and answered) the request.
+    fn complete(&self, sk: &ServableSketch, chunk: usize, result: Result<Partial>) -> bool {
+        {
+            // a poisoned lock means a sibling worker panicked mid-query;
+            // dropping the plan without replying surfaces it at wait()
+            let Ok(mut partials) = self.partials.lock() else { return false };
+            partials[chunk] = Some(result);
+        }
+        if self.remaining.fetch_sub(1, Ordering::AcqRel) != 1 {
+            return false;
+        }
+        let taken = match self.partials.lock() {
+            Ok(mut p) => std::mem::take(&mut *p),
+            Err(_) => return false,
+        };
+        let _ = self.reply.send(self.reduce(sk, taken));
+        true
+    }
+
+    /// Combine the window partials in window order.
+    fn reduce(&self, sk: &ServableSketch, partials: PartialSlots) -> Result<QueryResponse> {
+        // deterministic error reporting: the lowest window's error wins,
+        // independent of which worker finished first
+        let mut parts = Vec::with_capacity(partials.len());
+        for p in partials {
+            match p {
+                Some(Ok(part)) => parts.push(part),
+                Some(Err(e)) => return Err(e),
+                None => {
+                    return Err(Error::Pipeline("split query lost a window partial".into()))
+                }
+            }
+        }
+        let index = sk.row_index();
+        let m = sk.header().m;
+        let mismatch = || Error::Pipeline("split query partial kind mismatch".into());
+        Ok(match &self.op {
+            SplitOp::Matvec(_) => {
+                let mut y = vec![0.0f64; m];
+                for (&(lo, _), part) in self.ranges.iter().zip(parts) {
+                    let Partial::Sums(sums) = part else { return Err(mismatch()) };
+                    for (off, s) in sums.into_iter().enumerate() {
+                        y[index[lo + off].0 as usize] = s;
+                    }
+                }
+                QueryResponse::Vector(y)
+            }
+            SplitOp::MatvecBatch(xs) => {
+                let mut ys = vec![vec![0.0f64; m]; xs.len()];
+                for (&(lo, _), part) in self.ranges.iter().zip(parts) {
+                    let Partial::SumsBatch(sb) = part else { return Err(mismatch()) };
+                    for (y, sums) in ys.iter_mut().zip(sb) {
+                        for (off, s) in sums.into_iter().enumerate() {
+                            y[index[lo + off].0 as usize] = s;
+                        }
+                    }
+                }
+                QueryResponse::Vectors(ys)
+            }
+            SplitOp::TopK(k) => {
+                let mut all: Vec<SketchEntry> = Vec::new();
+                for part in parts {
+                    let Partial::TopK(es) = part else { return Err(mismatch()) };
+                    all.extend(es);
+                }
+                all.sort_by(query::rank_cmp);
+                all.truncate(*k);
+                QueryResponse::Entries(all)
+            }
+        })
+    }
 }
 
 /// Handle to one submitted request's eventual answer.
@@ -162,18 +312,41 @@ impl ServerStats {
 }
 
 /// A pool of worker threads answering requests against one shared
-/// compressed sketch.
+/// compressed sketch, splitting large row-separable queries across the
+/// pool (see the module docs).
 pub struct QueryServer {
     sketch: Arc<ServableSketch>,
-    tx: Sender<Job>,
+    tx: Sender<Task>,
     handles: Vec<JoinHandle<u64>>,
+    split_min_groups: usize,
 }
 
 impl QueryServer {
-    /// Spawn `workers` (min 1) threads serving `sketch`.
+    /// Default minimum occupied row groups before a single query is
+    /// split across the pool. Below this the whole-payload decode is so
+    /// cheap that the fork/reduce coordination costs more than it saves
+    /// (and concurrent requests already keep every worker busy); above
+    /// it, one tall-matrix matvec scales with the worker count.
+    pub const DEFAULT_SPLIT_MIN_GROUPS: usize = 512;
+
+    /// Spawn `workers` (min 1) threads serving `sketch`, splitting
+    /// row-separable queries once the sketch has at least
+    /// [`Self::DEFAULT_SPLIT_MIN_GROUPS`] occupied rows.
     pub fn start(sketch: Arc<ServableSketch>, workers: usize) -> QueryServer {
+        Self::start_with(sketch, workers, Self::DEFAULT_SPLIT_MIN_GROUPS)
+    }
+
+    /// [`Self::start`] with an explicit split threshold: requests are
+    /// row-parallelized only when the sketch has ≥ `split_min_groups`
+    /// occupied rows (and the pool has ≥ 2 workers). Tests pin
+    /// parallel-vs-sequential bit-equality with a threshold of 1.
+    pub fn start_with(
+        sketch: Arc<ServableSketch>,
+        workers: usize,
+        split_min_groups: usize,
+    ) -> QueryServer {
         let workers = workers.max(1);
-        let (tx, rx) = channel::<Job>();
+        let (tx, rx) = channel::<Task>();
         let rx = Arc::new(Mutex::new(rx));
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
@@ -184,20 +357,32 @@ impl QueryServer {
                 loop {
                     // hold the queue lock only for the dequeue, not the
                     // (possibly long) answer computation
-                    let job = match rx.lock() {
+                    let task = match rx.lock() {
                         Ok(guard) => guard.recv(),
                         Err(_) => break,
                     };
-                    let Ok(job) = job else { break };
-                    let out = sk.answer(&job.request);
-                    // a caller that dropped its Pending is fine to ignore
-                    let _ = job.reply.send(out);
-                    served += 1;
+                    let Ok(task) = task else { break };
+                    match task {
+                        Task::Whole { request, reply } => {
+                            let out = sk.answer(&request);
+                            // a caller that dropped its Pending is fine
+                            let _ = reply.send(out);
+                            served += 1;
+                        }
+                        Task::Shard { plan, chunk } => {
+                            let out = plan.run_chunk(&sk, chunk);
+                            if plan.complete(&sk, chunk, out) {
+                                // a split request counts once, credited
+                                // to the worker that reduced it
+                                served += 1;
+                            }
+                        }
+                    }
                 }
                 served
             }));
         }
-        QueryServer { sketch, tx, handles }
+        QueryServer { sketch, tx, handles, split_min_groups }
     }
 
     /// The served sketch.
@@ -210,12 +395,57 @@ impl QueryServer {
         self.handles.len()
     }
 
-    /// Enqueue one request; returns immediately with a wait handle.
+    /// Enqueue one request; returns immediately with a wait handle. Large
+    /// row-separable requests are sharded across the pool here.
     pub fn submit(&self, request: QueryRequest) -> Pending {
         let (reply, rx) = sync_channel(1);
         // if every worker is gone the Pending surfaces it at wait()
-        let _ = self.tx.send(Job { request, reply });
+        if let Some(request) = self.try_split(request, &reply) {
+            let _ = self.tx.send(Task::Whole { request, reply });
+        }
         Pending { rx }
+    }
+
+    /// Shard a splittable request across the pool, enqueuing one window
+    /// task per chunk; hands the request back when it should run whole
+    /// (unsplittable op, trivial/invalid shapes — the sequential path
+    /// produces the canonical error — or a sketch below the threshold).
+    fn try_split(
+        &self,
+        request: QueryRequest,
+        reply: &SyncSender<Result<QueryResponse>>,
+    ) -> Option<QueryRequest> {
+        let workers = self.handles.len();
+        let groups = self.sketch.row_index().len();
+        if workers < 2 || groups < self.split_min_groups.max(2) {
+            return Some(request);
+        }
+        let n = self.sketch.header().n;
+        let op = match request {
+            QueryRequest::Matvec(x) if x.len() == n => SplitOp::Matvec(x),
+            QueryRequest::MatvecBatch(xs)
+                if !xs.is_empty() && xs.iter().all(|x| x.len() == n) =>
+            {
+                SplitOp::MatvecBatch(xs)
+            }
+            QueryRequest::TopK(k) if k > 0 => SplitOp::TopK(k),
+            other => return Some(other),
+        };
+        let chunks = workers.min(groups);
+        let ranges: Vec<(usize, usize)> = (0..chunks)
+            .map(|c| (groups * c / chunks, groups * (c + 1) / chunks))
+            .collect();
+        let plan = Arc::new(SplitPlan {
+            op,
+            ranges,
+            partials: Mutex::new((0..chunks).map(|_| None).collect()),
+            remaining: AtomicUsize::new(chunks),
+            reply: reply.clone(),
+        });
+        for chunk in 0..chunks {
+            let _ = self.tx.send(Task::Shard { plan: Arc::clone(&plan), chunk });
+        }
+        None
     }
 
     /// Enqueue a batch; answers can be awaited in any order.
@@ -320,6 +550,63 @@ mod tests {
             other => panic!("unexpected outcome {other:?}"),
         }
         server.shutdown();
+    }
+
+    #[test]
+    fn split_answers_match_sequential_bitwise() {
+        let sk = Arc::new(servable());
+        let (m, n) = sk.shape();
+        // threshold 1: every splittable request shards across the pool
+        let server = QueryServer::start_with(Arc::clone(&sk), 4, 1);
+        let mut rng = Rng::new(31);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let xs: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+        let requests = [
+            QueryRequest::Matvec(x.clone()),
+            QueryRequest::MatvecBatch(xs),
+            QueryRequest::TopK(5),
+            QueryRequest::MatvecT((0..m).map(|_| 0.5).collect()),
+            QueryRequest::Row(3),
+        ];
+        for q in requests {
+            let got = server.submit(q.clone()).wait().unwrap();
+            let want = sk.answer(&q).unwrap();
+            assert_eq!(got, want);
+            if let (QueryResponse::Vector(a), Ok(QueryResponse::Vector(b))) =
+                (&got, sk.answer(&q))
+            {
+                for (va, vb) in a.iter().zip(&b) {
+                    assert_eq!(va.to_bits(), vb.to_bits(), "not bit-identical");
+                }
+            }
+        }
+        // wrong-shape / trivial requests fall back to the sequential
+        // path and keep its canonical behavior
+        assert!(server.submit(QueryRequest::Matvec(vec![0.0; n + 1])).wait().is_err());
+        match server.submit(QueryRequest::MatvecBatch(Vec::new())).wait().unwrap() {
+            QueryResponse::Vectors(vs) => assert!(vs.is_empty()),
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        match server.submit(QueryRequest::TopK(0)).wait().unwrap() {
+            QueryResponse::Entries(es) => assert!(es.is_empty()),
+            other => panic!("unexpected outcome {other:?}"),
+        }
+        server.shutdown();
+    }
+
+    #[test]
+    fn split_queries_count_once_in_stats() {
+        let sk = Arc::new(servable());
+        let (_, n) = sk.shape();
+        let server = QueryServer::start_with(Arc::clone(&sk), 3, 1);
+        let pending = server.submit_batch(vec![QueryRequest::Matvec(vec![0.25; n]); 10]);
+        for p in pending {
+            p.wait().unwrap();
+        }
+        let stats = server.shutdown();
+        assert_eq!(stats.total(), 10, "a split request must count once");
+        assert_eq!(stats.served_per_worker.len(), 3);
     }
 
     #[test]

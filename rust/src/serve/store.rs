@@ -60,6 +60,7 @@ use crate::error::{Error, Result};
 use crate::sketch::bitio::{BitReader, BitWriter};
 use crate::sketch::{encode_sketch, row_group_index, EncodedSketch, Sketch};
 use crate::sparse::Entry;
+use crate::util::SharedBytes;
 
 /// File magic: "MSKS" (matsketch sketch store).
 pub const STORE_MAGIC: [u8; 4] = *b"MSKS";
@@ -404,7 +405,18 @@ fn parse_container_header(data: &[u8]) -> Result<RawHeader> {
 /// Parse a store container back into its encoded sketch. Reads container
 /// versions 1 (no fingerprint / row index) and 2. Rejects bad magic,
 /// unknown versions, truncated or padded files, and checksum mismatches.
+///
+/// Copies the payload into a fresh buffer; [`decode_container_shared`]
+/// is the zero-copy form the store's read path uses.
 pub fn decode_container(data: &[u8]) -> Result<StoredSketch> {
+    decode_container_shared(&SharedBytes::from(data))
+}
+
+/// [`decode_container`] over a shared buffer: the returned sketch's
+/// payload is an O(1) [`SharedBytes::slice`] of `data` — no copy, so a
+/// loaded (or memory-mapped) `.msk` file is aliased by every clone of
+/// the servable sketch instead of being duplicated per open.
+pub fn decode_container_shared(data: &SharedBytes) -> Result<StoredSketch> {
     let err = |what: &str| Error::Parse(format!("sketch store: {what}"));
     let h = parse_container_header(data)?;
     let declared = h
@@ -418,7 +430,7 @@ pub fn decode_container(data: &[u8]) -> Result<StoredSketch> {
     if actual > declared {
         return Err(err("trailing bytes after payload"));
     }
-    let payload = data[h.header_bytes..h.header_bytes + h.payload_len].to_vec();
+    let payload = data.slice(h.header_bytes..h.header_bytes + h.payload_len);
     let index_bytes = &data[h.header_bytes + h.payload_len..];
     // the stored sum covers all header bytes before the checksum field
     // plus the payload and (v2) the index section
@@ -561,10 +573,28 @@ pub fn write_encoded(path: &Path, enc: &EncodedSketch, key: &StoreKey) -> Result
     Ok(())
 }
 
-/// Read one encoded sketch back from `path`.
+/// Read one encoded sketch back from `path`. The payload of the result
+/// aliases one shared load of the file (memory-mapped when built with
+/// the `mmap` feature, a single buffered read otherwise) — opening a
+/// sketch never copies its payload again after the load.
 pub fn read_encoded(path: &Path) -> Result<StoredSketch> {
-    let data = fs::read(path)?;
-    decode_container(&data)
+    decode_container_shared(&load_container_bytes(path)?)
+}
+
+/// Load a `.msk` file into one shared buffer: zero-copy `mmap` when the
+/// feature is enabled (falling back to a read if the map fails, e.g. on
+/// an empty file or an mmap-less filesystem), a plain buffered read
+/// into a single shared allocation otherwise.
+fn load_container_bytes(path: &Path) -> Result<SharedBytes> {
+    #[cfg(all(feature = "mmap", target_family = "unix", target_pointer_width = "64"))]
+    {
+        if let Ok(file) = fs::File::open(path) {
+            if let Ok(map) = crate::util::bytes::mmap::map_readonly(&file) {
+                return Ok(SharedBytes::from_owner(map));
+            }
+        }
+    }
+    Ok(SharedBytes::from(fs::read(path)?))
 }
 
 /// A directory of stored sketches, one file per [`StoreKey`].

@@ -16,6 +16,7 @@ use std::sync::Arc;
 
 use crate::error::{Error, Result};
 use crate::sketch::bitio::{BitReader, BitWriter};
+use crate::util::SharedBytes;
 
 use super::{Sketch, SketchEntry};
 
@@ -32,8 +33,11 @@ pub struct EncodedSketch {
     pub header_bits: usize,
     /// Body bits (offsets/counts/signs).
     pub body_bits: usize,
-    /// The encoded payload.
-    pub bytes: Vec<u8>,
+    /// The encoded payload, behind a shared buffer: cloning an
+    /// `EncodedSketch` (or the `ServableSketch` holding it) is O(1) and
+    /// never copies the payload — store loads can even alias a
+    /// memory-mapped file directly.
+    pub bytes: SharedBytes,
     /// Whether the compact row-scale form was used.
     pub compact: bool,
 }
@@ -119,7 +123,7 @@ pub fn encode_sketch(sk: &Sketch) -> Result<EncodedSketch> {
         s: sk.s,
         header_bits,
         body_bits,
-        bytes: w.finish(),
+        bytes: w.finish().into(),
         compact,
     })
 }
@@ -266,6 +270,41 @@ impl<'a> SketchCursor<'a> {
             compact: header.compact,
             row_scale: header.row_scale.clone(),
             rows_left: 1,
+            row_entries_left: 0,
+            prev_row: prev_row as u64,
+            prev_col: 0,
+        }
+    }
+
+    /// Position a cursor over the contiguous row-group window
+    /// `index[lo..hi]` of the per-row offset `index` (as produced by
+    /// [`row_group_index`]): seek to group `lo`'s first bit, decode
+    /// exactly `hi - lo` groups, then end cleanly. This is the
+    /// **row-range plan** behind row-parallel serving — each worker
+    /// decodes one disjoint window and the partial results are reduced
+    /// in window order, so the combined answer is bit-identical to one
+    /// sequential scan. `lo == hi` yields an immediately-empty cursor.
+    pub fn row_range(
+        enc: &'a EncodedSketch,
+        header: &PayloadHeader,
+        index: &[(u32, u64)],
+        lo: usize,
+        hi: usize,
+    ) -> SketchCursor<'a> {
+        debug_assert!(lo <= hi && hi <= index.len(), "row_range {lo}..{hi} of {}", index.len());
+        let (bit_offset, prev_row) = if lo >= hi || lo >= index.len() {
+            (enc.bytes.len() * 8, 0) // empty window: clean immediate end
+        } else {
+            (index[lo].1 as usize, if lo == 0 { 0 } else { index[lo - 1].0 })
+        };
+        SketchCursor {
+            reader: BitReader::new_at(&enc.bytes, bit_offset),
+            m: header.m,
+            n: header.n,
+            s: header.s,
+            compact: header.compact,
+            row_scale: header.row_scale.clone(),
+            rows_left: hi.min(index.len()).saturating_sub(lo),
             row_entries_left: 0,
             prev_row: prev_row as u64,
             prev_col: 0,
@@ -492,6 +531,36 @@ mod tests {
                 let want: Vec<SketchEntry> =
                     dec.entries.iter().copied().filter(|e| e.row == row).collect();
                 assert_eq!(got, want, "{kind:?} row {row}");
+            }
+        }
+    }
+
+    #[test]
+    fn row_range_windows_match_filtered_decode() {
+        for kind in [DistributionKind::Bernstein, DistributionKind::L2] {
+            let a = random_csr(40, 2048, 25, 11);
+            let sk = sketch_offline(&a, &SketchPlan::new(kind, 3_000).with_seed(4)).unwrap();
+            let enc = encode_sketch(&sk).unwrap();
+            let header = PayloadHeader::parse(&enc).unwrap();
+            let index = row_group_index(&enc).unwrap();
+            let dec = decode_sketch(&enc, &sk.method).unwrap();
+            let g = index.len();
+            for (lo, hi) in
+                [(0, g), (0, 0), (g, g), (0, 1), (g - 1, g), (1, g / 2), (g / 2, g)]
+            {
+                let mut cur = SketchCursor::row_range(&enc, &header, &index, lo, hi);
+                let mut got = Vec::new();
+                while let Some(e) = cur.next_entry().unwrap() {
+                    got.push(e);
+                }
+                let rows: Vec<u32> = index[lo..hi].iter().map(|&(r, _)| r).collect();
+                let want: Vec<SketchEntry> = dec
+                    .entries
+                    .iter()
+                    .copied()
+                    .filter(|e| rows.contains(&e.row))
+                    .collect();
+                assert_eq!(got, want, "{kind:?} window {lo}..{hi}");
             }
         }
     }

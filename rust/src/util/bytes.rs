@@ -1,0 +1,238 @@
+//! Shared immutable byte buffers for zero-copy payload handling.
+//!
+//! [`SharedBytes`] is a cheaply clonable (`Arc`-backed) view over an
+//! immutable byte buffer — a `Vec<u8>`, or, with the `mmap` cargo
+//! feature, a memory-mapped file. Slicing is O(1) and shares the owner,
+//! so a multi-megabyte `.msk` payload can be handed to every
+//! `ServableSketch` clone and worker thread without ever being copied.
+
+use std::fmt;
+use std::ops::{Deref, Range};
+use std::sync::Arc;
+
+/// An immutable, reference-counted byte buffer view. Cloning and
+/// [`SharedBytes::slice`] are O(1): both share the underlying owner
+/// (a `Vec<u8>`, a memory map, …) instead of copying bytes.
+#[derive(Clone)]
+pub struct SharedBytes {
+    owner: Arc<dyn AsRef<[u8]> + Send + Sync>,
+    off: usize,
+    len: usize,
+}
+
+impl SharedBytes {
+    /// Wrap any owned byte container (`Vec<u8>`, `Box<[u8]>`, a memory
+    /// map, …) without copying it.
+    pub fn from_owner<T: AsRef<[u8]> + Send + Sync + 'static>(owner: T) -> SharedBytes {
+        let len = owner.as_ref().len();
+        SharedBytes { owner: Arc::new(owner), off: 0, len }
+    }
+
+    /// O(1) subview sharing the same owner. Panics when `range` is out
+    /// of bounds, exactly like slice indexing.
+    pub fn slice(&self, range: Range<usize>) -> SharedBytes {
+        assert!(
+            range.start <= range.end && range.end <= self.len,
+            "SharedBytes::slice {range:?} out of bounds (len {})",
+            self.len
+        );
+        SharedBytes {
+            owner: Arc::clone(&self.owner),
+            off: self.off + range.start,
+            len: range.end - range.start,
+        }
+    }
+
+    /// Byte length of this view.
+    pub fn len(&self) -> usize {
+        self.len
+    }
+
+    /// Whether this view is empty.
+    pub fn is_empty(&self) -> bool {
+        self.len == 0
+    }
+}
+
+impl Default for SharedBytes {
+    fn default() -> Self {
+        SharedBytes::from_owner(Vec::<u8>::new())
+    }
+}
+
+impl Deref for SharedBytes {
+    type Target = [u8];
+    fn deref(&self) -> &[u8] {
+        &(*self.owner).as_ref()[self.off..self.off + self.len]
+    }
+}
+
+impl AsRef<[u8]> for SharedBytes {
+    fn as_ref(&self) -> &[u8] {
+        self
+    }
+}
+
+impl From<Vec<u8>> for SharedBytes {
+    fn from(v: Vec<u8>) -> SharedBytes {
+        SharedBytes::from_owner(v)
+    }
+}
+
+impl From<&[u8]> for SharedBytes {
+    fn from(v: &[u8]) -> SharedBytes {
+        SharedBytes::from_owner(v.to_vec())
+    }
+}
+
+impl PartialEq for SharedBytes {
+    fn eq(&self, other: &SharedBytes) -> bool {
+        self[..] == other[..]
+    }
+}
+
+impl Eq for SharedBytes {}
+
+// Debug cannot be derived: the owner is a `dyn` trait object.
+impl fmt::Debug for SharedBytes {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "SharedBytes({} B)", self.len)
+    }
+}
+
+/// Memory-mapped read-only file support (the `mmap` cargo feature).
+///
+/// Declared against the platform libc directly — the build image has no
+/// crates.io access, and every Unix target this crate builds on links
+/// libc anyway. Gated to 64-bit Unix targets, where `off_t` is 64 bits
+/// and the `offset: i64` declaration below matches the C ABI; elsewhere
+/// (or without the feature) the store falls back to a buffered read
+/// into one shared allocation.
+#[cfg(all(feature = "mmap", target_family = "unix", target_pointer_width = "64"))]
+pub mod mmap {
+    use std::ffi::c_void;
+    use std::fs::File;
+    use std::io;
+    use std::os::unix::io::AsRawFd;
+    use std::ptr::NonNull;
+
+    const PROT_READ: i32 = 1;
+    const MAP_PRIVATE: i32 = 2;
+
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: i32,
+            flags: i32,
+            fd: i32,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> i32;
+    }
+
+    /// A read-only, privately mapped file; unmapped on drop. Implements
+    /// `AsRef<[u8]>`, so it plugs straight into
+    /// [`SharedBytes::from_owner`](super::SharedBytes::from_owner).
+    pub struct MappedFile {
+        ptr: NonNull<u8>,
+        len: usize,
+    }
+
+    // The mapping is read-only and never remapped after construction.
+    unsafe impl Send for MappedFile {}
+    unsafe impl Sync for MappedFile {}
+
+    impl AsRef<[u8]> for MappedFile {
+        fn as_ref(&self) -> &[u8] {
+            // SAFETY: ptr/len describe one live PROT_READ mapping owned
+            // by self; the mapping outlives every borrow of self.
+            unsafe { std::slice::from_raw_parts(self.ptr.as_ptr(), self.len) }
+        }
+    }
+
+    impl Drop for MappedFile {
+        fn drop(&mut self) {
+            // SAFETY: exactly the region mmap returned.
+            unsafe {
+                munmap(self.ptr.as_ptr() as *mut c_void, self.len);
+            }
+        }
+    }
+
+    /// Map `file` read-only in its entirety. Errors on empty files (a
+    /// zero-length mmap is invalid) and on any mapping failure — callers
+    /// fall back to a buffered read.
+    pub fn map_readonly(file: &File) -> io::Result<MappedFile> {
+        let len = file.metadata()?.len();
+        if len == 0 || len > usize::MAX as u64 {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                "mmap: empty or oversized file",
+            ));
+        }
+        let len = len as usize;
+        // SAFETY: plain PROT_READ/MAP_PRIVATE mapping of a file we hold
+        // open; the result is validated before use.
+        let ptr = unsafe {
+            mmap(std::ptr::null_mut(), len, PROT_READ, MAP_PRIVATE, file.as_raw_fd(), 0)
+        };
+        if ptr as isize == -1 || ptr.is_null() {
+            return Err(io::Error::last_os_error());
+        }
+        Ok(MappedFile { ptr: NonNull::new(ptr as *mut u8).expect("mmap non-null"), len })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slice_and_clone_share_without_copying() {
+        let b = SharedBytes::from(vec![1u8, 2, 3, 4, 5]);
+        let s = b.slice(1..4);
+        assert_eq!(&s[..], &[2, 3, 4]);
+        assert_eq!(s.len(), 3);
+        let s2 = s.slice(1..3);
+        assert_eq!(&s2[..], &[3, 4]);
+        let c = s2.clone();
+        assert_eq!(c, s2);
+        assert_eq!(&b[..], &[1, 2, 3, 4, 5]);
+    }
+
+    #[test]
+    fn empty_and_equality() {
+        let e = SharedBytes::default();
+        assert!(e.is_empty());
+        assert_eq!(e, SharedBytes::from(Vec::new()));
+        let a = SharedBytes::from(vec![7u8, 8]);
+        let b = SharedBytes::from(vec![7u8, 8]);
+        let c = SharedBytes::from(vec![7u8, 9]);
+        assert_eq!(a, b);
+        assert_ne!(a, c);
+        // equality is by content, not by owner identity or offset
+        let whole = SharedBytes::from(vec![0u8, 7, 8]);
+        assert_eq!(whole.slice(1..3), a);
+    }
+
+    #[test]
+    #[should_panic(expected = "out of bounds")]
+    fn out_of_bounds_slice_panics() {
+        SharedBytes::from(vec![1u8, 2]).slice(0..3);
+    }
+
+    #[cfg(all(feature = "mmap", target_family = "unix", target_pointer_width = "64"))]
+    #[test]
+    fn mmap_reads_file_contents() {
+        let path = std::env::temp_dir()
+            .join(format!("matsketch_mmap_test_{}", std::process::id()));
+        std::fs::write(&path, b"hello mapping").unwrap();
+        let f = std::fs::File::open(&path).unwrap();
+        let map = mmap::map_readonly(&f).unwrap();
+        let shared = SharedBytes::from_owner(map);
+        assert_eq!(&shared[..], b"hello mapping");
+        assert_eq!(shared.slice(6..13), SharedBytes::from(&b"mapping"[..]));
+        let _ = std::fs::remove_file(&path);
+    }
+}

@@ -6,10 +6,13 @@
 //! DESIGN.md §4.
 
 pub mod args;
+pub mod bytes;
 pub mod json;
 pub mod logging;
 pub mod rng;
 pub mod stats;
+
+pub use bytes::SharedBytes;
 
 /// Round `x` up to the next multiple of `to` (`to > 0`).
 pub fn round_up(x: usize, to: usize) -> usize {

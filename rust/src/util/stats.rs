@@ -62,37 +62,61 @@ impl Welford {
     }
 }
 
-/// Batch quantile (linear interpolation); `q ∈ [0, 1]`. Sorts a copy.
+/// Batch quantile (linear interpolation); `q ∈ [0, 1]`. Works on a copy;
+/// see [`quantiles_in_place`] for the allocation-free form.
 pub fn quantile(xs: &[f64], q: f64) -> f64 {
-    assert!(!xs.is_empty());
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
-    let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
-    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
-    if lo == hi {
-        v[lo]
-    } else {
-        let t = pos - lo as f64;
-        v[lo] * (1.0 - t) + v[hi] * t
-    }
+    quantiles(xs, &[q])[0]
 }
 
-/// Several quantiles of one sample with a single sort (the latency
-/// histogram path: p50/p95/p99 over thousands of per-query timings).
-/// Each `q ∈ [0, 1]`, linear interpolation, matching [`quantile`].
+/// Several quantiles of one sample (the latency-histogram path:
+/// p50/p95/p99 over thousands of per-query timings). Each `q ∈ [0, 1]`,
+/// linear interpolation. Works on a copy of `xs`; callers that own their
+/// sample (and can tolerate it being permuted) should use
+/// [`quantiles_in_place`], which allocates nothing.
 pub fn quantiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
+    let mut scratch = xs.to_vec();
+    quantiles_in_place(&mut scratch, qs)
+}
+
+/// [`quantiles`] over a caller-owned buffer: selects only the needed
+/// order statistics with `select_nth_unstable` (expected O(n) total,
+/// no sort, no allocation beyond the tiny index list) and leaves `xs`
+/// permuted. This is what the load-generator report path uses — the
+/// latency buffer it already owns doubles as the scratch space.
+pub fn quantiles_in_place(xs: &mut [f64], qs: &[f64]) -> Vec<f64> {
     assert!(!xs.is_empty());
-    let mut v = xs.to_vec();
-    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let n = xs.len();
+    let pos_of = |q: f64| q.clamp(0.0, 1.0) * (n - 1) as f64;
+    // the order statistics the interpolation reads: floor + ceil per q
+    let mut idxs: Vec<usize> = Vec::with_capacity(qs.len() * 2);
+    for &q in qs {
+        let pos = pos_of(q);
+        idxs.push(pos.floor() as usize);
+        idxs.push(pos.ceil() as usize);
+    }
+    idxs.sort_unstable();
+    idxs.dedup();
+    // ascending multi-select: after selecting order statistic i, every
+    // element left of i is ≤ xs[i], so the next (larger) selection can
+    // run on the tail alone and each selected slot is final
+    let cmp = |a: &f64, b: &f64| a.partial_cmp(b).unwrap();
+    let mut start = 0usize;
+    for &i in &idxs {
+        xs[start..].select_nth_unstable_by(i - start, cmp);
+        start = i + 1;
+        if start >= n {
+            break;
+        }
+    }
     qs.iter()
-        .map(|q| {
-            let pos = q.clamp(0.0, 1.0) * (v.len() - 1) as f64;
+        .map(|&q| {
+            let pos = pos_of(q);
             let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
             if lo == hi {
-                v[lo]
+                xs[lo]
             } else {
                 let t = pos - lo as f64;
-                v[lo] * (1.0 - t) + v[hi] * t
+                xs[lo] * (1.0 - t) + xs[hi] * t
             }
         })
         .collect()
@@ -101,8 +125,8 @@ pub fn quantiles(xs: &[f64], qs: &[f64]) -> Vec<f64> {
 /// Median absolute deviation — the bench harness's robust spread measure.
 pub fn mad(xs: &[f64]) -> f64 {
     let med = quantile(xs, 0.5);
-    let dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
-    quantile(&dev, 0.5)
+    let mut dev: Vec<f64> = xs.iter().map(|x| (x - med).abs()).collect();
+    quantiles_in_place(&mut dev, &[0.5])[0]
 }
 
 #[cfg(test)]
@@ -138,6 +162,45 @@ mod tests {
         let batch = quantiles(&xs, &qs);
         for (q, got) in qs.iter().zip(&batch) {
             assert_eq!(*got, quantile(&xs, *q), "q={q}");
+        }
+    }
+
+    #[test]
+    fn selection_quantiles_match_full_sort_reference() {
+        // the select_nth path must agree exactly with a sort-and-index
+        // reference, on random data, duplicate-heavy data, and repeated
+        // / unsorted q lists; the in-place form reuses one scratch buffer
+        let mut rng = crate::util::rng::Rng::new(0x9A);
+        let qs = [0.99, 0.0, 0.5, 0.5, 0.95, 1.0, 0.25];
+        let mut scratch: Vec<f64> = Vec::new();
+        for case in 0..20 {
+            let n = 1 + (case * 37) % 500;
+            let xs: Vec<f64> = (0..n)
+                .map(|_| {
+                    if case % 3 == 0 {
+                        rng.u64_below(7) as f64 // heavy ties
+                    } else {
+                        rng.normal() * 100.0
+                    }
+                })
+                .collect();
+            let mut sorted = xs.clone();
+            sorted.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let reference: Vec<f64> = qs
+                .iter()
+                .map(|&q| {
+                    let pos = q.clamp(0.0, 1.0) * (sorted.len() - 1) as f64;
+                    let (lo, hi) = (pos.floor() as usize, pos.ceil() as usize);
+                    let t = pos - lo as f64;
+                    sorted[lo] * (1.0 - t) + sorted[hi] * t
+                })
+                .collect();
+            assert_eq!(quantiles(&xs, &qs), reference, "case {case}");
+            // scratch-reusing in-place form: same answers, no per-call
+            // allocation of the sample
+            scratch.clear();
+            scratch.extend_from_slice(&xs);
+            assert_eq!(quantiles_in_place(&mut scratch, &qs), reference, "case {case}");
         }
     }
 

@@ -223,6 +223,69 @@ fn query_server_concurrent_answers_match_direct() {
     assert_eq!(stats.total(), 40);
 }
 
+/// Satellite pin for the row-parallel serving path: with the split
+/// threshold forced to 1, every matvec / batched-matvec / top-k answer
+/// produced by a 4-worker fork/reduce must be **bit-identical** to the
+/// sequential whole-payload scan, for every Figure-1 distribution.
+#[test]
+fn row_parallel_answers_are_bit_identical_to_sequential() {
+    for kind in DistributionKind::figure1_set() {
+        let sk = sketch_with(SketchMode::Offline, kind, 700);
+        let servable = Arc::new(ServableSketch::from_sketch(&sk).unwrap());
+        let (_, n) = servable.shape();
+        let server = QueryServer::start_with(Arc::clone(&servable), 4, 1);
+
+        let mut rng = Rng::new(0x5911);
+        let x: Vec<f64> = (0..n).map(|_| rng.normal()).collect();
+        let xs: Vec<Vec<f64>> =
+            (0..3).map(|_| (0..n).map(|_| rng.normal()).collect()).collect();
+
+        // matvec: element-for-element bit equality
+        let QueryResponse::Vector(par) =
+            server.submit(QueryRequest::Matvec(x.clone())).wait().unwrap()
+        else {
+            panic!("matvec answer is not a vector");
+        };
+        let QueryResponse::Vector(seq) =
+            servable.answer(&QueryRequest::Matvec(x.clone())).unwrap()
+        else {
+            panic!("sequential matvec answer is not a vector");
+        };
+        assert_eq!(par.len(), seq.len(), "{kind:?}");
+        for (i, (a, b)) in par.iter().zip(&seq).enumerate() {
+            assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}: y[{i}] {a} vs {b}");
+        }
+
+        // batched matvec: every vector bit-identical
+        let QueryResponse::Vectors(par_b) =
+            server.submit(QueryRequest::MatvecBatch(xs.clone())).wait().unwrap()
+        else {
+            panic!("batch answer is not vectors");
+        };
+        let QueryResponse::Vectors(seq_b) =
+            servable.answer(&QueryRequest::MatvecBatch(xs)).unwrap()
+        else {
+            panic!("sequential batch answer is not vectors");
+        };
+        assert_eq!(par_b.len(), seq_b.len(), "{kind:?}");
+        for (pv, sv) in par_b.iter().zip(&seq_b) {
+            for (a, b) in pv.iter().zip(sv) {
+                assert_eq!(a.to_bits(), b.to_bits(), "{kind:?}: batch");
+            }
+        }
+
+        // top-k: element-for-element equality at several k
+        for k in [1usize, 5, 1_000_000] {
+            assert_eq!(
+                server.submit(QueryRequest::TopK(k)).wait().unwrap(),
+                servable.answer(&QueryRequest::TopK(k)).unwrap(),
+                "{kind:?}: top-{k}"
+            );
+        }
+        server.shutdown();
+    }
+}
+
 #[test]
 fn store_get_or_build_builds_once_then_hits() {
     let dir = tmp_dir("cache");
