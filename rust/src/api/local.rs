@@ -6,7 +6,7 @@ use std::path::Path;
 use std::sync::Arc;
 
 use crate::error::{Error, Result};
-use crate::serve::{read_header, QueryServer, ServableSketch, SketchStore, StoreKey};
+use crate::serve::{read_header, LiveReader, QueryServer, ServableSketch, SketchStore, StoreKey};
 use crate::warn_log;
 
 use super::{QueryRequest, QueryResponse, SketchClient, SketchInfo};
@@ -33,6 +33,10 @@ pub struct LocalClient {
     store: SketchStore,
     workers: usize,
     opened: HashMap<String, OpenedSketch>,
+    /// Live chains attached under their key's file name. Checked before
+    /// the store on every query, so a live sketch shadows a frozen store
+    /// entry of the same identity.
+    live: HashMap<String, LiveReader>,
 }
 
 impl LocalClient {
@@ -41,7 +45,12 @@ impl LocalClient {
 
     /// A client over an already-opened store.
     pub fn new(store: SketchStore) -> LocalClient {
-        LocalClient { store, workers: Self::DEFAULT_WORKERS, opened: HashMap::new() }
+        LocalClient {
+            store,
+            workers: Self::DEFAULT_WORKERS,
+            opened: HashMap::new(),
+            live: HashMap::new(),
+        }
     }
 
     /// A client over the store directory at `dir` (created if absent).
@@ -59,6 +68,20 @@ impl LocalClient {
     /// The underlying store directory.
     pub fn store_dir(&self) -> &Path {
         self.store.dir()
+    }
+
+    /// Attach a live generation chain under `key`: queries for that key
+    /// are answered from the chain's published snapshots (latest, or the
+    /// pinned generation for [`SketchClient::query_at`]) instead of the
+    /// store. Live attachments survive [`SketchClient::close`] — the
+    /// chain, not this client, owns the serving pool.
+    pub fn attach_live(&mut self, key: &StoreKey, reader: LiveReader) {
+        self.live.insert(key.file_name(), reader);
+    }
+
+    /// Detach a live chain, returning its reader if one was attached.
+    pub fn detach_live(&mut self, key: &StoreKey) -> Option<LiveReader> {
+        self.live.remove(&key.file_name())
     }
 
     /// The opened entry for `key`, loading it from the store on first
@@ -123,6 +146,9 @@ impl LocalClient {
 
 impl SketchClient for LocalClient {
     fn open(&mut self, key: &StoreKey) -> Result<SketchInfo> {
+        if let Some(reader) = self.live.get(&key.file_name()) {
+            return reader.info(&key.dataset);
+        }
         Ok(self.ensure_open(key)?.info.clone())
     }
 
@@ -144,11 +170,47 @@ impl SketchClient for LocalClient {
                 }
             }
         }
+        // live chains list after the store, in stable (file-name) order
+        let mut live: Vec<(&String, &LiveReader)> = self.live.iter().collect();
+        live.sort_by(|a, b| a.0.cmp(b.0));
+        for (file, reader) in live {
+            let dataset = file.split("__").next().unwrap_or(file.as_str());
+            out.push(reader.info(dataset)?);
+        }
         Ok(out)
     }
 
     fn query(&mut self, key: &StoreKey, request: &QueryRequest) -> Result<QueryResponse> {
+        if let Some(reader) = self.live.get(&key.file_name()) {
+            return reader.answer_at(None, request).map(|(resp, _)| resp);
+        }
         self.ensure_open(key)?.server.submit(request.clone()).wait()
+    }
+
+    fn query_at(
+        &mut self,
+        key: &StoreKey,
+        request: &QueryRequest,
+        pin: Option<u64>,
+    ) -> Result<(QueryResponse, u64)> {
+        if let Some(reader) = self.live.get(&key.file_name()) {
+            return reader.answer_at(pin, request);
+        }
+        if let Some(g) = pin {
+            if g != 0 {
+                return Err(Error::Generation(format!(
+                    "generation {g} not yet published (latest is 0)"
+                )));
+            }
+        }
+        Ok((self.query(key, request)?, 0))
+    }
+
+    fn generation(&mut self, key: &StoreKey) -> Result<u64> {
+        if let Some(reader) = self.live.get(&key.file_name()) {
+            return Ok(reader.generation());
+        }
+        self.ensure_open(key).map(|_| 0)
     }
 
     fn query_batch(
@@ -156,6 +218,9 @@ impl SketchClient for LocalClient {
         key: &StoreKey,
         requests: Vec<QueryRequest>,
     ) -> Result<Vec<Result<QueryResponse>>> {
+        if let Some(reader) = self.live.get(&key.file_name()) {
+            return reader.answer_batch_at(None, requests).map(|(r, _)| r);
+        }
         let pending = self.ensure_open(key)?.server.submit_batch(requests);
         Ok(pending.into_iter().map(|p| p.wait()).collect())
     }
@@ -231,6 +296,49 @@ mod tests {
         // reusable after close: pools are re-acquired lazily
         assert!(client.query(&key, &QueryRequest::TopK(1)).is_ok());
         client.close().unwrap();
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn live_attachment_answers_with_generations() {
+        use crate::serve::{LiveConfig, LiveSketch};
+        use crate::sparse::Entry;
+        let dir = std::env::temp_dir()
+            .join(format!("matsketch_api_local_live_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let mut client = LocalClient::open_dir(&dir).unwrap();
+
+        let plan = SketchPlan::new(DistributionKind::Bernstein, 200).with_seed(3);
+        let cfg = LiveConfig { epoch_entries: 0, retain: 4, workers: 1 };
+        let mut live = LiveSketch::start(8, 40, &plan, &cfg).unwrap();
+        let key = StoreKey::new("liveapi", "Bernstein", 200, 3);
+        client.attach_live(&key, live.reader());
+
+        assert_eq!(client.generation(&key).unwrap(), 0);
+        let mut rng = Rng::new(4);
+        let es: Vec<Entry> = (0..150)
+            .map(|_| {
+                Entry::new(
+                    rng.usize_below(8) as u32,
+                    rng.usize_below(40) as u32,
+                    rng.normal() as f32 + 1.0,
+                )
+            })
+            .collect();
+        live.push(&es).unwrap();
+        live.flush().unwrap();
+
+        let x = vec![0.5; 40];
+        let (resp, g) = client.query_at(&key, &QueryRequest::Matvec(x), None).unwrap();
+        assert_eq!(g, 1);
+        assert!(matches!(resp, QueryResponse::Vector(_)));
+        assert_eq!(client.generation(&key).unwrap(), 1);
+        // a pin ahead of the chain is a typed generation error
+        let err = client.query_at(&key, &QueryRequest::TopK(1), Some(9)).unwrap_err();
+        assert!(matches!(err, Error::Generation(_)), "{err}");
+        // listing includes the live chain
+        assert!(client.list().unwrap().iter().any(|i| i.dataset == "liveapi"));
+        client.detach_live(&key).unwrap();
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -114,6 +114,39 @@ pub trait SketchClient {
     /// first if needed).
     fn query(&mut self, key: &StoreKey, request: &QueryRequest) -> Result<QueryResponse>;
 
+    /// Execute one request with an optional **generation pin**, returning
+    /// the answer plus the generation it was answered at.
+    ///
+    /// Live sketches (see [`crate::serve::live`]) answer `pin: None` on
+    /// their latest published snapshot and `pin: Some(g)` on retained
+    /// generation `g` exactly — a pin ahead of the chain or retired out
+    /// of its window is a typed [`crate::error::Error::Generation`].
+    /// Frozen store-backed sketches are generation 0 forever; the default
+    /// implementation below encodes that, so backends without live chains
+    /// keep working unchanged.
+    fn query_at(
+        &mut self,
+        key: &StoreKey,
+        request: &QueryRequest,
+        pin: Option<u64>,
+    ) -> Result<(QueryResponse, u64)> {
+        if let Some(g) = pin {
+            if g != 0 {
+                return Err(crate::error::Error::Generation(format!(
+                    "generation {g} not yet published (latest is 0)"
+                )));
+            }
+        }
+        Ok((self.query(key, request)?, 0))
+    }
+
+    /// Latest published generation of the sketch under `key` (0 for
+    /// frozen store-backed sketches, which never advance).
+    fn generation(&mut self, key: &StoreKey) -> Result<u64> {
+        let _ = key;
+        Ok(0)
+    }
+
     /// Execute a batch through the backend's batched path (worker-pool
     /// fan-out locally, request pipelining remotely). Requests are taken
     /// by value so submission is zero-copy — benchmarks build the batch

@@ -49,6 +49,25 @@ impl RemoteClient {
     pub fn shutdown_server(&mut self) -> Result<()> {
         self.inner.shutdown_server()
     }
+
+    /// Set (or with `None` clear) a sticky generation pin for `key`:
+    /// every later query against the key answers at that generation,
+    /// surviving the client's one-shot reconnect.
+    pub fn set_pin(&mut self, key: &StoreKey, pin: Option<u64>) {
+        self.inner.set_pin(key, pin);
+    }
+
+    /// Block server-side up to `timeout_ms` until the sketch under `key`
+    /// reaches generation `min_gen`, returning the generation current
+    /// when the server answers.
+    pub fn poll_generation(
+        &mut self,
+        key: &StoreKey,
+        min_gen: u64,
+        timeout_ms: u32,
+    ) -> Result<u64> {
+        self.inner.poll_generation(key, min_gen, timeout_ms)
+    }
 }
 
 impl SketchClient for RemoteClient {
@@ -62,6 +81,19 @@ impl SketchClient for RemoteClient {
 
     fn query(&mut self, key: &StoreKey, request: &QueryRequest) -> Result<QueryResponse> {
         self.inner.query(key, request)
+    }
+
+    fn query_at(
+        &mut self,
+        key: &StoreKey,
+        request: &QueryRequest,
+        pin: Option<u64>,
+    ) -> Result<(QueryResponse, u64)> {
+        self.inner.query_at(key, request, pin)
+    }
+
+    fn generation(&mut self, key: &StoreKey) -> Result<u64> {
+        self.inner.poll_generation(key, 0, 0)
     }
 
     fn query_batch(

@@ -1,0 +1,202 @@
+//! Public fold entry point: compose independently sampled parts into
+//! exactly `s` global i.i.d. draws.
+//!
+//! This is the deterministic seeded merge the sharded engine has always
+//! used internally, promoted to a reusable API so callers outside the
+//! engine (live delta folding, cross-machine partial merges, custom
+//! sketch composition) can combine part outputs without reaching into
+//! `pub(crate)` internals. Both paths are exact and deterministic given
+//! the caller's RNG stream (parts are visited in slice order, so callers
+//! must present them in a stable order — the engine sorts by shard id):
+//!
+//! * [`fold_presplit`] — the per-part budgets were drawn up front as
+//!   `Multinomial(s, W_w/ΣW)` over a-priori part weights, so every part
+//!   already holds exactly its share; the fold only rescales.
+//! * [`fold_observed`] — part weights were unknown up front (trimmed
+//!   distributions): every part sampled at the full budget `s`; the fold
+//!   draws `Multinomial(s, W_w^obs/ΣW^obs)` over the observed weights and
+//!   takes a uniformly random subset of each part's exchangeable samples
+//!   via a multivariate-hypergeometric chain.
+//!
+//! [`fold_rng`] reproduces the engine's merge RNG stream for a plan seed,
+//! so an external caller folding the same parts in the same order gets a
+//! bit-identical result to `SketchMode::Sharded`'s finalize.
+
+use crate::distributions::Distribution;
+use crate::error::{Error, Result};
+use crate::samplers::{hypergeometric, multinomial_counts, WeightedSample};
+use crate::sketch::SketchEntry;
+use crate::sparse::Entry;
+use crate::util::rng::Rng;
+
+/// A borrowed view over one independently sampled part — a worker shard,
+/// a delta sketch, a remote partial: its exchangeable weighted samples
+/// plus the total positive weight it observed.
+pub struct FoldPart<'a> {
+    /// Stable part id. Used in error messages, and as the index into the
+    /// `counts`/`q` arrays when folding pre-split budgets.
+    pub id: usize,
+    /// The part's exchangeable weighted samples.
+    pub samples: &'a [WeightedSample<Entry>],
+    /// Total positive weight the part observed.
+    pub total_weight: f64,
+}
+
+impl FoldPart<'_> {
+    /// Number of draws this part holds (sum of per-sample counts).
+    pub fn draws(&self) -> u64 {
+        self.samples.iter().map(|x| x.count).sum()
+    }
+}
+
+/// The engine's merge RNG stream for a plan seed. External callers that
+/// want bit-identity with `SketchMode::Sharded` must fold with this RNG
+/// and present parts in shard-id order.
+pub fn fold_rng(plan_seed: u64) -> Rng {
+    Rng::new(plan_seed ^ 0x4D45_5247)
+}
+
+/// Fold parts whose budgets were pre-split: the effective global sampling
+/// probability of an entry in part `w` is `q_w · w_ij / W_w(observed)` —
+/// exact even when the a-priori weights were rough estimates (§3 one-pass
+/// mode).
+///
+/// `counts[part.id]` is the pre-split budget of each part; a part that
+/// was assigned budget but observed no positive-weight entries (the
+/// a-priori weights promised mass the stream never delivered) is an error
+/// — silently dropping its share would break the exactly-`s`-draws
+/// contract.
+pub fn fold_presplit(
+    parts: &[FoldPart<'_>],
+    counts: &[u64],
+    q: &[f64],
+    dist: &Distribution,
+    s: u64,
+) -> Result<Vec<SketchEntry>> {
+    let mut entries = Vec::new();
+    for o in parts {
+        let have = o.draws();
+        if have != counts[o.id] {
+            return Err(Error::Pipeline(format!(
+                "part {} produced {have} of its pre-split {} samples — \
+                 the stats assigned weight this stream never delivered",
+                o.id, counts[o.id]
+            )));
+        }
+        if o.total_weight <= 0.0 {
+            continue; // an empty part with a zero budget is normal
+        }
+        let qw = q[o.id];
+        for smp in o.samples {
+            let e = smp.item;
+            let w = dist.weight(e.row, e.val);
+            let p = qw * w / o.total_weight;
+            entries.push(SketchEntry {
+                row: e.row,
+                col: e.col,
+                count: smp.count as u32,
+                value: smp.count as f64 * e.val as f64 / (s as f64 * p),
+            });
+        }
+    }
+    Ok(entries)
+}
+
+/// Fold over *observed* part weights: multinomial split of `s`, then a
+/// uniformly random subset (hypergeometric chain) of each part's
+/// reservoir samples. `total_weight` is the global positive weight (the
+/// sum over every part, including any the caller filtered out).
+pub fn fold_observed(
+    parts: &[FoldPart<'_>],
+    rng: &mut Rng,
+    dist: &Distribution,
+    s: u64,
+    total_weight: f64,
+) -> Result<Vec<SketchEntry>> {
+    let part_weights: Vec<f64> = parts.iter().map(|o| o.total_weight).collect();
+    let take = multinomial_counts(rng, s, &part_weights);
+    let mut entries = Vec::new();
+    for (o, &need_total) in parts.iter().zip(take.iter()) {
+        if need_total == 0 {
+            continue;
+        }
+        let have = o.draws();
+        if have < need_total {
+            return Err(Error::Pipeline(format!(
+                "part {} holds {have} samples, needs {need_total}",
+                o.id
+            )));
+        }
+        let mut pop = have;
+        let mut need = need_total;
+        for smp in o.samples {
+            if need == 0 {
+                break;
+            }
+            let t = hypergeometric(rng, pop, smp.count, need);
+            pop -= smp.count;
+            need -= t;
+            if t > 0 {
+                let e = smp.item;
+                let w = dist.weight(e.row, e.val);
+                let p = w / total_weight; // global probability
+                entries.push(SketchEntry {
+                    row: e.row,
+                    col: e.col,
+                    count: t as u32,
+                    value: t as f64 * e.val as f64 / (s as f64 * p),
+                });
+            }
+        }
+    }
+    Ok(entries)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::{DistributionKind, MatrixStats};
+    use crate::sparse::Coo;
+
+    #[test]
+    fn fold_rng_matches_engine_merge_stream() {
+        // Same stream as Rng::new(seed ^ 0x4D45_5247) — the sharded
+        // engine's merge RNG; pinned so external folds stay bit-identical.
+        let mut a = fold_rng(123);
+        let mut b = Rng::new(123 ^ 0x4D45_5247);
+        for _ in 0..16 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn observed_fold_is_identical_to_sharded_finalize() {
+        // Folding the sharded engine's own parts through the public API
+        // with fold_rng must reproduce its merge exactly.
+        let coo = Coo::from_entries(
+            2,
+            3,
+            vec![
+                crate::sparse::Entry::new(0, 0, 3.0),
+                crate::sparse::Entry::new(0, 1, 1.0),
+                crate::sparse::Entry::new(1, 2, 2.0),
+            ],
+        )
+        .unwrap();
+        let stats = MatrixStats::from_coo(&coo);
+        let dist = Distribution::prepare(DistributionKind::L1, &stats, 10, 0.1).unwrap();
+        let samples_a = vec![
+            WeightedSample { item: Entry::new(0, 0, 3.0), count: 7 },
+            WeightedSample { item: Entry::new(0, 1, 1.0), count: 3 },
+        ];
+        let samples_b = vec![WeightedSample { item: Entry::new(1, 2, 2.0), count: 10 }];
+        let parts = vec![
+            FoldPart { id: 0, samples: &samples_a, total_weight: 4.0 },
+            FoldPart { id: 1, samples: &samples_b, total_weight: 2.0 },
+        ];
+        let a = fold_observed(&parts, &mut fold_rng(99), &dist, 10, 6.0).unwrap();
+        let b = fold_observed(&parts, &mut fold_rng(99), &dist, 10, 6.0).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.iter().map(|e| e.count as u64).sum::<u64>(), 10);
+    }
+}

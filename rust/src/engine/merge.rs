@@ -1,35 +1,27 @@
-//! Shard-sample merging: compose per-shard reservoir outputs into exactly
-//! `s` global i.i.d. draws.
+//! Shard-sample merging: thin `pub(crate)` adapters from the engine's
+//! [`WorkerOut`] shards onto the public fold API in [`super::fold`].
 //!
-//! Two paths, both exact and both deterministic given the plan seed (the
-//! merge RNG is derived from `plan.seed` alone and shards are visited in
-//! shard-id order):
-//!
-//! * **pre-split** — the per-shard budgets were drawn up front as
-//!   `Multinomial(s, W_w/ΣW)` over stats-derived shard weights, so every
-//!   worker already holds exactly its share; the merge only rescales.
-//! * **observed** — trimmed distributions (stats can't predict shard
-//!   weights): every worker sampled at the full budget `s`; the merge
-//!   draws `Multinomial(s, W_w^obs/ΣW^obs)` over the observed weights and
-//!   takes a uniformly random subset of each shard's exchangeable samples
-//!   via a multivariate-hypergeometric chain.
+//! The actual composition (pre-split rescale, or multinomial +
+//! hypergeometric subset over observed weights) lives in
+//! [`super::fold`] — exposed so callers outside the engine can combine
+//! part outputs the same deterministic way. These adapters only build
+//! the borrowed [`FoldPart`] views in shard-id order.
 
 use crate::distributions::Distribution;
-use crate::error::{Error, Result};
-use crate::samplers::{hypergeometric, multinomial_counts};
+use crate::error::Result;
 use crate::sketch::SketchEntry;
 use crate::util::rng::Rng;
 
+use super::fold::{fold_observed, fold_presplit, FoldPart};
 use super::shard::WorkerOut;
 
-/// Merge when shard budgets were pre-split: the effective global sampling
-/// probability of an entry in shard `w` is `q_w · w_ij / W_w(observed)` —
-/// exact even when the stats were rough estimates (§3 one-pass mode).
-///
-/// `counts` are the pre-split per-shard budgets; a shard that was
-/// assigned budget but observed no positive-weight entries (stats claimed
-/// weight the stream never delivered) is an error — silently dropping its
-/// share would break the engine's exactly-`s`-draws contract.
+fn parts(outs: &[WorkerOut]) -> Vec<FoldPart<'_>> {
+    outs.iter()
+        .map(|o| FoldPart { id: o.shard, samples: &o.samples, total_weight: o.total_weight })
+        .collect()
+}
+
+/// Merge when shard budgets were pre-split (see [`fold_presplit`]).
 pub(crate) fn merge_presplit(
     outs: &[WorkerOut],
     counts: &[u64],
@@ -37,38 +29,10 @@ pub(crate) fn merge_presplit(
     dist: &Distribution,
     s: u64,
 ) -> Result<Vec<SketchEntry>> {
-    let mut entries = Vec::new();
-    for o in outs {
-        let have: u64 = o.samples.iter().map(|x| x.count).sum();
-        if have != counts[o.shard] {
-            return Err(Error::Pipeline(format!(
-                "shard {} produced {have} of its pre-split {} samples — \
-                 the stats assigned weight this stream never delivered",
-                o.shard, counts[o.shard]
-            )));
-        }
-        if o.total_weight <= 0.0 {
-            continue; // an empty shard with a zero budget is normal
-        }
-        let qw = q[o.shard];
-        for smp in &o.samples {
-            let e = smp.item;
-            let w = dist.weight(e.row, e.val);
-            let p = qw * w / o.total_weight;
-            entries.push(SketchEntry {
-                row: e.row,
-                col: e.col,
-                count: smp.count as u32,
-                value: smp.count as f64 * e.val as f64 / (s as f64 * p),
-            });
-        }
-    }
-    Ok(entries)
+    fold_presplit(&parts(outs), counts, q, dist, s)
 }
 
-/// Merge over *observed* shard weights: multinomial split of `s`, then a
-/// uniformly random subset (hypergeometric chain) of each shard's `s`
-/// reservoir samples.
+/// Merge over *observed* shard weights (see [`fold_observed`]).
 pub(crate) fn merge_observed(
     outs: &[WorkerOut],
     rng: &mut Rng,
@@ -76,43 +40,7 @@ pub(crate) fn merge_observed(
     s: u64,
     total_weight: f64,
 ) -> Result<Vec<SketchEntry>> {
-    let shard_weights: Vec<f64> = outs.iter().map(|o| o.total_weight).collect();
-    let take = multinomial_counts(rng, s, &shard_weights);
-    let mut entries = Vec::new();
-    for (o, &need_total) in outs.iter().zip(take.iter()) {
-        if need_total == 0 {
-            continue;
-        }
-        let have: u64 = o.samples.iter().map(|x| x.count).sum();
-        if have < need_total {
-            return Err(Error::Pipeline(format!(
-                "shard {} holds {have} samples, needs {need_total}",
-                o.shard
-            )));
-        }
-        let mut pop = have;
-        let mut need = need_total;
-        for smp in &o.samples {
-            if need == 0 {
-                break;
-            }
-            let t = hypergeometric(rng, pop, smp.count, need);
-            pop -= smp.count;
-            need -= t;
-            if t > 0 {
-                let e = smp.item;
-                let w = dist.weight(e.row, e.val);
-                let p = w / total_weight; // global probability
-                entries.push(SketchEntry {
-                    row: e.row,
-                    col: e.col,
-                    count: t as u32,
-                    value: t as f64 * e.val as f64 / (s as f64 * p),
-                });
-            }
-        }
-    }
-    Ok(entries)
+    fold_observed(&parts(outs), rng, dist, s, total_weight)
 }
 
 #[cfg(test)]

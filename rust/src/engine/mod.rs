@@ -38,8 +38,11 @@
 //!   budgets where `s·log(bN)` records exceed RAM.
 //! * [`shard`] — [`ShardedSketcher`] + [`PipelineConfig`]: row-hash
 //!   routing to worker reservoirs with shard-budget pre-splitting.
-//! * [`merge`] — the deterministic seeded merge (pre-split rescale or
-//!   multinomial + hypergeometric subset over observed weights).
+//! * [`fold`] — the public fold entry point: the deterministic seeded
+//!   merge (pre-split rescale or multinomial + hypergeometric subset over
+//!   observed weights), reusable outside the engine ([`FoldPart`],
+//!   [`fold_presplit`], [`fold_observed`], [`fold_rng`]).
+//! * [`merge`] — `pub(crate)` adapters from worker shards onto [`fold`].
 //! * [`backpressure`] — leader-side bounded spill + blocking-send flow
 //!   control for the sharded mode.
 //! * [`metrics`] — [`PipelineMetrics`], produced by every mode.
@@ -53,6 +56,7 @@
 //! without touching any consumer.
 
 pub mod backpressure;
+pub mod fold;
 pub mod merge;
 pub mod metrics;
 pub mod offline;
@@ -60,6 +64,7 @@ pub mod reservoir;
 pub mod shard;
 pub mod spilling;
 
+pub use fold::{fold_observed, fold_presplit, fold_rng, FoldPart};
 pub use metrics::PipelineMetrics;
 pub use offline::AliasSketcher;
 pub use reservoir::ReservoirSketcher;

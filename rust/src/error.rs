@@ -31,6 +31,10 @@ pub enum Error {
 
     /// Streaming pipeline failure (worker panic, channel torn down, ...).
     Pipeline(String),
+
+    /// A generation pin that cannot be served: not yet published, or
+    /// retired out of the live chain's retained window.
+    Generation(String),
 }
 
 impl fmt::Display for Error {
@@ -44,6 +48,7 @@ impl fmt::Display for Error {
             Error::Xla(m) => write!(f, "xla error: {m}"),
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
+            Error::Generation(m) => write!(f, "generation error: {m}"),
         }
     }
 }

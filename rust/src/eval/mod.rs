@@ -5,7 +5,8 @@
 //! * [`figure1`] — E2 (the 8-panel quality-vs-budget sweep).
 //! * [`compression`] — E3 (bits/sample and the disc-size comparison).
 //! * [`theory`] — E6 (ε₅ near-optimality checks).
-//! * [`serving`] — E9 (store-fed concurrent query-serving throughput).
+//! * [`serving`] — E9 (store-fed concurrent query-serving throughput,
+//!   plus the mixed ingest+query live-serving bench).
 //! * [`netbench`] — E11 (remote wire-protocol serving throughput +
 //!   latency percentiles).
 //! * [`report`] — CSV/markdown emission shared by all drivers.
@@ -23,6 +24,9 @@ pub use ablation::run_ablation;
 pub use compression::run_compression;
 pub use figure1::{run_figure1, Figure1Config};
 pub use netbench::{run_net_bench, NetBenchConfig, NetPoint};
-pub use serving::{run_serve_bench, BatchPoint, ServeConfig, ServePoint};
+pub use serving::{
+    run_live_bench, run_serve_bench, BatchPoint, LiveBenchConfig, LivePoint, ServeConfig,
+    ServePoint,
+};
 pub use tables::{run_tables, TableRow};
 pub use theory::run_theory;

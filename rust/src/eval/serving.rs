@@ -17,18 +17,24 @@
 //!   [`QueryRequest::MatvecBatch`] vs k independent matvecs (the
 //!   payload-decode amortization win);
 //! * `serving_spill_depth` — per-shard spill-depth histograms from the
-//!   sharded sketch builds that fed the store (backpressure telemetry).
+//!   sharded sketch builds that fed the store (backpressure telemetry);
+//! * `live_serving` (from [`run_live_bench`]) — mixed ingest+query runs
+//!   against a live generation chain: queries/sec and latency
+//!   percentiles measured *while* the stream is arriving, plus the
+//!   freshness lag (entry arrival → generation live) p50/p95.
 
 use std::path::Path;
 use std::time::Instant;
 
-use crate::api::{LocalClient, QueryRequest, SketchClient};
+use crate::api::{BoxedSketchClient, LocalClient, QueryRequest, SketchClient};
 use crate::datasets::DatasetId;
 use crate::distributions::DistributionKind;
 use crate::engine::{self, PipelineConfig, SketchMode};
 use crate::error::Result;
-use crate::serve::{SketchStore, StoreKey};
+use crate::net::{run_live_load, LoadGenConfig, LoadOp};
+use crate::serve::{LiveConfig, LiveSketch, SketchStore, StoreKey};
 use crate::sketch::SketchPlan;
+use crate::sparse::Entry;
 use crate::util::rng::Rng;
 
 use super::report::{fixed, spill_depth_table, Table};
@@ -258,6 +264,191 @@ fn measure_batches(
     Ok(out)
 }
 
+/// Live serve-bench knobs (the `live_serving` table).
+#[derive(Clone, Debug)]
+pub struct LiveBenchConfig {
+    /// Stream shape (rows × cols).
+    pub m: usize,
+    /// Stream columns.
+    pub n: usize,
+    /// Stream entries ingested per run.
+    pub entries: usize,
+    /// Entries per published generation (the epoch tick).
+    pub epoch_entries: usize,
+    /// Sample budget `s`.
+    pub s: u64,
+    /// Concurrent query-client counts to measure.
+    pub clients: Vec<usize>,
+    /// Queries per client per run.
+    pub queries_per_client: usize,
+    /// Stream + sketching seed.
+    pub seed: u64,
+}
+
+impl Default for LiveBenchConfig {
+    fn default() -> Self {
+        LiveBenchConfig {
+            m: 64,
+            n: 256,
+            entries: 20_000,
+            epoch_entries: 2_048,
+            s: 2_000,
+            clients: vec![2, 4],
+            queries_per_client: 64,
+            seed: 0,
+        }
+    }
+}
+
+/// One mixed ingest+query measurement.
+#[derive(Clone, Debug)]
+pub struct LivePoint {
+    /// Dataset label (`synthetic-live`).
+    pub dataset: String,
+    /// Distribution name.
+    pub method: String,
+    /// Sample budget.
+    pub s: u64,
+    /// Concurrent query clients.
+    pub clients: usize,
+    /// Stream entries ingested during the run.
+    pub entries: u64,
+    /// Generations published during the run.
+    pub generations: u64,
+    /// Queries/second while the ingest writer was running.
+    pub qps: f64,
+    /// Median query latency under ingest (µs).
+    pub p50_us: f64,
+    /// 95th-percentile query latency under ingest (µs).
+    pub p95_us: f64,
+    /// Median freshness lag: epoch's first entry → generation live (ms).
+    pub lag_p50_ms: f64,
+    /// 95th-percentile freshness lag (ms).
+    pub lag_p95_ms: f64,
+}
+
+/// A deterministic synthetic entry stream for the live bench.
+fn live_stream(m: usize, n: usize, count: usize, seed: u64) -> Vec<Entry> {
+    let mut rng = Rng::new(seed ^ 0x11FE);
+    (0..count)
+        .map(|_| {
+            Entry::new(
+                rng.usize_below(m) as u32,
+                rng.usize_below(n) as u32,
+                rng.normal() as f32 + 1.0,
+            )
+        })
+        .collect()
+}
+
+/// Run the mixed ingest+query benchmark: for each client count, a fresh
+/// live chain ingests the synthetic stream (publishing on the epoch
+/// tick) while closed-loop [`LocalClient`] readers attached to the chain
+/// query it. Writes `live_serving.csv`/`.md` under `dir`. The numbers to
+/// watch: qps should hold up against the frozen `serving` table (reads
+/// never block on ingest — publication is one pointer swap) and the
+/// freshness lag is the cost of each offline prefix rebuild.
+pub fn run_live_bench(
+    dir: &Path,
+    store_dir: &Path,
+    cfg: &LiveBenchConfig,
+) -> Result<Vec<LivePoint>> {
+    let kind = DistributionKind::Bernstein;
+    let plan = SketchPlan::new(kind, cfg.s).with_seed(cfg.seed);
+    let key = StoreKey::new("synthetic-live", &kind.name(), cfg.s, cfg.seed);
+    let stream = live_stream(cfg.m, cfg.n, cfg.entries, cfg.seed);
+    // the clients resolve the key through a (possibly empty) store dir;
+    // the live attachment wins before any disk lookup happens
+    std::fs::create_dir_all(store_dir)?;
+    let mut points = Vec::new();
+
+    for &clients in &cfg.clients {
+        let live_cfg =
+            LiveConfig { epoch_entries: cfg.epoch_entries, retain: 4, workers: 2 };
+        let live = LiveSketch::start(cfg.m, cfg.n, &plan, &live_cfg)?;
+        let reader = live.reader();
+        let lcfg = LoadGenConfig {
+            clients,
+            queries_per_client: cfg.queries_per_client,
+            duration: None,
+            ops: vec![LoadOp::Matvec, LoadOp::Row, LoadOp::TopK],
+            top_k: 10,
+            batch_k: 4,
+            seed: cfg.seed,
+        };
+        let report = run_live_load(
+            |_| {
+                let mut client =
+                    LocalClient::new(SketchStore::open(store_dir)?).with_workers(1);
+                client.attach_live(&key, reader.clone());
+                Ok(Box::new(client) as BoxedSketchClient)
+            },
+            &key,
+            &lcfg,
+            live,
+            &stream,
+            256,
+        )?;
+        crate::info!(
+            "live-bench: {clients} clients, {} gens, {:.1} qps under ingest",
+            report.generations,
+            report.load.qps
+        );
+        points.push(LivePoint {
+            dataset: "synthetic-live".into(),
+            method: kind.name(),
+            s: cfg.s,
+            clients,
+            entries: report.entries_ingested,
+            generations: report.generations,
+            qps: report.load.qps,
+            p50_us: report.load.p50_us,
+            p95_us: report.load.p95_us,
+            lag_p50_ms: report.lag_p50_s * 1e3,
+            lag_p95_ms: report.lag_p95_s * 1e3,
+        });
+    }
+
+    live_serving_table(&points).write(dir)?;
+    Ok(points)
+}
+
+/// Render live points as the `live_serving` report table.
+pub fn live_serving_table(points: &[LivePoint]) -> Table {
+    let mut t = Table::new(
+        "live_serving",
+        &[
+            "dataset",
+            "method",
+            "s",
+            "clients",
+            "entries",
+            "generations",
+            "qps",
+            "p50_us",
+            "p95_us",
+            "lag_p50_ms",
+            "lag_p95_ms",
+        ],
+    );
+    for p in points {
+        t.push(vec![
+            p.dataset.clone(),
+            p.method.clone(),
+            p.s.to_string(),
+            p.clients.to_string(),
+            p.entries.to_string(),
+            p.generations.to_string(),
+            fixed(p.qps, 1),
+            fixed(p.p50_us, 1),
+            fixed(p.p95_us, 1),
+            fixed(p.lag_p50_ms, 2),
+            fixed(p.lag_p95_ms, 2),
+        ]);
+    }
+    t
+}
+
 /// Render batch points as the `serving_batch` report table.
 pub fn serving_batch_table(points: &[BatchPoint]) -> Table {
     let mut t = Table::new(
@@ -308,6 +499,35 @@ mod tests {
         // second run must come from the store
         let pts2 = run_serve_bench(&out, &store, &cfg, &datasets).unwrap();
         assert!(pts2.iter().all(|p| p.cache_hit));
+        let _ = std::fs::remove_dir_all(&base);
+    }
+
+    #[test]
+    fn live_bench_reports_qps_and_freshness_under_ingest() {
+        let base = std::env::temp_dir()
+            .join(format!("matsketch_live_eval_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let out = base.join("reports");
+        let store = base.join("store");
+        let cfg = LiveBenchConfig {
+            m: 16,
+            n: 64,
+            entries: 2_000,
+            epoch_entries: 500,
+            s: 400,
+            clients: vec![2],
+            queries_per_client: 16,
+            seed: 1,
+        };
+        let pts = run_live_bench(&out, &store, &cfg).unwrap();
+        assert_eq!(pts.len(), 1);
+        let p = &pts[0];
+        assert!(p.qps > 0.0, "qps {}", p.qps);
+        assert!(p.generations >= 1, "generations {}", p.generations);
+        assert_eq!(p.entries, 2_000);
+        assert!(p.lag_p95_ms >= p.lag_p50_ms);
+        assert!(out.join("live_serving.csv").exists());
+        assert!(out.join("live_serving.md").exists());
         let _ = std::fs::remove_dir_all(&base);
     }
 }

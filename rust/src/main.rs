@@ -19,6 +19,11 @@
 //! matsketch serve       --addr HOST:PORT [--store DIR] [--workers W]
 //!                       [--max-conns N] [--timeout-secs S]
 //!                       [--shutdown-after-secs S]
+//!                       [--ingest a.bin --s N [--method NAME]
+//!                        [--epoch-entries E] [--ingest-batch B]]
+//! matsketch live-bench  [--seed N] [--out DIR] [--store DIR]
+//!                       [--clients 2,4] [--queries Q] [--entries E]
+//!                       [--epoch-entries E] [--s N] [--m M] [--n N]
 //! matsketch net-bench   [--addr HOST:PORT] [--clients 1,2,8] [--queries Q]
 //!                       [--duration-secs S] [--ops matvec,row,top-k]
 //!                       [--batch-k K] [--datasets a,b] [--store DIR]
@@ -44,7 +49,7 @@ use matsketch::error::{Error, Result};
 use matsketch::eval::{run_compression, run_figure1, run_tables, run_theory, Figure1Config};
 use matsketch::net::{LoadOp, NetServer, NetServerConfig};
 use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
-use matsketch::serve::{Fingerprinter, SketchStore, StoreKey};
+use matsketch::serve::{Fingerprinter, LiveConfig, LiveSketch, SketchStore, StoreKey};
 use matsketch::sketch::{encode_sketch, SketchPlan};
 use matsketch::sparse::io as sparse_io;
 use matsketch::stream::FileStream;
@@ -303,6 +308,61 @@ fn real_main() -> Result<()> {
                 write_timeout: timeout,
             };
             let server = NetServer::bind(store, addr, cfg)?;
+            // --ingest attaches a live generation chain fed from a
+            // triplet file by a background thread: clients query the
+            // chain (latest or pinned generation) while it grows
+            if let Some(input) = args.get("ingest") {
+                let s: u64 = args
+                    .get_parse("s")?
+                    .ok_or_else(|| Error::invalid("serve --ingest requires --s <budget>"))?;
+                let kind = parse_method(args.get_or("method", "bernstein"))?;
+                let mut stream = FileStream::open(Path::new(input))?;
+                let (m, n) = {
+                    use matsketch::stream::EntryStream;
+                    stream.shape()
+                };
+                let plan = SketchPlan::new(kind, s).with_seed(seed);
+                let live_cfg = LiveConfig {
+                    epoch_entries: args.get_parse_or("epoch-entries", 4096)?,
+                    retain: args.get_parse_or("retain", 4)?,
+                    workers: args.get_parse_or("workers", 4)?,
+                };
+                let mut live = LiveSketch::start(m, n, &plan, &live_cfg)?;
+                let key = StoreKey::new(&dataset_label(&args, input), &kind.name(), s, seed);
+                server.attach_live(&key, live.reader());
+                info!(
+                    "live chain {}: ingesting {m}x{n} stream from {input} \
+                     (epoch every {} entries)",
+                    key.file_name(),
+                    live_cfg.epoch_entries
+                );
+                let batch: usize = args.get_parse_or::<usize>("ingest-batch", 1024)?.max(1);
+                std::thread::spawn(move || {
+                    let mut run = || -> Result<()> {
+                        use matsketch::stream::EntryStream;
+                        let mut buf = Vec::with_capacity(batch);
+                        while let Some(e) = stream.next_entry()? {
+                            buf.push(e);
+                            if buf.len() >= batch {
+                                live.push(&buf)?;
+                                buf.clear();
+                            }
+                        }
+                        if !buf.is_empty() {
+                            live.push(&buf)?;
+                        }
+                        let g = live.flush()?;
+                        info!(
+                            "ingest complete: {} entries, generation {g} live",
+                            live.ingested()
+                        );
+                        Ok(())
+                    };
+                    if let Err(e) = run() {
+                        warn_log!("live ingest stopped: {e}");
+                    }
+                });
+            }
             let local = server.local_addr();
             info!(
                 "serving on {local}; stop with the wire Shutdown sentinel \
@@ -323,6 +383,28 @@ fn real_main() -> Result<()> {
                 "served {} frames over {} connections ({} faults)",
                 stats.frames, stats.connections, stats.faults
             );
+        }
+        "live-bench" => {
+            let cfg = matsketch::eval::LiveBenchConfig {
+                m: args.get_parse_or("m", 64)?,
+                n: args.get_parse_or("n", 256)?,
+                entries: args.get_parse_or("entries", 20_000)?,
+                epoch_entries: args.get_parse_or("epoch-entries", 2_048)?,
+                s: args.get_parse_or("s", 2_000)?,
+                clients: parse_usize_list(args.get_or("clients", "2,4"))?,
+                queries_per_client: args.get_parse_or("queries", 64)?,
+                seed,
+            };
+            let store_dir = PathBuf::from(args.get_or("store", "sketch-store"));
+            let pts = matsketch::eval::run_live_bench(&out, &store_dir, &cfg)?;
+            for p in &pts {
+                info!(
+                    "live-bench: clients={} -> {:.1} queries/s, {} generations, \
+                     lag p95 {:.2} ms",
+                    p.clients, p.qps, p.generations, p.lag_p95_ms
+                );
+            }
+            info!("live-bench: {} points -> {}/live_serving.*", pts.len(), out.display());
         }
         "net-shutdown" => {
             let addr = args.get_or("addr", "127.0.0.1:7300");
@@ -639,7 +721,9 @@ COMMANDS:
   gen          generate a dataset to a binary triplet file
   sketch       stream-sketch a triplet file into the sketch store
   query        answer a matvec / slice / top-k query (local store or --addr)
-  serve        serve the sketch store over TCP (wire protocol v2, v1 accepted)
+  serve        serve the sketch store over TCP (wire protocol v3, v1/v2
+               accepted); --ingest adds a live ingest-while-serving chain
+  live-bench   E12: mixed ingest+query throughput + freshness-lag table
   net-shutdown send the graceful-shutdown sentinel to a running server
 
 COMMON OPTIONS:
@@ -676,8 +760,21 @@ SERVE-BENCH OPTIONS:
 SERVE OPTIONS:
   --addr HOST:PORT [--workers W] [--max-conns N] [--timeout-secs S]
   [--shutdown-after-secs S]
+  [--ingest a.bin --s N [--method NAME] [--dataset LABEL]
+   [--epoch-entries E] [--retain R] [--ingest-batch B]]
   Serves every sketch in the store; clients open by
   (dataset, method, s, seed) and stream matvec / slice / top-k answers.
+  With --ingest, a background thread streams the triplet file into a
+  live generation chain served alongside the store: a new immutable
+  snapshot publishes every --epoch-entries entries (default 4096), and
+  v3 clients can pin queries to a generation or poll for a fresher one.
+
+LIVE-BENCH OPTIONS:
+  [--clients 2,4] [--queries Q] [--entries E] [--epoch-entries E]
+  [--s N] [--m M] [--n N]
+  Mixed ingest+query load against a live chain: queries/sec + latency
+  percentiles measured while the stream arrives, plus freshness-lag
+  p50/p95; results land in reports/live_serving.*
 
 NET-BENCH OPTIONS:
   [--addr HOST:PORT] [--clients 1,2,8] [--queries Q] [--duration-secs S]

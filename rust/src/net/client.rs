@@ -7,6 +7,13 @@
 //! covers the whole batch). On a broken connection the client redials
 //! once and transparently re-opens its sketch handles, which are
 //! connection-scoped on the server.
+//!
+//! Generation pins ([`RemoteSketchClient::set_pin`] and the explicit
+//! `query_at` / `poll_generation` calls) live in their own per-key map,
+//! deliberately **not** cleared by the reconnect path: handles are
+//! connection-scoped, pins are client intent. After a redial the client
+//! re-opens the handle and keeps answering at the pinned generation
+//! instead of silently resetting to latest.
 
 use std::collections::VecDeque;
 use std::io::{self, BufReader, BufWriter};
@@ -17,7 +24,7 @@ use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::error::{Error, Result};
 use crate::serve::StoreKey;
 
-use super::wire::{self, Request, Response};
+use super::wire::{self, ErrCode, Request, Response};
 
 /// Default connect / read / write timeout.
 const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
@@ -45,6 +52,11 @@ pub struct RemoteSketchClient {
     /// Cleared on reconnect (handles are connection-scoped server-side)
     /// and re-established lazily.
     opened: Vec<(StoreKey, u32)>,
+    /// Sticky per-key generation pins: `(key, generation)`. Unlike
+    /// `opened` this survives [`reset`](Self::reset) — a pin is caller
+    /// intent, not connection state — so the one-shot reconnect restores
+    /// the pinned generation on re-open instead of drifting to latest.
+    pins: Vec<(StoreKey, u64)>,
 }
 
 impl RemoteSketchClient {
@@ -70,6 +82,7 @@ impl RemoteSketchClient {
             conn: None,
             next_id: 0,
             opened: Vec::new(),
+            pins: Vec::new(),
         };
         client.ensure_conn()?;
         Ok(client)
@@ -97,10 +110,26 @@ impl RemoteSketchClient {
     }
 
     /// Drop the connection (and its connection-scoped handles); the next
-    /// call redials.
+    /// call redials. Generation pins stay: they are caller intent, not
+    /// connection state.
     fn reset(&mut self) {
         self.conn = None;
         self.opened.clear();
+    }
+
+    /// Set (or with `None` clear) the sticky generation pin for `key`:
+    /// every later query against the key answers at that generation
+    /// until the pin is cleared — across reconnects too.
+    pub fn set_pin(&mut self, key: &StoreKey, pin: Option<u64>) {
+        self.pins.retain(|(k, _)| !k.same_identity(key));
+        if let Some(g) = pin {
+            self.pins.push((key.clone(), g));
+        }
+    }
+
+    /// The sticky generation pin currently set for `key`, if any.
+    pub fn pin_for(&self, key: &StoreKey) -> Option<u64> {
+        self.pins.iter().find(|(k, _)| k.same_identity(key)).map(|(_, g)| *g)
     }
 
     /// Hang up now. The client stays usable — any later call redials and
@@ -115,10 +144,16 @@ impl RemoteSketchClient {
         self.next_id
     }
 
-    /// Write one request frame.
+    /// Write one request frame at its operation's minimum version.
     fn send(&mut self, req: &Request) -> Result<u64> {
+        self.send_at(req, wire::request_version(req))
+    }
+
+    /// Write one request frame at an explicit protocol version (floored
+    /// at the operation's minimum by the encoder).
+    fn send_at(&mut self, req: &Request, version: u16) -> Result<u64> {
         let id = self.fresh_id();
-        let bytes = wire::encode_request(id, req);
+        let bytes = wire::encode_request_at(id, req, version);
         let conn = self.ensure_conn()?;
         wire::write_frame(&mut conn.writer, &bytes)?;
         Ok(id)
@@ -138,7 +173,7 @@ impl RemoteSketchClient {
         })?;
         let h = wire::parse_frame_header(&header).map_err(Error::from)?;
         let payload = wire::read_payload(&mut conn.reader, h.len)?;
-        let resp = wire::decode_response(h.opcode, &payload).map_err(Error::from)?;
+        let resp = wire::decode_response(h.version, h.opcode, &payload).map_err(Error::from)?;
         if h.request_id != expect_id {
             // a refusal the server issued before reading any request
             // (busy, frame fault) carries id 0: surface the typed error,
@@ -174,9 +209,14 @@ impl RemoteSketchClient {
         }
     }
 
-    /// Turn a remote error response into a local [`Error`].
+    /// Turn a remote error response into a local [`Error`]. Generation
+    /// faults keep their typed variant so callers can tell a retired /
+    /// future pin from an ordinary query failure, same as in-process.
     fn remote_err(resp: Response) -> Error {
         match resp {
+            Response::Error { code: ErrCode::Generation, message } => {
+                Error::Generation(format!("remote: {message}"))
+            }
             Response::Error { code, message } => {
                 Error::Pipeline(format!("remote: {message} ({})", code.name()))
             }
@@ -239,24 +279,93 @@ impl RemoteSketchClient {
             .ok_or_else(|| Error::Pipeline("open succeeded but recorded no handle".into()))
     }
 
-    /// Execute one query against the sketch stored under `key`.
+    /// Execute one query against the sketch stored under `key`, at the
+    /// key's sticky pin if one is set (else the server's latest
+    /// generation). Without a pin the frame goes out at its operation's
+    /// minimum protocol version, so an upgraded client keeps talking to
+    /// old servers.
     pub fn query(&mut self, key: &StoreKey, query: &QueryRequest) -> Result<QueryResponse> {
-        match self.query_once(key, query) {
+        if self.pin_for(key).is_some() {
+            return self.query_at(key, query, None).map(|(resp, _)| resp);
+        }
+        match self.query_once(key, query, 0, false) {
             Err(Error::Io(_)) => {
                 // redial once; handle_for re-opens on the new connection
                 self.reset();
-                self.query_once(key, query)
+                self.query_once(key, query, 0, false)
+            }
+            other => other,
+        }
+        .map(|(resp, _)| resp)
+    }
+
+    /// Execute one query with an explicit generation pin (`None` falls
+    /// back to the key's sticky pin, then to latest), returning the
+    /// answer plus the generation it was answered at. The frame always
+    /// goes out at v3 — even unpinned — so the answered-at tag survives
+    /// the wire. Survives a redial: the handle is re-opened and the pin
+    /// re-applied, so a reconnect never silently moves a pinned reader
+    /// to latest.
+    pub fn query_at(
+        &mut self,
+        key: &StoreKey,
+        query: &QueryRequest,
+        pin: Option<u64>,
+    ) -> Result<(QueryResponse, u64)> {
+        let pin = pin.or_else(|| self.pin_for(key)).unwrap_or(0);
+        match self.query_once(key, query, pin, true) {
+            Err(Error::Io(_)) => {
+                self.reset();
+                self.query_once(key, query, pin, true)
             }
             other => other,
         }
     }
 
-    fn query_once(&mut self, key: &StoreKey, query: &QueryRequest) -> Result<QueryResponse> {
+    fn query_once(
+        &mut self,
+        key: &StoreKey,
+        query: &QueryRequest,
+        pin: u64,
+        generation_aware: bool,
+    ) -> Result<(QueryResponse, u64)> {
         let handle = self.handle_for(key)?;
-        let req = Request::Query { handle, query: query.clone() };
-        match self.call(&req)? {
-            Response::Answer(outcome) => Ok(outcome),
+        let req = Request::Query { handle, pin, query: query.clone() };
+        let resp = if generation_aware {
+            let id = self.send_at(&req, 3)?;
+            self.recv(id)?
+        } else {
+            self.call(&req)?
+        };
+        match resp {
+            Response::Answer { generation, answer } => Ok((answer, generation)),
             other => Err(Self::remote_err(other)),
+        }
+    }
+
+    /// Latest published generation of the sketch under `key` (0 for
+    /// frozen sketches). With `min_gen > 0` the server parks the request
+    /// up to `timeout_ms` waiting for the chain to reach it, returning
+    /// whatever generation is current when it answers.
+    pub fn poll_generation(
+        &mut self,
+        key: &StoreKey,
+        min_gen: u64,
+        timeout_ms: u32,
+    ) -> Result<u64> {
+        let poll = |c: &mut Self| -> Result<u64> {
+            let handle = c.handle_for(key)?;
+            match c.call(&Request::GenPoll { handle, min_gen, timeout_ms })? {
+                Response::Generation(g) => Ok(g),
+                other => Err(Self::remote_err(other)),
+            }
+        };
+        match poll(self) {
+            Err(Error::Io(_)) => {
+                self.reset();
+                poll(self)
+            }
+            other => other,
         }
     }
 
@@ -273,11 +382,15 @@ impl RemoteSketchClient {
         key: &StoreKey,
         queries: Vec<QueryRequest>,
     ) -> Result<Vec<Result<QueryResponse>>> {
+        // the whole batch answers at one pin (the key's sticky pin, or
+        // latest) — matching the local batched path, where a batch sees a
+        // single snapshot
+        let pin = self.pin_for(key).unwrap_or(0);
         let handle = self.handle_for(key)?;
         let mut ids = VecDeque::with_capacity(PIPELINE_WINDOW);
         let mut out = Vec::with_capacity(queries.len());
         let collect = |resp: Response| match resp {
-            Response::Answer(outcome) => Ok(outcome),
+            Response::Answer { answer, .. } => Ok(answer),
             other => Err(Self::remote_err(other)),
         };
         for q in queries {
@@ -286,7 +399,7 @@ impl RemoteSketchClient {
                 let resp = self.recv(id)?;
                 out.push(collect(resp));
             }
-            let req = Request::Query { handle, query: q };
+            let req = Request::Query { handle, pin, query: q };
             ids.push_back(self.send(&req)?);
         }
         for id in ids {

@@ -19,7 +19,8 @@ use std::time::{Duration, Instant};
 
 use crate::api::{BoxedSketchClient, QueryRequest, RemoteClient};
 use crate::error::{Error, Result};
-use crate::serve::StoreKey;
+use crate::serve::{LiveSketch, StoreKey};
+use crate::sparse::Entry;
 use crate::util::rng::Rng;
 use crate::util::stats::quantiles_in_place;
 use crate::warn_log;
@@ -216,6 +217,76 @@ where
         p99_us: qs[2],
         mean_us,
         max_us,
+    })
+}
+
+/// Result of a mixed ingest+query run: the query-side [`LoadReport`]
+/// measured *while* a live chain was ingesting, plus the ingest side's
+/// freshness numbers.
+#[derive(Clone, Debug)]
+pub struct LiveLoadReport {
+    /// Query-side throughput + latency, measured under concurrent ingest.
+    pub load: LoadReport,
+    /// Generations published during the run.
+    pub generations: u64,
+    /// Stream entries ingested during the run.
+    pub entries_ingested: u64,
+    /// Median publish lag (seconds from an epoch's first entry to its
+    /// generation going live).
+    pub lag_p50_s: f64,
+    /// 95th-percentile publish lag (seconds).
+    pub lag_p95_s: f64,
+}
+
+/// Run a mixed ingest+query measurement: one writer thread streams
+/// `entries` into `live` (in `ingest_batch`-sized pushes, publishing on
+/// the chain's epoch tick) while the usual closed-loop clients from
+/// `make_client` query `key` — which every backend must resolve to the
+/// same chain, locally via `LocalClient::attach_live` or remotely via
+/// `NetServer::attach_live`. The query numbers therefore measure serving
+/// under publication pressure: snapshot publication is one pointer swap,
+/// so a tail-latency cliff here is a regression.
+pub fn run_live_load<F>(
+    make_client: F,
+    key: &StoreKey,
+    cfg: &LoadGenConfig,
+    mut live: LiveSketch,
+    entries: &[Entry],
+    ingest_batch: usize,
+) -> Result<LiveLoadReport>
+where
+    F: Fn(usize) -> Result<BoxedSketchClient> + Sync,
+{
+    let reader = live.reader();
+    let (load, ingest) = std::thread::scope(|scope| {
+        let writer = scope.spawn(move || -> Result<u64> {
+            for chunk in entries.chunks(ingest_batch.max(1)) {
+                live.push(chunk)?;
+            }
+            live.flush()?;
+            Ok(live.ingested() as u64)
+        });
+        let load = run_load_with(make_client, key, cfg);
+        let ingest = writer
+            .join()
+            .unwrap_or_else(|_| Err(Error::Pipeline("live ingest writer panicked".into())));
+        (load, ingest)
+    });
+    let load = load?;
+    let entries_ingested = ingest?;
+    let mut lags = reader.freshness_lags()?;
+    let (lag_p50_s, lag_p95_s) = if lags.is_empty() {
+        (0.0, 0.0)
+    } else {
+        let qs = quantiles_in_place(&mut lags, &[0.5, 0.95]);
+        (qs[0], qs[1])
+    };
+    Ok(LiveLoadReport {
+        load,
+        generations: reader.generation(),
+        entries_ingested,
+        lag_p50_s,
+        lag_p95_s,
     })
 }
 

@@ -7,24 +7,31 @@
 //! This module adds that layer with **zero external dependencies**
 //! (std-only TCP):
 //!
-//! * [`wire`] — the versioned, length-prefixed binary protocol (v2): one
+//! * [`wire`] — the versioned, length-prefixed binary protocol (v3): one
 //!   opcode per [`crate::api::QueryRequest`] variant (matvec /
 //!   transpose-matvec / batched matvec / row / col / top-k, plus `Ping`,
-//!   `ListSketches`, `OpenSketch`, and the `Shutdown` sentinel), with
-//!   typed error responses for malformed, truncated, oversized, or
-//!   wrong-version frames. v1 frames stay decodable.
+//!   `ListSketches`, `OpenSketch`, `GenPoll`, and the `Shutdown`
+//!   sentinel), with typed error responses for malformed, truncated,
+//!   oversized, or wrong-version frames. v3 carries live-sketch
+//!   generation pins and per-answer generation tags; v1/v2 frames stay
+//!   decodable and are answered at their own version.
 //! * [`server`] — [`NetServer`]: a multi-threaded `TcpListener` acceptor
 //!   owning a [`crate::serve::SketchStore`], lazily opening sketches
 //!   into shared [`crate::serve::ServableSketch`]es and dispatching onto
 //!   the in-process [`crate::serve::QueryServer`] worker pools;
-//!   connection limit, read/write timeouts, graceful shutdown.
+//!   connection limit, read/write timeouts, graceful shutdown. Live
+//!   chains ([`crate::serve::live`]) attach via [`NetServer::attach_live`]
+//!   and serve generation-pinned queries remotely.
 //! * [`client`] — [`RemoteSketchClient`]: the blocking, pipelining,
 //!   reconnecting transport behind [`crate::api::RemoteClient`]. Callers
 //!   outside this module and [`crate::api`] go through the
-//!   [`crate::api::SketchClient`] trait, not this type.
+//!   [`crate::api::SketchClient`] trait, not this type. Generation pins
+//!   are sticky per key and survive the one-shot reconnect.
 //! * [`loadgen`] — closed-loop multi-client load generation over
-//!   `dyn SketchClient`, reporting throughput + latency percentiles
-//!   (`matsketch net-bench`, eval driver in `eval::netbench`).
+//!   `dyn SketchClient`, with an optional background ingest writer
+//!   driving a live chain while queries run, reporting throughput +
+//!   latency percentiles (`matsketch net-bench`, eval drivers in
+//!   `eval::netbench` / `eval::serving`).
 //!
 //! The wire layer adds no second compute path: every remote answer is
 //! produced by the same [`crate::serve::ServableSketch::answer`] as the
@@ -37,6 +44,8 @@ pub mod server;
 pub mod wire;
 
 pub use client::RemoteSketchClient;
-pub use loadgen::{run_load, run_load_with, LoadGenConfig, LoadOp, LoadReport};
+pub use loadgen::{
+    run_live_load, run_load, run_load_with, LiveLoadReport, LoadGenConfig, LoadOp, LoadReport,
+};
 pub use server::{NetServer, NetServerConfig, NetServerStats};
 pub use wire::{ErrCode, Request, Response, WIRE_VERSION};

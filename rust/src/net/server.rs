@@ -16,6 +16,12 @@
 //! produced by the same [`ServableSketch::answer`] the local
 //! [`QueryServer`] runs, and the loopback integration test pins remote
 //! bytes to in-process bytes for every query kind.
+//!
+//! Live chains ([`crate::serve::live`]) attach through
+//! [`NetServer::attach_live`]: opening their key routes queries to the
+//! chain's [`LiveReader`] instead of a frozen store load, generation pins
+//! and `GenPoll` work over the wire, and a pin the chain cannot honour is
+//! a payload-level `generation` fault that keeps the connection alive.
 
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter};
@@ -26,8 +32,8 @@ use std::thread::JoinHandle;
 use std::time::Duration;
 
 use crate::api::SketchInfo;
-use crate::error::Result;
-use crate::serve::{QueryServer, ServableSketch, SketchStore, StoreKey};
+use crate::error::{Error, Result};
+use crate::serve::{LiveReader, QueryServer, ServableSketch, SketchStore, StoreKey};
 use crate::{debug_log, info, warn_log};
 
 use super::wire::{
@@ -82,6 +88,22 @@ struct SketchService {
     fingerprint: u64,
 }
 
+/// One connection-scoped handle slot: a frozen store-backed sketch
+/// (generation 0 forever) or a live generation chain.
+enum Opened {
+    Frozen(Arc<SketchService>),
+    Live { reader: LiveReader, info: SketchInfo },
+}
+
+impl Opened {
+    fn info(&self) -> &SketchInfo {
+        match self {
+            Opened::Frozen(svc) => &svc.info,
+            Opened::Live { info, .. } => info,
+        }
+    }
+}
+
 struct Shared {
     store: SketchStore,
     cfg: NetServerConfig,
@@ -95,6 +117,9 @@ struct Shared {
     /// Lazily opened sketches, shared across connections, keyed by store
     /// file name.
     services: Mutex<HashMap<String, Arc<SketchService>>>,
+    /// Live generation chains attached in-process, keyed by store file
+    /// name; opening their key routes to the chain instead of the store.
+    live_chains: Mutex<HashMap<String, (StoreKey, LiveReader)>>,
     /// Live connection sockets, closed to unblock handlers at shutdown.
     live: Mutex<HashMap<u64, TcpStream>>,
 }
@@ -136,6 +161,7 @@ impl NetServer {
             frames: AtomicU64::new(0),
             faults: AtomicU64::new(0),
             services: Mutex::new(HashMap::new()),
+            live_chains: Mutex::new(HashMap::new()),
             live: Mutex::new(HashMap::new()),
         });
         let acceptor = {
@@ -149,6 +175,18 @@ impl NetServer {
     /// The bound address (resolves port 0).
     pub fn local_addr(&self) -> SocketAddr {
         self.shared.addr
+    }
+
+    /// Attach a live generation chain under `key`: remote opens of that
+    /// key route to the chain's reader (pins, `GenPoll`, per-generation
+    /// answers) instead of loading a frozen sketch from the store.
+    /// Re-attaching replaces the previous chain.
+    pub fn attach_live(&self, key: &StoreKey, reader: LiveReader) {
+        self.shared
+            .live_chains
+            .lock()
+            .expect("live-chain registry poisoned")
+            .insert(key.file_name(), (key.clone(), reader));
     }
 
     /// Whether a shutdown has been requested (wire sentinel or local).
@@ -252,7 +290,7 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
     let mut reader = BufReader::new(reader_stream);
     let mut writer = BufWriter::new(stream);
     // connection-scoped handle table: index = handle value
-    let mut handles: Vec<Arc<SketchService>> = Vec::new();
+    let mut handles: Vec<Opened> = Vec::new();
 
     loop {
         let header = match wire::read_frame_header(&mut reader) {
@@ -372,8 +410,19 @@ fn send_fault(
     let _ = wire::write_frame(writer, &encode_response_v(version, request_id, &resp));
 }
 
+/// Map a query-path failure onto its wire fault class: generation-pin
+/// rejections keep their own code (clients distinguish "pin retired"
+/// from "query malformed"), everything else is a query fault.
+fn query_fault(e: Error) -> Response {
+    let code = match e {
+        Error::Generation(_) => ErrCode::Generation,
+        _ => ErrCode::Query,
+    };
+    Response::Error { code, message: e.to_string() }
+}
+
 /// Execute one decoded request against the shared state.
-fn answer(shared: &Shared, handles: &mut Vec<Arc<SketchService>>, req: Request) -> Response {
+fn answer(shared: &Shared, handles: &mut Vec<Opened>, req: Request) -> Response {
     match req {
         Request::Ping => Response::Pong,
         Request::Shutdown => {
@@ -386,25 +435,26 @@ fn answer(shared: &Shared, handles: &mut Vec<Arc<SketchService>>, req: Request) 
             Ok(infos) => Response::SketchList(infos),
             Err(e) => Response::Error { code: ErrCode::Store, message: e.to_string() },
         },
-        Request::OpenSketch(key) => match open_service(shared, &key) {
-            Ok(svc) => {
-                let info = svc.info.clone();
+        Request::OpenSketch(key) => match open_handle(shared, &key) {
+            Ok(opened) => {
+                let info = opened.info().clone();
                 // re-opening an already-open sketch reuses (and
                 // refreshes, after an eviction) its handle slot, so a
                 // client looping OpenSketch cannot grow the table
                 let existing = handles.iter().position(|h| {
-                    h.info.dataset == info.dataset
-                        && h.info.method == info.method
-                        && h.info.s == info.s
-                        && h.info.seed == info.seed
+                    let i = h.info();
+                    i.dataset == info.dataset
+                        && i.method == info.method
+                        && i.s == info.s
+                        && i.seed == info.seed
                 });
                 let handle = match existing {
                     Some(pos) => {
-                        handles[pos] = svc;
+                        handles[pos] = opened;
                         pos
                     }
                     None => {
-                        handles.push(svc);
+                        handles.push(opened);
                         handles.len() - 1
                     }
                 };
@@ -412,25 +462,68 @@ fn answer(shared: &Shared, handles: &mut Vec<Arc<SketchService>>, req: Request) 
             }
             Err(e) => Response::Error { code: ErrCode::Store, message: e.to_string() },
         },
-        Request::Query { handle, query } => {
-            let Some(svc) = handles.get(handle as usize) else {
-                return Response::Error {
-                    code: ErrCode::BadHandle,
-                    message: format!(
-                        "handle {handle} not opened on this connection \
-                         ({} open)",
-                        handles.len()
-                    ),
-                };
+        Request::Query { handle, pin, query } => {
+            let Some(opened) = handles.get(handle as usize) else {
+                return bad_handle(handle, handles.len());
             };
-            // dispatch onto the sketch's QueryServer worker pool; the
-            // handler thread blocks on this one answer, which keeps
-            // per-connection responses in order for pipelined clients
-            match svc.server.submit(query).wait() {
-                Ok(outcome) => Response::Answer(outcome),
-                Err(e) => Response::Error { code: ErrCode::Query, message: e.to_string() },
+            match opened {
+                // dispatch onto the sketch's QueryServer worker pool; the
+                // handler thread blocks on this one answer, which keeps
+                // per-connection responses in order for pipelined clients
+                Opened::Frozen(svc) => {
+                    if pin != 0 {
+                        return Response::Error {
+                            code: ErrCode::Generation,
+                            message: format!(
+                                "generation {pin} not served: frozen sketches stay at \
+                                 generation 0"
+                            ),
+                        };
+                    }
+                    match svc.server.submit(query).wait() {
+                        Ok(outcome) => Response::Answer { generation: 0, answer: outcome },
+                        Err(e) => query_fault(e),
+                    }
+                }
+                // live chains answer on the snapshot the pin selects and
+                // report the generation; wire pin 0 means "latest"
+                Opened::Live { reader, .. } => {
+                    let pin_opt = if pin == 0 { None } else { Some(pin) };
+                    match reader.answer_at(pin_opt, &query) {
+                        Ok((outcome, generation)) => {
+                            Response::Answer { generation, answer: outcome }
+                        }
+                        Err(e) => query_fault(e),
+                    }
+                }
             }
         }
+        Request::GenPoll { handle, min_gen, timeout_ms } => {
+            let Some(opened) = handles.get(handle as usize) else {
+                return bad_handle(handle, handles.len());
+            };
+            match opened {
+                // frozen sketches never advance: answer generation 0 at
+                // once instead of parking the handler for the timeout
+                Opened::Frozen(_) => Response::Generation(0),
+                Opened::Live { reader, .. } => {
+                    // cap the park so one poll cannot outlive the
+                    // connection's own read timeout budget
+                    let timeout = Duration::from_millis(u64::from(timeout_ms.min(30_000)));
+                    match reader.wait_for(min_gen, timeout) {
+                        Ok(g) => Response::Generation(g),
+                        Err(e) => query_fault(e),
+                    }
+                }
+            }
+        }
+    }
+}
+
+fn bad_handle(handle: u32, open: usize) -> Response {
+    Response::Error {
+        code: ErrCode::BadHandle,
+        message: format!("handle {handle} not opened on this connection ({open} open)"),
     }
 }
 
@@ -445,6 +538,36 @@ fn sketch_info(key: &StoreKey, sketch: &ServableSketch) -> SketchInfo {
         n: n as u64,
         compact: sketch.enc.compact,
     }
+}
+
+/// Resolve `key` to a handle slot: an attached live chain wins over the
+/// store (the chain *is* the freshest truth for its key), everything else
+/// loads frozen through [`open_service`].
+fn open_handle(shared: &Shared, key: &StoreKey) -> Result<Opened> {
+    let chain = {
+        let chains = shared.live_chains.lock().expect("live-chain registry poisoned");
+        chains.get(&key.file_name()).map(|(k, r)| (k.clone(), r.clone()))
+    };
+    if let Some((recorded, reader)) = chain {
+        if !recorded.same_identity(key) {
+            return Err(Error::invalid(format!(
+                "live chain {} holds ({}, {}, s={}, seed={}), not the requested \
+                 ({}, {}, s={}, seed={}) (file-name collision?)",
+                key.file_name(),
+                recorded.dataset,
+                recorded.method,
+                recorded.s,
+                recorded.seed,
+                key.dataset,
+                key.method,
+                key.s,
+                key.seed,
+            )));
+        }
+        let info = reader.info(&key.dataset)?;
+        return Ok(Opened::Live { reader, info });
+    }
+    Ok(Opened::Frozen(open_service(shared, key)?))
 }
 
 /// Open (or reuse) the shared service for `key`: the sketch is normally
@@ -528,7 +651,8 @@ fn open_service(shared: &Shared, key: &StoreKey) -> Result<Arc<SketchService>> {
 }
 
 /// Enumerate the store by reading each entry's container header only —
-/// listing a store of huge entries never touches their payloads.
+/// listing a store of huge entries never touches their payloads — then
+/// append every attached live chain (which may not exist on disk at all).
 fn list_sketches(shared: &Shared) -> Result<Vec<SketchInfo>> {
     let mut out = Vec::new();
     for path in shared.store.entries()? {
@@ -543,6 +667,13 @@ fn list_sketches(shared: &Shared) -> Result<Vec<SketchInfo>> {
                 compact: info.compact,
             }),
             Err(e) => warn_log!("net: skipping unreadable store entry {}: {e}", path.display()),
+        }
+    }
+    let chains = shared.live_chains.lock().expect("live-chain registry poisoned");
+    for (key, reader) in chains.values() {
+        match reader.info(&key.dataset) {
+            Ok(info) => out.push(info),
+            Err(e) => warn_log!("net: skipping live chain {}: {e}", key.file_name()),
         }
     }
     Ok(out)

@@ -9,7 +9,7 @@
 //! | field       | size | contents                                    |
 //! |-------------|------|---------------------------------------------|
 //! | magic       | 4 B  | `"MSKW"`                                    |
-//! | version     | 2 B  | protocol version (currently 2; 1 accepted)  |
+//! | version     | 2 B  | protocol version (currently 3; 1–2 accepted)|
 //! | opcode      | 1 B  | message kind (below)                        |
 //! | reserved    | 1 B  | 0 (ignored on read)                         |
 //! | request id  | 8 B  | caller-chosen; echoed verbatim in responses |
@@ -19,21 +19,29 @@
 //! Request opcodes: `0x01` Ping, `0x02` ListSketches, `0x03` OpenSketch,
 //! `0x04` Shutdown (the graceful-stop sentinel), `0x10` Matvec,
 //! `0x11` MatvecT, `0x12` RowSlice, `0x13` ColSlice, `0x14` TopK,
-//! `0x15` MatvecBatch (v2+). Response opcodes: `0x81` Pong,
-//! `0x82` SketchList, `0x83` SketchOpened, `0x84` ShuttingDown,
-//! `0x90` Vector, `0x91` Entries, `0x92` Vectors (v2+), `0xFF` Error.
+//! `0x15` MatvecBatch (v2+), `0x16` GenPoll (v3+). Response opcodes:
+//! `0x81` Pong, `0x82` SketchList, `0x83` SketchOpened,
+//! `0x84` ShuttingDown, `0x90` Vector, `0x91` Entries,
+//! `0x92` Vectors (v2+), `0x93` Generation (v3+), `0xFF` Error.
 //!
 //! ## Versioning
 //!
 //! Version 2 adds the batched matvec (`MatvecBatch` → `Vectors`).
+//! Version 3 adds **generations** for live sketches
+//! ([`crate::serve::live`]): every query request payload in a v3 frame
+//! carries a leading `u64` generation pin after its handle (0 =
+//! unpinned / latest), every v3 query answer carries a leading `u64`
+//! with the generation it was answered at, and the `GenPoll` /
+//! `Generation` pair blocks until a chain reaches a minimum generation.
 //! Interop works in both directions: the server accepts any version
 //! from [`MIN_WIRE_VERSION`] through [`WIRE_VERSION`] and answers each
 //! request at the version the request arrived in, while clients encode
 //! each request at the minimum version its operation needs
-//! ([`request_version`]) — so a v1 peer never sees a v2 frame, and an
-//! upgraded client still speaks to a v1 server for every v1-era
-//! operation. The v2-only opcodes inside a v1-marked frame are a typed
-//! `unknown-opcode` fault, not a silent accept.
+//! ([`request_version`]) — so an unpinned matvec still travels as a v1
+//! frame, a v1/v2 peer never sees a v3 frame, and an upgraded client
+//! speaks to an old server for every old-era operation. Opcodes newer
+//! than a frame's marked version are a typed `unknown-opcode` fault,
+//! not a silent accept.
 //!
 //! f64 values travel as their IEEE-754 bit patterns, so a remote answer
 //! is **byte-for-byte identical** to the in-process one — the
@@ -64,8 +72,8 @@ use crate::sketch::SketchEntry;
 /// Frame magic: "MSKW" (matsketch wire).
 pub const WIRE_MAGIC: [u8; 4] = *b"MSKW";
 
-/// Current protocol version (v2: batched matvec).
-pub const WIRE_VERSION: u16 = 2;
+/// Current protocol version (v3: live-sketch generations).
+pub const WIRE_VERSION: u16 = 3;
 
 /// Oldest protocol version still accepted on the wire.
 pub const MIN_WIRE_VERSION: u16 = 1;
@@ -89,6 +97,7 @@ const OP_ROW: u8 = 0x12;
 const OP_COL: u8 = 0x13;
 const OP_TOP_K: u8 = 0x14;
 const OP_MATVEC_BATCH: u8 = 0x15;
+const OP_GEN_POLL: u8 = 0x16;
 
 // --- response opcodes ---
 const OP_PONG: u8 = 0x81;
@@ -98,6 +107,7 @@ const OP_SHUTTING_DOWN: u8 = 0x84;
 const OP_VECTOR: u8 = 0x90;
 const OP_ENTRIES: u8 = 0x91;
 const OP_VECTORS: u8 = 0x92;
+const OP_GENERATION: u8 = 0x93;
 const OP_ERROR: u8 = 0xFF;
 
 /// Typed error codes carried by [`Response::Error`].
@@ -123,6 +133,10 @@ pub enum ErrCode {
     Busy,
     /// Server is shutting down.
     ShuttingDown,
+    /// A generation pin the serving side cannot honour: ahead of the
+    /// live chain, retired out of its retained window, or nonzero
+    /// against a frozen sketch.
+    Generation,
 }
 
 impl ErrCode {
@@ -138,6 +152,7 @@ impl ErrCode {
             ErrCode::Query => 7,
             ErrCode::Busy => 8,
             ErrCode::ShuttingDown => 9,
+            ErrCode::Generation => 10,
         }
     }
 
@@ -153,6 +168,7 @@ impl ErrCode {
             7 => ErrCode::Query,
             8 => ErrCode::Busy,
             9 => ErrCode::ShuttingDown,
+            10 => ErrCode::Generation,
             _ => ErrCode::Malformed,
         }
     }
@@ -169,6 +185,7 @@ impl ErrCode {
             ErrCode::Query => "query",
             ErrCode::Busy => "busy",
             ErrCode::ShuttingDown => "shutting-down",
+            ErrCode::Generation => "generation",
         }
     }
 }
@@ -211,8 +228,25 @@ pub enum Request {
     Query {
         /// Handle from a prior [`Response::SketchOpened`].
         handle: u32,
+        /// Generation pin: 0 = unpinned (answer on the latest snapshot),
+        /// nonzero = answer on exactly that retained generation. A
+        /// nonzero pin forces a v3 frame; old-version frames decode with
+        /// pin 0.
+        pin: u64,
         /// The operation, in the shared [`QueryRequest`] vocabulary.
         query: QueryRequest,
+    },
+    /// Block (up to a timeout) until the sketch under `handle` has
+    /// published generation ≥ `min_gen`; answers with
+    /// [`Response::Generation`] carrying the latest generation either
+    /// way (v3+).
+    GenPoll {
+        /// Handle from a prior [`Response::SketchOpened`].
+        handle: u32,
+        /// Minimum generation to wait for.
+        min_gen: u64,
+        /// Longest the server may block, in milliseconds.
+        timeout_ms: u32,
     },
     /// Graceful-shutdown sentinel: the server finishes in-flight work,
     /// acknowledges with [`Response::ShuttingDown`], and stops accepting.
@@ -234,8 +268,17 @@ pub enum Response {
         /// Identity + shape of the opened sketch.
         info: SketchInfo,
     },
-    /// A query answer, in the shared [`QueryResponse`] vocabulary.
-    Answer(QueryResponse),
+    /// A query answer, in the shared [`QueryResponse`] vocabulary,
+    /// tagged with the generation it was answered at (0 for frozen
+    /// store-backed sketches; dropped on the wire below v3).
+    Answer {
+        /// Generation the answer was computed against.
+        generation: u64,
+        /// The answer itself.
+        answer: QueryResponse,
+    },
+    /// The latest published generation of a polled sketch (v3+).
+    Generation(u64),
     /// Acknowledges a [`Request::Shutdown`].
     ShuttingDown,
     /// Typed failure; the request id in the frame says which request
@@ -431,10 +474,14 @@ fn get_info(rd: &mut Rd<'_>) -> WireResult<SketchInfo> {
 
 /// The lowest protocol version that can carry `req`. Requests go out at
 /// this version (not blanket [`WIRE_VERSION`]) so an upgraded client
-/// keeps talking to a v1 server for every v1-era operation — only the
-/// genuinely new ones force the newer protocol.
+/// keeps talking to an old server for every old-era operation — only
+/// the genuinely new ones force the newer protocol. In particular an
+/// unpinned query never rides a v3 frame just because the client knows
+/// about generations.
 pub fn request_version(req: &Request) -> u16 {
     match req {
+        Request::Query { pin, .. } if *pin != 0 => 3,
+        Request::GenPoll { .. } => 3,
         Request::Query { query: QueryRequest::MatvecBatch(_), .. } => 2,
         _ => MIN_WIRE_VERSION,
     }
@@ -443,7 +490,16 @@ pub fn request_version(req: &Request) -> u16 {
 /// Encode one request as a complete frame, at the minimum version its
 /// operation needs (see [`request_version`]).
 pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
-    let version = request_version(req);
+    encode_request_at(request_id, req, request_version(req))
+}
+
+/// [`encode_request`] at an explicit protocol version, floored at the
+/// minimum the operation needs and capped at [`WIRE_VERSION`].
+/// Generation-aware callers use this to raise even *unpinned* queries to
+/// v3, so the answer's generation tag survives the wire instead of being
+/// dropped by a v1/v2 response frame.
+pub fn encode_request_at(request_id: u64, req: &Request, version: u16) -> Vec<u8> {
+    let version = version.clamp(request_version(req), WIRE_VERSION);
     match req {
         Request::Ping => frame(version, OP_PING, request_id, Vec::new()),
         Request::ListSketches => frame(version, OP_LIST, request_id, Vec::new()),
@@ -457,9 +513,19 @@ pub fn encode_request(request_id: u64, req: &Request) -> Vec<u8> {
             put_u64(&mut p, key.fingerprint);
             frame(version, OP_OPEN, request_id, p)
         }
-        Request::Query { handle, query } => {
+        Request::GenPoll { handle, min_gen, timeout_ms } => {
             let mut p = Vec::new();
             put_u32(&mut p, *handle);
+            put_u64(&mut p, *min_gen);
+            put_u32(&mut p, *timeout_ms);
+            frame(version, OP_GEN_POLL, request_id, p)
+        }
+        Request::Query { handle, pin, query } => {
+            let mut p = Vec::new();
+            put_u32(&mut p, *handle);
+            if version >= 3 {
+                put_u64(&mut p, *pin);
+            }
             let opcode = match query {
                 QueryRequest::Matvec(x) => {
                     put_vec_f64(&mut p, x);
@@ -515,29 +581,40 @@ pub fn encode_response_v(version: u16, request_id: u64, resp: &Response) -> Vec<
             put_info(&mut p, info);
             frame(version, OP_SKETCH_OPENED, request_id, p)
         }
-        Response::Answer(QueryResponse::Vector(y)) => {
+        Response::Answer { generation, answer } => {
             let mut p = Vec::new();
-            put_vec_f64(&mut p, y);
-            frame(version, OP_VECTOR, request_id, p)
-        }
-        Response::Answer(QueryResponse::Vectors(ys)) => {
-            let mut p = Vec::new();
-            put_u32(&mut p, ys.len() as u32);
-            for y in ys {
-                put_vec_f64(&mut p, y);
+            if version >= 3 {
+                put_u64(&mut p, *generation);
             }
-            frame(version, OP_VECTORS, request_id, p)
+            let opcode = match answer {
+                QueryResponse::Vector(y) => {
+                    put_vec_f64(&mut p, y);
+                    OP_VECTOR
+                }
+                QueryResponse::Vectors(ys) => {
+                    put_u32(&mut p, ys.len() as u32);
+                    for y in ys {
+                        put_vec_f64(&mut p, y);
+                    }
+                    OP_VECTORS
+                }
+                QueryResponse::Entries(es) => {
+                    put_u32(&mut p, es.len() as u32);
+                    for e in es {
+                        put_u32(&mut p, e.row);
+                        put_u32(&mut p, e.col);
+                        put_u32(&mut p, e.count);
+                        put_f64(&mut p, e.value);
+                    }
+                    OP_ENTRIES
+                }
+            };
+            frame(version, opcode, request_id, p)
         }
-        Response::Answer(QueryResponse::Entries(es)) => {
+        Response::Generation(gen) => {
             let mut p = Vec::new();
-            put_u32(&mut p, es.len() as u32);
-            for e in es {
-                put_u32(&mut p, e.row);
-                put_u32(&mut p, e.col);
-                put_u32(&mut p, e.count);
-                put_f64(&mut p, e.value);
-            }
-            frame(version, OP_ENTRIES, request_id, p)
+            put_u64(&mut p, *gen);
+            frame(version, OP_GENERATION, request_id, p)
         }
         Response::Error { code, message } => {
             let mut p = Vec::new();
@@ -639,42 +716,54 @@ pub fn decode_request(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Re
         }
         OP_MATVEC | OP_MATVEC_T => {
             let handle = rd.u32()?;
+            let pin = if version >= 3 { rd.u64()? } else { 0 };
             let x = rd.vec_f64()?;
             let query = if opcode == OP_MATVEC {
                 QueryRequest::Matvec(x)
             } else {
                 QueryRequest::MatvecT(x)
             };
-            Request::Query { handle, query }
+            Request::Query { handle, pin, query }
         }
         OP_MATVEC_BATCH if version >= 2 => {
             let handle = rd.u32()?;
+            let pin = if version >= 3 { rd.u64()? } else { 0 };
             // each batched vector carries at least its own 4-byte length
             let count = rd.count(4)?;
             let mut xs = Vec::with_capacity(count);
             for _ in 0..count {
                 xs.push(rd.vec_f64()?);
             }
-            Request::Query { handle, query: QueryRequest::MatvecBatch(xs) }
+            Request::Query { handle, pin, query: QueryRequest::MatvecBatch(xs) }
         }
         OP_ROW | OP_COL => {
             let handle = rd.u32()?;
+            let pin = if version >= 3 { rd.u64()? } else { 0 };
             let index = rd.u32()?;
             let query = if opcode == OP_ROW {
                 QueryRequest::Row(index)
             } else {
                 QueryRequest::Col(index)
             };
-            Request::Query { handle, query }
+            Request::Query { handle, pin, query }
         }
         OP_TOP_K => {
             let handle = rd.u32()?;
+            let pin = if version >= 3 { rd.u64()? } else { 0 };
             let k = rd.u64()?;
-            Request::Query { handle, query: QueryRequest::TopK(k as usize) }
+            Request::Query { handle, pin, query: QueryRequest::TopK(k as usize) }
+        }
+        OP_GEN_POLL if version >= 3 => {
+            let handle = rd.u32()?;
+            let min_gen = rd.u64()?;
+            let timeout_ms = rd.u32()?;
+            Request::GenPoll { handle, min_gen, timeout_ms }
         }
         other => {
             let hint = if other == OP_MATVEC_BATCH {
                 " (MatvecBatch needs protocol v2)"
+            } else if other == OP_GEN_POLL {
+                " (GenPoll needs protocol v3)"
             } else {
                 ""
             };
@@ -688,8 +777,11 @@ pub fn decode_request(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Re
     Ok(req)
 }
 
-/// Decode a response payload.
-pub fn decode_response(opcode: u8, payload: &[u8]) -> WireResult<Response> {
+/// Decode a response payload. `version` is the frame's declared protocol
+/// version: v3 query answers carry a leading generation tag, older ones
+/// decode with generation 0, and opcodes newer than the marked version
+/// are rejected as unknown.
+pub fn decode_response(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Response> {
     let mut rd = Rd::new(payload);
     let resp = match opcode {
         OP_PONG => Response::Pong,
@@ -708,16 +800,24 @@ pub fn decode_response(opcode: u8, payload: &[u8]) -> WireResult<Response> {
             let info = get_info(&mut rd)?;
             Response::SketchOpened { handle, info }
         }
-        OP_VECTOR => Response::Answer(QueryResponse::Vector(rd.vec_f64()?)),
+        OP_VECTOR => {
+            let generation = if version >= 3 { rd.u64()? } else { 0 };
+            Response::Answer {
+                generation,
+                answer: QueryResponse::Vector(rd.vec_f64()?),
+            }
+        }
         OP_VECTORS => {
+            let generation = if version >= 3 { rd.u64()? } else { 0 };
             let count = rd.count(4)?;
             let mut ys = Vec::with_capacity(count);
             for _ in 0..count {
                 ys.push(rd.vec_f64()?);
             }
-            Response::Answer(QueryResponse::Vectors(ys))
+            Response::Answer { generation, answer: QueryResponse::Vectors(ys) }
         }
         OP_ENTRIES => {
+            let generation = if version >= 3 { rd.u64()? } else { 0 };
             let count = rd.count(4 + 4 + 4 + 8)?;
             let mut es = Vec::with_capacity(count);
             for _ in 0..count {
@@ -728,17 +828,23 @@ pub fn decode_response(opcode: u8, payload: &[u8]) -> WireResult<Response> {
                     value: rd.f64()?,
                 });
             }
-            Response::Answer(QueryResponse::Entries(es))
+            Response::Answer { generation, answer: QueryResponse::Entries(es) }
         }
+        OP_GENERATION if version >= 3 => Response::Generation(rd.u64()?),
         OP_ERROR => {
             let code = ErrCode::from_u16(rd.u16()?);
             let message = rd.str()?;
             Response::Error { code, message }
         }
         other => {
+            let hint = if other == OP_GENERATION {
+                " (Generation needs protocol v3)"
+            } else {
+                ""
+            };
             return Err(WireFault::new(
                 ErrCode::UnknownOpcode,
-                format!("unknown response opcode {other:#04x}"),
+                format!("unknown response opcode {other:#04x}{hint}"),
             ));
         }
     };
@@ -771,7 +877,7 @@ mod tests {
         let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
         let h = parse_frame_header(&header).unwrap();
         assert_eq!(h.request_id, 7);
-        decode_response(h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap()
+        decode_response(h.version, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap()
     }
 
     fn info() -> SketchInfo {
@@ -796,11 +902,17 @@ mod tests {
             Request::OpenSketch(key.clone()),
             Request::Query {
                 handle: 5,
+                pin: 0,
                 query: QueryRequest::Matvec(vec![1.5, -2.25, f64::MIN]),
             },
-            Request::Query { handle: 6, query: QueryRequest::MatvecT(vec![0.0, 3.75]) },
+            Request::Query {
+                handle: 6,
+                pin: 0,
+                query: QueryRequest::MatvecT(vec![0.0, 3.75]),
+            },
             Request::Query {
                 handle: 10,
+                pin: 0,
                 query: QueryRequest::MatvecBatch(vec![
                     vec![1.0, 2.0],
                     vec![-0.5, 0.25],
@@ -809,11 +921,26 @@ mod tests {
             },
             Request::Query {
                 handle: 11,
+                pin: 0,
                 query: QueryRequest::MatvecBatch(Vec::new()),
             },
-            Request::Query { handle: 7, query: QueryRequest::Row(11) },
-            Request::Query { handle: 8, query: QueryRequest::Col(0) },
-            Request::Query { handle: 9, query: QueryRequest::TopK(1_000) },
+            Request::Query { handle: 7, pin: 0, query: QueryRequest::Row(11) },
+            Request::Query { handle: 8, pin: 0, query: QueryRequest::Col(0) },
+            Request::Query { handle: 9, pin: 0, query: QueryRequest::TopK(1_000) },
+            // pinned queries ride v3 frames and keep the pin
+            Request::Query {
+                handle: 5,
+                pin: 42,
+                query: QueryRequest::Matvec(vec![0.5]),
+            },
+            Request::Query {
+                handle: 10,
+                pin: 7,
+                query: QueryRequest::MatvecBatch(vec![vec![1.0]]),
+            },
+            Request::Query { handle: 7, pin: 1, query: QueryRequest::Row(3) },
+            Request::Query { handle: 9, pin: u64::MAX, query: QueryRequest::TopK(4) },
+            Request::GenPoll { handle: 2, min_gen: 9, timeout_ms: 250 },
         ];
         for req in &cases {
             assert_eq!(roundtrip_request(req), *req);
@@ -831,10 +958,21 @@ mod tests {
             Response::ShuttingDown,
             Response::SketchList(vec![info(), SketchInfo { compact: false, ..info() }]),
             Response::SketchOpened { handle: 3, info: info() },
-            Response::Answer(QueryResponse::Vector(vec![0.5, -0.0, 1e300])),
-            Response::Answer(QueryResponse::Vectors(vec![vec![1.0], vec![], vec![2.0, 3.0]])),
-            Response::Answer(QueryResponse::Entries(entries.clone())),
+            Response::Answer {
+                generation: 0,
+                answer: QueryResponse::Vector(vec![0.5, -0.0, 1e300]),
+            },
+            Response::Answer {
+                generation: 12,
+                answer: QueryResponse::Vectors(vec![vec![1.0], vec![], vec![2.0, 3.0]]),
+            },
+            Response::Answer {
+                generation: u64::MAX,
+                answer: QueryResponse::Entries(entries.clone()),
+            },
+            Response::Generation(77),
             Response::Error { code: ErrCode::BadHandle, message: "no handle 4".into() },
+            Response::Error { code: ErrCode::Generation, message: "gen 9 retired".into() },
         ];
         for resp in &cases {
             assert_eq!(roundtrip_response(resp), *resp);
@@ -846,12 +984,17 @@ mod tests {
         // byte-identity over the wire hinges on bit-pattern transport:
         // NaN payloads, signed zero, subnormals all round-trip
         let tricky = vec![f64::NAN, -0.0, f64::MIN_POSITIVE / 2.0, f64::INFINITY];
-        let bytes =
-            encode_response(1, &Response::Answer(QueryResponse::Vector(tricky.clone())));
+        let bytes = encode_response(
+            1,
+            &Response::Answer {
+                generation: 0,
+                answer: QueryResponse::Vector(tricky.clone()),
+            },
+        );
         let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
         let h = parse_frame_header(&header).unwrap();
-        match decode_response(h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap() {
-            Response::Answer(QueryResponse::Vector(y)) => {
+        match decode_response(h.version, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap() {
+            Response::Answer { answer: QueryResponse::Vector(y), .. } => {
                 assert_eq!(y.len(), tricky.len());
                 for (a, b) in tricky.iter().zip(&y) {
                     assert_eq!(a.to_bits(), b.to_bits());
@@ -903,6 +1046,7 @@ mod tests {
         // ... but the v2-only MatvecBatch opcode inside it is rejected
         let batch = Request::Query {
             handle: 1,
+            pin: 0,
             query: QueryRequest::MatvecBatch(vec![vec![1.0]]),
         };
         let bytes = encode_request(4, &batch);
@@ -923,15 +1067,97 @@ mod tests {
     }
 
     #[test]
-    fn payload_faults_are_typed() {
-        // trailing bytes
-        let mut bytes = encode_request(
-            1,
-            &Request::Query { handle: 1, query: QueryRequest::Row(2) },
+    fn v2_frames_stay_decodable_and_gate_v3_opcodes() {
+        // an unpinned query never pays the v3 tax: it still encodes at
+        // the old minimum its operation needs
+        let unpinned = Request::Query { handle: 2, pin: 0, query: QueryRequest::Row(4) };
+        assert_eq!(request_version(&unpinned), 1);
+        let unpinned_batch = Request::Query {
+            handle: 2,
+            pin: 0,
+            query: QueryRequest::MatvecBatch(vec![vec![1.0]]),
+        };
+        assert_eq!(request_version(&unpinned_batch), 2);
+
+        // … unless a generation-aware caller raises it explicitly: the
+        // frame then carries the (zero) pin and decodes unchanged at v3
+        let raised = encode_request_at(7, &unpinned, 3);
+        let header: [u8; FRAME_HEADER_LEN] = raised[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.version, 3);
+        assert_eq!(
+            decode_request(h.version, h.opcode, &raised[FRAME_HEADER_LEN..]).unwrap(),
+            unpinned
         );
-        bytes.push(0xAA);
+        // the floor still wins: a version below the op's minimum is raised
+        let floored = encode_request_at(8, &unpinned_batch, 1);
+        assert_eq!(u16::from_be_bytes([floored[4], floored[5]]), 2);
+
+        // a pin forces v3, and the pin survives the round trip
+        let pinned = Request::Query { handle: 2, pin: 6, query: QueryRequest::Row(4) };
+        assert_eq!(request_version(&pinned), 3);
+        let bytes = encode_request(5, &pinned);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.version, 3);
+        assert_eq!(
+            decode_request(h.version, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
+            pinned
+        );
+
+        // the v3-only GenPoll opcode inside a v2-marked frame is rejected
+        let poll = Request::GenPoll { handle: 1, min_gen: 3, timeout_ms: 10 };
+        let bytes = encode_request(6, &poll);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        let fault = decode_request(2, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::UnknownOpcode);
+        assert!(fault.message.contains("v3"), "{}", fault.message);
+        // the same payload under v3 decodes fine
+        assert_eq!(
+            decode_request(3, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
+            poll
+        );
+
+        // answers at v2 drop the generation tag: a v2 peer reads the same
+        // vector bytes it always did, and re-decoding yields generation 0
+        let answer = Response::Answer {
+            generation: 9,
+            answer: QueryResponse::Vector(vec![1.5, -2.0]),
+        };
+        let v2_bytes = encode_response_v(2, 8, &answer);
+        assert_eq!(u16::from_be_bytes([v2_bytes[4], v2_bytes[5]]), 2);
+        match decode_response(2, v2_bytes[6], &v2_bytes[FRAME_HEADER_LEN..]).unwrap() {
+            Response::Answer { generation, answer: QueryResponse::Vector(y) } => {
+                assert_eq!(generation, 0);
+                assert_eq!(y, vec![1.5, -2.0]);
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // ... while a v3 frame carries it
+        let v3_bytes = encode_response_v(3, 8, &answer);
+        match decode_response(3, v3_bytes[6], &v3_bytes[FRAME_HEADER_LEN..]).unwrap() {
+            Response::Answer { generation, .. } => assert_eq!(generation, 9),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // a v2 peer that somehow receives the Generation opcode rejects it
+        let gen_bytes = encode_response_v(3, 8, &Response::Generation(4));
         let fault =
-            decode_request(WIRE_VERSION, OP_ROW, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
+            decode_response(2, gen_bytes[6], &gen_bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::UnknownOpcode);
+    }
+
+    #[test]
+    fn payload_faults_are_typed() {
+        // trailing bytes (unpinned Row rides a v1 frame; decode at that
+        // version so the fault is the trailing byte, not a missing pin)
+        let req = Request::Query { handle: 1, pin: 0, query: QueryRequest::Row(2) };
+        let mut bytes = encode_request(1, &req);
+        bytes.push(0xAA);
+        let v = request_version(&req);
+        let fault = decode_request(v, OP_ROW, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
         assert_eq!(fault.code, ErrCode::Malformed);
 
         // short payload
@@ -941,6 +1167,7 @@ mod tests {
         // count that can't fit the payload (giant vector claim)
         let mut p = Vec::new();
         put_u32(&mut p, 1); // handle
+        put_u64(&mut p, 0); // pin (v3 frames carry it)
         put_u32(&mut p, u32::MAX); // claimed element count
         let fault = decode_request(WIRE_VERSION, OP_MATVEC, &p).unwrap_err();
         assert_eq!(fault.code, ErrCode::Malformed);
@@ -948,6 +1175,7 @@ mod tests {
         // batch count the payload cannot hold (the v2 corpus entry)
         let mut p = Vec::new();
         put_u32(&mut p, 1); // handle
+        put_u64(&mut p, 0); // pin
         put_u32(&mut p, 1_000_000); // claimed batch of a million vectors
         let fault = decode_request(WIRE_VERSION, OP_MATVEC_BATCH, &p).unwrap_err();
         assert_eq!(fault.code, ErrCode::Malformed);
@@ -955,6 +1183,7 @@ mod tests {
         // inner vector length overrunning the batch payload
         let mut p = Vec::new();
         put_u32(&mut p, 1); // handle
+        put_u64(&mut p, 0); // pin
         put_u32(&mut p, 1); // one vector
         put_u32(&mut p, 500); // ... claiming 500 f64s with none present
         let fault = decode_request(WIRE_VERSION, OP_MATVEC_BATCH, &p).unwrap_err();

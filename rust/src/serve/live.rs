@@ -1,0 +1,510 @@
+//! Live sketches: an RCU-style generation chain serving queries while the
+//! entry stream is still arriving.
+//!
+//! The paper's headline property is O(1)-per-nonzero sketching of streams
+//! presented in arbitrary order — yet everything the serving stack answers
+//! was frozen at build time. This module closes that gap:
+//!
+//! * **Foreground reads** execute against an immutable
+//!   [`Arc<ServableSketch>`] snapshot. Publication of a new generation is
+//!   a single pointer swap under a briefly-held lock (the payload is
+//!   [`crate::util::SharedBytes`], so snapshots clone in O(1)); readers
+//!   never block on ingest, and a query — including every window of a
+//!   row-parallel split — runs entirely on the snapshot it started on
+//!   ([`QueryServer::submit_on`]).
+//! * **Background ingest** appends entries through [`LiveSketch::push`].
+//!   On an epoch tick (every [`LiveConfig::epoch_entries`] entries, or an
+//!   explicit [`LiveSketch::flush`]) the writer publishes generation
+//!   `g+1`: it rebuilds the sketch of the *entire prefix* received so far
+//!   through the deterministic offline engine
+//!   ([`crate::engine::build_sketcher`] with [`SketchMode::Offline`] and
+//!   the chain's plan seed). Because the build is a pure function of
+//!   `(prefix, plan)`, **a generation served live is bit-identical to the
+//!   offline sketch built from the same entry prefix with the same
+//!   seed** — the acceptance bar the integration suite pins for every
+//!   Figure-1 distribution, locally and over the wire. (A statistical
+//!   delta-fold through [`crate::engine::fold`] would be exchangeable but
+//!   not bit-identical: the alias draw depends on the prefix stats and the
+//!   plan-seed RNG stream, so exactness here means exact recomputation,
+//!   kept off the read path.)
+//! * **Generations are retained** in a bounded ring
+//!   ([`LiveConfig::retain`]) so pinned reads ("query at generation g")
+//!   have a validity window. A pin ahead of the chain or behind the ring
+//!   is a typed [`Error::Generation`] — remote servers map it onto the
+//!   wire's `generation` fault without dropping the connection.
+//!
+//! Generation 0 is an empty placeholder snapshot (all queries answer
+//! zeros / empty slices); real generations start at 1 with the first
+//! publish. [`LiveReader`] is the cheap cloneable read handle the API
+//! backends ([`crate::api::LocalClient`]) and the network front
+//! ([`crate::net::NetServer`]) attach; [`LiveSketch`] is the single
+//! writer. Freshness bookkeeping (publish lag per epoch) feeds the
+//! `eval::serving` live tables.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::api::{QueryRequest, QueryResponse, SketchInfo};
+use crate::distributions::MatrixStats;
+use crate::engine::{build_sketcher, PipelineConfig, SketchMode, Sketcher};
+use crate::error::{Error, Result};
+use crate::sketch::{Sketch, SketchPlan};
+use crate::sparse::Entry;
+
+use super::server::{QueryServer, ServableSketch};
+
+/// Tuning knobs of a live generation chain.
+#[derive(Clone, Debug)]
+pub struct LiveConfig {
+    /// Publish a new generation once this many entries arrived since the
+    /// last publish. 0 disables the automatic tick — only
+    /// [`LiveSketch::flush`] publishes.
+    pub epoch_entries: usize,
+    /// How many recent generations stay pinnable (≥ 1). Older snapshots
+    /// retire; pinned queries against them get a typed
+    /// [`Error::Generation`].
+    pub retain: usize,
+    /// Worker threads of the chain's query pool.
+    pub workers: usize,
+}
+
+impl Default for LiveConfig {
+    fn default() -> Self {
+        LiveConfig { epoch_entries: 4096, retain: 4, workers: 2 }
+    }
+}
+
+/// The retained tail of the generation chain plus freshness bookkeeping.
+struct Chain {
+    /// Recent snapshots, ascending generation (back = latest).
+    snapshots: VecDeque<Arc<ServableSketch>>,
+    /// Publish lag of each published epoch, in seconds: publish instant
+    /// minus the first push of the epoch.
+    lags: Vec<f64>,
+}
+
+/// State shared between the writer and every reader.
+struct LiveShared {
+    plan: SketchPlan,
+    m: usize,
+    n: usize,
+    retain: usize,
+    epoch_entries: usize,
+    chain: Mutex<Chain>,
+    /// Latest published generation (0 = the empty placeholder).
+    generation: AtomicU64,
+    /// Notified under `chain` on every publish.
+    advance: Condvar,
+    /// The pool every retained generation answers on.
+    server: QueryServer,
+}
+
+fn chain_lock(shared: &LiveShared) -> Result<std::sync::MutexGuard<'_, Chain>> {
+    shared
+        .chain
+        .lock()
+        .map_err(|_| Error::Pipeline("live chain lock poisoned".into()))
+}
+
+/// The single-writer ingest handle of a live chain. Create with
+/// [`LiveSketch::start`], hand [`LiveReader`]s (from
+/// [`LiveSketch::reader`]) to every query path, and drive the stream
+/// through [`push`](LiveSketch::push) / [`flush`](LiveSketch::flush) from
+/// the ingest thread.
+pub struct LiveSketch {
+    inner: Arc<LiveShared>,
+    /// The full prefix in stream order — each publish rebuilds from it.
+    prefix: Vec<Entry>,
+    /// Entries since the last publish.
+    pending: usize,
+    /// First push instant of the pending epoch (freshness lag origin).
+    epoch_t0: Option<Instant>,
+}
+
+impl LiveSketch {
+    /// Start a live chain for an `m × n` stream sketched under `plan`.
+    /// Generation 0 (an empty snapshot) is served immediately.
+    pub fn start(m: usize, n: usize, plan: &SketchPlan, cfg: &LiveConfig) -> Result<LiveSketch> {
+        if plan.s == 0 {
+            return Err(Error::invalid("sample budget must be positive"));
+        }
+        let empty = Sketch {
+            m,
+            n,
+            s: plan.s,
+            entries: Vec::new(),
+            row_scale: None,
+            method: plan.kind.name(),
+        };
+        let gen0 = Arc::new(ServableSketch::from_sketch(&empty)?);
+        let server = QueryServer::start(Arc::clone(&gen0), cfg.workers);
+        let mut snapshots = VecDeque::with_capacity(cfg.retain.max(1) + 1);
+        snapshots.push_back(gen0);
+        let inner = Arc::new(LiveShared {
+            plan: plan.clone(),
+            m,
+            n,
+            retain: cfg.retain.max(1),
+            epoch_entries: cfg.epoch_entries,
+            chain: Mutex::new(Chain { snapshots, lags: Vec::new() }),
+            generation: AtomicU64::new(0),
+            advance: Condvar::new(),
+            server,
+        });
+        Ok(LiveSketch { inner, prefix: Vec::new(), pending: 0, epoch_t0: None })
+    }
+
+    /// A cheap cloneable read handle onto the chain.
+    pub fn reader(&self) -> LiveReader {
+        LiveReader { inner: Arc::clone(&self.inner) }
+    }
+
+    /// `(m, n)` of the sketched stream.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.inner.m, self.inner.n)
+    }
+
+    /// Entries ingested so far (the prefix length).
+    pub fn ingested(&self) -> usize {
+        self.prefix.len()
+    }
+
+    /// Append a batch of stream entries (any order, any batching).
+    /// Publishes a new generation when the epoch tick fires, returning
+    /// its number; rejects out-of-shape coordinates up front.
+    pub fn push(&mut self, batch: &[Entry]) -> Result<Option<u64>> {
+        for e in batch {
+            if (e.row as usize) >= self.inner.m || (e.col as usize) >= self.inner.n {
+                return Err(Error::shape(format!(
+                    "stream entry ({}, {}) outside {}x{}",
+                    e.row, e.col, self.inner.m, self.inner.n
+                )));
+            }
+        }
+        if batch.is_empty() {
+            return Ok(None);
+        }
+        if self.pending == 0 {
+            self.epoch_t0 = Some(Instant::now());
+        }
+        self.prefix.extend_from_slice(batch);
+        self.pending += batch.len();
+        if self.inner.epoch_entries > 0 && self.pending >= self.inner.epoch_entries {
+            return self.publish().map(Some);
+        }
+        Ok(None)
+    }
+
+    /// Force a publish of everything pushed so far. A no-op (returning
+    /// the current generation) when nothing arrived since the last one.
+    pub fn flush(&mut self) -> Result<u64> {
+        if self.pending == 0 {
+            return Ok(self.inner.generation.load(Ordering::Acquire));
+        }
+        self.publish()
+    }
+
+    /// Build and publish the next generation from the full prefix. The
+    /// rebuild runs entirely off the read path — the chain lock is taken
+    /// only for the final snapshot swap.
+    fn publish(&mut self) -> Result<u64> {
+        let mut stats = MatrixStats::new(self.inner.m, self.inner.n);
+        for e in &self.prefix {
+            stats.push(e);
+        }
+        let mut sketcher = build_sketcher(
+            SketchMode::Offline,
+            &stats,
+            &self.inner.plan,
+            &PipelineConfig::default(),
+        )?;
+        sketcher.ingest(&self.prefix)?;
+        let (sketch, _) = sketcher.finalize()?;
+        let g = self.inner.generation.load(Ordering::Acquire) + 1;
+        let snap = Arc::new(ServableSketch::from_sketch(&sketch)?.with_generation(g));
+        let lag = self.epoch_t0.take().map_or(0.0, |t| t.elapsed().as_secs_f64());
+        {
+            let mut chain = chain_lock(&self.inner)?;
+            chain.snapshots.push_back(snap);
+            while chain.snapshots.len() > self.inner.retain {
+                chain.snapshots.pop_front();
+            }
+            chain.lags.push(lag);
+            self.inner.generation.store(g, Ordering::Release);
+            self.inner.advance.notify_all();
+        }
+        self.pending = 0;
+        Ok(g)
+    }
+}
+
+/// A cloneable read handle onto a live chain: snapshot access, pinned and
+/// unpinned queries, and generation-advance waits. Every backend
+/// (in-process or remote) serves a live sketch through one of these.
+#[derive(Clone)]
+pub struct LiveReader {
+    inner: Arc<LiveShared>,
+}
+
+impl LiveReader {
+    /// Latest published generation.
+    pub fn generation(&self) -> u64 {
+        self.inner.generation.load(Ordering::Acquire)
+    }
+
+    /// `(m, n)` of the sketched stream.
+    pub fn shape(&self) -> (usize, usize) {
+        (self.inner.m, self.inner.n)
+    }
+
+    /// The chain's sketch plan.
+    pub fn plan(&self) -> &SketchPlan {
+        &self.inner.plan
+    }
+
+    /// The latest snapshot (O(1): one lock + one `Arc` clone).
+    pub fn snapshot(&self) -> Result<Arc<ServableSketch>> {
+        let chain = chain_lock(&self.inner)?;
+        chain
+            .snapshots
+            .back()
+            .cloned()
+            .ok_or_else(|| Error::Pipeline("live chain holds no snapshot".into()))
+    }
+
+    /// The snapshot a pin selects: `None` (or `Some(latest)`) is the
+    /// newest; an explicit older generation must still be inside the
+    /// retained ring. A pin ahead of the chain or already retired is a
+    /// typed [`Error::Generation`].
+    pub fn snapshot_at(&self, pin: Option<u64>) -> Result<Arc<ServableSketch>> {
+        let Some(g) = pin else { return self.snapshot() };
+        let chain = chain_lock(&self.inner)?;
+        let latest = self.inner.generation.load(Ordering::Acquire);
+        if g > latest {
+            return Err(Error::Generation(format!(
+                "generation {g} not yet published (latest is {latest})"
+            )));
+        }
+        chain
+            .snapshots
+            .iter()
+            .find(|s| s.generation() == g)
+            .cloned()
+            .ok_or_else(|| {
+                let oldest = chain.snapshots.front().map_or(latest, |s| s.generation());
+                Error::Generation(format!(
+                    "generation {g} retired (retained window is {oldest}..={latest})"
+                ))
+            })
+    }
+
+    /// Answer one request on the snapshot the pin selects, reporting the
+    /// generation it was answered at. The whole request — including every
+    /// window of a row-parallel split — runs on that one snapshot, so a
+    /// concurrent publish never tears an answer.
+    pub fn answer_at(
+        &self,
+        pin: Option<u64>,
+        request: &QueryRequest,
+    ) -> Result<(QueryResponse, u64)> {
+        let snap = self.snapshot_at(pin)?;
+        let g = snap.generation();
+        let resp = self.inner.server.submit_on(snap, request.clone()).wait()?;
+        Ok((resp, g))
+    }
+
+    /// Answer a batch on **one** snapshot (the pin's, or the latest at
+    /// submission): every request in the batch sees the same generation
+    /// even while publishes land concurrently. Per-request failures come
+    /// back as their `Err` entries.
+    pub fn answer_batch_at(
+        &self,
+        pin: Option<u64>,
+        requests: Vec<QueryRequest>,
+    ) -> Result<(Vec<Result<QueryResponse>>, u64)> {
+        let snap = self.snapshot_at(pin)?;
+        let g = snap.generation();
+        let pending: Vec<_> = requests
+            .into_iter()
+            .map(|q| self.inner.server.submit_on(Arc::clone(&snap), q))
+            .collect();
+        Ok((pending.into_iter().map(|p| p.wait()).collect(), g))
+    }
+
+    /// Block until the chain reaches `min_gen` (or `timeout` passes);
+    /// returns the generation current at return, which may still be
+    /// below `min_gen` on timeout.
+    pub fn wait_for(&self, min_gen: u64, timeout: Duration) -> Result<u64> {
+        let deadline = Instant::now() + timeout;
+        let mut chain = chain_lock(&self.inner)?;
+        loop {
+            let g = self.inner.generation.load(Ordering::Acquire);
+            if g >= min_gen {
+                return Ok(g);
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Ok(g);
+            }
+            chain = self
+                .inner
+                .advance
+                .wait_timeout(chain, deadline - now)
+                .map_err(|_| Error::Pipeline("live chain lock poisoned".into()))?
+                .0;
+        }
+    }
+
+    /// Identity of the chain as a servable sketch, under `dataset`.
+    pub fn info(&self, dataset: &str) -> Result<SketchInfo> {
+        let snap = self.snapshot()?;
+        Ok(SketchInfo {
+            dataset: dataset.to_string(),
+            method: snap.method.clone(),
+            s: self.inner.plan.s,
+            seed: self.inner.plan.seed,
+            m: self.inner.m as u64,
+            n: self.inner.n as u64,
+            compact: snap.enc.compact,
+        })
+    }
+
+    /// Publish lag of every epoch so far, in seconds (publish instant
+    /// minus the epoch's first push) — the freshness metric the live
+    /// serving tables report.
+    pub fn freshness_lags(&self) -> Result<Vec<f64>> {
+        Ok(chain_lock(&self.inner)?.lags.clone())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::distributions::DistributionKind;
+    use crate::util::rng::Rng;
+
+    fn entries(m: usize, n: usize, count: usize, seed: u64) -> Vec<Entry> {
+        let mut rng = Rng::new(seed);
+        (0..count)
+            .map(|_| {
+                Entry::new(
+                    rng.usize_below(m) as u32,
+                    rng.usize_below(n) as u32,
+                    rng.normal() as f32 + 1.5,
+                )
+            })
+            .collect()
+    }
+
+    fn plan() -> SketchPlan {
+        SketchPlan::new(DistributionKind::Bernstein, 300).with_seed(7)
+    }
+
+    #[test]
+    fn generations_advance_on_epoch_tick_and_flush() {
+        let cfg = LiveConfig { epoch_entries: 100, retain: 3, workers: 2 };
+        let mut live = LiveSketch::start(16, 64, &plan(), &cfg).unwrap();
+        let reader = live.reader();
+        assert_eq!(reader.generation(), 0);
+
+        let es = entries(16, 64, 250, 1);
+        assert_eq!(live.push(&es[..99]).unwrap(), None);
+        assert_eq!(live.push(&es[99..100]).unwrap(), Some(1));
+        assert_eq!(live.push(&es[100..250]).unwrap(), Some(2));
+        assert_eq!(reader.generation(), 2);
+        // nothing pending: flush is a no-op
+        assert_eq!(live.flush().unwrap(), 2);
+        assert_eq!(live.push(&es[..10]).unwrap(), None);
+        assert_eq!(live.flush().unwrap(), 3);
+        assert_eq!(reader.freshness_lags().unwrap().len(), 3);
+    }
+
+    #[test]
+    fn published_generation_is_bit_identical_to_offline_prefix_sketch() {
+        let cfg = LiveConfig { epoch_entries: 0, retain: 2, workers: 1 };
+        let p = plan();
+        let mut live = LiveSketch::start(16, 64, &p, &cfg).unwrap();
+        let es = entries(16, 64, 400, 2);
+        live.push(&es[..300]).unwrap();
+        live.flush().unwrap();
+        // offline reference over the same prefix, same plan
+        let mut stats = MatrixStats::new(16, 64);
+        for e in &es[..300] {
+            stats.push(e);
+        }
+        let mut sk =
+            build_sketcher(SketchMode::Offline, &stats, &p, &PipelineConfig::default())
+                .unwrap();
+        sk.ingest(&es[..300]).unwrap();
+        let (reference, _) = sk.finalize().unwrap();
+        let want = crate::sketch::encode_sketch(&reference).unwrap();
+        let snap = live.reader().snapshot().unwrap();
+        assert_eq!(snap.generation(), 1);
+        assert_eq!(&*snap.enc.bytes, &*want.bytes, "live generation != offline prefix");
+    }
+
+    #[test]
+    fn pins_respect_the_retained_window() {
+        let cfg = LiveConfig { epoch_entries: 0, retain: 2, workers: 1 };
+        let mut live = LiveSketch::start(8, 32, &plan(), &cfg).unwrap();
+        let reader = live.reader();
+        let es = entries(8, 32, 300, 3);
+        for chunk in es.chunks(100) {
+            live.push(chunk).unwrap();
+            live.flush().unwrap();
+        }
+        assert_eq!(reader.generation(), 3);
+        // retained: 2 and 3; retired: 0 and 1; future: 4
+        assert_eq!(reader.snapshot_at(Some(2)).unwrap().generation(), 2);
+        assert_eq!(reader.snapshot_at(Some(3)).unwrap().generation(), 3);
+        assert_eq!(reader.snapshot_at(None).unwrap().generation(), 3);
+        let retired = reader.snapshot_at(Some(1)).unwrap_err();
+        assert!(matches!(retired, Error::Generation(_)), "{retired}");
+        let future = reader.snapshot_at(Some(4)).unwrap_err();
+        assert!(matches!(future, Error::Generation(_)), "{future}");
+    }
+
+    #[test]
+    fn answers_report_their_generation_and_empty_gen0_serves_zeros() {
+        let cfg = LiveConfig { epoch_entries: 0, retain: 4, workers: 2 };
+        let mut live = LiveSketch::start(8, 32, &plan(), &cfg).unwrap();
+        let reader = live.reader();
+        let x = vec![1.0; 32];
+        let (resp, g) = reader.answer_at(None, &QueryRequest::Matvec(x.clone())).unwrap();
+        assert_eq!(g, 0);
+        match resp {
+            QueryResponse::Vector(y) => assert!(y.iter().all(|&v| v == 0.0)),
+            other => panic!("unexpected response {other:?}"),
+        }
+        live.push(&entries(8, 32, 200, 4)).unwrap();
+        live.flush().unwrap();
+        let (_, g) = reader.answer_at(None, &QueryRequest::Matvec(x.clone())).unwrap();
+        assert_eq!(g, 1);
+        // a pinned answer on the retained gen 0 still works
+        let (resp0, g0) = reader.answer_at(Some(0), &QueryRequest::Matvec(x)).unwrap();
+        assert_eq!(g0, 0);
+        assert!(matches!(resp0, QueryResponse::Vector(_)));
+    }
+
+    #[test]
+    fn wait_for_observes_publishes_from_another_thread() {
+        let cfg = LiveConfig { epoch_entries: 50, retain: 4, workers: 1 };
+        let mut live = LiveSketch::start(8, 32, &plan(), &cfg).unwrap();
+        let reader = live.reader();
+        let es = entries(8, 32, 200, 5);
+        let t = std::thread::spawn(move || {
+            for chunk in es.chunks(50) {
+                live.push(chunk).unwrap();
+            }
+            live.ingested()
+        });
+        let g = reader.wait_for(4, Duration::from_secs(20)).unwrap();
+        assert!(g >= 4, "observed generation {g}");
+        assert_eq!(t.join().unwrap(), 200);
+        // timeout path: generation 100 never arrives
+        let g = reader.wait_for(100, Duration::from_millis(20)).unwrap();
+        assert!(g < 100);
+    }
+}

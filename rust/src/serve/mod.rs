@@ -28,6 +28,13 @@
 //!   across the pool, reduced in window order so answers stay
 //!   bit-identical to the sequential scan.
 //!
+//! * [`live`] — [`LiveSketch`] / [`LiveReader`]: an RCU-style generation
+//!   chain serving queries *while the stream is still arriving* — an
+//!   ingest writer publishes immutable snapshot generations by atomic
+//!   swap (each one bit-identical to the offline sketch of the same entry
+//!   prefix), readers pin a generation or follow the latest, and recent
+//!   generations stay pinnable in a bounded ring.
+//!
 //! CLI entry points: `matsketch sketch` writes into the store,
 //! `matsketch query` answers one query from it (locally or against a
 //! remote server), and `matsketch serve-bench` measures concurrent-reader
@@ -35,10 +42,12 @@
 //! goes through the network front ([`crate::net`]): `matsketch serve`
 //! exposes this layer over TCP and `matsketch net-bench` load-tests it.
 
+pub mod live;
 pub mod query;
 pub mod server;
 pub mod store;
 
+pub use live::{LiveConfig, LiveReader, LiveSketch};
 pub use query::{col_slice, matvec, matvec_batch, matvec_t, rank_cmp, row_slice, top_k};
 pub use server::{Pending, QueryServer, ServableSketch, ServerStats};
 pub use store::{

@@ -59,6 +59,10 @@ pub struct ServableSketch {
     header: PayloadHeader,
     /// `(row id, payload bit offset)` seek index, ascending.
     row_index: Vec<(u32, u64)>,
+    /// Which generation of a live chain this snapshot is. Frozen
+    /// store-loaded sketches are generation 0; [`super::live`] tags each
+    /// published snapshot with its epoch counter.
+    generation: u64,
 }
 
 impl ServableSketch {
@@ -68,7 +72,7 @@ impl ServableSketch {
     pub fn new(enc: EncodedSketch, method: impl Into<String>) -> Result<ServableSketch> {
         let header = PayloadHeader::parse(&enc)?;
         let row_index = row_group_index_h(&enc, &header)?;
-        Ok(ServableSketch { enc, method: method.into(), header, row_index })
+        Ok(ServableSketch { enc, method: method.into(), header, row_index, generation: 0 })
     }
 
     /// Encode and wrap an in-memory sketch.
@@ -89,7 +93,20 @@ impl ServableSketch {
             method: stored.method,
             header,
             row_index,
+            generation: 0,
         })
+    }
+
+    /// Tag this snapshot with a live-chain generation (builder style).
+    pub fn with_generation(mut self, generation: u64) -> ServableSketch {
+        self.generation = generation;
+        self
+    }
+
+    /// The live-chain generation this snapshot belongs to (0 for frozen
+    /// store-loaded sketches).
+    pub fn generation(&self) -> u64 {
+        self.generation
     }
 
     /// `(m, n)` of the served matrix sketch.
@@ -141,13 +158,19 @@ impl ServableSketch {
 
 /// One unit of worker work: a whole request, or one window of a
 /// row-parallel split.
+/// Every task carries the snapshot it must answer against: under a live
+/// generation chain the pool's "current" sketch can be swapped mid-query,
+/// and a request — including every window of a row-parallel split — must
+/// execute entirely on the snapshot it was submitted on.
 enum Task {
     /// One request answered sequentially, with its private reply channel.
     Whole {
+        sketch: Arc<ServableSketch>,
         request: QueryRequest,
         reply: SyncSender<Result<QueryResponse>>,
     },
-    /// One contiguous row-group window of a split request.
+    /// One contiguous row-group window of a split request (the snapshot
+    /// rides on the shared plan).
     Shard { plan: Arc<SplitPlan>, chunk: usize },
 }
 
@@ -180,6 +203,9 @@ type PartialSlots = Vec<Option<Result<Partial>>>;
 /// combined **in window order**, never completion order, so the answer
 /// is deterministic and bit-identical to the sequential scan.
 struct SplitPlan {
+    /// The snapshot every window decodes — pinned at submit time so no
+    /// shard ever straddles a generation swap.
+    sketch: Arc<ServableSketch>,
     op: SplitOp,
     /// Contiguous `[lo, hi)` windows into the row-group index, ascending.
     ranges: Vec<(usize, usize)>,
@@ -190,7 +216,8 @@ struct SplitPlan {
 
 impl SplitPlan {
     /// Decode and accumulate one window.
-    fn run_chunk(&self, sk: &ServableSketch, chunk: usize) -> Result<Partial> {
+    fn run_chunk(&self, chunk: usize) -> Result<Partial> {
+        let sk = &*self.sketch;
         let (lo, hi) = self.ranges[chunk];
         let (enc, header, index) = (&sk.enc, sk.header(), sk.row_index());
         Ok(match &self.op {
@@ -208,7 +235,7 @@ impl SplitPlan {
 
     /// Record `chunk`'s partial; the last finisher reduces and replies.
     /// Returns `true` iff this call completed (and answered) the request.
-    fn complete(&self, sk: &ServableSketch, chunk: usize, result: Result<Partial>) -> bool {
+    fn complete(&self, chunk: usize, result: Result<Partial>) -> bool {
         {
             // a poisoned lock means a sibling worker panicked mid-query;
             // dropping the plan without replying surfaces it at wait()
@@ -222,12 +249,13 @@ impl SplitPlan {
             Ok(mut p) => std::mem::take(&mut *p),
             Err(_) => return false,
         };
-        let _ = self.reply.send(self.reduce(sk, taken));
+        let _ = self.reply.send(self.reduce(taken));
         true
     }
 
     /// Combine the window partials in window order.
-    fn reduce(&self, sk: &ServableSketch, partials: PartialSlots) -> Result<QueryResponse> {
+    fn reduce(&self, partials: PartialSlots) -> Result<QueryResponse> {
+        let sk = &*self.sketch;
         // deterministic error reporting: the lowest window's error wins,
         // independent of which worker finished first
         let mut parts = Vec::with_capacity(partials.len());
@@ -351,7 +379,6 @@ impl QueryServer {
         let mut handles = Vec::with_capacity(workers);
         for _ in 0..workers {
             let rx = Arc::clone(&rx);
-            let sk = Arc::clone(&sketch);
             handles.push(std::thread::spawn(move || -> u64 {
                 let mut served = 0u64;
                 loop {
@@ -363,15 +390,15 @@ impl QueryServer {
                     };
                     let Ok(task) = task else { break };
                     match task {
-                        Task::Whole { request, reply } => {
-                            let out = sk.answer(&request);
+                        Task::Whole { sketch, request, reply } => {
+                            let out = sketch.answer(&request);
                             // a caller that dropped its Pending is fine
                             let _ = reply.send(out);
                             served += 1;
                         }
                         Task::Shard { plan, chunk } => {
-                            let out = plan.run_chunk(&sk, chunk);
-                            if plan.complete(&sk, chunk, out) {
+                            let out = plan.run_chunk(chunk);
+                            if plan.complete(chunk, out) {
                                 // a split request counts once, credited
                                 // to the worker that reduced it
                                 served += 1;
@@ -395,13 +422,23 @@ impl QueryServer {
         self.handles.len()
     }
 
-    /// Enqueue one request; returns immediately with a wait handle. Large
-    /// row-separable requests are sharded across the pool here.
+    /// Enqueue one request against the pool's default sketch; returns
+    /// immediately with a wait handle. Large row-separable requests are
+    /// sharded across the pool here.
     pub fn submit(&self, request: QueryRequest) -> Pending {
+        self.submit_on(Arc::clone(&self.sketch), request)
+    }
+
+    /// Enqueue one request pinned to an explicit snapshot. The request —
+    /// including every window of a row-parallel split — executes entirely
+    /// on `sketch`, so a live generation swap never tears an in-flight
+    /// answer. The snapshot need not be the pool's default sketch (a live
+    /// chain submits retained generations through the same pool).
+    pub fn submit_on(&self, sketch: Arc<ServableSketch>, request: QueryRequest) -> Pending {
         let (reply, rx) = sync_channel(1);
         // if every worker is gone the Pending surfaces it at wait()
-        if let Some(request) = self.try_split(request, &reply) {
-            let _ = self.tx.send(Task::Whole { request, reply });
+        if let Some(request) = self.try_split(&sketch, request, &reply) {
+            let _ = self.tx.send(Task::Whole { sketch, request, reply });
         }
         Pending { rx }
     }
@@ -412,15 +449,16 @@ impl QueryServer {
     /// produces the canonical error — or a sketch below the threshold).
     fn try_split(
         &self,
+        sketch: &Arc<ServableSketch>,
         request: QueryRequest,
         reply: &SyncSender<Result<QueryResponse>>,
     ) -> Option<QueryRequest> {
         let workers = self.handles.len();
-        let groups = self.sketch.row_index().len();
+        let groups = sketch.row_index().len();
         if workers < 2 || groups < self.split_min_groups.max(2) {
             return Some(request);
         }
-        let n = self.sketch.header().n;
+        let n = sketch.header().n;
         let op = match request {
             QueryRequest::Matvec(x) if x.len() == n => SplitOp::Matvec(x),
             QueryRequest::MatvecBatch(xs)
@@ -436,6 +474,7 @@ impl QueryServer {
             .map(|c| (groups * c / chunks, groups * (c + 1) / chunks))
             .collect();
         let plan = Arc::new(SplitPlan {
+            sketch: Arc::clone(sketch),
             op,
             ranges,
             partials: Mutex::new((0..chunks).map(|_| None).collect()),

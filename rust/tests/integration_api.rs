@@ -17,7 +17,7 @@ use matsketch::engine::{self, PipelineConfig, SketchMode};
 use matsketch::net::{
     run_load, run_load_with, LoadGenConfig, LoadOp, NetServer, NetServerConfig,
 };
-use matsketch::serve::{coo_fingerprint, SketchStore, StoreKey};
+use matsketch::serve::{coo_fingerprint, LiveConfig, LiveSketch, SketchStore, StoreKey};
 use matsketch::sketch::{encode_sketch, SketchPlan};
 use matsketch::sparse::Coo;
 use matsketch::util::rng::Rng;
@@ -268,6 +268,102 @@ fn concurrent_client_pairs_stay_equivalent() {
     });
     let stats = server.shutdown();
     assert!(stats.connections >= 8);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Acceptance (live sketches): a query pinned to generation `g` answers
+/// bit-identically through the local and the remote backend, sticky pins
+/// keep answering at their generation until cleared, a pin ahead of the
+/// chain is the same typed error on both backends, and unpinned queries
+/// under concurrent ingest always see one consistent snapshot —
+/// re-asking the reported generation reproduces the answer bit for bit.
+#[test]
+fn pinned_generations_answer_identically_across_backends() {
+    let dir = tmp_dir("livegen");
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let coo = fixed_matrix();
+    let (m, n) = (coo.m, coo.n);
+    let plan = SketchPlan::new(DistributionKind::Bernstein, BUDGET).with_seed(SEED);
+    let lcfg = LiveConfig { epoch_entries: 0, retain: 8, workers: 2 };
+    let mut live = LiveSketch::start(m, n, &plan, &lcfg).unwrap();
+    let key = StoreKey::new("live-fixed", "Bernstein", BUDGET, SEED);
+
+    let server = start_server(&dir, 16);
+    server.attach_live(&key, live.reader());
+    let addr = server.local_addr().to_string();
+    let mut local = LocalClient::open_dir(&dir).unwrap().with_workers(2);
+    local.attach_live(&key, live.reader());
+    let mut remote = RemoteClient::connect(&addr).unwrap();
+
+    // three deterministic generations: thirds of the fixed stream
+    let third = coo.entries.len().div_ceil(3);
+    for part in coo.entries.chunks(third) {
+        live.push(part).unwrap();
+        live.flush().unwrap();
+    }
+    assert_eq!(local.generation(&key).unwrap(), 3);
+    assert_eq!(remote.generation(&key).unwrap(), 3);
+
+    let script = request_script(m, n, 77);
+    for g in 1..=3u64 {
+        for (qi, q) in script.iter().enumerate() {
+            let (l, lg) = local.query_at(&key, q, Some(g)).unwrap();
+            let (r, rg) = remote.query_at(&key, q, Some(g)).unwrap();
+            assert_eq!((lg, rg), (g, g), "gen {g} script[{qi}]: answered generations");
+            assert_bit_identical(&r, &l, &format!("gen {g} script[{qi}]"));
+        }
+    }
+
+    // a sticky pin makes every later unpinned call answer at its
+    // generation …
+    remote.set_pin(&key, Some(1));
+    let (pinned, g) = remote.query_at(&key, &QueryRequest::TopK(5), None).unwrap();
+    assert_eq!(g, 1, "sticky pin answers at generation 1");
+    let (want, _) = local.query_at(&key, &QueryRequest::TopK(5), Some(1)).unwrap();
+    assert_bit_identical(&pinned, &want, "sticky pin");
+    remote.set_pin(&key, None);
+    // … and a pin ahead of the chain is the same typed error everywhere
+    for err in [
+        local.query_at(&key, &QueryRequest::TopK(1), Some(99)).unwrap_err(),
+        remote.query_at(&key, &QueryRequest::TopK(1), Some(99)).unwrap_err(),
+    ] {
+        assert!(matches!(err, matsketch::error::Error::Generation(_)), "{err}");
+    }
+
+    // unpinned queries under concurrent ingest: whatever interleaving the
+    // writer produces, every answer is computed on exactly one retained
+    // snapshot, so re-asking its reported generation reproduces it
+    std::thread::scope(|scope| {
+        let writer = scope.spawn(move || {
+            for part in coo.entries.chunks(97) {
+                live.push(part).unwrap();
+                live.flush().unwrap();
+            }
+        });
+        let clients: [&mut dyn SketchClient; 2] = [&mut local, &mut remote];
+        for client in clients {
+            for _ in 0..20 {
+                let (resp, g) =
+                    client.query_at(&key, &QueryRequest::TopK(7), None).unwrap();
+                assert!(g >= 3, "unpinned answers at a published generation, got {g}");
+                match client.query_at(&key, &QueryRequest::TopK(7), Some(g)) {
+                    Ok((again, g2)) => {
+                        assert_eq!(g2, g);
+                        assert_bit_identical(&again, &resp, "unpinned consistency");
+                    }
+                    // the generation may have retired out of the ring
+                    Err(matsketch::error::Error::Generation(_)) => {}
+                    Err(e) => panic!("re-pin at {g}: {e}"),
+                }
+            }
+        }
+        writer.join().unwrap();
+    });
+
+    local.close().unwrap();
+    remote.close().unwrap();
+    server.shutdown();
     let _ = std::fs::remove_dir_all(&dir);
 }
 

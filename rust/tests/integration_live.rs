@@ -1,0 +1,202 @@
+//! Integration: live generation chains (ingest-while-serving).
+//!
+//! The acceptance bar: a sketch served live at generation `g` is
+//! **bit-identical** to the offline sketch built from the same entry
+//! prefix with the same seed — for every Figure-1 distribution, checked
+//! on the raw snapshot bytes and through both client backends — and
+//! publication never blocks reads (queries keep answering while
+//! generations land).
+
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::time::Duration;
+
+use matsketch::api::{LocalClient, QueryRequest, QueryResponse, RemoteClient, SketchClient};
+use matsketch::coordinator::PipelineConfig;
+use matsketch::distributions::{DistributionKind, MatrixStats};
+use matsketch::engine::{build_sketcher, SketchMode, Sketcher};
+use matsketch::net::{NetServer, NetServerConfig};
+use matsketch::serve::{LiveConfig, LiveSketch, SketchStore, StoreKey};
+use matsketch::sketch::{encode_sketch, EncodedSketch, SketchPlan};
+use matsketch::sparse::{Coo, Entry};
+use matsketch::util::rng::Rng;
+
+const BUDGET: u64 = 600;
+const SEED: u64 = 21;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("matsketch_live_itest_{tag}_{}", std::process::id()))
+}
+
+/// The fixed entry stream every test ingests, in arrival order.
+fn fixed_stream() -> (usize, usize, Vec<Entry>) {
+    let mut rng = Rng::new(0x7E57_4E7);
+    let mut coo = Coo::new(24, 160);
+    for i in 0..24u32 {
+        for _ in 0..12 {
+            coo.push(i, rng.usize_below(160) as u32, (rng.normal() as f32) + 1.5);
+        }
+    }
+    coo.normalize();
+    let mut entries = coo.entries.clone();
+    Rng::new(99).shuffle(&mut entries);
+    (coo.m, coo.n, entries)
+}
+
+/// The deterministic offline sketch of `prefix` — what every published
+/// generation must equal, byte for byte.
+fn offline_prefix(m: usize, n: usize, prefix: &[Entry], plan: &SketchPlan) -> EncodedSketch {
+    let mut stats = MatrixStats::new(m, n);
+    for e in prefix {
+        stats.push(e);
+    }
+    let mut sketcher =
+        build_sketcher(SketchMode::Offline, &stats, plan, &PipelineConfig::default()).unwrap();
+    sketcher.ingest(prefix).unwrap();
+    let (sk, _) = sketcher.finalize().unwrap();
+    encode_sketch(&sk).unwrap()
+}
+
+/// Acceptance: for every `DistributionKind::figure1_set()` member, each
+/// live generation's snapshot equals the offline sketch of its prefix
+/// bit for bit, and a pinned query answers identically through the local
+/// client, the remote client, and a from-scratch offline rebuild.
+#[test]
+fn live_generations_are_bit_identical_to_offline_prefix_sketches() {
+    let dir = tmp_dir("bitident");
+    let _ = std::fs::remove_dir_all(&dir);
+    let (m, n, entries) = fixed_stream();
+    let epoch = entries.len().div_ceil(4);
+
+    let server = NetServer::bind(
+        SketchStore::open(&dir).unwrap(),
+        "127.0.0.1:0",
+        NetServerConfig {
+            workers_per_sketch: 2,
+            max_connections: 16,
+            read_timeout: Some(Duration::from_secs(10)),
+            write_timeout: Some(Duration::from_secs(10)),
+        },
+    )
+    .unwrap();
+    let addr = server.local_addr().to_string();
+
+    for kind in DistributionKind::figure1_set() {
+        let plan = SketchPlan::new(kind, BUDGET).with_seed(SEED);
+        let cfg = LiveConfig { epoch_entries: 0, retain: 8, workers: 2 };
+        let mut live = LiveSketch::start(m, n, &plan, &cfg).unwrap();
+        let reader = live.reader();
+        let method = reader.plan().kind.name();
+        let key = StoreKey::new("live-stream", &method, BUDGET, SEED);
+
+        server.attach_live(&key, live.reader());
+        let mut local = LocalClient::open_dir(&dir).unwrap().with_workers(2);
+        local.attach_live(&key, live.reader());
+        let mut remote = RemoteClient::connect(&addr).unwrap();
+
+        let mut fed = 0usize;
+        let mut gen = 0u64;
+        while fed < entries.len() {
+            let next = (fed + epoch).min(entries.len());
+            live.push(&entries[fed..next]).unwrap();
+            gen = live.flush().unwrap();
+            fed = next;
+
+            // the published snapshot IS the offline sketch of the prefix
+            let want = offline_prefix(m, n, &entries[..fed], &plan);
+            let snap = reader.snapshot_at(Some(gen)).unwrap();
+            assert_eq!(snap.generation(), gen, "{method}: snapshot generation");
+            assert_eq!(
+                snap.enc.bytes, want.bytes,
+                "{method} gen {gen}: live snapshot != offline prefix sketch"
+            );
+
+            // and both backends answer the pinned generation identically
+            let probe = QueryRequest::Matvec((0..n).map(|i| (i as f64) * 0.01 - 0.5).collect());
+            let (l, lg) = local.query_at(&key, &probe, Some(gen)).unwrap();
+            let (r, rg) = remote.query_at(&key, &probe, Some(gen)).unwrap();
+            assert_eq!((lg, rg), (gen, gen), "{method}: answered generations");
+            match (&l, &r) {
+                (QueryResponse::Vector(a), QueryResponse::Vector(b)) => {
+                    assert_eq!(a.len(), b.len(), "{method}");
+                    for (x, y) in a.iter().zip(b) {
+                        assert_eq!(x.to_bits(), y.to_bits(), "{method} gen {gen}");
+                    }
+                }
+                other => panic!("{method}: unexpected responses {other:?}"),
+            }
+        }
+        assert_eq!(fed, entries.len());
+        assert_eq!(gen, 4, "{method}: four epochs published");
+        local.close().unwrap();
+        remote.close().unwrap();
+    }
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Queries never block on ingest: while a writer publishes generations
+/// as fast as it can, a reader keeps getting answers the whole time, the
+/// observed generation never goes backwards, and `wait_for` observes the
+/// chain advancing.
+#[test]
+fn reads_never_block_while_generations_publish() {
+    let (m, n, entries) = fixed_stream();
+    let plan = SketchPlan::new(DistributionKind::Bernstein, BUDGET).with_seed(SEED);
+    let cfg = LiveConfig { epoch_entries: 32, retain: 4, workers: 2 };
+    let mut live = LiveSketch::start(m, n, &plan, &cfg).unwrap();
+    let reader = live.reader();
+    let watcher = live.reader();
+
+    let done = AtomicBool::new(false);
+    std::thread::scope(|scope| {
+        let done_ref = &done;
+        let writer = scope.spawn(move || {
+            for chunk in entries.chunks(32) {
+                live.push(chunk).unwrap();
+            }
+            let g = live.flush().unwrap();
+            done_ref.store(true, Ordering::Release);
+            g
+        });
+
+        // watcher: wait_for sees the chain advance generation by
+        // generation without ever returning a stale number
+        let w = scope.spawn(move || {
+            let mut seen = 0u64;
+            for _ in 0..64 {
+                let g = watcher.wait_for(seen + 1, Duration::from_millis(200)).unwrap();
+                assert!(g >= seen, "generation went backwards: {g} < {seen}");
+                if g == seen {
+                    break; // timed out: chain is done advancing
+                }
+                seen = g;
+            }
+            seen
+        });
+
+        // reader: answers keep flowing during publication, each from one
+        // published snapshot
+        let mut answers = 0u32;
+        let mut last = 0u64;
+        while !done.load(Ordering::Acquire) || answers == 0 {
+            let (resp, g) = reader.answer_at(None, &QueryRequest::TopK(3)).unwrap();
+            assert!(g >= last, "answered generation went backwards");
+            last = g;
+            if g > 0 {
+                assert!(matches!(resp, QueryResponse::Entries(_)));
+            }
+            answers += 1;
+        }
+        let final_gen = writer.join().unwrap();
+        let watched = w.join().unwrap();
+        assert!(answers > 0);
+        assert!(final_gen >= 1);
+        assert!(watched >= 1, "watcher saw at least one publish");
+        assert!(watched <= final_gen);
+        // after the writer stops, an unpinned answer lands on the final
+        // generation
+        let (_, g) = reader.answer_at(None, &QueryRequest::TopK(1)).unwrap();
+        assert_eq!(g, final_gen);
+    });
+}

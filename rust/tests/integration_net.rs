@@ -1,8 +1,10 @@
 //! Integration: the network front's *protocol* behaviour — the
-//! malformed-frame corpus (now including a bad batch-count frame and
-//! cross-version traffic) never kills the server, shutdown is graceful,
-//! and handle scoping is enforced. Backend answer equivalence lives in
-//! the parameterized suite in `integration_api.rs`.
+//! malformed-frame corpus (now including a bad batch-count frame,
+//! cross-version traffic, and the v3 generation cases: a future pin is a
+//! typed fault that keeps the connection, a v2 frame is answered at v2)
+//! never kills the server, shutdown is graceful, and handle scoping is
+//! enforced. Backend answer equivalence lives in the parameterized suite
+//! in `integration_api.rs`.
 
 use std::io::{Read, Write};
 use std::net::TcpStream;
@@ -86,7 +88,7 @@ fn read_raw_response(stream: &mut TcpStream) -> Option<(u64, Response)> {
     let header = wire::read_frame_header(stream).ok()??;
     let h = wire::parse_frame_header(&header).ok()?;
     let payload = wire::read_payload(stream, h.len).ok()?;
-    Some((h.request_id, wire::decode_response(h.opcode, &payload).ok()?))
+    Some((h.request_id, wire::decode_response(h.version, h.opcode, &payload).ok()?))
 }
 
 fn expect_error_code(stream: &mut TcpStream, want: ErrCode, what: &str) {
@@ -165,6 +167,7 @@ fn malformed_frame_corpus_never_kills_the_server() {
             8,
             &matsketch::net::Request::Query {
                 handle: 0,
+                pin: 0,
                 query: QueryRequest::Matvec(vec![1.0; 64]),
             },
         );
@@ -224,7 +227,7 @@ fn malformed_frame_corpus_never_kills_the_server() {
         let h = wire::parse_frame_header(&header).unwrap();
         let payload = wire::read_payload(&mut s, h.len).unwrap();
         assert!(matches!(
-            wire::decode_response(h.opcode, &payload).unwrap(),
+            wire::decode_response(h.version, h.opcode, &payload).unwrap(),
             Response::Pong
         ));
 
@@ -238,8 +241,81 @@ fn malformed_frame_corpus_never_kills_the_server() {
     }
     assert_alive("version skew");
 
+    // 9. future generation pin: a frozen store sketch only serves
+    // generation 0, so a v3 query pinned to generation 9 is a typed
+    // generation fault — a *payload* fault, so the same connection keeps
+    // answering afterwards, and GenPoll reports generation 0 immediately
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let open =
+            wire::encode_request(20, &matsketch::net::Request::OpenSketch(key.clone()));
+        s.write_all(&open).unwrap();
+        let handle = match read_raw_response(&mut s) {
+            Some((20, Response::SketchOpened { handle, .. })) => handle,
+            other => panic!("open for the pinned query: {other:?}"),
+        };
+        let pinned = matsketch::net::Request::Query {
+            handle,
+            pin: 9,
+            query: QueryRequest::TopK(1),
+        };
+        assert_eq!(wire::request_version(&pinned), 3, "a nonzero pin forces a v3 frame");
+        s.write_all(&wire::encode_request(21, &pinned)).unwrap();
+        expect_error_code(&mut s, ErrCode::Generation, "future generation pin");
+        let poll = wire::encode_request(
+            22,
+            &matsketch::net::Request::GenPoll { handle, min_gen: 5, timeout_ms: 50 },
+        );
+        s.write_all(&poll).unwrap();
+        match read_raw_response(&mut s) {
+            Some((22, Response::Generation(0))) => {}
+            other => panic!("GenPoll on a frozen sketch: {other:?}"),
+        }
+        let ping = wire::encode_request(23, &matsketch::net::Request::Ping);
+        s.write_all(&ping).unwrap();
+        match read_raw_response(&mut s) {
+            Some((23, Response::Pong)) => {}
+            other => panic!("same-connection ping after generation fault: {other:?}"),
+        }
+    }
+    assert_alive("future generation pin");
+
+    // 10. v2 frame with no generation field: still answered, the reply
+    // echoes v2, and the answer decodes as generation 0 — the generation
+    // tag only exists on the wire at v3
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let open =
+            wire::encode_request(24, &matsketch::net::Request::OpenSketch(key.clone()));
+        s.write_all(&open).unwrap();
+        let handle = match read_raw_response(&mut s) {
+            Some((24, Response::SketchOpened { handle, .. })) => handle,
+            other => panic!("open for the v2 query: {other:?}"),
+        };
+        let batch = matsketch::net::Request::Query {
+            handle,
+            pin: 0,
+            query: QueryRequest::MatvecBatch(vec![vec![0.25; 160]]),
+        };
+        assert_eq!(wire::request_version(&batch), 2, "unpinned batch stays a v2 frame");
+        s.write_all(&wire::encode_request(25, &batch)).unwrap();
+        let header = wire::read_frame_header(&mut s).unwrap().unwrap();
+        assert_eq!(u16::from_be_bytes([header[4], header[5]]), 2, "reply echoes v2");
+        let h = wire::parse_frame_header(&header).unwrap();
+        let payload = wire::read_payload(&mut s, h.len).unwrap();
+        match wire::decode_response(h.version, h.opcode, &payload).unwrap() {
+            Response::Answer { generation: 0, answer: QueryResponse::Vectors(ys) } => {
+                assert_eq!(ys.len(), 1);
+            }
+            other => panic!("v2 batch answer: {other:?}"),
+        }
+    }
+    assert_alive("v2 frame without generation");
+
     let stats = server.shutdown();
-    assert!(stats.faults >= 7, "typed faults recorded: {}", stats.faults);
+    assert!(stats.faults >= 8, "typed faults recorded: {}", stats.faults);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -289,7 +365,7 @@ fn unopened_handle_is_a_typed_error() {
     s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
     let frame = wire::encode_request(
         3,
-        &matsketch::net::Request::Query { handle: 42, query: QueryRequest::TopK(1) },
+        &matsketch::net::Request::Query { handle: 42, pin: 0, query: QueryRequest::TopK(1) },
     );
     s.write_all(&frame).unwrap();
     expect_error_code(&mut s, ErrCode::BadHandle, "unopened handle");
