@@ -2,6 +2,11 @@
 //! the Elias-γ compressed sketch vs the decode-then-CSR fallback, across
 //! the Figure-1 distributions; the batched single-pass SpMM vs k
 //! independent matvecs; plus `QueryServer` concurrent-reader scaling.
+//!
+//! Also the telemetry-overhead guard: the same served-matvec workload
+//! with the `obs` registry recording vs disabled, written to
+//! `<out>/BENCH_obs.json` (`--out DIR` overrides the default `reports`)
+//! so CI can hold the instrumentation to its <2% overhead claim.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -14,6 +19,7 @@ use matsketch::datasets::{synthetic_cf, SyntheticConfig};
 use matsketch::distributions::DistributionKind;
 use matsketch::serve::{self, QueryServer, ServableSketch};
 use matsketch::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
+use matsketch::util::json::{num, obj, Json};
 use matsketch::util::rng::Rng;
 
 fn main() {
@@ -177,4 +183,65 @@ fn main() {
         )
         .report();
     }
+
+    // every served query records one latency-histogram sample plus a
+    // couple of relaxed counters in the worker loop; with the registry
+    // disabled the workers skip the Instant reads entirely. The ratio of
+    // the two medians is the instrumentation cost on the hot path.
+    section("obs overhead: served matvec, telemetry recording vs disabled");
+    {
+        let reg = matsketch::obs::global();
+        let queries = 32usize;
+        let mut qps = [0.0f64; 2]; // [recording, disabled]
+        for (slot, enabled) in [(0usize, true), (1usize, false)] {
+            reg.set_enabled(enabled);
+            let server = QueryServer::start(Arc::clone(&servable), 4);
+            let r = bench_items(
+                if enabled { "matvec_obs_recording" } else { "matvec_obs_disabled" },
+                budget,
+                queries as f64,
+                || {
+                    let pending =
+                        server.submit_batch(vec![QueryRequest::Matvec(x.clone()); queries]);
+                    for p in pending {
+                        p.wait().unwrap();
+                    }
+                },
+            );
+            r.report();
+            server.shutdown();
+            qps[slot] = queries as f64 / r.median;
+        }
+        reg.set_enabled(true);
+        let overhead_pct = (qps[1] / qps[0] - 1.0) * 100.0;
+        println!(
+            "obs overhead: recording {:.1} queries/s vs disabled {:.1} queries/s \
+             ({overhead_pct:+.2}%, target <2%)",
+            qps[0], qps[1]
+        );
+
+        let out = out_dir();
+        std::fs::create_dir_all(&out).expect("create bench output dir");
+        let json: Vec<(&str, Json)> = vec![
+            ("matvec_obs_recording_qps", num(qps[0])),
+            ("matvec_obs_disabled_qps", num(qps[1])),
+            ("obs_overhead_pct", num(overhead_pct)),
+        ];
+        let json_path = out.join("BENCH_obs.json");
+        std::fs::write(&json_path, obj(json).to_string()).expect("write BENCH_obs.json");
+        println!("wrote {}", json_path.display());
+    }
+}
+
+/// `--out DIR` (default `reports`), tolerated anywhere in the arg list.
+fn out_dir() -> std::path::PathBuf {
+    let mut args = std::env::args();
+    while let Some(arg) = args.next() {
+        if arg == "--out" {
+            if let Some(dir) = args.next() {
+                return dir.into();
+            }
+        }
+    }
+    "reports".into()
 }

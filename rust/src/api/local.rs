@@ -109,12 +109,17 @@ impl LocalClient {
             stale =
                 key.fingerprint != 0 && o.fingerprint != 0 && key.fingerprint != o.fingerprint;
         }
+        let reg = crate::obs::global();
         if stale {
             if let Some(o) = self.opened.remove(&file) {
+                reg.inc(crate::obs::Counter::OpenCacheEvict);
                 o.server.shutdown();
             }
         }
-        if !self.opened.contains_key(&file) {
+        if self.opened.contains_key(&file) {
+            reg.inc(crate::obs::Counter::OpenCacheHit);
+        } else {
+            reg.inc(crate::obs::Counter::OpenCacheMiss);
             let stored = self.store.get(key)?.ok_or_else(|| {
                 Error::invalid(format!(
                     "no stored sketch {file} under {} (absent or stale) — run \

@@ -147,6 +147,16 @@ pub trait SketchClient {
         Ok(0)
     }
 
+    /// A snapshot of the serving-side telemetry registry
+    /// ([`crate::obs`]): per-opcode request counts, latency histograms,
+    /// cache and fault counters. The default implementation reads the
+    /// process-global registry — correct for in-process backends, whose
+    /// serving side *is* this process; [`RemoteClient`] overrides it to
+    /// scrape the server over the wire (`Stats` opcode, protocol v4).
+    fn stats(&mut self) -> Result<crate::obs::MetricsSnapshot> {
+        Ok(crate::obs::global().snapshot())
+    }
+
     /// Execute a batch through the backend's batched path (worker-pool
     /// fan-out locally, request pipelining remotely). Requests are taken
     /// by value so submission is zero-copy — benchmarks build the batch

@@ -96,6 +96,10 @@ impl SketchClient for RemoteClient {
         self.inner.poll_generation(key, 0, 0)
     }
 
+    fn stats(&mut self) -> Result<crate::obs::MetricsSnapshot> {
+        self.inner.stats()
+    }
+
     fn query_batch(
         &mut self,
         key: &StoreKey,

@@ -24,6 +24,7 @@ pub use ablation::run_ablation;
 pub use compression::run_compression;
 pub use figure1::{run_figure1, Figure1Config};
 pub use netbench::{run_net_bench, NetBenchConfig, NetPoint};
+pub use report::server_metrics_table;
 pub use serving::{
     run_live_bench, run_serve_bench, BatchPoint, LiveBenchConfig, LivePoint, ServeConfig,
     ServePoint,

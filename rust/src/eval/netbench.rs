@@ -9,10 +9,17 @@
 //! checked cache hit on repeats), a [`NetServer`] is bound on an
 //! ephemeral loopback port, and [`run_load`] drives it at several client
 //! counts. Passing `addr` instead points the load at an already-running
-//! `matsketch serve` process. One table lands in the report directory:
+//! `matsketch serve` process. Two tables land in the report directory:
 //!
 //! * `net_serving` — dataset × clients → queries/sec + latency
 //!   percentiles (p50/p95/p99 µs).
+//! * `server_metrics` — the server's own telemetry over exactly this
+//!   run: the [`crate::obs`] registry is scraped (wire `Stats` opcode)
+//!   before and after the measurements and the two snapshots diffed, so
+//!   per-opcode counts, execute-latency histograms, cache hit rate, and
+//!   live freshness-lag buckets cover the bench alone. The per-op
+//!   request counts are logged next to the client-side issue totals as a
+//!   consistency check.
 
 use std::path::Path;
 use std::time::Duration;
@@ -21,7 +28,8 @@ use crate::datasets::DatasetId;
 use crate::distributions::DistributionKind;
 use crate::engine::{self, PipelineConfig, SketchMode};
 use crate::error::Result;
-use crate::net::{run_load, LoadGenConfig, LoadOp, NetServer, NetServerConfig};
+use crate::net::{run_load, scrape_stats, LoadGenConfig, LoadOp, NetServer, NetServerConfig};
+use crate::obs::MetricsSnapshot;
 use crate::serve::{coo_fingerprint, SketchStore, StoreKey};
 use crate::sketch::SketchPlan;
 
@@ -158,7 +166,9 @@ pub fn run_net_bench(
         (None, None) => unreachable!("either self-hosted or external"),
     };
 
+    let before = try_scrape(&target);
     let result = measure_all(&keys, cfg, &target, &mut points);
+    let after = try_scrape(&target);
     if let Some(server) = server {
         let stats = server.shutdown();
         crate::info!(
@@ -171,7 +181,40 @@ pub fn run_net_bench(
     result?;
 
     net_serving_table(&points).write(dir)?;
+    if let (Some(before), Some(after)) = (before, after) {
+        let delta = after.diff(&before);
+        let answered: u64 = [
+            "req_matvec",
+            "req_matvec_t",
+            "req_matvec_batch",
+            "req_row",
+            "req_col",
+            "req_top_k",
+        ]
+        .iter()
+        .map(|n| delta.counter(n))
+        .sum();
+        let issued: u64 = points.iter().map(|p| p.queries + p.errors).sum();
+        crate::info!(
+            "net-bench: server-side telemetry counted {answered} query frames; \
+             load clients issued {issued}"
+        );
+        super::report::server_metrics_table(&delta).write(dir)?;
+    }
     Ok(points)
+}
+
+/// Scrape the target's telemetry (`Stats`, protocol v4); a failure — an
+/// old server without the opcode, say — downgrades the server-metrics
+/// table to a warning instead of failing the whole bench.
+fn try_scrape(target: &str) -> Option<MetricsSnapshot> {
+    match scrape_stats(target) {
+        Ok(snap) => Some(snap),
+        Err(e) => {
+            crate::warn_log!("net-bench: stats scrape of {target} failed: {e}");
+            None
+        }
+    }
 }
 
 /// Drive every `(dataset, key) × client-count` measurement against
@@ -269,6 +312,17 @@ mod tests {
         assert!(pts.iter().all(|p| p.p50_us <= p.p95_us && p.p95_us <= p.p99_us));
         assert!(out.join("net_serving.csv").exists());
         assert!(out.join("net_serving.md").exists());
+        // the before/after telemetry scrape writes the server-metrics
+        // table, and the diff covers at least this run's queries
+        let metrics = std::fs::read_to_string(out.join("server_metrics.csv")).unwrap();
+        assert!(out.join("server_metrics.md").exists());
+        let issued: u64 = pts.iter().map(|p| p.queries).sum();
+        let matvec_row = metrics
+            .lines()
+            .find(|l| l.starts_with("req_matvec,"))
+            .expect("req_matvec row present");
+        let count: u64 = matvec_row.split(',').nth(2).unwrap().parse().unwrap();
+        assert!(count >= issued / 3, "matvec count {count} vs {issued} issued");
         let _ = std::fs::remove_dir_all(&base);
     }
 }

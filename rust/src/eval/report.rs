@@ -112,6 +112,62 @@ pub fn spill_depth_table(
     t
 }
 
+/// Render a telemetry snapshot (or a [`diff`](crate::obs::MetricsSnapshot::diff)
+/// between two scrapes) as the `server_metrics` report table: one row per
+/// counter / gauge / histogram, plus the derived open-cache hit rate.
+/// Histogram rows carry the observation count, interpolated p50/p95/p99
+/// (µs), and the non-empty log₂ buckets as `lo-hi:count` cells — the
+/// freshness-lag and per-op latency shapes survive into the CSV.
+pub fn server_metrics_table(snap: &crate::obs::MetricsSnapshot) -> Table {
+    let mut t = Table::new(
+        "server_metrics",
+        &["metric", "kind", "value", "p50_us", "p95_us", "p99_us", "buckets"],
+    );
+    let scalar = |name: &str, kind: &str, value: String| {
+        vec![
+            name.to_string(),
+            kind.to_string(),
+            value,
+            String::new(),
+            String::new(),
+            String::new(),
+            String::new(),
+        ]
+    };
+    for (name, v) in &snap.counters {
+        t.push(scalar(name, "counter", v.to_string()));
+    }
+    let hits = snap.counter("open_cache_hit");
+    let misses = snap.counter("open_cache_miss");
+    let rate = if hits + misses == 0 { 0.0 } else { hits as f64 / (hits + misses) as f64 };
+    t.push(scalar("open_cache_hit_rate", "derived", fixed(rate, 3)));
+    for (name, v) in &snap.gauges {
+        t.push(scalar(name, "gauge", v.to_string()));
+    }
+    for (name, buckets) in &snap.hists {
+        let count: u64 = buckets.iter().sum();
+        let cells: Vec<String> = buckets
+            .iter()
+            .enumerate()
+            .filter(|&(_, &c)| c > 0)
+            .map(|(i, &c)| {
+                let (lo, hi) = crate::obs::hist_bucket_bounds(i);
+                format!("{}-{}:{c}", lo as u64, hi as u64)
+            })
+            .collect();
+        t.push(vec![
+            name.clone(),
+            "hist".to_string(),
+            count.to_string(),
+            fixed(snap.hist_quantile(name, 0.50), 1),
+            fixed(snap.hist_quantile(name, 0.95), 1),
+            fixed(snap.hist_quantile(name, 0.99), 1),
+            cells.join(" "),
+        ]);
+    }
+    t
+}
+
 /// Scientific-notation cell matching the paper's table style (`1.3e+4`).
 pub fn sci(x: f64) -> String {
     if x == 0.0 {
@@ -155,6 +211,33 @@ mod tests {
     fn sci_format() {
         assert_eq!(sci(13000.0), "1.3e4");
         assert_eq!(sci(0.0), "0");
+    }
+
+    #[test]
+    fn server_metrics_table_renders_every_section() {
+        use crate::obs::{hist_bucket, MetricsSnapshot, HIST_BUCKETS};
+        let mut counts = vec![0u64; HIST_BUCKETS];
+        counts[hist_bucket(100)] = 10;
+        let snap = MetricsSnapshot {
+            counters: vec![
+                ("req_matvec".into(), 10),
+                ("open_cache_hit".into(), 3),
+                ("open_cache_miss".into(), 1),
+            ],
+            gauges: vec![("net_connections".into(), 2)],
+            hists: vec![("exec_matvec_us".into(), counts)],
+        };
+        let t = server_metrics_table(&snap);
+        assert_eq!(t.name, "server_metrics");
+        // 3 counters + derived hit rate + 1 gauge + 1 hist
+        assert_eq!(t.rows.len(), 6);
+        let rate = t.rows.iter().find(|r| r[0] == "open_cache_hit_rate").unwrap();
+        assert_eq!(rate[2], "0.750");
+        let hist = t.rows.iter().find(|r| r[0] == "exec_matvec_us").unwrap();
+        assert_eq!(hist[2], "10");
+        assert!(hist[6].contains("64-128:10"), "{:?}", hist[6]);
+        // CSV-safe: no cell smuggles a comma
+        assert!(!t.to_csv().lines().any(|l| l.matches(',').count() != 6));
     }
 
     #[test]

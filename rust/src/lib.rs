@@ -25,7 +25,10 @@
 //!   [`api::SketchClient`] trait over typed requests/responses, with
 //!   in-process and remote backends answering byte-identically), the
 //!   network front ([`net`]: zero-dependency
-//!   wire protocol, TCP server, remote client, load generator),
+//!   wire protocol, TCP server, remote client, load generator), the
+//!   telemetry registry ([`obs`]: lock-free counters / gauges /
+//!   latency histograms every serving layer records into, scrapeable
+//!   via the `Stats` wire opcode),
 //!   sparse/dense substrates ([`sparse`],
 //!   [`linalg`]), dataset generators ([`datasets`]), evaluation harness
 //!   ([`eval`], [`metrics`]).
@@ -66,6 +69,7 @@ pub mod eval;
 pub mod linalg;
 pub mod metrics;
 pub mod net;
+pub mod obs;
 pub mod runtime;
 pub mod samplers;
 pub mod serve;

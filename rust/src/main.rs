@@ -28,12 +28,17 @@
 //!                       [--duration-secs S] [--ops matvec,row,top-k]
 //!                       [--batch-k K] [--datasets a,b] [--store DIR]
 //!                       [--out DIR]
+//! matsketch stats       --addr HOST:PORT
 //! matsketch gen         --dataset NAME [--seed N] --out a.bin
 //! ```
 //!
 //! Every query path — local store or remote server — goes through one
 //! surface: the `SketchClient` trait (`matsketch::api`). `--addr` flips
 //! the backend; nothing else about the invocation changes.
+//!
+//! A global `--log-level error|warn|info|debug` flag (or the
+//! `MATSKETCH_LOG` environment variable) sets the logging threshold for
+//! any command; `--verbose` stays as shorthand for `--log-level debug`.
 
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
@@ -46,8 +51,10 @@ use matsketch::datasets::DatasetId;
 use matsketch::distributions::{DistributionKind, MatrixStats};
 use matsketch::engine::{sketch_entry_stream, SketchMode};
 use matsketch::error::{Error, Result};
-use matsketch::eval::{run_compression, run_figure1, run_tables, run_theory, Figure1Config};
-use matsketch::net::{LoadOp, NetServer, NetServerConfig};
+use matsketch::eval::{
+    run_compression, run_figure1, run_tables, run_theory, server_metrics_table, Figure1Config,
+};
+use matsketch::net::{scrape_stats, LoadOp, NetServer, NetServerConfig};
 use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
 use matsketch::serve::{Fingerprinter, LiveConfig, LiveSketch, SketchStore, StoreKey};
 use matsketch::sketch::{encode_sketch, SketchPlan};
@@ -71,9 +78,7 @@ fn main() -> ExitCode {
 
 fn real_main() -> Result<()> {
     let args = Args::from_env(&["small", "verbose", "help", "include-ahk06", "force"])?;
-    if args.flag("verbose") {
-        set_level(Level::Debug);
-    }
+    init_log_level(&args)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     if args.flag("help") || cmd == "help" {
         print_help();
@@ -406,6 +411,16 @@ fn real_main() -> Result<()> {
             }
             info!("live-bench: {} points -> {}/live_serving.*", pts.len(), out.display());
         }
+        "stats" => {
+            let addr = args
+                .get("addr")
+                .ok_or_else(|| Error::invalid("stats requires --addr <HOST:PORT>"))?;
+            let snap = scrape_stats(addr)?;
+            if snap.is_empty() {
+                info!("server at {addr} has recorded no metrics yet");
+            }
+            print!("{}", server_metrics_table(&snap).to_markdown());
+        }
         "net-shutdown" => {
             let addr = args.get_or("addr", "127.0.0.1:7300");
             let mut client = RemoteClient::connect(addr)?;
@@ -440,6 +455,28 @@ fn real_main() -> Result<()> {
             print_help();
             return Err(Error::invalid(format!("unknown command {other}")));
         }
+    }
+    Ok(())
+}
+
+/// Resolve the global log threshold. Precedence: an explicit
+/// `--log-level` flag beats the `MATSKETCH_LOG` environment variable
+/// beats `--verbose` (debug); otherwise the default level stands. A bad
+/// flag value is an error; a bad env value only warns, so a stale shell
+/// export cannot make every invocation fail.
+fn init_log_level(args: &Args) -> Result<()> {
+    if let Some(spec) = args.get("log-level") {
+        let level = Level::parse(spec).ok_or_else(|| {
+            Error::invalid(format!("unknown --log-level {spec:?} (error|warn|info|debug)"))
+        })?;
+        set_level(level);
+    } else if let Ok(spec) = std::env::var("MATSKETCH_LOG") {
+        match Level::parse(&spec) {
+            Some(level) => set_level(level),
+            None => warn_log!("ignoring MATSKETCH_LOG={spec:?} (expected error|warn|info|debug)"),
+        }
+    } else if args.flag("verbose") {
+        set_level(Level::Debug);
     }
     Ok(())
 }
@@ -721,9 +758,11 @@ COMMANDS:
   gen          generate a dataset to a binary triplet file
   sketch       stream-sketch a triplet file into the sketch store
   query        answer a matvec / slice / top-k query (local store or --addr)
-  serve        serve the sketch store over TCP (wire protocol v3, v1/v2
+  serve        serve the sketch store over TCP (wire protocol v4, v1-v3
                accepted); --ingest adds a live ingest-while-serving chain
   live-bench   E12: mixed ingest+query throughput + freshness-lag table
+  stats        scrape a running server's telemetry snapshot (per-op
+               counts, latency histograms, cache hit rate) as a table
   net-shutdown send the graceful-shutdown sentinel to a running server
 
 COMMON OPTIONS:
@@ -732,7 +771,9 @@ COMMON OPTIONS:
   --small          use reduced-size dataset variants
   --engine xla|rust  dense-compute engine (default: xla if artifacts exist)
   --store DIR      sketch store directory (default: sketch-store)
-  --verbose        debug logging
+  --log-level L    logging threshold: error|warn|info|debug (the
+                   MATSKETCH_LOG env var is the fallback)
+  --verbose        shorthand for --log-level debug
 
 SKETCH OPTIONS:
   --input FILE --s N [--method bernstein|row-l1|l1|l2|l2-trim-0.1]
@@ -781,7 +822,15 @@ NET-BENCH OPTIONS:
   [--ops matvec,matvec-t,matvec-batch,row,col,top-k] [--k K] [--batch-k K]
   [--workers W] [--budget-frac F] [--datasets a,b]
   Without --addr the server is self-hosted on an ephemeral loopback port
-  over --store; results land in reports/net_serving.*
+  over --store; results land in reports/net_serving.* plus a
+  server-side telemetry diff in reports/server_metrics.*
+
+STATS OPTIONS:
+  --addr HOST:PORT
+  Pulls the server's obs registry snapshot over the wire (Stats opcode,
+  protocol v4) and prints the server_metrics table: per-op request
+  counts, execute-latency p50/p95/p99 (µs), cache hit rate, live
+  freshness-lag buckets.
 "
     );
 }

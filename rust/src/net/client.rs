@@ -248,6 +248,17 @@ impl RemoteSketchClient {
         }
     }
 
+    /// Scrape the server's telemetry registry (protocol v4): one
+    /// name-keyed snapshot of every counter, gauge, and latency
+    /// histogram. Old servers answer with an unknown-opcode fault, which
+    /// surfaces as a typed error here.
+    pub fn stats(&mut self) -> Result<crate::obs::MetricsSnapshot> {
+        match self.call_retry(&Request::Stats)? {
+            Response::Stats(snap) => Ok(snap),
+            other => Err(Self::remote_err(other)),
+        }
+    }
+
     /// Open `key` on the server (idempotent per connection) and return
     /// its identity + shape.
     pub fn open(&mut self, key: &StoreKey) -> Result<SketchInfo> {

@@ -220,6 +220,17 @@ where
     })
 }
 
+/// Scrape the telemetry snapshot of the server at `addr` (the `Stats`
+/// wire opcode, protocol v4). Load harnesses scrape once before and once
+/// after a run and [`diff`](crate::obs::MetricsSnapshot::diff) the two,
+/// so the reported server-side counters cover exactly the run in
+/// between — `eval::netbench` cross-checks them against the client-side
+/// issue counts.
+pub fn scrape_stats(addr: &str) -> Result<crate::obs::MetricsSnapshot> {
+    let mut client = crate::net::RemoteSketchClient::connect(addr)?;
+    client.stats()
+}
+
 /// Result of a mixed ingest+query run: the query-side [`LoadReport`]
 /// measured *while* a live chain was ingesting, plus the ingest side's
 /// freshness numbers.

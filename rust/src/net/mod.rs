@@ -7,14 +7,15 @@
 //! This module adds that layer with **zero external dependencies**
 //! (std-only TCP):
 //!
-//! * [`wire`] — the versioned, length-prefixed binary protocol (v3): one
+//! * [`wire`] — the versioned, length-prefixed binary protocol (v4): one
 //!   opcode per [`crate::api::QueryRequest`] variant (matvec /
 //!   transpose-matvec / batched matvec / row / col / top-k, plus `Ping`,
-//!   `ListSketches`, `OpenSketch`, `GenPoll`, and the `Shutdown`
-//!   sentinel), with typed error responses for malformed, truncated,
-//!   oversized, or wrong-version frames. v3 carries live-sketch
-//!   generation pins and per-answer generation tags; v1/v2 frames stay
-//!   decodable and are answered at their own version.
+//!   `ListSketches`, `OpenSketch`, `GenPoll`, `Stats`, and the
+//!   `Shutdown` sentinel), with typed error responses for malformed,
+//!   truncated, oversized, or wrong-version frames. v3 carries
+//!   live-sketch generation pins and per-answer generation tags; v4 adds
+//!   `Stats` telemetry scraping; v1–v3 frames stay decodable and are
+//!   answered at their own version.
 //! * [`server`] — [`NetServer`]: a multi-threaded `TcpListener` acceptor
 //!   owning a [`crate::serve::SketchStore`], lazily opening sketches
 //!   into shared [`crate::serve::ServableSketch`]es and dispatching onto
@@ -31,7 +32,9 @@
 //!   `dyn SketchClient`, with an optional background ingest writer
 //!   driving a live chain while queries run, reporting throughput +
 //!   latency percentiles (`matsketch net-bench`, eval drivers in
-//!   `eval::netbench` / `eval::serving`).
+//!   `eval::netbench` / `eval::serving`). [`scrape_stats`] pulls the
+//!   server's [`crate::obs`] telemetry snapshot before/after a run so
+//!   server-side counters land next to the client-side numbers.
 //!
 //! The wire layer adds no second compute path: every remote answer is
 //! produced by the same [`crate::serve::ServableSketch::answer`] as the
@@ -45,7 +48,8 @@ pub mod wire;
 
 pub use client::RemoteSketchClient;
 pub use loadgen::{
-    run_live_load, run_load, run_load_with, LiveLoadReport, LoadGenConfig, LoadOp, LoadReport,
+    run_live_load, run_load, run_load_with, scrape_stats, LiveLoadReport, LoadGenConfig, LoadOp,
+    LoadReport,
 };
 pub use server::{NetServer, NetServerConfig, NetServerStats};
 pub use wire::{ErrCode, Request, Response, WIRE_VERSION};

@@ -29,10 +29,11 @@ use std::net::{Shutdown, SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, AtomicU64, AtomicUsize, Ordering};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
-use crate::api::SketchInfo;
+use crate::api::{QueryRequest, SketchInfo};
 use crate::error::{Error, Result};
+use crate::obs::{self, Counter, Gauge, Hist};
 use crate::serve::{LiveReader, QueryServer, ServableSketch, SketchStore, StoreKey};
 use crate::{debug_log, info, warn_log};
 
@@ -232,6 +233,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             break;
         }
         shared.connections.fetch_add(1, Ordering::SeqCst);
+        obs::global().inc(Counter::NetConnAccepted);
         // reap finished handler threads so a long-lived server doesn't
         // accumulate join handles
         handlers.retain(|h| !h.is_finished());
@@ -241,6 +243,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             continue;
         }
         shared.conns.fetch_add(1, Ordering::SeqCst);
+        obs::global().gauge_add(Gauge::NetConnections, 1);
         let id = shared.conn_seq.fetch_add(1, Ordering::SeqCst);
         if let Ok(clone) = stream.try_clone() {
             shared.live.lock().expect("live registry poisoned").insert(id, clone);
@@ -250,7 +253,10 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         handlers.push(std::thread::spawn(move || {
             handle_connection(&shared2, stream);
             shared2.conns.fetch_sub(1, Ordering::SeqCst);
+            obs::global().gauge_add(Gauge::NetConnections, -1);
+            obs::global().inc(Counter::NetConnClosed);
             shared2.live.lock().expect("live registry poisoned").remove(&id);
+            debug_log!("net: connection {id} closed");
         }));
     }
     // teardown: close every live socket to unblock blocked readers, then
@@ -270,10 +276,51 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
 /// Turn a connection away with one typed error frame (request id 0: no
 /// request was read).
 fn refuse(stream: TcpStream, code: ErrCode, message: &str) {
+    obs::global().inc(fault_counter(code));
+    debug_log!("net: refusing connection: {message} ({})", code.name());
     let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
     let mut w = BufWriter::new(stream);
     let resp = Response::Error { code, message: message.into() };
-    let _ = wire::write_frame(&mut w, &encode_response(0, &resp));
+    let bytes = encode_response(0, &resp);
+    if wire::write_frame(&mut w, &bytes).is_ok() {
+        obs::global().add(Counter::NetBytesOut, bytes.len() as u64);
+    }
+}
+
+/// The per-code fault counter a typed error response increments.
+fn fault_counter(code: ErrCode) -> Counter {
+    match code {
+        ErrCode::Malformed => Counter::FaultMalformed,
+        ErrCode::BadVersion => Counter::FaultBadVersion,
+        ErrCode::Oversized => Counter::FaultOversized,
+        ErrCode::UnknownOpcode => Counter::FaultUnknownOpcode,
+        ErrCode::BadHandle => Counter::FaultBadHandle,
+        ErrCode::Store => Counter::FaultStore,
+        ErrCode::Query => Counter::FaultQuery,
+        ErrCode::Busy => Counter::FaultBusy,
+        ErrCode::ShuttingDown => Counter::FaultShuttingDown,
+        ErrCode::Generation => Counter::FaultGeneration,
+    }
+}
+
+/// The per-opcode request counter a decoded request increments.
+fn request_counter(req: &Request) -> Counter {
+    match req {
+        Request::Ping => Counter::ReqPing,
+        Request::ListSketches => Counter::ReqList,
+        Request::OpenSketch(_) => Counter::ReqOpen,
+        Request::Shutdown => Counter::ReqShutdown,
+        Request::Stats => Counter::ReqStats,
+        Request::GenPoll { .. } => Counter::ReqGenPoll,
+        Request::Query { query, .. } => match query {
+            QueryRequest::Matvec(_) => Counter::ReqMatvec,
+            QueryRequest::MatvecT(_) => Counter::ReqMatvecT,
+            QueryRequest::MatvecBatch(_) => Counter::ReqMatvecBatch,
+            QueryRequest::Row(_) => Counter::ReqRow,
+            QueryRequest::Col(_) => Counter::ReqCol,
+            QueryRequest::TopK(_) => Counter::ReqTopK,
+        },
+    }
 }
 
 fn handle_connection(shared: &Shared, stream: TcpStream) {
@@ -292,6 +339,7 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
     // connection-scoped handle table: index = handle value
     let mut handles: Vec<Opened> = Vec::new();
 
+    let reg = obs::global();
     loop {
         let header = match wire::read_frame_header(&mut reader) {
             Ok(None) => break, // clean close
@@ -314,9 +362,11 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
                 break;
             }
         };
+        reg.add(Counter::NetBytesIn, FRAME_HEADER_LEN as u64);
         // answers go out at the version the request arrived in, so a v1
         // peer never receives a v2 frame; frame faults (version unknown
         // or unacceptable) reply best-effort at the current version
+        let mut started: Option<Instant> = None;
         let (version, request_id, mut resp, close_after) =
             match wire::parse_frame_header(&header) {
                 Err(WireFault { code, message }) => {
@@ -341,6 +391,8 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
                             break;
                         }
                     };
+                    reg.add(Counter::NetBytesIn, u64::from(h.len));
+                    started = reg.enabled().then(Instant::now);
                     match wire::decode_request(h.version, h.opcode, &payload) {
                         // payload fault: typed reply, connection stays up
                         Err(WireFault { code, message }) => {
@@ -348,6 +400,7 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
                         }
                         Ok(req) => {
                             let is_shutdown = matches!(req, Request::Shutdown);
+                            reg.inc(request_counter(&req));
                             (
                                 h.version,
                                 h.request_id,
@@ -374,11 +427,19 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
             };
             frame_bytes = encode_response_v(version, request_id, &resp);
         }
-        if matches!(resp, Response::Error { .. }) {
+        if let Response::Error { code, message } = &resp {
             shared.faults.fetch_add(1, Ordering::SeqCst);
+            reg.inc(fault_counter(*code));
+            debug_log!("net: request {request_id} faulted: {message} ({})", code.name());
         }
         shared.frames.fetch_add(1, Ordering::SeqCst);
+        if let Some(t0) = started {
+            reg.record_duration(Hist::NetRequestUs, t0.elapsed());
+        }
         let wrote = wire::write_frame(&mut writer, &frame_bytes).is_ok();
+        if wrote {
+            reg.add(Counter::NetBytesOut, frame_bytes.len() as u64);
+        }
         if is_shutdown_ack {
             // trigger only after the acknowledgement is on the wire, so
             // teardown (which force-closes live sockets) cannot race the
@@ -406,8 +467,13 @@ fn send_fault(
 ) {
     shared.faults.fetch_add(1, Ordering::SeqCst);
     shared.frames.fetch_add(1, Ordering::SeqCst);
+    obs::global().inc(fault_counter(code));
+    debug_log!("net: request {request_id} faulted: {message} ({})", code.name());
     let resp = Response::Error { code, message: message.into() };
-    let _ = wire::write_frame(writer, &encode_response_v(version, request_id, &resp));
+    let bytes = encode_response_v(version, request_id, &resp);
+    if wire::write_frame(writer, &bytes).is_ok() {
+        obs::global().add(Counter::NetBytesOut, bytes.len() as u64);
+    }
 }
 
 /// Map a query-path failure onto its wire fault class: generation-pin
@@ -425,6 +491,9 @@ fn query_fault(e: Error) -> Response {
 fn answer(shared: &Shared, handles: &mut Vec<Opened>, req: Request) -> Response {
     match req {
         Request::Ping => Response::Pong,
+        // the scrape itself is cheap (a relaxed read sweep) and answered
+        // inline, never queued behind query work
+        Request::Stats => Response::Stats(obs::global().snapshot()),
         Request::Shutdown => {
             // the actual trigger happens in handle_connection *after* the
             // acknowledgement frame is written
@@ -616,12 +685,15 @@ fn open_service(shared: &Shared, key: &StoreKey) -> Result<Arc<SketchService>> {
                 // through to a fresh store read, which settles who is
                 // right
                 info!("net: evicting cached {file} (input fingerprint changed)");
+                obs::global().inc(Counter::OpenCacheEvict);
                 services.remove(&file);
             } else {
+                obs::global().inc(Counter::OpenCacheHit);
                 return Ok(svc);
             }
         }
     }
+    obs::global().inc(Counter::OpenCacheMiss);
 
     // slow path, lock released: read + validate + index the sketch
     let stored = shared.store.get(key)?.ok_or_else(|| {

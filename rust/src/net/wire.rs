@@ -9,7 +9,7 @@
 //! | field       | size | contents                                    |
 //! |-------------|------|---------------------------------------------|
 //! | magic       | 4 B  | `"MSKW"`                                    |
-//! | version     | 2 B  | protocol version (currently 3; 1–2 accepted)|
+//! | version     | 2 B  | protocol version (currently 4; 1–3 accepted)|
 //! | opcode      | 1 B  | message kind (below)                        |
 //! | reserved    | 1 B  | 0 (ignored on read)                         |
 //! | request id  | 8 B  | caller-chosen; echoed verbatim in responses |
@@ -17,12 +17,13 @@
 //! | payload     | var. | opcode-specific body                        |
 //!
 //! Request opcodes: `0x01` Ping, `0x02` ListSketches, `0x03` OpenSketch,
-//! `0x04` Shutdown (the graceful-stop sentinel), `0x10` Matvec,
-//! `0x11` MatvecT, `0x12` RowSlice, `0x13` ColSlice, `0x14` TopK,
-//! `0x15` MatvecBatch (v2+), `0x16` GenPoll (v3+). Response opcodes:
-//! `0x81` Pong, `0x82` SketchList, `0x83` SketchOpened,
-//! `0x84` ShuttingDown, `0x90` Vector, `0x91` Entries,
-//! `0x92` Vectors (v2+), `0x93` Generation (v3+), `0xFF` Error.
+//! `0x04` Shutdown (the graceful-stop sentinel), `0x05` Stats (v4+),
+//! `0x10` Matvec, `0x11` MatvecT, `0x12` RowSlice, `0x13` ColSlice,
+//! `0x14` TopK, `0x15` MatvecBatch (v2+), `0x16` GenPoll (v3+).
+//! Response opcodes: `0x81` Pong, `0x82` SketchList,
+//! `0x83` SketchOpened, `0x84` ShuttingDown, `0x90` Vector,
+//! `0x91` Entries, `0x92` Vectors (v2+), `0x93` Generation (v3+),
+//! `0x94` StatsSnapshot (v4+), `0xFF` Error.
 //!
 //! ## Versioning
 //!
@@ -33,6 +34,11 @@
 //! unpinned / latest), every v3 query answer carries a leading `u64`
 //! with the generation it was answered at, and the `GenPoll` /
 //! `Generation` pair blocks until a chain reaches a minimum generation.
+//! Version 4 adds **telemetry scraping**: `Stats` → `StatsSnapshot`
+//! ships the server's [`crate::obs`] metrics (counters, gauges, latency
+//! histograms) in the snapshot's own versioned encoding
+//! ([`crate::obs::MetricsSnapshot::encode`]), so the snapshot layout
+//! can evolve without another protocol bump.
 //! Interop works in both directions: the server accepts any version
 //! from [`MIN_WIRE_VERSION`] through [`WIRE_VERSION`] and answers each
 //! request at the version the request arrived in, while clients encode
@@ -66,14 +72,15 @@ use std::io::{self, Read, Write};
 
 use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::error::Error;
+use crate::obs::MetricsSnapshot;
 use crate::serve::StoreKey;
 use crate::sketch::SketchEntry;
 
 /// Frame magic: "MSKW" (matsketch wire).
 pub const WIRE_MAGIC: [u8; 4] = *b"MSKW";
 
-/// Current protocol version (v3: live-sketch generations).
-pub const WIRE_VERSION: u16 = 3;
+/// Current protocol version (v4: telemetry scraping).
+pub const WIRE_VERSION: u16 = 4;
 
 /// Oldest protocol version still accepted on the wire.
 pub const MIN_WIRE_VERSION: u16 = 1;
@@ -91,6 +98,7 @@ const OP_PING: u8 = 0x01;
 const OP_LIST: u8 = 0x02;
 const OP_OPEN: u8 = 0x03;
 const OP_SHUTDOWN: u8 = 0x04;
+const OP_STATS: u8 = 0x05;
 const OP_MATVEC: u8 = 0x10;
 const OP_MATVEC_T: u8 = 0x11;
 const OP_ROW: u8 = 0x12;
@@ -108,6 +116,7 @@ const OP_VECTOR: u8 = 0x90;
 const OP_ENTRIES: u8 = 0x91;
 const OP_VECTORS: u8 = 0x92;
 const OP_GENERATION: u8 = 0x93;
+const OP_STATS_SNAPSHOT: u8 = 0x94;
 const OP_ERROR: u8 = 0xFF;
 
 /// Typed error codes carried by [`Response::Error`].
@@ -248,6 +257,9 @@ pub enum Request {
         /// Longest the server may block, in milliseconds.
         timeout_ms: u32,
     },
+    /// Scrape the server's telemetry registry; answers with
+    /// [`Response::Stats`] (v4+).
+    Stats,
     /// Graceful-shutdown sentinel: the server finishes in-flight work,
     /// acknowledges with [`Response::ShuttingDown`], and stops accepting.
     Shutdown,
@@ -279,6 +291,9 @@ pub enum Response {
     },
     /// The latest published generation of a polled sketch (v3+).
     Generation(u64),
+    /// A telemetry snapshot of the server's [`crate::obs`] registry
+    /// (v4+); travels in the snapshot's own versioned encoding.
+    Stats(MetricsSnapshot),
     /// Acknowledges a [`Request::Shutdown`].
     ShuttingDown,
     /// Typed failure; the request id in the frame says which request
@@ -480,6 +495,7 @@ fn get_info(rd: &mut Rd<'_>) -> WireResult<SketchInfo> {
 /// about generations.
 pub fn request_version(req: &Request) -> u16 {
     match req {
+        Request::Stats => 4,
         Request::Query { pin, .. } if *pin != 0 => 3,
         Request::GenPoll { .. } => 3,
         Request::Query { query: QueryRequest::MatvecBatch(_), .. } => 2,
@@ -504,6 +520,7 @@ pub fn encode_request_at(request_id: u64, req: &Request, version: u16) -> Vec<u8
         Request::Ping => frame(version, OP_PING, request_id, Vec::new()),
         Request::ListSketches => frame(version, OP_LIST, request_id, Vec::new()),
         Request::Shutdown => frame(version, OP_SHUTDOWN, request_id, Vec::new()),
+        Request::Stats => frame(version, OP_STATS, request_id, Vec::new()),
         Request::OpenSketch(key) => {
             let mut p = Vec::new();
             put_str(&mut p, &key.dataset);
@@ -616,6 +633,7 @@ pub fn encode_response_v(version: u16, request_id: u64, resp: &Response) -> Vec<
             put_u64(&mut p, *gen);
             frame(version, OP_GENERATION, request_id, p)
         }
+        Response::Stats(snap) => frame(version, OP_STATS_SNAPSHOT, request_id, snap.encode()),
         Response::Error { code, message } => {
             let mut p = Vec::new();
             put_u16(&mut p, code.as_u16());
@@ -704,6 +722,7 @@ pub fn decode_request(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Re
         OP_PING => Request::Ping,
         OP_LIST => Request::ListSketches,
         OP_SHUTDOWN => Request::Shutdown,
+        OP_STATS if version >= 4 => Request::Stats,
         OP_OPEN => {
             let dataset = rd.str()?;
             let method = rd.str()?;
@@ -764,6 +783,8 @@ pub fn decode_request(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Re
                 " (MatvecBatch needs protocol v2)"
             } else if other == OP_GEN_POLL {
                 " (GenPoll needs protocol v3)"
+            } else if other == OP_STATS {
+                " (Stats needs protocol v4)"
             } else {
                 ""
             };
@@ -831,6 +852,13 @@ pub fn decode_response(version: u16, opcode: u8, payload: &[u8]) -> WireResult<R
             Response::Answer { generation, answer: QueryResponse::Entries(es) }
         }
         OP_GENERATION if version >= 3 => Response::Generation(rd.u64()?),
+        OP_STATS_SNAPSHOT if version >= 4 => {
+            let bytes = rd.take(rd.remaining())?;
+            let snap = MetricsSnapshot::decode(bytes).map_err(|e| {
+                WireFault::new(ErrCode::Malformed, format!("bad metrics snapshot: {e}"))
+            })?;
+            Response::Stats(snap)
+        }
         OP_ERROR => {
             let code = ErrCode::from_u16(rd.u16()?);
             let message = rd.str()?;
@@ -839,6 +867,8 @@ pub fn decode_response(version: u16, opcode: u8, payload: &[u8]) -> WireResult<R
         other => {
             let hint = if other == OP_GENERATION {
                 " (Generation needs protocol v3)"
+            } else if other == OP_STATS_SNAPSHOT {
+                " (StatsSnapshot needs protocol v4)"
             } else {
                 ""
             };
@@ -941,6 +971,7 @@ mod tests {
             Request::Query { handle: 7, pin: 1, query: QueryRequest::Row(3) },
             Request::Query { handle: 9, pin: u64::MAX, query: QueryRequest::TopK(4) },
             Request::GenPoll { handle: 2, min_gen: 9, timeout_ms: 250 },
+            Request::Stats,
         ];
         for req in &cases {
             assert_eq!(roundtrip_request(req), *req);
@@ -971,6 +1002,12 @@ mod tests {
                 answer: QueryResponse::Entries(entries.clone()),
             },
             Response::Generation(77),
+            Response::Stats(MetricsSnapshot {
+                counters: vec![("req_matvec".into(), 41), ("fault_query".into(), 2)],
+                gauges: vec![("net_connections".into(), 3)],
+                hists: vec![("exec_matvec_us".into(), vec![0, 1, 5, 2])],
+            }),
+            Response::Stats(MetricsSnapshot::default()),
             Response::Error { code: ErrCode::BadHandle, message: "no handle 4".into() },
             Response::Error { code: ErrCode::Generation, message: "gen 9 retired".into() },
         ];
@@ -1147,6 +1184,63 @@ mod tests {
         let fault =
             decode_response(2, gen_bytes[6], &gen_bytes[FRAME_HEADER_LEN..]).unwrap_err();
         assert_eq!(fault.code, ErrCode::UnknownOpcode);
+    }
+
+    #[test]
+    fn v3_frames_stay_decodable_and_gate_v4_opcodes() {
+        // everything v3 and below never pays the v4 tax: old operations
+        // keep their old minimum versions
+        assert_eq!(request_version(&Request::Ping), 1);
+        let pinned = Request::Query { handle: 1, pin: 3, query: QueryRequest::Row(0) };
+        assert_eq!(request_version(&pinned), 3);
+        // ... while Stats rides a v4 frame
+        assert_eq!(request_version(&Request::Stats), 4);
+
+        // the v4-only Stats opcode inside a v3-marked frame is rejected
+        // with a version hint
+        let bytes = encode_request(11, &Request::Stats);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.version, 4);
+        let fault = decode_request(3, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::UnknownOpcode);
+        assert!(fault.message.contains("v4"), "{}", fault.message);
+        // the same payload under v4 decodes fine
+        assert_eq!(
+            decode_request(4, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
+            Request::Stats
+        );
+
+        // a v3 peer that somehow receives the StatsSnapshot opcode
+        // rejects it instead of misreading the payload
+        let snap = MetricsSnapshot {
+            counters: vec![("req_ping".into(), 1)],
+            ..Default::default()
+        };
+        let resp_bytes = encode_response_v(4, 12, &Response::Stats(snap.clone()));
+        let fault =
+            decode_response(3, resp_bytes[6], &resp_bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::UnknownOpcode);
+        assert!(fault.message.contains("v4"), "{}", fault.message);
+        match decode_response(4, resp_bytes[6], &resp_bytes[FRAME_HEADER_LEN..]).unwrap() {
+            Response::Stats(back) => assert_eq!(back, snap),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // a corrupt snapshot payload is a typed Malformed fault
+        let fault = decode_response(4, OP_STATS_SNAPSHOT, &[0xFF, 0xFF, 0x00]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // v3 query frames (pin + generation tag) are untouched by the
+        // bump: a pinned row query round-trips at exactly v3
+        let bytes = encode_request(13, &pinned);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.version, 3);
+        assert_eq!(
+            decode_request(h.version, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
+            pinned
+        );
     }
 
     #[test]

@@ -1,0 +1,42 @@
+//! Server-wide telemetry: a process-global, lock-free metrics registry.
+//!
+//! The paper's pitch is cost discipline — O(1) work per streamed
+//! non-zero — and the serving stack built on top of it (PRs 2–6) should
+//! be observable without betraying that spirit. This module provides:
+//!
+//! * [`MetricsRegistry`] — a fixed set of [`Counter`]s, [`Gauge`]s, and
+//!   log₂-bucketed latency [`Hist`]ograms backed by plain `AtomicU64`
+//!   cells. Recording an event is **one relaxed `fetch_add`** (plus one
+//!   relaxed load of the enable flag); there are no locks, no hashing,
+//!   and no allocation anywhere on the record path.
+//! * [`MetricsSnapshot`] — a plain-data, name-keyed copy of the registry
+//!   that merges, diffs, and extracts p50/p95/p99 from the histogram
+//!   buckets (via [`crate::util::stats::histogram_quantile`]), and
+//!   round-trips through a versioned byte encoding so the `Stats` wire
+//!   opcode can ship it to remote scrapers.
+//! * [`global()`] — the process-global registry every serving layer
+//!   records into: `net::server` (per-opcode counts, bytes, faults by
+//!   code, connection gauge), `serve::server` (queue-wait vs execute
+//!   split, per-op execute histograms, whole-vs-sharded decisions),
+//!   the open-sketch caches (`api::local` + `net::server`), and
+//!   `serve::live` (publish duration, generation, freshness lag,
+//!   retained-pin hits).
+//!
+//! Scrape it three ways: the `Stats` wire opcode
+//! ([`crate::net::Request::Stats`]), the `matsketch stats --addr` CLI,
+//! or [`crate::eval::report::server_metrics_table`] which renders a
+//! snapshot (usually a before/after diff from a bench run) into
+//! `reports/server_metrics.{csv,md}`.
+//!
+//! The histogram bucketing is the same idiom as
+//! [`crate::engine::metrics::SPILL_DEPTH_BUCKETS`]: bucket 0 holds the
+//! value 0, bucket `i ≥ 1` covers `[2^(i-1), 2^i)`, and the last bucket
+//! is open-ended.
+
+pub mod registry;
+pub mod snapshot;
+
+pub use registry::{
+    global, hist_bucket, hist_bucket_bounds, Counter, Gauge, Hist, MetricsRegistry, HIST_BUCKETS,
+};
+pub use snapshot::{MetricsSnapshot, SNAPSHOT_VERSION};

@@ -1,0 +1,415 @@
+//! The lock-free registry core: fixed metric ids over `AtomicU64` cells.
+//!
+//! Metrics are a closed enum rather than a string-keyed map so the
+//! record path is a single array index + relaxed `fetch_add` — no
+//! hashing, no locks, no allocation. Names only materialize when a
+//! [`MetricsSnapshot`] is taken.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::OnceLock;
+use std::time::Duration;
+
+use super::snapshot::MetricsSnapshot;
+
+/// Buckets per latency histogram: bucket 0 is the value 0, bucket
+/// `i ≥ 1` covers `[2^(i-1), 2^i)`, and the last bucket is open-ended
+/// (same idiom as [`crate::engine::metrics::SPILL_DEPTH_BUCKETS`]).
+/// 32 buckets cover `[1, 2^30)` exactly — for microsecond latencies
+/// that is everything below ~18 minutes.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Histogram bucket index for an observed value.
+#[inline]
+pub fn hist_bucket(v: u64) -> usize {
+    if v == 0 {
+        0
+    } else {
+        let b = (u64::BITS - v.leading_zeros()) as usize; // floor(log2)+1
+        b.min(HIST_BUCKETS - 1)
+    }
+}
+
+/// `[lo, hi)` value range of bucket `i` as `f64` (for interpolation).
+/// Bucket 0 is `[0, 1)`; the open-ended last bucket is capped at twice
+/// its lower bound so quantile interpolation stays finite.
+pub fn hist_bucket_bounds(i: usize) -> (f64, f64) {
+    assert!(i < HIST_BUCKETS);
+    if i == 0 {
+        (0.0, 1.0)
+    } else {
+        let lo = (1u64 << (i - 1)) as f64;
+        (lo, lo * 2.0)
+    }
+}
+
+macro_rules! metric_ids {
+    ($(#[$doc:meta])* $name:ident { $($(#[$vdoc:meta])* $var:ident => $label:literal,)+ }) => {
+        $(#[$doc])*
+        #[derive(Clone, Copy, Debug, PartialEq, Eq)]
+        pub enum $name {
+            $($(#[$vdoc])* $var,)+
+        }
+
+        impl $name {
+            /// Every id, index-aligned with the registry's cell array.
+            pub const ALL: &'static [$name] = &[$($name::$var,)+];
+
+            /// Number of ids.
+            pub const COUNT: usize = $name::ALL.len();
+
+            /// Stable metric name — the snapshot / wire / report key.
+            pub fn name(self) -> &'static str {
+                match self {
+                    $($name::$var => $label,)+
+                }
+            }
+        }
+    };
+}
+
+metric_ids! {
+    /// Monotone event counters.
+    Counter {
+        /// `Ping` requests served.
+        ReqPing => "req_ping",
+        /// `ListSketches` requests served.
+        ReqList => "req_list",
+        /// `OpenSketch` requests served.
+        ReqOpen => "req_open",
+        /// `Shutdown` requests served.
+        ReqShutdown => "req_shutdown",
+        /// `Matvec` query requests served.
+        ReqMatvec => "req_matvec",
+        /// `MatvecT` query requests served.
+        ReqMatvecT => "req_matvec_t",
+        /// `Row` query requests served.
+        ReqRow => "req_row",
+        /// `Col` query requests served.
+        ReqCol => "req_col",
+        /// `TopK` query requests served.
+        ReqTopK => "req_top_k",
+        /// `MatvecBatch` query requests served.
+        ReqMatvecBatch => "req_matvec_batch",
+        /// `GenPoll` requests served.
+        ReqGenPoll => "req_gen_poll",
+        /// `Stats` requests served.
+        ReqStats => "req_stats",
+        /// Wire bytes read (headers + payloads).
+        NetBytesIn => "net_bytes_in",
+        /// Wire bytes written (headers + payloads).
+        NetBytesOut => "net_bytes_out",
+        /// Connections accepted.
+        NetConnAccepted => "net_conn_accepted",
+        /// Connections closed (either side).
+        NetConnClosed => "net_conn_closed",
+        /// Faults answered with `ErrCode::Malformed`.
+        FaultMalformed => "fault_malformed",
+        /// Faults answered with `ErrCode::BadVersion`.
+        FaultBadVersion => "fault_bad_version",
+        /// Faults answered with `ErrCode::Oversized`.
+        FaultOversized => "fault_oversized",
+        /// Faults answered with `ErrCode::UnknownOpcode`.
+        FaultUnknownOpcode => "fault_unknown_opcode",
+        /// Faults answered with `ErrCode::BadHandle`.
+        FaultBadHandle => "fault_bad_handle",
+        /// Faults answered with `ErrCode::Store`.
+        FaultStore => "fault_store",
+        /// Faults answered with `ErrCode::Query`.
+        FaultQuery => "fault_query",
+        /// Faults answered with `ErrCode::Busy`.
+        FaultBusy => "fault_busy",
+        /// Faults answered with `ErrCode::ShuttingDown`.
+        FaultShuttingDown => "fault_shutting_down",
+        /// Faults answered with `ErrCode::Generation`.
+        FaultGeneration => "fault_generation",
+        /// Open-sketch cache hits (api::local + net::server caches).
+        OpenCacheHit => "open_cache_hit",
+        /// Open-sketch cache misses (entry loaded from the store).
+        OpenCacheMiss => "open_cache_miss",
+        /// Open-sketch cache evictions (stale fingerprint).
+        OpenCacheEvict => "open_cache_evict",
+        /// Sketch payloads loaded from disk by the store.
+        StoreLoad => "store_load",
+        /// Queries executed whole on one worker.
+        SplitWhole => "split_whole",
+        /// Queries split row-parallel across the pool.
+        SplitSharded => "split_sharded",
+        /// Live `snapshot_at` pins resolved from the retained ring.
+        LivePinHit => "live_pin_hit",
+        /// Live `snapshot_at` pins older than the retained ring.
+        LivePinMiss => "live_pin_miss",
+        /// Live generations published.
+        LivePublish => "live_publish",
+    }
+}
+
+metric_ids! {
+    /// Instantaneous values (set/adjusted, not summed over time).
+    Gauge {
+        /// Currently open TCP connections.
+        NetConnections => "net_connections",
+        /// Latest published live generation.
+        LiveGeneration => "live_generation",
+    }
+}
+
+metric_ids! {
+    /// Log₂-bucketed histograms; recorded values are microseconds.
+    Hist {
+        /// Whole request handling time in `net::server` (decode → reply
+        /// encoded), any opcode.
+        NetRequestUs => "net_request_us",
+        /// Time a query waited in the `QueryServer` channel before a
+        /// worker picked it up.
+        QueueWaitUs => "queue_wait_us",
+        /// Matvec execute time (on-worker, excludes queue wait).
+        ExecMatvecUs => "exec_matvec_us",
+        /// Transposed-matvec execute time.
+        ExecMatvecTUs => "exec_matvec_t_us",
+        /// Row-slice execute time.
+        ExecRowUs => "exec_row_us",
+        /// Column-slice execute time.
+        ExecColUs => "exec_col_us",
+        /// Top-k execute time.
+        ExecTopKUs => "exec_top_k_us",
+        /// Batched-matvec execute time.
+        ExecBatchUs => "exec_batch_us",
+        /// Per-window execute time of row-parallel split chunks.
+        SplitWindowUs => "split_window_us",
+        /// Live epoch publish (prefix rebuild + swap) duration.
+        LivePublishUs => "live_publish_us",
+        /// Live freshness lag (ingest → queryable) per publish.
+        LiveLagUs => "live_lag_us",
+    }
+}
+
+/// The registry: one `AtomicU64` cell per counter / gauge / histogram
+/// bucket. All record-path operations are `Ordering::Relaxed`; cells are
+/// only ever added to (counters, buckets) or stored (gauges), so a
+/// snapshot is a plain relaxed read sweep — totals are exact once the
+/// recording threads are quiescent, and monotone under concurrency.
+pub struct MetricsRegistry {
+    enabled: AtomicBool,
+    counters: Vec<AtomicU64>,
+    gauges: Vec<AtomicU64>,
+    hists: Vec<[AtomicU64; HIST_BUCKETS]>,
+}
+
+fn zeroed(n: usize) -> Vec<AtomicU64> {
+    (0..n).map(|_| AtomicU64::new(0)).collect()
+}
+
+impl MetricsRegistry {
+    /// A fresh, enabled registry (tests and benches; servers use
+    /// [`global()`]).
+    pub fn new() -> Self {
+        Self {
+            enabled: AtomicBool::new(true),
+            counters: zeroed(Counter::COUNT),
+            gauges: zeroed(Gauge::COUNT),
+            hists: (0..Hist::COUNT)
+                .map(|_| std::array::from_fn(|_| AtomicU64::new(0)))
+                .collect(),
+        }
+    }
+
+    /// A registry that drops every event — the no-op baseline for the
+    /// instrumentation-overhead bench.
+    pub fn disabled() -> Self {
+        let r = Self::new();
+        r.set_enabled(false);
+        r
+    }
+
+    /// Whether events are being recorded. Call sites that need a clock
+    /// read should gate `Instant::now()` on this so the disabled mode is
+    /// a true no-op.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn recording on or off (e.g. the overhead bench).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Add 1 to a counter.
+    #[inline]
+    pub fn inc(&self, c: Counter) {
+        self.add(c, 1);
+    }
+
+    /// Add `n` to a counter.
+    #[inline]
+    pub fn add(&self, c: Counter, n: u64) {
+        if self.enabled() {
+            self.counters[c as usize].fetch_add(n, Ordering::Relaxed);
+        }
+    }
+
+    /// Set a gauge to an absolute value.
+    #[inline]
+    pub fn gauge_set(&self, g: Gauge, v: u64) {
+        if self.enabled() {
+            self.gauges[g as usize].store(v, Ordering::Relaxed);
+        }
+    }
+
+    /// Adjust a gauge by a signed delta (two's-complement wrap, so a
+    /// matched inc/dec pair nets to zero).
+    #[inline]
+    pub fn gauge_add(&self, g: Gauge, delta: i64) {
+        if self.enabled() {
+            self.gauges[g as usize].fetch_add(delta as u64, Ordering::Relaxed);
+        }
+    }
+
+    /// Record one observation into a histogram.
+    #[inline]
+    pub fn record(&self, h: Hist, v: u64) {
+        if self.enabled() {
+            self.hists[h as usize][hist_bucket(v)].fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Record a duration (saturating microseconds).
+    #[inline]
+    pub fn record_duration(&self, h: Hist, d: Duration) {
+        self.record(h, d.as_micros().min(u64::MAX as u128) as u64);
+    }
+
+    /// Plain-data copy of every cell (relaxed read sweep).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let mut snap = MetricsSnapshot::default();
+        for &c in Counter::ALL {
+            let v = self.counters[c as usize].load(Ordering::Relaxed);
+            snap.counters.push((c.name().to_string(), v));
+        }
+        for &g in Gauge::ALL {
+            let v = self.gauges[g as usize].load(Ordering::Relaxed);
+            snap.gauges.push((g.name().to_string(), v));
+        }
+        for &h in Hist::ALL {
+            let buckets: Vec<u64> = self.hists[h as usize]
+                .iter()
+                .map(|b| b.load(Ordering::Relaxed))
+                .collect();
+            snap.hists.push((h.name().to_string(), buckets));
+        }
+        snap
+    }
+
+    /// Zero every cell (tests and the overhead bench; servers never
+    /// reset — scrapers diff snapshots instead).
+    pub fn reset(&self) {
+        for c in &self.counters {
+            c.store(0, Ordering::Relaxed);
+        }
+        for g in &self.gauges {
+            g.store(0, Ordering::Relaxed);
+        }
+        for h in &self.hists {
+            for b in h {
+                b.store(0, Ordering::Relaxed);
+            }
+        }
+    }
+}
+
+impl Default for MetricsRegistry {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-global registry every serving layer records into.
+pub fn global() -> &'static MetricsRegistry {
+    static GLOBAL: OnceLock<MetricsRegistry> = OnceLock::new();
+    GLOBAL.get_or_init(MetricsRegistry::new)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_boundaries_match_documented_scheme() {
+        // bucket 0 is the value 0; bucket i ≥ 1 covers [2^(i-1), 2^i)
+        assert_eq!(hist_bucket(0), 0);
+        assert_eq!(hist_bucket(1), 1);
+        for i in 1..HIST_BUCKETS - 1 {
+            let lo = 1u64 << (i - 1);
+            let hi = 1u64 << i;
+            assert_eq!(hist_bucket(lo), i, "lower edge of bucket {i}");
+            assert_eq!(hist_bucket(hi - 1), i, "upper edge of bucket {i}");
+            assert_eq!(hist_bucket(hi), i + 1, "first value past bucket {i}");
+        }
+        // the last bucket is open-ended
+        let last_lo = 1u64 << (HIST_BUCKETS - 2);
+        assert_eq!(hist_bucket(last_lo), HIST_BUCKETS - 1);
+        assert_eq!(hist_bucket(u64::MAX), HIST_BUCKETS - 1);
+    }
+
+    #[test]
+    fn bucket_bounds_align_with_bucket_fn() {
+        for i in 0..HIST_BUCKETS {
+            let (lo, hi) = hist_bucket_bounds(i);
+            assert!(lo < hi);
+            assert_eq!(hist_bucket(lo as u64), i);
+            if i < HIST_BUCKETS - 1 {
+                assert_eq!(hist_bucket(hi as u64 - 1), i);
+            }
+        }
+    }
+
+    #[test]
+    fn concurrent_recording_loses_no_counts() {
+        // 8 threads × 10k events each into the same counter + histogram:
+        // the relaxed fetch_adds must not lose a single event.
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 10_000;
+        let reg = MetricsRegistry::new();
+        std::thread::scope(|s| {
+            for t in 0..THREADS {
+                let reg = &reg;
+                s.spawn(move || {
+                    for i in 0..PER_THREAD {
+                        reg.inc(Counter::ReqMatvec);
+                        reg.record(Hist::ExecMatvecUs, t as u64 * PER_THREAD + i);
+                        reg.gauge_add(Gauge::NetConnections, 1);
+                        reg.gauge_add(Gauge::NetConnections, -1);
+                    }
+                });
+            }
+        });
+        let snap = reg.snapshot();
+        let total = THREADS as u64 * PER_THREAD;
+        assert_eq!(snap.counter("req_matvec"), total);
+        assert_eq!(snap.hist_count("exec_matvec_us"), total);
+        assert_eq!(snap.gauge("net_connections"), 0);
+    }
+
+    #[test]
+    fn disabled_registry_records_nothing() {
+        let reg = MetricsRegistry::disabled();
+        reg.inc(Counter::ReqPing);
+        reg.record(Hist::NetRequestUs, 42);
+        reg.gauge_set(Gauge::LiveGeneration, 9);
+        let snap = reg.snapshot();
+        assert_eq!(snap.counter("req_ping"), 0);
+        assert_eq!(snap.hist_count("net_request_us"), 0);
+        assert_eq!(snap.gauge("live_generation"), 0);
+    }
+
+    #[test]
+    fn metric_names_are_unique() {
+        let mut names: Vec<&str> = Counter::ALL.iter().map(|c| c.name()).collect();
+        names.extend(Gauge::ALL.iter().map(|g| g.name()));
+        names.extend(Hist::ALL.iter().map(|h| h.name()));
+        let n = names.len();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), n, "duplicate metric name");
+    }
+}

@@ -1,0 +1,350 @@
+//! Plain-data snapshots: merge, diff, quantiles, and the versioned
+//! byte encoding the `Stats` wire opcode ships.
+//!
+//! Snapshots are **name-keyed**, not id-keyed: a v4 client scraping a
+//! newer server that grew extra metrics simply sees extra names, and a
+//! newer client scraping an older server sees fewer — no renegotiation.
+
+use crate::error::{Error, Result};
+use crate::util::stats::histogram_quantile;
+
+use super::registry::{hist_bucket_bounds, HIST_BUCKETS};
+
+/// Version tag leading the byte encoding. Bump when the layout changes;
+/// decoders reject newer tags rather than misreading them.
+pub const SNAPSHOT_VERSION: u16 = 1;
+
+/// A point-in-time copy of a [`super::MetricsRegistry`].
+///
+/// Counters and histogram buckets are monotone, so `later.diff(earlier)`
+/// isolates exactly the events between two scrapes; `merge` sums two
+/// snapshots (e.g. across processes in a future sharded deployment).
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct MetricsSnapshot {
+    /// `(name, value)` monotone counters.
+    pub counters: Vec<(String, u64)>,
+    /// `(name, value)` instantaneous gauges.
+    pub gauges: Vec<(String, u64)>,
+    /// `(name, buckets)` log₂ histograms (see
+    /// [`super::registry::hist_bucket`]).
+    pub hists: Vec<(String, Vec<u64>)>,
+}
+
+fn lookup(list: &[(String, u64)], name: &str) -> u64 {
+    list.iter().find(|(n, _)| n == name).map_or(0, |(_, v)| *v)
+}
+
+impl MetricsSnapshot {
+    /// Counter value by name (0 if absent).
+    pub fn counter(&self, name: &str) -> u64 {
+        lookup(&self.counters, name)
+    }
+
+    /// Gauge value by name (0 if absent).
+    pub fn gauge(&self, name: &str) -> u64 {
+        lookup(&self.gauges, name)
+    }
+
+    /// Histogram buckets by name.
+    pub fn hist(&self, name: &str) -> Option<&[u64]> {
+        self.hists.iter().find(|(n, _)| n == name).map(|(_, b)| b.as_slice())
+    }
+
+    /// Total observations recorded into a histogram.
+    pub fn hist_count(&self, name: &str) -> u64 {
+        self.hist(name).map_or(0, |b| b.iter().sum())
+    }
+
+    /// Quantile of a histogram (`q ∈ [0, 1]`), linearly interpolated
+    /// inside the winning log₂ bucket via
+    /// [`crate::util::stats::histogram_quantile`]. 0 for an empty or
+    /// absent histogram.
+    pub fn hist_quantile(&self, name: &str, q: f64) -> f64 {
+        let Some(buckets) = self.hist(name) else { return 0.0 };
+        let edges: Vec<(f64, f64)> =
+            (0..buckets.len().min(HIST_BUCKETS)).map(hist_bucket_bounds).collect();
+        histogram_quantile(&buckets[..edges.len()], &edges, q)
+    }
+
+    /// True when no counter, gauge, or bucket is non-zero.
+    pub fn is_empty(&self) -> bool {
+        self.counters.iter().all(|(_, v)| *v == 0)
+            && self.gauges.iter().all(|(_, v)| *v == 0)
+            && self.hists.iter().all(|(_, b)| b.iter().all(|&c| c == 0))
+    }
+
+    /// Events recorded between `earlier` and `self`: counters and
+    /// histogram buckets subtract (saturating, so a restarted server
+    /// yields zeros instead of garbage); gauges keep `self`'s value
+    /// (they are instantaneous, not cumulative).
+    pub fn diff(&self, earlier: &MetricsSnapshot) -> MetricsSnapshot {
+        let mut out = self.clone();
+        for (name, v) in &mut out.counters {
+            *v = v.saturating_sub(earlier.counter(name));
+        }
+        for (name, buckets) in &mut out.hists {
+            if let Some(prev) = earlier.hist(name) {
+                for (b, p) in buckets.iter_mut().zip(prev.iter()) {
+                    *b = b.saturating_sub(*p);
+                }
+            }
+        }
+        out
+    }
+
+    /// Sum `other` into `self`: counters and buckets add; gauges add too
+    /// (the merged view of N processes has the summed connection count).
+    /// Names present in only one side are kept as-is / appended.
+    pub fn merge(&mut self, other: &MetricsSnapshot) {
+        for (name, v) in &other.counters {
+            match self.counters.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += v,
+                None => self.counters.push((name.clone(), *v)),
+            }
+        }
+        for (name, v) in &other.gauges {
+            match self.gauges.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => *mine += v,
+                None => self.gauges.push((name.clone(), *v)),
+            }
+        }
+        for (name, buckets) in &other.hists {
+            match self.hists.iter_mut().find(|(n, _)| n == name) {
+                Some((_, mine)) => {
+                    if mine.len() < buckets.len() {
+                        mine.resize(buckets.len(), 0);
+                    }
+                    for (m, b) in mine.iter_mut().zip(buckets.iter()) {
+                        *m += b;
+                    }
+                }
+                None => self.hists.push((name.clone(), buckets.clone())),
+            }
+        }
+    }
+
+    /// Versioned byte encoding (big-endian, length-prefixed names —
+    /// the same conventions as the wire protocol).
+    pub fn encode(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(1024);
+        out.extend_from_slice(&SNAPSHOT_VERSION.to_be_bytes());
+        put_scalar_section(&mut out, &self.counters);
+        put_scalar_section(&mut out, &self.gauges);
+        out.extend_from_slice(&(self.hists.len() as u32).to_be_bytes());
+        for (name, buckets) in &self.hists {
+            put_name(&mut out, name);
+            out.extend_from_slice(&(buckets.len() as u32).to_be_bytes());
+            for b in buckets {
+                out.extend_from_slice(&b.to_be_bytes());
+            }
+        }
+        out
+    }
+
+    /// Decode [`Self::encode`] output; rejects unknown versions and
+    /// truncated or oversized payloads with [`Error::Parse`].
+    pub fn decode(bytes: &[u8]) -> Result<MetricsSnapshot> {
+        let mut rd = Cursor { b: bytes, i: 0 };
+        let version = rd.u16()?;
+        if version == 0 || version > SNAPSHOT_VERSION {
+            return Err(Error::Parse(format!("unknown metrics snapshot version {version}")));
+        }
+        let counters = get_scalar_section(&mut rd)?;
+        let gauges = get_scalar_section(&mut rd)?;
+        let nh = rd.count(8)?;
+        let mut hists = Vec::with_capacity(nh.min(1024));
+        for _ in 0..nh {
+            let name = rd.name()?;
+            let nb = rd.count(8)?;
+            let mut buckets = Vec::with_capacity(nb.min(1024));
+            for _ in 0..nb {
+                buckets.push(rd.u64()?);
+            }
+            hists.push((name, buckets));
+        }
+        rd.done()?;
+        Ok(MetricsSnapshot { counters, gauges, hists })
+    }
+}
+
+fn put_name(out: &mut Vec<u8>, name: &str) {
+    debug_assert!(name.len() <= u16::MAX as usize);
+    out.extend_from_slice(&(name.len() as u16).to_be_bytes());
+    out.extend_from_slice(name.as_bytes());
+}
+
+fn put_scalar_section(out: &mut Vec<u8>, list: &[(String, u64)]) {
+    out.extend_from_slice(&(list.len() as u32).to_be_bytes());
+    for (name, v) in list {
+        put_name(out, name);
+        out.extend_from_slice(&v.to_be_bytes());
+    }
+}
+
+fn get_scalar_section(rd: &mut Cursor<'_>) -> Result<Vec<(String, u64)>> {
+    let n = rd.count(8)?;
+    let mut list = Vec::with_capacity(n.min(1024));
+    for _ in 0..n {
+        let name = rd.name()?;
+        let v = rd.u64()?;
+        list.push((name, v));
+    }
+    Ok(list)
+}
+
+/// Bounds-checked decode cursor (the snapshot-local twin of the wire
+/// reader; kept here so `obs` stays a leaf module).
+struct Cursor<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl Cursor<'_> {
+    fn take(&mut self, n: usize) -> Result<&[u8]> {
+        if self.b.len() - self.i < n {
+            return Err(Error::Parse("truncated metrics snapshot".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    /// Element count whose remaining payload must hold at least
+    /// `count · elem_bytes` bytes (pre-allocation guard).
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.b.len() - self.i {
+            return Err(Error::Parse(format!("metrics snapshot count {n} exceeds payload")));
+        }
+        Ok(n)
+    }
+
+    fn name(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Parse("metrics name is not UTF-8".into()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            return Err(Error::Parse(format!(
+                "metrics snapshot has {} trailing bytes",
+                self.b.len() - self.i
+            )));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::registry::{Counter, Hist, MetricsRegistry};
+    use super::*;
+
+    fn sample_snapshot() -> MetricsSnapshot {
+        let reg = MetricsRegistry::new();
+        reg.add(Counter::ReqMatvec, 17);
+        reg.add(Counter::FaultQuery, 3);
+        reg.gauge_set(super::super::Gauge::LiveGeneration, 5);
+        for v in [0u64, 1, 2, 3, 700, 65_000] {
+            reg.record(Hist::ExecMatvecUs, v);
+        }
+        reg.snapshot()
+    }
+
+    #[test]
+    fn encode_decode_roundtrips() {
+        let snap = sample_snapshot();
+        let bytes = snap.encode();
+        let back = MetricsSnapshot::decode(&bytes).unwrap();
+        assert_eq!(back, snap);
+    }
+
+    #[test]
+    fn decode_rejects_bad_input() {
+        let snap = sample_snapshot();
+        let bytes = snap.encode();
+        // truncation anywhere fails cleanly
+        assert!(MetricsSnapshot::decode(&bytes[..bytes.len() - 1]).is_err());
+        assert!(MetricsSnapshot::decode(&bytes[..1]).is_err());
+        // trailing garbage is rejected
+        let mut padded = bytes.clone();
+        padded.push(0);
+        assert!(MetricsSnapshot::decode(&padded).is_err());
+        // future versions are rejected, not misread
+        let mut future = bytes;
+        future[0..2].copy_from_slice(&(SNAPSHOT_VERSION + 1).to_be_bytes());
+        assert!(MetricsSnapshot::decode(&future).is_err());
+    }
+
+    #[test]
+    fn merged_snapshot_equals_sum_of_parts() {
+        let a = sample_snapshot();
+        let b = sample_snapshot();
+        let mut merged = a.clone();
+        merged.merge(&b);
+        assert_eq!(merged.counter("req_matvec"), a.counter("req_matvec") * 2);
+        assert_eq!(merged.hist_count("exec_matvec_us"), a.hist_count("exec_matvec_us") * 2);
+        let (ab, bb, mb) = (
+            a.hist("exec_matvec_us").unwrap(),
+            b.hist("exec_matvec_us").unwrap(),
+            merged.hist("exec_matvec_us").unwrap(),
+        );
+        for (i, ((m, a), b)) in mb.iter().zip(ab.iter()).zip(bb.iter()).enumerate() {
+            assert_eq!(*m, a + b, "bucket {i}");
+        }
+        // names unique to one side are preserved
+        let mut lonely = MetricsSnapshot::default();
+        lonely.counters.push(("only_here".into(), 7));
+        merged.merge(&lonely);
+        assert_eq!(merged.counter("only_here"), 7);
+    }
+
+    #[test]
+    fn diff_isolates_the_delta() {
+        let reg = MetricsRegistry::new();
+        reg.add(Counter::ReqRow, 4);
+        reg.record(Hist::ExecRowUs, 10);
+        let before = reg.snapshot();
+        reg.add(Counter::ReqRow, 6);
+        reg.record(Hist::ExecRowUs, 10);
+        reg.record(Hist::ExecRowUs, 1000);
+        let after = reg.snapshot();
+        let d = after.diff(&before);
+        assert_eq!(d.counter("req_row"), 6);
+        assert_eq!(d.hist_count("exec_row_us"), 2);
+        // a "restarted server" (later scrape below earlier) saturates to 0
+        let d2 = before.diff(&after);
+        assert_eq!(d2.counter("req_row"), 0);
+    }
+
+    #[test]
+    fn quantiles_come_from_bucket_interpolation() {
+        let reg = MetricsRegistry::new();
+        // 100 observations all in bucket [64, 128)
+        for _ in 0..100 {
+            reg.record(Hist::NetRequestUs, 100);
+        }
+        let snap = reg.snapshot();
+        let p50 = snap.hist_quantile("net_request_us", 0.5);
+        assert!((64.0..128.0).contains(&p50), "p50 = {p50}");
+        assert!(snap.hist_quantile("net_request_us", 0.0) >= 64.0);
+        assert!(snap.hist_quantile("net_request_us", 1.0) <= 128.0);
+        // empty histogram → 0
+        assert_eq!(snap.hist_quantile("exec_col_us", 0.99), 0.0);
+        assert_eq!(snap.hist_quantile("no_such_hist", 0.5), 0.0);
+    }
+}

@@ -50,6 +50,7 @@ use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::distributions::MatrixStats;
 use crate::engine::{build_sketcher, PipelineConfig, SketchMode, Sketcher};
 use crate::error::{Error, Result};
+use crate::obs::{self, Counter, Gauge, Hist};
 use crate::sketch::{Sketch, SketchPlan};
 use crate::sparse::Entry;
 
@@ -210,6 +211,8 @@ impl LiveSketch {
     /// rebuild runs entirely off the read path — the chain lock is taken
     /// only for the final snapshot swap.
     fn publish(&mut self) -> Result<u64> {
+        let reg = obs::global();
+        let t_build = reg.enabled().then(Instant::now);
         let mut stats = MatrixStats::new(self.inner.m, self.inner.n);
         for e in &self.prefix {
             stats.push(e);
@@ -224,6 +227,9 @@ impl LiveSketch {
         let (sketch, _) = sketcher.finalize()?;
         let g = self.inner.generation.load(Ordering::Acquire) + 1;
         let snap = Arc::new(ServableSketch::from_sketch(&sketch)?.with_generation(g));
+        if let Some(t0) = t_build {
+            reg.record_duration(Hist::LivePublishUs, t0.elapsed());
+        }
         let lag = self.epoch_t0.take().map_or(0.0, |t| t.elapsed().as_secs_f64());
         {
             let mut chain = chain_lock(&self.inner)?;
@@ -235,6 +241,9 @@ impl LiveSketch {
             self.inner.generation.store(g, Ordering::Release);
             self.inner.advance.notify_all();
         }
+        reg.inc(Counter::LivePublish);
+        reg.gauge_set(Gauge::LiveGeneration, g);
+        reg.record(Hist::LiveLagUs, (lag * 1e6) as u64);
         self.pending = 0;
         Ok(g)
     }
@@ -280,24 +289,28 @@ impl LiveReader {
     /// typed [`Error::Generation`].
     pub fn snapshot_at(&self, pin: Option<u64>) -> Result<Arc<ServableSketch>> {
         let Some(g) = pin else { return self.snapshot() };
+        let reg = obs::global();
         let chain = chain_lock(&self.inner)?;
         let latest = self.inner.generation.load(Ordering::Acquire);
         if g > latest {
+            reg.inc(Counter::LivePinMiss);
             return Err(Error::Generation(format!(
                 "generation {g} not yet published (latest is {latest})"
             )));
         }
-        chain
-            .snapshots
-            .iter()
-            .find(|s| s.generation() == g)
-            .cloned()
-            .ok_or_else(|| {
+        match chain.snapshots.iter().find(|s| s.generation() == g) {
+            Some(snap) => {
+                reg.inc(Counter::LivePinHit);
+                Ok(Arc::clone(snap))
+            }
+            None => {
+                reg.inc(Counter::LivePinMiss);
                 let oldest = chain.snapshots.front().map_or(latest, |s| s.generation());
-                Error::Generation(format!(
+                Err(Error::Generation(format!(
                     "generation {g} retired (retained window is {oldest}..={latest})"
-                ))
-            })
+                )))
+            }
+        }
     }
 
     /// Answer one request on the snapshot the pin selects, reporting the

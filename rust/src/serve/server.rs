@@ -27,14 +27,21 @@
 //! surface is [`crate::api::SketchClient`], whose in-process backend
 //! ([`crate::api::LocalClient`]) and network front ([`crate::net`]) both
 //! dispatch onto these pools.
+//!
+//! Every submit/dequeue/execute step records into the process-global
+//! telemetry registry ([`crate::obs`]): queue-wait vs per-op execute
+//! latency histograms, whole-vs-sharded split decision counters, and
+//! per-window times of split requests.
 
 use std::sync::atomic::{AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
+use std::time::Instant;
 
 use crate::api::{QueryRequest, QueryResponse};
 use crate::error::{Error, Result};
+use crate::obs::{self, Counter, Hist};
 use crate::sketch::{
     encode_sketch, row_group_index_h, EncodedSketch, PayloadHeader, Sketch, SketchEntry,
 };
@@ -168,10 +175,25 @@ enum Task {
         sketch: Arc<ServableSketch>,
         request: QueryRequest,
         reply: SyncSender<Result<QueryResponse>>,
+        /// Submit-time stamp for the queue-wait histogram; `None` when
+        /// the telemetry registry is disabled (no clock reads at all).
+        enqueued: Option<Instant>,
     },
     /// One contiguous row-group window of a split request (the snapshot
     /// rides on the shared plan).
-    Shard { plan: Arc<SplitPlan>, chunk: usize },
+    Shard { plan: Arc<SplitPlan>, chunk: usize, enqueued: Option<Instant> },
+}
+
+/// Which execute-latency histogram a request records into.
+fn exec_hist(q: &QueryRequest) -> Hist {
+    match q {
+        QueryRequest::Matvec(_) => Hist::ExecMatvecUs,
+        QueryRequest::MatvecT(_) => Hist::ExecMatvecTUs,
+        QueryRequest::MatvecBatch(_) => Hist::ExecBatchUs,
+        QueryRequest::Row(_) => Hist::ExecRowUs,
+        QueryRequest::Col(_) => Hist::ExecColUs,
+        QueryRequest::TopK(_) => Hist::ExecTopKUs,
+    }
 }
 
 /// Which operator a row-parallel split runs. Only row-separable
@@ -389,15 +411,30 @@ impl QueryServer {
                         Err(_) => break,
                     };
                     let Ok(task) = task else { break };
+                    let reg = obs::global();
                     match task {
-                        Task::Whole { sketch, request, reply } => {
+                        Task::Whole { sketch, request, reply, enqueued } => {
+                            if let Some(t0) = enqueued {
+                                reg.record_duration(Hist::QueueWaitUs, t0.elapsed());
+                            }
+                            let started = reg.enabled().then(Instant::now);
                             let out = sketch.answer(&request);
+                            if let Some(t0) = started {
+                                reg.record_duration(exec_hist(&request), t0.elapsed());
+                            }
                             // a caller that dropped its Pending is fine
                             let _ = reply.send(out);
                             served += 1;
                         }
-                        Task::Shard { plan, chunk } => {
+                        Task::Shard { plan, chunk, enqueued } => {
+                            if let Some(t0) = enqueued {
+                                reg.record_duration(Hist::QueueWaitUs, t0.elapsed());
+                            }
+                            let started = reg.enabled().then(Instant::now);
                             let out = plan.run_chunk(chunk);
+                            if let Some(t0) = started {
+                                reg.record_duration(Hist::SplitWindowUs, t0.elapsed());
+                            }
                             if plan.complete(chunk, out) {
                                 // a split request counts once, credited
                                 // to the worker that reduced it
@@ -435,10 +472,15 @@ impl QueryServer {
     /// answer. The snapshot need not be the pool's default sketch (a live
     /// chain submits retained generations through the same pool).
     pub fn submit_on(&self, sketch: Arc<ServableSketch>, request: QueryRequest) -> Pending {
+        let reg = obs::global();
         let (reply, rx) = sync_channel(1);
+        let enqueued = reg.enabled().then(Instant::now);
         // if every worker is gone the Pending surfaces it at wait()
-        if let Some(request) = self.try_split(&sketch, request, &reply) {
-            let _ = self.tx.send(Task::Whole { sketch, request, reply });
+        if let Some(request) = self.try_split(&sketch, request, &reply, enqueued) {
+            reg.inc(Counter::SplitWhole);
+            let _ = self.tx.send(Task::Whole { sketch, request, reply, enqueued });
+        } else {
+            reg.inc(Counter::SplitSharded);
         }
         Pending { rx }
     }
@@ -452,6 +494,7 @@ impl QueryServer {
         sketch: &Arc<ServableSketch>,
         request: QueryRequest,
         reply: &SyncSender<Result<QueryResponse>>,
+        enqueued: Option<Instant>,
     ) -> Option<QueryRequest> {
         let workers = self.handles.len();
         let groups = sketch.row_index().len();
@@ -482,7 +525,7 @@ impl QueryServer {
             reply: reply.clone(),
         });
         for chunk in 0..chunks {
-            let _ = self.tx.send(Task::Shard { plan: Arc::clone(&plan), chunk });
+            let _ = self.tx.send(Task::Shard { plan: Arc::clone(&plan), chunk, enqueued });
         }
         None
     }

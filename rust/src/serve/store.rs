@@ -578,6 +578,7 @@ pub fn write_encoded(path: &Path, enc: &EncodedSketch, key: &StoreKey) -> Result
 /// the `mmap` feature, a single buffered read otherwise) — opening a
 /// sketch never copies its payload again after the load.
 pub fn read_encoded(path: &Path) -> Result<StoredSketch> {
+    crate::obs::global().inc(crate::obs::Counter::StoreLoad);
     decode_container_shared(&load_container_bytes(path)?)
 }
 

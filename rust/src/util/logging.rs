@@ -18,6 +18,30 @@ pub enum Level {
     Debug = 3,
 }
 
+impl Level {
+    /// Parse a CLI / environment spelling (`error|warn|info|debug`,
+    /// case-insensitive; `warning` and `warn` both accepted).
+    pub fn parse(s: &str) -> Option<Level> {
+        match s.to_ascii_lowercase().as_str() {
+            "error" => Some(Level::Error),
+            "warn" | "warning" => Some(Level::Warn),
+            "info" => Some(Level::Info),
+            "debug" => Some(Level::Debug),
+            _ => None,
+        }
+    }
+
+    /// Canonical lowercase name (the `parse` spelling).
+    pub fn name(self) -> &'static str {
+        match self {
+            Level::Error => "error",
+            Level::Warn => "warn",
+            Level::Info => "info",
+            Level::Debug => "debug",
+        }
+    }
+}
+
 static LEVEL: AtomicU8 = AtomicU8::new(Level::Info as u8);
 static START: OnceLock<Instant> = OnceLock::new();
 
@@ -26,11 +50,15 @@ pub fn set_level(level: Level) {
     LEVEL.store(level as u8, Ordering::Relaxed);
 }
 
-/// Current verbosity.
+/// Current verbosity. The decode is exhaustive over the values
+/// [`set_level`] can store, so set/get round-trips for every level;
+/// out-of-range bytes (impossible via the public API) fall back to the
+/// `Info` default.
 pub fn level() -> Level {
     match LEVEL.load(Ordering::Relaxed) {
         0 => Level::Error,
         1 => Level::Warn,
+        2 => Level::Info,
         3 => Level::Debug,
         _ => Level::Info,
     }
@@ -80,9 +108,29 @@ mod tests {
 
     #[test]
     fn level_roundtrip() {
-        set_level(Level::Debug);
-        assert_eq!(level(), Level::Debug);
+        // every level must survive a set/get round-trip; the decode
+        // used to reach Info only through the wildcard arm, so nothing
+        // pinned the stored discriminants to the decoded levels.
+        // Restore the default afterwards — LEVEL is process-global and
+        // other tests log.
+        for lvl in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            set_level(lvl);
+            assert_eq!(level(), lvl, "round-trip of {lvl:?}");
+        }
         set_level(Level::Info);
         assert_eq!(level(), Level::Info);
+    }
+
+    #[test]
+    fn parse_accepts_cli_spellings() {
+        assert_eq!(Level::parse("error"), Some(Level::Error));
+        assert_eq!(Level::parse("WARN"), Some(Level::Warn));
+        assert_eq!(Level::parse("warning"), Some(Level::Warn));
+        assert_eq!(Level::parse("Info"), Some(Level::Info));
+        assert_eq!(Level::parse("debug"), Some(Level::Debug));
+        assert_eq!(Level::parse("verbose"), None);
+        for lvl in [Level::Error, Level::Warn, Level::Info, Level::Debug] {
+            assert_eq!(Level::parse(lvl.name()), Some(lvl), "name round-trip");
+        }
     }
 }

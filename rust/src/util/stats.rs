@@ -122,6 +122,43 @@ pub fn quantiles_in_place(xs: &mut [f64], qs: &[f64]) -> Vec<f64> {
         .collect()
 }
 
+/// Quantile of a bucketed histogram (`q ∈ [0, 1]`): `counts[i]`
+/// observations fell in the half-open value range `edges[i] = (lo, hi)`.
+/// Finds the bucket holding the `q`-th observation by cumulative count
+/// and interpolates linearly inside it — the extraction path for the
+/// telemetry histograms in [`crate::obs`], whose log₂ buckets bound the
+/// relative error of any interior quantile by 2×. Returns 0 for an
+/// all-zero histogram.
+pub fn histogram_quantile(counts: &[u64], edges: &[(f64, f64)], q: f64) -> f64 {
+    assert_eq!(counts.len(), edges.len());
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return 0.0;
+    }
+    // rank of the target observation, 1-based so q=0 lands on the first
+    // observation and q=1 on the last
+    let target = 1.0 + q.clamp(0.0, 1.0) * (total - 1) as f64;
+    let mut cum = 0u64;
+    for (&c, &(lo, hi)) in counts.iter().zip(edges.iter()) {
+        if c == 0 {
+            continue;
+        }
+        if (cum + c) as f64 >= target {
+            let frac = (target - cum as f64) / c as f64; // ∈ (0, 1]
+            return lo + frac * (hi - lo);
+        }
+        cum += c;
+    }
+    // numerically unreachable; the last non-empty bucket's upper bound
+    edges
+        .iter()
+        .zip(counts.iter())
+        .filter(|(_, &c)| c > 0)
+        .map(|(&(_, hi), _)| hi)
+        .next_back()
+        .unwrap_or(0.0)
+}
+
 /// Median absolute deviation — the bench harness's robust spread measure.
 pub fn mad(xs: &[f64]) -> f64 {
     let med = quantile(xs, 0.5);
@@ -202,6 +239,26 @@ mod tests {
             scratch.extend_from_slice(&xs);
             assert_eq!(quantiles_in_place(&mut scratch, &qs), reference, "case {case}");
         }
+    }
+
+    #[test]
+    fn histogram_quantile_interpolates_within_buckets() {
+        // 10 obs in [1, 2), 85 in [2, 4), 5 in [4, 8)
+        let counts = [10u64, 85, 5];
+        let edges = [(1.0, 2.0), (2.0, 4.0), (4.0, 8.0)];
+        let p50 = histogram_quantile(&counts, &edges, 0.5);
+        assert!((2.0..4.0).contains(&p50), "p50 = {p50}");
+        let p99 = histogram_quantile(&counts, &edges, 0.99);
+        assert!((4.0..=8.0).contains(&p99), "p99 = {p99}");
+        // q=0 is the first observation, q=1 the last
+        assert!(histogram_quantile(&counts, &edges, 0.0) >= 1.0);
+        assert!(histogram_quantile(&counts, &edges, 1.0) <= 8.0);
+        // monotone in q
+        let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0];
+        let vals: Vec<f64> = qs.iter().map(|&q| histogram_quantile(&counts, &edges, q)).collect();
+        assert!(vals.windows(2).all(|w| w[0] <= w[1]), "{vals:?}");
+        // empty histogram
+        assert_eq!(histogram_quantile(&[0, 0], &[(0.0, 1.0), (1.0, 2.0)], 0.5), 0.0);
     }
 
     #[test]

@@ -351,6 +351,87 @@ fn shutdown_sentinel_stops_the_server() {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// The v4 `Stats` opcode: telemetry snapshots are monotone
+/// non-decreasing across queries, the scraped deltas cover this client's
+/// own traffic, and a typed fault bumps exactly the matching per-code
+/// counter. All assertions are `>=` / monotone: the obs registry is
+/// process-global, so the other tests in this binary record into the
+/// same counters concurrently — pollution can inflate a reading, never
+/// deflate it.
+#[test]
+fn stats_snapshots_are_monotone_and_faults_count_per_code() {
+    let dir = tmp_dir("stats");
+    let _ = std::fs::remove_dir_all(&dir);
+    let key = populate_store(&SketchStore::open(&dir).unwrap());
+    let server = start_server(&dir, 16);
+    let addr = server.local_addr();
+
+    let mut client = RemoteClient::connect(&addr.to_string()).unwrap();
+    let before = client.stats().unwrap();
+
+    for _ in 0..4 {
+        match client.query(&key, &QueryRequest::TopK(2)) {
+            Ok(QueryResponse::Entries(es)) => assert_eq!(es.len(), 2),
+            other => panic!("top-2 under stats test: {other:?}"),
+        }
+    }
+    let mid = client.stats().unwrap();
+    assert!(
+        mid.counter("req_top_k") >= before.counter("req_top_k") + 4,
+        "4 top-k queries counted: {} -> {}",
+        before.counter("req_top_k"),
+        mid.counter("req_top_k")
+    );
+    assert!(
+        mid.hist_count("exec_top_k_us") >= before.hist_count("exec_top_k_us") + 4,
+        "4 top-k executions in the latency histogram"
+    );
+    assert!(mid.counter("req_stats") >= before.counter("req_stats") + 1);
+    assert!(mid.counter("net_bytes_in") > before.counter("net_bytes_in"));
+    assert!(mid.counter("net_bytes_out") > before.counter("net_bytes_out"));
+
+    // a bad-handle query is a typed fault and lands on ITS counter
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let frame = wire::encode_request(
+            30,
+            &matsketch::net::Request::Query {
+                handle: 99,
+                pin: 0,
+                query: QueryRequest::TopK(1),
+            },
+        );
+        s.write_all(&frame).unwrap();
+        expect_error_code(&mut s, ErrCode::BadHandle, "stats-test bad handle");
+    }
+    let after = client.stats().unwrap();
+    assert!(
+        after.counter("fault_bad_handle") >= mid.counter("fault_bad_handle") + 1,
+        "bad-handle fault counted per code"
+    );
+
+    // every counter and histogram is monotone across the three scrapes,
+    // and the diffs therefore never underflow
+    for (earlier, later) in [(&before, &mid), (&mid, &after)] {
+        for (name, v) in &earlier.counters {
+            assert!(later.counter(name) >= *v, "counter {name} went backwards");
+        }
+        for (name, _) in &earlier.hists {
+            assert!(
+                later.hist_count(name) >= earlier.hist_count(name),
+                "hist {name} went backwards"
+            );
+        }
+    }
+    let delta = after.diff(&before);
+    assert!(delta.counter("req_top_k") >= 4);
+
+    client.close().unwrap();
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 /// Handles are connection-scoped: a fresh connection cannot query with a
 /// stale handle, and the error is typed.
 #[test]
