@@ -3,10 +3,11 @@
 //! the Figure-1 distributions; the batched single-pass SpMM vs k
 //! independent matvecs; plus `QueryServer` concurrent-reader scaling.
 //!
-//! Also the telemetry-overhead guard: the same served-matvec workload
-//! with the `obs` registry recording vs disabled, written to
-//! `<out>/BENCH_obs.json` (`--out DIR` overrides the default `reports`)
-//! so CI can hold the instrumentation to its <2% overhead claim.
+//! Also the instrumentation-overhead guards: the same served-matvec
+//! workload with the `obs` registry recording vs disabled, and with
+//! request tracing at the default 1-in-64 sampling vs disabled, written
+//! to `<out>/BENCH_obs.json` (`--out DIR` overrides the default
+//! `reports`) so CI can hold both to their <2% overhead claims.
 
 #[path = "common/mod.rs"]
 mod common;
@@ -17,6 +18,7 @@ use common::{bench_items, default_budget, section};
 use matsketch::api::{QueryRequest, QueryResponse};
 use matsketch::datasets::{synthetic_cf, SyntheticConfig};
 use matsketch::distributions::DistributionKind;
+use matsketch::obs::trace;
 use matsketch::serve::{self, QueryServer, ServableSketch};
 use matsketch::sketch::{decode_sketch, encode_sketch, sketch_offline, SketchPlan};
 use matsketch::util::json::{num, obj, Json};
@@ -220,12 +222,66 @@ fn main() {
             qps[0], qps[1]
         );
 
+        // same workload under request tracing: disabled (one relaxed
+        // load per query) vs the default 1-in-64 sampling, where the
+        // chosen query pays a root span, the worker-side child spans,
+        // and ring retention. Queries run one at a time through the
+        // serving entry's own sampling pattern in both arms.
+        section("trace overhead: served matvec, tracing disabled vs 1-in-64 sampling");
+        let tr = trace::global();
+        tr.set_one_in_n(64);
+        let mut tqps = [0.0f64; 2]; // [disabled, sampled 1-in-64]
+        for (slot, enabled) in [(0usize, false), (1usize, true)] {
+            tr.set_enabled(enabled);
+            let server = QueryServer::start(Arc::clone(&servable), 4);
+            let r = bench_items(
+                if enabled { "matvec_trace_1_in_64" } else { "matvec_trace_disabled" },
+                budget,
+                queries as f64,
+                || {
+                    for _ in 0..queries {
+                        match trace::sample() {
+                            0 => {
+                                server.submit(QueryRequest::Matvec(x.clone())).wait().unwrap();
+                            }
+                            id => {
+                                let active = trace::ActiveTrace::begin(id);
+                                let mut root = active.span(0, "request");
+                                root.note("op", "matvec");
+                                let ctx = root.ctx();
+                                server
+                                    .submit_traced(QueryRequest::Matvec(x.clone()), Some(ctx))
+                                    .wait()
+                                    .unwrap();
+                                root.finish();
+                                trace::finish(&active);
+                            }
+                        }
+                    }
+                },
+            );
+            r.report();
+            server.shutdown();
+            tqps[slot] = queries as f64 / r.median;
+        }
+        tr.set_enabled(true);
+        tr.clear();
+        let trace_overhead_pct = (tqps[0] / tqps[1] - 1.0) * 100.0;
+        println!(
+            "trace overhead: 1-in-64 sampling {:.1} queries/s vs disabled {:.1} queries/s \
+             ({trace_overhead_pct:+.2}%, target <2%)",
+            tqps[1], tqps[0]
+        );
+
         let out = out_dir();
         std::fs::create_dir_all(&out).expect("create bench output dir");
         let json: Vec<(&str, Json)> = vec![
             ("matvec_obs_recording_qps", num(qps[0])),
             ("matvec_obs_disabled_qps", num(qps[1])),
             ("obs_overhead_pct", num(overhead_pct)),
+            ("matvec_trace_disabled_qps", num(tqps[0])),
+            ("matvec_trace_sampled_qps", num(tqps[1])),
+            ("trace_overhead_pct", num(trace_overhead_pct)),
         ];
         let json_path = out.join("BENCH_obs.json");
         std::fs::write(&json_path, obj(json).to_string()).expect("write BENCH_obs.json");

@@ -4,8 +4,10 @@
 use std::collections::HashMap;
 use std::path::Path;
 use std::sync::Arc;
+use std::time::Instant;
 
 use crate::error::{Error, Result};
+use crate::obs::trace::{self, Span};
 use crate::serve::{read_header, LiveReader, QueryServer, ServableSketch, SketchStore, StoreKey};
 use crate::warn_log;
 
@@ -32,6 +34,7 @@ struct OpenedSketch {
 pub struct LocalClient {
     store: SketchStore,
     workers: usize,
+    split_min_groups: usize,
     opened: HashMap<String, OpenedSketch>,
     /// Live chains attached under their key's file name. Checked before
     /// the store on every query, so a live sketch shadows a frozen store
@@ -48,6 +51,7 @@ impl LocalClient {
         LocalClient {
             store,
             workers: Self::DEFAULT_WORKERS,
+            split_min_groups: QueryServer::DEFAULT_SPLIT_MIN_GROUPS,
             opened: HashMap::new(),
             live: HashMap::new(),
         }
@@ -62,6 +66,16 @@ impl LocalClient {
     /// call (min 1).
     pub fn with_workers(mut self, workers: usize) -> LocalClient {
         self.workers = workers.max(1);
+        self
+    }
+
+    /// Set the minimum occupied row groups before a matvec is
+    /// row-parallelized, for sketches opened *after* this call (min 1;
+    /// see [`QueryServer::DEFAULT_SPLIT_MIN_GROUPS`]). Lowering it to 1
+    /// forces splitting on small sketches — the lever the trace
+    /// integration suite uses to pin per-window span trees.
+    pub fn with_split_min_groups(mut self, split_min_groups: usize) -> LocalClient {
+        self.split_min_groups = split_min_groups.max(1);
         self
     }
 
@@ -139,13 +153,39 @@ impl LocalClient {
                 n: n as u64,
                 compact: sketch.enc.compact,
             };
-            let server = QueryServer::start(sketch, self.workers);
+            let server = QueryServer::start_with(sketch, self.workers, self.split_min_groups);
             self.opened.insert(
                 file.clone(),
                 OpenedSketch { key: key.clone(), fingerprint, server, info },
             );
         }
         Ok(self.opened.get(&file).expect("entry just ensured"))
+    }
+}
+
+/// Begin a sampled local-backend trace: a `request` root matching the
+/// shape the net server opens for wire requests, so local and remote
+/// span trees compare structurally (same root name, same serve-layer
+/// children from the shared worker pool).
+fn traced_root(op: &'static str) -> Option<(Arc<trace::ActiveTrace>, Span)> {
+    match trace::sample() {
+        0 => None,
+        id => {
+            let active = trace::ActiveTrace::begin(id);
+            let mut root = active.span(0, "request");
+            root.note("op", op);
+            root.note("backend", "local");
+            Some((active, root))
+        }
+    }
+}
+
+/// Close a trace opened by [`traced_root`] and hand it to the process
+/// collector (retention ring + slow-query log).
+fn finish_traced(traced: Option<(Arc<trace::ActiveTrace>, Span)>) {
+    if let Some((active, root)) = traced {
+        root.finish();
+        trace::finish(&active);
     }
 }
 
@@ -186,10 +226,27 @@ impl SketchClient for LocalClient {
     }
 
     fn query(&mut self, key: &StoreKey, request: &QueryRequest) -> Result<QueryResponse> {
+        let traced = traced_root(request.op_name());
+        let ctx = traced.as_ref().map(|(_, root)| root.ctx());
         if let Some(reader) = self.live.get(&key.file_name()) {
-            return reader.answer_at(None, request).map(|(resp, _)| resp);
+            let out = reader.answer_at_traced(None, request, ctx).map(|(resp, _)| resp);
+            finish_traced(traced);
+            return out;
         }
-        self.ensure_open(key)?.server.submit(request.clone()).wait()
+        // span the open-cache path too: a cold open (store read + index
+        // build) dominating a trace should be visible, not folded into
+        // queue wait
+        let open_t0 = ctx.as_ref().map(|_| Instant::now());
+        let opened = self.ensure_open(key);
+        if let (Some(c), Some(t0)) = (&ctx, open_t0) {
+            c.record("open_cache", t0, Instant::now());
+        }
+        let out = match opened {
+            Ok(o) => o.server.submit_traced(request.clone(), ctx).wait(),
+            Err(e) => Err(e),
+        };
+        finish_traced(traced);
+        out
     }
 
     fn query_at(

@@ -62,6 +62,21 @@ pub enum QueryRequest {
     TopK(usize),
 }
 
+impl QueryRequest {
+    /// Stable lower-case operation label (trace span notes, report
+    /// rows, per-opcode telemetry tables).
+    pub fn op_name(&self) -> &'static str {
+        match self {
+            QueryRequest::Matvec(_) => "matvec",
+            QueryRequest::MatvecT(_) => "matvec_t",
+            QueryRequest::MatvecBatch(_) => "matvec_batch",
+            QueryRequest::Row(_) => "row",
+            QueryRequest::Col(_) => "col",
+            QueryRequest::TopK(_) => "topk",
+        }
+    }
+}
+
 /// A query answer.
 #[derive(Clone, Debug, PartialEq)]
 pub enum QueryResponse {
@@ -155,6 +170,21 @@ pub trait SketchClient {
     /// scrape the server over the wire (`Stats` opcode, protocol v4).
     fn stats(&mut self) -> Result<crate::obs::MetricsSnapshot> {
         Ok(crate::obs::global().snapshot())
+    }
+
+    /// Completed request traces (see [`crate::obs::trace`]): the tree(s)
+    /// recorded under exact trace `id`, or — with `id == 0` — the
+    /// `slowest` N by root duration, slow-query log first. The default
+    /// implementation reads the process-global collector — correct for
+    /// in-process backends; [`RemoteClient`] overrides it to fetch the
+    /// server's retention rings over the wire (`TraceDump`, protocol
+    /// v5).
+    fn traces(&mut self, id: u64, slowest: u32) -> Result<Vec<crate::obs::TraceRecord>> {
+        Ok(if id != 0 {
+            crate::obs::trace::dump_by_id(id)
+        } else {
+            crate::obs::trace::dump_slowest(slowest as usize)
+        })
     }
 
     /// Execute a batch through the backend's batched path (worker-pool

@@ -100,6 +100,10 @@ impl SketchClient for RemoteClient {
         self.inner.stats()
     }
 
+    fn traces(&mut self, id: u64, slowest: u32) -> Result<Vec<crate::obs::TraceRecord>> {
+        self.inner.trace_dump(id, slowest)
+    }
+
     fn query_batch(
         &mut self,
         key: &StoreKey,

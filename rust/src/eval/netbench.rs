@@ -20,6 +20,10 @@
 //!   live freshness-lag buckets cover the bench alone. The per-op
 //!   request counts are logged next to the client-side issue totals as a
 //!   consistency check.
+//! * `slow_queries` — the slowest request traces of the run, fetched
+//!   from the server's retention rings (wire `TraceDump` opcode, v5) and
+//!   flattened to one row per span. Sampling is forced to every request
+//!   for the bench's duration so the table is populated.
 
 use std::path::Path;
 use std::time::Duration;
@@ -167,8 +171,15 @@ pub fn run_net_bench(
     };
 
     let before = try_scrape(&target);
+    // trace every request for the bench's duration so the slow-query
+    // table is populated; span recording is a few ring writes per
+    // request, noise next to the socket round trip. Restored after.
+    let prev_one_in_n = crate::obs::trace::global().one_in_n();
+    crate::obs::trace::set_trace_one_in_n(1);
     let result = measure_all(&keys, cfg, &target, &mut points);
+    crate::obs::trace::set_trace_one_in_n(prev_one_in_n);
     let after = try_scrape(&target);
+    let traces = fetch_slow_traces(&target, 16);
     if let Some(server) = server {
         let stats = server.shutdown();
         crate::info!(
@@ -201,7 +212,24 @@ pub fn run_net_bench(
         );
         super::report::server_metrics_table(&delta).write(dir)?;
     }
+    // always written (header-only when no traces came back), so report
+    // consumers can rely on the file existing after every run
+    super::report::trace_table("slow_queries", &traces).write(dir)?;
     Ok(points)
+}
+
+/// Fetch the slowest completed traces from the target's retention rings
+/// (wire `TraceDump`, protocol v5); a failure — an old server without
+/// the opcode, say — downgrades the slow-query table to a warning plus
+/// an empty table instead of failing the whole bench.
+fn fetch_slow_traces(target: &str, n: u32) -> Vec<crate::obs::TraceRecord> {
+    match crate::net::RemoteSketchClient::connect(target).and_then(|mut c| c.trace_dump(0, n)) {
+        Ok(traces) => traces,
+        Err(e) => {
+            crate::warn_log!("net-bench: trace dump of {target} failed: {e}");
+            Vec::new()
+        }
+    }
 }
 
 /// Scrape the target's telemetry (`Stats`, protocol v4); a failure — an
@@ -323,6 +351,15 @@ mod tests {
             .expect("req_matvec row present");
         let count: u64 = matvec_row.split(',').nth(2).unwrap().parse().unwrap();
         assert!(count >= issued / 3, "matvec count {count} vs {issued} issued");
+        // the trace fetch flattens the run's slowest span trees into the
+        // slow-query table; with sampling forced to every request, the
+        // self-hosted run must retain server-side `request` roots
+        let slow = std::fs::read_to_string(out.join("slow_queries.csv")).unwrap();
+        assert!(out.join("slow_queries.md").exists());
+        assert!(
+            slow.lines().any(|l| l.split(',').nth(3) == Some("request")),
+            "no request root in slow_queries.csv:\n{slow}"
+        );
         let _ = std::fs::remove_dir_all(&base);
     }
 }

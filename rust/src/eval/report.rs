@@ -141,6 +141,28 @@ pub fn server_metrics_table(snap: &crate::obs::MetricsSnapshot) -> Table {
     let misses = snap.counter("open_cache_miss");
     let rate = if hits + misses == 0 { 0.0 } else { hits as f64 / (hits + misses) as f64 };
     t.push(scalar("open_cache_hit_rate", "derived", fixed(rate, 3)));
+    // per-second rates over the uptime counter: a cumulative snapshot
+    // yields lifetime averages, and because uptime_us is monotone, a
+    // scrape diff yields true interval rates (the `stats --watch` view)
+    let uptime_s = snap.counter("uptime_us") as f64 / 1e6;
+    let per_s = |v: u64| if uptime_s > 0.0 { v as f64 / uptime_s } else { 0.0 };
+    let req_total: u64 = snap
+        .counters
+        .iter()
+        .filter(|(n, _)| n.starts_with("req_"))
+        .map(|(_, v)| *v)
+        .sum();
+    t.push(scalar("qps", "derived", fixed(per_s(req_total), 1)));
+    t.push(scalar(
+        "net_bytes_in_per_s",
+        "derived",
+        fixed(per_s(snap.counter("net_bytes_in")), 1),
+    ));
+    t.push(scalar(
+        "net_bytes_out_per_s",
+        "derived",
+        fixed(per_s(snap.counter("net_bytes_out")), 1),
+    ));
     for (name, v) in &snap.gauges {
         t.push(scalar(name, "gauge", v.to_string()));
     }
@@ -164,6 +186,34 @@ pub fn server_metrics_table(snap: &crate::obs::MetricsSnapshot) -> Table {
             fixed(snap.hist_quantile(name, 0.99), 1),
             cells.join(" "),
         ]);
+    }
+    t
+}
+
+/// Render completed request traces as the slow-query report table: one
+/// row per span — trace id, span id / parent link, stage name, start
+/// offset and duration (µs), and the span's `key=value` notes. Written
+/// as `reports/slow_queries.{csv,md}` by the net-bench and live-bench
+/// harnesses from the server's trace retention rings.
+pub fn trace_table(name: &str, traces: &[crate::obs::TraceRecord]) -> Table {
+    let mut t = Table::new(
+        name,
+        &["trace", "span", "parent", "name", "start_us", "dur_us", "notes"],
+    );
+    for rec in traces {
+        for s in &rec.spans {
+            let notes: Vec<String> =
+                s.notes.iter().map(|(k, v)| format!("{k}={v}")).collect();
+            t.push(vec![
+                format!("{:016x}", rec.trace),
+                s.id.to_string(),
+                s.parent.to_string(),
+                s.name.clone(),
+                s.start_us.to_string(),
+                s.duration_us().to_string(),
+                notes.join(" "),
+            ]);
+        }
     }
     t
 }
@@ -223,20 +273,76 @@ mod tests {
                 ("req_matvec".into(), 10),
                 ("open_cache_hit".into(), 3),
                 ("open_cache_miss".into(), 1),
+                ("uptime_us".into(), 2_000_000),
+                ("net_bytes_in".into(), 4_000),
             ],
             gauges: vec![("net_connections".into(), 2)],
             hists: vec![("exec_matvec_us".into(), counts)],
         };
         let t = server_metrics_table(&snap);
         assert_eq!(t.name, "server_metrics");
-        // 3 counters + derived hit rate + 1 gauge + 1 hist
-        assert_eq!(t.rows.len(), 6);
+        // 5 counters + 4 derived (hit rate, qps, bytes in/out per s)
+        // + 1 gauge + 1 hist
+        assert_eq!(t.rows.len(), 11);
         let rate = t.rows.iter().find(|r| r[0] == "open_cache_hit_rate").unwrap();
         assert_eq!(rate[2], "0.750");
+        // 10 req_* over 2 s of uptime
+        let qps = t.rows.iter().find(|r| r[0] == "qps").unwrap();
+        assert_eq!(qps[2], "5.0");
+        let bin = t.rows.iter().find(|r| r[0] == "net_bytes_in_per_s").unwrap();
+        assert_eq!(bin[2], "2000.0");
         let hist = t.rows.iter().find(|r| r[0] == "exec_matvec_us").unwrap();
         assert_eq!(hist[2], "10");
         assert!(hist[6].contains("64-128:10"), "{:?}", hist[6]);
         // CSV-safe: no cell smuggles a comma
+        assert!(!t.to_csv().lines().any(|l| l.matches(',').count() != 6));
+    }
+
+    #[test]
+    fn rates_are_zero_without_uptime() {
+        use crate::obs::MetricsSnapshot;
+        let snap = MetricsSnapshot {
+            counters: vec![("req_ping".into(), 7)],
+            gauges: vec![],
+            hists: vec![],
+        };
+        let t = server_metrics_table(&snap);
+        let qps = t.rows.iter().find(|r| r[0] == "qps").unwrap();
+        assert_eq!(qps[2], "0.0");
+    }
+
+    #[test]
+    fn trace_table_one_row_per_span() {
+        use crate::obs::{SpanRecord, TraceRecord};
+        let rec = TraceRecord {
+            trace: 0xBEEF,
+            spans: vec![
+                SpanRecord {
+                    id: 1,
+                    parent: 0,
+                    name: "request".into(),
+                    start_us: 0,
+                    end_us: 900,
+                    notes: vec![("op".into(), "matvec".into())],
+                },
+                SpanRecord {
+                    id: 2,
+                    parent: 1,
+                    name: "queue_wait".into(),
+                    start_us: 5,
+                    end_us: 40,
+                    notes: vec![],
+                },
+            ],
+        };
+        let t = trace_table("slow_queries", &[rec]);
+        assert_eq!(t.name, "slow_queries");
+        assert_eq!(t.rows.len(), 2);
+        assert_eq!(t.rows[0][0], "000000000000beef");
+        assert_eq!(t.rows[0][3], "request");
+        assert_eq!(t.rows[0][5], "900");
+        assert_eq!(t.rows[0][6], "op=matvec");
+        assert_eq!(t.rows[1][2], "1");
         assert!(!t.to_csv().lines().any(|l| l.matches(',').count() != 6));
     }
 

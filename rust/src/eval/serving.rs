@@ -22,6 +22,10 @@
 //!   against a live generation chain: queries/sec and latency
 //!   percentiles measured *while* the stream is arriving, plus the
 //!   freshness lag (entry arrival → generation live) p50/p95.
+//! * `slow_queries` (from [`run_live_bench`]) — the run's slowest
+//!   request span trees from the in-process trace collector, flattened
+//!   to one row per span (sampling is forced to every request for the
+//!   bench's duration).
 
 use std::path::Path;
 use std::time::Instant;
@@ -362,6 +366,13 @@ pub fn run_live_bench(
     std::fs::create_dir_all(store_dir)?;
     let mut points = Vec::new();
 
+    // trace every request for the bench's duration so the slow-query
+    // table is populated: the local backend samples in-process (see
+    // `api::local`), so the trees land in the global collector. Restored
+    // after the measurement loop.
+    let prev_one_in_n = crate::obs::trace::global().one_in_n();
+    crate::obs::trace::set_trace_one_in_n(1);
+
     for &clients in &cfg.clients {
         let live_cfg =
             LiveConfig { epoch_entries: cfg.epoch_entries, retain: 4, workers: 2 };
@@ -409,7 +420,11 @@ pub fn run_live_bench(
         });
     }
 
+    crate::obs::trace::set_trace_one_in_n(prev_one_in_n);
+
     live_serving_table(&points).write(dir)?;
+    super::report::trace_table("slow_queries", &crate::obs::trace::dump_slowest(16))
+        .write(dir)?;
     Ok(points)
 }
 
@@ -528,6 +543,13 @@ mod tests {
         assert!(p.lag_p95_ms >= p.lag_p50_ms);
         assert!(out.join("live_serving.csv").exists());
         assert!(out.join("live_serving.md").exists());
+        // the forced-sampling run leaves span trees in the collector;
+        // the flattened slow-query table must hold local request roots
+        let slow = std::fs::read_to_string(out.join("slow_queries.csv")).unwrap();
+        assert!(
+            slow.lines().any(|l| l.split(',').nth(3) == Some("request")),
+            "no request root in slow_queries.csv:\n{slow}"
+        );
         let _ = std::fs::remove_dir_all(&base);
     }
 }

@@ -19,6 +19,7 @@
 //! matsketch serve       --addr HOST:PORT [--store DIR] [--workers W]
 //!                       [--max-conns N] [--timeout-secs S]
 //!                       [--shutdown-after-secs S]
+//!                       [--trace-one-in-n N] [--slow-us US]
 //!                       [--ingest a.bin --s N [--method NAME]
 //!                        [--epoch-entries E] [--ingest-batch B]]
 //! matsketch live-bench  [--seed N] [--out DIR] [--store DIR]
@@ -28,7 +29,8 @@
 //!                       [--duration-secs S] [--ops matvec,row,top-k]
 //!                       [--batch-k K] [--datasets a,b] [--store DIR]
 //!                       [--out DIR]
-//! matsketch stats       --addr HOST:PORT
+//! matsketch stats       --addr HOST:PORT [--json] [--watch SECS]
+//! matsketch trace       --addr HOST:PORT [--id N | --slowest N]
 //! matsketch gen         --dataset NAME [--seed N] --out a.bin
 //! ```
 //!
@@ -55,6 +57,7 @@ use matsketch::eval::{
     run_compression, run_figure1, run_tables, run_theory, server_metrics_table, Figure1Config,
 };
 use matsketch::net::{scrape_stats, LoadOp, NetServer, NetServerConfig};
+use matsketch::obs::MetricsSnapshot;
 use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
 use matsketch::serve::{Fingerprinter, LiveConfig, LiveSketch, SketchStore, StoreKey};
 use matsketch::sketch::{encode_sketch, SketchPlan};
@@ -62,6 +65,7 @@ use matsketch::sparse::io as sparse_io;
 use matsketch::stream::FileStream;
 use matsketch::util::args::Args;
 use matsketch::util::human_bytes;
+use matsketch::util::json::{self, Json};
 use matsketch::util::logging::{set_level, Level};
 use matsketch::util::rng::Rng;
 use matsketch::{info, warn_log};
@@ -77,7 +81,7 @@ fn main() -> ExitCode {
 }
 
 fn real_main() -> Result<()> {
-    let args = Args::from_env(&["small", "verbose", "help", "include-ahk06", "force"])?;
+    let args = Args::from_env(&["small", "verbose", "help", "include-ahk06", "force", "json"])?;
     init_log_level(&args)?;
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     if args.flag("help") || cmd == "help" {
@@ -311,7 +315,16 @@ fn real_main() -> Result<()> {
                 max_connections: args.get_parse_or("max-conns", 64)?,
                 read_timeout: timeout,
                 write_timeout: timeout,
+                ..Default::default()
             };
+            // request-tracing knobs: sample one query in N (1 traces
+            // everything), retain + warn-log roots slower than --slow-us
+            if let Some(n) = args.get_parse::<u64>("trace-one-in-n")? {
+                matsketch::obs::trace::set_trace_one_in_n(n);
+            }
+            if let Some(us) = args.get_parse::<u64>("slow-us")? {
+                matsketch::obs::trace::set_slow_us(us);
+            }
             let server = NetServer::bind(store, addr, cfg)?;
             // --ingest attaches a live generation chain fed from a
             // triplet file by a background thread: clients query the
@@ -415,11 +428,51 @@ fn real_main() -> Result<()> {
             let addr = args
                 .get("addr")
                 .ok_or_else(|| Error::invalid("stats requires --addr <HOST:PORT>"))?;
-            let snap = scrape_stats(addr)?;
-            if snap.is_empty() {
-                info!("server at {addr} has recorded no metrics yet");
+            let json = args.flag("json");
+            match args.get_parse::<f64>("watch")? {
+                // one-shot scrape
+                None => {
+                    let snap = scrape_stats(addr)?;
+                    if snap.is_empty() && !json {
+                        info!("server at {addr} has recorded no metrics yet");
+                    }
+                    print_stats(&snap, json);
+                }
+                // --watch SECS: re-scrape on an interval and show only
+                // what happened since the previous scrape (counters and
+                // buckets diff; gauges stay instantaneous). Runs until
+                // interrupted or the server goes away.
+                Some(secs) => {
+                    let interval = std::time::Duration::from_secs_f64(secs.max(0.1));
+                    let mut prev = scrape_stats(addr)?;
+                    loop {
+                        std::thread::sleep(interval);
+                        let snap = scrape_stats(addr)?;
+                        print_stats(&snap.diff(&prev), json);
+                        prev = snap;
+                    }
+                }
             }
-            print!("{}", server_metrics_table(&snap).to_markdown());
+        }
+        "trace" => {
+            let addr = args
+                .get("addr")
+                .ok_or_else(|| Error::invalid("trace requires --addr <HOST:PORT>"))?;
+            let mut client = RemoteClient::connect(addr)?;
+            // --id fetches one retained trace by its (hex) id; otherwise
+            // the N slowest retained roots come back
+            let (id, slowest) = match args.get("id") {
+                Some(spec) => (parse_trace_id(spec)?, 0),
+                None => (0, args.get_parse_or("slowest", 5)?),
+            };
+            let traces = client.traces(id, slowest)?;
+            if traces.is_empty() {
+                info!(
+                    "no matching traces retained at {addr} (is sampling on? \
+                     serve --trace-one-in-n 1 traces every query)"
+                );
+            }
+            print!("{}", matsketch::obs::trace::render(&traces));
         }
         "net-shutdown" => {
             let addr = args.get_or("addr", "127.0.0.1:7300");
@@ -479,6 +532,55 @@ fn init_log_level(args: &Args) -> Result<()> {
         set_level(Level::Debug);
     }
     Ok(())
+}
+
+/// Print one stats scrape: the markdown table by default, or a single
+/// machine-readable JSON object with `--json`.
+fn print_stats(snap: &MetricsSnapshot, json: bool) {
+    if json {
+        println!("{}", snapshot_json(snap).to_string());
+    } else {
+        print!("{}", server_metrics_table(snap).to_markdown());
+    }
+}
+
+/// Lower a telemetry snapshot to JSON: counters and gauges become
+/// name→value objects, histograms become name→bucket-count arrays (the
+/// log₂-µs bucket layout is fixed; see `obs::registry::hist_bucket`).
+fn snapshot_json(snap: &MetricsSnapshot) -> Json {
+    let kv = |list: &[(String, u64)]| {
+        Json::Obj(list.iter().map(|(n, v)| (n.clone(), json::num(*v as f64))).collect())
+    };
+    json::obj(vec![
+        ("counters", kv(&snap.counters)),
+        ("gauges", kv(&snap.gauges)),
+        (
+            "hists",
+            Json::Obj(
+                snap.hists
+                    .iter()
+                    .map(|(n, buckets)| {
+                        let arr = buckets.iter().map(|&c| json::num(c as f64)).collect();
+                        (n.clone(), Json::Arr(arr))
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+/// Parse a `--id` trace-id argument. Trace ids render as 16-digit hex
+/// (`trace::render`, the slow-query warn line), so hex is accepted with
+/// or without a `0x` prefix; a plain run of digits parses as decimal.
+fn parse_trace_id(spec: &str) -> Result<u64> {
+    let bad = || Error::invalid(format!("bad trace id {spec:?} (hex or decimal)"));
+    if let Some(hex) = spec.strip_prefix("0x").or_else(|| spec.strip_prefix("0X")) {
+        return u64::from_str_radix(hex, 16).map_err(|_| bad());
+    }
+    if spec.bytes().all(|b| b.is_ascii_digit()) {
+        return spec.parse::<u64>().map_err(|_| bad());
+    }
+    u64::from_str_radix(spec, 16).map_err(|_| bad())
 }
 
 /// Whether `input` was modified after the stored sketch at `entry` (when
@@ -758,11 +860,14 @@ COMMANDS:
   gen          generate a dataset to a binary triplet file
   sketch       stream-sketch a triplet file into the sketch store
   query        answer a matvec / slice / top-k query (local store or --addr)
-  serve        serve the sketch store over TCP (wire protocol v4, v1-v3
+  serve        serve the sketch store over TCP (wire protocol v5, v1-v4
                accepted); --ingest adds a live ingest-while-serving chain
   live-bench   E12: mixed ingest+query throughput + freshness-lag table
   stats        scrape a running server's telemetry snapshot (per-op
-               counts, latency histograms, cache hit rate) as a table
+               counts, latency histograms, cache hit rate) as a table,
+               JSON blob (--json), or interval diff stream (--watch S)
+  trace        fetch retained request traces from a running server and
+               render their span timelines (--id N or --slowest N)
   net-shutdown send the graceful-shutdown sentinel to a running server
 
 COMMON OPTIONS:
@@ -800,7 +905,7 @@ SERVE-BENCH OPTIONS:
 
 SERVE OPTIONS:
   --addr HOST:PORT [--workers W] [--max-conns N] [--timeout-secs S]
-  [--shutdown-after-secs S]
+  [--shutdown-after-secs S] [--trace-one-in-n N] [--slow-us US]
   [--ingest a.bin --s N [--method NAME] [--dataset LABEL]
    [--epoch-entries E] [--retain R] [--ingest-batch B]]
   Serves every sketch in the store; clients open by
@@ -826,11 +931,22 @@ NET-BENCH OPTIONS:
   server-side telemetry diff in reports/server_metrics.*
 
 STATS OPTIONS:
-  --addr HOST:PORT
+  --addr HOST:PORT [--json] [--watch SECS]
   Pulls the server's obs registry snapshot over the wire (Stats opcode,
-  protocol v4) and prints the server_metrics table: per-op request
-  counts, execute-latency p50/p95/p99 (µs), cache hit rate, live
-  freshness-lag buckets.
+  protocol v5) and prints the server_metrics table: per-op request
+  counts, qps + bytes/s rates, execute-latency p50/p95/p99 (µs), cache
+  hit rate, live freshness-lag buckets. --json emits one machine-readable
+  object instead; --watch SECS re-scrapes on an interval and prints only
+  what changed since the previous scrape.
+
+TRACE OPTIONS:
+  --addr HOST:PORT [--id N | --slowest N]
+  Pulls retained request traces (TraceDump opcode, protocol v5) and
+  renders each as an indented span timeline with per-span offsets,
+  durations, and notes. --id (hex or decimal) fetches one trace;
+  --slowest N (default 5) fetches the N slowest retained roots. Traces
+  exist only for sampled requests — serve --trace-one-in-n 1 traces
+  every query, and roots slower than --slow-us land in the slow log.
 "
     );
 }

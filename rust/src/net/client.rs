@@ -14,14 +14,22 @@
 //! connection-scoped, pins are client intent. After a redial the client
 //! re-opens the handle and keeps answering at the pinned generation
 //! instead of silently resetting to latest.
+//!
+//! The client is also where **trace context is born** (protocol v5):
+//! each query consults the process sampler ([`crate::obs::trace`]), and
+//! a sampled request carries its nonzero trace id on the wire, opens a
+//! `client_send` span covering the round trip locally, and gets a
+//! matching server-side span tree — fetched back with
+//! [`RemoteSketchClient::trace_dump`].
 
 use std::collections::VecDeque;
 use std::io::{self, BufReader, BufWriter};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::error::{Error, Result};
+use crate::obs::trace::{self, TraceRecord};
 use crate::serve::StoreKey;
 
 use super::wire::{self, ErrCode, Request, Response};
@@ -259,6 +267,18 @@ impl RemoteSketchClient {
         }
     }
 
+    /// Fetch completed traces from the server's retention rings
+    /// (protocol v5): the tree(s) recorded under exact trace `id`, or —
+    /// with `id == 0` — the `slowest` N by root duration (slow-query log
+    /// first). Old servers answer with an unknown-opcode fault, which
+    /// surfaces as a typed error here.
+    pub fn trace_dump(&mut self, id: u64, slowest: u32) -> Result<Vec<TraceRecord>> {
+        match self.call_retry(&Request::TraceDump { id, slowest })? {
+            Response::Traces(traces) => Ok(traces),
+            other => Err(Self::remote_err(other)),
+        }
+    }
+
     /// Open `key` on the server (idempotent per connection) and return
     /// its identity + shape.
     pub fn open(&mut self, key: &StoreKey) -> Result<SketchInfo> {
@@ -341,17 +361,37 @@ impl RemoteSketchClient {
         generation_aware: bool,
     ) -> Result<(QueryResponse, u64)> {
         let handle = self.handle_for(key)?;
-        let req = Request::Query { handle, pin, query: query.clone() };
-        let resp = if generation_aware {
-            let id = self.send_at(&req, 3)?;
-            self.recv(id)?
-        } else {
-            self.call(&req)?
+        // sampled requests carry their trace id on the wire (forcing a
+        // v5 frame) and log the round trip as a client-side span tree
+        let trace_id = trace::sample();
+        let active = match trace_id {
+            0 => None,
+            id => Some(trace::ActiveTrace::begin(id)),
         };
-        match resp {
-            Response::Answer { generation, answer } => Ok((answer, generation)),
-            other => Err(Self::remote_err(other)),
+        let req = Request::Query { handle, pin, trace: trace_id, query: query.clone() };
+        let out = {
+            let resp = if generation_aware {
+                let id = self.send_at(&req, 3)?;
+                self.recv(id)?
+            } else {
+                self.call(&req)?
+            };
+            match resp {
+                Response::Answer { generation, answer } => Ok((answer, generation)),
+                other => Err(Self::remote_err(other)),
+            }
+        };
+        if let Some(active) = active {
+            active.record_with(
+                0,
+                "client_send",
+                active.origin(),
+                Instant::now(),
+                vec![("addr".into(), self.addr.to_string())],
+            );
+            trace::finish(&active);
         }
+        out
     }
 
     /// Latest published generation of the sketch under `key` (0 for
@@ -410,7 +450,9 @@ impl RemoteSketchClient {
                 let resp = self.recv(id)?;
                 out.push(collect(resp));
             }
-            let req = Request::Query { handle, pin, query: q };
+            // per-request sampling: a sampled entry gets its server-side
+            // span tree; the batch itself adds no client-side spans
+            let req = Request::Query { handle, pin, trace: trace::sample(), query: q };
             ids.push_back(self.send(&req)?);
         }
         for id in ids {

@@ -7,15 +7,16 @@
 //! This module adds that layer with **zero external dependencies**
 //! (std-only TCP):
 //!
-//! * [`wire`] — the versioned, length-prefixed binary protocol (v4): one
+//! * [`wire`] — the versioned, length-prefixed binary protocol (v5): one
 //!   opcode per [`crate::api::QueryRequest`] variant (matvec /
 //!   transpose-matvec / batched matvec / row / col / top-k, plus `Ping`,
-//!   `ListSketches`, `OpenSketch`, `GenPoll`, `Stats`, and the
-//!   `Shutdown` sentinel), with typed error responses for malformed,
+//!   `ListSketches`, `OpenSketch`, `GenPoll`, `Stats`, `TraceDump`, and
+//!   the `Shutdown` sentinel), with typed error responses for malformed,
 //!   truncated, oversized, or wrong-version frames. v3 carries
 //!   live-sketch generation pins and per-answer generation tags; v4 adds
-//!   `Stats` telemetry scraping; v1–v3 frames stay decodable and are
-//!   answered at their own version.
+//!   `Stats` telemetry scraping; v5 adds a trace-context word on `Query`
+//!   frames plus `TraceDump` retrieval of retained span trees; v1–v4
+//!   frames stay decodable and are answered at their own version.
 //! * [`server`] — [`NetServer`]: a multi-threaded `TcpListener` acceptor
 //!   owning a [`crate::serve::SketchStore`], lazily opening sketches
 //!   into shared [`crate::serve::ServableSketch`]es and dispatching onto

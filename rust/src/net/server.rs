@@ -22,6 +22,13 @@
 //! chain's [`LiveReader`] instead of a frozen store load, generation pins
 //! and `GenPoll` work over the wire, and a pin the chain cannot honour is
 //! a payload-level `generation` fault that keeps the connection alive.
+//!
+//! Query frames carrying a nonzero trace context (protocol v5) get a
+//! server-side span tree: a `request` root opened at the frame clock,
+//! with `frame_decode`, queue / execution spans from the worker pool,
+//! and `reply_write` as children. Completed trees land in the process
+//! trace ring ([`crate::obs::trace`]), from which the `TraceDump`
+//! opcode serves them back to clients.
 
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter};
@@ -33,6 +40,7 @@ use std::time::{Duration, Instant};
 
 use crate::api::{QueryRequest, SketchInfo};
 use crate::error::{Error, Result};
+use crate::obs::trace::{self, SpanCtx};
 use crate::obs::{self, Counter, Gauge, Hist};
 use crate::serve::{LiveReader, QueryServer, ServableSketch, SketchStore, StoreKey};
 use crate::{debug_log, info, warn_log};
@@ -55,6 +63,12 @@ pub struct NetServerConfig {
     pub read_timeout: Option<Duration>,
     /// Per-connection write timeout.
     pub write_timeout: Option<Duration>,
+    /// Minimum occupied row groups before a matvec is row-parallelized
+    /// across the worker pool (see
+    /// [`QueryServer::DEFAULT_SPLIT_MIN_GROUPS`]). Lowering it (down to
+    /// 1) forces splitting on small sketches — the lever the trace
+    /// integration suite uses to pin per-window span trees.
+    pub split_min_groups: usize,
 }
 
 impl Default for NetServerConfig {
@@ -64,6 +78,7 @@ impl Default for NetServerConfig {
             max_connections: 64,
             read_timeout: Some(Duration::from_secs(60)),
             write_timeout: Some(Duration::from_secs(60)),
+            split_min_groups: QueryServer::DEFAULT_SPLIT_MIN_GROUPS,
         }
     }
 }
@@ -311,6 +326,7 @@ fn request_counter(req: &Request) -> Counter {
         Request::OpenSketch(_) => Counter::ReqOpen,
         Request::Shutdown => Counter::ReqShutdown,
         Request::Stats => Counter::ReqStats,
+        Request::TraceDump { .. } => Counter::ReqTraceDump,
         Request::GenPoll { .. } => Counter::ReqGenPoll,
         Request::Query { query, .. } => match query {
             QueryRequest::Matvec(_) => Counter::ReqMatvec,
@@ -367,6 +383,9 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
         // peer never receives a v2 frame; frame faults (version unknown
         // or unacceptable) reply best-effort at the current version
         let mut started: Option<Instant> = None;
+        // a sampled request's span tree: the root guard stays open until
+        // the reply is on the wire, then the tree goes to the trace ring
+        let mut traced: Option<(Arc<trace::ActiveTrace>, trace::Span)> = None;
         let (version, request_id, mut resp, close_after) =
             match wire::parse_frame_header(&header) {
                 Err(WireFault { code, message }) => {
@@ -401,10 +420,25 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
                         Ok(req) => {
                             let is_shutdown = matches!(req, Request::Shutdown);
                             reg.inc(request_counter(&req));
+                            if let Request::Query { trace: id, query, .. } = &req {
+                                if *id != 0 {
+                                    // the client chose this request: open
+                                    // the server-side root at the frame
+                                    // clock and back-date the decode span
+                                    let t0 = started.unwrap_or_else(Instant::now);
+                                    let active = trace::ActiveTrace::begin_at(*id, t0);
+                                    let mut root = active.span_at(0, "request", t0);
+                                    root.note("op", query.op_name());
+                                    root.note("request_id", h.request_id.to_string());
+                                    active.record(root.id(), "frame_decode", t0, Instant::now());
+                                    traced = Some((active, root));
+                                }
+                            }
+                            let ctx = traced.as_ref().map(|(_, root)| root.ctx());
                             (
                                 h.version,
                                 h.request_id,
-                                answer(shared, &mut handles, req),
+                                answer(shared, &mut handles, req, ctx),
                                 is_shutdown,
                             )
                         }
@@ -436,9 +470,18 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
         if let Some(t0) = started {
             reg.record_duration(Hist::NetRequestUs, t0.elapsed());
         }
+        let reply_t0 = traced.as_ref().map(|_| Instant::now());
         let wrote = wire::write_frame(&mut writer, &frame_bytes).is_ok();
         if wrote {
             reg.add(Counter::NetBytesOut, frame_bytes.len() as u64);
+        }
+        if let Some((active, mut root)) = traced.take() {
+            if let Some(t0) = reply_t0 {
+                active.record(root.id(), "reply_write", t0, Instant::now());
+            }
+            root.note("bytes_out", frame_bytes.len().to_string());
+            root.finish();
+            trace::finish(&active);
         }
         if is_shutdown_ack {
             // trigger only after the acknowledgement is on the wire, so
@@ -487,13 +530,26 @@ fn query_fault(e: Error) -> Response {
     Response::Error { code, message: e.to_string() }
 }
 
-/// Execute one decoded request against the shared state.
-fn answer(shared: &Shared, handles: &mut Vec<Opened>, req: Request) -> Response {
+/// Execute one decoded request against the shared state. `ctx` (present
+/// only for sampled v5 queries) is the server-side root span the queue /
+/// execution spans attach under.
+fn answer(
+    shared: &Shared,
+    handles: &mut Vec<Opened>,
+    req: Request,
+    ctx: Option<SpanCtx>,
+) -> Response {
     match req {
         Request::Ping => Response::Pong,
         // the scrape itself is cheap (a relaxed read sweep) and answered
         // inline, never queued behind query work
         Request::Stats => Response::Stats(obs::global().snapshot()),
+        // likewise inline: the rings hold already-frozen trees
+        Request::TraceDump { id, slowest } => Response::Traces(if id != 0 {
+            trace::dump_by_id(id)
+        } else {
+            trace::dump_slowest(slowest as usize)
+        }),
         Request::Shutdown => {
             // the actual trigger happens in handle_connection *after* the
             // acknowledgement frame is written
@@ -531,7 +587,7 @@ fn answer(shared: &Shared, handles: &mut Vec<Opened>, req: Request) -> Response 
             }
             Err(e) => Response::Error { code: ErrCode::Store, message: e.to_string() },
         },
-        Request::Query { handle, pin, query } => {
+        Request::Query { handle, pin, query, .. } => {
             let Some(opened) = handles.get(handle as usize) else {
                 return bad_handle(handle, handles.len());
             };
@@ -549,7 +605,7 @@ fn answer(shared: &Shared, handles: &mut Vec<Opened>, req: Request) -> Response 
                             ),
                         };
                     }
-                    match svc.server.submit(query).wait() {
+                    match svc.server.submit_traced(query, ctx).wait() {
                         Ok(outcome) => Response::Answer { generation: 0, answer: outcome },
                         Err(e) => query_fault(e),
                     }
@@ -558,7 +614,7 @@ fn answer(shared: &Shared, handles: &mut Vec<Opened>, req: Request) -> Response 
                 // report the generation; wire pin 0 means "latest"
                 Opened::Live { reader, .. } => {
                     let pin_opt = if pin == 0 { None } else { Some(pin) };
-                    match reader.answer_at(pin_opt, &query) {
+                    match reader.answer_at_traced(pin_opt, &query, ctx) {
                         Ok((outcome, generation)) => {
                             Response::Answer { generation, answer: outcome }
                         }
@@ -709,7 +765,11 @@ fn open_service(shared: &Shared, key: &StoreKey) -> Result<Arc<SketchService>> {
         "net: opened {file} ({}x{}, s={}) with {} workers",
         info.m, info.n, info.s, shared.cfg.workers_per_sketch
     );
-    let server = QueryServer::start(sketch, shared.cfg.workers_per_sketch);
+    let server = QueryServer::start_with(
+        sketch,
+        shared.cfg.workers_per_sketch,
+        shared.cfg.split_min_groups,
+    );
     let svc = Arc::new(SketchService { server, info, fingerprint });
 
     let mut services = shared.services.lock().expect("services registry poisoned");

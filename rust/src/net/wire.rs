@@ -9,7 +9,7 @@
 //! | field       | size | contents                                    |
 //! |-------------|------|---------------------------------------------|
 //! | magic       | 4 B  | `"MSKW"`                                    |
-//! | version     | 2 B  | protocol version (currently 4; 1–3 accepted)|
+//! | version     | 2 B  | protocol version (currently 5; 1–4 accepted)|
 //! | opcode      | 1 B  | message kind (below)                        |
 //! | reserved    | 1 B  | 0 (ignored on read)                         |
 //! | request id  | 8 B  | caller-chosen; echoed verbatim in responses |
@@ -18,12 +18,13 @@
 //!
 //! Request opcodes: `0x01` Ping, `0x02` ListSketches, `0x03` OpenSketch,
 //! `0x04` Shutdown (the graceful-stop sentinel), `0x05` Stats (v4+),
-//! `0x10` Matvec, `0x11` MatvecT, `0x12` RowSlice, `0x13` ColSlice,
-//! `0x14` TopK, `0x15` MatvecBatch (v2+), `0x16` GenPoll (v3+).
+//! `0x06` TraceDump (v5+), `0x10` Matvec, `0x11` MatvecT,
+//! `0x12` RowSlice, `0x13` ColSlice, `0x14` TopK,
+//! `0x15` MatvecBatch (v2+), `0x16` GenPoll (v3+).
 //! Response opcodes: `0x81` Pong, `0x82` SketchList,
 //! `0x83` SketchOpened, `0x84` ShuttingDown, `0x90` Vector,
 //! `0x91` Entries, `0x92` Vectors (v2+), `0x93` Generation (v3+),
-//! `0x94` StatsSnapshot (v4+), `0xFF` Error.
+//! `0x94` StatsSnapshot (v4+), `0x95` Traces (v5+), `0xFF` Error.
 //!
 //! ## Versioning
 //!
@@ -39,6 +40,13 @@
 //! histograms) in the snapshot's own versioned encoding
 //! ([`crate::obs::MetricsSnapshot::encode`]), so the snapshot layout
 //! can evolve without another protocol bump.
+//! Version 5 adds **request tracing** ([`crate::obs::trace`]): every
+//! query request payload in a v5 frame carries a `u64` trace id after
+//! its generation pin (0 = untraced; old-version frames decode with
+//! trace 0, so untraced traffic is byte-identical to v4), and the
+//! `TraceDump` / `Traces` pair reads completed span timelines back out
+//! of the server's trace rings in the trace layer's own versioned
+//! encoding ([`crate::obs::trace::encode_traces`]).
 //! Interop works in both directions: the server accepts any version
 //! from [`MIN_WIRE_VERSION`] through [`WIRE_VERSION`] and answers each
 //! request at the version the request arrived in, while clients encode
@@ -72,15 +80,16 @@ use std::io::{self, Read, Write};
 
 use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::error::Error;
-use crate::obs::MetricsSnapshot;
+use crate::obs::trace::{decode_traces, encode_traces};
+use crate::obs::{MetricsSnapshot, TraceRecord};
 use crate::serve::StoreKey;
 use crate::sketch::SketchEntry;
 
 /// Frame magic: "MSKW" (matsketch wire).
 pub const WIRE_MAGIC: [u8; 4] = *b"MSKW";
 
-/// Current protocol version (v4: telemetry scraping).
-pub const WIRE_VERSION: u16 = 4;
+/// Current protocol version (v5: request tracing).
+pub const WIRE_VERSION: u16 = 5;
 
 /// Oldest protocol version still accepted on the wire.
 pub const MIN_WIRE_VERSION: u16 = 1;
@@ -99,6 +108,7 @@ const OP_LIST: u8 = 0x02;
 const OP_OPEN: u8 = 0x03;
 const OP_SHUTDOWN: u8 = 0x04;
 const OP_STATS: u8 = 0x05;
+const OP_TRACE_DUMP: u8 = 0x06;
 const OP_MATVEC: u8 = 0x10;
 const OP_MATVEC_T: u8 = 0x11;
 const OP_ROW: u8 = 0x12;
@@ -117,6 +127,7 @@ const OP_ENTRIES: u8 = 0x91;
 const OP_VECTORS: u8 = 0x92;
 const OP_GENERATION: u8 = 0x93;
 const OP_STATS_SNAPSHOT: u8 = 0x94;
+const OP_TRACES: u8 = 0x95;
 const OP_ERROR: u8 = 0xFF;
 
 /// Typed error codes carried by [`Response::Error`].
@@ -242,6 +253,11 @@ pub enum Request {
         /// nonzero pin forces a v3 frame; old-version frames decode with
         /// pin 0.
         pin: u64,
+        /// Trace id from [`crate::obs::trace::sample`]: 0 = untraced,
+        /// nonzero = the server opens a span tree under this id. A
+        /// nonzero trace forces a v5 frame; old-version frames decode
+        /// with trace 0.
+        trace: u64,
         /// The operation, in the shared [`QueryRequest`] vocabulary.
         query: QueryRequest,
     },
@@ -260,6 +276,15 @@ pub enum Request {
     /// Scrape the server's telemetry registry; answers with
     /// [`Response::Stats`] (v4+).
     Stats,
+    /// Read completed span timelines out of the server's trace rings;
+    /// answers with [`Response::Traces`] (v5+).
+    TraceDump {
+        /// Nonzero: every retained trace with exactly this id.
+        id: u64,
+        /// When `id` is 0: the N slowest retained traces by root
+        /// duration (slow log first).
+        slowest: u32,
+    },
     /// Graceful-shutdown sentinel: the server finishes in-flight work,
     /// acknowledges with [`Response::ShuttingDown`], and stops accepting.
     Shutdown,
@@ -294,6 +319,9 @@ pub enum Response {
     /// A telemetry snapshot of the server's [`crate::obs`] registry
     /// (v4+); travels in the snapshot's own versioned encoding.
     Stats(MetricsSnapshot),
+    /// Completed span timelines from the server's trace rings (v5+);
+    /// travel in the trace layer's own versioned encoding.
+    Traces(Vec<TraceRecord>),
     /// Acknowledges a [`Request::Shutdown`].
     ShuttingDown,
     /// Typed failure; the request id in the frame says which request
@@ -495,6 +523,8 @@ fn get_info(rd: &mut Rd<'_>) -> WireResult<SketchInfo> {
 /// about generations.
 pub fn request_version(req: &Request) -> u16 {
     match req {
+        Request::TraceDump { .. } => 5,
+        Request::Query { trace, .. } if *trace != 0 => 5,
         Request::Stats => 4,
         Request::Query { pin, .. } if *pin != 0 => 3,
         Request::GenPoll { .. } => 3,
@@ -521,6 +551,12 @@ pub fn encode_request_at(request_id: u64, req: &Request, version: u16) -> Vec<u8
         Request::ListSketches => frame(version, OP_LIST, request_id, Vec::new()),
         Request::Shutdown => frame(version, OP_SHUTDOWN, request_id, Vec::new()),
         Request::Stats => frame(version, OP_STATS, request_id, Vec::new()),
+        Request::TraceDump { id, slowest } => {
+            let mut p = Vec::new();
+            put_u64(&mut p, *id);
+            put_u32(&mut p, *slowest);
+            frame(version, OP_TRACE_DUMP, request_id, p)
+        }
         Request::OpenSketch(key) => {
             let mut p = Vec::new();
             put_str(&mut p, &key.dataset);
@@ -537,11 +573,14 @@ pub fn encode_request_at(request_id: u64, req: &Request, version: u16) -> Vec<u8
             put_u32(&mut p, *timeout_ms);
             frame(version, OP_GEN_POLL, request_id, p)
         }
-        Request::Query { handle, pin, query } => {
+        Request::Query { handle, pin, trace, query } => {
             let mut p = Vec::new();
             put_u32(&mut p, *handle);
             if version >= 3 {
                 put_u64(&mut p, *pin);
+            }
+            if version >= 5 {
+                put_u64(&mut p, *trace);
             }
             let opcode = match query {
                 QueryRequest::Matvec(x) => {
@@ -634,6 +673,7 @@ pub fn encode_response_v(version: u16, request_id: u64, resp: &Response) -> Vec<
             frame(version, OP_GENERATION, request_id, p)
         }
         Response::Stats(snap) => frame(version, OP_STATS_SNAPSHOT, request_id, snap.encode()),
+        Response::Traces(traces) => frame(version, OP_TRACES, request_id, encode_traces(traces)),
         Response::Error { code, message } => {
             let mut p = Vec::new();
             put_u16(&mut p, code.as_u16());
@@ -723,6 +763,11 @@ pub fn decode_request(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Re
         OP_LIST => Request::ListSketches,
         OP_SHUTDOWN => Request::Shutdown,
         OP_STATS if version >= 4 => Request::Stats,
+        OP_TRACE_DUMP if version >= 5 => {
+            let id = rd.u64()?;
+            let slowest = rd.u32()?;
+            Request::TraceDump { id, slowest }
+        }
         OP_OPEN => {
             let dataset = rd.str()?;
             let method = rd.str()?;
@@ -736,41 +781,45 @@ pub fn decode_request(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Re
         OP_MATVEC | OP_MATVEC_T => {
             let handle = rd.u32()?;
             let pin = if version >= 3 { rd.u64()? } else { 0 };
+            let trace = if version >= 5 { rd.u64()? } else { 0 };
             let x = rd.vec_f64()?;
             let query = if opcode == OP_MATVEC {
                 QueryRequest::Matvec(x)
             } else {
                 QueryRequest::MatvecT(x)
             };
-            Request::Query { handle, pin, query }
+            Request::Query { handle, pin, trace, query }
         }
         OP_MATVEC_BATCH if version >= 2 => {
             let handle = rd.u32()?;
             let pin = if version >= 3 { rd.u64()? } else { 0 };
+            let trace = if version >= 5 { rd.u64()? } else { 0 };
             // each batched vector carries at least its own 4-byte length
             let count = rd.count(4)?;
             let mut xs = Vec::with_capacity(count);
             for _ in 0..count {
                 xs.push(rd.vec_f64()?);
             }
-            Request::Query { handle, pin, query: QueryRequest::MatvecBatch(xs) }
+            Request::Query { handle, pin, trace, query: QueryRequest::MatvecBatch(xs) }
         }
         OP_ROW | OP_COL => {
             let handle = rd.u32()?;
             let pin = if version >= 3 { rd.u64()? } else { 0 };
+            let trace = if version >= 5 { rd.u64()? } else { 0 };
             let index = rd.u32()?;
             let query = if opcode == OP_ROW {
                 QueryRequest::Row(index)
             } else {
                 QueryRequest::Col(index)
             };
-            Request::Query { handle, pin, query }
+            Request::Query { handle, pin, trace, query }
         }
         OP_TOP_K => {
             let handle = rd.u32()?;
             let pin = if version >= 3 { rd.u64()? } else { 0 };
+            let trace = if version >= 5 { rd.u64()? } else { 0 };
             let k = rd.u64()?;
-            Request::Query { handle, pin, query: QueryRequest::TopK(k as usize) }
+            Request::Query { handle, pin, trace, query: QueryRequest::TopK(k as usize) }
         }
         OP_GEN_POLL if version >= 3 => {
             let handle = rd.u32()?;
@@ -785,6 +834,8 @@ pub fn decode_request(version: u16, opcode: u8, payload: &[u8]) -> WireResult<Re
                 " (GenPoll needs protocol v3)"
             } else if other == OP_STATS {
                 " (Stats needs protocol v4)"
+            } else if other == OP_TRACE_DUMP {
+                " (TraceDump needs protocol v5)"
             } else {
                 ""
             };
@@ -859,6 +910,13 @@ pub fn decode_response(version: u16, opcode: u8, payload: &[u8]) -> WireResult<R
             })?;
             Response::Stats(snap)
         }
+        OP_TRACES if version >= 5 => {
+            let bytes = rd.take(rd.remaining())?;
+            let traces = decode_traces(bytes).map_err(|e| {
+                WireFault::new(ErrCode::Malformed, format!("bad trace dump: {e}"))
+            })?;
+            Response::Traces(traces)
+        }
         OP_ERROR => {
             let code = ErrCode::from_u16(rd.u16()?);
             let message = rd.str()?;
@@ -869,6 +927,8 @@ pub fn decode_response(version: u16, opcode: u8, payload: &[u8]) -> WireResult<R
                 " (Generation needs protocol v3)"
             } else if other == OP_STATS_SNAPSHOT {
                 " (StatsSnapshot needs protocol v4)"
+            } else if other == OP_TRACES {
+                " (Traces needs protocol v5)"
             } else {
                 ""
             };
@@ -933,16 +993,19 @@ mod tests {
             Request::Query {
                 handle: 5,
                 pin: 0,
+                trace: 0,
                 query: QueryRequest::Matvec(vec![1.5, -2.25, f64::MIN]),
             },
             Request::Query {
                 handle: 6,
                 pin: 0,
+                trace: 0,
                 query: QueryRequest::MatvecT(vec![0.0, 3.75]),
             },
             Request::Query {
                 handle: 10,
                 pin: 0,
+                trace: 0,
                 query: QueryRequest::MatvecBatch(vec![
                     vec![1.0, 2.0],
                     vec![-0.5, 0.25],
@@ -952,26 +1015,39 @@ mod tests {
             Request::Query {
                 handle: 11,
                 pin: 0,
+                trace: 0,
                 query: QueryRequest::MatvecBatch(Vec::new()),
             },
-            Request::Query { handle: 7, pin: 0, query: QueryRequest::Row(11) },
-            Request::Query { handle: 8, pin: 0, query: QueryRequest::Col(0) },
-            Request::Query { handle: 9, pin: 0, query: QueryRequest::TopK(1_000) },
+            Request::Query { handle: 7, pin: 0, trace: 0, query: QueryRequest::Row(11) },
+            Request::Query { handle: 8, pin: 0, trace: 0, query: QueryRequest::Col(0) },
+            Request::Query { handle: 9, pin: 0, trace: 0, query: QueryRequest::TopK(1_000) },
             // pinned queries ride v3 frames and keep the pin
             Request::Query {
                 handle: 5,
                 pin: 42,
+                trace: 0,
                 query: QueryRequest::Matvec(vec![0.5]),
             },
             Request::Query {
                 handle: 10,
                 pin: 7,
+                trace: 0,
                 query: QueryRequest::MatvecBatch(vec![vec![1.0]]),
             },
-            Request::Query { handle: 7, pin: 1, query: QueryRequest::Row(3) },
-            Request::Query { handle: 9, pin: u64::MAX, query: QueryRequest::TopK(4) },
+            Request::Query { handle: 7, pin: 1, trace: 0, query: QueryRequest::Row(3) },
+            Request::Query { handle: 9, pin: u64::MAX, trace: 0, query: QueryRequest::TopK(4) },
+            // traced queries ride v5 frames and keep the trace id
+            Request::Query {
+                handle: 5,
+                pin: 0,
+                trace: 0xDEAD_BEEF,
+                query: QueryRequest::Matvec(vec![2.5]),
+            },
+            Request::Query { handle: 7, pin: 3, trace: u64::MAX, query: QueryRequest::Row(1) },
             Request::GenPoll { handle: 2, min_gen: 9, timeout_ms: 250 },
             Request::Stats,
+            Request::TraceDump { id: 0, slowest: 10 },
+            Request::TraceDump { id: 0xFACE, slowest: 0 },
         ];
         for req in &cases {
             assert_eq!(roundtrip_request(req), *req);
@@ -1008,6 +1084,28 @@ mod tests {
                 hists: vec![("exec_matvec_us".into(), vec![0, 1, 5, 2])],
             }),
             Response::Stats(MetricsSnapshot::default()),
+            Response::Traces(vec![crate::obs::TraceRecord {
+                trace: 0xABCD,
+                spans: vec![
+                    crate::obs::SpanRecord {
+                        id: 1,
+                        parent: 0,
+                        name: "request".into(),
+                        start_us: 0,
+                        end_us: 900,
+                        notes: vec![("op".into(), "matvec".into())],
+                    },
+                    crate::obs::SpanRecord {
+                        id: 2,
+                        parent: 1,
+                        name: "queue_wait".into(),
+                        start_us: 3,
+                        end_us: 40,
+                        notes: Vec::new(),
+                    },
+                ],
+            }]),
+            Response::Traces(Vec::new()),
             Response::Error { code: ErrCode::BadHandle, message: "no handle 4".into() },
             Response::Error { code: ErrCode::Generation, message: "gen 9 retired".into() },
         ];
@@ -1084,6 +1182,7 @@ mod tests {
         let batch = Request::Query {
             handle: 1,
             pin: 0,
+            trace: 0,
             query: QueryRequest::MatvecBatch(vec![vec![1.0]]),
         };
         let bytes = encode_request(4, &batch);
@@ -1107,11 +1206,12 @@ mod tests {
     fn v2_frames_stay_decodable_and_gate_v3_opcodes() {
         // an unpinned query never pays the v3 tax: it still encodes at
         // the old minimum its operation needs
-        let unpinned = Request::Query { handle: 2, pin: 0, query: QueryRequest::Row(4) };
+        let unpinned = Request::Query { handle: 2, pin: 0, trace: 0, query: QueryRequest::Row(4) };
         assert_eq!(request_version(&unpinned), 1);
         let unpinned_batch = Request::Query {
             handle: 2,
             pin: 0,
+            trace: 0,
             query: QueryRequest::MatvecBatch(vec![vec![1.0]]),
         };
         assert_eq!(request_version(&unpinned_batch), 2);
@@ -1131,7 +1231,7 @@ mod tests {
         assert_eq!(u16::from_be_bytes([floored[4], floored[5]]), 2);
 
         // a pin forces v3, and the pin survives the round trip
-        let pinned = Request::Query { handle: 2, pin: 6, query: QueryRequest::Row(4) };
+        let pinned = Request::Query { handle: 2, pin: 6, trace: 0, query: QueryRequest::Row(4) };
         assert_eq!(request_version(&pinned), 3);
         let bytes = encode_request(5, &pinned);
         let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
@@ -1191,7 +1291,7 @@ mod tests {
         // everything v3 and below never pays the v4 tax: old operations
         // keep their old minimum versions
         assert_eq!(request_version(&Request::Ping), 1);
-        let pinned = Request::Query { handle: 1, pin: 3, query: QueryRequest::Row(0) };
+        let pinned = Request::Query { handle: 1, pin: 3, trace: 0, query: QueryRequest::Row(0) };
         assert_eq!(request_version(&pinned), 3);
         // ... while Stats rides a v4 frame
         assert_eq!(request_version(&Request::Stats), 4);
@@ -1244,10 +1344,94 @@ mod tests {
     }
 
     #[test]
+    fn v4_frames_stay_decodable_and_gate_v5_opcodes() {
+        // everything v4 and below never pays the v5 tax: untraced
+        // operations keep their old minimum versions
+        let untraced = Request::Query { handle: 1, pin: 0, trace: 0, query: QueryRequest::Row(0) };
+        assert_eq!(request_version(&untraced), 1);
+        let pinned = Request::Query { handle: 1, pin: 3, trace: 0, query: QueryRequest::Row(0) };
+        assert_eq!(request_version(&pinned), 3);
+        assert_eq!(request_version(&Request::Stats), 4);
+        // ... while a trace id or a TraceDump forces a v5 frame
+        let traced = Request::Query { handle: 1, pin: 0, trace: 9, query: QueryRequest::Row(0) };
+        assert_eq!(request_version(&traced), 5);
+        assert_eq!(request_version(&Request::TraceDump { id: 0, slowest: 5 }), 5);
+
+        // asking for v4 cannot drop a live trace id on the floor: the
+        // operation's v5 floor wins over the requested version
+        let v4_traced = encode_request_at(1, &traced, 4);
+        let v4_untraced = encode_request_at(1, &untraced, 4);
+        assert_eq!(h_version(&v4_traced), 5, "the v5 floor wins over the requested v4");
+        assert_eq!(h_version(&v4_untraced), 4);
+        let v5_untraced = encode_request_at(1, &untraced, 5);
+        assert_eq!(
+            v4_untraced[FRAME_HEADER_LEN..].len() + 8,
+            v5_untraced[FRAME_HEADER_LEN..].len(),
+            "v5 adds exactly the 8-byte trace id"
+        );
+        // ... and a v4-decoded v5-shaped payload is impossible to confuse:
+        // decoding the untraced query at its own version round-trips
+        let h = parse_frame_header(&v5_untraced[..FRAME_HEADER_LEN].try_into().unwrap()).unwrap();
+        assert_eq!(
+            decode_request(h.version, h.opcode, &v5_untraced[FRAME_HEADER_LEN..]).unwrap(),
+            untraced
+        );
+
+        // the v5-only TraceDump opcode inside a v4-marked frame is
+        // rejected with a version hint
+        let dump = Request::TraceDump { id: 7, slowest: 0 };
+        let bytes = encode_request(21, &dump);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.version, 5);
+        let fault = decode_request(4, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::UnknownOpcode);
+        assert!(fault.message.contains("v5"), "{}", fault.message);
+        // the same payload under v5 decodes fine
+        assert_eq!(
+            decode_request(5, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
+            dump
+        );
+
+        // a v4 peer that somehow receives the Traces opcode rejects it
+        // instead of misreading the payload
+        let traces = vec![crate::obs::TraceRecord { trace: 3, spans: Vec::new() }];
+        let resp_bytes = encode_response_v(5, 22, &Response::Traces(traces.clone()));
+        let fault =
+            decode_response(4, resp_bytes[6], &resp_bytes[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::UnknownOpcode);
+        assert!(fault.message.contains("v5"), "{}", fault.message);
+        match decode_response(5, resp_bytes[6], &resp_bytes[FRAME_HEADER_LEN..]).unwrap() {
+            Response::Traces(back) => assert_eq!(back, traces),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // a corrupt trace payload is a typed Malformed fault
+        let fault = decode_response(5, OP_TRACES, &[0x00]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // a traced query round-trips at exactly v5 with both pin and
+        // trace intact
+        let both = Request::Query { handle: 2, pin: 4, trace: 11, query: QueryRequest::Col(1) };
+        let bytes = encode_request(23, &both);
+        let header: [u8; FRAME_HEADER_LEN] = bytes[..FRAME_HEADER_LEN].try_into().unwrap();
+        let h = parse_frame_header(&header).unwrap();
+        assert_eq!(h.version, 5);
+        assert_eq!(
+            decode_request(h.version, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
+            both
+        );
+    }
+
+    fn h_version(frame: &[u8]) -> u16 {
+        u16::from_be_bytes([frame[4], frame[5]])
+    }
+
+    #[test]
     fn payload_faults_are_typed() {
         // trailing bytes (unpinned Row rides a v1 frame; decode at that
         // version so the fault is the trailing byte, not a missing pin)
-        let req = Request::Query { handle: 1, pin: 0, query: QueryRequest::Row(2) };
+        let req = Request::Query { handle: 1, pin: 0, trace: 0, query: QueryRequest::Row(2) };
         let mut bytes = encode_request(1, &req);
         bytes.push(0xAA);
         let v = request_version(&req);
@@ -1261,7 +1445,8 @@ mod tests {
         // count that can't fit the payload (giant vector claim)
         let mut p = Vec::new();
         put_u32(&mut p, 1); // handle
-        put_u64(&mut p, 0); // pin (v3 frames carry it)
+        put_u64(&mut p, 0); // pin (v3+ frames carry it)
+        put_u64(&mut p, 0); // trace (v5 frames carry it)
         put_u32(&mut p, u32::MAX); // claimed element count
         let fault = decode_request(WIRE_VERSION, OP_MATVEC, &p).unwrap_err();
         assert_eq!(fault.code, ErrCode::Malformed);
@@ -1270,6 +1455,7 @@ mod tests {
         let mut p = Vec::new();
         put_u32(&mut p, 1); // handle
         put_u64(&mut p, 0); // pin
+        put_u64(&mut p, 0); // trace
         put_u32(&mut p, 1_000_000); // claimed batch of a million vectors
         let fault = decode_request(WIRE_VERSION, OP_MATVEC_BATCH, &p).unwrap_err();
         assert_eq!(fault.code, ErrCode::Malformed);
@@ -1278,6 +1464,7 @@ mod tests {
         let mut p = Vec::new();
         put_u32(&mut p, 1); // handle
         put_u64(&mut p, 0); // pin
+        put_u64(&mut p, 0); // trace
         put_u32(&mut p, 1); // one vector
         put_u32(&mut p, 500); // ... claiming 500 f64s with none present
         let fault = decode_request(WIRE_VERSION, OP_MATVEC_BATCH, &p).unwrap_err();

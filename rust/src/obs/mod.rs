@@ -22,6 +22,13 @@
 //!   `serve::live` (publish duration, generation, freshness lag,
 //!   retained-pin hits).
 //!
+//! Beside the aggregate registry, [`trace`] adds request-scoped span
+//! timelines: a sampled query carries a wire-propagated trace id
+//! (protocol v5) and every serving stage — frame decode, queue wait,
+//! split windows, reduction, reply write — records a span; completed
+//! traces retire into bounded rings with a slow-query log, read back via
+//! the `TraceDump` opcode / `matsketch trace`.
+//!
 //! Scrape it three ways: the `Stats` wire opcode
 //! ([`crate::net::Request::Stats`]), the `matsketch stats --addr` CLI,
 //! or [`crate::eval::report::server_metrics_table`] which renders a
@@ -35,8 +42,10 @@
 
 pub mod registry;
 pub mod snapshot;
+pub mod trace;
 
 pub use registry::{
     global, hist_bucket, hist_bucket_bounds, Counter, Gauge, Hist, MetricsRegistry, HIST_BUCKETS,
 };
 pub use snapshot::{MetricsSnapshot, SNAPSHOT_VERSION};
+pub use trace::{SpanCtx, SpanRecord, TraceRecord, TRACE_VERSION};

@@ -94,6 +94,12 @@ metric_ids! {
         ReqGenPoll => "req_gen_poll",
         /// `Stats` requests served.
         ReqStats => "req_stats",
+        /// `TraceDump` requests served.
+        ReqTraceDump => "req_trace_dump",
+        /// Process uptime in µs, materialized at snapshot time. Kept as
+        /// a counter (not a gauge) so a scrape-to-scrape `diff` yields
+        /// the interval length — the denominator of derived rates.
+        UptimeUs => "uptime_us",
         /// Wire bytes read (headers + payloads).
         NetBytesIn => "net_bytes_in",
         /// Wire bytes written (headers + payloads).
@@ -148,6 +154,9 @@ metric_ids! {
     Gauge {
         /// Currently open TCP connections.
         NetConnections => "net_connections",
+        /// Process start time as Unix milliseconds (set once at registry
+        /// creation; 0 only if the system clock predates the epoch).
+        ProcessStartMs => "process_start_unix_ms",
         /// Latest published live generation.
         LiveGeneration => "live_generation",
     }
@@ -190,6 +199,9 @@ metric_ids! {
 /// recording threads are quiescent, and monotone under concurrency.
 pub struct MetricsRegistry {
     enabled: AtomicBool,
+    /// Registry creation instant: the origin of the `uptime_us` counter
+    /// materialized at snapshot time (immutable — `reset` keeps it).
+    started: std::time::Instant,
     counters: Vec<AtomicU64>,
     gauges: Vec<AtomicU64>,
     hists: Vec<[AtomicU64; HIST_BUCKETS]>,
@@ -203,14 +215,20 @@ impl MetricsRegistry {
     /// A fresh, enabled registry (tests and benches; servers use
     /// [`global()`]).
     pub fn new() -> Self {
-        Self {
+        let r = Self {
             enabled: AtomicBool::new(true),
+            started: std::time::Instant::now(),
             counters: zeroed(Counter::COUNT),
             gauges: zeroed(Gauge::COUNT),
             hists: (0..Hist::COUNT)
                 .map(|_| std::array::from_fn(|_| AtomicU64::new(0)))
                 .collect(),
-        }
+        };
+        let start_ms = std::time::SystemTime::now()
+            .duration_since(std::time::UNIX_EPOCH)
+            .map_or(0, |d| d.as_millis().min(u64::MAX as u128) as u64);
+        r.gauge_set(Gauge::ProcessStartMs, start_ms);
+        r
     }
 
     /// A registry that drops every event — the no-op baseline for the
@@ -283,7 +301,13 @@ impl MetricsRegistry {
     pub fn snapshot(&self) -> MetricsSnapshot {
         let mut snap = MetricsSnapshot::default();
         for &c in Counter::ALL {
-            let v = self.counters[c as usize].load(Ordering::Relaxed);
+            let v = if c == Counter::UptimeUs {
+                // materialized on read: monotone like every counter, so
+                // the scrape-to-scrape diff is the interval length
+                self.started.elapsed().as_micros().min(u64::MAX as u128) as u64
+            } else {
+                self.counters[c as usize].load(Ordering::Relaxed)
+            };
             snap.counters.push((c.name().to_string(), v));
         }
         for &g in Gauge::ALL {
@@ -400,6 +424,22 @@ mod tests {
         assert_eq!(snap.counter("req_ping"), 0);
         assert_eq!(snap.hist_count("net_request_us"), 0);
         assert_eq!(snap.gauge("live_generation"), 0);
+    }
+
+    #[test]
+    fn uptime_and_start_time_materialize_in_snapshots() {
+        let reg = MetricsRegistry::new();
+        assert!(reg.snapshot().gauge("process_start_unix_ms") > 0);
+        std::thread::sleep(Duration::from_millis(2));
+        let a = reg.snapshot();
+        assert!(a.counter("uptime_us") >= 2_000, "{}", a.counter("uptime_us"));
+        std::thread::sleep(Duration::from_millis(2));
+        let b = reg.snapshot();
+        assert!(b.counter("uptime_us") > a.counter("uptime_us"), "uptime is monotone");
+        // a scrape-to-scrape diff carries the interval, not the total
+        let d = b.diff(&a);
+        assert!(d.counter("uptime_us") < a.counter("uptime_us") + b.counter("uptime_us"));
+        assert!(d.counter("uptime_us") >= 2_000);
     }
 
     #[test]

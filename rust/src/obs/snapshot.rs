@@ -58,12 +58,13 @@ impl MetricsSnapshot {
     /// Quantile of a histogram (`q ∈ [0, 1]`), linearly interpolated
     /// inside the winning log₂ bucket via
     /// [`crate::util::stats::histogram_quantile`]. 0 for an empty or
-    /// absent histogram.
+    /// absent histogram (the quantile itself is `None` there — this
+    /// table-facing wrapper flattens that to 0).
     pub fn hist_quantile(&self, name: &str, q: f64) -> f64 {
         let Some(buckets) = self.hist(name) else { return 0.0 };
         let edges: Vec<(f64, f64)> =
             (0..buckets.len().min(HIST_BUCKETS)).map(hist_bucket_bounds).collect();
-        histogram_quantile(&buckets[..edges.len()], &edges, q)
+        histogram_quantile(&buckets[..edges.len()], &edges, q).unwrap_or(0.0)
     }
 
     /// True when no counter, gauge, or bucket is non-zero.

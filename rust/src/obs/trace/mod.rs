@@ -1,0 +1,802 @@
+//! Request-scoped tracing: span timelines beside the metrics registry.
+//!
+//! The metrics registry ([`super::registry`]) answers "how is the server
+//! doing on aggregate"; this module answers "where did *this* query spend
+//! its time" — client send, frame decode, queue wait, each row-parallel
+//! split window, the in-order reduction, the reply write — as one span
+//! tree per sampled request. Like the registry it is std-only and gated
+//! on a global enable flag, with a sampling knob
+//! ([`set_trace_one_in_n`]) so production-rate traffic traces a subset.
+//!
+//! ## Span model
+//!
+//! A **trace** is identified by a nonzero `u64` generated at the request
+//! origin ([`sample`]) and carried across the wire on protocol-v5 query
+//! frames ([`crate::net::wire`]), so the client-side and server-side
+//! views of one request share an id. Within a trace, **spans** are
+//! `(id, parent, name, start_us, end_us, key=value notes)` records with
+//! microsecond offsets from the trace's monotonic origin instant —
+//! wall-clock free, so a span tree is meaningful even when the clock
+//! steps. Span id 0 is reserved ("no parent"); the root span has
+//! `parent == 0`.
+//!
+//! Recording happens into an [`ActiveTrace`] (an `Arc` shared across the
+//! worker threads a request fans out over); [`finish`] freezes it into a
+//! plain-data [`TraceRecord`] and retires it into the global collector:
+//! a fixed-capacity ring of recent traces plus a slow-query ring that
+//! retains (and warn-logs, via [`crate::util::logging`]) any trace whose
+//! root span exceeded [`slow_us`]. The `TraceDump` wire opcode and
+//! `matsketch trace` read the rings back; [`render`] draws the indented
+//! timelines.
+
+use std::collections::VecDeque;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Instant;
+
+use crate::error::{Error, Result};
+use crate::warn_log;
+
+/// Version tag of the [`encode_traces`] byte layout (carried inside the
+/// payload, so the trace format can evolve without a wire-protocol bump).
+pub const TRACE_VERSION: u16 = 1;
+
+/// Completed traces retained in the recent ring.
+pub const TRACE_RING_CAP: usize = 256;
+
+/// Slow traces retained verbatim past recent-ring eviction.
+pub const SLOW_RING_CAP: usize = 64;
+
+/// One recorded span: a named `[start_us, end_us)` interval (offsets
+/// from the trace origin) with a parent link and key=value annotations.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct SpanRecord {
+    /// Span id, unique within the trace (≥ 1).
+    pub id: u32,
+    /// Parent span id; 0 marks the root.
+    pub parent: u32,
+    /// Stage name (`"request"`, `"queue_wait"`, `"split_window"`, …).
+    pub name: String,
+    /// Start offset from the trace origin, µs.
+    pub start_us: u64,
+    /// End offset from the trace origin, µs.
+    pub end_us: u64,
+    /// Free-form `key=value` annotations (op kind, window index, …).
+    pub notes: Vec<(String, String)>,
+}
+
+impl SpanRecord {
+    /// Span duration, µs.
+    pub fn duration_us(&self) -> u64 {
+        self.end_us.saturating_sub(self.start_us)
+    }
+}
+
+/// One completed trace: its id plus every span recorded under it.
+#[derive(Clone, Debug, PartialEq, Eq, Default)]
+pub struct TraceRecord {
+    /// The wire-propagated trace id (nonzero).
+    pub trace: u64,
+    /// Spans in recording order.
+    pub spans: Vec<SpanRecord>,
+}
+
+impl TraceRecord {
+    /// The root span (`parent == 0`), if one was recorded.
+    pub fn root(&self) -> Option<&SpanRecord> {
+        self.spans.iter().find(|s| s.parent == 0)
+    }
+
+    /// Root duration in µs (0 when no root span exists).
+    pub fn root_duration_us(&self) -> u64 {
+        self.root().map_or(0, SpanRecord::duration_us)
+    }
+
+    /// Direct children of `parent`, by start offset.
+    pub fn children(&self, parent: u32) -> Vec<&SpanRecord> {
+        let mut out: Vec<&SpanRecord> =
+            self.spans.iter().filter(|s| s.parent == parent && s.id != parent).collect();
+        out.sort_by_key(|s| (s.start_us, s.id));
+        out
+    }
+}
+
+/// A trace being recorded: shared (`Arc`) across every thread one
+/// request touches. Span offsets are measured from `t0`, the monotonic
+/// origin fixed at [`ActiveTrace::begin_at`].
+pub struct ActiveTrace {
+    trace: u64,
+    t0: Instant,
+    next: AtomicU32,
+    spans: Mutex<Vec<SpanRecord>>,
+}
+
+impl ActiveTrace {
+    /// Open a trace with origin "now".
+    pub fn begin(trace: u64) -> Arc<ActiveTrace> {
+        Self::begin_at(trace, Instant::now())
+    }
+
+    /// Open a trace with an explicit origin instant (the server uses the
+    /// frame-header read instant so the root span covers the whole
+    /// request, not just the part after decode).
+    pub fn begin_at(trace: u64, t0: Instant) -> Arc<ActiveTrace> {
+        Arc::new(ActiveTrace {
+            trace,
+            t0,
+            next: AtomicU32::new(0),
+            spans: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The trace id.
+    pub fn trace(&self) -> u64 {
+        self.trace
+    }
+
+    /// The monotonic origin every span offset is measured from.
+    pub fn origin(&self) -> Instant {
+        self.t0
+    }
+
+    fn offset_us(&self, t: Instant) -> u64 {
+        t.saturating_duration_since(self.t0).as_micros().min(u64::MAX as u128) as u64
+    }
+
+    fn next_id(&self) -> u32 {
+        self.next.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Start a live span under `parent` (0 = root), clocked from "now".
+    pub fn span(self: &Arc<Self>, parent: u32, name: &str) -> Span {
+        self.span_at(parent, name, Instant::now())
+    }
+
+    /// Start a live span with an explicit start instant.
+    pub fn span_at(self: &Arc<Self>, parent: u32, name: &str, start: Instant) -> Span {
+        Span {
+            trace: Arc::clone(self),
+            id: self.next_id(),
+            parent,
+            name: name.to_string(),
+            start,
+            notes: Vec::new(),
+        }
+    }
+
+    /// Record a completed interval retroactively (e.g. queue wait, known
+    /// only once a worker dequeues). Returns the new span's id.
+    pub fn record(&self, parent: u32, name: &str, start: Instant, end: Instant) -> u32 {
+        self.record_with(parent, name, start, end, Vec::new())
+    }
+
+    /// [`ActiveTrace::record`] with annotations.
+    pub fn record_with(
+        &self,
+        parent: u32,
+        name: &str,
+        start: Instant,
+        end: Instant,
+        notes: Vec<(String, String)>,
+    ) -> u32 {
+        let id = self.next_id();
+        let rec = SpanRecord {
+            id,
+            parent,
+            name: name.to_string(),
+            start_us: self.offset_us(start),
+            end_us: self.offset_us(end),
+            notes,
+        };
+        if let Ok(mut spans) = self.spans.lock() {
+            spans.push(rec);
+        }
+        id
+    }
+
+    /// Freeze the spans recorded so far into a plain-data record. Spans
+    /// still open (unfinished [`Span`] guards) are not included.
+    fn freeze(&self) -> TraceRecord {
+        let spans = self.spans.lock().map(|mut s| std::mem::take(&mut *s)).unwrap_or_default();
+        TraceRecord { trace: self.trace, spans }
+    }
+}
+
+/// A live span guard: records its interval into the owning
+/// [`ActiveTrace`] when finished (or dropped).
+pub struct Span {
+    trace: Arc<ActiveTrace>,
+    id: u32,
+    parent: u32,
+    name: String,
+    start: Instant,
+    notes: Vec<(String, String)>,
+}
+
+impl Span {
+    /// This span's id (the parent id for spans nested under it).
+    pub fn id(&self) -> u32 {
+        self.id
+    }
+
+    /// Attach a `key=value` annotation.
+    pub fn note(&mut self, key: &str, value: impl Into<String>) {
+        self.notes.push((key.to_string(), value.into()));
+    }
+
+    /// A propagation context whose children nest under this span.
+    pub fn ctx(&self) -> SpanCtx {
+        SpanCtx { trace: Arc::clone(&self.trace), parent: self.id }
+    }
+
+    /// End the span now (recording happens in `Drop`, so an early return
+    /// still closes it; `finish` just makes the end explicit).
+    pub fn finish(self) {}
+}
+
+impl Drop for Span {
+    fn drop(&mut self) {
+        let rec = SpanRecord {
+            id: self.id,
+            parent: self.parent,
+            name: std::mem::take(&mut self.name),
+            start_us: self.trace.offset_us(self.start),
+            end_us: self.trace.offset_us(Instant::now()),
+            notes: std::mem::take(&mut self.notes),
+        };
+        if let Ok(mut spans) = self.trace.spans.lock() {
+            spans.push(rec);
+        }
+    }
+}
+
+/// The propagation context threaded through queue tasks and backends: the
+/// shared trace plus the span id new children nest under.
+#[derive(Clone)]
+pub struct SpanCtx {
+    /// The trace being recorded.
+    pub trace: Arc<ActiveTrace>,
+    /// Parent span id for spans opened through this context.
+    pub parent: u32,
+}
+
+impl SpanCtx {
+    /// Open a child span.
+    pub fn span(&self, name: &str) -> Span {
+        self.trace.span(self.parent, name)
+    }
+
+    /// Record a completed child interval retroactively.
+    pub fn record(&self, name: &str, start: Instant, end: Instant) -> u32 {
+        self.trace.record(self.parent, name, start, end)
+    }
+}
+
+/// The process-global retention side: sampling state plus the completed
+/// and slow-trace rings. Servers use [`global()`]; tests can own one.
+pub struct TraceCollector {
+    enabled: AtomicBool,
+    one_in_n: AtomicU64,
+    slow_us: AtomicU64,
+    tick: AtomicU64,
+    next_trace: AtomicU64,
+    ring: Mutex<VecDeque<TraceRecord>>,
+    slow: Mutex<VecDeque<TraceRecord>>,
+}
+
+impl TraceCollector {
+    /// A fresh collector: enabled, sampling 1-in-64, 100 ms slow bar.
+    pub fn new() -> TraceCollector {
+        TraceCollector {
+            enabled: AtomicBool::new(true),
+            one_in_n: AtomicU64::new(64),
+            slow_us: AtomicU64::new(100_000),
+            tick: AtomicU64::new(0),
+            next_trace: AtomicU64::new(0),
+            ring: Mutex::new(VecDeque::new()),
+            slow: Mutex::new(VecDeque::new()),
+        }
+    }
+
+    /// Whether traces are being sampled at all.
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.enabled.load(Ordering::Relaxed)
+    }
+
+    /// Turn tracing on or off (the overhead bench's baseline).
+    pub fn set_enabled(&self, on: bool) {
+        self.enabled.store(on, Ordering::Relaxed);
+    }
+
+    /// Current sampling rate: one trace per `n` sampled requests.
+    pub fn one_in_n(&self) -> u64 {
+        self.one_in_n.load(Ordering::Relaxed)
+    }
+
+    /// Sample one request in `n` (clamped ≥ 1; 1 traces everything).
+    pub fn set_one_in_n(&self, n: u64) {
+        self.one_in_n.store(n.max(1), Ordering::Relaxed);
+    }
+
+    /// Slow-query threshold in µs applied to the root span (0 disables
+    /// the slow log).
+    pub fn slow_us(&self) -> u64 {
+        self.slow_us.load(Ordering::Relaxed)
+    }
+
+    /// Set the slow-query threshold.
+    pub fn set_slow_us(&self, v: u64) {
+        self.slow_us.store(v, Ordering::Relaxed);
+    }
+
+    /// Origin-side sampling decision: a fresh nonzero trace id for one in
+    /// [`one_in_n`](Self::one_in_n) calls while enabled, 0 otherwise.
+    /// The fast path is one relaxed load (disabled) or two relaxed RMWs.
+    #[inline]
+    pub fn sample(&self) -> u64 {
+        if !self.enabled() {
+            return 0;
+        }
+        let n = self.one_in_n();
+        if n > 1 && self.tick.fetch_add(1, Ordering::Relaxed) % n != 0 {
+            return 0;
+        }
+        self.next_trace.fetch_add(1, Ordering::Relaxed) + 1
+    }
+
+    /// Retire a trace: freeze its spans, append to the recent ring, and
+    /// when the root exceeded [`slow_us`](Self::slow_us) retain a copy in
+    /// the slow ring and log it at warn.
+    pub fn finish(&self, active: &ActiveTrace) {
+        let rec = active.freeze();
+        if rec.spans.is_empty() {
+            return;
+        }
+        let slow_bar = self.slow_us();
+        let dur = rec.root_duration_us();
+        if slow_bar > 0 && dur >= slow_bar {
+            let root = rec.root().map(|r| r.name.clone()).unwrap_or_default();
+            warn_log!(
+                "slow query: trace {:016x} root {root:?} took {dur} µs (bar {slow_bar} µs, \
+                 {} spans)",
+                rec.trace,
+                rec.spans.len()
+            );
+            if let Ok(mut slow) = self.slow.lock() {
+                slow.push_back(rec.clone());
+                while slow.len() > SLOW_RING_CAP {
+                    slow.pop_front();
+                }
+            }
+        }
+        if let Ok(mut ring) = self.ring.lock() {
+            ring.push_back(rec);
+            while ring.len() > TRACE_RING_CAP {
+                ring.pop_front();
+            }
+        }
+    }
+
+    /// The `n` retained traces with the longest root spans (slow ring
+    /// first, deduplicated), longest first.
+    pub fn dump_slowest(&self, n: usize) -> Vec<TraceRecord> {
+        let mut out: Vec<TraceRecord> = Vec::new();
+        let mut push = |r: &TraceRecord| {
+            let key = (r.trace, r.root_duration_us(), r.spans.len());
+            if !out.iter().any(|o| (o.trace, o.root_duration_us(), o.spans.len()) == key) {
+                out.push(r.clone());
+            }
+        };
+        if let Ok(slow) = self.slow.lock() {
+            slow.iter().for_each(&mut push);
+        }
+        if let Ok(ring) = self.ring.lock() {
+            ring.iter().for_each(&mut push);
+        }
+        out.sort_by(|a, b| b.root_duration_us().cmp(&a.root_duration_us()));
+        out.truncate(n);
+        out
+    }
+
+    /// Every retained record of trace `id` — one request can leave
+    /// several views (the client-side send trace and the server-side
+    /// request trace share the id when both ends live in one process).
+    pub fn dump_by_id(&self, id: u64) -> Vec<TraceRecord> {
+        let mut out: Vec<TraceRecord> = Vec::new();
+        let mut push = |r: &TraceRecord| {
+            if r.trace == id && !out.contains(r) {
+                out.push(r.clone());
+            }
+        };
+        if let Ok(ring) = self.ring.lock() {
+            ring.iter().for_each(&mut push);
+        }
+        if let Ok(slow) = self.slow.lock() {
+            slow.iter().for_each(&mut push);
+        }
+        out
+    }
+
+    /// Drop every retained trace (tests, benches).
+    pub fn clear(&self) {
+        if let Ok(mut ring) = self.ring.lock() {
+            ring.clear();
+        }
+        if let Ok(mut slow) = self.slow.lock() {
+            slow.clear();
+        }
+    }
+}
+
+impl Default for TraceCollector {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// The process-global collector every serving layer samples from and
+/// retires into.
+pub fn global() -> &'static TraceCollector {
+    static GLOBAL: OnceLock<TraceCollector> = OnceLock::new();
+    GLOBAL.get_or_init(TraceCollector::new)
+}
+
+/// Whether the global collector is sampling (`false` short-circuits every
+/// tracing call site to a single relaxed load, mirroring the metrics
+/// registry's enable gate).
+#[inline]
+pub fn tracing_enabled() -> bool {
+    global().enabled()
+}
+
+/// Enable / disable global tracing.
+pub fn set_tracing_enabled(on: bool) {
+    global().set_enabled(on);
+}
+
+/// Set the global sampling rate (trace one request in `n`; min 1).
+pub fn set_trace_one_in_n(n: u64) {
+    global().set_one_in_n(n);
+}
+
+/// Set the global slow-query threshold in µs (0 disables the slow log).
+pub fn set_slow_us(v: u64) {
+    global().set_slow_us(v);
+}
+
+/// Global origin-side sampling decision (see [`TraceCollector::sample`]).
+#[inline]
+pub fn sample() -> u64 {
+    global().sample()
+}
+
+/// Retire a trace into the global collector.
+pub fn finish(active: &ActiveTrace) {
+    global().finish(active);
+}
+
+/// The globally retained traces with the longest roots.
+pub fn dump_slowest(n: usize) -> Vec<TraceRecord> {
+    global().dump_slowest(n)
+}
+
+/// Every globally retained record of one trace id.
+pub fn dump_by_id(id: u64) -> Vec<TraceRecord> {
+    global().dump_by_id(id)
+}
+
+// ---------------------------------------------------------------------
+// Byte encoding (the `TraceDump` wire payload)
+// ---------------------------------------------------------------------
+
+fn put_str(out: &mut Vec<u8>, s: &str) {
+    let len = s.len().min(u16::MAX as usize);
+    out.extend_from_slice(&(len as u16).to_le_bytes());
+    out.extend_from_slice(&s.as_bytes()[..len]);
+}
+
+/// Serialize traces into the versioned byte layout ships over the wire.
+pub fn encode_traces(traces: &[TraceRecord]) -> Vec<u8> {
+    let mut out = Vec::new();
+    out.extend_from_slice(&TRACE_VERSION.to_le_bytes());
+    out.extend_from_slice(&(traces.len() as u32).to_le_bytes());
+    for t in traces {
+        out.extend_from_slice(&t.trace.to_le_bytes());
+        out.extend_from_slice(&(t.spans.len() as u32).to_le_bytes());
+        for s in &t.spans {
+            out.extend_from_slice(&s.id.to_le_bytes());
+            out.extend_from_slice(&s.parent.to_le_bytes());
+            put_str(&mut out, &s.name);
+            out.extend_from_slice(&s.start_us.to_le_bytes());
+            out.extend_from_slice(&s.end_us.to_le_bytes());
+            let notes = s.notes.len().min(u16::MAX as usize);
+            out.extend_from_slice(&(notes as u16).to_le_bytes());
+            for (k, v) in s.notes.iter().take(notes) {
+                put_str(&mut out, k);
+                put_str(&mut out, v);
+            }
+        }
+    }
+    out
+}
+
+/// Bounds-checked little cursor over an encoded trace payload (same
+/// idiom as the snapshot codec: every length is validated against the
+/// remaining bytes before any allocation).
+struct Rd<'a> {
+    b: &'a [u8],
+    i: usize,
+}
+
+impl<'a> Rd<'a> {
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.b.len() - self.i < n {
+            return Err(Error::Parse("trace payload truncated".into()));
+        }
+        let s = &self.b[self.i..self.i + n];
+        self.i += n;
+        Ok(s)
+    }
+
+    fn u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().expect("2 bytes")))
+    }
+
+    fn u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().expect("4 bytes")))
+    }
+
+    fn u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().expect("8 bytes")))
+    }
+
+    /// An element count, validated against the bytes actually left so a
+    /// hostile count cannot force a huge allocation.
+    fn count(&mut self, elem_bytes: usize) -> Result<usize> {
+        let n = self.u32()? as usize;
+        if n.saturating_mul(elem_bytes) > self.b.len() - self.i {
+            return Err(Error::Parse("trace payload count exceeds payload".into()));
+        }
+        Ok(n)
+    }
+
+    fn str(&mut self) -> Result<String> {
+        let len = self.u16()? as usize;
+        let bytes = self.take(len)?;
+        String::from_utf8(bytes.to_vec())
+            .map_err(|_| Error::Parse("trace payload holds non-UTF-8 text".into()))
+    }
+
+    fn done(&self) -> Result<()> {
+        if self.i != self.b.len() {
+            return Err(Error::Parse("trace payload has trailing bytes".into()));
+        }
+        Ok(())
+    }
+}
+
+/// Parse an encoded trace payload. Rejects unknown versions, truncation,
+/// hostile counts, and trailing bytes with typed parse errors.
+pub fn decode_traces(bytes: &[u8]) -> Result<Vec<TraceRecord>> {
+    let mut rd = Rd { b: bytes, i: 0 };
+    let version = rd.u16()?;
+    if version == 0 || version > TRACE_VERSION {
+        return Err(Error::Parse(format!("unsupported trace payload version {version}")));
+    }
+    // minimum bytes per trace: id (8) + span count (4)
+    let traces = rd.count(12)?;
+    let mut out = Vec::with_capacity(traces);
+    for _ in 0..traces {
+        let trace = rd.u64()?;
+        // minimum bytes per span: id + parent + name len + times + notes
+        let spans = rd.count(4 + 4 + 2 + 8 + 8 + 2)?;
+        let mut t = TraceRecord { trace, spans: Vec::with_capacity(spans) };
+        for _ in 0..spans {
+            let id = rd.u32()?;
+            let parent = rd.u32()?;
+            let name = rd.str()?;
+            let start_us = rd.u64()?;
+            let end_us = rd.u64()?;
+            let notes = rd.u16()? as usize;
+            let mut ns = Vec::with_capacity(notes.min(64));
+            for _ in 0..notes {
+                let k = rd.str()?;
+                let v = rd.str()?;
+                ns.push((k, v));
+            }
+            t.spans.push(SpanRecord { id, parent, name, start_us, end_us, notes: ns });
+        }
+        out.push(t);
+    }
+    rd.done()?;
+    Ok(out)
+}
+
+// ---------------------------------------------------------------------
+// Rendering (the `matsketch trace` timelines)
+// ---------------------------------------------------------------------
+
+fn render_span(t: &TraceRecord, s: &SpanRecord, depth: usize, out: &mut String) {
+    use std::fmt::Write as _;
+    let indent = "  ".repeat(depth);
+    let notes: String = s
+        .notes
+        .iter()
+        .map(|(k, v)| format!("  {k}={v}"))
+        .collect();
+    let _ = writeln!(
+        out,
+        "{indent}[{:>8} ..{:>8}] {:<14} {:>8} µs{notes}",
+        s.start_us,
+        s.end_us,
+        s.name,
+        s.duration_us()
+    );
+    for child in t.children(s.id) {
+        render_span(t, child, depth + 1, out);
+    }
+}
+
+/// Render span trees as indented timelines (one block per record).
+pub fn render(traces: &[TraceRecord]) -> String {
+    use std::fmt::Write as _;
+    let mut out = String::new();
+    for t in traces {
+        let _ = writeln!(
+            out,
+            "trace {:016x} · {} spans · root {} µs",
+            t.trace,
+            t.spans.len(),
+            t.root_duration_us()
+        );
+        for root in t.children(0) {
+            render_span(t, root, 1, &mut out);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::time::Duration;
+
+    fn record(trace: u64, root_us: u64) -> TraceRecord {
+        TraceRecord {
+            trace,
+            spans: vec![
+                SpanRecord {
+                    id: 1,
+                    parent: 0,
+                    name: "request".into(),
+                    start_us: 0,
+                    end_us: root_us,
+                    notes: vec![("op".into(), "matvec".into())],
+                },
+                SpanRecord {
+                    id: 2,
+                    parent: 1,
+                    name: "queue_wait".into(),
+                    start_us: 1,
+                    end_us: 3,
+                    notes: Vec::new(),
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn sampling_respects_enable_flag_and_rate() {
+        let c = TraceCollector::new();
+        c.set_enabled(false);
+        assert_eq!(c.sample(), 0);
+        c.set_enabled(true);
+        c.set_one_in_n(4);
+        let sampled = (0..40).filter(|_| c.sample() != 0).count();
+        assert_eq!(sampled, 10, "1-in-4 sampling over 40 requests");
+        c.set_one_in_n(1);
+        // trace ids are distinct and never zero
+        let a = c.sample();
+        let b = c.sample();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+        // a zero knob clamps to 1 instead of disabling by accident
+        c.set_one_in_n(0);
+        assert_eq!(c.one_in_n(), 1);
+    }
+
+    #[test]
+    fn spans_nest_and_freeze_into_a_tree() {
+        let active = ActiveTrace::begin(7);
+        let mut root = active.span(0, "request");
+        root.note("op", "matvec");
+        let root_id = root.id();
+        {
+            let child = active.span(root_id, "exec");
+            std::thread::sleep(Duration::from_millis(1));
+            child.finish();
+        }
+        let t_mid = Instant::now();
+        active.record(root_id, "queue_wait", active.origin(), t_mid);
+        root.finish();
+
+        let c = TraceCollector::new();
+        c.finish(&active);
+        let dump = c.dump_by_id(7);
+        assert_eq!(dump.len(), 1);
+        let t = &dump[0];
+        assert_eq!(t.spans.len(), 3);
+        let root = t.root().expect("root span");
+        assert_eq!(root.name, "request");
+        assert_eq!(root.notes, vec![("op".to_string(), "matvec".to_string())]);
+        let kids = t.children(root.id);
+        let names: Vec<&str> = kids.iter().map(|s| s.name.as_str()).collect();
+        assert!(names.contains(&"exec") && names.contains(&"queue_wait"), "{names:?}");
+        assert!(root.duration_us() >= 1000, "root {} µs", root.duration_us());
+        // finishing again is a no-op (spans were drained)
+        c.finish(&active);
+        assert_eq!(c.dump_by_id(7).len(), 1);
+    }
+
+    #[test]
+    fn rings_bound_retention_and_keep_slow_traces() {
+        let c = TraceCollector::new();
+        c.set_slow_us(1_000);
+        // one slow trace, then enough fast ones to evict it from the ring
+        let slow = ActiveTrace::begin(1);
+        let t0 = slow.origin();
+        slow.record(0, "request", t0, t0 + Duration::from_millis(50));
+        c.finish(&slow);
+        for i in 0..(TRACE_RING_CAP as u64 + 8) {
+            let fast = ActiveTrace::begin(100 + i);
+            let t0 = fast.origin();
+            fast.record(0, "request", t0, t0 + Duration::from_micros(10));
+            c.finish(&fast);
+        }
+        // the slow trace survived eviction via the slow ring
+        let slowest = c.dump_slowest(3);
+        assert_eq!(slowest[0].trace, 1);
+        assert_eq!(slowest[0].root_duration_us(), 50_000);
+        assert!(slowest.len() > 1 && slowest[1].root_duration_us() <= 50_000);
+        assert_eq!(c.dump_by_id(1).len(), 1);
+        c.clear();
+        assert!(c.dump_slowest(3).is_empty());
+    }
+
+    #[test]
+    fn encode_decode_roundtrips_and_rejects_corruption() {
+        let traces = vec![record(0xAB, 1234), record(0xCD, 99)];
+        let bytes = encode_traces(&traces);
+        assert_eq!(decode_traces(&bytes).unwrap(), traces);
+        // empty set round-trips too
+        assert!(decode_traces(&encode_traces(&[])).unwrap().is_empty());
+
+        // truncation, bad version, hostile count, trailing bytes
+        assert!(decode_traces(&bytes[..bytes.len() - 1]).is_err());
+        let mut bad = bytes.clone();
+        bad[0] = 0xFF;
+        bad[1] = 0xFF;
+        assert!(decode_traces(&bad).is_err());
+        let mut hostile = encode_traces(&[]);
+        hostile[2] = 0xFF;
+        hostile[3] = 0xFF;
+        assert!(decode_traces(&hostile).is_err());
+        let mut trailing = bytes;
+        trailing.push(0);
+        assert!(decode_traces(&trailing).is_err());
+    }
+
+    #[test]
+    fn render_draws_an_indented_timeline() {
+        let out = render(&[record(0x2A, 1234)]);
+        assert!(out.contains("trace 000000000000002a"), "{out}");
+        assert!(out.contains("request"), "{out}");
+        assert!(out.contains("op=matvec"), "{out}");
+        let req_line = out.lines().find(|l| l.contains("request")).unwrap();
+        let queue_line = out.lines().find(|l| l.contains("queue_wait")).unwrap();
+        let lead = |l: &str| l.len() - l.trim_start().len();
+        assert!(lead(queue_line) > lead(req_line), "children indent deeper");
+    }
+}

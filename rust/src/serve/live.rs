@@ -50,6 +50,7 @@ use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::distributions::MatrixStats;
 use crate::engine::{build_sketcher, PipelineConfig, SketchMode, Sketcher};
 use crate::error::{Error, Result};
+use crate::obs::trace::{self, SpanCtx};
 use crate::obs::{self, Counter, Gauge, Hist};
 use crate::sketch::{Sketch, SketchPlan};
 use crate::sparse::Entry;
@@ -209,10 +210,20 @@ impl LiveSketch {
 
     /// Build and publish the next generation from the full prefix. The
     /// rebuild runs entirely off the read path — the chain lock is taken
-    /// only for the final snapshot swap.
+    /// only for the final snapshot swap. A sampled publish records its
+    /// own span tree (`live_publish` → `rebuild`, `swap`).
     fn publish(&mut self) -> Result<u64> {
         let reg = obs::global();
-        let t_build = reg.enabled().then(Instant::now);
+        let active = match trace::sample() {
+            0 => None,
+            id => Some(trace::ActiveTrace::begin(id)),
+        };
+        let root = active.as_ref().map(|a| {
+            let mut s = a.span(0, "live_publish");
+            s.note("entries", self.prefix.len().to_string());
+            s
+        });
+        let t_build = (reg.enabled() || root.is_some()).then(Instant::now);
         let mut stats = MatrixStats::new(self.inner.m, self.inner.n);
         for e in &self.prefix {
             stats.push(e);
@@ -228,10 +239,16 @@ impl LiveSketch {
         let g = self.inner.generation.load(Ordering::Acquire) + 1;
         let snap = Arc::new(ServableSketch::from_sketch(&sketch)?.with_generation(g));
         if let Some(t0) = t_build {
-            reg.record_duration(Hist::LivePublishUs, t0.elapsed());
+            if reg.enabled() {
+                reg.record_duration(Hist::LivePublishUs, t0.elapsed());
+            }
+            if let Some(root) = &root {
+                root.ctx().record("rebuild", t0, Instant::now());
+            }
         }
         let lag = self.epoch_t0.take().map_or(0.0, |t| t.elapsed().as_secs_f64());
         {
+            let swap_span = root.as_ref().map(|r| r.ctx().span("swap"));
             let mut chain = chain_lock(&self.inner)?;
             chain.snapshots.push_back(snap);
             while chain.snapshots.len() > self.inner.retain {
@@ -240,10 +257,17 @@ impl LiveSketch {
             chain.lags.push(lag);
             self.inner.generation.store(g, Ordering::Release);
             self.inner.advance.notify_all();
+            drop(swap_span);
         }
         reg.inc(Counter::LivePublish);
         reg.gauge_set(Gauge::LiveGeneration, g);
         reg.record(Hist::LiveLagUs, (lag * 1e6) as u64);
+        if let Some(root) = root {
+            root.finish();
+        }
+        if let Some(active) = active {
+            trace::finish(&active);
+        }
         self.pending = 0;
         Ok(g)
     }
@@ -322,9 +346,20 @@ impl LiveReader {
         pin: Option<u64>,
         request: &QueryRequest,
     ) -> Result<(QueryResponse, u64)> {
+        self.answer_at_traced(pin, request, None)
+    }
+
+    /// [`Self::answer_at`] carrying a trace context: pool stages (queue
+    /// wait, execution / split windows, reduction) become child spans.
+    pub fn answer_at_traced(
+        &self,
+        pin: Option<u64>,
+        request: &QueryRequest,
+        ctx: Option<SpanCtx>,
+    ) -> Result<(QueryResponse, u64)> {
         let snap = self.snapshot_at(pin)?;
         let g = snap.generation();
-        let resp = self.inner.server.submit_on(snap, request.clone()).wait()?;
+        let resp = self.inner.server.submit_on_traced(snap, request.clone(), ctx).wait()?;
         Ok((resp, g))
     }
 
@@ -348,18 +383,26 @@ impl LiveReader {
 
     /// Block until the chain reaches `min_gen` (or `timeout` passes);
     /// returns the generation current at return, which may still be
-    /// below `min_gen` on timeout.
+    /// below `min_gen` on timeout. A wait that actually blocks may be
+    /// sampled into a one-span `pin_wait` trace.
     pub fn wait_for(&self, min_gen: u64, timeout: Duration) -> Result<u64> {
         let deadline = Instant::now() + timeout;
         let mut chain = chain_lock(&self.inner)?;
-        loop {
+        let mut pin_wait: Option<(Arc<trace::ActiveTrace>, Instant)> = None;
+        let g = loop {
             let g = self.inner.generation.load(Ordering::Acquire);
             if g >= min_gen {
-                return Ok(g);
+                break g;
             }
             let now = Instant::now();
             if now >= deadline {
-                return Ok(g);
+                break g;
+            }
+            if pin_wait.is_none() {
+                match trace::sample() {
+                    0 => {}
+                    id => pin_wait = Some((trace::ActiveTrace::begin_at(id, now), now)),
+                }
             }
             chain = self
                 .inner
@@ -367,7 +410,19 @@ impl LiveReader {
                 .wait_timeout(chain, deadline - now)
                 .map_err(|_| Error::Pipeline("live chain lock poisoned".into()))?
                 .0;
+        };
+        drop(chain);
+        if let Some((active, t0)) = pin_wait {
+            active.record_with(
+                0,
+                "pin_wait",
+                t0,
+                Instant::now(),
+                vec![("min_gen".into(), min_gen.to_string())],
+            );
+            trace::finish(&active);
         }
+        Ok(g)
     }
 
     /// Identity of the chain as a servable sketch, under `dataset`.

@@ -31,9 +31,12 @@
 //! Every submit/dequeue/execute step records into the process-global
 //! telemetry registry ([`crate::obs`]): queue-wait vs per-op execute
 //! latency histograms, whole-vs-sharded split decision counters, and
-//! per-window times of split requests.
+//! per-window times of split requests. Sampled requests additionally
+//! carry a trace context ([`crate::obs::trace::SpanCtx`]) through the
+//! queue — queue wait, execution, each split window, and the in-order
+//! reduction become child spans of the request's span tree.
 
-use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::atomic::{AtomicBool, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, sync_channel, Receiver, Sender, SyncSender};
 use std::sync::{Arc, Mutex};
 use std::thread::JoinHandle;
@@ -41,6 +44,7 @@ use std::time::Instant;
 
 use crate::api::{QueryRequest, QueryResponse};
 use crate::error::{Error, Result};
+use crate::obs::trace::SpanCtx;
 use crate::obs::{self, Counter, Hist};
 use crate::sketch::{
     encode_sketch, row_group_index_h, EncodedSketch, PayloadHeader, Sketch, SketchEntry,
@@ -176,11 +180,14 @@ enum Task {
         request: QueryRequest,
         reply: SyncSender<Result<QueryResponse>>,
         /// Submit-time stamp for the queue-wait histogram; `None` when
-        /// the telemetry registry is disabled (no clock reads at all).
+        /// both the telemetry registry and the request's trace are off
+        /// (no clock reads at all).
         enqueued: Option<Instant>,
+        /// Trace context of a sampled request; spans nest under it.
+        ctx: Option<SpanCtx>,
     },
     /// One contiguous row-group window of a split request (the snapshot
-    /// rides on the shared plan).
+    /// and trace context ride on the shared plan).
     Shard { plan: Arc<SplitPlan>, chunk: usize, enqueued: Option<Instant> },
 }
 
@@ -234,6 +241,11 @@ struct SplitPlan {
     partials: Mutex<PartialSlots>,
     remaining: AtomicUsize,
     reply: SyncSender<Result<QueryResponse>>,
+    /// Trace context of a sampled request; window/reduce spans nest here.
+    ctx: Option<SpanCtx>,
+    /// Whether a worker already recorded the shared queue-wait span (the
+    /// first dequeuer wins; per-shard waits still hit the histogram).
+    queue_span_done: AtomicBool,
 }
 
 impl SplitPlan {
@@ -271,7 +283,12 @@ impl SplitPlan {
             Ok(mut p) => std::mem::take(&mut *p),
             Err(_) => return false,
         };
-        let _ = self.reply.send(self.reduce(taken));
+        let started = self.ctx.as_ref().map(|_| Instant::now());
+        let out = self.reduce(taken);
+        if let (Some(ctx), Some(t0)) = (&self.ctx, started) {
+            ctx.record("reduce", t0, Instant::now());
+        }
+        let _ = self.reply.send(out);
         true
     }
 
@@ -413,14 +430,25 @@ impl QueryServer {
                     let Ok(task) = task else { break };
                     let reg = obs::global();
                     match task {
-                        Task::Whole { sketch, request, reply, enqueued } => {
+                        Task::Whole { sketch, request, reply, enqueued, ctx } => {
                             if let Some(t0) = enqueued {
-                                reg.record_duration(Hist::QueueWaitUs, t0.elapsed());
+                                if reg.enabled() {
+                                    reg.record_duration(Hist::QueueWaitUs, t0.elapsed());
+                                }
+                                if let Some(ctx) = &ctx {
+                                    ctx.record("queue_wait", t0, Instant::now());
+                                }
                             }
-                            let started = reg.enabled().then(Instant::now);
+                            let started =
+                                (reg.enabled() || ctx.is_some()).then(Instant::now);
                             let out = sketch.answer(&request);
                             if let Some(t0) = started {
-                                reg.record_duration(exec_hist(&request), t0.elapsed());
+                                if reg.enabled() {
+                                    reg.record_duration(exec_hist(&request), t0.elapsed());
+                                }
+                                if let Some(ctx) = &ctx {
+                                    ctx.record("exec", t0, Instant::now());
+                                }
                             }
                             // a caller that dropped its Pending is fine
                             let _ = reply.send(out);
@@ -428,12 +456,33 @@ impl QueryServer {
                         }
                         Task::Shard { plan, chunk, enqueued } => {
                             if let Some(t0) = enqueued {
-                                reg.record_duration(Hist::QueueWaitUs, t0.elapsed());
+                                if reg.enabled() {
+                                    reg.record_duration(Hist::QueueWaitUs, t0.elapsed());
+                                }
+                                // one shared queue-wait span per split
+                                // request: the first dequeuer records it
+                                if let Some(ctx) = &plan.ctx {
+                                    if !plan.queue_span_done.swap(true, Ordering::Relaxed) {
+                                        ctx.record("queue_wait", t0, Instant::now());
+                                    }
+                                }
                             }
-                            let started = reg.enabled().then(Instant::now);
+                            let started =
+                                (reg.enabled() || plan.ctx.is_some()).then(Instant::now);
                             let out = plan.run_chunk(chunk);
                             if let Some(t0) = started {
-                                reg.record_duration(Hist::SplitWindowUs, t0.elapsed());
+                                if reg.enabled() {
+                                    reg.record_duration(Hist::SplitWindowUs, t0.elapsed());
+                                }
+                                if let Some(ctx) = &plan.ctx {
+                                    ctx.trace.record_with(
+                                        ctx.parent,
+                                        "split_window",
+                                        t0,
+                                        Instant::now(),
+                                        vec![("window".into(), chunk.to_string())],
+                                    );
+                                }
                             }
                             if plan.complete(chunk, out) {
                                 // a split request counts once, credited
@@ -466,19 +515,37 @@ impl QueryServer {
         self.submit_on(Arc::clone(&self.sketch), request)
     }
 
+    /// [`Self::submit`] carrying a trace context: queue wait, execution
+    /// (or each split window plus the reduction) become child spans.
+    pub fn submit_traced(&self, request: QueryRequest, ctx: Option<SpanCtx>) -> Pending {
+        self.submit_on_traced(Arc::clone(&self.sketch), request, ctx)
+    }
+
     /// Enqueue one request pinned to an explicit snapshot. The request —
     /// including every window of a row-parallel split — executes entirely
     /// on `sketch`, so a live generation swap never tears an in-flight
     /// answer. The snapshot need not be the pool's default sketch (a live
     /// chain submits retained generations through the same pool).
     pub fn submit_on(&self, sketch: Arc<ServableSketch>, request: QueryRequest) -> Pending {
+        self.submit_on_traced(sketch, request, None)
+    }
+
+    /// [`Self::submit_on`] carrying a trace context (see
+    /// [`Self::submit_traced`]).
+    pub fn submit_on_traced(
+        &self,
+        sketch: Arc<ServableSketch>,
+        request: QueryRequest,
+        ctx: Option<SpanCtx>,
+    ) -> Pending {
         let reg = obs::global();
         let (reply, rx) = sync_channel(1);
-        let enqueued = reg.enabled().then(Instant::now);
+        let enqueued = (reg.enabled() || ctx.is_some()).then(Instant::now);
         // if every worker is gone the Pending surfaces it at wait()
-        if let Some(request) = self.try_split(&sketch, request, &reply, enqueued) {
+        if let Some((request, ctx)) = self.try_split(&sketch, request, &reply, enqueued, ctx)
+        {
             reg.inc(Counter::SplitWhole);
-            let _ = self.tx.send(Task::Whole { sketch, request, reply, enqueued });
+            let _ = self.tx.send(Task::Whole { sketch, request, reply, enqueued, ctx });
         } else {
             reg.inc(Counter::SplitSharded);
         }
@@ -495,11 +562,12 @@ impl QueryServer {
         request: QueryRequest,
         reply: &SyncSender<Result<QueryResponse>>,
         enqueued: Option<Instant>,
-    ) -> Option<QueryRequest> {
+        ctx: Option<SpanCtx>,
+    ) -> Option<(QueryRequest, Option<SpanCtx>)> {
         let workers = self.handles.len();
         let groups = sketch.row_index().len();
         if workers < 2 || groups < self.split_min_groups.max(2) {
-            return Some(request);
+            return Some((request, ctx));
         }
         let n = sketch.header().n;
         let op = match request {
@@ -510,7 +578,7 @@ impl QueryServer {
                 SplitOp::MatvecBatch(xs)
             }
             QueryRequest::TopK(k) if k > 0 => SplitOp::TopK(k),
-            other => return Some(other),
+            other => return Some((other, ctx)),
         };
         let chunks = workers.min(groups);
         let ranges: Vec<(usize, usize)> = (0..chunks)
@@ -523,6 +591,8 @@ impl QueryServer {
             partials: Mutex::new((0..chunks).map(|_| None).collect()),
             remaining: AtomicUsize::new(chunks),
             reply: reply.clone(),
+            ctx,
+            queue_span_done: AtomicBool::new(false),
         });
         for chunk in 0..chunks {
             let _ = self.tx.send(Task::Shard { plan: Arc::clone(&plan), chunk, enqueued });

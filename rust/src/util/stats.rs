@@ -127,13 +127,14 @@ pub fn quantiles_in_place(xs: &mut [f64], qs: &[f64]) -> Vec<f64> {
 /// Finds the bucket holding the `q`-th observation by cumulative count
 /// and interpolates linearly inside it — the extraction path for the
 /// telemetry histograms in [`crate::obs`], whose log₂ buckets bound the
-/// relative error of any interior quantile by 2×. Returns 0 for an
-/// all-zero histogram.
-pub fn histogram_quantile(counts: &[u64], edges: &[(f64, f64)], q: f64) -> f64 {
+/// relative error of any interior quantile by 2×. An all-empty histogram
+/// has no observations to rank, so it is `None` — not an interpolated
+/// edge value that would read as a real (and misleading) latency.
+pub fn histogram_quantile(counts: &[u64], edges: &[(f64, f64)], q: f64) -> Option<f64> {
     assert_eq!(counts.len(), edges.len());
     let total: u64 = counts.iter().sum();
     if total == 0 {
-        return 0.0;
+        return None;
     }
     // rank of the target observation, 1-based so q=0 lands on the first
     // observation and q=1 on the last
@@ -145,7 +146,7 @@ pub fn histogram_quantile(counts: &[u64], edges: &[(f64, f64)], q: f64) -> f64 {
         }
         if (cum + c) as f64 >= target {
             let frac = (target - cum as f64) / c as f64; // ∈ (0, 1]
-            return lo + frac * (hi - lo);
+            return Some(lo + frac * (hi - lo));
         }
         cum += c;
     }
@@ -156,7 +157,6 @@ pub fn histogram_quantile(counts: &[u64], edges: &[(f64, f64)], q: f64) -> f64 {
         .filter(|(_, &c)| c > 0)
         .map(|(&(_, hi), _)| hi)
         .next_back()
-        .unwrap_or(0.0)
 }
 
 /// Median absolute deviation — the bench harness's robust spread measure.
@@ -246,19 +246,54 @@ mod tests {
         // 10 obs in [1, 2), 85 in [2, 4), 5 in [4, 8)
         let counts = [10u64, 85, 5];
         let edges = [(1.0, 2.0), (2.0, 4.0), (4.0, 8.0)];
-        let p50 = histogram_quantile(&counts, &edges, 0.5);
+        let p50 = histogram_quantile(&counts, &edges, 0.5).unwrap();
         assert!((2.0..4.0).contains(&p50), "p50 = {p50}");
-        let p99 = histogram_quantile(&counts, &edges, 0.99);
+        let p99 = histogram_quantile(&counts, &edges, 0.99).unwrap();
         assert!((4.0..=8.0).contains(&p99), "p99 = {p99}");
         // q=0 is the first observation, q=1 the last
-        assert!(histogram_quantile(&counts, &edges, 0.0) >= 1.0);
-        assert!(histogram_quantile(&counts, &edges, 1.0) <= 8.0);
+        assert!(histogram_quantile(&counts, &edges, 0.0).unwrap() >= 1.0);
+        assert!(histogram_quantile(&counts, &edges, 1.0).unwrap() <= 8.0);
         // monotone in q
         let qs = [0.0, 0.1, 0.25, 0.5, 0.75, 0.9, 0.95, 0.99, 1.0];
-        let vals: Vec<f64> = qs.iter().map(|&q| histogram_quantile(&counts, &edges, q)).collect();
+        let vals: Vec<f64> =
+            qs.iter().map(|&q| histogram_quantile(&counts, &edges, q).unwrap()).collect();
         assert!(vals.windows(2).all(|w| w[0] <= w[1]), "{vals:?}");
-        // empty histogram
-        assert_eq!(histogram_quantile(&[0, 0], &[(0.0, 1.0), (1.0, 2.0)], 0.5), 0.0);
+    }
+
+    #[test]
+    fn histogram_quantile_empty_is_none() {
+        // no observations: every quantile is None, never an edge value
+        for q in [0.0, 0.5, 0.99, 1.0] {
+            assert_eq!(histogram_quantile(&[0, 0, 0], &[(0.0, 1.0), (1.0, 2.0), (2.0, 4.0)], q), None);
+            assert_eq!(histogram_quantile(&[], &[], q), None);
+        }
+    }
+
+    #[test]
+    fn histogram_quantile_single_bucket_stays_inside_it() {
+        // all mass in one interior bucket: every quantile interpolates
+        // within its bounds and the extremes touch them
+        let counts = [0u64, 7, 0];
+        let edges = [(0.0, 1.0), (1.0, 2.0), (2.0, 4.0)];
+        for q in [0.0, 0.25, 0.5, 0.75, 1.0] {
+            let v = histogram_quantile(&counts, &edges, q).unwrap();
+            assert!((1.0..=2.0).contains(&v), "q={q} v={v}");
+        }
+        assert!(histogram_quantile(&counts, &edges, 0.0).unwrap() > 1.0);
+        assert_eq!(histogram_quantile(&counts, &edges, 1.0), Some(2.0));
+    }
+
+    #[test]
+    fn histogram_quantile_saturated_top_bucket() {
+        // everything lands in the open-ended last bucket (the obs
+        // registry's overflow bucket): quantiles stay within its bounds
+        let counts = [0u64, 0, 12];
+        let edges = [(0.0, 1.0), (1.0, 2.0), (2.0, 4.0)];
+        for q in [0.0, 0.5, 1.0] {
+            let v = histogram_quantile(&counts, &edges, q).unwrap();
+            assert!((2.0..=4.0).contains(&v), "q={q} v={v}");
+        }
+        assert_eq!(histogram_quantile(&counts, &edges, 1.0), Some(4.0));
     }
 
     #[test]

@@ -73,6 +73,7 @@ fn start_server(store_dir: &Path, max_connections: usize) -> NetServer {
             max_connections,
             read_timeout: Some(Duration::from_secs(10)),
             write_timeout: Some(Duration::from_secs(10)),
+            ..Default::default()
         },
     )
     .unwrap()

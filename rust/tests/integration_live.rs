@@ -76,6 +76,7 @@ fn live_generations_are_bit_identical_to_offline_prefix_sketches() {
             max_connections: 16,
             read_timeout: Some(Duration::from_secs(10)),
             write_timeout: Some(Duration::from_secs(10)),
+            ..Default::default()
         },
     )
     .unwrap();

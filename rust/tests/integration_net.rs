@@ -1,9 +1,9 @@
 //! Integration: the network front's *protocol* behaviour — the
 //! malformed-frame corpus (now including a bad batch-count frame,
-//! cross-version traffic, and the v3 generation cases: a future pin is a
-//! typed fault that keeps the connection, a v2 frame is answered at v2)
-//! never kills the server, shutdown is graceful, and handle scoping is
-//! enforced. Backend answer equivalence lives in the parameterized suite
+//! cross-version traffic, the v3 generation cases — a future pin is a
+//! typed fault that keeps the connection, a v2 frame is answered at v2 —
+//! and the v5 trace-word skew cases) never kills the server, shutdown is
+//! graceful, and handle scoping is enforced. Backend answer equivalence lives in the parameterized suite
 //! in `integration_api.rs`.
 
 use std::io::{Read, Write};
@@ -67,6 +67,7 @@ fn start_server(store_dir: &Path, max_connections: usize) -> NetServer {
             max_connections,
             read_timeout: Some(Duration::from_secs(10)),
             write_timeout: Some(Duration::from_secs(10)),
+            ..Default::default()
         },
     )
     .unwrap()
@@ -100,8 +101,8 @@ fn expect_error_code(stream: &mut TcpStream, want: ErrCode, what: &str) {
 
 /// Acceptance: the malformed-frame corpus — truncated length, bad magic,
 /// wrong version, giant declared length, mid-payload disconnect, a batch
-/// count the payload cannot hold — never kills the server; it answers
-/// subsequent requests normally.
+/// count the payload cannot hold, v5 trace-word skew in both directions —
+/// never kills the server; it answers subsequent requests normally.
 #[test]
 fn malformed_frame_corpus_never_kills_the_server() {
     let dir = tmp_dir("malformed");
@@ -168,6 +169,7 @@ fn malformed_frame_corpus_never_kills_the_server() {
             &matsketch::net::Request::Query {
                 handle: 0,
                 pin: 0,
+                trace: 0,
                 query: QueryRequest::Matvec(vec![1.0; 64]),
             },
         );
@@ -258,6 +260,7 @@ fn malformed_frame_corpus_never_kills_the_server() {
         let pinned = matsketch::net::Request::Query {
             handle,
             pin: 9,
+            trace: 0,
             query: QueryRequest::TopK(1),
         };
         assert_eq!(wire::request_version(&pinned), 3, "a nonzero pin forces a v3 frame");
@@ -297,6 +300,7 @@ fn malformed_frame_corpus_never_kills_the_server() {
         let batch = matsketch::net::Request::Query {
             handle,
             pin: 0,
+            trace: 0,
             query: QueryRequest::MatvecBatch(vec![vec![0.25; 160]]),
         };
         assert_eq!(wire::request_version(&batch), 2, "unpinned batch stays a v2 frame");
@@ -314,8 +318,62 @@ fn malformed_frame_corpus_never_kills_the_server() {
     }
     assert_alive("v2 frame without generation");
 
+    // 11. trace bytes on a pre-trace frame: a v4-marked top-k query
+    // carrying the v5 trace word is 8 bytes of trailing garbage to a v4
+    // decoder — typed malformed error, connection survives
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&0u32.to_be_bytes()); // handle
+        payload.extend_from_slice(&0u64.to_be_bytes()); // pin (v3+)
+        payload.extend_from_slice(&1u64.to_be_bytes()); // k
+        payload.extend_from_slice(&7u64.to_be_bytes()); // stray trace word
+        let mut frame = raw_header(WIRE_MAGIC, 4, 0x14, 26, payload.len() as u32);
+        frame.extend_from_slice(&payload);
+        s.write_all(&frame).unwrap();
+        expect_error_code(&mut s, ErrCode::Malformed, "trace word in v4 frame");
+        let ping = wire::encode_request(27, &matsketch::net::Request::Ping);
+        s.write_all(&ping).unwrap();
+        match read_raw_response(&mut s) {
+            Some((27, Response::Pong)) => {}
+            other => panic!("same-connection ping after stray trace word: {other:?}"),
+        }
+    }
+    assert_alive("trace word in v4 frame");
+
+    // 12. v5 frame truncated before its trace word: handle + pin only
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&0u32.to_be_bytes()); // handle
+        payload.extend_from_slice(&0u64.to_be_bytes()); // pin — then nothing
+        let mut frame =
+            raw_header(WIRE_MAGIC, WIRE_VERSION, 0x14, 28, payload.len() as u32);
+        frame.extend_from_slice(&payload);
+        s.write_all(&frame).unwrap();
+        expect_error_code(&mut s, ErrCode::Malformed, "v5 frame without trace word");
+    }
+    assert_alive("v5 frame without trace word");
+
+    // 13. the v5-only TraceDump opcode under v1 is a typed unknown-opcode
+    // fault, exactly like the v2-opcode-in-v1-frame case
+    {
+        let mut s = TcpStream::connect(addr).unwrap();
+        s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
+        let mut payload = Vec::new();
+        payload.extend_from_slice(&0u64.to_be_bytes()); // id
+        payload.extend_from_slice(&5u32.to_be_bytes()); // slowest
+        let mut frame = raw_header(WIRE_MAGIC, 1, 0x06, 29, payload.len() as u32);
+        frame.extend_from_slice(&payload);
+        s.write_all(&frame).unwrap();
+        expect_error_code(&mut s, ErrCode::UnknownOpcode, "TraceDump in v1 frame");
+    }
+    assert_alive("TraceDump in v1 frame");
+
     let stats = server.shutdown();
-    assert!(stats.faults >= 8, "typed faults recorded: {}", stats.faults);
+    assert!(stats.faults >= 11, "typed faults recorded: {}", stats.faults);
     let _ = std::fs::remove_dir_all(&dir);
 }
 
@@ -399,6 +457,7 @@ fn stats_snapshots_are_monotone_and_faults_count_per_code() {
             &matsketch::net::Request::Query {
                 handle: 99,
                 pin: 0,
+                trace: 0,
                 query: QueryRequest::TopK(1),
             },
         );
@@ -446,7 +505,12 @@ fn unopened_handle_is_a_typed_error() {
     s.set_read_timeout(Some(Duration::from_secs(5))).unwrap();
     let frame = wire::encode_request(
         3,
-        &matsketch::net::Request::Query { handle: 42, pin: 0, query: QueryRequest::TopK(1) },
+        &matsketch::net::Request::Query {
+            handle: 42,
+            pin: 0,
+            trace: 0,
+            query: QueryRequest::TopK(1),
+        },
     );
     s.write_all(&frame).unwrap();
     expect_error_code(&mut s, ErrCode::BadHandle, "unopened handle");

@@ -1,0 +1,237 @@
+//! Integration: request-scoped tracing end to end — a split matvec
+//! leaves the same span tree through the in-process backend and over
+//! TCP (modulo each transport's own framing spans), the trace id
+//! round-trips the wire, and disabling tracing records nothing.
+//!
+//! The trace collector is process-global, so every test here serializes
+//! on one lock and clears the rings before recording.
+
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Duration;
+
+use matsketch::api::{LocalClient, QueryRequest, QueryResponse, RemoteClient, SketchClient};
+use matsketch::distributions::DistributionKind;
+use matsketch::engine::{self, PipelineConfig, SketchMode};
+use matsketch::net::{NetServer, NetServerConfig};
+use matsketch::obs::trace::{self, TraceRecord};
+use matsketch::serve::{coo_fingerprint, SketchStore, StoreKey};
+use matsketch::sketch::{encode_sketch, SketchPlan};
+use matsketch::sparse::Coo;
+use matsketch::util::rng::Rng;
+
+/// One collector, many tests: serialize.
+static LOCK: Mutex<()> = Mutex::new(());
+
+const BUDGET: u64 = 600;
+const SEED: u64 = 33;
+const WORKERS: usize = 4;
+
+fn fixed_matrix() -> Coo {
+    let mut rng = Rng::new(0x7ACE_D00D);
+    // every one of the 24 rows is occupied, so a 4-worker pool with a
+    // split threshold of 1 shards a matvec into exactly 4 windows
+    let mut coo = Coo::new(24, 160);
+    for i in 0..24u32 {
+        for _ in 0..12 {
+            coo.push(i, rng.usize_below(160) as u32, (rng.normal() as f32) + 1.5);
+        }
+    }
+    coo.normalize();
+    coo
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("matsketch_trace_itest_{tag}_{}", std::process::id()))
+}
+
+fn populate_store(store: &SketchStore) -> StoreKey {
+    let coo = fixed_matrix();
+    let fp = coo_fingerprint(&coo);
+    let plan = SketchPlan::new(DistributionKind::Bernstein, BUDGET).with_seed(SEED);
+    let (sk, _) = engine::sketch_coo(
+        SketchMode::Offline,
+        &coo,
+        &plan,
+        &PipelineConfig::default(),
+    )
+    .unwrap();
+    let enc = encode_sketch(&sk).unwrap();
+    let key = StoreKey::new("traced", &sk.method, BUDGET, SEED).with_fingerprint(fp);
+    store.put(&key, &enc).unwrap();
+    key
+}
+
+fn probe() -> Vec<f64> {
+    let mut rng = Rng::new(9);
+    (0..160).map(|_| rng.normal()).collect()
+}
+
+/// The execution-layer child names of the root span, sorted — the part
+/// of the tree both backends must agree on (framing spans like
+/// `frame_decode` / `open_cache` are transport-specific).
+fn exec_children(rec: &TraceRecord) -> Vec<String> {
+    let root = rec.root().expect("trace has a root span");
+    let mut names: Vec<String> = rec
+        .children(root.id)
+        .iter()
+        .map(|s| s.name.clone())
+        .filter(|n| matches!(n.as_str(), "queue_wait" | "split_window" | "reduce" | "exec"))
+        .collect();
+    names.sort();
+    names
+}
+
+fn root_note<'a>(rec: &'a TraceRecord, key: &str) -> Option<&'a str> {
+    rec.root()?.notes.iter().find(|(k, _)| k == key).map(|(_, v)| v.as_str())
+}
+
+/// Acceptance: a 4-worker split matvec produces one `request` root with
+/// one shared queue wait, one window span per shard, and the reduction —
+/// and the tree is structurally identical whether the query ran
+/// in-process or over TCP (where the id also round-trips the wire).
+#[test]
+fn split_matvec_trace_trees_match_across_backends() {
+    let _g = LOCK.lock().unwrap();
+    let dir = tmp_dir("tree");
+    let _ = std::fs::remove_dir_all(&dir);
+    let key = populate_store(&SketchStore::open(&dir).unwrap());
+    let prev_n = trace::global().one_in_n();
+    trace::set_tracing_enabled(true);
+    trace::set_trace_one_in_n(1);
+
+    // local backend
+    trace::global().clear();
+    let mut local = LocalClient::open_dir(&dir)
+        .unwrap()
+        .with_workers(WORKERS)
+        .with_split_min_groups(1);
+    local.open(&key).unwrap();
+    match local.query(&key, &QueryRequest::Matvec(probe())) {
+        Ok(QueryResponse::Vector(y)) => assert_eq!(y.len(), 24),
+        other => panic!("local matvec: {other:?}"),
+    }
+    local.close().unwrap();
+    let local_rec = trace::global()
+        .dump_slowest(16)
+        .into_iter()
+        .find(|r| r.root().is_some_and(|s| s.name == "request"))
+        .expect("local query left a request trace");
+    assert_eq!(root_note(&local_rec, "backend"), Some("local"));
+    assert_eq!(root_note(&local_rec, "op"), Some("matvec"));
+    let root_id = local_rec.root().unwrap().id;
+    assert!(
+        local_rec.children(root_id).iter().any(|s| s.name == "open_cache"),
+        "local root records the store-open: {local_rec:?}"
+    );
+
+    // remote backend, same store and pool shape
+    trace::global().clear();
+    let server = NetServer::bind(
+        SketchStore::open(&dir).unwrap(),
+        "127.0.0.1:0",
+        NetServerConfig {
+            workers_per_sketch: WORKERS,
+            max_connections: 8,
+            read_timeout: Some(Duration::from_secs(10)),
+            write_timeout: Some(Duration::from_secs(10)),
+            split_min_groups: 1,
+            ..Default::default()
+        },
+    )
+    .unwrap();
+    let mut remote = RemoteClient::connect(&server.local_addr().to_string()).unwrap();
+    remote.open(&key).unwrap();
+    match remote.query(&key, &QueryRequest::Matvec(probe())) {
+        Ok(QueryResponse::Vector(y)) => assert_eq!(y.len(), 24),
+        other => panic!("remote matvec: {other:?}"),
+    }
+    // the client-side view retired into the same process-global
+    // collector; its id is the one that crossed the wire
+    let client_rec = trace::global()
+        .dump_slowest(16)
+        .into_iter()
+        .find(|r| r.root().is_some_and(|s| s.name == "client_send"))
+        .expect("remote query left a client-send trace");
+    let id = client_rec.trace;
+    assert_ne!(id, 0);
+
+    // fetch the server-side view of that id back over the wire (the
+    // TraceDump opcode); the dump request follows the query on the same
+    // connection, so the server has already retired the trace
+    let remote_rec = remote
+        .traces(id, 0)
+        .unwrap()
+        .into_iter()
+        .find(|r| r.root().is_some_and(|s| s.name == "request"))
+        .expect("server retained the request trace");
+    remote.close().unwrap();
+    assert_eq!(remote_rec.trace, id, "trace id survives the wire");
+    assert_eq!(root_note(&remote_rec, "op"), Some("matvec"));
+    assert!(root_note(&remote_rec, "request_id").is_some());
+    let remote_root = remote_rec.root().unwrap().id;
+    for framing in ["frame_decode", "reply_write"] {
+        assert!(
+            remote_rec.children(remote_root).iter().any(|s| s.name == framing),
+            "server root records {framing}: {remote_rec:?}"
+        );
+    }
+
+    // the execution trees agree: one queue wait, one window per worker,
+    // one reduction — on both backends
+    let mut want = vec!["queue_wait".to_string(), "reduce".to_string()];
+    want.extend((0..WORKERS).map(|_| "split_window".to_string()));
+    want.sort();
+    assert_eq!(exec_children(&local_rec), want, "local tree: {local_rec:?}");
+    assert_eq!(exec_children(&remote_rec), want, "remote tree: {remote_rec:?}");
+
+    // every window span is annotated with its window index
+    for rec in [&local_rec, &remote_rec] {
+        let mut windows: Vec<&str> = rec
+            .spans
+            .iter()
+            .filter(|s| s.name == "split_window")
+            .flat_map(|s| s.notes.iter())
+            .filter(|(k, _)| k == "window")
+            .map(|(_, v)| v.as_str())
+            .collect();
+        windows.sort();
+        assert_eq!(windows, ["0", "1", "2", "3"], "window notes in {rec:?}");
+    }
+
+    trace::set_trace_one_in_n(prev_n);
+    server.shutdown();
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Disabled tracing is a true off-switch: no sampling, no records.
+#[test]
+fn disabled_tracing_records_nothing() {
+    let _g = LOCK.lock().unwrap();
+    let dir = tmp_dir("off");
+    let _ = std::fs::remove_dir_all(&dir);
+    let key = populate_store(&SketchStore::open(&dir).unwrap());
+    let prev_n = trace::global().one_in_n();
+    trace::set_trace_one_in_n(1);
+    trace::set_tracing_enabled(false);
+    trace::global().clear();
+
+    let mut local = LocalClient::open_dir(&dir)
+        .unwrap()
+        .with_workers(WORKERS)
+        .with_split_min_groups(1);
+    local.open(&key).unwrap();
+    match local.query(&key, &QueryRequest::Matvec(probe())) {
+        Ok(QueryResponse::Vector(y)) => assert_eq!(y.len(), 24),
+        other => panic!("untraced matvec: {other:?}"),
+    }
+    local.close().unwrap();
+    assert!(
+        trace::global().dump_slowest(8).is_empty(),
+        "no traces retained while disabled"
+    );
+
+    trace::set_tracing_enabled(true);
+    trace::set_trace_one_in_n(prev_n);
+    let _ = std::fs::remove_dir_all(&dir);
+}
