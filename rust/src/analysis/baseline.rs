@@ -1,0 +1,152 @@
+//! The lint baseline (`lint.allow`): a checked-in list of accepted
+//! findings.
+//!
+//! A few findings are legitimate — e.g. the live chain's `GenPoll`
+//! deadline arithmetic *is* a functional clock read, not telemetry — and
+//! get a baseline entry instead of a code contortion. Entries are keyed
+//! by lint id, path, and the finding line's trimmed code text (not its
+//! line number, so unrelated edits above the site don't invalidate the
+//! baseline). An entry that stops matching anything is reported as
+//! **stale** so the file can only shrink back to the truth.
+//!
+//! Format: one entry per line, tab-separated —
+//! `lint-id<TAB>path<TAB>trimmed line text` — with `#` comments and blank
+//! lines ignored.
+
+use super::Finding;
+
+/// One parsed `lint.allow` entry.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllowEntry {
+    /// Lint id (e.g. `timed-gating`).
+    pub lint: String,
+    /// Crate-relative path (e.g. `src/serve/live.rs`).
+    pub path: String,
+    /// The trimmed code text of the accepted line.
+    pub excerpt: String,
+    /// 1-based line in `lint.allow` (for stale reporting).
+    pub line: usize,
+}
+
+impl AllowEntry {
+    /// Whether this entry accepts `f`.
+    pub fn matches(&self, f: &Finding) -> bool {
+        self.lint == f.lint && self.path == f.path && self.excerpt == f.excerpt
+    }
+
+    /// The entry in file format.
+    pub fn render(&self) -> String {
+        format!("{}\t{}\t{}", self.lint, self.path, self.excerpt)
+    }
+}
+
+/// Parse a `lint.allow` document. Malformed lines (fewer than three
+/// tab-separated fields) are themselves errors, reported as a pseudo
+/// entry the caller will list as stale — a broken baseline must never
+/// silently widen.
+pub fn parse(doc: &str) -> Vec<AllowEntry> {
+    let mut out = Vec::new();
+    for (idx, raw) in doc.lines().enumerate() {
+        let line = raw.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let mut parts = line.splitn(3, '\t');
+        let (lint, path, excerpt) = (parts.next(), parts.next(), parts.next());
+        out.push(AllowEntry {
+            lint: lint.unwrap_or_default().trim().to_string(),
+            path: path.unwrap_or_default().trim().to_string(),
+            excerpt: excerpt.unwrap_or_default().trim().to_string(),
+            line: idx + 1,
+        });
+    }
+    out
+}
+
+/// Split `findings` into (non-baselined, baselined) and report the
+/// entries that matched nothing as stale.
+pub fn apply(
+    findings: Vec<Finding>,
+    entries: &[AllowEntry],
+) -> (Vec<Finding>, Vec<Finding>, Vec<AllowEntry>) {
+    let mut open = Vec::new();
+    let mut accepted = Vec::new();
+    let mut used = vec![false; entries.len()];
+    for f in findings {
+        match entries.iter().position(|e| e.matches(&f)) {
+            Some(i) => {
+                used[i] = true;
+                accepted.push(f);
+            }
+            None => open.push(f),
+        }
+    }
+    let stale = entries
+        .iter()
+        .zip(&used)
+        .filter(|(_, &u)| !u)
+        .map(|(e, _)| e.clone())
+        .collect();
+    (open, accepted, stale)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn finding(lint: &'static str, path: &str, excerpt: &str) -> Finding {
+        Finding {
+            lint,
+            path: path.to_string(),
+            line: 7,
+            message: "msg".to_string(),
+            excerpt: excerpt.to_string(),
+        }
+    }
+
+    #[test]
+    fn parse_skips_comments_and_keeps_source_lines() {
+        let doc = "# header\n\nlint-a\tsrc/a.rs\tlet x = 1;\n  # indented comment\n\
+                   lint-b\tsrc/b.rs\ty();\n";
+        let entries = parse(doc);
+        assert_eq!(entries.len(), 2);
+        assert_eq!((entries[0].lint.as_str(), entries[0].line), ("lint-a", 3));
+        assert_eq!((entries[1].excerpt.as_str(), entries[1].line), ("y();", 5));
+        assert_eq!(entries[0].render(), "lint-a\tsrc/a.rs\tlet x = 1;");
+    }
+
+    #[test]
+    fn matching_keys_on_lint_path_and_excerpt_not_line() {
+        let e = parse("lint-a\tsrc/a.rs\tlet x = 1;\n").remove(0);
+        assert!(e.matches(&finding("lint-a", "src/a.rs", "let x = 1;")));
+        assert!(!e.matches(&finding("lint-a", "src/a.rs", "let x = 2;")));
+        assert!(!e.matches(&finding("lint-b", "src/a.rs", "let x = 1;")));
+        assert!(!e.matches(&finding("lint-a", "src/b.rs", "let x = 1;")));
+    }
+
+    #[test]
+    fn malformed_entries_never_match_and_surface_as_stale() {
+        let entries = parse("no-tabs-on-this-line\n");
+        assert_eq!(entries.len(), 1);
+        assert!(entries[0].path.is_empty() && entries[0].excerpt.is_empty());
+        let (open, accepted, stale) =
+            apply(vec![finding("no-tabs-on-this-line", "src/a.rs", "x")], &entries);
+        assert_eq!(open.len(), 1);
+        assert!(accepted.is_empty());
+        assert_eq!(stale.len(), 1);
+    }
+
+    #[test]
+    fn apply_partitions_findings_and_reports_unused_entries() {
+        let entries = parse("lint-a\tsrc/a.rs\tx\nlint-a\tsrc/a.rs\tnever-matches\n");
+        let (open, accepted, stale) = apply(
+            vec![finding("lint-a", "src/a.rs", "x"), finding("lint-a", "src/b.rs", "x")],
+            &entries,
+        );
+        assert_eq!(open.len(), 1);
+        assert_eq!(open[0].path, "src/b.rs");
+        assert_eq!(accepted.len(), 1);
+        assert_eq!(stale.len(), 1);
+        assert_eq!(stale[0].excerpt, "never-matches");
+    }
+}

@@ -1,0 +1,338 @@
+//! A small hand-rolled Rust lexer for the project lints.
+//!
+//! The lints in this module family reason about *source shape* — "is this
+//! `unsafe` preceded by a `// SAFETY:` comment", "does this line index a
+//! slice" — so the first step is separating what the compiler sees from
+//! what the reader sees. [`model`] splits every line of a `.rs` file into
+//! its **code** text (string literals blanked to `""`, comments removed)
+//! and its **comment** text, and marks the lines belonging to
+//! `#[cfg(test)]` regions so lints can exempt test code.
+//!
+//! This is deliberately not a full Rust lexer: it understands line and
+//! (nested) block comments, plain / byte / raw string literals, char
+//! literals vs lifetimes, and brace-matched `#[cfg(test)] mod` regions.
+//! That subset is enough to make the lints precise on this codebase, and
+//! the fixtures in [`super::lints`] pin the corner cases that matter
+//! (lifetimes, `r#"…"#`, nested `/* /* */ */`).
+
+/// One source line, split into the compiler-visible and reader-visible
+/// halves.
+#[derive(Debug, Default, Clone)]
+pub struct Line {
+    /// The line's code with comments removed and string/char literal
+    /// *contents* blanked (delimiters are kept, so `"abc"` becomes `""`
+    /// and token adjacency survives).
+    pub code: String,
+    /// The line's comment text (everything after `//`, `//!`, `///`, or
+    /// inside a `/* … */` overlapping this line), concatenated.
+    pub comment: String,
+    /// Whether the line sits inside a `#[cfg(test)]` region.
+    pub in_test: bool,
+}
+
+/// The lexed form of one source file.
+#[derive(Debug, Default)]
+pub struct Model {
+    /// One entry per source line, index 0 = line 1.
+    pub lines: Vec<Line>,
+}
+
+impl Model {
+    /// 1-based line access (empty line for out-of-range).
+    pub fn line(&self, lineno: usize) -> Option<&Line> {
+        lineno.checked_sub(1).and_then(|i| self.lines.get(i))
+    }
+}
+
+/// Lex `src` into per-line code/comment halves and mark test regions.
+/// `all_test` forces every line into the test region (integration-test
+/// files, where the whole file is test code).
+pub fn model(src: &str, all_test: bool) -> Model {
+    let mut lines = split_code_and_comments(src);
+    if all_test {
+        for l in &mut lines {
+            l.in_test = true;
+        }
+    } else {
+        mark_test_regions(&mut lines);
+    }
+    Model { lines }
+}
+
+#[derive(Clone, Copy, PartialEq)]
+enum State {
+    Code,
+    /// Inside `/* … */`, with the current nesting depth.
+    Block(u32),
+    /// Inside a `"…"` or `b"…"` literal.
+    Str,
+    /// Inside a raw string literal with this many `#`s in its delimiter.
+    RawStr(u32),
+}
+
+fn is_ident(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Split every line into code and comment text, carrying multi-line
+/// string/comment state across lines.
+fn split_code_and_comments(src: &str) -> Vec<Line> {
+    let mut out = Vec::new();
+    let mut state = State::Code;
+    for raw in src.lines() {
+        let mut line = Line::default();
+        let b: Vec<char> = raw.chars().collect();
+        let mut i = 0usize;
+        while i < b.len() {
+            let c = b[i];
+            match state {
+                State::Block(depth) => {
+                    if c == '*' && b.get(i + 1) == Some(&'/') {
+                        i += 2;
+                        state = if depth > 1 { State::Block(depth - 1) } else { State::Code };
+                    } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        state = State::Block(depth + 1);
+                    } else {
+                        line.comment.push(c);
+                        i += 1;
+                    }
+                }
+                State::Str => {
+                    if c == '\\' {
+                        i += 2; // skip the escaped char (possibly the quote)
+                    } else if c == '"' {
+                        line.code.push('"');
+                        i += 1;
+                        state = State::Code;
+                    } else {
+                        i += 1; // blanked
+                    }
+                }
+                State::RawStr(hashes) => {
+                    if c == '"' && closes_raw(&b, i, hashes) {
+                        line.code.push('"');
+                        i += 1 + hashes as usize;
+                        state = State::Code;
+                    } else {
+                        i += 1; // blanked
+                    }
+                }
+                State::Code => {
+                    if c == '/' && b.get(i + 1) == Some(&'/') {
+                        // line comment: the rest of the line is comment
+                        line.comment.push_str(&raw[byte_offset(raw, i + 2)..]);
+                        i = b.len();
+                    } else if c == '/' && b.get(i + 1) == Some(&'*') {
+                        i += 2;
+                        state = State::Block(1);
+                    } else if c == '"' {
+                        line.code.push('"');
+                        i += 1;
+                        state = State::Str;
+                    } else if c == 'r'
+                        && !prev_is_ident(&b, i)
+                        && raw_string_hashes(&b, i + 1).is_some()
+                    {
+                        let hashes = raw_string_hashes(&b, i + 1).unwrap_or(0);
+                        line.code.push('"');
+                        i += 2 + hashes as usize; // r, #s, opening quote
+                        state = State::RawStr(hashes);
+                    } else if c == 'b'
+                        && !prev_is_ident(&b, i)
+                        && b.get(i + 1) == Some(&'"')
+                    {
+                        line.code.push('"');
+                        i += 2;
+                        state = State::Str;
+                    } else if c == '\'' {
+                        // char literal or lifetime
+                        if let Some(adv) = char_literal_len(&b, i) {
+                            line.code.push('\'');
+                            line.code.push('\'');
+                            i += adv;
+                        } else {
+                            // a lifetime: keep it as code verbatim
+                            line.code.push(c);
+                            i += 1;
+                        }
+                    } else {
+                        line.code.push(c);
+                        i += 1;
+                    }
+                }
+            }
+        }
+        out.push(line);
+    }
+    out
+}
+
+/// Whether `b[i]` (a `"`) is followed by `hashes` `#`s, closing a raw
+/// string delimiter.
+fn closes_raw(b: &[char], i: usize, hashes: u32) -> bool {
+    (1..=hashes as usize).all(|k| b.get(i + k) == Some(&'#'))
+}
+
+/// If `b[from..]` starts a raw-string delimiter (`#`* then `"`), the
+/// number of `#`s; `None` otherwise.
+fn raw_string_hashes(b: &[char], from: usize) -> Option<u32> {
+    let mut hashes = 0u32;
+    let mut j = from;
+    while b.get(j) == Some(&'#') {
+        hashes += 1;
+        j += 1;
+    }
+    (b.get(j) == Some(&'"')).then_some(hashes)
+}
+
+fn prev_is_ident(b: &[char], i: usize) -> bool {
+    i > 0 && b.get(i - 1).copied().is_some_and(is_ident)
+}
+
+/// If position `i` (at a `'`) starts a char literal, its total length in
+/// chars; `None` for a lifetime.
+fn char_literal_len(b: &[char], i: usize) -> Option<usize> {
+    match b.get(i + 1) {
+        // escaped char: consume through the closing quote
+        Some('\\') => {
+            let mut j = i + 2;
+            while j < b.len() && b.get(j) != Some(&'\'') {
+                j += 1;
+            }
+            (j < b.len()).then_some(j - i + 1)
+        }
+        // plain char `'x'` (and not `'a` the lifetime)
+        Some(_) if b.get(i + 2) == Some(&'\'') => Some(3),
+        _ => None,
+    }
+}
+
+/// Convert a char index into a byte offset of `s` (for slicing the raw
+/// line when a `//` comment starts mid-line).
+fn byte_offset(s: &str, char_idx: usize) -> usize {
+    s.char_indices().nth(char_idx).map_or(s.len(), |(b, _)| b)
+}
+
+/// Mark the brace-matched region following every `#[cfg(test)]` attribute
+/// as test code (the attribute line itself included).
+fn mark_test_regions(lines: &mut [Line]) {
+    let n = lines.len();
+    let mut i = 0usize;
+    while i < n {
+        if !lines[i].code.contains("#[cfg(test)]") {
+            i += 1;
+            continue;
+        }
+        // find the start of the attributed item and walk its braces
+        let mut depth = 0i64;
+        let mut opened = false;
+        let mut j = i;
+        while j < n {
+            lines[j].in_test = true;
+            for c in lines[j].code.chars() {
+                match c {
+                    '{' => {
+                        depth += 1;
+                        opened = true;
+                    }
+                    '}' => depth -= 1,
+                    // an un-braced attributed item (e.g. `use` or
+                    // `mod x;`) ends at its semicolon
+                    ';' if !opened && depth == 0 => {
+                        opened = true;
+                        depth = 0;
+                    }
+                    _ => {}
+                }
+            }
+            if opened && depth <= 0 {
+                break;
+            }
+            j += 1;
+        }
+        i = j + 1;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn lex(src: &str) -> Model {
+        model(src, false)
+    }
+
+    #[test]
+    fn splits_line_comments_from_code() {
+        let m = lex("let x = 1; // note\n/// doc line\nlet y = 2;");
+        assert_eq!(m.lines[0].code, "let x = 1; ");
+        assert_eq!(m.lines[0].comment, " note");
+        assert_eq!(m.lines[1].code, "");
+        assert!(m.lines[1].comment.contains("doc line"));
+        assert_eq!(m.lines[2].code, "let y = 2;");
+    }
+
+    #[test]
+    fn blanks_string_contents_keeping_delimiters() {
+        let m = lex(r#"let s = "unwrap() [0] // not a comment"; done();"#);
+        assert_eq!(m.lines[0].code, r#"let s = ""; done();"#);
+        assert!(m.lines[0].comment.is_empty());
+    }
+
+    #[test]
+    fn nested_block_comments_resume_code_midline() {
+        let m = lex("a /* x /* y */ z */ b");
+        assert_eq!(m.lines[0].code, "a  b");
+        assert!(m.lines[0].comment.contains('y'));
+        // multi-line blocks carry state across lines
+        let m = lex("code(); /* open\nstill comment\n*/ more();");
+        assert_eq!(m.lines[0].code, "code(); ");
+        assert_eq!(m.lines[1].code, "");
+        assert_eq!(m.lines[1].comment, "still comment");
+        assert_eq!(m.lines[2].code, " more();");
+    }
+
+    #[test]
+    fn raw_strings_char_literals_and_lifetimes() {
+        let m = lex(r##"let r = r#""quoted""#; let c = '\n'; let lt: &'a [u8] = b;"##);
+        assert_eq!(m.lines[0].code, r#"let r = ""; let c = ''; let lt: &'a [u8] = b;"#);
+    }
+
+    #[test]
+    fn byte_strings_are_blanked_like_plain_strings() {
+        let m = lex(r#"let b = b"magic[0]"; let ident_rb = not_raw(r);"#);
+        assert_eq!(m.lines[0].code, r#"let b = ""; let ident_rb = not_raw(r);"#);
+    }
+
+    #[test]
+    fn marks_braced_cfg_test_regions() {
+        let src = "fn a() {}\n#[cfg(test)]\nmod tests {\n    fn b() {}\n}\nfn c() {}";
+        let m = model(src, false);
+        let flags: Vec<bool> = m.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![false, true, true, true, true, false]);
+    }
+
+    #[test]
+    fn braceless_cfg_test_item_ends_at_semicolon() {
+        let src = "#[cfg(test)]\nuse foo::bar;\nfn d() {}";
+        let m = model(src, false);
+        let flags: Vec<bool> = m.lines.iter().map(|l| l.in_test).collect();
+        assert_eq!(flags, vec![true, true, false]);
+    }
+
+    #[test]
+    fn all_test_forces_every_line() {
+        let m = model("fn a() {}\nfn b() {}", true);
+        assert!(m.lines.iter().all(|l| l.in_test));
+    }
+
+    #[test]
+    fn line_accessor_is_one_based() {
+        let m = lex("a\nb");
+        assert_eq!(m.line(1).map(|l| l.code.as_str()), Some("a"));
+        assert_eq!(m.line(2).map(|l| l.code.as_str()), Some("b"));
+        assert!(m.line(0).is_none());
+        assert!(m.line(3).is_none());
+    }
+}

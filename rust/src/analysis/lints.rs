@@ -1,0 +1,725 @@
+//! The project lint registry.
+//!
+//! Each lint is a pure function from lexed sources ([`super::lexer`]) to
+//! [`Finding`]s. The five initial lints guard invariants this codebase
+//! already paid for once:
+//!
+//! * [`unsafe_audit`] — every `unsafe` block/impl carries an adjacent
+//!   `// SAFETY:` justification (the mmap FFI discipline).
+//! * [`atomics_ordering`] — per-module allowlist of atomic `Ordering`s:
+//!   telemetry stays `Relaxed` (the ≤-one-atomic-op overhead contract),
+//!   the live-chain RCU publication stays `Acquire`/`Release`, and
+//!   `SeqCst` is deny-by-default everywhere.
+//! * [`panic_free_decode`] — `unwrap`/`expect`/panicking macros/direct
+//!   slice indexing are forbidden in the decode-path modules that face
+//!   hostile bytes (typed faults only).
+//! * [`wire_discipline`] — the opcode table in `net/wire.rs` is
+//!   cross-checked against its own test corpus, decode version gates,
+//!   and the README wire table.
+//! * [`timed_gating`] — `Instant::now()` in instrumented serving modules
+//!   must be gated (`enabled()` / trace-context presence), preserving
+//!   the near-zero disabled-mode overhead.
+
+use super::lexer::Line;
+use super::{Finding, SourceFile};
+
+/// Every lint id, in reporting order.
+pub const LINT_IDS: &[&str] = &[
+    "unsafe-audit",
+    "atomics-ordering",
+    "panic-free-decode",
+    "wire-discipline",
+    "timed-gating",
+];
+
+/// Run the whole registry over `files`. `readme` is the repo README (the
+/// wire-discipline lint checks its wire table); absent, those checks are
+/// skipped.
+pub fn run_all(files: &[SourceFile], readme: Option<&str>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for f in files {
+        out.extend(unsafe_audit(f));
+        out.extend(atomics_ordering(f));
+        out.extend(panic_free_decode(f));
+        out.extend(timed_gating(f));
+    }
+    out.extend(wire_discipline(files, readme));
+    out.sort_by(|a, b| (&a.path, a.line, a.lint).cmp(&(&b.path, b.line, b.lint)));
+    out
+}
+
+fn finding(
+    lint: &'static str,
+    file: &SourceFile,
+    lineno: usize,
+    message: String,
+) -> Finding {
+    let excerpt = file
+        .model
+        .line(lineno)
+        .map(|l| {
+            let mut e = l.code.trim().to_string();
+            if e.is_empty() {
+                e = l.comment.trim().to_string();
+            }
+            e
+        })
+        .unwrap_or_default();
+    Finding { lint, path: file.path.clone(), line: lineno, message, excerpt }
+}
+
+fn is_ident_char(c: char) -> bool {
+    c.is_ascii_alphanumeric() || c == '_'
+}
+
+/// Whether `hay` contains `word` with non-identifier characters (or the
+/// string boundary) on both sides.
+fn has_word(hay: &str, word: &str) -> bool {
+    find_word(hay, word, 0).is_some()
+}
+
+/// Position of the next word-boundary occurrence of `word` at or after
+/// `from`.
+fn find_word(hay: &str, word: &str, from: usize) -> Option<usize> {
+    let mut at = from;
+    while let Some(rel) = hay.get(at..).and_then(|h| h.find(word)) {
+        let pos = at + rel;
+        let before_ok = pos == 0
+            || !hay[..pos].chars().next_back().is_some_and(is_ident_char);
+        let after_ok = !hay[pos + word.len()..].chars().next().is_some_and(is_ident_char);
+        if before_ok && after_ok {
+            return Some(pos);
+        }
+        at = pos + word.len();
+    }
+    None
+}
+
+// ---------------------------------------------------------------------
+// unsafe-audit
+// ---------------------------------------------------------------------
+
+/// Every non-test `unsafe` block / fn / impl must be immediately preceded
+/// by a `// SAFETY:` comment (attribute lines and contiguous runs of
+/// `unsafe impl` may sit between the comment and the site).
+pub fn unsafe_audit(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    for (idx, line) in file.model.lines.iter().enumerate() {
+        if line.in_test || !has_word(&line.code, "unsafe") {
+            continue;
+        }
+        if !has_safety_comment(&file.model.lines, idx) {
+            out.push(finding(
+                "unsafe-audit",
+                file,
+                idx + 1,
+                "`unsafe` without an immediately preceding `// SAFETY:` comment".into(),
+            ));
+        }
+    }
+    out
+}
+
+/// Walk upward from the `unsafe` at line index `idx` looking for the
+/// justifying comment: the site's own line counts, blank lines don't
+/// break adjacency, contiguous comment-only lines are scanned as one
+/// block (`// SAFETY:` may open a multi-line comment), and attributes
+/// and earlier `unsafe impl` lines are skipped (one comment may cover a
+/// contiguous `Send`/`Sync` pair). Any other code line ends the search.
+fn has_safety_comment(lines: &[Line], idx: usize) -> bool {
+    if lines[idx].comment.contains("SAFETY:") {
+        return true;
+    }
+    let mut i = idx;
+    while i > 0 {
+        i -= 1;
+        let l = &lines[i];
+        let code = l.code.trim();
+        if l.comment.contains("SAFETY:") {
+            return true;
+        }
+        let skippable = code.is_empty()
+            || code.starts_with("#[")
+            || code.starts_with("unsafe impl");
+        if !skippable {
+            return false;
+        }
+    }
+    false
+}
+
+// ---------------------------------------------------------------------
+// atomics-ordering
+// ---------------------------------------------------------------------
+
+/// The atomic orderings a module is allowed to use. Longest matching
+/// path prefix wins; a module using atomics with no entry at all is a
+/// finding (add one deliberately). `SeqCst` appears in no entry: it is
+/// deny-by-default project-wide.
+pub const ORDERING_ALLOWLIST: &[(&str, &[&str])] = &[
+    // telemetry: the ≤-one-relaxed-op-per-event overhead contract
+    ("src/obs/", &["Relaxed"]),
+    ("src/util/logging.rs", &["Relaxed"]),
+    // engine progress counters
+    ("src/engine/", &["Relaxed"]),
+    // RCU generation publication: store-Release / load-Acquire only
+    ("src/serve/live.rs", &["Acquire", "Release"]),
+    // split-completion latch (AcqRel fetch_sub) + trace dedup flag
+    ("src/serve/server.rs", &["Relaxed", "AcqRel"]),
+    ("src/serve/store.rs", &["Relaxed"]),
+    // shutdown flag (Acquire load / AcqRel swap) + relaxed counters
+    ("src/net/server.rs", &["Relaxed", "Acquire", "AcqRel"]),
+];
+
+const ATOMIC_ORDERINGS: &[&str] = &["Relaxed", "Acquire", "Release", "AcqRel", "SeqCst"];
+
+/// Enforce [`ORDERING_ALLOWLIST`] on every non-test `Ordering::…` use in
+/// `src/`.
+pub fn atomics_ordering(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !file.path.starts_with("src/") {
+        return out;
+    }
+    let allowed = ORDERING_ALLOWLIST
+        .iter()
+        .filter(|(prefix, _)| file.path.starts_with(prefix))
+        .max_by_key(|(prefix, _)| prefix.len())
+        .map(|(_, orders)| *orders);
+    for (idx, line) in file.model.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        for ord in ATOMIC_ORDERINGS {
+            let token = format!("Ordering::{ord}");
+            if !has_word(&line.code, &token) {
+                continue;
+            }
+            match allowed {
+                None => out.push(finding(
+                    "atomics-ordering",
+                    file,
+                    idx + 1,
+                    format!(
+                        "module uses atomic `{token}` but has no entry in the \
+                         ordering allowlist — add one deliberately"
+                    ),
+                )),
+                Some(orders) if !orders.contains(ord) => out.push(finding(
+                    "atomics-ordering",
+                    file,
+                    idx + 1,
+                    format!(
+                        "`{token}` not permitted here (allowed: {})",
+                        orders.join(", ")
+                    ),
+                )),
+                Some(_) => {}
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// panic-free-decode
+// ---------------------------------------------------------------------
+
+/// The modules whose decode paths face bytes from disk or the wire:
+/// panicking on hostile input is a denial-of-service, so every fault must
+/// be a typed error.
+pub const PANIC_FREE_FILES: &[&str] = &[
+    "src/net/wire.rs",
+    "src/sketch/bitio.rs",
+    "src/sketch/encode.rs",
+    "src/serve/store.rs",
+    "src/obs/snapshot.rs",
+];
+
+/// Identifiers that legally precede a `[` without indexing (keywords, so
+/// `for x in [..]`, `let [a, b] = …`, `if let [..]` stay clean).
+const NON_INDEX_KEYWORDS: &[&str] = &[
+    "as", "break", "box", "continue", "dyn", "else", "in", "let", "match", "mut",
+    "move", "ref", "return", "static", "where", "while", "yield",
+];
+
+/// Forbid `unwrap()` / `expect()` / panicking macros / direct slice
+/// indexing in the non-test code of [`PANIC_FREE_FILES`].
+pub fn panic_free_decode(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !PANIC_FREE_FILES.contains(&file.path.as_str()) {
+        return out;
+    }
+    for (idx, line) in file.model.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = &line.code;
+        for call in ["unwrap", "expect"] {
+            let mut at = 0;
+            while let Some(pos) = find_word(code, call, at) {
+                at = pos + call.len();
+                // a call (next char `(`) of the exact method — so
+                // `unwrap_or_else` / `expect_err` never match
+                if code[at..].starts_with('(') {
+                    out.push(finding(
+                        "panic-free-decode",
+                        file,
+                        idx + 1,
+                        format!("`.{call}()` in decode-path code — return a typed fault"),
+                    ));
+                }
+            }
+        }
+        for mac in ["panic", "unreachable", "todo", "unimplemented"] {
+            if let Some(pos) = find_word(code, mac, 0) {
+                if code[pos + mac.len()..].starts_with('!') {
+                    out.push(finding(
+                        "panic-free-decode",
+                        file,
+                        idx + 1,
+                        format!("`{mac}!` in decode-path code — return a typed fault"),
+                    ));
+                }
+            }
+        }
+        for pos in index_expression_positions(code) {
+            out.push(finding(
+                "panic-free-decode",
+                file,
+                idx + 1,
+                format!(
+                    "direct slice index at column {} — use `get`/`get_mut` and \
+                     return a typed fault",
+                    pos + 1
+                ),
+            ));
+        }
+    }
+    out
+}
+
+/// Positions of `[` tokens that open an index expression: the previous
+/// meaningful character ends an indexable expression (identifier, `)`,
+/// `]`, or a string literal), excluding keywords, attributes (`#[`), and
+/// macro invocations (`vec![…]`).
+fn index_expression_positions(code: &str) -> Vec<usize> {
+    let chars: Vec<char> = code.chars().collect();
+    let mut out = Vec::new();
+    for (i, &c) in chars.iter().enumerate() {
+        if c != '[' {
+            continue;
+        }
+        let mut j = i;
+        while j > 0 && chars[j - 1] == ' ' {
+            j -= 1;
+        }
+        if j == 0 {
+            continue;
+        }
+        let prev = chars[j - 1];
+        let indexes = match prev {
+            ')' | ']' | '"' => true,
+            _ if is_ident_char(prev) => {
+                let mut k = j - 1;
+                while k > 0 && is_ident_char(chars[k - 1]) {
+                    k -= 1;
+                }
+                if k > 0 && chars[k - 1] == '\'' {
+                    // a lifetime: `&'a [u8]` is a slice type, not indexing
+                    continue;
+                }
+                let word: String = chars[k..j].iter().collect();
+                !NON_INDEX_KEYWORDS.contains(&word.as_str())
+            }
+            _ => false,
+        };
+        if indexes {
+            out.push(i);
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// wire-discipline
+// ---------------------------------------------------------------------
+
+/// One opcode parsed out of `net/wire.rs`.
+#[derive(Debug)]
+struct Opcode {
+    name: String,
+    hex: String,
+    line: usize,
+    /// `Some(v)` when a decode arm gates it with `if version >= v`.
+    min_version: Option<u32>,
+}
+
+/// Cross-check the opcode table in `src/net/wire.rs`:
+///
+/// * every `const OP_*` is referenced by non-test code (no dead opcodes);
+/// * every opcode name appears in the wire test region (the round-trip /
+///   malformed-corpus suites must cover it);
+/// * every opcode's hex appears as a `` `0xNN` `` row in the README wire
+///   table, and a version-gated opcode's row carries its `(vN+` tag.
+pub fn wire_discipline(files: &[SourceFile], readme: Option<&str>) -> Vec<Finding> {
+    let mut out = Vec::new();
+    let Some(wire) = files.iter().find(|f| f.path == "src/net/wire.rs") else {
+        return out;
+    };
+    let opcodes = parse_opcodes(wire);
+    for op in &opcodes {
+        let mut test_ref = false;
+        let mut nontest_refs = 0usize;
+        for (idx, line) in wire.model.lines.iter().enumerate() {
+            if idx + 1 == op.line || !has_word(&line.code, &op.name) {
+                continue;
+            }
+            if line.in_test {
+                test_ref = true;
+            } else {
+                nontest_refs += 1;
+            }
+        }
+        if nontest_refs == 0 {
+            out.push(finding(
+                "wire-discipline",
+                wire,
+                op.line,
+                format!("opcode `{}` ({}) is never encoded or decoded", op.name, op.hex),
+            ));
+        }
+        if !test_ref {
+            out.push(finding(
+                "wire-discipline",
+                wire,
+                op.line,
+                format!(
+                    "opcode `{}` ({}) is not exercised by the wire test region \
+                     (round-trip + malformed corpus)",
+                    op.name, op.hex
+                ),
+            ));
+        }
+        if let Some(readme) = readme {
+            let needle = format!("`{}`", op.hex);
+            match readme.find(&needle) {
+                None => out.push(finding(
+                    "wire-discipline",
+                    wire,
+                    op.line,
+                    format!(
+                        "opcode `{}` ({}) has no `{}` row in the README wire table",
+                        op.name, op.hex, op.hex
+                    ),
+                )),
+                Some(pos) => {
+                    if let Some(v) = op.min_version {
+                        let tail = readme[pos..].chars().take(80).collect::<String>();
+                        if !tail.contains(&format!("(v{v}+")) {
+                            out.push(finding(
+                                "wire-discipline",
+                                wire,
+                                op.line,
+                                format!(
+                                    "opcode `{}` ({}) is gated on version >= {v} but its \
+                                     README row lacks the `(v{v}+)` tag",
+                                    op.name, op.hex
+                                ),
+                            ));
+                        }
+                    }
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Parse `const OP_*: u8 = 0xNN;` declarations and their decode-side
+/// `OP_* if version >= N` gates from the non-test code of `wire.rs`.
+fn parse_opcodes(wire: &SourceFile) -> Vec<Opcode> {
+    let mut out: Vec<Opcode> = Vec::new();
+    for (idx, line) in wire.model.lines.iter().enumerate() {
+        if line.in_test {
+            continue;
+        }
+        let code = line.code.trim();
+        if let Some(rest) = code.strip_prefix("const OP_") {
+            if let Some((name_tail, value)) = rest.split_once(": u8 = ") {
+                let name = format!("OP_{name_tail}");
+                let hex = value.trim_end_matches(';').trim().to_string();
+                out.push(Opcode { name, hex, line: idx + 1, min_version: None });
+            }
+        }
+        // decode gate: `OP_NAME if version >= N`
+        let mut at = 0;
+        while let Some(pos) = code[at..].find(" if version >= ") {
+            let abs = at + pos;
+            at = abs + 1;
+            let Some(name_start) = code[..abs].rfind("OP_") else { continue };
+            let name: String = code[name_start..abs]
+                .chars()
+                .take_while(|&c| is_ident_char(c))
+                .collect();
+            let ver: String = code[abs + " if version >= ".len()..]
+                .chars()
+                .take_while(char::is_ascii_digit)
+                .collect();
+            if let (Some(op), Ok(v)) =
+                (out.iter_mut().find(|o| o.name == name), ver.parse::<u32>())
+            {
+                op.min_version = Some(v);
+            }
+        }
+    }
+    out
+}
+
+// ---------------------------------------------------------------------
+// timed-gating
+// ---------------------------------------------------------------------
+
+/// The serving modules instrumented by the telemetry/tracing layers; the
+/// overhead contract says their clock reads must be gated on recording
+/// being on.
+pub const TIMED_FILES: &[&str] = &[
+    "src/net/server.rs",
+    "src/serve/server.rs",
+    "src/serve/live.rs",
+    "src/api/local.rs",
+];
+
+/// Evidence that a nearby expression gates the clock read: registry
+/// `enabled()`, trace-context presence combinators, or span recording
+/// (already inside a trace-gated branch).
+const GATE_TOKENS: &[&str] =
+    &["enabled", ".then(", ".map(", "unwrap_or_else", ".record", "record_with", "is_some"];
+
+/// `Instant::now()` in [`TIMED_FILES`] must show gating evidence within
+/// the surrounding statement (4 lines above through 1 below).
+pub fn timed_gating(file: &SourceFile) -> Vec<Finding> {
+    let mut out = Vec::new();
+    if !TIMED_FILES.contains(&file.path.as_str()) {
+        return out;
+    }
+    let lines = &file.model.lines;
+    for (idx, line) in lines.iter().enumerate() {
+        if line.in_test || !line.code.contains("Instant::now") {
+            continue;
+        }
+        let lo = idx.saturating_sub(4);
+        let hi = (idx + 2).min(lines.len());
+        let gated = lines[lo..hi]
+            .iter()
+            .any(|l| GATE_TOKENS.iter().any(|t| l.code.contains(t)));
+        if !gated {
+            out.push(finding(
+                "timed-gating",
+                file,
+                idx + 1,
+                "`Instant::now()` without `enabled()`/trace gating in an \
+                 instrumented module (overhead contract)"
+                    .into(),
+            ));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn file(path: &str, src: &str) -> SourceFile {
+        SourceFile::new(path, src)
+    }
+
+    // --- unsafe-audit -------------------------------------------------
+
+    #[test]
+    fn unsafe_without_safety_comment_is_flagged() {
+        let src = "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n";
+        let out = unsafe_audit(&file("src/x.rs", src));
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].lint, out[0].line), ("unsafe-audit", 2));
+        assert_eq!(out[0].excerpt, "unsafe { *p }");
+    }
+
+    #[test]
+    fn safety_comment_silences_unsafe() {
+        let src = "fn f(p: *const u8) -> u8 {\n    // SAFETY: caller keeps p valid\n    \
+                   unsafe { *p }\n}\n";
+        assert!(unsafe_audit(&file("src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn one_multiline_safety_comment_covers_a_send_sync_pair() {
+        let src = "// SAFETY: immutable after construction,\n// so sharing is sound.\n\
+                   unsafe impl Send for X {}\nunsafe impl Sync for X {}\n";
+        assert!(unsafe_audit(&file("src/x.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn intervening_code_breaks_safety_adjacency() {
+        let src = "// SAFETY: stale justification\nlet x = 1;\nunsafe { hazard() }\n";
+        let out = unsafe_audit(&file("src/x.rs", src));
+        assert_eq!(out.len(), 1);
+        assert_eq!(out[0].line, 3);
+    }
+
+    #[test]
+    fn test_region_unsafe_is_exempt() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(p: *const u8) -> u8 {\n        \
+                   unsafe { *p }\n    }\n}\n";
+        assert!(unsafe_audit(&file("src/x.rs", src)).is_empty());
+    }
+
+    // --- atomics-ordering ---------------------------------------------
+
+    #[test]
+    fn seqcst_is_denied_everywhere() {
+        let src = "fn f(c: &AtomicU64) { c.store(1, Ordering::SeqCst); }\n";
+        let out = atomics_ordering(&file("src/obs/metrics.rs", src));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("SeqCst"));
+    }
+
+    #[test]
+    fn telemetry_keeps_relaxed_and_live_chain_keeps_acquire_release() {
+        let relaxed = "fn f(c: &AtomicU64) { c.store(1, Ordering::Relaxed); }\n";
+        assert!(atomics_ordering(&file("src/obs/metrics.rs", relaxed)).is_empty());
+        let acq = "fn f(a: &AtomicPtr<u8>) { a.load(Ordering::Acquire); }\n";
+        assert!(atomics_ordering(&file("src/serve/live.rs", acq)).is_empty());
+        let out = atomics_ordering(&file("src/serve/live.rs", relaxed));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("not permitted"));
+    }
+
+    #[test]
+    fn module_without_allowlist_entry_is_flagged() {
+        let src = "fn f(c: &AtomicU64) { c.load(Ordering::Relaxed); }\n";
+        let out = atomics_ordering(&file("src/sketch/fresh.rs", src));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("no entry"));
+    }
+
+    #[test]
+    fn atomics_lint_exempts_tests_and_non_src_files() {
+        let src = "#[cfg(test)]\nmod tests {\n    fn f(a: &AtomicU64) { \
+                   a.load(Ordering::SeqCst); }\n}\n";
+        assert!(atomics_ordering(&file("src/serve/live.rs", src)).is_empty());
+        let bench = "fn f(c: &AtomicU64) { c.store(1, Ordering::SeqCst); }\n";
+        assert!(atomics_ordering(&file("benches/b.rs", bench)).is_empty());
+    }
+
+    // --- panic-free-decode --------------------------------------------
+
+    #[test]
+    fn unwrap_macros_and_indexing_flagged_in_decode_paths() {
+        let src = "fn f(v: &[u8]) -> u8 {\n    let x = v.first().unwrap();\n    \
+                   if *x > 9 { panic!(\"bad\") }\n    v[0]\n}\n";
+        let out = panic_free_decode(&file("src/net/wire.rs", src));
+        let lines: Vec<usize> = out.iter().map(|f| f.line).collect();
+        assert_eq!(lines, vec![2, 3, 4]);
+        assert!(out[2].message.contains("direct slice index"));
+    }
+
+    #[test]
+    fn non_panicking_lookalikes_stay_clean() {
+        let src = "fn f(v: &[u8]) -> u8 {\n    let x = v.first().unwrap_or(&0);\n    \
+                   let [a, b] = [*x, 2];\n    for y in [a, b] {\n        let _ = y;\n    }\n    \
+                   let s: &[u8] = v;\n    s.first().copied().expect_none_is_fine(a, b)\n}\n";
+        assert!(panic_free_decode(&file("src/sketch/bitio.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn lifetime_slice_types_are_not_indexing() {
+        let src = "struct Rd<'a> {\n    buf: &'a [u8],\n}\n";
+        assert!(panic_free_decode(&file("src/net/wire.rs", src)).is_empty());
+    }
+
+    #[test]
+    fn panic_free_scope_is_limited_to_decode_files() {
+        let src = "fn f(v: &[u8]) -> u8 { v[0] }\n";
+        assert!(panic_free_decode(&file("src/main.rs", src)).is_empty());
+    }
+
+    // --- wire-discipline ----------------------------------------------
+
+    fn wire_fixture() -> SourceFile {
+        let src = "const OP_PING: u8 = 0x01;\n\
+                   const OP_STATS: u8 = 0x14;\n\
+                   fn decode(version: u16, op: u8) -> u8 {\n\
+                       match op {\n\
+                           OP_PING => 1,\n\
+                           OP_STATS if version >= 4 => 2,\n\
+                           _ => 0,\n\
+                       }\n\
+                   }\n\
+                   #[cfg(test)]\n\
+                   mod tests {\n\
+                       fn corpus() -> (u8, u8) { (OP_PING, OP_STATS) }\n\
+                   }\n";
+        SourceFile::new("src/net/wire.rs", src)
+    }
+
+    #[test]
+    fn consistent_wire_fixture_is_clean() {
+        let readme = "| `0x01` | Ping |\n| `0x14` | Stats (v4+) |\n";
+        assert!(wire_discipline(&[wire_fixture()], Some(readme)).is_empty());
+        // without a README there is nothing to cross-check against
+        assert!(wire_discipline(&[wire_fixture()], None).is_empty());
+    }
+
+    #[test]
+    fn dead_untested_and_undocumented_opcodes_are_flagged() {
+        let f = SourceFile::new("src/net/wire.rs", "const OP_GHOST: u8 = 0x7F;\n");
+        let out = wire_discipline(&[f], Some("no wire table here"));
+        let msgs: Vec<&str> = out.iter().map(|f| f.message.as_str()).collect();
+        assert_eq!(out.len(), 3);
+        assert!(msgs.iter().any(|m| m.contains("never encoded")));
+        assert!(msgs.iter().any(|m| m.contains("not exercised")));
+        assert!(msgs.iter().any(|m| m.contains("README wire table")));
+        assert!(out.iter().all(|f| f.line == 1));
+    }
+
+    #[test]
+    fn version_gated_opcode_requires_readme_tag() {
+        let readme = "| `0x01` | Ping |\n| `0x14` | Stats |\n";
+        let out = wire_discipline(&[wire_fixture()], Some(readme));
+        assert_eq!(out.len(), 1);
+        assert!(out[0].message.contains("(v4+)"));
+        assert_eq!(out[0].line, 2);
+    }
+
+    // --- timed-gating -------------------------------------------------
+
+    #[test]
+    fn ungated_clock_read_in_instrumented_module_is_flagged() {
+        let src = "fn f() {\n    let t = Instant::now();\n    work(t);\n}\n";
+        let out = timed_gating(&file("src/serve/server.rs", src));
+        assert_eq!(out.len(), 1);
+        assert_eq!((out[0].lint, out[0].line), ("timed-gating", 2));
+    }
+
+    #[test]
+    fn enabled_gate_and_uninstrumented_modules_stay_clean() {
+        let src = "fn f(reg: &Registry) {\n    if reg.enabled() {\n        \
+                   let t = Instant::now();\n        work(t);\n    }\n}\n";
+        assert!(timed_gating(&file("src/serve/server.rs", src)).is_empty());
+        let other = "fn f() { let t = Instant::now(); work(t); }\n";
+        assert!(timed_gating(&file("src/sketch/merge.rs", other)).is_empty());
+    }
+
+    // --- registry -----------------------------------------------------
+
+    #[test]
+    fn run_all_sorts_findings_by_location() {
+        let a = file("src/serve/server.rs", "fn f() {\n    let t = Instant::now();\n}\n");
+        let b = file("src/net/wire.rs", "fn f(v: &[u8]) -> u8 { v.first().unwrap() }\n");
+        let out = run_all(&[a, b], None);
+        assert_eq!(out.len(), 2);
+        assert_eq!(out[0].path, "src/net/wire.rs");
+        assert_eq!(out[1].path, "src/serve/server.rs");
+    }
+}

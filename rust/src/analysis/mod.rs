@@ -1,0 +1,239 @@
+//! Project static analysis: the `matsketch lint` subcommand.
+//!
+//! A std-only source analyzer enforcing the invariants this codebase's
+//! serving stack depends on but the compiler cannot see:
+//!
+//! * the **unsafe-audit** discipline around the raw-libc `mmap` FFI,
+//! * the **atomics-ordering allowlist** (telemetry is Relaxed-only, the
+//!   live-chain RCU publication is Acquire/Release, `SeqCst` is
+//!   deny-by-default),
+//! * **panic-free decode** paths facing bytes from disk or the wire,
+//! * the **wire-discipline** cross-check between `net/wire.rs`'s opcode
+//!   table, its test corpus, and the README wire table,
+//! * **timed-section gating** per the telemetry overhead contract.
+//!
+//! The pipeline: [`lexer`] strips comments/strings with a small
+//! hand-rolled Rust lexer and marks `#[cfg(test)]` regions, [`lints`]
+//! runs the registry over every `.rs` file, [`baseline`] subtracts the
+//! checked-in `lint.allow` exceptions (reporting stale entries), and
+//! [`report`] emits `reports/lint.{json,md}`. The CLI exits nonzero on
+//! any non-baselined finding, which is what the CI `lint` step gates on.
+//!
+//! Everything is a pure function of file contents, so the self-test
+//! fixtures inject violations as in-memory sources and the integration
+//! suite asserts the real tree is lint-clean.
+
+pub mod baseline;
+pub mod lexer;
+pub mod lints;
+pub mod report;
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use crate::error::{Error, Result};
+
+pub use baseline::AllowEntry;
+
+/// One loaded-and-lexed source file.
+#[derive(Debug)]
+pub struct SourceFile {
+    /// Crate-relative path with `/` separators (e.g. `src/net/wire.rs`).
+    pub path: String,
+    /// Raw source text.
+    pub src: String,
+    /// Lexed form (code/comment split, test regions marked).
+    pub model: lexer::Model,
+}
+
+impl SourceFile {
+    /// Lex `src` under crate-relative `path`. Files under `tests/` are
+    /// test code in their entirety.
+    pub fn new(path: &str, src: &str) -> SourceFile {
+        let all_test = path.starts_with("tests/");
+        SourceFile {
+            path: path.to_string(),
+            src: src.to_string(),
+            model: lexer::model(src, all_test),
+        }
+    }
+}
+
+/// One lint finding, pointing at `path:line`.
+#[derive(Debug, Clone)]
+pub struct Finding {
+    /// Lint id (one of [`lints::LINT_IDS`]).
+    pub lint: &'static str,
+    /// Crate-relative path.
+    pub path: String,
+    /// 1-based line.
+    pub line: usize,
+    /// What is wrong and what to do instead.
+    pub message: String,
+    /// The trimmed code text of the offending line (baseline key).
+    pub excerpt: String,
+}
+
+impl Finding {
+    /// `path:line [lint] message` — the CLI output row.
+    pub fn render(&self) -> String {
+        format!("{}:{} [{}] {}", self.path, self.line, self.lint, self.message)
+    }
+}
+
+/// Where to find the tree, the baseline, and where to write reports.
+#[derive(Debug, Clone)]
+pub struct LintConfig {
+    /// The cargo crate root (the directory holding `Cargo.toml`).
+    pub crate_root: PathBuf,
+    /// The repo README carrying the wire table, if present.
+    pub readme: Option<PathBuf>,
+    /// The `lint.allow` baseline file, if present.
+    pub allow: Option<PathBuf>,
+}
+
+impl LintConfig {
+    /// Locate the project from `start` (usually the working directory):
+    /// walk upward to the first directory holding `Cargo.toml` and
+    /// `src/`, take the wire-table README from that crate root or its
+    /// parent, and the baseline from `src/analysis/lint.allow`.
+    pub fn locate(start: &Path) -> Result<LintConfig> {
+        let mut dir = start.to_path_buf();
+        loop {
+            if dir.join("Cargo.toml").is_file() && dir.join("src").is_dir() {
+                break;
+            }
+            // a checkout root holding the crate under `rust/`
+            if dir.join("rust/Cargo.toml").is_file() && dir.join("rust/src").is_dir() {
+                dir = dir.join("rust");
+                break;
+            }
+            if !dir.pop() {
+                return Err(Error::invalid(format!(
+                    "no Cargo.toml + src/ found above {}",
+                    start.display()
+                )));
+            }
+        }
+        let readme = [dir.join("README.md"), dir.join("../README.md")]
+            .into_iter()
+            .find(|p| p.is_file());
+        let allow = Some(dir.join("src/analysis/lint.allow")).filter(|p| p.is_file());
+        Ok(LintConfig { crate_root: dir, readme, allow })
+    }
+}
+
+/// The outcome of one analyzer run.
+#[derive(Debug)]
+pub struct LintReport {
+    /// `.rs` files scanned.
+    pub files_scanned: usize,
+    /// Non-baselined findings — any entry here fails the run.
+    pub findings: Vec<Finding>,
+    /// Findings accepted by `lint.allow`.
+    pub baselined: Vec<Finding>,
+    /// `lint.allow` entries that matched nothing (rot).
+    pub stale_allow: Vec<AllowEntry>,
+}
+
+impl LintReport {
+    /// Whether the tree passes (no non-baselined findings).
+    pub fn clean(&self) -> bool {
+        self.findings.is_empty()
+    }
+}
+
+/// Run the registry over in-memory sources — the hook the self-test
+/// fixtures and the integration suite use to inject violations.
+pub fn analyze_sources(
+    files: &[SourceFile],
+    readme: Option<&str>,
+    allow: &[AllowEntry],
+) -> LintReport {
+    let all = lints::run_all(files, readme);
+    let (findings, baselined, stale_allow) = baseline::apply(all, allow);
+    LintReport { files_scanned: files.len(), findings, baselined, stale_allow }
+}
+
+/// Run the analyzer over the tree described by `cfg`.
+pub fn run(cfg: &LintConfig) -> Result<LintReport> {
+    let mut files = Vec::new();
+    for sub in ["src", "tests", "benches", "examples"] {
+        let dir = cfg.crate_root.join(sub);
+        if dir.is_dir() {
+            collect_rs(&dir, &cfg.crate_root, &mut files)?;
+        }
+    }
+    let readme = match &cfg.readme {
+        Some(p) => Some(fs::read_to_string(p)?),
+        None => None,
+    };
+    let allow = match &cfg.allow {
+        Some(p) => baseline::parse(&fs::read_to_string(p)?),
+        None => Vec::new(),
+    };
+    Ok(analyze_sources(&files, readme.as_deref(), &allow))
+}
+
+/// Recursively collect `.rs` files under `dir` (sorted, deterministic).
+fn collect_rs(dir: &Path, root: &Path, out: &mut Vec<SourceFile>) -> Result<()> {
+    let mut entries: Vec<PathBuf> =
+        fs::read_dir(dir)?.filter_map(|e| e.ok().map(|e| e.path())).collect();
+    entries.sort();
+    for path in entries {
+        if path.is_dir() {
+            collect_rs(&path, root, out)?;
+        } else if path.extension().is_some_and(|x| x == "rs") {
+            let rel = path
+                .strip_prefix(root)
+                .unwrap_or(&path)
+                .components()
+                .map(|c| c.as_os_str().to_string_lossy())
+                .collect::<Vec<_>>()
+                .join("/");
+            out.push(SourceFile::new(&rel, &fs::read_to_string(&path)?));
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const BAD_DECODE: &str = "fn f(v: &[u8]) -> u8 {\n    v[0]\n}\n";
+
+    #[test]
+    fn analyze_sources_reports_open_findings() {
+        let report =
+            analyze_sources(&[SourceFile::new("src/net/wire.rs", BAD_DECODE)], None, &[]);
+        assert!(!report.clean());
+        assert_eq!(report.files_scanned, 1);
+        assert_eq!(report.findings.len(), 1);
+        let f = &report.findings[0];
+        assert_eq!((f.lint, f.line, f.excerpt.as_str()), ("panic-free-decode", 2, "v[0]"));
+        assert_eq!(f.render(), format!("src/net/wire.rs:2 [panic-free-decode] {}", f.message));
+    }
+
+    #[test]
+    fn baseline_accepts_matches_and_reports_rot() {
+        let allow = baseline::parse(
+            "panic-free-decode\tsrc/net/wire.rs\tv[0]\nunsafe-audit\tsrc/gone.rs\tunsafe {}\n",
+        );
+        let report =
+            analyze_sources(&[SourceFile::new("src/net/wire.rs", BAD_DECODE)], None, &allow);
+        assert!(report.clean());
+        assert_eq!(report.baselined.len(), 1);
+        assert_eq!(report.stale_allow.len(), 1);
+        assert_eq!(report.stale_allow[0].line, 2);
+    }
+
+    #[test]
+    fn tests_dir_files_are_test_code_in_their_entirety() {
+        let f = SourceFile::new(
+            "tests/integration.rs",
+            "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n",
+        );
+        assert!(analyze_sources(&[f], None, &[]).clean());
+    }
+}

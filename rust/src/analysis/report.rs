@@ -1,0 +1,139 @@
+//! Lint report emission: `reports/lint.json` (the CI gate artifact) and
+//! `reports/lint.md` (the human summary).
+
+use std::collections::BTreeMap;
+use std::fmt::Write as _;
+use std::fs;
+use std::path::Path;
+
+use crate::error::Result;
+use crate::util::json::Json;
+
+use super::lints::LINT_IDS;
+use super::{Finding, LintReport};
+
+fn finding_json(f: &Finding) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("lint".into(), Json::Str(f.lint.into()));
+    m.insert("path".into(), Json::Str(f.path.clone()));
+    m.insert("line".into(), Json::Num(f.line as f64));
+    m.insert("message".into(), Json::Str(f.message.clone()));
+    m.insert("excerpt".into(), Json::Str(f.excerpt.clone()));
+    Json::Obj(m)
+}
+
+/// The `lint.json` document. `clean` is the CI gate: zero non-baselined
+/// findings.
+pub fn to_json(r: &LintReport) -> Json {
+    let mut m = BTreeMap::new();
+    m.insert("schema".into(), Json::Num(1.0));
+    m.insert("files_scanned".into(), Json::Num(r.files_scanned as f64));
+    m.insert("clean".into(), Json::Bool(r.findings.is_empty()));
+    m.insert("findings".into(), Json::Arr(r.findings.iter().map(finding_json).collect()));
+    m.insert(
+        "baselined".into(),
+        Json::Arr(r.baselined.iter().map(finding_json).collect()),
+    );
+    m.insert(
+        "stale_allow".into(),
+        Json::Arr(r.stale_allow.iter().map(|e| Json::Str(e.render())).collect()),
+    );
+    Json::Obj(m)
+}
+
+/// The `lint.md` document.
+pub fn to_markdown(r: &LintReport) -> String {
+    let mut out = String::new();
+    let _ = writeln!(out, "# matsketch lint");
+    let _ = writeln!(out);
+    let _ = writeln!(
+        out,
+        "{} file(s) scanned — **{}**, {} finding(s), {} baselined, {} stale \
+         baseline entr(ies).",
+        r.files_scanned,
+        if r.findings.is_empty() { "clean" } else { "FAILING" },
+        r.findings.len(),
+        r.baselined.len(),
+        r.stale_allow.len(),
+    );
+    let _ = writeln!(out);
+    let _ = writeln!(out, "| lint | findings | baselined |");
+    let _ = writeln!(out, "|---|---:|---:|");
+    for id in LINT_IDS {
+        let open = r.findings.iter().filter(|f| f.lint == *id).count();
+        let base = r.baselined.iter().filter(|f| f.lint == *id).count();
+        let _ = writeln!(out, "| {id} | {open} | {base} |");
+    }
+    for (title, list) in [("Findings", &r.findings), ("Baselined", &r.baselined)] {
+        if list.is_empty() {
+            continue;
+        }
+        let _ = writeln!(out);
+        let _ = writeln!(out, "## {title}");
+        let _ = writeln!(out);
+        for f in list.iter() {
+            let _ = writeln!(
+                out,
+                "- `{}:{}` **{}** — {} (`{}`)",
+                f.path, f.line, f.lint, f.message, f.excerpt
+            );
+        }
+    }
+    if !r.stale_allow.is_empty() {
+        let _ = writeln!(out);
+        let _ = writeln!(out, "## Stale `lint.allow` entries");
+        let _ = writeln!(out);
+        for e in &r.stale_allow {
+            let _ = writeln!(out, "- line {}: `{}`", e.line, e.render());
+        }
+    }
+    out
+}
+
+/// Write `lint.json` + `lint.md` under `dir` (created if needed).
+pub fn write(r: &LintReport, dir: &Path) -> Result<()> {
+    fs::create_dir_all(dir)?;
+    fs::write(dir.join("lint.json"), to_json(r).to_string())?;
+    fs::write(dir.join("lint.md"), to_markdown(r))?;
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample() -> LintReport {
+        LintReport {
+            files_scanned: 3,
+            findings: vec![Finding {
+                lint: "timed-gating",
+                path: "src/serve/live.rs".to_string(),
+                line: 12,
+                message: "ungated clock read".to_string(),
+                excerpt: "let t = Instant::now();".to_string(),
+            }],
+            baselined: Vec::new(),
+            stale_allow: Vec::new(),
+        }
+    }
+
+    #[test]
+    fn json_carries_the_ci_gate_flag() {
+        let doc = to_json(&sample()).to_string();
+        assert!(doc.contains("\"clean\":false"));
+        assert!(doc.contains("\"files_scanned\":3"));
+        assert!(doc.contains("src/serve/live.rs"));
+        let clean = LintReport { findings: Vec::new(), ..sample() };
+        assert!(to_json(&clean).to_string().contains("\"clean\":true"));
+    }
+
+    #[test]
+    fn markdown_counts_findings_per_lint() {
+        let md = to_markdown(&sample());
+        assert!(md.contains("FAILING"));
+        assert!(md.contains("| timed-gating | 1 | 0 |"));
+        assert!(md.contains("`src/serve/live.rs:12`"));
+        let clean = to_markdown(&LintReport { findings: Vec::new(), ..sample() });
+        assert!(clean.contains("**clean**"));
+    }
+}

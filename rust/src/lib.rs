@@ -58,6 +58,7 @@
 //! println!("kept {} of {} entries", b.nnz(), a.nnz());
 //! ```
 
+pub mod analysis;
 pub mod api;
 pub mod config;
 pub mod coordinator;

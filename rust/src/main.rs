@@ -31,6 +31,7 @@
 //!                       [--out DIR]
 //! matsketch stats       --addr HOST:PORT [--json] [--watch SECS]
 //! matsketch trace       --addr HOST:PORT [--id N | --slowest N]
+//! matsketch lint        [--root DIR] [--out DIR]
 //! matsketch gen         --dataset NAME [--seed N] --out a.bin
 //! ```
 //!
@@ -45,6 +46,7 @@
 use std::path::{Path, PathBuf};
 use std::process::ExitCode;
 
+use matsketch::analysis;
 use matsketch::api::{
     LocalClient, QueryRequest, QueryResponse, RemoteClient, SketchClient, SketchInfo,
 };
@@ -504,6 +506,37 @@ fn real_main() -> Result<()> {
             )?;
             info!("net-bench: {} points -> {}/net_serving.*", pts.len(), out.display());
         }
+        "lint" => {
+            let start = match args.get("root") {
+                Some(r) => PathBuf::from(r),
+                None => std::env::current_dir()?,
+            };
+            let cfg = analysis::LintConfig::locate(&start)?;
+            let report = analysis::run(&cfg)?;
+            analysis::report::write(&report, &out)?;
+            for f in &report.findings {
+                println!("{}", f.render());
+            }
+            for e in &report.stale_allow {
+                warn_log!("lint: stale lint.allow entry (line {}): {}", e.line, e.render());
+            }
+            info!(
+                "lint: {} files, {} finding(s), {} baselined, {} stale allow \
+                 entr(ies) -> {}/lint.*",
+                report.files_scanned,
+                report.findings.len(),
+                report.baselined.len(),
+                report.stale_allow.len(),
+                out.display()
+            );
+            if !report.clean() {
+                return Err(Error::invalid(format!(
+                    "{} lint finding(s); see {}/lint.md",
+                    report.findings.len(),
+                    out.display()
+                )));
+            }
+        }
         other => {
             print_help();
             return Err(Error::invalid(format!("unknown command {other}")));
@@ -868,6 +901,10 @@ COMMANDS:
                JSON blob (--json), or interval diff stream (--watch S)
   trace        fetch retained request traces from a running server and
                render their span timelines (--id N or --slowest N)
+  lint         run the project static analyzer (unsafe-audit, atomics
+               orderings, panic-free decode, wire discipline, timed-
+               section gating) and write reports/lint.{{json,md}}; exits
+               nonzero on any non-baselined finding
   net-shutdown send the graceful-shutdown sentinel to a running server
 
 COMMON OPTIONS:
@@ -947,6 +984,14 @@ TRACE OPTIONS:
   --slowest N (default 5) fetches the N slowest retained roots. Traces
   exist only for sampled requests — serve --trace-one-in-n 1 traces
   every query, and roots slower than --slow-us land in the slow log.
+
+LINT OPTIONS:
+  [--root DIR] [--out DIR]
+  Locates the crate from --root (default: the working directory, walking
+  up to the first Cargo.toml + src/), scans src/tests/benches/examples,
+  subtracts the src/analysis/lint.allow baseline, and writes
+  reports/lint.{{json,md}}. Findings print as path:line [lint] message;
+  stale baseline entries are warned about and fail the CI report checks.
 "
     );
 }

@@ -142,13 +142,13 @@ struct Shared {
 
 impl Shared {
     fn shutting_down(&self) -> bool {
-        self.shutdown.load(Ordering::SeqCst)
+        self.shutdown.load(Ordering::Acquire)
     }
 
     /// Flip the shutdown flag and poke the acceptor awake with a
     /// throwaway loopback connection.
     fn trigger_shutdown(&self) {
-        if !self.shutdown.swap(true, Ordering::SeqCst) {
+        if !self.shutdown.swap(true, Ordering::AcqRel) {
             let _ = TcpStream::connect_timeout(&self.addr, Duration::from_secs(1));
         }
     }
@@ -222,9 +222,10 @@ impl NetServer {
     pub fn wait(self) -> NetServerStats {
         let _ = self.acceptor.join();
         NetServerStats {
-            connections: self.shared.connections.load(Ordering::SeqCst),
-            frames: self.shared.frames.load(Ordering::SeqCst),
-            faults: self.shared.faults.load(Ordering::SeqCst),
+            // the acceptor join above already synchronizes these writers
+            connections: self.shared.connections.load(Ordering::Relaxed),
+            frames: self.shared.frames.load(Ordering::Relaxed),
+            faults: self.shared.faults.load(Ordering::Relaxed),
         }
     }
 }
@@ -247,19 +248,19 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
             refuse(stream, ErrCode::ShuttingDown, "server is shutting down");
             break;
         }
-        shared.connections.fetch_add(1, Ordering::SeqCst);
+        shared.connections.fetch_add(1, Ordering::Relaxed);
         obs::global().inc(Counter::NetConnAccepted);
         // reap finished handler threads so a long-lived server doesn't
         // accumulate join handles
         handlers.retain(|h| !h.is_finished());
-        if shared.conns.load(Ordering::SeqCst) >= shared.cfg.max_connections {
-            shared.faults.fetch_add(1, Ordering::SeqCst);
+        if shared.conns.load(Ordering::Relaxed) >= shared.cfg.max_connections {
+            shared.faults.fetch_add(1, Ordering::Relaxed);
             refuse(stream, ErrCode::Busy, "connection limit reached");
             continue;
         }
-        shared.conns.fetch_add(1, Ordering::SeqCst);
+        shared.conns.fetch_add(1, Ordering::Relaxed);
         obs::global().gauge_add(Gauge::NetConnections, 1);
-        let id = shared.conn_seq.fetch_add(1, Ordering::SeqCst);
+        let id = shared.conn_seq.fetch_add(1, Ordering::Relaxed);
         if let Ok(clone) = stream.try_clone() {
             shared.live.lock().expect("live registry poisoned").insert(id, clone);
         }
@@ -267,7 +268,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         let shared2 = Arc::clone(&shared);
         handlers.push(std::thread::spawn(move || {
             handle_connection(&shared2, stream);
-            shared2.conns.fetch_sub(1, Ordering::SeqCst);
+            shared2.conns.fetch_sub(1, Ordering::Relaxed);
             obs::global().gauge_add(Gauge::NetConnections, -1);
             obs::global().inc(Counter::NetConnClosed);
             shared2.live.lock().expect("live registry poisoned").remove(&id);
@@ -462,11 +463,11 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
             frame_bytes = encode_response_v(version, request_id, &resp);
         }
         if let Response::Error { code, message } = &resp {
-            shared.faults.fetch_add(1, Ordering::SeqCst);
+            shared.faults.fetch_add(1, Ordering::Relaxed);
             reg.inc(fault_counter(*code));
             debug_log!("net: request {request_id} faulted: {message} ({})", code.name());
         }
-        shared.frames.fetch_add(1, Ordering::SeqCst);
+        shared.frames.fetch_add(1, Ordering::Relaxed);
         if let Some(t0) = started {
             reg.record_duration(Hist::NetRequestUs, t0.elapsed());
         }
@@ -508,8 +509,8 @@ fn send_fault(
     code: ErrCode,
     message: &str,
 ) {
-    shared.faults.fetch_add(1, Ordering::SeqCst);
-    shared.frames.fetch_add(1, Ordering::SeqCst);
+    shared.faults.fetch_add(1, Ordering::Relaxed);
+    shared.frames.fetch_add(1, Ordering::Relaxed);
     obs::global().inc(fault_counter(code));
     debug_log!("net: request {request_id} faulted: {message} ({})", code.name());
     let resp = Response::Error { code, message: message.into() };

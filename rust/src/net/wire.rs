@@ -374,7 +374,7 @@ fn put_str(out: &mut Vec<u8>, s: &str) {
     let bytes = s.as_bytes();
     let len = bytes.len().min(u16::MAX as usize);
     put_u16(out, len as u16);
-    out.extend_from_slice(&bytes[..len]);
+    out.extend_from_slice(bytes.get(..len).unwrap_or(bytes));
 }
 
 /// Cursor over one received payload; every read is bounds-checked and
@@ -395,31 +395,38 @@ impl<'a> Rd<'a> {
     }
 
     fn take(&mut self, n: usize) -> WireResult<&'a [u8]> {
-        if self.remaining() < n {
-            return Err(WireFault::new(
+        let s = self.buf.get(self.pos..self.pos.saturating_add(n)).ok_or_else(|| {
+            WireFault::new(
                 ErrCode::Malformed,
                 format!("payload short: wanted {n} more bytes, have {}", self.remaining()),
-            ));
-        }
-        let s = &self.buf[self.pos..self.pos + n];
+            )
+        })?;
         self.pos += n;
         Ok(s)
     }
 
+    /// [`Rd::take`], as a fixed-size array (for `from_be_bytes`).
+    fn take_arr<const N: usize>(&mut self) -> WireResult<[u8; N]> {
+        self.take(N)?.try_into().map_err(|_| {
+            WireFault::new(ErrCode::Malformed, "payload short: fixed field truncated")
+        })
+    }
+
     fn u8(&mut self) -> WireResult<u8> {
-        Ok(self.take(1)?[0])
+        let [b] = self.take_arr::<1>()?;
+        Ok(b)
     }
 
     fn u16(&mut self) -> WireResult<u16> {
-        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_be_bytes(self.take_arr()?))
     }
 
     fn u32(&mut self) -> WireResult<u32> {
-        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_be_bytes(self.take_arr()?))
     }
 
     fn u64(&mut self) -> WireResult<u64> {
-        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_be_bytes(self.take_arr()?))
     }
 
     fn f64(&mut self) -> WireResult<f64> {
@@ -698,8 +705,8 @@ pub fn encode_response(request_id: u64, resp: &Response) -> Vec<u8> {
 pub fn read_frame_header(r: &mut impl Read) -> io::Result<Option<[u8; FRAME_HEADER_LEN]>> {
     let mut buf = [0u8; FRAME_HEADER_LEN];
     let mut filled = 0usize;
-    while filled < buf.len() {
-        match r.read(&mut buf[filled..]) {
+    while let Some(rest) = buf.get_mut(filled..).filter(|r| !r.is_empty()) {
+        match r.read(rest) {
             Ok(0) if filled == 0 => return Ok(None),
             Ok(0) => {
                 return Err(io::Error::new(
@@ -717,13 +724,14 @@ pub fn read_frame_header(r: &mut impl Read) -> io::Result<Option<[u8; FRAME_HEAD
 
 /// Validate a frame header's magic / version / length bounds.
 pub fn parse_frame_header(buf: &[u8; FRAME_HEADER_LEN]) -> WireResult<FrameHeader> {
-    if buf[0..4] != WIRE_MAGIC {
+    let mut rd = Rd::new(buf);
+    if rd.take(4)? != WIRE_MAGIC {
         return Err(WireFault::new(
             ErrCode::Malformed,
             "bad magic (not a matsketch wire frame)",
         ));
     }
-    let version = u16::from_be_bytes([buf[4], buf[5]]);
+    let version = rd.u16()?;
     if !(MIN_WIRE_VERSION..=WIRE_VERSION).contains(&version) {
         return Err(WireFault::new(
             ErrCode::BadVersion,
@@ -733,9 +741,10 @@ pub fn parse_frame_header(buf: &[u8; FRAME_HEADER_LEN]) -> WireResult<FrameHeade
             ),
         ));
     }
-    let opcode = buf[6];
-    let request_id = u64::from_be_bytes(buf[8..16].try_into().unwrap());
-    let len = u32::from_be_bytes(buf[16..20].try_into().unwrap());
+    let opcode = rd.u8()?;
+    let _reserved = rd.u8()?;
+    let request_id = rd.u64()?;
+    let len = rd.u32()?;
     if len > MAX_PAYLOAD {
         return Err(WireFault::new(
             ErrCode::Oversized,
@@ -1484,5 +1493,76 @@ mod tests {
         let mut partial: &[u8] = &good[..7];
         let err = read_frame_header(&mut partial).unwrap_err();
         assert_eq!(err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    /// Every request opcode with the lowest protocol version whose
+    /// decode arm accepts it. The wire-discipline lint (`matsketch
+    /// lint`) checks that each `OP_*` const is exercised inside this
+    /// test region — keep these tables exhaustive when adding opcodes.
+    const REQUEST_OPS: &[(u8, u16)] = &[
+        (OP_PING, 1),
+        (OP_LIST, 1),
+        (OP_OPEN, 1),
+        (OP_SHUTDOWN, 1),
+        (OP_STATS, 4),
+        (OP_TRACE_DUMP, 5),
+        (OP_MATVEC, 1),
+        (OP_MATVEC_T, 1),
+        (OP_ROW, 1),
+        (OP_COL, 1),
+        (OP_TOP_K, 1),
+        (OP_MATVEC_BATCH, 2),
+        (OP_GEN_POLL, 3),
+    ];
+
+    /// Response twin of [`REQUEST_OPS`].
+    const RESPONSE_OPS: &[(u8, u16)] = &[
+        (OP_PONG, 1),
+        (OP_SKETCH_LIST, 1),
+        (OP_SKETCH_OPENED, 1),
+        (OP_SHUTTING_DOWN, 1),
+        (OP_VECTOR, 1),
+        (OP_ENTRIES, 1),
+        (OP_VECTORS, 1),
+        (OP_GENERATION, 3),
+        (OP_STATS_SNAPSHOT, 4),
+        (OP_TRACES, 5),
+        (OP_ERROR, 1),
+    ];
+
+    #[test]
+    fn malformed_corpus_covers_every_opcode() {
+        // hostile payloads: empty, trailing garbage, truncated fields,
+        // and a pathological length claim — every opcode must answer
+        // each with a typed fault or a clean decode, never a panic
+        let corpus: &[&[u8]] =
+            &[&[], &[0xAB], &[0xFF; 3], &[0xFF; 64], &u32::MAX.to_be_bytes()];
+        let mut faults = 0usize;
+        for &(op, min_v) in REQUEST_OPS {
+            for payload in corpus {
+                if let Err(fault) = decode_request(min_v, op, payload) {
+                    assert!(!fault.message.is_empty(), "{op:#04x}: empty fault message");
+                    faults += 1;
+                }
+                if min_v > MIN_WIRE_VERSION {
+                    // below its gate the opcode is rejected, not misread
+                    let fault = decode_request(min_v - 1, op, payload).unwrap_err();
+                    assert_eq!(fault.code, ErrCode::UnknownOpcode, "{op:#04x}");
+                }
+            }
+        }
+        for &(op, min_v) in RESPONSE_OPS {
+            for payload in corpus {
+                if let Err(fault) = decode_response(min_v, op, payload) {
+                    assert!(!fault.message.is_empty(), "{op:#04x}: empty fault message");
+                    faults += 1;
+                }
+                if min_v > MIN_WIRE_VERSION {
+                    let fault = decode_response(min_v - 1, op, payload).unwrap_err();
+                    assert_eq!(fault.code, ErrCode::UnknownOpcode, "{op:#04x}");
+                }
+            }
+        }
+        assert!(faults > 40, "corpus unexpectedly tame: only {faults} faults");
     }
 }

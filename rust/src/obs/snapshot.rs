@@ -64,7 +64,8 @@ impl MetricsSnapshot {
         let Some(buckets) = self.hist(name) else { return 0.0 };
         let edges: Vec<(f64, f64)> =
             (0..buckets.len().min(HIST_BUCKETS)).map(hist_bucket_bounds).collect();
-        histogram_quantile(&buckets[..edges.len()], &edges, q).unwrap_or(0.0)
+        let head = buckets.get(..edges.len()).unwrap_or(buckets);
+        histogram_quantile(head, &edges, q).unwrap_or(0.0)
     }
 
     /// True when no counter, gauge, or bucket is non-zero.
@@ -202,24 +203,31 @@ struct Cursor<'a> {
 
 impl Cursor<'_> {
     fn take(&mut self, n: usize) -> Result<&[u8]> {
-        if self.b.len() - self.i < n {
-            return Err(Error::Parse("truncated metrics snapshot".into()));
-        }
-        let s = &self.b[self.i..self.i + n];
+        let s = self
+            .b
+            .get(self.i..self.i.saturating_add(n))
+            .ok_or_else(|| Error::Parse("truncated metrics snapshot".into()))?;
         self.i += n;
         Ok(s)
     }
 
+    /// [`Cursor::take`], as a fixed-size array (for `from_be_bytes`).
+    fn take_arr<const N: usize>(&mut self) -> Result<[u8; N]> {
+        self.take(N)?
+            .try_into()
+            .map_err(|_| Error::Parse("truncated metrics snapshot".into()))
+    }
+
     fn u16(&mut self) -> Result<u16> {
-        Ok(u16::from_be_bytes(self.take(2)?.try_into().unwrap()))
+        Ok(u16::from_be_bytes(self.take_arr()?))
     }
 
     fn u32(&mut self) -> Result<u32> {
-        Ok(u32::from_be_bytes(self.take(4)?.try_into().unwrap()))
+        Ok(u32::from_be_bytes(self.take_arr()?))
     }
 
     fn u64(&mut self) -> Result<u64> {
-        Ok(u64::from_be_bytes(self.take(8)?.try_into().unwrap()))
+        Ok(u64::from_be_bytes(self.take_arr()?))
     }
 
     /// Element count whose remaining payload must hold at least

@@ -122,13 +122,13 @@ impl Fingerprinter {
         Fingerprinter { h: FNV_OFFSET }
     }
 
-    /// Fold one entry into the fingerprint.
+    /// Fold one entry into the fingerprint (12 bytes: row, col, val
+    /// bits, each big-endian — extended in field order, so the digest
+    /// matches hashing the concatenated buffer).
     pub fn push(&mut self, e: &Entry) {
-        let mut buf = [0u8; 12];
-        buf[0..4].copy_from_slice(&e.row.to_be_bytes());
-        buf[4..8].copy_from_slice(&e.col.to_be_bytes());
-        buf[8..12].copy_from_slice(&e.val.to_bits().to_be_bytes());
-        self.h = fnv1a64_extend(self.h, &buf);
+        let h = fnv1a64_extend(self.h, &e.row.to_be_bytes());
+        let h = fnv1a64_extend(h, &e.col.to_be_bytes());
+        self.h = fnv1a64_extend(h, &e.val.to_bits().to_be_bytes());
     }
 
     /// The fingerprint; remapped away from the 0 sentinel.
@@ -431,10 +431,16 @@ pub fn decode_container_shared(data: &SharedBytes) -> Result<StoredSketch> {
         return Err(err("trailing bytes after payload"));
     }
     let payload = data.slice(h.header_bytes..h.header_bytes + h.payload_len);
-    let index_bytes = &data[h.header_bytes + h.payload_len..];
+    let index_bytes = data
+        .get(h.header_bytes + h.payload_len..)
+        .ok_or_else(|| err("truncated index section"))?;
     // the stored sum covers all header bytes before the checksum field
     // plus the payload and (v2) the index section
-    let covered = &data[..h.header_bytes - 8];
+    let covered = h
+        .header_bytes
+        .checked_sub(8)
+        .and_then(|n| data.get(..n))
+        .ok_or_else(|| err("header too short for checksum"))?;
     let got_sum = fnv1a64_extend(fnv1a64_extend(fnv1a64(covered), &payload), index_bytes);
     if got_sum != h.checksum {
         return Err(Error::Parse(format!(

@@ -140,10 +140,11 @@ impl<'a> BitReader<'a> {
     /// the same values over them — idempotent by construction.
     #[inline]
     fn refill(&mut self) {
-        if self.next_byte + 8 <= self.buf.len() {
-            let bytes: [u8; 8] = self.buf[self.next_byte..self.next_byte + 8]
-                .try_into()
-                .expect("8-byte window");
+        let window = self
+            .buf
+            .get(self.next_byte..self.next_byte.saturating_add(8))
+            .and_then(|w| <[u8; 8]>::try_from(w).ok());
+        if let Some(bytes) = window {
             self.word |= u64::from_be_bytes(bytes) >> self.avail;
             self.next_byte += ((63 - self.avail) >> 3) as usize;
             self.avail |= 56;

@@ -84,7 +84,7 @@ pub fn encode_sketch(sk: &Sketch) -> Result<EncodedSketch> {
     if !sk
         .entries
         .windows(2)
-        .all(|p| (p[0].row, p[0].col) < (p[1].row, p[1].col))
+        .all(|p| matches!(p, [a, b] if (a.row, a.col) < (b.row, b.col)))
     {
         return Err(Error::invalid("sketch entries must be sorted row-major"));
     }
@@ -92,9 +92,12 @@ pub fn encode_sketch(sk: &Sketch) -> Result<EncodedSketch> {
     let mut idx = 0usize;
     let mut prev_row = 0u64;
     w.put_gamma(count_rows(&sk.entries) as u64 + 1); // number of occupied rows + 1
-    while idx < sk.entries.len() {
-        let row = sk.entries[idx].row;
-        let end = sk.entries[idx..]
+    while let Some(first) = sk.entries.get(idx) {
+        let row = first.row;
+        let end = sk
+            .entries
+            .get(idx..)
+            .unwrap_or(&[])
             .iter()
             .position(|e| e.row != row)
             .map(|p| idx + p)
@@ -104,7 +107,7 @@ pub fn encode_sketch(sk: &Sketch) -> Result<EncodedSketch> {
         prev_row = row as u64;
         w.put_gamma((end - idx) as u64);
         let mut prev_col = 0u64;
-        for e in &sk.entries[idx..end] {
+        for e in sk.entries.get(idx..end).unwrap_or(&[]) {
             w.put_gamma(e.col as u64 - prev_col + 1);
             prev_col = e.col as u64;
             w.put_gamma(e.count as u64);
@@ -292,10 +295,14 @@ impl<'a> SketchCursor<'a> {
         hi: usize,
     ) -> SketchCursor<'a> {
         debug_assert!(lo <= hi && hi <= index.len(), "row_range {lo}..{hi} of {}", index.len());
-        let (bit_offset, prev_row) = if lo >= hi || lo >= index.len() {
-            (enc.bytes.len() * 8, 0) // empty window: clean immediate end
-        } else {
-            (index[lo].1 as usize, if lo == 0 { 0 } else { index[lo - 1].0 })
+        let first = if lo < hi { index.get(lo) } else { None };
+        let (bit_offset, prev_row) = match first {
+            // empty window: clean immediate end
+            None => (enc.bytes.len() * 8, 0),
+            Some(&(_, start_bit)) => (
+                start_bit as usize,
+                lo.checked_sub(1).and_then(|p| index.get(p)).map_or(0, |g| g.0),
+            ),
         };
         SketchCursor {
             reader: BitReader::new_at(&enc.bytes, bit_offset),

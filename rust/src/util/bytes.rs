@@ -139,7 +139,10 @@ pub mod mmap {
         len: usize,
     }
 
-    // The mapping is read-only and never remapped after construction.
+    // SAFETY: the mapping is read-only (PROT_READ) and never remapped
+    // after construction, so concurrent access from any thread only ever
+    // observes the same immutable bytes; the raw pointer is exclusively
+    // owned and unmapped once, on drop.
     unsafe impl Send for MappedFile {}
     unsafe impl Sync for MappedFile {}
 

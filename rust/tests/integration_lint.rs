@@ -1,0 +1,101 @@
+//! Integration: the `matsketch lint` analyzer — the shipped tree must be
+//! lint-clean against the checked-in baseline, injected violations must
+//! surface with `path:line [lint]` locations, and baseline rot (stale
+//! `lint.allow` entries) must be reported rather than silently ignored.
+
+use std::path::Path;
+
+use matsketch::analysis::{self, baseline, LintConfig, SourceFile};
+
+fn render_all(findings: &[analysis::Finding]) -> String {
+    findings.iter().map(|f| f.render()).collect::<Vec<_>>().join("\n")
+}
+
+#[test]
+fn shipped_tree_is_lint_clean() {
+    let cfg = LintConfig::locate(Path::new(env!("CARGO_MANIFEST_DIR")))
+        .expect("crate root not found");
+    let report = analysis::run(&cfg).expect("lint run failed");
+    assert!(
+        report.clean(),
+        "lint findings on the shipped tree:\n{}",
+        render_all(&report.findings)
+    );
+    assert!(
+        report.stale_allow.is_empty(),
+        "stale lint.allow entries:\n{}",
+        report.stale_allow.iter().map(|e| e.render()).collect::<Vec<_>>().join("\n")
+    );
+    // the analyzer actually walked the tree (src + tests + benches)
+    assert!(report.files_scanned > 50, "only {} files scanned", report.files_scanned);
+}
+
+#[test]
+fn shipped_baseline_is_load_bearing() {
+    // every `lint.allow` entry must both parse and accept a real finding
+    // (stale entries are covered above); an empty baseline would mean
+    // the file should be deleted.
+    let cfg = LintConfig::locate(Path::new(env!("CARGO_MANIFEST_DIR"))).unwrap();
+    let allow_path = cfg.allow.as_ref().expect("src/analysis/lint.allow missing");
+    let entries = baseline::parse(&std::fs::read_to_string(allow_path).unwrap());
+    assert!(!entries.is_empty());
+    assert!(entries.iter().all(|e| !e.lint.is_empty() && !e.excerpt.is_empty()));
+    let report = analysis::run(&cfg).unwrap();
+    assert_eq!(report.baselined.len(), entries.len());
+}
+
+#[test]
+fn injected_violations_surface_with_location() {
+    let bad = SourceFile::new(
+        "src/sketch/bitio.rs",
+        "fn read(buf: &[u8]) -> u8 {\n    buf[3]\n}\n",
+    );
+    let report = analysis::analyze_sources(&[bad], None, &[]);
+    assert!(!report.clean());
+    let rendered = render_all(&report.findings);
+    assert!(
+        rendered.starts_with("src/sketch/bitio.rs:2 [panic-free-decode]"),
+        "unexpected rendering: {rendered}"
+    );
+}
+
+#[test]
+fn injected_violations_span_every_lint() {
+    let sources = [
+        SourceFile::new("src/x.rs", "fn f(p: *const u8) -> u8 {\n    unsafe { *p }\n}\n"),
+        SourceFile::new(
+            "src/obs/metrics.rs",
+            "fn f(c: &std::sync::atomic::AtomicU64) {\n    \
+             c.store(1, std::sync::atomic::Ordering::SeqCst);\n}\n",
+        ),
+        SourceFile::new(
+            "src/net/wire.rs",
+            "const OP_GHOST: u8 = 0x7F;\nfn f(v: &[u8]) -> u8 {\n    v[0]\n}\n",
+        ),
+        SourceFile::new("src/serve/live.rs", "fn f() {\n    let t = Instant::now();\n}\n"),
+    ];
+    let report = analysis::analyze_sources(&sources, Some("no wire table"), &[]);
+    let mut lints: Vec<&str> = report.findings.iter().map(|f| f.lint).collect();
+    lints.sort_unstable();
+    lints.dedup();
+    assert_eq!(
+        lints,
+        vec!["atomics-ordering", "panic-free-decode", "timed-gating", "unsafe-audit",
+             "wire-discipline"],
+        "full report:\n{}",
+        render_all(&report.findings)
+    );
+}
+
+#[test]
+fn baseline_rot_is_detected() {
+    let clean = SourceFile::new("src/x.rs", "fn f() {}\n");
+    let allow = baseline::parse("timed-gating\tsrc/serve/live.rs\tlong gone line\n");
+    let report = analysis::analyze_sources(&[clean], None, &allow);
+    assert!(report.clean());
+    assert_eq!(report.stale_allow.len(), 1);
+    assert_eq!(
+        report.stale_allow[0].render(),
+        "timed-gating\tsrc/serve/live.rs\tlong gone line"
+    );
+}
