@@ -5,14 +5,16 @@ use std::net::SocketAddr;
 use std::time::Duration;
 
 use crate::error::Result;
-use crate::net::RemoteSketchClient;
+use crate::net::{RemoteSketchClient, RetryPolicy};
 use crate::serve::StoreKey;
 
 use super::{QueryRequest, QueryResponse, SketchClient, SketchInfo};
 
 /// The remote [`SketchClient`]: one TCP connection to a
 /// `matsketch serve` process, with batch pipelining (a `query_batch`
-/// costs ~one round trip) and a one-shot reconnect + handle re-open on
+/// costs ~one round trip) and policy-driven retries — bounded attempts,
+/// seeded-jitter backoff, retry budget, optional per-request deadline —
+/// that redial and re-open handles (at their pinned generations) on
 /// broken connections.
 ///
 /// Answers are byte-identical to [`super::LocalClient`] over the same
@@ -38,6 +40,20 @@ impl RemoteClient {
     /// The server address this client dials.
     pub fn addr(&self) -> SocketAddr {
         self.inner.addr()
+    }
+
+    /// Replace the retry policy governing idempotent operations
+    /// (reseeds the jitter stream and refills the retry budget).
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.inner.set_retry_policy(policy);
+    }
+
+    /// Set (or with `None` clear) the per-request deadline: the total
+    /// wall-clock budget one operation may spend across attempts and
+    /// backoff sleeps before failing with
+    /// [`Error::Deadline`](crate::error::Error::Deadline).
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.inner.set_deadline(deadline);
     }
 
     /// Liveness probe.

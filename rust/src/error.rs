@@ -35,6 +35,20 @@ pub enum Error {
     /// A generation pin that cannot be served: not yet published, or
     /// retired out of the live chain's retained window.
     Generation(String),
+
+    /// The server shed this request under load (wire `Overloaded`, v6).
+    /// Retryable; `retry_after_us` is the server's backoff hint (0 =
+    /// none given).
+    Overloaded {
+        /// Human-readable detail from the server.
+        message: String,
+        /// Server-suggested backoff before retrying, in microseconds.
+        retry_after_us: u64,
+    },
+
+    /// A per-request deadline expired before the operation completed
+    /// (including any retry backoff the client would still have spent).
+    Deadline(String),
 }
 
 impl fmt::Display for Error {
@@ -49,6 +63,11 @@ impl fmt::Display for Error {
             Error::Io(e) => write!(f, "io error: {e}"),
             Error::Pipeline(m) => write!(f, "pipeline error: {m}"),
             Error::Generation(m) => write!(f, "generation error: {m}"),
+            Error::Overloaded {
+                message,
+                retry_after_us,
+            } => write!(f, "overloaded: {message} (retry after {retry_after_us}\u{b5}s)"),
+            Error::Deadline(m) => write!(f, "deadline exceeded: {m}"),
         }
     }
 }
@@ -98,6 +117,18 @@ mod tests {
         assert_eq!(Error::shape("a != b").to_string(), "shape mismatch: a != b");
         assert_eq!(Error::invalid("bad s").to_string(), "invalid argument: bad s");
         assert_eq!(Error::Parse("x".into()).to_string(), "parse error: x");
+        assert_eq!(
+            Error::Overloaded {
+                message: "shed".into(),
+                retry_after_us: 250
+            }
+            .to_string(),
+            "overloaded: shed (retry after 250\u{b5}s)"
+        );
+        assert_eq!(
+            Error::Deadline("query".into()).to_string(),
+            "deadline exceeded: query"
+        );
     }
 
     #[test]

@@ -1,0 +1,326 @@
+//! E13 — serving under faults: the net-bench closed loop pointed at a
+//! self-hosted server with a seeded [`FaultPlan`] injecting disconnects,
+//! partial writes, corrupted frames, and tarpits, plus queue-depth load
+//! shedding engaged via a low high-water mark.
+//!
+//! The interesting numbers are the *resilience* ones: goodput (answers
+//! that actually landed per second), how many client retries the fault
+//! schedule forced, how many requests the server shed with an
+//! `overloaded` pushback, and the accepted-work tail latency — all next
+//! to the injected-fault count so a report row is interpretable on its
+//! own. Counters come from the process-global [`crate::obs`] registry,
+//! snapshotted around each measurement (client and self-hosted server
+//! share the registry, so one diff covers both sides).
+//!
+//! One table lands in the report directory: `chaos_serving` — dataset ×
+//! clients → goodput, errors, retries, deadline misses, shed count +
+//! rate, injected faults, p50/p99 µs of accepted queries.
+
+use std::path::Path;
+use std::sync::Arc;
+use std::time::Duration;
+
+use crate::datasets::DatasetId;
+use crate::distributions::DistributionKind;
+use crate::engine::{self, PipelineConfig, SketchMode};
+use crate::error::Result;
+use crate::net::{
+    run_load, FaultPlan, LoadGenConfig, LoadOp, NetServer, NetServerConfig, RemoteSketchClient,
+};
+use crate::serve::{coo_fingerprint, SketchStore, StoreKey};
+use crate::sketch::SketchPlan;
+
+use super::report::{fixed, Table};
+
+/// Chaos-bench knobs.
+#[derive(Clone, Debug)]
+pub struct ChaosBenchConfig {
+    /// Concurrent client counts to measure.
+    pub clients: Vec<usize>,
+    /// Queries per client per measurement (ignored with `duration_secs`).
+    pub queries: usize,
+    /// Run each measurement for a fixed time instead (the CI smoke).
+    pub duration_secs: Option<f64>,
+    /// Operation mix, cycled per query.
+    pub ops: Vec<LoadOp>,
+    /// `k` for top-k queries.
+    pub top_k: usize,
+    /// Right-hand sides per `matvec-batch` request in the op mix.
+    pub batch_k: usize,
+    /// Budget as `s = nnz / budget_frac` (min 1000).
+    pub budget_frac: u64,
+    /// Sketching / query seed.
+    pub seed: u64,
+    /// Use reduced-size dataset variants.
+    pub small: bool,
+    /// Server-side query workers per sketch.
+    pub workers: usize,
+    /// Fault-plan spec, [`FaultPlan::parse`] grammar (same as
+    /// `matsketch serve --chaos`).
+    pub chaos: String,
+    /// Queue-depth high-water mark; queries at or past it are shed with
+    /// an `overloaded` pushback (0 disables shedding).
+    pub shed_high_water: usize,
+}
+
+impl Default for ChaosBenchConfig {
+    fn default() -> Self {
+        ChaosBenchConfig {
+            clients: vec![2, 8],
+            queries: 64,
+            duration_secs: None,
+            ops: vec![LoadOp::Matvec, LoadOp::Row, LoadOp::TopK],
+            top_k: 10,
+            batch_k: 4,
+            budget_frac: 10,
+            seed: 0,
+            small: true,
+            workers: 2,
+            chaos: "seed=7,disconnect=0.02,partial=0.01,corrupt=0.005,tarpit=0.02:3".into(),
+            shed_high_water: 2,
+        }
+    }
+}
+
+/// One serving-under-faults measurement.
+#[derive(Clone, Debug)]
+pub struct ChaosPoint {
+    /// Dataset name.
+    pub dataset: String,
+    /// Distribution name.
+    pub method: String,
+    /// Sample budget.
+    pub s: u64,
+    /// Concurrent clients.
+    pub clients: usize,
+    /// Queries answered successfully (goodput numerator).
+    pub queries: u64,
+    /// Queries that failed after the client's retry policy gave up.
+    pub errors: u64,
+    /// Successful queries per second under faults.
+    pub qps: f64,
+    /// Client-side retries the fault schedule forced.
+    pub retries: u64,
+    /// Operations abandoned because a retry would overrun the deadline.
+    pub deadline_misses: u64,
+    /// Queries the server shed with an `overloaded` pushback.
+    pub shed: u64,
+    /// Shed fraction of query arrivals: `shed / (shed + answered)`.
+    pub shed_rate: f64,
+    /// Faults the plan injected during the measurement.
+    pub injected: u64,
+    /// Median latency of accepted queries (µs).
+    pub p50_us: f64,
+    /// 99th percentile latency of accepted queries (µs).
+    pub p99_us: f64,
+}
+
+/// Run the chaos serving benchmark; writes `chaos_serving.csv`/`.md`
+/// under `dir`. Always self-hosted: the fault plan and shedding
+/// high-water mark are server construction knobs, so there is no
+/// external-address mode — point `matsketch serve --chaos` at the same
+/// spec to reproduce a schedule by hand.
+pub fn run_chaos_bench(
+    dir: &Path,
+    store_dir: &Path,
+    cfg: &ChaosBenchConfig,
+    datasets: &[DatasetId],
+) -> Result<Vec<ChaosPoint>> {
+    let store = SketchStore::open(store_dir)?;
+    let kind = DistributionKind::Bernstein;
+    let mut points = Vec::new();
+
+    let (plan, store_fault) = FaultPlan::parse(&cfg.chaos)?;
+    if store_fault.is_some() {
+        // the bench only reads the store (sketches are resolved before
+        // the server starts), so a store= clause would never fire
+        crate::warn_log!("chaos-bench: store= fault in spec ignored (bench is read-only)");
+    }
+    let plan = Arc::new(plan);
+
+    // resolve every dataset's key and make sure the store holds its
+    // sketch before the chaos'd server starts
+    let mut keys: Vec<(DatasetId, StoreKey)> = Vec::new();
+    for id in datasets {
+        let coo = if cfg.small { id.generate_small(cfg.seed) } else { id.generate(cfg.seed) };
+        let s = (coo.nnz() as u64 / cfg.budget_frac.max(1)).max(1_000);
+        let plan_sk = SketchPlan::new(kind, s).with_seed(cfg.seed);
+        let key = StoreKey::new(id.name(), &kind.name(), s, cfg.seed)
+            .with_fingerprint(coo_fingerprint(&coo));
+        let (_, cache_hit) = store.get_or_build(&key, || {
+            let (sk, _) = engine::sketch_coo(
+                SketchMode::Sharded,
+                &coo,
+                &plan_sk,
+                &PipelineConfig::default(),
+            )?;
+            Ok(sk)
+        })?;
+        crate::info!(
+            "chaos-bench: {} {}",
+            key.file_name(),
+            if cache_hit { "from store cache" } else { "built + persisted" }
+        );
+        keys.push((*id, key));
+    }
+
+    let server = NetServer::bind(
+        SketchStore::open(store_dir)?,
+        "127.0.0.1:0",
+        NetServerConfig {
+            workers_per_sketch: cfg.workers.max(1),
+            // every client holds one connection, and injected disconnects
+            // force extra redials; leave generous headroom
+            max_connections: cfg.clients.iter().copied().max().unwrap_or(1) * 2 + 8,
+            shed_high_water: cfg.shed_high_water,
+            chaos: Some(Arc::clone(&plan)),
+            ..Default::default()
+        },
+    )?;
+    let target = server.local_addr().to_string();
+
+    let result = measure_all(&keys, cfg, &target, &mut points);
+    // liveness under standing chaos: control ops are never shed and the
+    // client retries through injected faults, so ping must still answer
+    let ping_ok = RemoteSketchClient::connect(&target).and_then(|mut c| c.ping()).is_ok();
+    let stats = server.shutdown();
+    crate::info!(
+        "chaos-bench: ping under chaos {}; {} faults injected over {} connections \
+         ({} frames)",
+        if ping_ok { "answered" } else { "FAILED" },
+        plan.injected().len(),
+        stats.connections,
+        stats.frames
+    );
+    result?;
+
+    chaos_serving_table(&points).write(dir)?;
+    Ok(points)
+}
+
+/// Drive every `(dataset, key) × client-count` measurement against the
+/// chaos'd server, snapshotting the process-global telemetry around each
+/// point so retries / sheds / injections are attributed per row (split
+/// out so the caller can always shut the server down, even on error).
+fn measure_all(
+    keys: &[(DatasetId, StoreKey)],
+    cfg: &ChaosBenchConfig,
+    target: &str,
+    points: &mut Vec<ChaosPoint>,
+) -> Result<()> {
+    for (id, key) in keys {
+        for &clients in &cfg.clients {
+            let load_cfg = LoadGenConfig {
+                clients,
+                queries_per_client: cfg.queries,
+                duration: cfg.duration_secs.map(Duration::from_secs_f64),
+                ops: cfg.ops.clone(),
+                top_k: cfg.top_k,
+                batch_k: cfg.batch_k,
+                seed: cfg.seed,
+            };
+            let before = crate::obs::global().snapshot();
+            let report = run_load(target, key, &load_cfg)?;
+            let delta = crate::obs::global().snapshot().diff(&before);
+            let retries = delta.counter("client_retry");
+            let deadline_misses = delta.counter("client_deadline");
+            let shed = delta.counter("fault_overloaded");
+            let injected = delta.counter("chaos_injected");
+            let shed_rate = if shed + report.queries > 0 {
+                shed as f64 / (shed + report.queries) as f64
+            } else {
+                0.0
+            };
+            crate::info!(
+                "chaos-bench: {} clients={} -> {:.1} q/s good ({} retries, {} shed, \
+                 {} injected, p99 {:.0} µs)",
+                id.name(),
+                clients,
+                report.qps,
+                retries,
+                shed,
+                injected,
+                report.p99_us
+            );
+            points.push(ChaosPoint {
+                dataset: id.name().to_string(),
+                method: key.method.clone(),
+                s: key.s,
+                clients,
+                queries: report.queries,
+                errors: report.errors,
+                qps: report.qps,
+                retries,
+                deadline_misses,
+                shed,
+                shed_rate,
+                injected,
+                p50_us: report.p50_us,
+                p99_us: report.p99_us,
+            });
+        }
+    }
+    Ok(())
+}
+
+/// Render chaos-bench points as the `chaos_serving` report table.
+pub fn chaos_serving_table(points: &[ChaosPoint]) -> Table {
+    let mut t = Table::new(
+        "chaos_serving",
+        &[
+            "dataset", "method", "s", "clients", "queries", "errors", "qps", "retries",
+            "deadline_misses", "shed", "shed_rate", "injected", "p50_us", "p99_us",
+        ],
+    );
+    for p in points {
+        t.push(vec![
+            p.dataset.clone(),
+            p.method.clone(),
+            p.s.to_string(),
+            p.clients.to_string(),
+            p.queries.to_string(),
+            p.errors.to_string(),
+            fixed(p.qps, 1),
+            p.retries.to_string(),
+            p.deadline_misses.to_string(),
+            p.shed.to_string(),
+            fixed(p.shed_rate, 4),
+            p.injected.to_string(),
+            fixed(p.p50_us, 1),
+            fixed(p.p99_us, 1),
+        ]);
+    }
+    t
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn chaos_bench_self_hosts_and_reports() {
+        let base =
+            std::env::temp_dir().join(format!("matsketch_chaosbench_eval_{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&base);
+        let out = base.join("reports");
+        let store = base.join("store");
+        let cfg = ChaosBenchConfig {
+            clients: vec![2],
+            queries: 8,
+            chaos: "seed=3,disconnect=0.05,tarpit=0.05:2".into(),
+            shed_high_water: 1,
+            ..Default::default()
+        };
+        let datasets = [DatasetId::Synthetic];
+        let pts = run_chaos_bench(&out, &store, &cfg, &datasets).unwrap();
+        assert_eq!(pts.len(), 1);
+        // goodput survives the fault schedule: the retry policy keeps
+        // answers flowing even though faults were injected
+        assert!(pts[0].queries > 0 && pts[0].qps > 0.0, "{pts:?}");
+        assert!(pts[0].shed_rate >= 0.0 && pts[0].shed_rate <= 1.0);
+        let csv = std::fs::read_to_string(out.join("chaos_serving.csv")).unwrap();
+        assert!(out.join("chaos_serving.md").exists());
+        assert!(csv.lines().count() >= 2, "header + one row:\n{csv}");
+        let _ = std::fs::remove_dir_all(&base);
+    }
+}

@@ -9,9 +9,12 @@
 //!   plus the mixed ingest+query live-serving bench).
 //! * [`netbench`] — E11 (remote wire-protocol serving throughput +
 //!   latency percentiles).
+//! * [`chaosbench`] — E13 (serving goodput, retries, and shed rate under
+//!   injected faults and load shedding).
 //! * [`report`] — CSV/markdown emission shared by all drivers.
 
 pub mod ablation;
+pub mod chaosbench;
 pub mod compression;
 pub mod figure1;
 pub mod netbench;
@@ -21,6 +24,7 @@ pub mod tables;
 pub mod theory;
 
 pub use ablation::run_ablation;
+pub use chaosbench::{run_chaos_bench, ChaosBenchConfig, ChaosPoint};
 pub use compression::run_compression;
 pub use figure1::{run_figure1, Figure1Config};
 pub use netbench::{run_net_bench, NetBenchConfig, NetPoint};

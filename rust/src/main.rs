@@ -20,6 +20,7 @@
 //!                       [--max-conns N] [--timeout-secs S]
 //!                       [--shutdown-after-secs S]
 //!                       [--trace-one-in-n N] [--slow-us US]
+//!                       [--shed-high-water N] [--chaos SPEC]
 //!                       [--ingest a.bin --s N [--method NAME]
 //!                        [--epoch-entries E] [--ingest-batch B]]
 //! matsketch live-bench  [--seed N] [--out DIR] [--store DIR]
@@ -29,6 +30,10 @@
 //!                       [--duration-secs S] [--ops matvec,row,top-k]
 //!                       [--batch-k K] [--datasets a,b] [--store DIR]
 //!                       [--out DIR]
+//! matsketch chaos-bench [--clients 2,8] [--queries Q] [--duration-secs S]
+//!                       [--ops matvec,row,top-k] [--chaos SPEC]
+//!                       [--shed-high-water N] [--datasets a,b]
+//!                       [--store DIR] [--out DIR]
 //! matsketch stats       --addr HOST:PORT [--json] [--watch SECS]
 //! matsketch trace       --addr HOST:PORT [--id N | --slowest N]
 //! matsketch lint        [--root DIR] [--out DIR]
@@ -58,7 +63,7 @@ use matsketch::error::{Error, Result};
 use matsketch::eval::{
     run_compression, run_figure1, run_tables, run_theory, server_metrics_table, Figure1Config,
 };
-use matsketch::net::{scrape_stats, LoadOp, NetServer, NetServerConfig};
+use matsketch::net::{scrape_stats, FaultPlan, LoadOp, NetServer, NetServerConfig};
 use matsketch::obs::MetricsSnapshot;
 use matsketch::runtime::{default_engine, DenseEngine, RustEngine, XlaEngine};
 use matsketch::serve::{Fingerprinter, LiveConfig, LiveSketch, SketchStore, StoreKey};
@@ -312,11 +317,26 @@ fn real_main() -> Result<()> {
             } else {
                 None
             };
+            // --chaos installs a seeded, replayable fault plan (and
+            // optionally a store write fault) for resilience drills
+            let chaos = match args.get("chaos") {
+                Some(spec) => {
+                    let (plan, store_fault) = FaultPlan::parse(spec)?;
+                    if let Some(f) = store_fault {
+                        matsketch::net::chaos::install_store_fault(f);
+                    }
+                    info!("chaos enabled: {spec}");
+                    Some(std::sync::Arc::new(plan))
+                }
+                None => None,
+            };
             let cfg = NetServerConfig {
                 workers_per_sketch: args.get_parse_or("workers", 4)?,
                 max_connections: args.get_parse_or("max-conns", 64)?,
                 read_timeout: timeout,
                 write_timeout: timeout,
+                shed_high_water: args.get_parse_or("shed-high-water", 0)?,
+                chaos,
                 ..Default::default()
             };
             // request-tracing knobs: sample one query in N (1 traces
@@ -505,6 +525,27 @@ fn real_main() -> Result<()> {
                 &datasets,
             )?;
             info!("net-bench: {} points -> {}/net_serving.*", pts.len(), out.display());
+        }
+        "chaos-bench" => {
+            let default_chaos = matsketch::eval::ChaosBenchConfig::default().chaos;
+            let cfg = matsketch::eval::ChaosBenchConfig {
+                clients: parse_usize_list(args.get_or("clients", "2,8"))?,
+                queries: args.get_parse_or("queries", 64)?,
+                duration_secs: args.get_parse::<f64>("duration-secs")?,
+                ops: parse_ops(args.get_or("ops", "matvec,row,top-k"))?,
+                top_k: args.get_parse_or("k", 10)?,
+                batch_k: args.get_parse_or("batch-k", 4)?,
+                budget_frac: args.get_parse_or("budget-frac", 10)?,
+                seed,
+                small,
+                workers: args.get_parse_or("workers", 2)?,
+                chaos: args.get_or("chaos", &default_chaos).to_string(),
+                shed_high_water: args.get_parse_or("shed-high-water", 2)?,
+            };
+            let datasets = parse_datasets(args.get("datasets"))?;
+            let store_dir = PathBuf::from(args.get_or("store", "sketch-store"));
+            let pts = matsketch::eval::run_chaos_bench(&out, &store_dir, &cfg, &datasets)?;
+            info!("chaos-bench: {} points -> {}/chaos_serving.*", pts.len(), out.display());
         }
         "lint" => {
             let start = match args.get("root") {
@@ -890,10 +931,11 @@ COMMANDS:
   ablate       E8: row-norm-noise / delta / worker-count ablations
   serve-bench  E9: concurrent + batched query-serving throughput (local client)
   net-bench    E11: remote serving throughput + latency percentiles over TCP
+  chaos-bench  E13: goodput, retries, and shed rate under injected faults
   gen          generate a dataset to a binary triplet file
   sketch       stream-sketch a triplet file into the sketch store
   query        answer a matvec / slice / top-k query (local store or --addr)
-  serve        serve the sketch store over TCP (wire protocol v5, v1-v4
+  serve        serve the sketch store over TCP (wire protocol v6, v1-v5
                accepted); --ingest adds a live ingest-while-serving chain
   live-bench   E12: mixed ingest+query throughput + freshness-lag table
   stats        scrape a running server's telemetry snapshot (per-op
@@ -943,6 +985,7 @@ SERVE-BENCH OPTIONS:
 SERVE OPTIONS:
   --addr HOST:PORT [--workers W] [--max-conns N] [--timeout-secs S]
   [--shutdown-after-secs S] [--trace-one-in-n N] [--slow-us US]
+  [--shed-high-water N] [--chaos SPEC]
   [--ingest a.bin --s N [--method NAME] [--dataset LABEL]
    [--epoch-entries E] [--retain R] [--ingest-batch B]]
   Serves every sketch in the store; clients open by
@@ -951,6 +994,11 @@ SERVE OPTIONS:
   live generation chain served alongside the store: a new immutable
   snapshot publishes every --epoch-entries entries (default 4096), and
   v3 clients can pin queries to a generation or poll for a fresher one.
+  --shed-high-water N sheds queries past N in flight with a typed
+  overloaded fault carrying a retry-after hint (0 = never shed).
+  --chaos SPEC injects a seeded, replayable fault schedule, e.g.
+  seed=7,disconnect=0.02,partial=0.01,corrupt=0.005,tarpit=0.02:3,
+  store=0.1, plus scripted at=CONN:FRAME:KIND[:MS] rules.
 
 LIVE-BENCH OPTIONS:
   [--clients 2,4] [--queries Q] [--entries E] [--epoch-entries E]
@@ -966,6 +1014,14 @@ NET-BENCH OPTIONS:
   Without --addr the server is self-hosted on an ephemeral loopback port
   over --store; results land in reports/net_serving.* plus a
   server-side telemetry diff in reports/server_metrics.*
+
+CHAOS-BENCH OPTIONS:
+  [--clients 2,8] [--queries Q] [--duration-secs S] [--ops ...]
+  [--chaos SPEC] [--shed-high-water N] [--budget-frac F] [--datasets a,b]
+  Always self-hosted: the load runs against a server with the --chaos
+  fault schedule installed and shedding past --shed-high-water queries
+  in flight. Reports goodput, client retries, shed count + rate, and
+  accepted-work latency percentiles to reports/chaos_serving.*
 
 STATS OPTIONS:
   --addr HOST:PORT [--json] [--watch SECS]

@@ -1,0 +1,496 @@
+//! Deterministic fault injection for the serving stack.
+//!
+//! The paper's sampling guarantees are probabilistic; the serving
+//! stack's resilience guarantees must not be. A [`FaultPlan`] is a
+//! seeded, replayable schedule of injected failures: given the same
+//! seed and the same (connection, frame) coordinates, it makes the
+//! same injection decisions every run — so an integration test can
+//! assert "under exactly this failure schedule, every idempotent query
+//! still answers bit-identically to a fault-free run", and a flake is
+//! a bug, not weather.
+//!
+//! Two injection surfaces:
+//!
+//! * **connection faults** — the server asks [`FaultPlan::fault_for`]
+//!   once per decoded frame and applies the verdict: `Disconnect`
+//!   (drop the connection with no reply), `Partial` (write half the
+//!   response bytes, then drop), `Corrupt` (flip the response frame's
+//!   first byte — the magic — then drop, so the damage is always
+//!   detectable client-side; the wire has no checksum, so flipping a
+//!   payload byte could silently change an answer), `Tarpit` (stall
+//!   the handler for a scripted number of milliseconds before
+//!   answering normally).
+//! * **store faults** — a process-global hook ([`install_store_fault`])
+//!   makes [`crate::serve::store::write_encoded`] fail mid-write:
+//!   `Fail` cuts a deterministic fraction of writes short with an
+//!   `ErrorKind::Other` error, `KillAt(offset)` writes exactly
+//!   `offset` bytes of the temp file then errors — simulating a crash
+//!   at that byte, which is how the kill-at-every-offset durability
+//!   test walks the whole file.
+//!
+//! Faults come from two rule sets, checked in order:
+//!
+//! 1. **scripted** rules (`at=CONN:FRAME:KIND[:MS]`) pin one fault to
+//!    exact coordinates — connection ids are assigned in accept order
+//!    and frame indices count decoded frames per connection, so with a
+//!    deterministic client the coordinates are stable;
+//! 2. **probabilistic** rules (`disconnect=P`, `partial=P`, ...) draw
+//!    from a splitmix64-style hash of (seed, conn, frame, kind-salt) —
+//!    no shared RNG state, so the decision for a coordinate never
+//!    depends on which other coordinates were asked first, even under
+//!    concurrent connections.
+//!
+//! Every injection is recorded in an in-plan log; [`FaultPlan::injected`]
+//! returns it sorted by coordinates, so two runs of the same schedule
+//! produce byte-identical logs regardless of thread interleaving.
+//!
+//! The plan is compiled in always and costs nothing when absent: the
+//! server holds an `Option<Arc<FaultPlan>>` and the store hook is a
+//! `Mutex<Option<..>>` checked only on writes (a cold path).
+
+use std::sync::Mutex;
+
+use crate::error::{Error, Result};
+use crate::obs::{self, Counter};
+
+/// One kind of injected connection fault.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub enum FaultKind {
+    /// Drop the connection before answering this frame.
+    Disconnect,
+    /// Write only half of this frame's response bytes, then drop.
+    Partial,
+    /// Flip the first byte (the magic) of this frame's response, then
+    /// drop — always detectable client-side as a header fault.
+    Corrupt,
+    /// Stall the handler for this many milliseconds, then answer
+    /// normally.
+    Tarpit(u64),
+}
+
+impl FaultKind {
+    /// Stable lower-case name (logs, reports).
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultKind::Disconnect => "disconnect",
+            FaultKind::Partial => "partial",
+            FaultKind::Corrupt => "corrupt",
+            FaultKind::Tarpit(_) => "tarpit",
+        }
+    }
+}
+
+/// One recorded injection: which fault fired at which coordinates.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, PartialOrd, Ord)]
+pub struct InjectedFault {
+    /// Accept-order connection id the fault fired on.
+    pub conn: u64,
+    /// Zero-based decoded-frame index within that connection.
+    pub frame: u64,
+    /// What was injected.
+    pub kind: FaultKind,
+}
+
+/// A scripted rule: exactly one fault at exact coordinates.
+#[derive(Clone, Copy, Debug)]
+struct ScriptedFault {
+    conn: u64,
+    frame: u64,
+    kind: FaultKind,
+}
+
+/// A seeded, replayable schedule of connection faults.
+///
+/// Constructed from a SPEC string ([`FaultPlan::parse`]) or built in
+/// code by tests; handed to the server via
+/// [`crate::net::NetServerConfig::chaos`]. Decision functions are pure
+/// in (seed, conn, frame), so the schedule replays identically across
+/// runs and thread interleavings.
+#[derive(Debug, Default)]
+pub struct FaultPlan {
+    /// Seed for the probabilistic rules' hash draws.
+    seed: u64,
+    /// Scripted rules, checked before any probabilistic draw.
+    scripted: Vec<ScriptedFault>,
+    /// Probability a frame's connection is dropped before answering.
+    disconnect_p: f64,
+    /// Probability a frame's response is cut short mid-write.
+    partial_p: f64,
+    /// Probability one response payload byte is flipped.
+    corrupt_p: f64,
+    /// Probability the handler stalls before answering.
+    tarpit_p: f64,
+    /// Stall length for probabilistic tarpits, in milliseconds.
+    tarpit_ms: u64,
+    /// Every injection that actually fired, in firing order.
+    log: Mutex<Vec<InjectedFault>>,
+}
+
+/// splitmix64 finalizer: a cheap, well-mixed hash of one word.
+fn mix(mut z: u64) -> u64 {
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Deterministic uniform draw in [0, 1) for one (seed, conn, frame,
+/// salt) coordinate.
+fn draw(seed: u64, conn: u64, frame: u64, salt: u64) -> f64 {
+    let h = mix(
+        seed.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+            ^ mix(conn.wrapping_add(0xc0a7))
+            ^ mix(frame.wrapping_add(0xf7a3e))
+            ^ mix(salt),
+    );
+    // 53 mantissa bits → exact f64 in [0, 1)
+    (h >> 11) as f64 / (1u64 << 53) as f64
+}
+
+// per-kind salts keep the four probabilistic draws at one coordinate
+// independent of each other
+const SALT_DISCONNECT: u64 = 0xD15C;
+const SALT_PARTIAL: u64 = 0x9A27;
+const SALT_CORRUPT: u64 = 0xC0AA;
+const SALT_TARPIT: u64 = 0x7A29;
+
+impl FaultPlan {
+    /// A plan with only a seed — no rules, injects nothing until rates
+    /// or scripted faults are added.
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan { seed, ..FaultPlan::default() }
+    }
+
+    /// Add one scripted fault at exact (connection, frame) coordinates.
+    pub fn at(mut self, conn: u64, frame: u64, kind: FaultKind) -> FaultPlan {
+        self.scripted.push(ScriptedFault { conn, frame, kind });
+        self
+    }
+
+    /// Set the probabilistic disconnect rate.
+    pub fn disconnect(mut self, p: f64) -> FaultPlan {
+        self.disconnect_p = p;
+        self
+    }
+
+    /// Set the probabilistic partial-write rate.
+    pub fn partial(mut self, p: f64) -> FaultPlan {
+        self.partial_p = p;
+        self
+    }
+
+    /// Set the probabilistic corrupt-frame rate.
+    pub fn corrupt(mut self, p: f64) -> FaultPlan {
+        self.corrupt_p = p;
+        self
+    }
+
+    /// Set the probabilistic tarpit rate and stall length.
+    pub fn tarpit(mut self, p: f64, ms: u64) -> FaultPlan {
+        self.tarpit_p = p;
+        self.tarpit_ms = ms;
+        self
+    }
+
+    /// Parse a chaos SPEC string: comma-separated `key=value` rules.
+    ///
+    /// Grammar (all parts optional, any order):
+    ///
+    /// ```text
+    /// seed=N                     hash seed for probabilistic rules
+    /// disconnect=P               drop the connection, probability P
+    /// partial=P                  cut the response short, probability P
+    /// corrupt=P                  flip a response byte, probability P
+    /// tarpit=P:MS                stall MS milliseconds, probability P
+    /// store=P                    fail a store write, probability P
+    /// at=CONN:FRAME:KIND[:MS]    scripted fault at exact coordinates
+    ///                            (KIND: disconnect|partial|corrupt|tarpit)
+    /// ```
+    ///
+    /// `store=P` returns separately as the second tuple element — store
+    /// writes are process-global (not per-connection), so the caller
+    /// installs it via [`install_store_fault`].
+    pub fn parse(spec: &str) -> Result<(FaultPlan, Option<StoreFault>)> {
+        let mut plan = FaultPlan::default();
+        let mut store = None;
+        for part in spec.split(',').map(str::trim).filter(|p| !p.is_empty()) {
+            let (key, value) = part
+                .split_once('=')
+                .ok_or_else(|| Error::invalid(format!("chaos rule `{part}`: expected key=value")))?;
+            let bad_p = |v: &str| Error::invalid(format!("chaos {key}={v}: not a rate in [0,1]"));
+            let rate = |v: &str| -> Result<f64> {
+                let p: f64 = v.parse().map_err(|_| bad_p(v))?;
+                if (0.0..=1.0).contains(&p) {
+                    Ok(p)
+                } else {
+                    Err(bad_p(v))
+                }
+            };
+            match key {
+                "seed" => {
+                    plan.seed = value
+                        .parse()
+                        .map_err(|_| Error::invalid(format!("chaos seed={value}: not a u64")))?;
+                }
+                "disconnect" => plan.disconnect_p = rate(value)?,
+                "partial" => plan.partial_p = rate(value)?,
+                "corrupt" => plan.corrupt_p = rate(value)?,
+                "tarpit" => {
+                    let (p, ms) = value.split_once(':').ok_or_else(|| {
+                        Error::invalid(format!("chaos tarpit={value}: expected P:MS"))
+                    })?;
+                    plan.tarpit_p = rate(p)?;
+                    plan.tarpit_ms = ms
+                        .parse()
+                        .map_err(|_| Error::invalid(format!("chaos tarpit ms `{ms}`: not a u64")))?;
+                }
+                "store" => {
+                    store = Some(StoreFault::Fail { seed: plan.seed, p: rate(value)?, writes: 0 });
+                }
+                "at" => {
+                    let fields: Vec<&str> = value.split(':').collect();
+                    if fields.len() < 3 {
+                        return Err(Error::invalid(format!(
+                            "chaos at={value}: expected CONN:FRAME:KIND[:MS]"
+                        )));
+                    }
+                    let coord = |i: usize, what: &str| -> Result<u64> {
+                        fields
+                            .get(i)
+                            .and_then(|f| f.parse().ok())
+                            .ok_or_else(|| Error::invalid(format!("chaos at={value}: bad {what}")))
+                    };
+                    let conn = coord(0, "connection id")?;
+                    let frame = coord(1, "frame index")?;
+                    let kind = match fields.get(2).copied() {
+                        Some("disconnect") => FaultKind::Disconnect,
+                        Some("partial") => FaultKind::Partial,
+                        Some("corrupt") => FaultKind::Corrupt,
+                        Some("tarpit") => FaultKind::Tarpit(coord(3, "tarpit ms")?),
+                        _ => {
+                            return Err(Error::invalid(format!(
+                                "chaos at={value}: unknown fault kind"
+                            )))
+                        }
+                    };
+                    plan.scripted.push(ScriptedFault { conn, frame, kind });
+                }
+                _ => return Err(Error::invalid(format!("chaos rule `{part}`: unknown key"))),
+            }
+        }
+        // the `store=P` draw reuses the plan seed, so fix the ordering
+        // dependency: a seed written after store= must still apply
+        if let Some(StoreFault::Fail { seed, .. }) = &mut store {
+            *seed = plan.seed;
+        }
+        Ok((plan, store))
+    }
+
+    /// The fault (if any) to inject at one (connection, frame)
+    /// coordinate. Pure in (seed, conn, frame) — scripted rules win
+    /// over probabilistic draws, and at most one fault fires per frame
+    /// (priority: disconnect, partial, corrupt, tarpit). Records the
+    /// verdict in the plan's log and the global
+    /// [`Counter::ChaosInjected`].
+    pub fn fault_for(&self, conn: u64, frame: u64) -> Option<FaultKind> {
+        let kind = self
+            .scripted
+            .iter()
+            .find(|s| s.conn == conn && s.frame == frame)
+            .map(|s| s.kind)
+            .or_else(|| {
+                if draw(self.seed, conn, frame, SALT_DISCONNECT) < self.disconnect_p {
+                    Some(FaultKind::Disconnect)
+                } else if draw(self.seed, conn, frame, SALT_PARTIAL) < self.partial_p {
+                    Some(FaultKind::Partial)
+                } else if draw(self.seed, conn, frame, SALT_CORRUPT) < self.corrupt_p {
+                    Some(FaultKind::Corrupt)
+                } else if draw(self.seed, conn, frame, SALT_TARPIT) < self.tarpit_p {
+                    Some(FaultKind::Tarpit(self.tarpit_ms))
+                } else {
+                    None
+                }
+            })?;
+        obs::global().inc(Counter::ChaosInjected);
+        if let Ok(mut log) = self.log.lock() {
+            log.push(InjectedFault { conn, frame, kind });
+        }
+        Some(kind)
+    }
+
+    /// Every injection that fired so far, sorted by (conn, frame,
+    /// kind) — the sort makes the log independent of thread
+    /// interleaving, so two runs of the same schedule compare equal.
+    pub fn injected(&self) -> Vec<InjectedFault> {
+        let mut log = self.log.lock().map(|l| l.clone()).unwrap_or_default();
+        log.sort_unstable();
+        log
+    }
+
+    /// True when no rule can ever fire — lets callers skip per-frame
+    /// bookkeeping entirely for a rule-less plan.
+    pub fn is_inert(&self) -> bool {
+        self.scripted.is_empty()
+            && self.disconnect_p == 0.0
+            && self.partial_p == 0.0
+            && self.corrupt_p == 0.0
+            && self.tarpit_p == 0.0
+    }
+}
+
+// ---------------------------------------------------------------------
+// store faults
+// ---------------------------------------------------------------------
+
+/// A store-write fault mode, installed process-globally.
+#[derive(Clone, Copy, Debug)]
+pub enum StoreFault {
+    /// Deterministically fail a `p` fraction of writes: the doomed
+    /// write puts half its bytes in the temp file, then returns an
+    /// `ErrorKind::Other` error. `writes` counts attempts (the draw
+    /// coordinate), so the schedule replays across runs.
+    Fail {
+        /// Hash seed for the per-write draw.
+        seed: u64,
+        /// Fraction of writes to fail.
+        p: f64,
+        /// Write attempts so far (incremented per consultation).
+        writes: u64,
+    },
+    /// The next write puts exactly this many bytes in the temp file,
+    /// then returns an `ErrorKind::Other` error — a crash at that byte
+    /// offset. One-shot: consumed by the write it kills.
+    KillAt(u64),
+}
+
+/// The installed store-fault hook. A `Mutex<Option<..>>` (not an
+/// atomic) keeps this out of the lint's atomics-ordering allowlist;
+/// store writes are a cold path, so the lock is free in practice.
+static STORE_CHAOS: Mutex<Option<StoreFault>> = Mutex::new(None);
+
+/// Serializes tests that install/clear the process-global store fault,
+/// so parallel test threads can't see each other's hooks. Test-only by
+/// convention; harmless to hold elsewhere.
+#[doc(hidden)]
+pub static STORE_FAULT_TEST_LOCK: Mutex<()> = Mutex::new(());
+
+/// Install a store-write fault mode (replacing any current one).
+pub fn install_store_fault(fault: StoreFault) {
+    if let Ok(mut slot) = STORE_CHAOS.lock() {
+        *slot = Some(fault);
+    }
+}
+
+/// Remove the store-write fault hook.
+pub fn clear_store_fault() {
+    if let Ok(mut slot) = STORE_CHAOS.lock() {
+        *slot = None;
+    }
+}
+
+/// Consulted by the store once per write attempt: `Some(cap)` means
+/// "write exactly `cap` bytes of the `len`-byte payload, then fail".
+/// Advances `Fail` mode's write counter; consumes a `KillAt`.
+pub fn store_write_cap(len: u64) -> Option<u64> {
+    let mut slot = STORE_CHAOS.lock().ok()?;
+    match slot.as_mut()? {
+        StoreFault::Fail { seed, p, writes } => {
+            let n = *writes;
+            *writes += 1;
+            if draw(*seed, n, 0, 0x570E) < *p {
+                obs::global().inc(Counter::ChaosInjected);
+                Some(len / 2)
+            } else {
+                None
+            }
+        }
+        StoreFault::KillAt(offset) => {
+            let cap = (*offset).min(len);
+            *slot = None;
+            obs::global().inc(Counter::ChaosInjected);
+            Some(cap)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn same_seed_same_schedule() {
+        let spec = "seed=7,disconnect=0.2,partial=0.1,corrupt=0.05,tarpit=0.1:3";
+        let (a, _) = FaultPlan::parse(spec).unwrap();
+        let (b, _) = FaultPlan::parse(spec).unwrap();
+        for conn in 0..8u64 {
+            for frame in 0..64u64 {
+                assert_eq!(a.fault_for(conn, frame), b.fault_for(conn, frame));
+            }
+        }
+        let log = a.injected();
+        assert_eq!(log, b.injected());
+        assert!(!log.is_empty(), "rates this high must fire in 512 draws");
+        assert!(log.len() < 512, "rates this low must not always fire");
+    }
+
+    #[test]
+    fn draw_is_order_independent() {
+        let (a, _) = FaultPlan::parse("seed=9,disconnect=0.3").unwrap();
+        let (b, _) = FaultPlan::parse("seed=9,disconnect=0.3").unwrap();
+        let mut forward = Vec::new();
+        for frame in 0..32u64 {
+            forward.push(a.fault_for(1, frame));
+        }
+        let mut backward = Vec::new();
+        for frame in (0..32u64).rev() {
+            backward.push(b.fault_for(1, frame));
+        }
+        backward.reverse();
+        assert_eq!(forward, backward);
+        assert_eq!(a.injected(), b.injected(), "sorted logs match across orderings");
+    }
+
+    #[test]
+    fn scripted_rules_win_and_parse() {
+        let (plan, store) =
+            FaultPlan::parse("seed=3,at=2:5:disconnect,at=2:6:tarpit:40,store=0.5").unwrap();
+        assert_eq!(plan.fault_for(2, 5), Some(FaultKind::Disconnect));
+        assert_eq!(plan.fault_for(2, 6), Some(FaultKind::Tarpit(40)));
+        assert_eq!(plan.fault_for(2, 7), None);
+        assert!(matches!(store, Some(StoreFault::Fail { seed: 3, .. })));
+        let log = plan.injected();
+        assert_eq!(log.len(), 2);
+        assert_eq!(log[0], InjectedFault { conn: 2, frame: 5, kind: FaultKind::Disconnect });
+    }
+
+    #[test]
+    fn bad_specs_are_typed_errors() {
+        for spec in [
+            "nonsense",
+            "frob=1",
+            "disconnect=1.5",
+            "disconnect=x",
+            "tarpit=0.5",
+            "at=1:2:explode",
+            "at=1:2",
+            "seed=pi",
+        ] {
+            assert!(FaultPlan::parse(spec).is_err(), "spec `{spec}` must be rejected");
+        }
+        let (plan, store) = FaultPlan::parse("").unwrap();
+        assert!(plan.is_inert());
+        assert!(store.is_none());
+    }
+
+    #[test]
+    fn store_kill_at_caps_and_consumes() {
+        let _guard = STORE_FAULT_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        clear_store_fault();
+        assert_eq!(store_write_cap(100), None, "no hook installed");
+        install_store_fault(StoreFault::KillAt(37));
+        assert_eq!(store_write_cap(100), Some(37));
+        assert_eq!(store_write_cap(100), None, "KillAt is one-shot");
+        install_store_fault(StoreFault::KillAt(500));
+        assert_eq!(store_write_cap(100), Some(100), "cap clamps to the payload");
+        clear_store_fault();
+    }
+}

@@ -4,9 +4,25 @@
 //! TCP connection: open sketches by [`StoreKey`], run every
 //! [`QueryRequest`] kind, and **pipeline** batches (all requests written before
 //! any response is read — the server answers in order, so one round trip
-//! covers the whole batch). On a broken connection the client redials
-//! once and transparently re-opens its sketch handles, which are
-//! connection-scoped on the server.
+//! covers the whole batch).
+//!
+//! Idempotent operations (every query, open, poll, and control call —
+//! the server computes pure answers over immutable sketch generations)
+//! retry under a bounded [`RetryPolicy`]: exponential backoff with
+//! deterministic seeded jitter, a retry budget that fails fast when the
+//! far end is persistently sick, and an optional per-request deadline
+//! ([`RemoteSketchClient::set_deadline`]) that bounds the whole
+//! attempt-and-backoff loop. Connection-level failures (`Io`) and
+//! corrupted frames (`Parse`) redial and rebuild connection state
+//! *inside* the retry iteration — handles are re-opened and sticky
+//! generation pins re-applied before the request goes back out, so a
+//! reconnect can never answer a pinned query at the wrong generation.
+//! Server pushback ([`crate::error::Error::Overloaded`], carrying the
+//! v6 retry-after hint) backs off without redialling. Everything else —
+//! malformed-request faults, generation faults, bad handles — is
+//! non-retryable and surfaces immediately. Retries and abandoned
+//! deadlines are counted in [`crate::obs`] (`client_retry`,
+//! `client_deadline`).
 //!
 //! Generation pins ([`RemoteSketchClient::set_pin`] and the explicit
 //! `query_at` / `poll_generation` calls) live in their own per-key map,
@@ -25,12 +41,15 @@
 use std::collections::VecDeque;
 use std::io::{self, BufReader, BufWriter};
 use std::net::{SocketAddr, TcpStream, ToSocketAddrs};
+use std::thread;
 use std::time::{Duration, Instant};
 
 use crate::api::{QueryRequest, QueryResponse, SketchInfo};
 use crate::error::{Error, Result};
 use crate::obs::trace::{self, TraceRecord};
+use crate::obs::{self, Counter};
 use crate::serve::StoreKey;
+use crate::util::rng::Rng;
 
 use super::wire::{self, ErrCode, Request, Response};
 
@@ -44,13 +63,64 @@ const DEFAULT_TIMEOUT: Duration = Duration::from_secs(30);
 /// bounding outstanding responses.
 const PIPELINE_WINDOW: usize = 8;
 
+/// Bounded retry behaviour for idempotent remote operations.
+///
+/// Every knob is deterministic: the jitter stream is seeded, so a fixed
+/// `(policy, fault schedule)` pair replays the exact same delays — which
+/// is what lets the chaos suite pin client behaviour byte-for-byte.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RetryPolicy {
+    /// Total attempts per operation, including the first (1 = never
+    /// retry).
+    pub max_attempts: u32,
+    /// Backoff before the first retry; doubles on each further retry.
+    pub base_backoff: Duration,
+    /// Ceiling on the computed backoff. A server retry-after hint may
+    /// exceed it — the server knows its own queue depth better.
+    pub max_backoff: Duration,
+    /// Seed for the deterministic jitter stream (full jitter over the
+    /// upper half of the exponential delay).
+    pub jitter_seed: u64,
+    /// Retry-budget cap, in tokens. Each retry spends one token; each
+    /// success refunds a tenth. A drained budget surfaces the error
+    /// instead of piling retries onto a struggling server.
+    pub budget: u32,
+}
+
+impl Default for RetryPolicy {
+    fn default() -> Self {
+        RetryPolicy {
+            max_attempts: 4,
+            base_backoff: Duration::from_millis(10),
+            max_backoff: Duration::from_millis(500),
+            jitter_seed: 0x7E57_5EED,
+            budget: 20,
+        }
+    }
+}
+
+impl RetryPolicy {
+    /// The delay before retry number `retry_index` (0-based): exponential
+    /// growth capped at [`max_backoff`](Self::max_backoff), full jitter
+    /// over the upper half, floored by the server's retry-after hint.
+    fn delay_for(&self, retry_index: u32, hint_us: u64, jitter: &mut Rng) -> Duration {
+        let base = self.base_backoff.as_micros() as u64;
+        let max = self.max_backoff.as_micros() as u64;
+        let exp = base.saturating_mul(1u64 << retry_index.min(16)).min(max);
+        let half = exp / 2;
+        let jittered = half + jitter.u64_below(exp - half + 1);
+        Duration::from_micros(jittered.max(hint_us))
+    }
+}
+
 struct Conn {
     reader: BufReader<TcpStream>,
     writer: BufWriter<TcpStream>,
 }
 
-/// A blocking wire-protocol client with request pipelining and one-shot
-/// reconnect.
+/// A blocking wire-protocol client with request pipelining and
+/// policy-driven retries (reconnect + handle re-open + pin re-apply
+/// inside the retry loop).
 pub struct RemoteSketchClient {
     addr: SocketAddr,
     timeout: Option<Duration>,
@@ -62,14 +132,23 @@ pub struct RemoteSketchClient {
     opened: Vec<(StoreKey, u32)>,
     /// Sticky per-key generation pins: `(key, generation)`. Unlike
     /// `opened` this survives [`reset`](Self::reset) — a pin is caller
-    /// intent, not connection state — so the one-shot reconnect restores
-    /// the pinned generation on re-open instead of drifting to latest.
+    /// intent, not connection state — so a reconnect restores the pinned
+    /// generation on re-open instead of drifting to latest.
     pins: Vec<(StoreKey, u64)>,
+    retry: RetryPolicy,
+    /// Deterministic jitter stream, seeded from the policy.
+    jitter: Rng,
+    /// Remaining retry budget in tenths of a token (see
+    /// [`RetryPolicy::budget`]).
+    budget_tenths: u32,
+    /// Optional per-request wall-clock budget covering all attempts and
+    /// backoff sleeps of one logical operation.
+    request_deadline: Option<Duration>,
 }
 
 impl RemoteSketchClient {
     /// Resolve `addr` (e.g. `"127.0.0.1:7300"`) and connect with the
-    /// default timeout.
+    /// default timeout and default [`RetryPolicy`].
     pub fn connect(addr: &str) -> Result<RemoteSketchClient> {
         Self::connect_with_timeout(addr, Some(DEFAULT_TIMEOUT))
     }
@@ -84,6 +163,7 @@ impl RemoteSketchClient {
             .to_socket_addrs()?
             .next()
             .ok_or_else(|| Error::invalid(format!("address {addr:?} resolves to nothing")))?;
+        let policy = RetryPolicy::default();
         let mut client = RemoteSketchClient {
             addr: resolved,
             timeout,
@@ -91,6 +171,10 @@ impl RemoteSketchClient {
             next_id: 0,
             opened: Vec::new(),
             pins: Vec::new(),
+            jitter: Rng::new(policy.jitter_seed),
+            budget_tenths: policy.budget.saturating_mul(10),
+            retry: policy,
+            request_deadline: None,
         };
         client.ensure_conn()?;
         Ok(client)
@@ -99,6 +183,33 @@ impl RemoteSketchClient {
     /// The server address this client dials.
     pub fn addr(&self) -> SocketAddr {
         self.addr
+    }
+
+    /// Replace the retry policy. Reseeds the jitter stream and refills
+    /// the retry budget to the new cap.
+    pub fn set_retry_policy(&mut self, policy: RetryPolicy) {
+        self.jitter = Rng::new(policy.jitter_seed);
+        self.budget_tenths = policy.budget.saturating_mul(10);
+        self.retry = policy;
+    }
+
+    /// The active retry policy.
+    pub fn retry_policy(&self) -> &RetryPolicy {
+        &self.retry
+    }
+
+    /// Set (or with `None` clear) the per-request deadline: the total
+    /// wall-clock budget one logical operation may spend across all its
+    /// attempts and backoff sleeps. When a would-be retry cannot fit,
+    /// the call fails with [`Error::Deadline`] instead of sleeping past
+    /// the budget.
+    pub fn set_deadline(&mut self, deadline: Option<Duration>) {
+        self.request_deadline = deadline;
+    }
+
+    /// The per-request deadline currently set, if any.
+    pub fn deadline(&self) -> Option<Duration> {
+        self.request_deadline
     }
 
     fn ensure_conn(&mut self) -> Result<&mut Conn> {
@@ -198,34 +309,101 @@ impl RemoteSketchClient {
         Ok(resp)
     }
 
-    /// One request/response exchange.
+    /// One request/response exchange, no retries.
     fn call(&mut self, req: &Request) -> Result<Response> {
         let id = self.send(req)?;
         self.recv(id)
     }
 
-    /// `call` with a one-shot reconnect on connection-level failure —
-    /// the retry makes remote serving survive server restarts and
-    /// idle-timeout reaps without bothering the caller.
-    fn call_retry(&mut self, req: &Request) -> Result<Response> {
-        match self.call(req) {
-            Err(Error::Io(_)) => {
-                self.reset();
-                self.call(req)
+    /// Run `op` under the retry policy. One iteration of the loop is the
+    /// atomic unit: `op` itself redials, re-opens handles, and re-applies
+    /// pins (via [`ensure_conn`](Self::ensure_conn) /
+    /// [`handle_for`](Self::handle_for)) before sending, so a retry never
+    /// observes half-rebuilt connection state. Connection-level errors
+    /// (`Io`) and corrupted frames (`Parse`) reset the connection and
+    /// retry; [`Error::Overloaded`] backs off without redialling,
+    /// honouring the server's retry-after hint; anything else surfaces
+    /// immediately. The per-request deadline bounds the whole loop.
+    fn with_retry<T>(&mut self, mut op: impl FnMut(&mut Self) -> Result<T>) -> Result<T> {
+        let start = Instant::now();
+        let mut attempt: u32 = 0;
+        loop {
+            let err = match op(self) {
+                Ok(v) => {
+                    self.refund_budget();
+                    return Ok(v);
+                }
+                Err(e) => e,
+            };
+            attempt += 1;
+            let (retryable, reset, hint_us) = match &err {
+                Error::Io(_) | Error::Parse(_) => (true, true, 0),
+                Error::Overloaded { retry_after_us, .. } => (true, false, *retry_after_us),
+                _ => (false, false, 0),
+            };
+            if !retryable || attempt >= self.retry.max_attempts.max(1) {
+                return Err(err);
             }
-            other => other,
+            let delay = self.retry.delay_for(attempt - 1, hint_us, &mut self.jitter);
+            if let Some(budget) = self.request_deadline {
+                if start.elapsed().saturating_add(delay) >= budget {
+                    obs::global().inc(Counter::ClientDeadline);
+                    return Err(Error::Deadline(format!(
+                        "request budget {budget:?} leaves no room for retry {attempt} \
+                         (backoff {delay:?}); last error: {err}"
+                    )));
+                }
+            }
+            if !self.spend_budget() {
+                return Err(err);
+            }
+            obs::global().inc(Counter::ClientRetry);
+            if reset {
+                self.reset();
+            }
+            if !delay.is_zero() {
+                thread::sleep(delay);
+            }
         }
+    }
+
+    /// Spend one retry token (ten tenths); `false` means the budget is
+    /// drained and the caller should surface the error instead.
+    fn spend_budget(&mut self) -> bool {
+        if self.budget_tenths >= 10 {
+            self.budget_tenths -= 10;
+            true
+        } else {
+            false
+        }
+    }
+
+    /// Refund a tenth of a token on success, up to the policy cap.
+    fn refund_budget(&mut self) {
+        let cap = self.retry.budget.saturating_mul(10);
+        self.budget_tenths = (self.budget_tenths + 1).min(cap);
     }
 
     /// Turn a remote error response into a local [`Error`]. Generation
     /// faults keep their typed variant so callers can tell a retired /
-    /// future pin from an ordinary query failure, same as in-process.
+    /// future pin from an ordinary query failure, same as in-process;
+    /// overload pushback (and the legacy `busy` refusal) becomes
+    /// [`Error::Overloaded`] carrying the server's retry-after hint so
+    /// the retry loop can honour it.
     fn remote_err(resp: Response) -> Error {
         match resp {
-            Response::Error { code: ErrCode::Generation, message } => {
+            Response::Error { code: ErrCode::Generation, message, .. } => {
                 Error::Generation(format!("remote: {message}"))
             }
-            Response::Error { code, message } => {
+            Response::Error {
+                code: code @ (ErrCode::Overloaded | ErrCode::Busy),
+                message,
+                retry_after_us,
+            } => Error::Overloaded {
+                message: format!("remote: {message} ({})", code.name()),
+                retry_after_us,
+            },
+            Response::Error { code, message, .. } => {
                 Error::Pipeline(format!("remote: {message} ({})", code.name()))
             }
             other => Error::Pipeline(format!("remote: unexpected response {other:?}")),
@@ -234,26 +412,26 @@ impl RemoteSketchClient {
 
     /// Liveness probe.
     pub fn ping(&mut self) -> Result<()> {
-        match self.call_retry(&Request::Ping)? {
+        self.with_retry(|c| match c.call(&Request::Ping)? {
             Response::Pong => Ok(()),
             other => Err(Self::remote_err(other)),
-        }
+        })
     }
 
     /// Enumerate the sketches the server's store holds.
     pub fn list_sketches(&mut self) -> Result<Vec<SketchInfo>> {
-        match self.call_retry(&Request::ListSketches)? {
+        self.with_retry(|c| match c.call(&Request::ListSketches)? {
             Response::SketchList(infos) => Ok(infos),
             other => Err(Self::remote_err(other)),
-        }
+        })
     }
 
     /// Ask the server to shut down gracefully (the wire sentinel).
     pub fn shutdown_server(&mut self) -> Result<()> {
-        match self.call_retry(&Request::Shutdown)? {
+        self.with_retry(|c| match c.call(&Request::Shutdown)? {
             Response::ShuttingDown => Ok(()),
             other => Err(Self::remote_err(other)),
-        }
+        })
     }
 
     /// Scrape the server's telemetry registry (protocol v4): one
@@ -261,10 +439,10 @@ impl RemoteSketchClient {
     /// histogram. Old servers answer with an unknown-opcode fault, which
     /// surfaces as a typed error here.
     pub fn stats(&mut self) -> Result<crate::obs::MetricsSnapshot> {
-        match self.call_retry(&Request::Stats)? {
+        self.with_retry(|c| match c.call(&Request::Stats)? {
             Response::Stats(snap) => Ok(snap),
             other => Err(Self::remote_err(other)),
-        }
+        })
     }
 
     /// Fetch completed traces from the server's retention rings
@@ -273,19 +451,28 @@ impl RemoteSketchClient {
     /// first). Old servers answer with an unknown-opcode fault, which
     /// surfaces as a typed error here.
     pub fn trace_dump(&mut self, id: u64, slowest: u32) -> Result<Vec<TraceRecord>> {
-        match self.call_retry(&Request::TraceDump { id, slowest })? {
+        self.with_retry(|c| match c.call(&Request::TraceDump { id, slowest })? {
             Response::Traces(traces) => Ok(traces),
             other => Err(Self::remote_err(other)),
-        }
+        })
     }
 
     /// Open `key` on the server (idempotent per connection) and return
-    /// its identity + shape.
+    /// its identity + shape. Retries under the policy; the re-open runs
+    /// on whatever connection the retry iteration establishes.
     pub fn open(&mut self, key: &StoreKey) -> Result<SketchInfo> {
+        self.with_retry(|c| c.open_once(key))
+    }
+
+    /// One open exchange, no retries — the building block both
+    /// [`open`](Self::open) and [`handle_for`](Self::handle_for) run
+    /// inside a single retry iteration, so reconnect, re-open, and
+    /// pinned-query send can never interleave with another redial.
+    fn open_once(&mut self, key: &StoreKey) -> Result<SketchInfo> {
         // make sure the connection is up *before* consulting the handle
         // cache: a dead connection invalidates it on redial
         self.ensure_conn()?;
-        match self.call_retry(&Request::OpenSketch(key.clone()))? {
+        match self.call(&Request::OpenSketch(key.clone()))? {
             Response::SketchOpened { handle, info } => {
                 if !self.opened.iter().any(|(k, _)| k.same_identity(key)) {
                     self.opened.push((key.clone(), handle));
@@ -297,12 +484,14 @@ impl RemoteSketchClient {
     }
 
     /// The current connection's handle for `key`, opening it if needed.
+    /// Deliberately retry-free: callers invoke it inside a
+    /// [`with_retry`](Self::with_retry) iteration.
     fn handle_for(&mut self, key: &StoreKey) -> Result<u32> {
         self.ensure_conn()?;
         if let Some((_, h)) = self.opened.iter().find(|(k, _)| k.same_identity(key)) {
             return Ok(*h);
         }
-        self.open(key)?;
+        self.open_once(key)?;
         self.opened
             .iter()
             .find(|(k, _)| k.same_identity(key))
@@ -314,29 +503,21 @@ impl RemoteSketchClient {
     /// key's sticky pin if one is set (else the server's latest
     /// generation). Without a pin the frame goes out at its operation's
     /// minimum protocol version, so an upgraded client keeps talking to
-    /// old servers.
+    /// old servers. Retries under the policy.
     pub fn query(&mut self, key: &StoreKey, query: &QueryRequest) -> Result<QueryResponse> {
         if self.pin_for(key).is_some() {
             return self.query_at(key, query, None).map(|(resp, _)| resp);
         }
-        match self.query_once(key, query, 0, false) {
-            Err(Error::Io(_)) => {
-                // redial once; handle_for re-opens on the new connection
-                self.reset();
-                self.query_once(key, query, 0, false)
-            }
-            other => other,
-        }
-        .map(|(resp, _)| resp)
+        self.with_retry(|c| c.query_once(key, query, 0, false)).map(|(resp, _)| resp)
     }
 
     /// Execute one query with an explicit generation pin (`None` falls
     /// back to the key's sticky pin, then to latest), returning the
     /// answer plus the generation it was answered at. The frame always
     /// goes out at v3 — even unpinned — so the answered-at tag survives
-    /// the wire. Survives a redial: the handle is re-opened and the pin
-    /// re-applied, so a reconnect never silently moves a pinned reader
-    /// to latest.
+    /// the wire. Survives redials: each retry iteration re-opens the
+    /// handle and re-sends with the same pin, so a reconnect never
+    /// silently moves a pinned reader to latest.
     pub fn query_at(
         &mut self,
         key: &StoreKey,
@@ -344,13 +525,7 @@ impl RemoteSketchClient {
         pin: Option<u64>,
     ) -> Result<(QueryResponse, u64)> {
         let pin = pin.or_else(|| self.pin_for(key)).unwrap_or(0);
-        match self.query_once(key, query, pin, true) {
-            Err(Error::Io(_)) => {
-                self.reset();
-                self.query_once(key, query, pin, true)
-            }
-            other => other,
-        }
+        self.with_retry(|c| c.query_once(key, query, pin, true))
     }
 
     fn query_once(
@@ -404,20 +579,13 @@ impl RemoteSketchClient {
         min_gen: u64,
         timeout_ms: u32,
     ) -> Result<u64> {
-        let poll = |c: &mut Self| -> Result<u64> {
+        self.with_retry(|c| {
             let handle = c.handle_for(key)?;
             match c.call(&Request::GenPoll { handle, min_gen, timeout_ms })? {
                 Response::Generation(g) => Ok(g),
                 other => Err(Self::remote_err(other)),
             }
-        };
-        match poll(self) {
-            Err(Error::Io(_)) => {
-                self.reset();
-                poll(self)
-            }
-            other => other,
-        }
+        })
     }
 
     /// Pipeline a batch: requests are written ahead of the responses
@@ -427,7 +595,10 @@ impl RemoteSketchClient {
     /// past the window, so outstanding data stays bounded and a batch of
     /// large answers cannot mutually wedge both ends on full socket
     /// buffers. Per-query failures come back as `Err` entries without
-    /// aborting the batch.
+    /// aborting the batch. Only the handle acquisition retries: once
+    /// frames are in flight, a mid-batch redial could silently re-answer
+    /// at a different generation, so batch transport errors surface to
+    /// the caller instead.
     pub fn pipeline(
         &mut self,
         key: &StoreKey,
@@ -437,7 +608,7 @@ impl RemoteSketchClient {
         // latest) — matching the local batched path, where a batch sees a
         // single snapshot
         let pin = self.pin_for(key).unwrap_or(0);
-        let handle = self.handle_for(key)?;
+        let handle = self.with_retry(|c| c.handle_for(key))?;
         let mut ids = VecDeque::with_capacity(PIPELINE_WINDOW);
         let mut out = Vec::with_capacity(queries.len());
         let collect = |resp: Response| match resp {
@@ -460,5 +631,45 @@ impl RemoteSketchClient {
             out.push(collect(resp));
         }
         Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_is_deterministic_and_bounded() {
+        let policy = RetryPolicy::default();
+        let mut a = Rng::new(policy.jitter_seed);
+        let mut b = Rng::new(policy.jitter_seed);
+        let da: Vec<Duration> = (0..8).map(|i| policy.delay_for(i, 0, &mut a)).collect();
+        let db: Vec<Duration> = (0..8).map(|i| policy.delay_for(i, 0, &mut b)).collect();
+        assert_eq!(da, db, "same seed must replay the same delay schedule");
+        for (i, d) in da.iter().enumerate() {
+            assert!(*d <= policy.max_backoff, "retry {i} overshoots the cap: {d:?}");
+        }
+        // full jitter keeps at least half the exponential delay
+        assert!(da[0] >= policy.base_backoff / 2, "first delay too small: {:?}", da[0]);
+    }
+
+    #[test]
+    fn server_hint_floors_the_delay() {
+        let policy = RetryPolicy::default();
+        let mut rng = Rng::new(1);
+        let d = policy.delay_for(0, 2_000_000, &mut rng);
+        assert!(d >= Duration::from_secs(2), "hint ignored: {d:?}");
+    }
+
+    #[test]
+    fn zero_backoff_policy_sleeps_only_on_hint() {
+        let policy = RetryPolicy {
+            base_backoff: Duration::ZERO,
+            max_backoff: Duration::ZERO,
+            ..RetryPolicy::default()
+        };
+        let mut rng = Rng::new(2);
+        assert_eq!(policy.delay_for(3, 0, &mut rng), Duration::ZERO);
+        assert_eq!(policy.delay_for(3, 750, &mut rng), Duration::from_micros(750));
     }
 }

@@ -7,7 +7,7 @@
 //! This module adds that layer with **zero external dependencies**
 //! (std-only TCP):
 //!
-//! * [`wire`] — the versioned, length-prefixed binary protocol (v5): one
+//! * [`wire`] — the versioned, length-prefixed binary protocol (v6): one
 //!   opcode per [`crate::api::QueryRequest`] variant (matvec /
 //!   transpose-matvec / batched matvec / row / col / top-k, plus `Ping`,
 //!   `ListSketches`, `OpenSketch`, `GenPoll`, `Stats`, `TraceDump`, and
@@ -15,8 +15,10 @@
 //!   truncated, oversized, or wrong-version frames. v3 carries
 //!   live-sketch generation pins and per-answer generation tags; v4 adds
 //!   `Stats` telemetry scraping; v5 adds a trace-context word on `Query`
-//!   frames plus `TraceDump` retrieval of retained span trees; v1–v4
-//!   frames stay decodable and are answered at their own version.
+//!   frames plus `TraceDump` retrieval of retained span trees; v6 adds
+//!   the `Overloaded` / `Timeout` fault codes and a retry-after hint on
+//!   error payloads; v1–v5 frames stay decodable and are answered at
+//!   their own version.
 //! * [`server`] — [`NetServer`]: a multi-threaded `TcpListener` acceptor
 //!   owning a [`crate::serve::SketchStore`], lazily opening sketches
 //!   into shared [`crate::serve::ServableSketch`]es and dispatching onto
@@ -27,8 +29,17 @@
 //! * [`client`] — [`RemoteSketchClient`]: the blocking, pipelining,
 //!   reconnecting transport behind [`crate::api::RemoteClient`]. Callers
 //!   outside this module and [`crate::api`] go through the
-//!   [`crate::api::SketchClient`] trait, not this type. Generation pins
-//!   are sticky per key and survive the one-shot reconnect.
+//!   [`crate::api::SketchClient`] trait, not this type. Idempotent
+//!   operations retry under a bounded [`client::RetryPolicy`]
+//!   (exponential backoff, seeded jitter, retry budget, optional
+//!   per-request deadline); generation pins are sticky per key and are
+//!   re-established — together with handle re-opens — inside the retry
+//!   loop, so a reconnect can never answer a query unpinned.
+//! * [`chaos`] — [`FaultPlan`]: seeded, replayable fault injection
+//!   (disconnects, partial writes, corrupted frames, tarpits, store
+//!   write failures) wired into the server's connection loop and the
+//!   store's write path; `matsketch serve --chaos SPEC` and the
+//!   integration/chaos-bench suites replay exact failure schedules.
 //! * [`loadgen`] — closed-loop multi-client load generation over
 //!   `dyn SketchClient`, with an optional background ingest writer
 //!   driving a live chain while queries run, reporting throughput +
@@ -42,12 +53,14 @@
 //! in-process one, and the backend-equivalence suite
 //! (`rust/tests/integration_api.rs`) pins the two byte-for-byte equal.
 
+pub mod chaos;
 pub mod client;
 pub mod loadgen;
 pub mod server;
 pub mod wire;
 
-pub use client::RemoteSketchClient;
+pub use chaos::{FaultKind, FaultPlan, InjectedFault, StoreFault};
+pub use client::{RemoteSketchClient, RetryPolicy};
 pub use loadgen::{
     run_live_load, run_load, run_load_with, scrape_stats, LiveLoadReport, LoadGenConfig, LoadOp,
     LoadReport,

@@ -29,6 +29,19 @@
 //! and `reply_write` as children. Completed trees land in the process
 //! trace ring ([`crate::obs::trace`]), from which the `TraceDump`
 //! opcode serves them back to clients.
+//!
+//! Two resilience layers ride the same loop. **Load shedding**
+//! ([`NetServerConfig::shed_high_water`]): queries in flight across all
+//! connections are counted, and past the high-water mark new queries
+//! are answered with a typed `Overloaded` fault (protocol v6) carrying
+//! a depth-proportional retry-after hint instead of being queued —
+//! Ping, Stats, and the other control ops always answer, so an
+//! overloaded server stays observable. **Fault injection**
+//! ([`NetServerConfig::chaos`]): an attached [`FaultPlan`] is consulted
+//! once per decoded frame with this connection's accept-order id and
+//! the frame's index, and the verdict (disconnect / partial write /
+//! corrupted frame / tarpit) is applied deterministically — the chaos
+//! suites replay exact failure schedules against a real server.
 
 use std::collections::HashMap;
 use std::io::{self, BufReader, BufWriter};
@@ -45,6 +58,7 @@ use crate::obs::{self, Counter, Gauge, Hist};
 use crate::serve::{LiveReader, QueryServer, ServableSketch, SketchStore, StoreKey};
 use crate::{debug_log, info, warn_log};
 
+use super::chaos::{FaultKind, FaultPlan};
 use super::wire::{
     self, encode_response, encode_response_v, ErrCode, Request, Response, WireFault,
     FRAME_HEADER_LEN, MAX_PAYLOAD, WIRE_VERSION,
@@ -69,6 +83,16 @@ pub struct NetServerConfig {
     /// 1) forces splitting on small sketches — the lever the trace
     /// integration suite uses to pin per-window span trees.
     pub split_min_groups: usize,
+    /// Load-shedding high-water mark: when this many queries are in
+    /// flight across all connections, further queries are answered with
+    /// a typed `Overloaded` fault (with a retry-after hint) instead of
+    /// queued. 0 disables shedding. Control ops (Ping, Stats, opens,
+    /// shutdown) are never shed.
+    pub shed_high_water: usize,
+    /// Deterministic fault-injection plan (`matsketch serve --chaos`,
+    /// chaos test suites). `None` — the default — injects nothing and
+    /// costs nothing.
+    pub chaos: Option<Arc<FaultPlan>>,
 }
 
 impl Default for NetServerConfig {
@@ -79,6 +103,8 @@ impl Default for NetServerConfig {
             read_timeout: Some(Duration::from_secs(60)),
             write_timeout: Some(Duration::from_secs(60)),
             split_min_groups: QueryServer::DEFAULT_SPLIT_MIN_GROUPS,
+            shed_high_water: 0,
+            chaos: None,
         }
     }
 }
@@ -127,6 +153,9 @@ struct Shared {
     shutdown: AtomicBool,
     conn_seq: AtomicU64,
     conns: AtomicUsize,
+    /// Queries currently executing (all connections); the load-shedding
+    /// gauge compared against `cfg.shed_high_water`.
+    inflight: AtomicUsize,
     connections: AtomicU64,
     frames: AtomicU64,
     faults: AtomicU64,
@@ -173,6 +202,7 @@ impl NetServer {
             shutdown: AtomicBool::new(false),
             conn_seq: AtomicU64::new(0),
             conns: AtomicUsize::new(0),
+            inflight: AtomicUsize::new(0),
             connections: AtomicU64::new(0),
             frames: AtomicU64::new(0),
             faults: AtomicU64::new(0),
@@ -267,7 +297,7 @@ fn accept_loop(listener: TcpListener, shared: Arc<Shared>) {
         debug_log!("net: connection {id} from {peer}");
         let shared2 = Arc::clone(&shared);
         handlers.push(std::thread::spawn(move || {
-            handle_connection(&shared2, stream);
+            handle_connection(&shared2, stream, id);
             shared2.conns.fetch_sub(1, Ordering::Relaxed);
             obs::global().gauge_add(Gauge::NetConnections, -1);
             obs::global().inc(Counter::NetConnClosed);
@@ -296,7 +326,7 @@ fn refuse(stream: TcpStream, code: ErrCode, message: &str) {
     debug_log!("net: refusing connection: {message} ({})", code.name());
     let _ = stream.set_write_timeout(Some(Duration::from_secs(5)));
     let mut w = BufWriter::new(stream);
-    let resp = Response::Error { code, message: message.into() };
+    let resp = Response::Error { code, message: message.into(), retry_after_us: 0 };
     let bytes = encode_response(0, &resp);
     if wire::write_frame(&mut w, &bytes).is_ok() {
         obs::global().add(Counter::NetBytesOut, bytes.len() as u64);
@@ -316,6 +346,8 @@ fn fault_counter(code: ErrCode) -> Counter {
         ErrCode::Busy => Counter::FaultBusy,
         ErrCode::ShuttingDown => Counter::FaultShuttingDown,
         ErrCode::Generation => Counter::FaultGeneration,
+        ErrCode::Overloaded => Counter::FaultOverloaded,
+        ErrCode::Timeout => Counter::FaultTimeout,
     }
 }
 
@@ -340,7 +372,7 @@ fn request_counter(req: &Request) -> Counter {
     }
 }
 
-fn handle_connection(shared: &Shared, stream: TcpStream) {
+fn handle_connection(shared: &Shared, stream: TcpStream, conn_id: u64) {
     let _ = stream.set_nodelay(true);
     let _ = stream.set_read_timeout(shared.cfg.read_timeout);
     let _ = stream.set_write_timeout(shared.cfg.write_timeout);
@@ -355,6 +387,9 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
     let mut writer = BufWriter::new(stream);
     // connection-scoped handle table: index = handle value
     let mut handles: Vec<Opened> = Vec::new();
+    // decoded-frame index on this connection: the chaos plan's second
+    // coordinate
+    let mut frame_idx: u64 = 0;
 
     let reg = obs::global();
     loop {
@@ -380,6 +415,23 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
             }
         };
         reg.add(Counter::NetBytesIn, FRAME_HEADER_LEN as u64);
+        // one chaos verdict per frame, at deterministic coordinates; a
+        // tarpit stalls here (the "slow server" the client's deadline
+        // machinery is tested against), a disconnect drops the
+        // connection before the frame is even parsed, and the
+        // write-side faults are applied after the reply is encoded
+        let injected = shared.cfg.chaos.as_ref().and_then(|plan| {
+            let verdict = plan.fault_for(conn_id, frame_idx);
+            if let Some(FaultKind::Tarpit(ms)) = verdict {
+                std::thread::sleep(Duration::from_millis(ms));
+            }
+            verdict
+        });
+        frame_idx += 1;
+        if matches!(injected, Some(FaultKind::Disconnect)) {
+            debug_log!("net: chaos disconnect on connection {conn_id} frame {}", frame_idx - 1);
+            break;
+        }
         // answers go out at the version the request arrived in, so a v1
         // peer never receives a v2 frame; frame faults (version unknown
         // or unacceptable) reply best-effort at the current version
@@ -391,7 +443,12 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
             match wire::parse_frame_header(&header) {
                 Err(WireFault { code, message }) => {
                     // frame fault: typed reply, then drop the connection
-                    (WIRE_VERSION, 0, Response::Error { code, message }, true)
+                    (
+                        WIRE_VERSION,
+                        0,
+                        Response::Error { code, message, retry_after_us: 0 },
+                        true,
+                    )
                 }
                 Ok(h) => {
                     let payload = match wire::read_payload(&mut reader, h.len) {
@@ -415,9 +472,12 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
                     started = reg.enabled().then(Instant::now);
                     match wire::decode_request(h.version, h.opcode, &payload) {
                         // payload fault: typed reply, connection stays up
-                        Err(WireFault { code, message }) => {
-                            (h.version, h.request_id, Response::Error { code, message }, false)
-                        }
+                        Err(WireFault { code, message }) => (
+                            h.version,
+                            h.request_id,
+                            Response::Error { code, message, retry_after_us: 0 },
+                            false,
+                        ),
                         Ok(req) => {
                             let is_shutdown = matches!(req, Request::Shutdown);
                             reg.inc(request_counter(&req));
@@ -439,7 +499,7 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
                             (
                                 h.version,
                                 h.request_id,
-                                answer(shared, &mut handles, req, ctx),
+                                answer_with_shedding(shared, &mut handles, req, ctx),
                                 is_shutdown,
                             )
                         }
@@ -459,10 +519,11 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
                      narrow the query",
                     frame_bytes.len() - FRAME_HEADER_LEN
                 ),
+                retry_after_us: 0,
             };
             frame_bytes = encode_response_v(version, request_id, &resp);
         }
-        if let Response::Error { code, message } = &resp {
+        if let Response::Error { code, message, .. } = &resp {
             shared.faults.fetch_add(1, Ordering::Relaxed);
             reg.inc(fault_counter(*code));
             debug_log!("net: request {request_id} faulted: {message} ({})", code.name());
@@ -471,8 +532,36 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
         if let Some(t0) = started {
             reg.record_duration(Hist::NetRequestUs, t0.elapsed());
         }
+        match injected {
+            // the write-side chaos faults: put a torn or corrupted reply
+            // on the wire, then drop the connection — the client must
+            // classify either as retryable wire damage, never as data
+            Some(FaultKind::Partial) => {
+                use std::io::Write as _;
+                let half = frame_bytes.len() / 2;
+                let head = frame_bytes.get(..half).unwrap_or(&frame_bytes);
+                if writer.write_all(head).is_ok() {
+                    let _ = writer.flush();
+                }
+                debug_log!("net: chaos partial write on connection {conn_id}");
+                break;
+            }
+            Some(FaultKind::Corrupt) => {
+                // flip the first magic byte: the damage is guaranteed
+                // detectable (a header fault), never a silently wrong
+                // payload value
+                if let Some(b) = frame_bytes.first_mut() {
+                    *b ^= 0xFF;
+                }
+                let _ = wire::write_frame(&mut writer, &frame_bytes);
+                debug_log!("net: chaos corrupt frame on connection {conn_id}");
+                break;
+            }
+            _ => {}
+        }
         let reply_t0 = traced.as_ref().map(|_| Instant::now());
-        let wrote = wire::write_frame(&mut writer, &frame_bytes).is_ok();
+        let write_err = wire::write_frame(&mut writer, &frame_bytes).err();
+        let wrote = write_err.is_none();
         if wrote {
             reg.add(Counter::NetBytesOut, frame_bytes.len() as u64);
         }
@@ -490,7 +579,23 @@ fn handle_connection(shared: &Shared, stream: TcpStream) {
             // client out of its reply
             shared.trigger_shutdown();
         }
-        if !wrote || close_after {
+        if let Some(e) = write_err {
+            // a stalled peer hit the write timeout: owe it the typed
+            // fault before closing (best-effort — the socket may still
+            // be wedged, but the fault is counted either way)
+            if matches!(e.kind(), io::ErrorKind::TimedOut | io::ErrorKind::WouldBlock) {
+                send_fault(
+                    shared,
+                    &mut writer,
+                    version,
+                    request_id,
+                    ErrCode::Timeout,
+                    "response write timed out; closing connection",
+                );
+            }
+            break;
+        }
+        if close_after {
             break;
         }
     }
@@ -513,11 +618,43 @@ fn send_fault(
     shared.frames.fetch_add(1, Ordering::Relaxed);
     obs::global().inc(fault_counter(code));
     debug_log!("net: request {request_id} faulted: {message} ({})", code.name());
-    let resp = Response::Error { code, message: message.into() };
+    let resp = Response::Error { code, message: message.into(), retry_after_us: 0 };
     let bytes = encode_response_v(version, request_id, &resp);
     if wire::write_frame(writer, &bytes).is_ok() {
         obs::global().add(Counter::NetBytesOut, bytes.len() as u64);
     }
+}
+
+/// Dispatch one request through the load-shedding gate: queries past
+/// the in-flight high-water mark are answered with a typed `Overloaded`
+/// fault carrying a depth-proportional retry-after hint; control ops
+/// (Ping, Stats, opens, shutdown) always execute, so an overloaded
+/// server stays observable and stoppable.
+fn answer_with_shedding(
+    shared: &Shared,
+    handles: &mut Vec<Opened>,
+    req: Request,
+    ctx: Option<SpanCtx>,
+) -> Response {
+    if !matches!(req, Request::Query { .. }) {
+        return answer(shared, handles, req, ctx);
+    }
+    let high = shared.cfg.shed_high_water;
+    let depth = shared.inflight.load(Ordering::Relaxed);
+    if high > 0 && depth >= high {
+        // the hint grows with the backlog past the mark, so a burst of
+        // shed clients spreads its retries instead of re-synchronizing
+        let hint = 500u64.saturating_mul(depth.saturating_sub(high) as u64 + 1);
+        return Response::Error {
+            code: ErrCode::Overloaded,
+            message: format!("{depth} queries in flight over high water {high}; request shed"),
+            retry_after_us: hint,
+        };
+    }
+    shared.inflight.fetch_add(1, Ordering::Relaxed);
+    let resp = answer(shared, handles, req, ctx);
+    shared.inflight.fetch_sub(1, Ordering::Relaxed);
+    resp
 }
 
 /// Map a query-path failure onto its wire fault class: generation-pin
@@ -528,7 +665,7 @@ fn query_fault(e: Error) -> Response {
         Error::Generation(_) => ErrCode::Generation,
         _ => ErrCode::Query,
     };
-    Response::Error { code, message: e.to_string() }
+    Response::Error { code, message: e.to_string(), retry_after_us: 0 }
 }
 
 /// Execute one decoded request against the shared state. `ctx` (present
@@ -559,7 +696,9 @@ fn answer(
         }
         Request::ListSketches => match list_sketches(shared) {
             Ok(infos) => Response::SketchList(infos),
-            Err(e) => Response::Error { code: ErrCode::Store, message: e.to_string() },
+            Err(e) => {
+                Response::Error { code: ErrCode::Store, message: e.to_string(), retry_after_us: 0 }
+            }
         },
         Request::OpenSketch(key) => match open_handle(shared, &key) {
             Ok(opened) => {
@@ -586,7 +725,9 @@ fn answer(
                 };
                 Response::SketchOpened { handle: handle as u32, info }
             }
-            Err(e) => Response::Error { code: ErrCode::Store, message: e.to_string() },
+            Err(e) => {
+                Response::Error { code: ErrCode::Store, message: e.to_string(), retry_after_us: 0 }
+            }
         },
         Request::Query { handle, pin, query, .. } => {
             let Some(opened) = handles.get(handle as usize) else {
@@ -600,6 +741,7 @@ fn answer(
                     if pin != 0 {
                         return Response::Error {
                             code: ErrCode::Generation,
+                            retry_after_us: 0,
                             message: format!(
                                 "generation {pin} not served: frozen sketches stay at \
                                  generation 0"
@@ -650,6 +792,7 @@ fn bad_handle(handle: u32, open: usize) -> Response {
     Response::Error {
         code: ErrCode::BadHandle,
         message: format!("handle {handle} not opened on this connection ({open} open)"),
+        retry_after_us: 0,
     }
 }
 

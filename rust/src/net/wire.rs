@@ -9,7 +9,7 @@
 //! | field       | size | contents                                    |
 //! |-------------|------|---------------------------------------------|
 //! | magic       | 4 B  | `"MSKW"`                                    |
-//! | version     | 2 B  | protocol version (currently 5; 1–4 accepted)|
+//! | version     | 2 B  | protocol version (currently 6; 1–5 accepted)|
 //! | opcode      | 1 B  | message kind (below)                        |
 //! | reserved    | 1 B  | 0 (ignored on read)                         |
 //! | request id  | 8 B  | caller-chosen; echoed verbatim in responses |
@@ -47,6 +47,14 @@
 //! `TraceDump` / `Traces` pair reads completed span timelines back out
 //! of the server's trace rings in the trace layer's own versioned
 //! encoding ([`crate::obs::trace::encode_traces`]).
+//! Version 6 adds **resilience faults**: two new [`ErrCode`]s —
+//! `Overloaded` (the server shed this request past its load high-water
+//! mark) and `Timeout` (a read/write deadline expired mid-connection) —
+//! and a trailing `u64` retry-after hint in microseconds on every v6
+//! [`Response::Error`] payload (0 = no hint). Error frames encoded at
+//! v5 or below omit the hint, and the two new codes downgrade to the
+//! closest legacy fault (`Busy`, also a "try again later") so a v1–v5
+//! peer never sees a code its `from_u16` would misread as `Malformed`.
 //! Interop works in both directions: the server accepts any version
 //! from [`MIN_WIRE_VERSION`] through [`WIRE_VERSION`] and answers each
 //! request at the version the request arrived in, while clients encode
@@ -88,8 +96,9 @@ use crate::sketch::SketchEntry;
 /// Frame magic: "MSKW" (matsketch wire).
 pub const WIRE_MAGIC: [u8; 4] = *b"MSKW";
 
-/// Current protocol version (v5: request tracing).
-pub const WIRE_VERSION: u16 = 5;
+/// Current protocol version (v6: resilience faults — `Overloaded` /
+/// `Timeout` codes and the retry-after hint on error payloads).
+pub const WIRE_VERSION: u16 = 6;
 
 /// Oldest protocol version still accepted on the wire.
 pub const MIN_WIRE_VERSION: u16 = 1;
@@ -157,6 +166,14 @@ pub enum ErrCode {
     /// live chain, retired out of its retained window, or nonzero
     /// against a frozen sketch.
     Generation,
+    /// The server shed this request past its load high-water mark
+    /// (v6+; downgrades to `Busy` on older frames). Retryable — the
+    /// error payload's retry-after hint says how long to back off.
+    Overloaded,
+    /// A connection read/write deadline expired (v6+; downgrades to
+    /// `Busy` on older frames). The server closes the connection after
+    /// sending this.
+    Timeout,
 }
 
 impl ErrCode {
@@ -173,6 +190,8 @@ impl ErrCode {
             ErrCode::Busy => 8,
             ErrCode::ShuttingDown => 9,
             ErrCode::Generation => 10,
+            ErrCode::Overloaded => 11,
+            ErrCode::Timeout => 12,
         }
     }
 
@@ -189,6 +208,8 @@ impl ErrCode {
             8 => ErrCode::Busy,
             9 => ErrCode::ShuttingDown,
             10 => ErrCode::Generation,
+            11 => ErrCode::Overloaded,
+            12 => ErrCode::Timeout,
             _ => ErrCode::Malformed,
         }
     }
@@ -206,6 +227,8 @@ impl ErrCode {
             ErrCode::Busy => "busy",
             ErrCode::ShuttingDown => "shutting-down",
             ErrCode::Generation => "generation",
+            ErrCode::Overloaded => "overloaded",
+            ErrCode::Timeout => "timeout",
         }
     }
 }
@@ -331,6 +354,11 @@ pub enum Response {
         code: ErrCode,
         /// Human-readable detail.
         message: String,
+        /// Server-suggested backoff before retrying, in microseconds
+        /// (0 = no hint). Carried on the wire at v6+ only; dropped —
+        /// along with a downgrade of the v6-only codes to `Busy` —
+        /// when the error is encoded for an older peer.
+        retry_after_us: u64,
     },
 }
 
@@ -681,10 +709,19 @@ pub fn encode_response_v(version: u16, request_id: u64, resp: &Response) -> Vec<
         }
         Response::Stats(snap) => frame(version, OP_STATS_SNAPSHOT, request_id, snap.encode()),
         Response::Traces(traces) => frame(version, OP_TRACES, request_id, encode_traces(traces)),
-        Response::Error { code, message } => {
+        Response::Error { code, message, retry_after_us } => {
+            // Old peers map unknown codes to Malformed (a hard fault);
+            // Busy is the closest legacy "try again later".
+            let code = match code {
+                ErrCode::Overloaded | ErrCode::Timeout if version < 6 => ErrCode::Busy,
+                c => *c,
+            };
             let mut p = Vec::new();
             put_u16(&mut p, code.as_u16());
             put_str(&mut p, message);
+            if version >= 6 {
+                put_u64(&mut p, *retry_after_us);
+            }
             frame(version, OP_ERROR, request_id, p)
         }
     }
@@ -929,7 +966,8 @@ pub fn decode_response(version: u16, opcode: u8, payload: &[u8]) -> WireResult<R
         OP_ERROR => {
             let code = ErrCode::from_u16(rd.u16()?);
             let message = rd.str()?;
-            Response::Error { code, message }
+            let retry_after_us = if version >= 6 { rd.u64()? } else { 0 };
+            Response::Error { code, message, retry_after_us }
         }
         other => {
             let hint = if other == OP_GENERATION {
@@ -1115,8 +1153,26 @@ mod tests {
                 ],
             }]),
             Response::Traces(Vec::new()),
-            Response::Error { code: ErrCode::BadHandle, message: "no handle 4".into() },
-            Response::Error { code: ErrCode::Generation, message: "gen 9 retired".into() },
+            Response::Error {
+                code: ErrCode::BadHandle,
+                message: "no handle 4".into(),
+                retry_after_us: 0,
+            },
+            Response::Error {
+                code: ErrCode::Generation,
+                message: "gen 9 retired".into(),
+                retry_after_us: 0,
+            },
+            Response::Error {
+                code: ErrCode::Overloaded,
+                message: "inflight 9 over high water 8".into(),
+                retry_after_us: 1_500,
+            },
+            Response::Error {
+                code: ErrCode::Timeout,
+                message: "response write timed out".into(),
+                retry_after_us: 0,
+            },
         ];
         for resp in &cases {
             assert_eq!(roundtrip_response(resp), *resp);
@@ -1430,6 +1486,79 @@ mod tests {
             decode_request(h.version, h.opcode, &bytes[FRAME_HEADER_LEN..]).unwrap(),
             both
         );
+    }
+
+    #[test]
+    fn v5_frames_stay_decodable_and_gate_v6_error_hints() {
+        // a v6 error carries the retry-after hint and the new codes
+        let shed = Response::Error {
+            code: ErrCode::Overloaded,
+            message: "inflight 9 over high water 8".into(),
+            retry_after_us: 2_000,
+        };
+        let v6 = encode_response_v(6, 31, &shed);
+        assert_eq!(h_version(&v6), 6);
+        assert_eq!(decode_response(6, v6[6], &v6[FRAME_HEADER_LEN..]).unwrap(), shed);
+
+        // encoded for a v5 peer the hint is dropped and the v6-only code
+        // downgrades to Busy — never a value a legacy from_u16 would
+        // misread as Malformed
+        let v5 = encode_response_v(5, 31, &shed);
+        assert_eq!(h_version(&v5), 5);
+        assert_eq!(
+            v5[FRAME_HEADER_LEN..].len() + 8,
+            v6[FRAME_HEADER_LEN..].len(),
+            "v6 adds exactly the 8-byte retry-after hint"
+        );
+        match decode_response(5, v5[6], &v5[FRAME_HEADER_LEN..]).unwrap() {
+            Response::Error { code, retry_after_us, .. } => {
+                assert_eq!(code, ErrCode::Busy);
+                assert_eq!(retry_after_us, 0, "v5 frames decode with no hint");
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // Timeout downgrades the same way
+        let timeout = Response::Error {
+            code: ErrCode::Timeout,
+            message: "write deadline".into(),
+            retry_after_us: 0,
+        };
+        let v4 = encode_response_v(4, 32, &timeout);
+        match decode_response(4, v4[6], &v4[FRAME_HEADER_LEN..]).unwrap() {
+            Response::Error { code, .. } => assert_eq!(code, ErrCode::Busy),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        // a v6-shaped error payload inside a v5-marked frame is a typed
+        // trailing-bytes fault, not a silent accept
+        let fault = decode_response(5, v6[6], &v6[FRAME_HEADER_LEN..]).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // ... and a v6 error truncated before its hint is a typed short
+        // fault at v6
+        let body = &v5[FRAME_HEADER_LEN..]; // code + message, no hint
+        let fault = decode_response(6, OP_ERROR, body).unwrap_err();
+        assert_eq!(fault.code, ErrCode::Malformed);
+
+        // legacy codes round-trip unchanged at both versions, hint 0
+        let busy = Response::Error {
+            code: ErrCode::Busy,
+            message: "connection limit".into(),
+            retry_after_us: 0,
+        };
+        for v in [5u16, 6] {
+            let bytes = encode_response_v(v, 33, &busy);
+            assert_eq!(
+                decode_response(v, bytes[6], &bytes[FRAME_HEADER_LEN..]).unwrap(),
+                busy
+            );
+        }
+
+        // the new codes' wire values round-trip through as_u16/from_u16
+        for code in [ErrCode::Overloaded, ErrCode::Timeout] {
+            assert_eq!(ErrCode::from_u16(code.as_u16()), code);
+        }
     }
 
     fn h_version(frame: &[u8]) -> u16 {

@@ -146,6 +146,20 @@ metric_ids! {
         LivePinMiss => "live_pin_miss",
         /// Live generations published.
         LivePublish => "live_publish",
+        /// Faults answered with `ErrCode::Overloaded` (load shed).
+        FaultOverloaded => "fault_overloaded",
+        /// Faults answered with `ErrCode::Timeout` (slow read/write).
+        FaultTimeout => "fault_timeout",
+        /// Client-side request retries (any cause: I/O, wire corruption,
+        /// overload backoff, version renegotiation).
+        ClientRetry => "client_retry",
+        /// Client-side requests abandoned because a per-request deadline
+        /// expired before a retry could be attempted.
+        ClientDeadline => "client_deadline",
+        /// Faults deliberately injected by an active chaos `FaultPlan`.
+        ChaosInjected => "chaos_injected",
+        /// Orphaned `.msk.tmp-*` files removed by the store startup sweep.
+        StoreTmpSwept => "store_tmp_swept",
     }
 }
 

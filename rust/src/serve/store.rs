@@ -54,6 +54,7 @@
 //! or fails loudly, never silently serves corrupt data.
 
 use std::fs;
+use std::io;
 use std::path::{Path, PathBuf};
 
 use crate::error::{Error, Result};
@@ -561,11 +562,17 @@ fn get_str(r: &mut BitReader<'_>, what: &str) -> Result<String> {
     String::from_utf8(bytes).map_err(|_| err(format!("{what} is not valid UTF-8")))
 }
 
-/// Write one encoded sketch to `path` in the container format (through a
-/// writer-unique sibling temp file + rename, so neither a crashed writer
-/// nor two concurrent writers of the same key can leave a half-written
-/// store entry behind).
+/// Write one encoded sketch to `path` in the container format,
+/// atomically: a writer-unique sibling temp file is written, fsync'd,
+/// then renamed over the target, and the parent directory is fsync'd
+/// so the rename itself survives a crash. A crash (or an injected
+/// chaos fault, [`crate::net::chaos::install_store_fault`]) at *any*
+/// byte offset leaves the store entry either old or new, never torn —
+/// the kill-at-every-offset test below walks the whole file proving
+/// it. An interrupted write's orphaned temp is deliberately left
+/// behind for the [`SketchStore::open`] startup sweep.
 pub fn write_encoded(path: &Path, enc: &EncodedSketch, key: &StoreKey) -> Result<()> {
+    use std::io::Write as _;
     use std::sync::atomic::{AtomicU64, Ordering};
     static WRITE_SEQ: AtomicU64 = AtomicU64::new(0);
     let data = encode_container(enc, key)?;
@@ -574,8 +581,33 @@ pub fn write_encoded(path: &Path, enc: &EncodedSketch, key: &StoreKey) -> Result
         "{STORE_EXT}.tmp-{}-{seq}",
         std::process::id()
     ));
-    fs::write(&tmp, &data)?;
+    if let Some(cap) = crate::net::chaos::store_write_cap(data.len() as u64) {
+        // an injected crash: put exactly `cap` bytes in the temp file,
+        // leave it orphaned, and fail the write with the same error
+        // kind a dying disk would produce
+        let mut f = fs::File::create(&tmp)?;
+        let head = data.get(..cap as usize).unwrap_or(&data);
+        f.write_all(head)?;
+        f.sync_all()?;
+        return Err(Error::Io(io::Error::other(format!(
+            "chaos: store write killed at byte {cap} of {}",
+            data.len()
+        ))));
+    }
+    let mut f = fs::File::create(&tmp)?;
+    f.write_all(&data)?;
+    // data must be durable before the rename can make it visible
+    f.sync_all()?;
+    drop(f);
     fs::rename(&tmp, path)?;
+    // best-effort directory fsync: makes the rename durable; some
+    // filesystems refuse to sync a directory handle, which is not a
+    // reason to fail a write that is already atomic
+    if let Some(parent) = path.parent() {
+        if let Ok(d) = fs::File::open(parent) {
+            let _ = d.sync_all();
+        }
+    }
     Ok(())
 }
 
@@ -611,10 +643,31 @@ pub struct SketchStore {
 }
 
 impl SketchStore {
-    /// Open (creating if necessary) a store rooted at `dir`.
+    /// Open (creating if necessary) a store rooted at `dir`, sweeping
+    /// out any `*.msk.tmp-*` temp files a crashed writer left behind.
+    /// The sweep is safe against live writers in *this* process — a
+    /// write holds its temp only between create and rename, and the
+    /// store is opened before serving starts — and temp names embed
+    /// the writer's pid, so a crashed writer's orphans are exactly the
+    /// files no one will ever rename.
     pub fn open(dir: impl Into<PathBuf>) -> Result<SketchStore> {
         let dir = dir.into();
         fs::create_dir_all(&dir)?;
+        let mut swept = 0u64;
+        for de in fs::read_dir(&dir)? {
+            let p = de?.path();
+            let is_tmp = p
+                .extension()
+                .and_then(|e| e.to_str())
+                .is_some_and(|e| e.starts_with("tmp-"));
+            if is_tmp && fs::remove_file(&p).is_ok() {
+                swept += 1;
+            }
+        }
+        if swept > 0 {
+            crate::obs::global().add(crate::obs::Counter::StoreTmpSwept, swept);
+            crate::info!("sketch store: swept {swept} orphaned temp file(s) from {}", dir.display());
+        }
         Ok(SketchStore { dir })
     }
 
@@ -999,5 +1052,112 @@ mod tests {
         // standard FNV-1a 64 test vectors
         assert_eq!(fnv1a64(b""), 0xCBF2_9CE4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xAF63_DC4C_8601_EC8C);
+    }
+
+    #[test]
+    fn kill_at_every_offset_leaves_old_or_new_never_corrupt() {
+        use crate::net::chaos::{
+            clear_store_fault, install_store_fault, StoreFault, STORE_FAULT_TEST_LOCK,
+        };
+        let _guard = STORE_FAULT_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+        clear_store_fault();
+
+        let dir = tmp_store("killat");
+        let _ = std::fs::remove_dir_all(&dir);
+        let store = SketchStore::open(&dir).unwrap();
+        // a deliberately tiny sketch keeps the container a few hundred
+        // bytes, so walking literally every byte offset stays fast
+        let tiny = |seed: u64| {
+            let mut rng = Rng::new(seed);
+            let mut coo = Coo::new(4, 32);
+            for i in 0..4u32 {
+                for _ in 0..4 {
+                    coo.push(i, rng.usize_below(32) as u32, rng.normal() as f32 + 0.5);
+                }
+            }
+            let a = coo.to_csr();
+            let sk = sketch_offline(
+                &a,
+                &SketchPlan::new(DistributionKind::Bernstein, 40).with_seed(seed),
+            )
+            .unwrap();
+            (encode_sketch(&sk).unwrap(), sk.method)
+        };
+        let (old_enc, method) = tiny(11);
+        let (new_enc, _) = tiny(12);
+        let key = StoreKey::new("durable", &method, old_enc.s, 11);
+        store.put(&key, &old_enc).unwrap();
+        let len = encode_container(&new_enc, &key).unwrap().len();
+
+        let offsets: Vec<u64> = (0..len as u64).collect();
+        for &offset in &offsets {
+            install_store_fault(StoreFault::KillAt(offset));
+            let err = store.put(&key, &new_enc).unwrap_err();
+            assert!(
+                err.to_string().contains("chaos"),
+                "offset {offset}: write must fail with the injected error, got {err}"
+            );
+            // the interrupted write must be invisible: the old sketch
+            // still reads back bit-identically
+            let back = store.get(&key).unwrap().expect("old entry must survive");
+            assert_eq!(back.enc.bytes, old_enc.bytes, "offset {offset}: old entry torn");
+        }
+        clear_store_fault();
+
+        // the orphaned temps are invisible to entries() ...
+        assert_eq!(store.entries().unwrap().len(), 1);
+        let orphans = std::fs::read_dir(&dir)
+            .unwrap()
+            .filter(|de| {
+                de.as_ref().unwrap().path().extension().and_then(|e| e.to_str())
+                    != Some(STORE_EXT)
+            })
+            .count();
+        assert_eq!(orphans, offsets.len(), "each killed write leaves one temp");
+
+        // ... and a fresh open sweeps them all
+        let store = SketchStore::open(&dir).unwrap();
+        let left = std::fs::read_dir(&dir).unwrap().count();
+        assert_eq!(left, 1, "sweep must remove every orphaned temp");
+
+        // with the fault cleared the write goes through and replaces
+        // the entry atomically
+        store.put(&key, &new_enc).unwrap();
+        let back = store.get(&key).unwrap().unwrap();
+        assert_eq!(back.enc.bytes, new_enc.bytes);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn probabilistic_store_faults_replay_deterministically() {
+        use crate::net::chaos::{
+            clear_store_fault, install_store_fault, StoreFault, STORE_FAULT_TEST_LOCK,
+        };
+        let _guard = STORE_FAULT_TEST_LOCK.lock().unwrap_or_else(|p| p.into_inner());
+
+        let dir = tmp_store("chaosfail");
+        let _ = std::fs::remove_dir_all(&dir);
+        let (enc, method) = toy_encoded(DistributionKind::Bernstein, 13);
+        let run = || {
+            clear_store_fault();
+            let store = SketchStore::open(&dir).unwrap();
+            install_store_fault(StoreFault::Fail { seed: 5, p: 0.5, writes: 0 });
+            let outcomes: Vec<bool> = (0..16)
+                .map(|i| {
+                    let key = StoreKey::new("flaky", &method, enc.s, i);
+                    store.put(&key, &enc).is_ok()
+                })
+                .collect();
+            clear_store_fault();
+            outcomes
+        };
+        let first = run();
+        let _ = std::fs::remove_dir_all(&dir);
+        let second = run();
+        assert_eq!(first, second, "the same seed must fail the same writes");
+        assert!(first.iter().any(|&ok| ok), "p=0.5 must pass some writes");
+        assert!(first.iter().any(|&ok| !ok), "p=0.5 must fail some writes");
+        clear_store_fault();
+        let _ = std::fs::remove_dir_all(&dir);
     }
 }
